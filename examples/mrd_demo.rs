@@ -1,0 +1,69 @@
+//! MRD demo: two observation views sharing a latent space.
+//!
+//!   cargo run --release --example mrd_demo
+//!
+//! Builds two 4-D views driven by one shared 1-D signal plus one private
+//! signal each, fits MRD with a Q=3 shared latent space, and prints the
+//! per-view ARD relevance profile — the MRD signature is that one latent
+//! dimension is relevant to both views (the shared signal) while others
+//! specialise.
+
+use anyhow::Result;
+use gpparallel::cli::Args;
+use gpparallel::config::BackendKind;
+use gpparallel::coordinator::{EngineConfig, OptChoice};
+use gpparallel::data::rng::Rng64;
+use gpparallel::linalg::Mat;
+use gpparallel::models::Mrd;
+use gpparallel::optim::Lbfgs;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let backend = BackendKind::parse(args.get("backend").unwrap_or("cpu"))
+        .expect("--backend cpu|xla");
+    let iters: usize = args.get_parse("iters", 120)?;
+    let n: usize = args.get_parse("n", 256)?;
+
+    // ground truth: shared signal t, private signals p1, p2
+    let mut rng = Rng64::new(7);
+    let t: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let p1: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let p2: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+    let view = |sig: &[f64], priv_sig: &[f64], rng: &mut Rng64| {
+        Mat::from_fn(n, 4, |i, j| {
+            let wsh = [1.0, 0.6, -0.8, 0.3][j];
+            let wpr = [0.4, -0.7, 0.5, 0.9][j];
+            (wsh * sig[i]).sin() + wpr * priv_sig[i] * 0.7 + 0.05 * rng.normal()
+        })
+    };
+    let y1 = view(&t, &p1, &mut rng);
+    let y2 = view(&t, &p2, &mut rng);
+
+    println!("== MRD: two 4-D views, shared 1-D + private 1-D signals, Q=3 ==");
+    let cfg = EngineConfig {
+        workers: 2,
+        chunk: 256,
+        backend,
+        artifacts_dir: "artifacts".into(),
+        opt: OptChoice::Lbfgs(Lbfgs { max_iters: iters, ..Default::default() }),
+        verbose: false,
+    };
+    let model = Mrd::fit(&[y1, y2], 3, 20, &["mrd", "mrd"], cfg, 7)?;
+    let r = &model.result;
+
+    println!("final bound     : {:.2}", r.f);
+    println!("bound improved  : {:+.2}",
+             r.trace.last().unwrap() - r.trace.first().unwrap());
+    println!("iterations      : {}", r.iterations);
+    println!("timing          : {}", r.timing.summary());
+
+    println!("\nARD relevance (1/lengthscale², normalised per view):");
+    println!("{:>8} {:>10} {:>10} {:>10}", "view", "dim 1", "dim 2", "dim 3");
+    for (v, rel) in model.relevance().iter().enumerate() {
+        println!("{:>8} {:>10.3} {:>10.3} {:>10.3}", v, rel[0], rel[1], rel[2]);
+    }
+    println!("\n(a dimension relevant in BOTH rows encodes the shared signal;");
+    println!(" view-specific dimensions encode the private signals)");
+    Ok(())
+}

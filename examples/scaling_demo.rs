@@ -1,0 +1,51 @@
+//! Scaling demo: a small interactive slice of Fig 1a.
+//!
+//!   cargo run --release --example scaling_demo [-- --backend xla]
+//!
+//! Times one full optimisation iteration (stats fwd + reduce + M×M core
+//! + vjp + gradient collection) of the Bayesian GP-LVM for a few dataset
+//! sizes and worker counts, and prints the paper-style table. The full
+//! sweep lives in `cargo bench --bench fig1a_scaling`.
+
+use anyhow::Result;
+use gpparallel::cli::Args;
+use gpparallel::config::BackendKind;
+use gpparallel::coordinator::{Engine, EngineConfig, OptChoice};
+use gpparallel::data::synthetic::{generate, SyntheticSpec};
+use gpparallel::models::BayesianGplvm;
+use gpparallel::optim::Lbfgs;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let backend = BackendKind::parse(args.get("backend").unwrap_or("cpu"))
+        .expect("--backend cpu|xla");
+    let evals: usize = args.get_parse("evals", 2)?;
+
+    println!("== scaling demo (backend={}, M=100, Q=1, D=3) ==", backend.name());
+    println!("{:>6} {:>8} {:>14} {:>16} {:>9}",
+             "N", "workers", "wall s/iter", "projected s/iter", "indist %");
+
+    for &n in &[1024usize, 2048, 4096] {
+        let spec = SyntheticSpec { n, q: 1, d: 3, ..Default::default() };
+        let ds = generate(&spec, 0);
+        for &workers in &[1usize, 2, 4] {
+            let problem = BayesianGplvm::problem(&ds.y, 1, 100, "paper", 0);
+            let cfg = EngineConfig {
+                workers,
+                chunk: 1024,
+                backend,
+                artifacts_dir: "artifacts".into(),
+                opt: OptChoice::Lbfgs(Lbfgs::default()),
+                verbose: false,
+            };
+            let engine = Engine::new(problem, cfg)?;
+            let r = engine.time_iterations(evals)?;
+            println!("{:>6} {:>8} {:>14.4} {:>16.4} {:>9.2}",
+                     n, workers, r.sec_per_eval, r.projected_sec_per_eval(),
+                     r.timing.indistributable_fraction() * 100.0);
+        }
+    }
+    println!("\n(single-core host: wall-clock is flat in workers; the projected");
+    println!(" column divides the distributable work across ranks — see DESIGN.md)");
+    Ok(())
+}

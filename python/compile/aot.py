@@ -1,0 +1,171 @@
+"""AOT lowering: JAX (L2, calling the Pallas L1 kernels) -> HLO text
+artifacts consumed by the Rust runtime (rust/src/runtime/).
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Each shape configuration produces five modules:
+
+  <cfg>_bgplvm_fwd    (mu,s,w,y,z,log_hyp) -> (psi0,P,psi2,tryy,kl)
+  <cfg>_bgplvm_vjp    (... , cotangents)   -> (dmu,ds,dz,dhyp)
+  <cfg>_sgpr_fwd      (x,w,y,z,log_hyp)    -> (psi0,P,psi2,tryy)
+  <cfg>_sgpr_vjp      (... , cotangents)   -> (dz,dhyp)
+  <cfg>_bound         (stats..,z,log_hyp,log_beta,n_eff)
+                      -> (f, c_psi0,c_p,c_psi2,c_tryy,c_kl, dz,dhyp,dbeta)
+
+plus `manifest.json` describing every module's inputs/outputs (name,
+shape, dtype) in positional order — the Rust side validates against it.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--configs name,...]
+The build is make-driven and incremental at the Makefile level.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+F64 = jnp.float64
+
+
+class Config:
+    """A static shape configuration: chunk size C, inducing count M,
+    latent dim Q, output dim D."""
+
+    def __init__(self, name, c, m, q, d):
+        self.name, self.c, self.m, self.q, self.d = name, c, m, q, d
+
+    @property
+    def tag(self):
+        return f"c{self.c}_m{self.m}_q{self.q}_d{self.d}"
+
+
+# Shipped configurations. `paper` matches the paper's experiment
+# (M=100, Q=1, D=3, chunked at 1024); `test` is the small config the
+# integration tests use; the others serve the examples.
+CONFIGS = {
+    "test": Config("test", 64, 16, 2, 3),
+    "paper": Config("paper", 1024, 100, 1, 3),
+    "quickstart": Config("quickstart", 256, 16, 1, 1),
+    "mrd": Config("mrd", 256, 20, 3, 4),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple so the Rust
+    side always unwraps a tuple, even for single outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), F64)
+
+
+def module_specs(cfg):
+    """Positional input/output specs for every module of one config."""
+    c, m, q, d = cfg.c, cfg.m, cfg.q, cfg.d
+    scalar = []
+    stats_out = [("psi0", scalar), ("p", [m, d]), ("psi2", [m, m]),
+                 ("tryy", scalar)]
+    cts_in = [("c_psi0", scalar), ("c_p", [m, d]), ("c_psi2", [m, m]),
+              ("c_tryy", scalar)]
+    return {
+        "bgplvm_fwd": {
+            "fn": model.bgplvm_stats_fwd,
+            "in": [("mu", [c, q]), ("s", [c, q]), ("w", [c]), ("y", [c, d]),
+                   ("z", [m, q]), ("log_hyp", [q + 1])],
+            "out": stats_out + [("kl", scalar)],
+        },
+        "bgplvm_vjp": {
+            "fn": model.bgplvm_stats_vjp,
+            "in": [("mu", [c, q]), ("s", [c, q]), ("w", [c]), ("y", [c, d]),
+                   ("z", [m, q]), ("log_hyp", [q + 1])]
+                  + cts_in + [("c_kl", scalar)],
+            "out": [("dmu", [c, q]), ("ds", [c, q]), ("dz", [m, q]),
+                    ("dhyp", [q + 1])],
+        },
+        "sgpr_fwd": {
+            "fn": model.sgpr_stats_fwd,
+            "in": [("x", [c, q]), ("w", [c]), ("y", [c, d]),
+                   ("z", [m, q]), ("log_hyp", [q + 1])],
+            "out": stats_out,
+        },
+        "sgpr_vjp": {
+            "fn": model.sgpr_stats_vjp,
+            "in": [("x", [c, q]), ("w", [c]), ("y", [c, d]),
+                   ("z", [m, q]), ("log_hyp", [q + 1])] + cts_in,
+            "out": [("dz", [m, q]), ("dhyp", [q + 1])],
+        },
+        "bound": {
+            "fn": model.bound_and_grads,
+            "in": [("psi0", scalar), ("p", [m, d]), ("psi2", [m, m]),
+                   ("tryy", scalar), ("kl", scalar), ("z", [m, q]),
+                   ("log_hyp", [q + 1]), ("log_beta", scalar),
+                   ("n_eff", scalar)],
+            "out": [("f", scalar), ("c_psi0", scalar), ("c_p", [m, d]),
+                    ("c_psi2", [m, m]), ("c_tryy", scalar), ("c_kl", scalar),
+                    ("dz", [m, q]), ("dhyp", [q + 1]), ("dbeta", scalar)],
+        },
+    }
+
+
+def lower_config(cfg, out_dir):
+    entries = []
+    for mod_name, ms in module_specs(cfg).items():
+        in_specs = [spec(shape) for _, shape in ms["in"]]
+        lowered = jax.jit(ms["fn"], keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}_{mod_name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append({
+            "config": cfg.name,
+            "tag": cfg.tag,
+            "module": mod_name,
+            "file": fname,
+            "dims": {"c": cfg.c, "m": cfg.m, "q": cfg.q, "d": cfg.d},
+            "inputs": [{"name": n, "shape": s} for n, s in ms["in"]],
+            "outputs": [{"name": n, "shape": s} for n, s in ms["out"]],
+            "dtype": "f64",
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        })
+        print(f"  lowered {fname}  ({len(text)} chars)")
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="test,paper,quickstart,mrd")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name]
+        print(f"config {name} (tag {cfg.tag}):")
+        entries.extend(lower_config(cfg, args.out_dir))
+
+    manifest = {"version": 1, "dtype": "f64", "modules": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(entries)} modules to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from . import ref  # noqa: F401
+from .psi_rbf import psi1, psi2, psi1_pallas, psi2_pallas  # noqa: F401

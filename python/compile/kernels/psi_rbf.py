@@ -1,0 +1,222 @@
+"""Layer-1 Pallas kernels: the psi statistics of the Bayesian GP-LVM.
+
+This is the paper's GPU contribution (its Table 1) re-thought for the
+TPU/Pallas programming model rather than mechanically ported from CUDA:
+
+  paper (CUDA, Table 1)                 here (Pallas)
+  -------------------------------       --------------------------------
+  one *block* per inducing point m      one *program instance* per tile of
+  (per pair (m1, m2) for Phi)           inducing points (pair of tiles for
+                                        Psi2) — the grid axes
+  *threads* over datapoints n           the datapoint axis is the leading
+                                        (vectorised) axis of the block: the
+                                        VPU/MXU consumes it densely
+  per-thread partials in shared         per-tile partials live in VMEM; the
+  memory, tree-reduced, then written    sum over the datapoint grid axis is
+  to global memory                      an accumulation into the output
+                                        block across sequential grid steps
+                                        (no cross-block sync needed at all,
+                                        which is the constraint the paper's
+                                        §3 works around on CC-2.0 cards)
+
+The BlockSpec expresses the HBM<->VMEM schedule that the paper expressed
+with its block/thread division: for Psi2 the grid is
+(M/bm, M/bm, N/bn) with the datapoint axis innermost, so each (m1, m2)
+output tile stays resident in VMEM while datapoint tiles stream past it.
+
+Default tile sizes are tuned for the CPU-interpret execution path (large
+tiles, few grid steps — each grid step costs an interpreter dispatch).
+On a real TPU the VMEM budget would push toward bn=256, bm=25 for the
+paper config (see DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md
+§Perf for the structural analysis); both shapes are correctness-tested.
+
+All kernels run with interpret=True: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute (see DESIGN.md
+§Hardware-Adaptation). Numerics are identical either way.
+
+Gradients: the kernels are wrapped in jax.custom_vjp whose backward pass
+is the analytic VJP obtained from the pure-jnp reference (ref.py). This
+is the analog of the paper's Table 2 (the dedicated gradient kernels):
+the cotangents dL/dPsi1, dL/dPsi2 arrive from the leader's M x M core and
+are pulled back to (mu, S, Z, log_hyp) entirely on-device, lowered and
+fused by XLA into the same artifact as the forward statistics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (tiles must divide the axis)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Psi1 kernel: out[n, m] over a (N/bn, M/bm) grid.
+# ---------------------------------------------------------------------------
+
+def _psi1_kernel(mu_ref, s_ref, z_ref, alpha_ref, sigma2_ref, out_ref):
+    mu = mu_ref[...]          # [bn, Q]
+    s = s_ref[...]            # [bn, Q]
+    z = z_ref[...]            # [bm, Q]
+    alpha = alpha_ref[...]    # [Q]
+    sigma2 = sigma2_ref[0]
+
+    denom = alpha * s + 1.0                                   # [bn, Q]
+    q = mu.shape[1]
+    # Accumulate the exponent one latent dimension at a time: keeps the
+    # largest VMEM temporary at [bn, bm] instead of [bn, bm, Q].
+    expo = jnp.zeros((mu.shape[0], z.shape[0]), dtype=mu.dtype)
+    for qi in range(q):
+        d = mu[:, qi:qi + 1] - z[:, qi][None, :]              # [bn, bm]
+        expo = expo + alpha[qi] * d * d / denom[:, qi:qi + 1]
+    coef = sigma2 * jnp.prod(denom, axis=1) ** (-0.5)         # [bn]
+    out_ref[...] = coef[:, None] * jnp.exp(-0.5 * expo)
+
+
+def psi1_pallas(mu, s, z, log_hyp, *, bn=1024, bm=64, interpret=True):
+    """Psi1 [N, M] via Pallas; tile sizes are clamped to divisors."""
+    n, q = mu.shape
+    m = z.shape[0]
+    bn = pick_block(n, bn)
+    bm = pick_block(m, bm)
+    sigma2, alpha = ref.unpack_hyp(log_hyp)
+    sigma2 = sigma2[None]
+
+    grid = (n // bn, m // bm)
+    return pl.pallas_call(
+        _psi1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, q), lambda i, j: (i, 0)),   # mu
+            pl.BlockSpec((bn, q), lambda i, j: (i, 0)),   # s
+            pl.BlockSpec((bm, q), lambda i, j: (j, 0)),   # z
+            pl.BlockSpec((q,), lambda i, j: (0,)),        # alpha
+            pl.BlockSpec((1,), lambda i, j: (0,)),        # sigma2
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), mu.dtype),
+        interpret=interpret,
+    )(mu, s, z, alpha, sigma2)
+
+
+# ---------------------------------------------------------------------------
+# Psi2 kernel: out[m1, m2] over a (M/bm, M/bm, N/bn) grid; the datapoint
+# axis is the innermost grid axis and accumulates into the output tile.
+# ---------------------------------------------------------------------------
+
+def _psi2_kernel(mu_ref, s_ref, w_ref, z1_ref, z2_ref, alpha_ref,
+                 sigma2_ref, out_ref):
+    k = pl.program_id(2)
+
+    mu = mu_ref[...]          # [bn, Q]
+    s = s_ref[...]            # [bn, Q]
+    w = w_ref[...]            # [bn]
+    z1 = z1_ref[...]          # [bm1, Q]
+    z2 = z2_ref[...]          # [bm2, Q]
+    alpha = alpha_ref[...]    # [Q]
+    sigma2 = sigma2_ref[0]
+
+    q = mu.shape[1]
+    bn, bm1, bm2 = mu.shape[0], z1.shape[0], z2.shape[0]
+    denom = 2.0 * alpha * s + 1.0                              # [bn, Q]
+
+    # Inducing-pair distance term and the streamed datapoint term, both
+    # accumulated per latent dimension (VMEM: [bm1,bm2] + [bn,bm1,bm2]).
+    dist_zz = jnp.zeros((bm1, bm2), dtype=mu.dtype)
+    dist_mz = jnp.zeros((bn, bm1, bm2), dtype=mu.dtype)
+    for qi in range(q):
+        dz = z1[:, qi][:, None] - z2[:, qi][None, :]           # [bm1, bm2]
+        dist_zz = dist_zz + 0.25 * alpha[qi] * dz * dz
+        zb = 0.5 * (z1[:, qi][:, None] + z2[:, qi][None, :])   # [bm1, bm2]
+        dmu = mu[:, qi][:, None, None] - zb[None, :, :]        # [bn, bm1, bm2]
+        dist_mz = dist_mz + alpha[qi] * dmu * dmu / denom[:, qi][:, None, None]
+
+    coef = (sigma2 * sigma2) * jnp.prod(denom, axis=1) ** (-0.5) * w  # [bn]
+    tile = jnp.einsum("n,nab->ab", coef, jnp.exp(-dist_zz[None, :, :] - dist_mz))
+
+    # First datapoint tile initialises the output block; the rest add.
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = tile
+
+    @pl.when(k != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + tile
+
+
+def psi2_pallas(mu, s, w, z, log_hyp, *, bn=1024, bm=50, interpret=True):
+    """Psi2 [M, M] (already summed over datapoints) via Pallas."""
+    n, q = mu.shape
+    m = z.shape[0]
+    bn = pick_block(n, bn)
+    bm = pick_block(m, bm)
+    sigma2, alpha = ref.unpack_hyp(log_hyp)
+    sigma2 = sigma2[None]
+
+    grid = (m // bm, m // bm, n // bn)
+    return pl.pallas_call(
+        _psi2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, q), lambda i, j, k: (k, 0)),   # mu
+            pl.BlockSpec((bn, q), lambda i, j, k: (k, 0)),   # s
+            pl.BlockSpec((bn,), lambda i, j, k: (k,)),       # w
+            pl.BlockSpec((bm, q), lambda i, j, k: (i, 0)),   # z tile (rows)
+            pl.BlockSpec((bm, q), lambda i, j, k: (j, 0)),   # z tile (cols)
+            pl.BlockSpec((q,), lambda i, j, k: (0,)),        # alpha
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),        # sigma2
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), mu.dtype),
+        interpret=interpret,
+    )(mu, s, w, z, z, alpha, sigma2)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrappers. Forward = Pallas kernel; backward = analytic VJP
+# pulled from the jnp reference (the Table-2 analog, fused by XLA).
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def psi1(mu, s, z, log_hyp):
+    return psi1_pallas(mu, s, z, log_hyp)
+
+
+def _psi1_fwd(mu, s, z, log_hyp):
+    return psi1(mu, s, z, log_hyp), (mu, s, z, log_hyp)
+
+
+def _psi1_bwd(res, ct):
+    _, vjp = jax.vjp(ref.psi1_ref, *res)
+    return vjp(ct)
+
+
+psi1.defvjp(_psi1_fwd, _psi1_bwd)
+
+
+@jax.custom_vjp
+def psi2(mu, s, w, z, log_hyp):
+    return psi2_pallas(mu, s, w, z, log_hyp)
+
+
+def _psi2_fwd(mu, s, w, z, log_hyp):
+    return psi2(mu, s, w, z, log_hyp), (mu, s, w, z, log_hyp)
+
+
+def _psi2_bwd(res, ct):
+    _, vjp = jax.vjp(ref.psi2_ref, *res)
+    return vjp(ct)
+
+
+psi2.defvjp(_psi2_fwd, _psi2_bwd)

@@ -1,0 +1,98 @@
+"""Pure-jnp reference implementations (correctness oracles) of the
+RBF-ARD psi statistics of the Bayesian GP-LVM.
+
+These are the quantities the paper calls phi (psi0), Psi (via Psi1) and
+Phi (Psi2) — closed forms from Titsias & Lawrence (2010) for the
+RBF/exponentiated-quadratic kernel with a diagonal-Gaussian variational
+posterior q(x_n) = N(mu_n, diag(S_n)):
+
+  k(x, x') = sigma2 * exp(-0.5 * sum_q alpha_q (x_q - x'_q)^2)
+
+  psi0      = sum_n w_n * sigma2
+  Psi1[n,m] = sigma2 * prod_q (alpha_q S_nq + 1)^(-1/2)
+              * exp(-0.5 sum_q alpha_q (mu_nq - Z_mq)^2 / (alpha_q S_nq + 1))
+  Psi2[m,m']= sum_n w_n sigma2^2 * prod_q (2 alpha_q S_nq + 1)^(-1/2)
+              * exp(- sum_q [ alpha_q (Z_mq - Z_m'q)^2 / 4
+                              + alpha_q (mu_nq - Zb_q)^2 / (2 alpha_q S_nq + 1) ])
+  with Zb = (Z_m + Z_m') / 2.
+
+`w` is a {0,1} padding mask over datapoints so that fixed-shape (AOT)
+chunks can represent ragged tails; every reference honours it.
+
+Setting S = 0 recovers the *exact* kernel quantities of supervised sparse
+GP regression: Psi1 -> K_fu, Psi2 -> K_fu^T diag(w) K_fu, psi0 -> sum(w)*sigma2.
+That limit is exercised in tests and used by the sgpr_* model functions.
+
+The hyperparameter vector is always `log_hyp = [log sigma2, log ls_1..ls_Q]`
+with alpha_q = ls_q^(-2).
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def unpack_hyp(log_hyp):
+    """log_hyp = [log variance, log lengthscale_1, ..., log lengthscale_Q]
+    -> (sigma2, alpha) with alpha_q = 1/ls_q^2."""
+    sigma2 = jnp.exp(log_hyp[0])
+    alpha = jnp.exp(-2.0 * log_hyp[1:])
+    return sigma2, alpha
+
+
+def kuu(z, log_hyp, jitter=1e-8):
+    """Exact RBF-ARD covariance among inducing inputs, with jitter.
+
+    jitter is scaled by the signal variance (GPy convention) plus an
+    absolute floor, and must match rust/src/kern/rbf.rs exactly so the
+    XLA and Rust paths agree to rounding error.
+    """
+    sigma2, alpha = unpack_hyp(log_hyp)
+    d = z[:, None, :] - z[None, :, :]
+    r2 = jnp.sum(alpha * d * d, axis=-1)
+    k = sigma2 * jnp.exp(-0.5 * r2)
+    eye = jnp.eye(z.shape[0], dtype=z.dtype)
+    return k + (jitter * sigma2 + 1e-12) * eye
+
+
+def psi0_ref(w, log_hyp):
+    sigma2, _ = unpack_hyp(log_hyp)
+    return sigma2 * jnp.sum(w)
+
+
+def psi1_ref(mu, s, z, log_hyp):
+    """[N, M] expected cross-covariance <K_fu>_{q(X)} (no mask: Psi1 rows
+    for padded points are garbage-in-garbage-out; the mask is applied by
+    the consumer, e.g. Psi1^T (w*Y))."""
+    sigma2, alpha = unpack_hyp(log_hyp)
+    denom = alpha * s + 1.0                        # [N, Q]
+    d = mu[:, None, :] - z[None, :, :]             # [N, M, Q]
+    expo = -0.5 * jnp.sum(alpha * d * d / denom[:, None, :], axis=-1)
+    coef = sigma2 * jnp.prod(denom, axis=-1) ** (-0.5)  # [N]
+    return coef[:, None] * jnp.exp(expo)
+
+
+def psi2_ref(mu, s, w, z, log_hyp):
+    """[M, M] sum_n w_n <(K_fu)_n^T (K_fu)_n>_{q(x_n)}."""
+    sigma2, alpha = unpack_hyp(log_hyp)
+    denom = 2.0 * alpha * s + 1.0                  # [N, Q]
+    dz = z[:, None, :] - z[None, :, :]             # [M, M, Q]
+    zb = 0.5 * (z[:, None, :] + z[None, :, :])     # [M, M, Q]
+    dist_zz = 0.25 * jnp.sum(alpha * dz * dz, axis=-1)   # [M, M]
+    dmu = mu[:, None, None, :] - zb[None, :, :, :]       # [N, M, M, Q]
+    dist_mz = jnp.sum(alpha * dmu * dmu / denom[:, None, None, :], axis=-1)
+    coef = (sigma2**2) * jnp.prod(denom, axis=-1) ** (-0.5) * w   # [N]
+    return jnp.einsum("n,nab->ab", coef, jnp.exp(-dist_zz[None] - dist_mz))
+
+
+def psi2_ref_blocked(mu, s, w, z, log_hyp, block=256):
+    """Same as psi2_ref but streaming over datapoint blocks — the memory
+    shape the Pallas kernel uses; also an independent oracle."""
+    n = mu.shape[0]
+    m = z.shape[0]
+    out = jnp.zeros((m, m), dtype=mu.dtype)
+    for i in range(0, n, block):
+        sl = slice(i, min(i + block, n))
+        out = out + psi2_ref(mu[sl], s[sl], w[sl], z, log_hyp)
+    return out

@@ -1,0 +1,285 @@
+"""Layer-2 JAX model: the distributed variational sparse-GP objective.
+
+Three function families, mirroring the per-iteration dataflow of the
+paper's §2 (and of rust/src/coordinator/):
+
+  *_stats_fwd   worker side, distributable: a chunk of datapoints ->
+                partial statistics (psi0, P = Psi1^T Y, Psi2, trYY, KL).
+                Calls the Layer-1 Pallas kernels.
+  bound_and_grads
+                leader side, indistributable: reduced global statistics ->
+                bound value F, the cotangents dF/d(stats) that are
+                scattered back to workers, and the *direct* gradients
+                w.r.t. the global parameters (Z, log_hyp, log_beta).
+  *_stats_vjp   worker side, distributable: chunk + cotangents ->
+                gradients w.r.t. the chunk-local variational parameters
+                (mu, S) and this chunk's partial contribution to the
+                global-parameter gradients.
+
+Everything is pure and fixed-shape so `aot.py` can lower each function
+once per shape configuration; the effective number of datapoints enters
+`bound_and_grads` as the runtime scalar `n_eff = sum(w)` over all chunks,
+so one `bound` artifact serves any dataset size.
+
+All math is float64 (jax_enable_x64) to match the Rust side bit-for-bit
+in cross-implementation tests.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import psi1, psi2, ref
+
+jax.config.update("jax_enable_x64", True)
+
+LOG2PI = 1.8378770664093453  # log(2*pi)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp Cholesky + triangular solves.
+#
+# jnp.linalg.cholesky / scipy cho_solve lower to LAPACK custom-calls with
+# the typed-FFI API on CPU, which the xla crate's xla_extension 0.5.1
+# runtime rejects ("Unknown custom-call API version: API_VERSION_TYPED_FFI").
+# These fori_loop formulations lower to plain HLO (while + dynamic slices),
+# run on any PJRT backend, and are reverse-mode differentiable. M ≈ 100,
+# so the sequential loop is irrelevant to the iteration budget.
+# ---------------------------------------------------------------------------
+
+def cholesky(a):
+    """Lower-triangular Cholesky factor (column-oriented, fori_loop)."""
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, l):
+        row_j = l[j, :]
+        diag = jnp.sqrt(a[j, j] - jnp.dot(row_j, row_j))
+        col = (a[:, j] - l @ row_j) / diag
+        col = jnp.where(idx > j, col, 0.0).at[j].set(diag)
+        return l.at[:, j].set(col)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(a), unroll=False)
+
+
+def solve_lower(l, b):
+    """Solve L x = b (L lower-triangular), b of shape [n] or [n, k]."""
+    vec = b.ndim == 1
+    if vec:
+        b = b[:, None]
+    n = l.shape[0]
+
+    def body(i, x):
+        xi = (b[i, :] - l[i, :] @ x) / l[i, i]
+        return x.at[i, :].set(xi)
+
+    x = jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+    return x[:, 0] if vec else x
+
+
+def solve_upper_t(l, b):
+    """Solve Lᵀ x = b given lower-triangular L."""
+    vec = b.ndim == 1
+    if vec:
+        b = b[:, None]
+    n = l.shape[0]
+
+    def body(k, x):
+        i = n - 1 - k
+        xi = (b[i, :] - l[:, i] @ x) / l[i, i]
+        return x.at[i, :].set(xi)
+
+    x = jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+    return x[:, 0] if vec else x
+
+
+def cho_solve(l, b):
+    """A⁻¹ b from the Cholesky factor L of A."""
+    return solve_upper_t(l, solve_lower(l, b))
+
+
+# ---------------------------------------------------------------------------
+# Worker-side statistics (Bayesian GP-LVM: latent inputs q(x_n)=N(mu_n,S_n))
+# ---------------------------------------------------------------------------
+
+def bgplvm_stats_fwd(mu, s, w, y, z, log_hyp):
+    """Chunk -> (psi0, P, psi2, tryy, kl); w is the {0,1} padding mask.
+
+    P is the paper's `Psi` (an M x D matrix): Psi1^T (w ⊙ Y). Only the
+    M-sized reductions leave the worker, never anything O(N).
+    """
+    p1 = psi1(mu, s, z, log_hyp)                     # [C, M]  (Pallas)
+    wy = w[:, None] * y
+    p = p1.T @ wy                                    # [M, D]
+    p2 = psi2(mu, s, w, z, log_hyp)                  # [M, M]  (Pallas)
+    psi0 = ref.psi0_ref(w, log_hyp)
+    tryy = jnp.sum(w * jnp.sum(y * y, axis=1))
+    # KL(q(x_n) || N(0, I)) for the chunk's live rows. Padded rows carry
+    # (mu, S) = (0, 1) from the coordinator, so log S is finite there.
+    kl = 0.5 * jnp.sum(w[:, None] * (s + mu * mu - 1.0 - jnp.log(s)))
+    return psi0, p, p2, tryy, kl
+
+
+def _stats_block(mu, s, w, y, z, log_hyp):
+    """Reference statistics of one datapoint block (differentiable)."""
+    p1 = ref.psi1_ref(mu, s, z, log_hyp)
+    wy = w[:, None] * y
+    p = p1.T @ wy
+    p2 = ref.psi2_ref(mu, s, w, z, log_hyp)
+    psi0 = ref.psi0_ref(w, log_hyp)
+    tryy = jnp.sum(w * jnp.sum(y * y, axis=1))
+    kl = 0.5 * jnp.sum(w[:, None] * (s + mu * mu - 1.0 - jnp.log(s)))
+    return psi0, p, p2, tryy, kl
+
+
+def _bgplvm_stats_fwd_ref(mu, s, w, y, z, log_hyp, block=64):
+    """Statistics via a rematerialised scan over datapoint blocks — the
+    formulation the VJP modules differentiate.
+
+    Why not one monolithic expression: its backward pass streams several
+    full [C, M, M] tensors through memory (the exp tensor alone is 80 MB
+    at C=1024, M=100), which made the lowered vjp artifact ~2x *slower*
+    than the scalar Rust loops. `lax.scan` over blocks with
+    `jax.checkpoint` on the body keeps every intermediate at
+    [block, M, M] (~3 MB: cache-resident), and the backward recomputes
+    each block's tile instead of fetching stored residuals from RAM —
+    compute is cheaper than memory traffic here. Measured 2.7x on the
+    vjp artifact (EXPERIMENTS.md §Perf).
+    """
+    n, q = mu.shape
+    b = block
+    while n % b != 0:
+        b -= 1
+    nb = n // b
+    d = y.shape[1]
+    m = z.shape[0]
+
+    @jax.checkpoint
+    def body(carry, inp):
+        mu_b, s_b, w_b, y_b = inp
+        st = _stats_block(mu_b, s_b, w_b, y_b, z, log_hyp)
+        return tuple(c + v for c, v in zip(carry, st)), None
+
+    init = (jnp.zeros((), mu.dtype), jnp.zeros((m, d), mu.dtype),
+            jnp.zeros((m, m), mu.dtype), jnp.zeros((), mu.dtype),
+            jnp.zeros((), mu.dtype))
+    xs = (mu.reshape(nb, b, q), s.reshape(nb, b, q), w.reshape(nb, b),
+          y.reshape(nb, b, d))
+    out, _ = jax.lax.scan(body, init, xs)
+    return out
+
+
+def bgplvm_stats_vjp(mu, s, w, y, z, log_hyp,
+                     c_psi0, c_p, c_psi2, c_tryy, c_kl):
+    """Pull the leader's cotangents back to this chunk's parameters.
+
+    Returns (dmu, ds, dz_partial, dhyp_partial): the first two are owned
+    by this chunk; the last two are summed across chunks by the reducer.
+    """
+    def f(mu_, s_, z_, lh_):
+        return _bgplvm_stats_fwd_ref(mu_, s_, w, y, z_, lh_)
+
+    _, vjp = jax.vjp(f, mu, s, z, log_hyp)
+    return vjp((c_psi0, c_p, c_psi2, c_tryy, c_kl))
+
+
+# ---------------------------------------------------------------------------
+# Worker-side statistics (supervised sparse GP regression: X observed)
+# ---------------------------------------------------------------------------
+
+def sgpr_stats_fwd(x, w, y, z, log_hyp):
+    """Supervised chunk -> (psi0, P, psi2, tryy). S == 0 collapses the
+    psi statistics to the exact kernel quantities; we still route through
+    the Pallas kernels (with S = 0) so the same Layer-1 code serves both
+    models, exactly as GPy shares its psi-statistics code path."""
+    s0 = jnp.zeros_like(x)
+    p1 = psi1(x, s0, z, log_hyp)                     # == K_fu
+    wy = w[:, None] * y
+    p = p1.T @ wy
+    p2 = psi2(x, s0, w, z, log_hyp)                  # == K_uf diag(w) K_fu
+    psi0 = ref.psi0_ref(w, log_hyp)
+    tryy = jnp.sum(w * jnp.sum(y * y, axis=1))
+    return psi0, p, p2, tryy
+
+
+def sgpr_stats_vjp(x, w, y, z, log_hyp, c_psi0, c_p, c_psi2, c_tryy):
+    """Cotangents -> (dz_partial, dhyp_partial). X is observed: no dmu/ds."""
+    s0 = jnp.zeros_like(x)
+
+    def f(z_, lh_):
+        st = _bgplvm_stats_fwd_ref(x, s0, w, y, z_, lh_)
+        return st[0], st[1], st[2], st[3]
+
+    _, vjp = jax.vjp(f, z, log_hyp)
+    return vjp((c_psi0, c_p, c_psi2, c_tryy))
+
+
+# ---------------------------------------------------------------------------
+# Leader-side bound (the indistributable M x M core)
+# ---------------------------------------------------------------------------
+
+def bound_from_stats(psi0, p, psi2_, tryy, kl, z, log_hyp, log_beta, n_eff):
+    """Variational lower bound F (paper eq. 3 / 4) from reduced statistics.
+
+    A = K_uu + beta * Psi2 (+ jitter); P = Psi1^T Y reduced over all chunks.
+
+      F = D/2 (N log beta - N log 2pi + logdet K_uu - logdet A)
+          - beta/2 trYY + beta^2/2 tr(P^T A^{-1} P)
+          - beta D/2 psi0 + beta D/2 tr(K_uu^{-1} Psi2) - KL
+    """
+    d = p.shape[1]
+    beta = jnp.exp(log_beta)
+    kuu = ref.kuu(z, log_hyp)
+    a = kuu + beta * psi2_
+
+    lk = cholesky(kuu)
+    la = cholesky(a)
+    logdet_kuu = 2.0 * jnp.sum(jnp.log(jnp.diagonal(lk)))
+    logdet_a = 2.0 * jnp.sum(jnp.log(jnp.diagonal(la)))
+
+    ainv_p = cho_solve(la, p)            # [M, D]
+    kuuinv_psi2 = cho_solve(lk, psi2_)   # [M, M]
+
+    f = (0.5 * d * (n_eff * log_beta - n_eff * LOG2PI + logdet_kuu - logdet_a)
+         - 0.5 * beta * tryy
+         + 0.5 * beta * beta * jnp.sum(p * ainv_p)
+         - 0.5 * beta * d * psi0
+         + 0.5 * beta * d * jnp.trace(kuuinv_psi2)
+         - kl)
+    return f
+
+
+def bound_and_grads(psi0, p, psi2_, tryy, kl, z, log_hyp, log_beta, n_eff):
+    """F plus gradients w.r.t. every input except n_eff.
+
+    The gradients w.r.t. (psi0, p, psi2, tryy, kl) are the cotangents the
+    coordinator broadcasts back to the workers; the gradients w.r.t.
+    (z, log_hyp, log_beta) are the *direct* terms, to which the workers'
+    partial dz/dhyp contributions are added by the reducer.
+    """
+    def f(psi0_, p_, psi2__, tryy_, kl_, z_, lh_, lb_):
+        return bound_from_stats(psi0_, p_, psi2__, tryy_, kl_, z_, lh_, lb_,
+                                n_eff)
+
+    val, grads = jax.value_and_grad(f, argnums=tuple(range(8)))(
+        psi0, p, psi2_, tryy, kl, z, log_hyp, log_beta)
+    return (val,) + grads
+
+
+# ---------------------------------------------------------------------------
+# Whole-model references (used by tests and by aot smoke checks)
+# ---------------------------------------------------------------------------
+
+def bgplvm_bound_full(mu, s, y, z, log_hyp, log_beta):
+    """Single-machine bound over a full (unpadded) dataset — the oracle the
+    distributed implementation must match exactly."""
+    w = jnp.ones(mu.shape[0], dtype=mu.dtype)
+    psi0, p, p2, tryy, kl = bgplvm_stats_fwd(mu, s, w, y, z, log_hyp)
+    return bound_from_stats(psi0, p, p2, tryy, kl, z, log_hyp, log_beta,
+                            jnp.sum(w))
+
+
+def sgpr_bound_full(x, y, z, log_hyp, log_beta):
+    w = jnp.ones(x.shape[0], dtype=x.dtype)
+    psi0, p, p2, tryy = sgpr_stats_fwd(x, w, y, z, log_hyp)
+    return bound_from_stats(psi0, p, p2, tryy, jnp.asarray(0.0, x.dtype),
+                            z, log_hyp, log_beta, jnp.sum(w))

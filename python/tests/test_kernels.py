@@ -1,0 +1,187 @@
+"""L1 correctness: Pallas psi kernels vs the pure-jnp oracle (ref.py).
+
+This is the core correctness signal for the accelerated path: hypothesis
+sweeps shapes/dtypes/parameter magnitudes and asserts allclose against
+the reference, plus structural invariants (symmetry, PSD, masking, the
+S->0 exact-kernel limit, tile-size invariance).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import psi_rbf, ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_inputs(seed, n, m, q, dtype=np.float64, scale=1.0):
+    rng = np.random.default_rng(seed)
+    mu = jnp.asarray(rng.normal(0, scale, (n, q)), dtype)
+    s = jnp.asarray(rng.uniform(0.05, 2.0 * scale, (n, q)), dtype)
+    w = jnp.asarray(rng.integers(0, 2, n), dtype)
+    z = jnp.asarray(rng.normal(0, scale, (m, q)), dtype)
+    log_hyp = jnp.asarray(rng.normal(0, 0.5, q + 1), dtype)
+    return mu, s, w, z, log_hyp
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes, dtypes, scales
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 70),
+    m=st.integers(1, 33),
+    q=st.integers(1, 5),
+)
+def test_psi1_matches_ref(seed, n, m, q):
+    mu, s, w, z, lh = make_inputs(seed, n, m, q)
+    got = psi_rbf.psi1_pallas(mu, s, z, lh)
+    want = ref.psi1_ref(mu, s, z, lh)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-14)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 70),
+    m=st.integers(1, 33),
+    q=st.integers(1, 4),
+)
+def test_psi2_matches_ref(seed, n, m, q):
+    mu, s, w, z, lh = make_inputs(seed, n, m, q)
+    got = psi_rbf.psi2_pallas(mu, s, w, z, lh)
+    want = ref.psi2_ref(mu, s, w, z, lh)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-13)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    scale=st.floats(0.1, 5.0),
+)
+def test_psi_dtypes_and_scales(seed, dtype, scale):
+    mu, s, w, z, lh = make_inputs(seed, 24, 8, 2, dtype=dtype, scale=scale)
+    tol = dict(rtol=2e-5, atol=2e-6) if dtype == np.float32 else \
+        dict(rtol=1e-11, atol=1e-13)
+    np.testing.assert_allclose(
+        psi_rbf.psi1_pallas(mu, s, z, lh), ref.psi1_ref(mu, s, z, lh), **tol)
+    np.testing.assert_allclose(
+        psi_rbf.psi2_pallas(mu, s, w, z, lh), ref.psi2_ref(mu, s, w, z, lh),
+        **tol)
+    assert psi_rbf.psi1_pallas(mu, s, z, lh).dtype == dtype
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    bn=st.integers(1, 64),
+    bm=st.integers(1, 16),
+)
+def test_tile_size_invariance(seed, bn, bm):
+    """The result must not depend on the Pallas tile decomposition."""
+    mu, s, w, z, lh = make_inputs(seed, 48, 12, 2)
+    base2 = psi_rbf.psi2_pallas(mu, s, w, z, lh, bn=48, bm=12)
+    got2 = psi_rbf.psi2_pallas(mu, s, w, z, lh, bn=bn, bm=bm)
+    np.testing.assert_allclose(got2, base2, rtol=1e-12, atol=1e-14)
+    base1 = psi_rbf.psi1_pallas(mu, s, z, lh, bn=48, bm=12)
+    got1 = psi_rbf.psi1_pallas(mu, s, z, lh, bn=bn, bm=bm)
+    np.testing.assert_allclose(got1, base1, rtol=1e-12, atol=1e-14)
+
+
+# ---------------------------------------------------------------------------
+# structural invariants
+# ---------------------------------------------------------------------------
+
+def test_psi2_symmetric_psd():
+    mu, s, w, z, lh = make_inputs(3, 64, 16, 3)
+    w = jnp.ones_like(w)
+    p2 = psi_rbf.psi2_pallas(mu, s, w, z, lh)
+    np.testing.assert_allclose(p2, p2.T, rtol=0, atol=1e-12)
+    evals = np.linalg.eigvalsh(np.asarray(p2))
+    assert evals.min() > -1e-10, f"Psi2 not PSD: min eig {evals.min()}"
+
+
+def test_s_zero_recovers_exact_kernel():
+    """S=0 must give Psi1 == K_fu and Psi2 == K_uf K_fu exactly — this is
+    what makes the SGPR path share the BGP-LVM kernels."""
+    mu, _, w, z, lh = make_inputs(7, 40, 10, 2)
+    w = jnp.ones_like(w)
+    s0 = jnp.zeros_like(mu)
+    sigma2, alpha = ref.unpack_hyp(lh)
+    d = mu[:, None, :] - z[None, :, :]
+    kfu = sigma2 * jnp.exp(-0.5 * jnp.sum(alpha * d * d, axis=-1))
+    np.testing.assert_allclose(psi_rbf.psi1_pallas(mu, s0, z, lh), kfu,
+                               rtol=1e-12, atol=1e-14)
+    np.testing.assert_allclose(psi_rbf.psi2_pallas(mu, s0, w, z, lh),
+                               kfu.T @ kfu, rtol=1e-12, atol=1e-12)
+
+
+def test_mask_drops_points():
+    """Masked-out rows must contribute nothing to Psi2/psi0, exactly as a
+    shorter chunk would."""
+    mu, s, _, z, lh = make_inputs(11, 32, 8, 2)
+    w_full = jnp.concatenate([jnp.ones(20), jnp.zeros(12)])
+    got = psi_rbf.psi2_pallas(mu, s, w_full, z, lh)
+    want = ref.psi2_ref(mu[:20], s[:20], jnp.ones(20), z, lh)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-13)
+    np.testing.assert_allclose(ref.psi0_ref(w_full, lh),
+                               ref.psi0_ref(jnp.ones(20), lh))
+
+
+def test_psi1_monotone_in_distance():
+    """Psi1 decays as |mu - z| grows (RBF sanity)."""
+    q = 1
+    z = jnp.zeros((1, q))
+    lh = jnp.zeros(q + 1)
+    s = jnp.full((3, q), 0.5)
+    mu = jnp.asarray([[0.0], [1.0], [3.0]])
+    p1 = np.asarray(psi_rbf.psi1_pallas(mu, s, z, lh)).ravel()
+    assert p1[0] > p1[1] > p1[2] > 0
+
+
+def test_blocked_ref_matches_ref():
+    mu, s, w, z, lh = make_inputs(13, 100, 9, 2)
+    np.testing.assert_allclose(
+        ref.psi2_ref_blocked(mu, s, w, z, lh, block=17),
+        ref.psi2_ref(mu, s, w, z, lh), rtol=1e-12, atol=1e-13)
+
+
+def test_pick_block():
+    assert psi_rbf.pick_block(100, 32) == 25
+    assert psi_rbf.pick_block(64, 256) == 64
+    assert psi_rbf.pick_block(17, 4) == 1
+    for n in [1, 7, 24, 100, 1024]:
+        for t in [1, 3, 16, 999]:
+            b = psi_rbf.pick_block(n, t)
+            assert n % b == 0 and 1 <= b <= max(1, min(n, t))
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp gradients (the Table-2 analog) vs autodiff of the reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_custom_vjp_matches_ref_grad(seed):
+    mu, s, w, z, lh = make_inputs(seed, 24, 8, 2)
+    w = jnp.ones_like(w)
+    ct1 = jnp.asarray(np.random.default_rng(seed).normal(size=(24, 8)))
+    ct2 = jnp.asarray(np.random.default_rng(seed + 1).normal(size=(8, 8)))
+
+    def via_kernel(mu_, s_, z_, lh_):
+        return (jnp.sum(psi_rbf.psi1(mu_, s_, z_, lh_) * ct1)
+                + jnp.sum(psi_rbf.psi2(mu_, s_, w, z_, lh_) * ct2))
+
+    def via_ref(mu_, s_, z_, lh_):
+        return (jnp.sum(ref.psi1_ref(mu_, s_, z_, lh_) * ct1)
+                + jnp.sum(ref.psi2_ref(mu_, s_, w, z_, lh_) * ct2))
+
+    gk = jax.grad(via_kernel, argnums=(0, 1, 2, 3))(mu, s, z, lh)
+    gr = jax.grad(via_ref, argnums=(0, 1, 2, 3))(mu, s, z, lh)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-10, atol=1e-12)

@@ -1,0 +1,184 @@
+"""L2 correctness: the distributed objective equals the monolithic one,
+gradients agree with finite differences, and the SGPR bound collapses to
+the exact GP log-marginal-likelihood when Z = X (Titsias 2009)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_problem(seed, n, m, q, d):
+    rng = np.random.default_rng(seed)
+    mu = jnp.asarray(rng.normal(size=(n, q)))
+    s = jnp.asarray(rng.uniform(0.2, 1.5, (n, q)))
+    y = jnp.asarray(rng.normal(size=(n, d)))
+    z = jnp.asarray(rng.normal(size=(m, q)))
+    log_hyp = jnp.asarray(rng.normal(0, 0.3, q + 1))
+    log_beta = jnp.asarray(rng.normal() * 0.3)
+    return mu, s, y, z, log_hyp, log_beta
+
+
+def reduce_chunks(mu, s, y, z, lh, chunk):
+    """Emulate the coordinator: per-chunk stats (with padding on the tail),
+    summed — must equal the monolithic stats exactly."""
+    n = mu.shape[0]
+    tot = None
+    for i in range(0, n, chunk):
+        end = min(i + chunk, n)
+        c = end - i
+        pad = chunk - c
+        mu_c = jnp.pad(mu[i:end], ((0, pad), (0, 0)))
+        s_c = jnp.pad(s[i:end], ((0, pad), (0, 0)), constant_values=1.0)
+        y_c = jnp.pad(y[i:end], ((0, pad), (0, 0)))
+        w_c = jnp.pad(jnp.ones(c), (0, pad))
+        st = model.bgplvm_stats_fwd(mu_c, s_c, w_c, y_c, z, lh)
+        tot = st if tot is None else tuple(a + b for a, b in zip(tot, st))
+    return tot
+
+
+# ---------------------------------------------------------------------------
+# distributed == monolithic
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,chunk", [(50, 16), (64, 64), (33, 10), (7, 32)])
+def test_chunked_stats_equal_full(n, chunk):
+    mu, s, y, z, lh, _ = make_problem(0, n, 12, 2, 3)
+    w = jnp.ones(n)
+    full = model.bgplvm_stats_fwd(mu, s, w, y, z, lh)
+    summed = reduce_chunks(mu, s, y, z, lh, chunk)
+    for a, b in zip(summed, full):
+        np.testing.assert_allclose(a, b, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 37])
+def test_chunked_bound_equals_full(chunk):
+    mu, s, y, z, lh, lb = make_problem(1, 48, 10, 2, 3)
+    st = reduce_chunks(mu, s, y, z, lh, chunk)
+    f_dist = model.bound_from_stats(*st, z, lh, lb, jnp.asarray(48.0))
+    f_full = model.bgplvm_bound_full(mu, s, y, z, lh, lb)
+    np.testing.assert_allclose(f_dist, f_full, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# gradients: the fwd/bound/vjp decomposition equals jax.grad of the full
+# bound — i.e. the distributed chain rule is exact.
+# ---------------------------------------------------------------------------
+
+def test_distributed_gradients_equal_monolithic():
+    n, m, q, d = 40, 8, 2, 3
+    mu, s, y, z, lh, lb = make_problem(2, n, m, q, d)
+    w = jnp.ones(n)
+
+    # distributed path: fwd -> bound_and_grads -> vjp
+    st = model.bgplvm_stats_fwd(mu, s, w, y, z, lh)
+    out = model.bound_and_grads(*st, z, lh, lb, jnp.asarray(float(n)))
+    f, c_psi0, c_p, c_psi2, c_tryy, c_kl, dz_dir, dhyp_dir, dbeta = out
+    dmu, ds, dz_part, dhyp_part = model.bgplvm_stats_vjp(
+        mu, s, w, y, z, lh, c_psi0, c_p, c_psi2, c_tryy, c_kl)
+    dz = dz_dir + dz_part
+    dhyp = dhyp_dir + dhyp_part
+
+    # monolithic autodiff
+    def full(mu_, s_, z_, lh_, lb_):
+        return model.bgplvm_bound_full(mu_, s_, y, z_, lh_, lb_)
+
+    f_ref, g = jax.value_and_grad(full, argnums=(0, 1, 2, 3, 4))(
+        mu, s, z, lh, lb)
+    np.testing.assert_allclose(f, f_ref, rtol=1e-12)
+    for got, want, name in zip((dmu, ds, dz, dhyp, dbeta), g,
+                               ("dmu", "ds", "dz", "dhyp", "dbeta")):
+        np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-10,
+                                   err_msg=name)
+
+
+def test_sgpr_distributed_gradients():
+    n, m, q, d = 30, 6, 2, 2
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(n, q)))
+    y = jnp.asarray(rng.normal(size=(n, d)))
+    z = jnp.asarray(rng.normal(size=(m, q)))
+    lh = jnp.asarray(rng.normal(0, 0.3, q + 1))
+    lb = jnp.asarray(0.2)
+    w = jnp.ones(n)
+
+    st = model.sgpr_stats_fwd(x, w, y, z, lh)
+    out = model.bound_and_grads(st[0], st[1], st[2], st[3],
+                                jnp.asarray(0.0), z, lh, lb,
+                                jnp.asarray(float(n)))
+    f, c_psi0, c_p, c_psi2, c_tryy, _c_kl, dz_dir, dhyp_dir, dbeta = out
+    dz_part, dhyp_part = model.sgpr_stats_vjp(
+        x, w, y, z, lh, c_psi0, c_p, c_psi2, c_tryy)
+
+    def full(z_, lh_, lb_):
+        return model.sgpr_bound_full(x, y, z_, lh_, lb_)
+
+    f_ref, g = jax.value_and_grad(full, argnums=(0, 1, 2))(z, lh, lb)
+    np.testing.assert_allclose(f, f_ref, rtol=1e-12)
+    np.testing.assert_allclose(dz_dir + dz_part, g[0], rtol=1e-9, atol=1e-10)
+    np.testing.assert_allclose(dhyp_dir + dhyp_part, g[1], rtol=1e-9,
+                               atol=1e-10)
+    np.testing.assert_allclose(dbeta, g[2], rtol=1e-9, atol=1e-10)
+
+
+def test_bound_grads_finite_difference():
+    mu, s, y, z, lh, lb = make_problem(4, 20, 5, 1, 2)
+    w = jnp.ones(20)
+    st = model.bgplvm_stats_fwd(mu, s, w, y, z, lh)
+    n_eff = jnp.asarray(20.0)
+
+    out = model.bound_and_grads(*st, z, lh, lb, n_eff)
+    dbeta = out[8]
+    eps = 1e-6
+    f_p = model.bound_from_stats(*st, z, lh, lb + eps, n_eff)
+    f_m = model.bound_from_stats(*st, z, lh, lb - eps, n_eff)
+    np.testing.assert_allclose(dbeta, (f_p - f_m) / (2 * eps), rtol=1e-5)
+
+    dhyp = out[7]
+    for i in range(lh.shape[0]):
+        e = jnp.zeros_like(lh).at[i].set(eps)
+        # direct term only: stats held fixed
+        f_p = model.bound_from_stats(*st, z, lh + e, lb, n_eff)
+        f_m = model.bound_from_stats(*st, z, lh - e, lb, n_eff)
+        np.testing.assert_allclose(dhyp[i], (f_p - f_m) / (2 * eps),
+                                   rtol=1e-4, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# the Titsias Z=X collapse: SGPR bound == exact GP log marginal likelihood
+# ---------------------------------------------------------------------------
+
+def test_sgpr_bound_tight_at_z_equals_x():
+    n, q, d = 25, 2, 2
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(n, q)))
+    y = jnp.asarray(rng.normal(size=(n, d)))
+    lh = jnp.asarray([0.2, -0.1, 0.15])
+    lb = jnp.asarray(1.1)
+    beta = jnp.exp(lb)
+
+    f_sparse = model.sgpr_bound_full(x, y, x, lh, lb)
+
+    # exact dense GP: sum_d log N(y_d | 0, Kff + beta^{-1} I)
+    kff = ref.kuu(x, lh, jitter=0.0) - 1e-12 * jnp.eye(n)
+    cov = kff + (1.0 / beta) * jnp.eye(n)
+    l = jnp.linalg.cholesky(cov)
+    alpha_ = jax.scipy.linalg.cho_solve((l, True), y)
+    f_exact = (-0.5 * n * d * model.LOG2PI
+               - d * jnp.sum(jnp.log(jnp.diagonal(l)))
+               - 0.5 * jnp.sum(y * alpha_))
+    # With Z=X the bound is tight up to jitter effects.
+    np.testing.assert_allclose(f_sparse, f_exact, rtol=1e-5)
+
+
+def test_bound_decreases_with_worse_beta():
+    """Perturbing the noise away from a fitted-ish value lowers F."""
+    mu, s, y, z, lh, _ = make_problem(6, 30, 8, 2, 3)
+    f = [float(model.bgplvm_bound_full(mu, s, y, z, lh, jnp.asarray(lb)))
+         for lb in (-8.0, 0.0, 8.0)]
+    assert f[1] > f[0] and f[1] > f[2]

@@ -1,0 +1,87 @@
+//! Fig 1b reproduction: percentage of per-iteration time spent in the
+//! indistributable computation, vs dataset size.
+//!
+//!   cargo bench --bench fig1b_indistributable
+//!   FIG1B_FAST=1 cargo bench --bench fig1b_indistributable
+//!
+//! The paper's claim: the indistributable share (the M×M core +
+//! collectives at the leader) is small and shrinks as N grows, so more
+//! compute keeps helping. We measure the same split with the coordinator's
+//! phase timers for both backends, and emit results/fig1b.csv.
+
+use gpparallel::config::BackendKind;
+use gpparallel::coordinator::{Engine, EngineConfig, OptChoice};
+use gpparallel::data::synthetic::{generate, SyntheticSpec};
+use gpparallel::metrics::Phase;
+use gpparallel::models::BayesianGplvm;
+use gpparallel::optim::Lbfgs;
+use std::fmt::Write as _;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("FIG1B_FAST").is_ok();
+    // default sweep tops out at 16k so `cargo bench` stays ~minutes on
+    // this single-core host; FIG1B_HUGE=1 extends to the paper's full 64k.
+    let huge = std::env::var("FIG1B_HUGE").is_ok();
+    let sizes: Vec<usize> = if fast {
+        vec![1024, 2048, 4096]
+    } else if huge {
+        vec![1024, 2048, 4096, 8192, 16384, 32768, 65536]
+    } else {
+        vec![1024, 2048, 4096, 8192, 16384]
+    };
+    let evals = 2;
+
+    println!("Fig 1b — indistributable share of iteration time (M=100, Q=1, D=3)");
+    println!("{:>9} {:>8} {:>10} {:>12} {:>12}",
+             "backend", "N", "indist %", "core ms", "total ms");
+
+    let mut rows = Vec::new();
+    for backend in [BackendKind::RustCpu, BackendKind::Xla] {
+        for &n in &sizes {
+            let spec = SyntheticSpec { n, q: 1, d: 3, ..Default::default() };
+            let ds = generate(&spec, 0);
+            let problem = BayesianGplvm::problem(&ds.y, 1, 100, "paper", 0);
+            let cfg = EngineConfig {
+                workers: 2,
+                chunk: 1024,
+                backend,
+                artifacts_dir: "artifacts".into(),
+                opt: OptChoice::Lbfgs(Lbfgs::default()),
+                verbose: false,
+            };
+            let engine = Engine::new(problem, cfg)?;
+            let r = engine.time_iterations(evals)?;
+            let frac = r.timing.indistributable_fraction();
+            let core_ms = r.timing.get(Phase::BoundCore).as_secs_f64() * 1e3
+                / evals as f64;
+            let total_ms = r.timing.total().as_secs_f64() * 1e3 / evals as f64;
+            println!("{:>9} {:>8} {:>10.2} {:>12.2} {:>12.1}",
+                     backend.name(), n, frac * 100.0, core_ms, total_ms);
+            rows.push((backend, n, frac, core_ms, total_ms));
+        }
+        // paper claim: share decreases with N
+        let fracs: Vec<f64> = rows.iter()
+            .filter(|r| r.0 == backend)
+            .map(|r| r.2)
+            .collect();
+        if fracs.len() >= 2 {
+            let dir = if fracs.last().unwrap() < fracs.first().unwrap() {
+                "decreases"
+            } else {
+                "does NOT decrease"
+            };
+            println!("  -> {} share {dir} with N ({:.2}% at N={} vs {:.2}% at N={})",
+                     backend.name(), fracs.first().unwrap() * 100.0, sizes[0],
+                     fracs.last().unwrap() * 100.0, sizes[sizes.len() - 1]);
+        }
+    }
+
+    std::fs::create_dir_all("results")?;
+    let mut csv = String::from("backend,n,indist_frac,core_ms_per_iter,total_ms_per_iter\n");
+    for (b, n, f, c, t) in &rows {
+        let _ = writeln!(csv, "{},{},{},{},{}", b.name(), n, f, c, t);
+    }
+    std::fs::write("results/fig1b.csv", csv)?;
+    println!("\nwrote results/fig1b.csv");
+    Ok(())
+}

@@ -1,0 +1,168 @@
+//! Micro + ablation benches (the design-choice studies DESIGN.md lists):
+//!
+//!   1. psi-statistics kernel: Rust scalar loops vs the XLA artifact,
+//!      per chunk (the per-device building block behind Fig 1a).
+//!   2. chunk-size ablation at fixed N (padding/dispatch overhead trade).
+//!   3. sparse-distributed vs dense O(N³) GP crossover.
+//!   4. optimiser ablation: L-BFGS vs SCG vs Adam on the same model.
+//!
+//!   cargo bench --bench micro      (MICRO_FAST=1 for the short version)
+
+use gpparallel::baselines::DenseGp;
+use gpparallel::config::BackendKind;
+use gpparallel::coordinator::backend::{Backend, ChunkData, RustCpuBackend, ViewParams,
+                                       XlaBackend};
+use gpparallel::coordinator::{Engine, EngineConfig, OptChoice};
+use gpparallel::data::rng::Rng64;
+use gpparallel::data::synthetic::{generate, generate_supervised, SyntheticSpec};
+use gpparallel::kern::RbfArd;
+use gpparallel::linalg::Mat;
+use gpparallel::models::BayesianGplvm;
+use gpparallel::optim::{Adam, Lbfgs, Scg};
+use std::time::Instant;
+
+fn time_it<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(f());
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("MICRO_FAST").is_ok();
+
+    // ---------------------------------------------------------------
+    // 1. per-chunk stats: Rust vs XLA (the paper's Table-1 kernel)
+    // ---------------------------------------------------------------
+    println!("== per-chunk psi statistics (C=1024, M=100, Q=1, D=3) ==");
+    let (c, m, q, d) = (1024usize, 100usize, 1usize, 3usize);
+    let mut rng = Rng64::new(1);
+    let mu = Mat::from_fn(c, q, |_, _| rng.normal());
+    let s = Mat::from_fn(c, q, |_, _| rng.uniform_range(0.2, 1.2));
+    let y = Mat::from_fn(c, d, |_, _| rng.normal());
+    let z = Mat::from_fn(m, q, |_, _| rng.normal());
+    let kern = RbfArd::iso(1.0, 1.0, q);
+    let log_hyp = kern.to_log_hyp();
+    let chunk = ChunkData { start: 0, live: c, y, x: Mat::zeros(0, 0), w: vec![1.0; c] };
+    let vp = ViewParams { z: &z, log_hyp: &log_hyp };
+
+    let reps = if fast { 3 } else { 8 };
+    let mut cpu = RustCpuBackend;
+    let t_cpu_fwd = time_it(reps, || cpu.stats_fwd(&chunk, Some((&mu, &s)), &vp, true).unwrap());
+    println!("  rust-cpu  stats_fwd : {:>9.2} ms", t_cpu_fwd * 1e3);
+
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    if have_artifacts {
+        let (rt, mut xla) = XlaBackend::from_dir(std::path::Path::new("artifacts"), "paper")?;
+        let _ = &rt;
+        let t_xla_fwd = time_it(reps, || xla.stats_fwd(&chunk, Some((&mu, &s)), &vp, true).unwrap());
+        println!("  xla       stats_fwd : {:>9.2} ms   ({:.2}x vs rust-cpu)",
+                 t_xla_fwd * 1e3, t_cpu_fwd / t_xla_fwd);
+
+        use gpparallel::math::stats::StatsCts;
+        let cts = StatsCts {
+            c_psi0: 0.3,
+            c_p: Mat::from_fn(m, d, |_, _| 0.01),
+            c_psi2: Mat::from_fn(m, m, |_, _| 0.001),
+            c_tryy: -0.5,
+            c_kl: -1.0,
+        };
+        let t_cpu_vjp = time_it(reps, || cpu.stats_vjp(&chunk, Some((&mu, &s)), &vp, &cts).unwrap());
+        let t_xla_vjp = time_it(reps, || xla.stats_vjp(&chunk, Some((&mu, &s)), &vp, &cts).unwrap());
+        println!("  rust-cpu  stats_vjp : {:>9.2} ms", t_cpu_vjp * 1e3);
+        println!("  xla       stats_vjp : {:>9.2} ms   ({:.2}x vs rust-cpu)",
+                 t_xla_vjp * 1e3, t_cpu_vjp / t_xla_vjp);
+    } else {
+        println!("  (artifacts missing; run `make artifacts` for the XLA rows)");
+    }
+
+    // ---------------------------------------------------------------
+    // 2. chunk-size ablation (fixed N, XLA needs matching config so we
+    //    ablate the Rust backend where chunk is free)
+    // ---------------------------------------------------------------
+    println!("\n== chunk-size ablation (rust-cpu, N=4096, 2 workers) ==");
+    let spec = SyntheticSpec { n: 4096, q: 1, d: 3, ..Default::default() };
+    let ds = generate(&spec, 0);
+    for chunk_size in [256usize, 512, 1024, 2048, 4096] {
+        let problem = BayesianGplvm::problem(&ds.y, 1, 100, "paper", 0);
+        let cfg = EngineConfig {
+            workers: 2,
+            chunk: chunk_size,
+            backend: BackendKind::RustCpu,
+            artifacts_dir: "artifacts".into(),
+            opt: OptChoice::Lbfgs(Lbfgs::default()),
+            verbose: false,
+        };
+        let r = Engine::new(problem, cfg)?.time_iterations(1)?;
+        println!("  chunk {:>5}: {:>8.3} s/iter", chunk_size, r.sec_per_eval);
+    }
+
+    // ---------------------------------------------------------------
+    // 3. sparse-distributed vs dense O(N^3) crossover
+    // ---------------------------------------------------------------
+    println!("\n== sparse (M=16) vs dense GP: one hyperparameter-objective eval ==");
+    println!("{:>6} {:>14} {:>14} {:>8}", "N", "sparse s", "dense s", "ratio");
+    let sizes = if fast { vec![256, 512] } else { vec![256, 512, 1024, 2048] };
+    for n in sizes {
+        let spec = SyntheticSpec { n, q: 1, d: 1, ..Default::default() };
+        let dsn = generate_supervised(&spec, 3);
+        let x = dsn.x.clone().unwrap();
+        let kern = RbfArd::iso(1.0, 1.0, 1);
+
+        // sparse: one full distributed objective evaluation
+        let problem = gpparallel::coordinator::Problem {
+            latent: gpparallel::coordinator::LatentSpec::Observed(x.clone()),
+            views: vec![gpparallel::coordinator::ViewSpec {
+                y: dsn.y.clone(),
+                z0: Mat::from_fn(16, 1, |i, _| -2.0 + 4.0 * i as f64 / 15.0),
+                kern0: kern.clone(),
+                beta0: 10.0,
+                aot_config: "quickstart".into(),
+            }],
+            q: 1,
+        };
+        let cfg = EngineConfig {
+            workers: 1,
+            chunk: 256,
+            backend: BackendKind::RustCpu,
+            artifacts_dir: "artifacts".into(),
+            opt: OptChoice::Lbfgs(Lbfgs::default()),
+            verbose: false,
+        };
+        let t_sparse = Engine::new(problem, cfg)?.time_iterations(1)?.sec_per_eval;
+
+        // dense: one exact-marginal-likelihood-with-gradients evaluation
+        let t_dense = time_it(1, || DenseGp::lml_and_grads(&kern, 10.0f64.ln(), &x, &dsn.y).unwrap());
+        println!("{:>6} {:>14.4} {:>14.4} {:>8.2}", n, t_sparse, t_dense,
+                 t_dense / t_sparse);
+    }
+
+    // ---------------------------------------------------------------
+    // 4. optimiser ablation
+    // ---------------------------------------------------------------
+    println!("\n== optimiser ablation (BGP-LVM, N=256, 40-iteration budget) ==");
+    let spec = SyntheticSpec { n: 256, q: 2, d: 3, ..Default::default() };
+    let ds = generate(&spec, 4);
+    for (name, opt) in [
+        ("L-BFGS", OptChoice::Lbfgs(Lbfgs { max_iters: 40, ..Default::default() })),
+        ("SCG", OptChoice::Scg(Scg { max_iters: 40, ..Default::default() })),
+        ("Adam", OptChoice::Adam(Adam { lr: 5e-2, max_iters: 40, ..Default::default() })),
+    ] {
+        let problem = BayesianGplvm::problem(&ds.y, 2, 16, "test", 4);
+        let cfg = EngineConfig {
+            workers: 1,
+            chunk: 64,
+            backend: BackendKind::RustCpu,
+            artifacts_dir: "artifacts".into(),
+            opt,
+            verbose: false,
+        };
+        let r = Engine::new(problem, cfg)?.train()?;
+        println!("  {:>7}: bound {:>10.2} -> {:>10.2}  ({} evals)",
+                 name, r.trace.first().unwrap(), r.trace.last().unwrap(),
+                 r.evaluations);
+    }
+
+    Ok(())
+}

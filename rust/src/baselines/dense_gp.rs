@@ -1,0 +1,154 @@
+//! Exact (dense) GP regression — the O(N³) baseline.
+//!
+//! Marginal likelihood, analytic gradients, and predictions, all through
+//! one N×N Cholesky. Used by the `micro` bench to locate the N where the
+//! sparse distributed method overtakes the exact one, and by tests as an
+//! oracle for the sparse bound (which is tight at Z = X).
+
+use crate::kern::RbfArd;
+use crate::linalg::{Chol, Mat};
+use crate::math::bound::LOG2PI;
+use crate::optim::{Lbfgs, Optimizer};
+use anyhow::{Context, Result};
+
+/// A dense GP regressor with RBF-ARD kernel.
+pub struct DenseGp {
+    pub kern: RbfArd,
+    pub beta: f64,
+    x: Mat,
+    /// K + β⁻¹I factor.
+    chol: Chol,
+    /// (K + β⁻¹I)⁻¹ Y.
+    alpha: Mat,
+}
+
+impl DenseGp {
+    /// Exact log marginal likelihood Σ_d log N(y_d | 0, K + β⁻¹I) and its
+    /// gradients w.r.t. [log σ², log ℓ…, log β].
+    pub fn lml_and_grads(kern: &RbfArd, log_beta: f64, x: &Mat, y: &Mat)
+                         -> Result<(f64, Vec<f64>)> {
+        let n = x.rows();
+        let d = y.cols() as f64;
+        let beta = log_beta.exp();
+        let mut c = kern.k(x, x);
+        c.add_diag(1.0 / beta + 1e-10);
+        let (l, _) = Chol::new_with_jitter(&c, 6).context("K + noise")?;
+        let alpha = l.solve(y); // N × D
+
+        let lml = -0.5 * d * (n as f64) * LOG2PI - d * 0.5 * l.logdet()
+            - 0.5 * y.dot(&alpha);
+
+        // dL/dC = ½(α αᵀ·scaled − D·C⁻¹) ; trace form per output dim.
+        let cinv = l.inverse();
+        let mut df_dc = alpha.matmul_t(&alpha); // Σ_d α_d α_dᵀ
+        df_dc.axpy(-d, &cinv);
+        df_dc.scale_mut(0.5);
+
+        // kernel part via kuu_vjp-style pullback on K(x,x): reuse kuu_vjp
+        // minus its jitter convention by calling the plain kernel VJP.
+        let (_, mut dhyp) = kern.kuu_vjp(x, &df_dc);
+        // kuu_vjp includes d(jitter·σ²)/dlogσ² for its own 1e-8 jitter; the
+        // dense model used add_diag (β-only), so subtract that spurious term.
+        let spurious: f64 = (0..n).map(|i| df_dc[(i, i)]).sum::<f64>() * 1e-8 * kern.variance;
+        dhyp[0] -= spurious;
+
+        // noise: dC/dβ = −β⁻²I ⇒ dL/dlogβ = −β⁻¹ tr(dL/dC).
+        let dlog_beta = -df_dc.trace() / beta;
+
+        let mut g = dhyp;
+        g.push(dlog_beta);
+        Ok((lml, g))
+    }
+
+    /// Fit hyperparameters by L-BFGS on the exact marginal likelihood.
+    pub fn fit(x: &Mat, y: &Mat, kern0: RbfArd, beta0: f64, max_iters: usize)
+               -> Result<DenseGp> {
+        let mut x0 = kern0.to_log_hyp();
+        x0.push(beta0.ln());
+        let opt = Lbfgs { max_iters, ..Default::default() };
+        let mut obj = |p: &[f64]| -> (f64, Vec<f64>) {
+            let kern = RbfArd::from_log_hyp(&p[..p.len() - 1]);
+            match Self::lml_and_grads(&kern, p[p.len() - 1], x, y) {
+                Ok((f, g)) => (-f, g.iter().map(|v| -v).collect()),
+                Err(_) => (f64::INFINITY, vec![0.0; p.len()]),
+            }
+        };
+        let r = opt.minimize(&mut obj, x0);
+        let kern = RbfArd::from_log_hyp(&r.x[..r.x.len() - 1]);
+        let beta = r.x[r.x.len() - 1].exp();
+        Self::with_params(x.clone(), y, kern, beta)
+    }
+
+    /// Build the predictor at fixed hyperparameters.
+    pub fn with_params(x: Mat, y: &Mat, kern: RbfArd, beta: f64) -> Result<DenseGp> {
+        let mut c = kern.k(&x, &x);
+        c.add_diag(1.0 / beta + 1e-10);
+        let (chol, _) = Chol::new_with_jitter(&c, 6)?;
+        let alpha = chol.solve(y);
+        Ok(DenseGp { kern, beta, x, chol, alpha })
+    }
+
+    /// Predictive mean and variance (with noise) at test inputs.
+    pub fn predict(&self, xstar: &Mat) -> (Mat, Vec<f64>) {
+        let ks = self.kern.k(xstar, &self.x); // Nt × N
+        let mean = ks.matmul(&self.alpha);
+        let v = self.chol.solve_l(&ks.t()); // N × Nt
+        let var: Vec<f64> = (0..xstar.rows())
+            .map(|i| {
+                let col: f64 = (0..self.x.rows()).map(|r| v[(r, i)] * v[(r, i)]).sum();
+                (self.kern.variance - col + 1.0 / self.beta).max(1e-12)
+            })
+            .collect();
+        (mean, var)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::fd::{assert_grad_close, grad_fd};
+    use crate::testutil::prop::Rng64;
+
+    #[test]
+    fn lml_grads_match_fd() {
+        let mut rng = Rng64::new(71);
+        let x = Mat::from_fn(12, 2, |_, _| rng.normal());
+        let y = Mat::from_fn(12, 2, |_, _| rng.normal());
+        let kern = RbfArd::new(1.2, vec![0.8, 1.4]);
+        let lb = 0.4;
+        let (_, g) = DenseGp::lml_and_grads(&kern, lb, &x, &y).unwrap();
+        let mut p0 = kern.to_log_hyp();
+        p0.push(lb);
+        let f = |p: &[f64]| {
+            let k = RbfArd::from_log_hyp(&p[..3]);
+            DenseGp::lml_and_grads(&k, p[3], &x, &y).unwrap().0
+        };
+        assert_grad_close(&g, &grad_fd(f, &p0, 1e-6), 1e-5, 1e-8, "dense lml");
+    }
+
+    #[test]
+    fn interpolates_smooth_function() {
+        let n = 40;
+        let x = Mat::from_fn(n, 1, |i, _| i as f64 / (n as f64) * 6.0 - 3.0);
+        let y = Mat::from_fn(n, 1, |i, _| (x[(i, 0)]).sin());
+        let gp = DenseGp::fit(&x, &y, RbfArd::iso(1.0, 1.0, 1), 100.0, 40).unwrap();
+        let probe = Mat::from_vec(3, 1, vec![-1.5, 0.25, 2.0]);
+        let (mean, _) = gp.predict(&probe);
+        for i in 0..3 {
+            assert!((mean[(i, 0)] - probe[(i, 0)].sin()).abs() < 0.05,
+                    "{} vs {}", mean[(i, 0)], probe[(i, 0)].sin());
+        }
+    }
+
+    #[test]
+    fn recovers_noise_level() {
+        let mut rng = Rng64::new(72);
+        let n = 120;
+        let x = Mat::from_fn(n, 1, |_, _| rng.uniform_range(-3.0, 3.0));
+        let noise_sd = 0.1;
+        let y = Mat::from_fn(n, 1, |i, _| (1.5 * x[(i, 0)]).sin() + noise_sd * rng.normal());
+        let gp = DenseGp::fit(&x, &y, RbfArd::iso(1.0, 1.0, 1), 10.0, 60).unwrap();
+        let learned_sd = (1.0 / gp.beta).sqrt();
+        assert!(learned_sd > 0.05 && learned_sd < 0.2, "noise sd {learned_sd}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Baselines the paper's method is measured against.
+//!
+//! The headline comparison inside the paper is CPU-vs-GPU within the
+//! same sparse method (our two backends); the implicit baseline of the
+//! whole sparse-GP literature is the dense O(N³) GP, implemented here to
+//! regenerate the sparse-vs-dense crossover bench.
+
+pub mod dense_gp;
+
+pub use dense_gp::DenseGp;

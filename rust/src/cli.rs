@@ -1,0 +1,117 @@
+//! Command-line argument parsing (offline stand-in for `clap`): a small
+//! flag parser plus the launcher's option structs.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed `--key value` / `--flag` arguments plus positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argument list (no program name). `--key=value`,
+    /// `--key value` and bare `--flag` are all accepted; flags must be
+    /// declared so `--flag value` is unambiguous.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, known_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    let v = iter.next()
+                        .ok_or_else(|| anyhow!("--{body} expects a value"))?;
+                    out.options.insert(body.to_string(), v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>()
+                .map_err(|_| anyhow!("--{name}: cannot parse {v:?}")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+
+    /// Reject unknown options (typo guard).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["verbose"]).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("train --n 100 --backend=xla --verbose pos2");
+        assert_eq!(a.positional, vec!["train", "pos2"]);
+        assert_eq!(a.get("n"), Some("100"));
+        assert_eq!(a.get("backend"), Some("xla"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("--n 42");
+        assert_eq!(a.get_parse("n", 7usize).unwrap(), 42);
+        assert_eq!(a.get_parse("m", 7usize).unwrap(), 7);
+        assert!(a.get_parse::<usize>("n", 0).is_ok());
+        let bad = parse("--n abc");
+        assert!(bad.get_parse::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse("--typo 1");
+        assert!(a.check_known(&["n", "m"]).is_err());
+        assert!(a.check_known(&["typo"]).is_ok());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(["--n".to_string()].into_iter(), &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn require_works() {
+        let a = parse("--n 1");
+        assert!(a.require("n").is_ok());
+        assert!(a.require("zz").is_err());
+    }
+}

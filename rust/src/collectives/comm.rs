@@ -1,0 +1,303 @@
+//! Point-to-point and collective operations over in-process channels.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// A tagged message between ranks.
+struct Message {
+    src: usize,
+    tag: u64,
+    data: Vec<f64>,
+}
+
+/// Per-rank communicator handle (the MPI_Comm analog).
+pub struct Comm {
+    rank: usize,
+    size: usize,
+    senders: Vec<Sender<Message>>,
+    inbox: Receiver<Message>,
+    /// Out-of-order messages parked until a matching recv.
+    parked: HashMap<(usize, u64), Vec<Vec<f64>>>,
+    bytes_sent: Arc<AtomicU64>,
+    messages_sent: Arc<AtomicU64>,
+}
+
+impl Comm {
+    pub fn rank(&self) -> usize { self.rank }
+    pub fn size(&self) -> usize { self.size }
+    pub fn is_root(&self) -> bool { self.rank == 0 }
+
+    /// Total bytes this *cluster* has shipped (shared counter).
+    pub fn bytes_sent(&self) -> u64 { self.bytes_sent.load(Ordering::Relaxed) }
+    pub fn messages_sent(&self) -> u64 { self.messages_sent.load(Ordering::Relaxed) }
+
+    /// Send `data` to `dst` with a tag (non-blocking; channels buffer).
+    pub fn send(&self, dst: usize, tag: u64, data: &[f64]) {
+        self.bytes_sent.fetch_add((data.len() * 8) as u64, Ordering::Relaxed);
+        self.messages_sent.fetch_add(1, Ordering::Relaxed);
+        self.senders[dst]
+            .send(Message { src: self.rank, tag, data: data.to_vec() })
+            .expect("peer hung up");
+    }
+
+    /// Blocking receive of the next message from `src` with `tag`
+    /// (out-of-order arrivals are parked, preserving per-(src,tag) order).
+    pub fn recv(&mut self, src: usize, tag: u64) -> Vec<f64> {
+        if let Some(q) = self.parked.get_mut(&(src, tag)) {
+            if !q.is_empty() {
+                return q.remove(0);
+            }
+        }
+        loop {
+            let msg = self.inbox.recv().expect("cluster torn down mid-recv");
+            if msg.src == src && msg.tag == tag {
+                return msg.data;
+            }
+            self.parked.entry((msg.src, msg.tag)).or_default().push(msg.data);
+        }
+    }
+
+    /// Broadcast from `root`: returns the root's `data` on every rank.
+    pub fn bcast(&mut self, root: usize, data: Vec<f64>) -> Vec<f64> {
+        const TAG: u64 = u64::MAX - 1;
+        if self.rank == root {
+            for dst in 0..self.size {
+                if dst != root {
+                    self.send(dst, TAG, &data);
+                }
+            }
+            data
+        } else {
+            self.recv(root, TAG)
+        }
+    }
+
+    /// Element-wise sum-reduction to `root`; `Some(total)` on root,
+    /// `None` elsewhere.
+    pub fn reduce_sum(&mut self, root: usize, data: &[f64]) -> Option<Vec<f64>> {
+        const TAG: u64 = u64::MAX - 2;
+        if self.rank == root {
+            let mut acc = data.to_vec();
+            for src in 0..self.size {
+                if src == root {
+                    continue;
+                }
+                let part = self.recv(src, TAG);
+                assert_eq!(part.len(), acc.len(), "reduce length mismatch");
+                for (a, b) in acc.iter_mut().zip(&part) {
+                    *a += b;
+                }
+            }
+            Some(acc)
+        } else {
+            self.send(root, TAG, data);
+            None
+        }
+    }
+
+    /// Reduce-to-root followed by broadcast (the classic two-phase
+    /// allreduce; the paper's scheme reduces to one node anyway because
+    /// the optimiser is centralised).
+    pub fn allreduce_sum(&mut self, data: &[f64]) -> Vec<f64> {
+        match self.reduce_sum(0, data) {
+            Some(total) => self.bcast(0, total),
+            None => self.bcast(0, Vec::new()),
+        }
+    }
+
+    /// Gather every rank's vector at `root` (indexed by rank).
+    pub fn gather(&mut self, root: usize, data: &[f64]) -> Option<Vec<Vec<f64>>> {
+        const TAG: u64 = u64::MAX - 3;
+        if self.rank == root {
+            let mut out = vec![Vec::new(); self.size];
+            out[root] = data.to_vec();
+            for src in 0..self.size {
+                if src != root {
+                    out[src] = self.recv(src, TAG);
+                }
+            }
+            Some(out)
+        } else {
+            self.send(root, TAG, data);
+            None
+        }
+    }
+
+    /// Barrier: empty allreduce.
+    pub fn barrier(&mut self) {
+        let _ = self.allreduce_sum(&[]);
+    }
+}
+
+/// Cluster launcher: spawns `size` SPMD ranks and joins them.
+pub struct Cluster;
+
+impl Cluster {
+    /// Run `f` on `size` ranks (each on its own OS thread; rank r gets a
+    /// connected `Comm`). Returns the per-rank results, indexed by rank.
+    /// Panics in any rank propagate.
+    pub fn run<T, F>(size: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Comm) -> T + Sync,
+    {
+        assert!(size >= 1);
+        let bytes = Arc::new(AtomicU64::new(0));
+        let msgs = Arc::new(AtomicU64::new(0));
+
+        // Full mesh: one (sender-set, receiver) pair per rank.
+        let mut senders_per_rank: Vec<Sender<Message>> = Vec::with_capacity(size);
+        let mut inboxes: Vec<Option<Receiver<Message>>> = Vec::with_capacity(size);
+        for _ in 0..size {
+            let (tx, rx) = channel();
+            senders_per_rank.push(tx);
+            inboxes.push(Some(rx));
+        }
+
+        let comms: Vec<Comm> = (0..size)
+            .map(|rank| Comm {
+                rank,
+                size,
+                senders: senders_per_rank.clone(),
+                inbox: inboxes[rank].take().unwrap(),
+                parked: HashMap::new(),
+                bytes_sent: bytes.clone(),
+                messages_sent: msgs.clone(),
+            })
+            .collect();
+        drop(senders_per_rank);
+
+        let f = &f;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|comm| scope.spawn(move || f(comm)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rank panicked"))
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Prop;
+
+    #[test]
+    fn allreduce_equals_serial_sum() {
+        for size in [1, 2, 3, 5, 8] {
+            let results = Cluster::run(size, |mut comm| {
+                let local: Vec<f64> = (0..4).map(|i| (comm.rank() * 10 + i) as f64).collect();
+                comm.allreduce_sum(&local)
+            });
+            let expect: Vec<f64> = (0..4)
+                .map(|i| (0..size).map(|r| (r * 10 + i) as f64).sum())
+                .collect();
+            for r in &results {
+                assert_eq!(*r, expect, "size {size}");
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_delivers_root_value() {
+        let results = Cluster::run(4, |mut comm| {
+            let data = if comm.is_root() { vec![3.5, -1.0] } else { vec![] };
+            comm.bcast(0, data)
+        });
+        for r in results {
+            assert_eq!(r, vec![3.5, -1.0]);
+        }
+    }
+
+    #[test]
+    fn gather_indexes_by_rank() {
+        let results = Cluster::run(3, |mut comm| {
+            comm.gather(0, &[comm.rank() as f64 * 2.0])
+        });
+        let at_root = results[0].as_ref().unwrap();
+        assert_eq!(at_root.len(), 3);
+        for (r, v) in at_root.iter().enumerate() {
+            assert_eq!(v[0], r as f64 * 2.0);
+        }
+        assert!(results[1].is_none() && results[2].is_none());
+    }
+
+    #[test]
+    fn out_of_order_tags_are_parked() {
+        // rank 1 sends tag B then tag A; rank 0 receives A then B.
+        let results = Cluster::run(2, |mut comm| {
+            if comm.rank() == 1 {
+                comm.send(0, 7, &[7.0]);
+                comm.send(0, 5, &[5.0]);
+                vec![]
+            } else {
+                let a = comm.recv(1, 5);
+                let b = comm.recv(1, 7);
+                vec![a[0], b[0]]
+            }
+        });
+        assert_eq!(results[0], vec![5.0, 7.0]);
+    }
+
+    #[test]
+    fn byte_counter_counts_payloads() {
+        let results = Cluster::run(2, |mut comm| {
+            if comm.rank() == 1 {
+                comm.send(0, 1, &[0.0; 100]);
+            } else {
+                let _ = comm.recv(1, 1);
+            }
+            comm.barrier();
+            comm.bytes_sent()
+        });
+        // 100 f64 payload = 800 bytes, plus barrier traffic (empty).
+        assert!(results[0] >= 800, "bytes {}", results[0]);
+    }
+
+    #[test]
+    fn prop_reduce_matches_serial_for_random_sizes() {
+        Prop::new("reduce_random").cases(10).run(|rng| {
+            let size = 1 + (rng.next_u64() % 6) as usize;
+            let len = (rng.next_u64() % 20) as usize;
+            let datasets: Vec<Vec<f64>> = (0..size)
+                .map(|r| {
+                    let mut rr = crate::data::rng::Rng64::new(r as u64 + 99);
+                    rr.normal_vec(len)
+                })
+                .collect();
+            let expect: Vec<f64> = (0..len)
+                .map(|i| datasets.iter().map(|d| d[i]).sum())
+                .collect();
+            let ds = &datasets;
+            let results = Cluster::run(size, |mut comm| {
+                comm.allreduce_sum(&ds[comm.rank()])
+            });
+            for r in results {
+                for (a, b) in r.iter().zip(&expect) {
+                    assert!((a - b).abs() < 1e-12);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn barrier_synchronises() {
+        // No deadlock across repeated barriers with mixed work.
+        let results = Cluster::run(4, |mut comm| {
+            for i in 0..5 {
+                if comm.rank() % 2 == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(i));
+                }
+                comm.barrier();
+            }
+            true
+        });
+        assert!(results.into_iter().all(|r| r));
+    }
+}

@@ -1,0 +1,22 @@
+//! Simulated MPI: SPMD message passing over OS threads + channels.
+//!
+//! The paper distributes datapoints across MPI ranks; this module gives
+//! the coordinator the same collective primitives (`bcast`, `reduce_sum`,
+//! `allreduce_sum`, `gather`, `barrier`) with the same semantics, with the
+//! transport swapped from a network to in-process channels. Per-rank byte
+//! counters report exactly the traffic an MPI run would ship, so the
+//! "communication overhead is negligible" claim (paper §4) is measurable.
+//!
+//! Usage is SPMD, like MPI:
+//! ```no_run
+//! use gpparallel::collectives::Cluster;
+//! let results = Cluster::run(4, |mut comm| {
+//!     let local = vec![comm.rank() as f64];
+//!     comm.allreduce_sum(&local)[0] // == 0+1+2+3 on every rank
+//! });
+//! assert!(results.iter().all(|&r| r == 6.0));
+//! ```
+
+mod comm;
+
+pub use comm::{Cluster, Comm};

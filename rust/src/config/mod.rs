@@ -1,0 +1,92 @@
+//! Configuration substrate: JSON (in-repo, offline stand-in for
+//! serde_json) and the run-configuration structs shared by the CLI,
+//! examples and benches.
+
+pub mod json;
+
+pub use json::Json;
+
+use crate::optim::lbfgs::Lbfgs;
+
+/// Which backend computes the per-worker statistics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Scalar Rust loops — the per-core "CPU node" analog.
+    RustCpu,
+    /// AOT-compiled XLA executable on PJRT — the "GPU card" analog.
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "cpu" | "rust" | "rust-cpu" => Some(BackendKind::RustCpu),
+            "xla" | "gpu" | "device" => Some(BackendKind::Xla),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::RustCpu => "rust-cpu",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// A full training-run configuration (the launcher's input).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Worker count (simulated MPI ranks).
+    pub workers: usize,
+    /// Datapoints per fixed-shape chunk (must match an AOT config for
+    /// the Xla backend).
+    pub chunk: usize,
+    pub backend: BackendKind,
+    /// Inducing point count M.
+    pub m: usize,
+    /// Latent dimensionality Q.
+    pub q: usize,
+    /// Optimiser iteration budget.
+    pub max_iters: usize,
+    /// Artifact directory (manifest + *.hlo.txt).
+    pub artifacts_dir: std::path::PathBuf,
+    /// AOT config name (e.g. "paper") for the Xla backend.
+    pub aot_config: String,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            workers: 1,
+            chunk: 1024,
+            backend: BackendKind::RustCpu,
+            m: 100,
+            q: 1,
+            max_iters: 100,
+            artifacts_dir: "artifacts".into(),
+            aot_config: "paper".into(),
+            seed: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn optimizer(&self) -> Lbfgs {
+        Lbfgs { max_iters: self.max_iters, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(BackendKind::parse("cpu"), Some(BackendKind::RustCpu));
+        assert_eq!(BackendKind::parse("gpu"), Some(BackendKind::Xla));
+        assert_eq!(BackendKind::parse("xla"), Some(BackendKind::Xla));
+        assert_eq!(BackendKind::parse("tpu"), None);
+    }
+}

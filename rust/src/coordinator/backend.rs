@@ -1,0 +1,202 @@
+//! Worker compute backends: who evaluates the per-chunk statistics.
+//!
+//! - `RustCpuBackend` — scalar Rust loops; the per-core "CPU node" of the
+//!   paper's Fig 1a.
+//! - `XlaBackend`     — the AOT Pallas/JAX artifact on a per-worker PJRT
+//!   client; the "GPU card" of Fig 1a.
+//!
+//! Both produce identical statistics/gradients (cross-checked in
+//! `rust/tests/xla_vs_rust.rs`); they differ only in speed.
+
+use crate::config::BackendKind;
+use crate::kern::RbfArd;
+use crate::linalg::Mat;
+use crate::math::stats::{self, ChunkGrads, Stats, StatsCts};
+use crate::runtime::{Arg, Executable, Runtime};
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::rc::Rc;
+
+/// A fixed-shape chunk of worker-owned data: `C` rows of Y (padded) and
+/// the padding mask. For supervised problems `x` carries the observed
+/// inputs (padded); for unsupervised ones it is empty and μ/S arrive from
+/// the leader every evaluation.
+#[derive(Clone, Debug)]
+pub struct ChunkData {
+    /// Global index of the first live row.
+    pub start: usize,
+    /// Number of live rows (≤ C).
+    pub live: usize,
+    /// C × D, padded with zero rows.
+    pub y: Mat,
+    /// C × Q observed inputs (supervised) — zero-size otherwise.
+    pub x: Mat,
+    /// C-length {0,1} mask.
+    pub w: Vec<f64>,
+}
+
+/// Per-view parameters as broadcast each evaluation.
+pub struct ViewParams<'a> {
+    pub z: &'a Mat,
+    pub log_hyp: &'a [f64],
+}
+
+/// The worker-side compute interface. `latent` is the chunk's (μ, S)
+/// slice (padded to C rows; S padded with 1.0) for unsupervised models,
+/// or `None` for supervised ones (the chunk's own `x` is used, S ≡ 0).
+pub trait Backend {
+    fn stats_fwd(&mut self, chunk: &ChunkData, latent: Option<(&Mat, &Mat)>,
+                 view: &ViewParams, include_kl: bool) -> Result<Stats>;
+
+    fn stats_vjp(&mut self, chunk: &ChunkData, latent: Option<(&Mat, &Mat)>,
+                 view: &ViewParams, cts: &StatsCts) -> Result<ChunkGrads>;
+
+    fn kind(&self) -> BackendKind;
+}
+
+// ---------------------------------------------------------------------
+// Rust CPU backend
+// ---------------------------------------------------------------------
+
+/// Scalar Rust implementation (math::stats + kern).
+pub struct RustCpuBackend;
+
+impl Backend for RustCpuBackend {
+    fn stats_fwd(&mut self, chunk: &ChunkData, latent: Option<(&Mat, &Mat)>,
+                 view: &ViewParams, include_kl: bool) -> Result<Stats> {
+        let kern = RbfArd::from_log_hyp(view.log_hyp);
+        let mut st = match latent {
+            Some((mu, s)) => stats::bgplvm_stats_fwd(&kern, mu, s, &chunk.w, &chunk.y, view.z),
+            None => stats::sgpr_stats_fwd(&kern, &chunk.x, &chunk.w, &chunk.y, view.z),
+        };
+        if !include_kl {
+            st.kl = 0.0;
+        }
+        Ok(st)
+    }
+
+    fn stats_vjp(&mut self, chunk: &ChunkData, latent: Option<(&Mat, &Mat)>,
+                 view: &ViewParams, cts: &StatsCts) -> Result<ChunkGrads> {
+        let kern = RbfArd::from_log_hyp(view.log_hyp);
+        Ok(match latent {
+            Some((mu, s)) => stats::bgplvm_stats_vjp(&kern, mu, s, &chunk.w, &chunk.y,
+                                                     view.z, cts),
+            None => stats::sgpr_stats_vjp(&kern, &chunk.x, &chunk.w, &chunk.y, view.z, cts),
+        })
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::RustCpu
+    }
+}
+
+// ---------------------------------------------------------------------
+// XLA backend
+// ---------------------------------------------------------------------
+
+/// AOT-artifact execution on a per-worker PJRT client. One backend holds
+/// the four stats executables for one AOT config (one view); multi-view
+/// engines hold one `XlaBackend` per view.
+pub struct XlaBackend {
+    bgplvm_fwd: Rc<Executable>,
+    bgplvm_vjp: Rc<Executable>,
+    sgpr_fwd: Rc<Executable>,
+    sgpr_vjp: Rc<Executable>,
+    m: usize,
+    d: usize,
+}
+
+impl XlaBackend {
+    /// Compile (or fetch from the runtime's cache) the stats modules of
+    /// `config`.
+    pub fn new(rt: &Runtime, config: &str) -> Result<XlaBackend> {
+        let bgplvm_fwd = rt.module(config, "bgplvm_fwd")?;
+        let dims = bgplvm_fwd.spec().dims;
+        Ok(XlaBackend {
+            bgplvm_fwd,
+            bgplvm_vjp: rt.module(config, "bgplvm_vjp")?,
+            sgpr_fwd: rt.module(config, "sgpr_fwd")?,
+            sgpr_vjp: rt.module(config, "sgpr_vjp")?,
+            m: dims.m,
+            d: dims.d,
+        })
+    }
+
+    /// Convenience: build a runtime + backend in one go.
+    pub fn from_dir(artifacts_dir: &Path, config: &str) -> Result<(Runtime, XlaBackend)> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let be = XlaBackend::new(&rt, config)?;
+        Ok((rt, be))
+    }
+}
+
+impl Backend for XlaBackend {
+    fn stats_fwd(&mut self, chunk: &ChunkData, latent: Option<(&Mat, &Mat)>,
+                 view: &ViewParams, include_kl: bool) -> Result<Stats> {
+        let (m, d) = (self.m, self.d);
+        let out = match latent {
+            Some((mu, s)) => self.bgplvm_fwd.call(&[
+                Arg::Buf(mu.as_slice()), Arg::Buf(s.as_slice()), Arg::Buf(&chunk.w),
+                Arg::Buf(chunk.y.as_slice()), Arg::Buf(view.z.as_slice()),
+                Arg::Buf(view.log_hyp),
+            ]).context("bgplvm_fwd")?,
+            None => self.sgpr_fwd.call(&[
+                Arg::Buf(chunk.x.as_slice()), Arg::Buf(&chunk.w),
+                Arg::Buf(chunk.y.as_slice()), Arg::Buf(view.z.as_slice()),
+                Arg::Buf(view.log_hyp),
+            ]).context("sgpr_fwd")?,
+        };
+        let kl = if latent.is_some() && include_kl { out[4][0] } else { 0.0 };
+        Ok(Stats {
+            psi0: out[0][0],
+            p: Mat::from_vec(m, d, out[1].clone()),
+            psi2: Mat::from_vec(m, m, out[2].clone()),
+            tryy: out[3][0],
+            kl,
+            n_eff: chunk.w.iter().sum(),
+        })
+    }
+
+    fn stats_vjp(&mut self, chunk: &ChunkData, latent: Option<(&Mat, &Mat)>,
+                 view: &ViewParams, cts: &StatsCts) -> Result<ChunkGrads> {
+        let q = view.z.cols();
+        match latent {
+            Some((mu, s)) => {
+                let out = self.bgplvm_vjp.call(&[
+                    Arg::Buf(mu.as_slice()), Arg::Buf(s.as_slice()), Arg::Buf(&chunk.w),
+                    Arg::Buf(chunk.y.as_slice()), Arg::Buf(view.z.as_slice()),
+                    Arg::Buf(view.log_hyp),
+                    Arg::Scalar(cts.c_psi0), Arg::Buf(cts.c_p.as_slice()),
+                    Arg::Buf(cts.c_psi2.as_slice()), Arg::Scalar(cts.c_tryy),
+                    Arg::Scalar(cts.c_kl),
+                ]).context("bgplvm_vjp")?;
+                let c = mu.rows();
+                Ok(ChunkGrads {
+                    dmu: Mat::from_vec(c, q, out[0].clone()),
+                    ds: Mat::from_vec(c, q, out[1].clone()),
+                    dz: Mat::from_vec(self.m, q, out[2].clone()),
+                    dhyp: out[3].clone(),
+                })
+            }
+            None => {
+                let out = self.sgpr_vjp.call(&[
+                    Arg::Buf(chunk.x.as_slice()), Arg::Buf(&chunk.w),
+                    Arg::Buf(chunk.y.as_slice()), Arg::Buf(view.z.as_slice()),
+                    Arg::Buf(view.log_hyp),
+                    Arg::Scalar(cts.c_psi0), Arg::Buf(cts.c_p.as_slice()),
+                    Arg::Buf(cts.c_psi2.as_slice()), Arg::Scalar(cts.c_tryy),
+                ]).context("sgpr_vjp")?;
+                Ok(ChunkGrads {
+                    dmu: Mat::zeros(0, 0),
+                    ds: Mat::zeros(0, 0),
+                    dz: Mat::from_vec(self.m, q, out[0].clone()),
+                    dhyp: out[1].clone(),
+                })
+            }
+        }
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Xla
+    }
+}

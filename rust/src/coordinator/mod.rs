@@ -1,0 +1,16 @@
+//! Layer-3 coordinator: the paper's distributed-inference scheme.
+//!
+//! - `partition` — datapoints -> fixed-shape chunks -> workers
+//! - `backend`   — who computes a chunk's statistics (Rust loops vs the
+//!   AOT XLA artifact; the paper's CPU-core vs GPU-card axis)
+//! - `engine`    — the SPMD leader/worker training loop with per-phase
+//!   timing (distributable vs indistributable, feeding Fig 1b)
+
+pub mod backend;
+pub mod engine;
+pub mod partition;
+
+pub use backend::{Backend, ChunkData, RustCpuBackend, ViewParams, XlaBackend};
+pub use engine::{Engine, EngineConfig, Fitted, LatentSpec, OptChoice, Problem,
+                 TrainResult, ViewSpec};
+pub use partition::{ChunkRange, Partition};

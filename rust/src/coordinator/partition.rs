@@ -1,0 +1,146 @@
+//! Data partitioning: N datapoints -> fixed-size chunks -> workers.
+//!
+//! Chunks are fixed-shape (the AOT artifacts are compiled for a static
+//! chunk size C); the ragged tail is padded and masked with w ∈ {0,1}.
+//! Workers receive *contiguous* runs of chunks so their local parameter
+//! slices (μ, S rows) are contiguous ranges of the global matrices.
+
+/// A contiguous run of datapoint indices `[start, end)`, `end − start ≤ C`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkRange {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl ChunkRange {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// The full assignment of chunks to workers.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub n: usize,
+    pub chunk: usize,
+    /// `per_worker[r]` = the chunks owned by rank r (contiguous run).
+    pub per_worker: Vec<Vec<ChunkRange>>,
+}
+
+impl Partition {
+    /// Split `n` datapoints into `⌈n/chunk⌉` chunks and deal them out to
+    /// `workers` ranks in contiguous, balanced runs.
+    pub fn new(n: usize, chunk: usize, workers: usize) -> Partition {
+        assert!(chunk > 0 && workers > 0 && n > 0);
+        let chunks: Vec<ChunkRange> = (0..n)
+            .step_by(chunk)
+            .map(|s| ChunkRange { start: s, end: (s + chunk).min(n) })
+            .collect();
+        let k = chunks.len();
+        let mut per_worker = vec![Vec::new(); workers];
+        // balanced contiguous split: first (k % workers) ranks get one extra
+        let base = k / workers;
+        let extra = k % workers;
+        let mut idx = 0;
+        for (r, bucket) in per_worker.iter_mut().enumerate() {
+            let take = base + usize::from(r < extra);
+            for _ in 0..take {
+                bucket.push(chunks[idx]);
+                idx += 1;
+            }
+        }
+        Partition { n, chunk, per_worker }
+    }
+
+    /// The contiguous datapoint range owned by rank r (for local-parameter
+    /// slicing); `None` if the rank holds no chunks.
+    pub fn worker_span(&self, r: usize) -> Option<ChunkRange> {
+        let c = &self.per_worker[r];
+        if c.is_empty() {
+            None
+        } else {
+            Some(ChunkRange { start: c[0].start, end: c[c.len() - 1].end })
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.per_worker.len()
+    }
+
+    /// Total number of chunks.
+    pub fn num_chunks(&self) -> usize {
+        self.per_worker.iter().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Prop;
+
+    #[test]
+    fn prop_exact_cover() {
+        // Every datapoint appears in exactly one chunk of one worker.
+        Prop::new("partition_cover").cases(60).run(|rng| {
+            let n = 1 + (rng.next_u64() % 500) as usize;
+            let chunk = 1 + (rng.next_u64() % 64) as usize;
+            let workers = 1 + (rng.next_u64() % 9) as usize;
+            let p = Partition::new(n, chunk, workers);
+            let mut seen = vec![0u32; n];
+            for bucket in &p.per_worker {
+                for c in bucket {
+                    assert!(c.len() <= chunk);
+                    assert!(c.len() > 0);
+                    for i in c.start..c.end {
+                        seen[i] += 1;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&s| s == 1), "n={n} chunk={chunk} w={workers}");
+        });
+    }
+
+    #[test]
+    fn prop_spans_are_contiguous_and_ordered() {
+        Prop::new("partition_spans").cases(40).run(|rng| {
+            let n = 1 + (rng.next_u64() % 300) as usize;
+            let chunk = 1 + (rng.next_u64() % 50) as usize;
+            let workers = 1 + (rng.next_u64() % 6) as usize;
+            let p = Partition::new(n, chunk, workers);
+            let mut cursor = 0;
+            for r in 0..workers {
+                if let Some(span) = p.worker_span(r) {
+                    assert_eq!(span.start, cursor, "gap before rank {r}");
+                    cursor = span.end;
+                    // chunks within the worker are contiguous too
+                    let mut c2 = span.start;
+                    for c in &p.per_worker[r] {
+                        assert_eq!(c.start, c2);
+                        c2 = c.end;
+                    }
+                }
+            }
+            assert_eq!(cursor, n);
+        });
+    }
+
+    #[test]
+    fn balance_within_one_chunk() {
+        let p = Partition::new(1000, 10, 7); // 100 chunks over 7 workers
+        let counts: Vec<usize> = p.per_worker.iter().map(Vec::len).collect();
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(max - min <= 1, "{counts:?}");
+    }
+
+    #[test]
+    fn more_workers_than_chunks() {
+        let p = Partition::new(10, 10, 4); // 1 chunk, 4 workers
+        assert_eq!(p.num_chunks(), 1);
+        assert!(p.worker_span(0).is_some());
+        assert!(p.worker_span(3).is_none());
+    }
+}

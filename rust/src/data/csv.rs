@@ -1,0 +1,83 @@
+//! Tiny CSV reader/writer for matrices (dataset import/export and the
+//! bench harness's result files). No quoting/escaping — numeric data only.
+
+use crate::linalg::Mat;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Write a matrix as CSV with an optional header row.
+pub fn write_matrix(path: &Path, m: &Mat, header: Option<&[&str]>) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    if let Some(h) = header {
+        assert_eq!(h.len(), m.cols());
+        writeln!(f, "{}", h.join(","))?;
+    }
+    for i in 0..m.rows() {
+        let row: Vec<String> = m.row(i).iter().map(|v| format!("{v:.17e}")).collect();
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read a numeric CSV into a matrix; `skip_header` drops the first line.
+pub fn read_matrix(path: &Path, skip_header: bool) -> Result<Mat> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if lineno == 0 && skip_header {
+            continue;
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let vals: Result<Vec<f64>> = line
+            .split(',')
+            .map(|tok| {
+                tok.trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("line {}: bad number {tok:?}", lineno + 1))
+            })
+            .collect();
+        rows.push(vals?);
+    }
+    if rows.is_empty() {
+        bail!("empty CSV {}", path.display());
+    }
+    let cols = rows[0].len();
+    for (i, r) in rows.iter().enumerate() {
+        if r.len() != cols {
+            bail!("ragged CSV {} at data row {i}", path.display());
+        }
+    }
+    let data: Vec<f64> = rows.into_iter().flatten().collect();
+    Ok(Mat::from_vec(data.len() / cols, cols, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let m = Mat::from_fn(5, 3, |i, j| (i as f64) * 1.5 - (j as f64) / 3.0);
+        let dir = std::env::temp_dir().join("gpparallel_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.csv");
+        write_matrix(&p, &m, Some(&["a", "b", "c"])).unwrap();
+        let back = read_matrix(&p, true).unwrap();
+        assert!(m.max_abs_diff(&back) < 1e-15);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        let dir = std::env::temp_dir().join("gpparallel_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.csv");
+        std::fs::write(&p, "1,2\n3\n").unwrap();
+        assert!(read_matrix(&p, false).is_err());
+    }
+}

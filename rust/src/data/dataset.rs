@@ -1,0 +1,104 @@
+//! In-memory dataset: `N × D` outputs (plus optional `N × Q` inputs for
+//! supervised models), row-major like everything else in the crate.
+
+use crate::linalg::Mat;
+
+/// A dataset. For supervised (SGPR) problems `x` is `Some`; for
+/// unsupervised (BGP-LVM / MRD) problems only `y` is observed.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Observed inputs, `N × Q` (supervised only).
+    pub x: Option<Mat>,
+    /// Observed outputs, `N × D`.
+    pub y: Mat,
+    /// Ground-truth latents, if the data is synthetic (for evaluation
+    /// only — never visible to inference).
+    pub latent_truth: Option<Mat>,
+}
+
+impl Dataset {
+    pub fn unsupervised(y: Mat) -> Self {
+        Dataset { x: None, y, latent_truth: None }
+    }
+
+    pub fn supervised(x: Mat, y: Mat) -> Self {
+        assert_eq!(x.rows(), y.rows(), "X and Y row count mismatch");
+        Dataset { x: Some(x), y, latent_truth: None }
+    }
+
+    pub fn n(&self) -> usize { self.y.rows() }
+    pub fn d(&self) -> usize { self.y.cols() }
+
+    /// Column means of Y.
+    pub fn y_mean(&self) -> Vec<f64> {
+        let (n, d) = (self.n(), self.d());
+        let mut m = vec![0.0; d];
+        for i in 0..n {
+            for j in 0..d {
+                m[j] += self.y[(i, j)];
+            }
+        }
+        for v in &mut m { *v /= n as f64; }
+        m
+    }
+
+    /// Return a copy with Y centred (zero column means) — the usual
+    /// preprocessing before GP-LVM fitting; the means are returned so
+    /// predictions can be un-centred.
+    pub fn centered(&self) -> (Dataset, Vec<f64>) {
+        let m = self.y_mean();
+        let mut y = self.y.clone();
+        for i in 0..y.rows() {
+            for j in 0..y.cols() {
+                y[(i, j)] -= m[j];
+            }
+        }
+        (Dataset { x: self.x.clone(), y, latent_truth: self.latent_truth.clone() }, m)
+    }
+
+    /// First `k` rows as a new dataset (for building size sweeps out of
+    /// one master dataset, exactly like the paper's 1k..64k slices).
+    pub fn take(&self, k: usize) -> Dataset {
+        assert!(k <= self.n());
+        let slice = |m: &Mat| {
+            Mat::from_vec(k, m.cols(), m.as_slice()[..k * m.cols()].to_vec())
+        };
+        Dataset {
+            x: self.x.as_ref().map(&slice),
+            y: slice(&self.y),
+            latent_truth: self.latent_truth.as_ref().map(&slice),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn centering_zeroes_means() {
+        let y = Mat::from_fn(10, 3, |i, j| (i * 3 + j) as f64);
+        let ds = Dataset::unsupervised(y);
+        let (c, means) = ds.centered();
+        for j in 0..3 {
+            let col_mean: f64 = (0..10).map(|i| c.y[(i, j)]).sum::<f64>() / 10.0;
+            assert!(col_mean.abs() < 1e-12);
+            assert!(means[j] > 0.0);
+        }
+    }
+
+    #[test]
+    fn take_slices_rows() {
+        let y = Mat::from_fn(10, 2, |i, j| (i * 2 + j) as f64);
+        let ds = Dataset::unsupervised(y.clone());
+        let t = ds.take(4);
+        assert_eq!(t.n(), 4);
+        assert_eq!(t.y[(3, 1)], y[(3, 1)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn supervised_mismatch_panics() {
+        let _ = Dataset::supervised(Mat::zeros(3, 1), Mat::zeros(4, 1));
+    }
+}

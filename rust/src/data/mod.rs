@@ -1,0 +1,10 @@
+//! Data substrate: deterministic RNG, dataset container, the paper's
+//! synthetic GP-sampled dataset, and CSV import/export.
+
+pub mod csv;
+pub mod dataset;
+pub mod rng;
+pub mod synthetic;
+
+pub use dataset::Dataset;
+pub use rng::Rng64;

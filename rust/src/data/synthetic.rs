@@ -1,0 +1,197 @@
+//! The paper's synthetic benchmark dataset (§4): sample N latent points in
+//! 1-D (generally Q-D), map them into D-dimensional observations by
+//! *sampling from a GP* with an RBF kernel, and add Gaussian noise.
+//!
+//! Exact GP sampling needs an N×N Cholesky, which is the very O(N³) cost
+//! the paper is escaping — so for large N we sample from the GP using a
+//! random-Fourier-feature (RFF) approximation of the RBF kernel, which is
+//! exact in distribution as the feature count grows and costs O(N·F).
+//! Small-N exactness of the RFF sampler is property-tested against the
+//! exact Cholesky sampler's covariance.
+
+use crate::data::dataset::Dataset;
+use crate::data::rng::Rng64;
+use crate::linalg::{Chol, Mat};
+
+/// Parameters for the synthetic GP dataset.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    pub n: usize,
+    /// Latent dimensionality (paper: 1).
+    pub q: usize,
+    /// Observed dimensionality (paper: 3).
+    pub d: usize,
+    /// RBF lengthscale of the generating GP.
+    pub lengthscale: f64,
+    /// RBF signal variance of the generating GP.
+    pub variance: f64,
+    /// Observation noise variance.
+    pub noise: f64,
+    /// Number of random Fourier features for the large-N sampler.
+    pub rff_features: usize,
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> Self {
+        SyntheticSpec {
+            n: 1024,
+            q: 1,
+            d: 3,
+            lengthscale: 1.0,
+            variance: 1.0,
+            noise: 1e-2,
+            rff_features: 512,
+        }
+    }
+}
+
+/// Sample the latent inputs: uniform in [-2, 2]^Q (matches the paper's
+/// "randomly sampling 1D datapoints").
+pub fn sample_latents(spec: &SyntheticSpec, rng: &mut Rng64) -> Mat {
+    Mat::from_fn(spec.n, spec.q, |_, _| rng.uniform_range(-2.0, 2.0))
+}
+
+/// Exact GP draw: f ~ N(0, K(X,X)) per output dimension, via Cholesky.
+/// O(N³) — only sensible for N ≲ 4k; used as the oracle for the RFF path.
+pub fn gp_sample_exact(x: &Mat, spec: &SyntheticSpec, rng: &mut Rng64) -> Mat {
+    let n = x.rows();
+    let mut k = Mat::from_fn(n, n, |i, j| {
+        let mut r2 = 0.0;
+        for q in 0..x.cols() {
+            let d = x[(i, q)] - x[(j, q)];
+            r2 += d * d;
+        }
+        spec.variance * (-0.5 * r2 / (spec.lengthscale * spec.lengthscale)).exp()
+    });
+    k.add_diag(1e-8 * spec.variance + 1e-12);
+    let (chol, _) = Chol::new_with_jitter(&k, 10).expect("kernel matrix PSD");
+    let mut f = Mat::zeros(n, spec.d);
+    for d in 0..spec.d {
+        let z = Mat::col_vec(&rng.normal_vec(n));
+        let fd = chol.l().matmul(&z);
+        for i in 0..n {
+            f[(i, d)] = fd[(i, 0)];
+        }
+    }
+    f
+}
+
+/// Random-Fourier-feature GP draw: f(x) = sqrt(2 σ²/F) Σ_f cos(ω_fᵀx + b_f) γ_f
+/// with ω ~ N(0, ℓ⁻² I), b ~ U[0, 2π), γ ~ N(0, 1). Covariance converges to
+/// the RBF kernel as F → ∞ (Rahimi & Recht 2007). O(N·F·Q).
+pub fn gp_sample_rff(x: &Mat, spec: &SyntheticSpec, rng: &mut Rng64) -> Mat {
+    let n = x.rows();
+    let q = x.cols();
+    let f_count = spec.rff_features;
+    let scale = (2.0 * spec.variance / f_count as f64).sqrt();
+    let mut out = Mat::zeros(n, spec.d);
+    for d in 0..spec.d {
+        // Fresh features per output dim -> independent draws.
+        let omega: Vec<f64> = (0..f_count * q)
+            .map(|_| rng.normal() / spec.lengthscale)
+            .collect();
+        let bias: Vec<f64> = (0..f_count)
+            .map(|_| rng.uniform_range(0.0, 2.0 * std::f64::consts::PI))
+            .collect();
+        let gamma: Vec<f64> = rng.normal_vec(f_count);
+        for i in 0..n {
+            let xi = x.row(i);
+            let mut acc = 0.0;
+            for f in 0..f_count {
+                let mut dot = bias[f];
+                let w = &omega[f * q..(f + 1) * q];
+                for qq in 0..q {
+                    dot += w[qq] * xi[qq];
+                }
+                acc += dot.cos() * gamma[f];
+            }
+            out[(i, d)] = scale * acc;
+        }
+    }
+    out
+}
+
+/// Generate the full synthetic dataset: latents -> GP map -> noise.
+/// Uses the exact sampler for N ≤ 2048, RFF above.
+pub fn generate(spec: &SyntheticSpec, seed: u64) -> Dataset {
+    let mut rng = Rng64::new(seed);
+    let x = sample_latents(spec, &mut rng);
+    let f = if spec.n <= 2048 {
+        gp_sample_exact(&x, spec, &mut rng)
+    } else {
+        gp_sample_rff(&x, spec, &mut rng)
+    };
+    let noise_sd = spec.noise.sqrt();
+    let y = Mat::from_fn(spec.n, spec.d, |i, j| f[(i, j)] + noise_sd * rng.normal());
+    Dataset { x: None, y, latent_truth: Some(x) }
+}
+
+/// A supervised variant: observe the inputs too (for SGPR examples and
+/// hyperparameter-recovery tests).
+pub fn generate_supervised(spec: &SyntheticSpec, seed: u64) -> Dataset {
+    let ds = generate(spec, seed);
+    Dataset {
+        x: ds.latent_truth.clone(),
+        y: ds.y,
+        latent_truth: ds.latent_truth,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mean;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let spec = SyntheticSpec { n: 64, ..Default::default() };
+        let a = generate(&spec, 9);
+        let b = generate(&spec, 9);
+        assert_eq!(a.n(), 64);
+        assert_eq!(a.d(), 3);
+        assert_eq!(a.latent_truth.as_ref().unwrap().cols(), 1);
+        assert!(a.y.max_abs_diff(&b.y) == 0.0, "same seed, same data");
+        let c = generate(&spec, 10);
+        assert!(a.y.max_abs_diff(&c.y) > 1e-3, "different seed, different data");
+    }
+
+    #[test]
+    fn rff_covariance_approximates_rbf() {
+        // Empirical covariance of many RFF draws at a pair of points must
+        // approach the RBF kernel value.
+        let spec = SyntheticSpec {
+            n: 2, d: 1, rff_features: 4096, noise: 0.0, ..Default::default()
+        };
+        let x = Mat::from_vec(2, 1, vec![0.0, 0.7]);
+        let mut rng = Rng64::new(11);
+        let reps = 3000;
+        let (mut c00, mut c01) = (vec![], vec![]);
+        for _ in 0..reps {
+            let f = gp_sample_rff(&x, &spec, &mut rng);
+            c00.push(f[(0, 0)] * f[(0, 0)]);
+            c01.push(f[(0, 0)] * f[(1, 0)]);
+        }
+        let k01 = (-0.5_f64 * 0.49).exp();
+        assert!((mean(&c00) - 1.0).abs() < 0.08, "var {}", mean(&c00));
+        assert!((mean(&c01) - k01).abs() < 0.08, "cov {} vs {}", mean(&c01), k01);
+    }
+
+    #[test]
+    fn exact_sampler_has_unit_marginal_variance() {
+        let spec = SyntheticSpec { n: 400, d: 1, noise: 0.0, ..Default::default() };
+        let mut rng = Rng64::new(13);
+        let x = sample_latents(&spec, &mut rng);
+        let f = gp_sample_exact(&x, &spec, &mut rng);
+        let var = (0..400).map(|i| f[(i, 0)] * f[(i, 0)]).sum::<f64>() / 400.0;
+        // Single GP draw: marginal variance is noisy but should be O(1).
+        assert!(var > 0.1 && var < 4.0, "var {var}");
+    }
+
+    #[test]
+    fn supervised_exposes_inputs() {
+        let spec = SyntheticSpec { n: 32, ..Default::default() };
+        let ds = generate_supervised(&spec, 3);
+        assert!(ds.x.is_some());
+        assert_eq!(ds.x.as_ref().unwrap().rows(), 32);
+    }
+}

@@ -1,0 +1,18 @@
+//! Covariance-function substrate: the RBF-ARD kernel with its closed-form
+//! psi statistics (expectations under a diagonal-Gaussian q(X)) and their
+//! analytic gradients.
+//!
+//! This module is the pure-Rust mirror of `python/compile/kernels/` — it
+//! is the scalar "CPU core" backend of the paper's comparison (the role
+//! GPy's NumPy code plays in the paper), and doubles as the independent
+//! oracle the XLA path is integration-tested against.
+
+pub mod rbf;
+
+pub use rbf::RbfArd;
+
+/// Hyperparameters travel as `log_hyp = [log σ², log ℓ_1, …, log ℓ_Q]` —
+/// identical packing to the Python side (compile/kernels/ref.py).
+pub fn log_hyp_dim(q: usize) -> usize {
+    q + 1
+}

@@ -1,0 +1,36 @@
+//! # gpparallel
+//!
+//! Distributed + accelerated sparse Gaussian process models: a
+//! reproduction of *"Gaussian Process Models with Parallelization and GPU
+//! acceleration"* (Dai, Damianou, Hensman & Lawrence, 2014) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! - **Layer 1** (`python/compile/kernels/`): Pallas kernels for the psi
+//!   statistics — the paper's GPU bottleneck.
+//! - **Layer 2** (`python/compile/model.py`): the variational objective in
+//!   JAX, AOT-lowered to HLO-text artifacts.
+//! - **Layer 3** (this crate): the distributed coordinator — data
+//!   partitioning, simulated-MPI collectives, the leader's M×M core, the
+//!   central optimiser — plus every substrate (linear algebra, kernels
+//!   with analytic gradients, optimisers, data generation, JSON, CLI).
+//!
+//! Entry points: [`models::SparseGpRegression`], [`models::BayesianGplvm`],
+//! [`models::Mrd`], and the lower-level [`coordinator::Engine`].
+//!
+//! See DESIGN.md for the paper↔module map and EXPERIMENTS.md for the
+//! reproduced figures.
+
+pub mod baselines;
+pub mod cli;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod kern;
+pub mod linalg;
+pub mod math;
+pub mod metrics;
+pub mod models;
+pub mod optim;
+pub mod runtime;
+pub mod testutil;

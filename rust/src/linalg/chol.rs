@@ -1,0 +1,207 @@
+//! Cholesky factorisation and solves — the numerical heart of the
+//! leader-side M×M core: `A = K_uu + β Φ` is factored once per iteration
+//! and reused for `A⁻¹P`, `logdet A` and the bound-gradient terms.
+
+use super::matrix::Mat;
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite
+/// matrix. Returns `Err` with the failing pivot index if the matrix is
+/// not (numerically) positive definite.
+#[derive(Clone, Debug)]
+pub struct Chol {
+    l: Mat,
+}
+
+/// Error type for a failed factorisation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NotPositiveDefinite {
+    pub pivot: usize,
+    pub value: f64,
+}
+
+impl std::fmt::Display for NotPositiveDefinite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix not positive definite at pivot {} (value {:.3e})",
+               self.pivot, self.value)
+    }
+}
+
+impl std::error::Error for NotPositiveDefinite {}
+
+impl Chol {
+    /// Factor `a` (reads only the lower triangle).
+    pub fn new(a: &Mat) -> Result<Chol, NotPositiveDefinite> {
+        assert!(a.is_square(), "cholesky of non-square matrix");
+        let n = a.rows();
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 || !sum.is_finite() {
+                        return Err(NotPositiveDefinite { pivot: i, value: sum });
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(Chol { l })
+    }
+
+    /// Factor with escalating diagonal jitter (the GPy `jitchol` pattern):
+    /// tries `a`, then `a + 10^k * eps * mean(diag) * I` for growing k.
+    pub fn new_with_jitter(a: &Mat, max_tries: usize) -> Result<(Chol, f64), NotPositiveDefinite> {
+        match Chol::new(a) {
+            Ok(c) => return Ok((c, 0.0)),
+            Err(e) => {
+                let n = a.rows();
+                let mean_diag = (0..n).map(|i| a[(i, i)]).sum::<f64>() / n as f64;
+                let mut jitter = mean_diag.abs().max(1e-300) * 1e-10;
+                for _ in 0..max_tries {
+                    let mut aj = a.clone();
+                    aj.add_diag(jitter);
+                    if let Ok(c) = Chol::new(&aj) {
+                        return Ok((c, jitter));
+                    }
+                    jitter *= 10.0;
+                }
+                Err(e)
+            }
+        }
+    }
+
+    pub fn l(&self) -> &Mat { &self.l }
+    pub fn dim(&self) -> usize { self.l.rows() }
+
+    /// `log det A = 2 Σ log L_ii`.
+    pub fn logdet(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Solve `L x = b` in place (forward substitution), column-wise over a
+    /// matrix right-hand side.
+    pub fn solve_l(&self, b: &Mat) -> Mat {
+        let n = self.dim();
+        assert_eq!(b.rows(), n);
+        let mut x = b.clone();
+        for col in 0..b.cols() {
+            for i in 0..n {
+                let mut sum = x[(i, col)];
+                for k in 0..i {
+                    sum -= self.l[(i, k)] * x[(k, col)];
+                }
+                x[(i, col)] = sum / self.l[(i, i)];
+            }
+        }
+        x
+    }
+
+    /// Solve `Lᵀ x = b` (backward substitution).
+    pub fn solve_lt(&self, b: &Mat) -> Mat {
+        let n = self.dim();
+        assert_eq!(b.rows(), n);
+        let mut x = b.clone();
+        for col in 0..b.cols() {
+            for i in (0..n).rev() {
+                let mut sum = x[(i, col)];
+                for k in (i + 1)..n {
+                    sum -= self.l[(k, i)] * x[(k, col)];
+                }
+                x[(i, col)] = sum / self.l[(i, i)];
+            }
+        }
+        x
+    }
+
+    /// Solve `A x = b` via the factorisation (`cho_solve`).
+    pub fn solve(&self, b: &Mat) -> Mat {
+        self.solve_lt(&self.solve_l(b))
+    }
+
+    /// Explicit `A⁻¹` (used for gradient assembly where the full inverse
+    /// genuinely appears, e.g. ∂F/∂Φ = … − βD/2 A⁻¹ …).
+    pub fn inverse(&self) -> Mat {
+        let mut inv = self.solve(&Mat::eye(self.dim()));
+        inv.symmetrize();
+        inv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::{Prop, Rng64};
+
+    fn random_spd(rng: &mut Rng64, n: usize) -> Mat {
+        // B Bᵀ + n·I is SPD for any B.
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = b.matmul_t(&b);
+        a.add_diag(n as f64 * 0.1 + 0.1);
+        a
+    }
+
+    #[test]
+    fn prop_reconstruct() {
+        // L Lᵀ == A over random SPD matrices (property test).
+        Prop::new("chol_reconstruct").cases(40).run(|rng| {
+            let n = 1 + (rng.next_u64() % 12) as usize;
+            let a = random_spd(rng, n);
+            let c = Chol::new(&a).expect("spd");
+            let rec = c.l().matmul_t(c.l());
+            assert!(rec.max_abs_diff(&a) < 1e-9 * (n as f64),
+                    "reconstruction error too large (n={n})");
+        });
+    }
+
+    #[test]
+    fn prop_solve_identity() {
+        // A * solve(A, B) == B.
+        Prop::new("chol_solve").cases(40).run(|rng| {
+            let n = 1 + (rng.next_u64() % 10) as usize;
+            let k = 1 + (rng.next_u64() % 4) as usize;
+            let a = random_spd(rng, n);
+            let b = Mat::from_fn(n, k, |_, _| rng.normal());
+            let c = Chol::new(&a).unwrap();
+            let x = c.solve(&b);
+            assert!(a.matmul(&x).max_abs_diff(&b) < 1e-8);
+        });
+    }
+
+    #[test]
+    fn logdet_matches_diagonal_matrix() {
+        let d = Mat::from_fn(4, 4, |i, j| if i == j { (i + 1) as f64 } else { 0.0 });
+        let c = Chol::new(&d).unwrap();
+        let expect: f64 = (1..=4).map(|v| (v as f64).ln()).sum();
+        assert!((c.logdet() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let mut rng = Rng64::new(7);
+        let a = random_spd(&mut rng, 6);
+        let inv = Chol::new(&a).unwrap().inverse();
+        assert!(a.matmul(&inv).max_abs_diff(&Mat::eye(6)) < 1e-9);
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(Chol::new(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_recovers_semidefinite() {
+        // Rank-deficient PSD matrix: plain cholesky may fail, jitchol must not.
+        let b = Mat::from_fn(4, 2, |i, j| (i + j) as f64);
+        let a = b.matmul_t(&b); // rank <= 2
+        let (c, jit) = Chol::new_with_jitter(&a, 10).expect("jitter should fix");
+        assert!(jit >= 0.0);
+        assert!(c.logdet().is_finite());
+    }
+}

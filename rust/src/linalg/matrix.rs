@@ -1,0 +1,296 @@
+//! Dense row-major `f64` matrix — the workhorse of the M×M "indistributable
+//! core" (bound assembly, predictions, the dense-GP baseline).
+//!
+//! Deliberately minimal: owned storage, explicit dimensions, no
+//! broadcasting magic. Everything here is O(M²)/O(M³) leader-side work;
+//! the O(N) data-parallel work lives in `math::stats` / the XLA artifacts.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero-filled `rows × cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix from a row-major data vector; panics on length mismatch.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length {} != {}x{}",
+                   data.len(), rows, cols);
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Column vector (n × 1) from a slice.
+    pub fn col_vec(v: &[f64]) -> Self {
+        Mat::from_vec(v.len(), 1, v.to_vec())
+    }
+
+    pub fn rows(&self) -> usize { self.rows }
+    pub fn cols(&self) -> usize { self.cols }
+    pub fn is_square(&self) -> bool { self.rows == self.cols }
+
+    /// Underlying row-major storage.
+    pub fn as_slice(&self) -> &[f64] { &self.data }
+    pub fn as_mut_slice(&mut self) -> &mut [f64] { &mut self.data }
+    pub fn into_vec(self) -> Vec<f64> { self.data }
+
+    /// Borrow row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// `self * other` (naive triple loop with row-major-friendly order).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul {}x{} * {}x{}",
+                   self.rows, self.cols, other.rows, other.cols);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 { continue; }
+                let orow = other.row(k);
+                let out_row = out.row_mut(i);
+                for j in 0..other.cols {
+                    out_row[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ * other` without materialising the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.cols, other.cols);
+        for k in 0..self.rows {
+            let srow = self.row(k);
+            let orow = other.row(k);
+            for i in 0..self.cols {
+                let a = srow[i];
+                if a == 0.0 { continue; }
+                let out_row = out.row_mut(i);
+                for j in 0..other.cols {
+                    out_row[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self * otherᵀ`.
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let mut out = Mat::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let srow = self.row(i);
+            for j in 0..other.rows {
+                let orow = other.row(j);
+                let mut acc = 0.0;
+                for k in 0..self.cols {
+                    acc += srow[k] * orow[k];
+                }
+                out[(i, j)] = acc;
+            }
+        }
+        out
+    }
+
+    /// Element-wise in-place `self += c * other`.
+    pub fn axpy(&mut self, c: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += c * b;
+        }
+    }
+
+    /// `self * c` (copy).
+    pub fn scale(&self, c: f64) -> Mat {
+        Mat::from_vec(self.rows, self.cols,
+                      self.data.iter().map(|v| v * c).collect())
+    }
+
+    /// In-place scale.
+    pub fn scale_mut(&mut self, c: f64) {
+        for v in &mut self.data { *v *= c; }
+    }
+
+    /// Add `c` to the diagonal in place.
+    pub fn add_diag(&mut self, c: f64) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += c;
+        }
+    }
+
+    /// Sum of diagonal entries.
+    pub fn trace(&self) -> f64 {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Frobenius inner product `sum_ij self_ij * other_ij`.
+    pub fn dot(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    /// `tr(self * other)` for square same-size matrices, without the product.
+    pub fn trace_product(&self, other: &Mat) -> f64 {
+        assert_eq!(self.cols, other.rows);
+        assert_eq!(self.rows, other.cols);
+        let mut acc = 0.0;
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                acc += self[(i, k)] * other[(k, i)];
+            }
+        }
+        acc
+    }
+
+    /// Force exact symmetry: `(A + Aᵀ)/2`.
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+
+    /// Max |a_ij - b_ij| — used all over the tests.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data.iter().zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Elementwise map (copy).
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
+        Mat::from_vec(self.rows, self.cols,
+                      self.data.iter().map(|&v| f(v)).collect())
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "..." } else { "" })?;
+        }
+        if self.rows > 8 { writeln!(f, "  ...")?; }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f64);
+        assert_eq!(Mat::eye(3).matmul(&a), a);
+        assert_eq!(a.matmul(&Mat::eye(4)), a);
+    }
+
+    #[test]
+    fn t_matmul_equals_explicit() {
+        let a = Mat::from_fn(5, 3, |i, j| (i as f64 - j as f64) * 0.7);
+        let b = Mat::from_fn(5, 2, |i, j| (i + 2 * j) as f64 * 0.3);
+        assert!(a.t().matmul(&b).max_abs_diff(&a.t_matmul(&b)) < 1e-14);
+    }
+
+    #[test]
+    fn matmul_t_equals_explicit() {
+        let a = Mat::from_fn(4, 3, |i, j| (i * j) as f64 + 1.0);
+        let b = Mat::from_fn(5, 3, |i, j| i as f64 - 0.5 * j as f64);
+        assert!(a.matmul(&b.t()).max_abs_diff(&a.matmul_t(&b)) < 1e-14);
+    }
+
+    #[test]
+    fn trace_and_trace_product() {
+        let a = Mat::from_fn(3, 3, |i, j| (i + j) as f64);
+        let b = Mat::from_fn(3, 3, |i, j| (i as f64) * 0.5 - j as f64);
+        let ab = a.matmul(&b);
+        assert!((a.trace_product(&b) - ab.trace()).abs() < 1e-13);
+    }
+
+    #[test]
+    fn symmetrize_is_symmetric() {
+        let mut a = Mat::from_fn(4, 4, |i, j| (3 * i + j) as f64);
+        a.symmetrize();
+        assert!(a.max_abs_diff(&a.t()) == 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

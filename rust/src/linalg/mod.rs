@@ -1,0 +1,49 @@
+//! Dense linear algebra substrate (row-major `f64`).
+//!
+//! Implemented in-repo because the paper's "indistributable core"
+//! (`(βΦ + K_uu)⁻¹`, log-determinants, the predictive equations) needs a
+//! Cholesky + triangular-solve toolkit and nothing heavier; matrices here
+//! are M×M with M ≈ 100, so clarity beats BLAS.
+
+mod chol;
+mod matrix;
+
+pub use chol::{Chol, NotPositiveDefinite};
+pub use matrix::Mat;
+
+/// Mean of a slice (helper shared by metrics/benches).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { return 0.0; }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 { return 0.0; }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Euclidean norm of a vector.
+pub fn norm2(xs: &[f64]) -> f64 {
+    xs.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Dot product of two equal-length slices.
+pub fn vdot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_helpers() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(vdot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+}

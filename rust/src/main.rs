@@ -1,0 +1,134 @@
+//! `gpparallel` — launcher for the distributed sparse-GP system.
+//!
+//! Subcommands:
+//!   train-bgplvm   fit a Bayesian GP-LVM to the paper's synthetic data
+//!   train-sgpr     fit sparse GP regression to synthetic data
+//!   time           benchmark mode: time objective evaluations
+//!                  (the paper's "average time per iteration")
+//!   info           show the artifact manifest
+//!
+//! Examples:
+//!   gpparallel train-bgplvm --n 2000 --workers 4 --backend xla --iters 100
+//!   gpparallel time --n 8000 --workers 8 --backend cpu --evals 5
+
+use anyhow::{bail, Result};
+use gpparallel::cli::Args;
+use gpparallel::config::BackendKind;
+use gpparallel::coordinator::{Engine, EngineConfig, OptChoice};
+use gpparallel::data::synthetic::{generate, generate_supervised, SyntheticSpec};
+use gpparallel::models::{BayesianGplvm, SparseGpRegression};
+use gpparallel::optim::Lbfgs;
+use gpparallel::runtime::Manifest;
+use std::path::PathBuf;
+
+const KNOWN: &[&str] = &["n", "q", "d", "m", "workers", "chunk", "backend",
+                         "iters", "evals", "seed", "artifacts", "aot-config"];
+
+fn engine_config(a: &Args) -> Result<(EngineConfig, String)> {
+    let backend = BackendKind::parse(a.get("backend").unwrap_or("cpu"))
+        .ok_or_else(|| anyhow::anyhow!("--backend must be cpu|xla"))?;
+    let aot = a.get("aot-config").unwrap_or("paper").to_string();
+    let cfg = EngineConfig {
+        workers: a.get_parse("workers", 1usize)?,
+        chunk: a.get_parse("chunk", 1024usize)?,
+        backend,
+        artifacts_dir: PathBuf::from(a.get("artifacts").unwrap_or("artifacts")),
+        opt: OptChoice::Lbfgs(Lbfgs {
+            max_iters: a.get_parse("iters", 100usize)?,
+            ..Default::default()
+        }),
+        verbose: a.flag("verbose"),
+    };
+    Ok((cfg, aot))
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(argv, &["verbose", "help"])?;
+    args.check_known(KNOWN)?;
+
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "train-bgplvm" => {
+            let spec = SyntheticSpec {
+                n: args.get_parse("n", 2000usize)?,
+                q: args.get_parse("q", 1usize)?,
+                d: args.get_parse("d", 3usize)?,
+                ..Default::default()
+            };
+            let seed = args.get_parse("seed", 0u64)?;
+            let m = args.get_parse("m", 100usize)?;
+            let (cfg, aot) = engine_config(&args)?;
+            let ds = generate(&spec, seed);
+            eprintln!("dataset: N={} D={} Q={}  backend={} workers={}",
+                      spec.n, spec.d, spec.q, cfg.backend.name(), cfg.workers);
+            let model = BayesianGplvm::fit(&ds.y, spec.q, m, &aot, cfg, seed)?;
+            let r = &model.result;
+            println!("bound: {:.4}  iters: {} evals: {}  sec/eval: {:.4}",
+                     r.f, r.iterations, r.evaluations, r.sec_per_eval);
+            println!("timing: {}", r.timing.summary());
+            if let Some(truth) = &ds.latent_truth {
+                println!("latent alignment |corr|: {:.4}", model.latent_alignment(truth));
+            }
+        }
+        "train-sgpr" => {
+            let spec = SyntheticSpec {
+                n: args.get_parse("n", 1000usize)?,
+                q: args.get_parse("q", 1usize)?,
+                d: args.get_parse("d", 1usize)?,
+                ..Default::default()
+            };
+            let seed = args.get_parse("seed", 0u64)?;
+            let m = args.get_parse("m", 16usize)?;
+            let (cfg, aot) = engine_config(&args)?;
+            let ds = generate_supervised(&spec, seed);
+            let x = ds.x.clone().unwrap();
+            let model = SparseGpRegression::fit(&x, &ds.y, m, &aot, cfg, seed)?;
+            let r = &model.result;
+            println!("bound: {:.4}  iters: {}  train-RMSE: {:.4}",
+                     r.f, r.iterations, model.rmse(&x, &ds.y));
+            println!("timing: {}", r.timing.summary());
+        }
+        "time" => {
+            let spec = SyntheticSpec {
+                n: args.get_parse("n", 8000usize)?,
+                q: args.get_parse("q", 1usize)?,
+                d: args.get_parse("d", 3usize)?,
+                ..Default::default()
+            };
+            let seed = args.get_parse("seed", 0u64)?;
+            let m = args.get_parse("m", 100usize)?;
+            let evals = args.get_parse("evals", 5usize)?;
+            let (cfg, aot) = engine_config(&args)?;
+            let ds = generate(&spec, seed);
+            let problem = BayesianGplvm::problem(&ds.y, spec.q, m, &aot, seed);
+            let engine = Engine::new(problem, cfg)?;
+            let r = engine.time_iterations(evals)?;
+            println!("N={} workers={} backend={}  sec/iter={:.4}  indist={:.2}%  bytes={}",
+                     spec.n, engine.cfg.workers, engine.cfg.backend.name(),
+                     r.sec_per_eval, r.timing.indistributable_fraction() * 100.0,
+                     r.bytes_sent);
+        }
+        "info" => {
+            let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+            let man = Manifest::load(&dir)?;
+            println!("artifact configs in {}:", dir.display());
+            let mut seen = std::collections::BTreeSet::new();
+            for cfg in man.config_names() {
+                if seen.insert(cfg.to_string()) {
+                    let d = man.dims(cfg)?;
+                    println!("  {cfg}: chunk={} M={} Q={} D={}", d.c, d.m, d.q, d.d);
+                }
+            }
+        }
+        _ => {
+            println!("usage: gpparallel <train-bgplvm|train-sgpr|time|info> [options]");
+            println!("options: --n --q --d --m --workers --chunk --backend cpu|xla");
+            println!("         --iters --evals --seed --artifacts --aot-config --verbose");
+            if cmd != "help" {
+                bail!("unknown command {cmd:?}");
+            }
+        }
+    }
+    Ok(())
+}

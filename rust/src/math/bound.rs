@@ -1,0 +1,250 @@
+//! The leader's indistributable core: bound value + analytic gradients
+//! from the reduced statistics (the Rust mirror of jax.grad over
+//! `model.bound_from_stats`; derivation in DESIGN.md §5).
+//!
+//!   A = K_uu + β Φ,   P = ΨᵀY   (M×D)
+//!   F = D/2 (N log β − N log 2π + logdet K_uu − logdet A)
+//!       − β/2 trYY + β²/2 tr(Pᵀ A⁻¹ P) − βD/2 ψ0 + βD/2 tr(K_uu⁻¹ Φ) − KL
+
+use super::stats::{Stats, StatsCts};
+use crate::kern::RbfArd;
+use crate::linalg::{Chol, Mat};
+use anyhow::{Context, Result};
+
+pub const LOG2PI: f64 = 1.8378770664093453;
+
+/// Everything the leader sends back: bound value, stat cotangents for the
+/// workers, and the direct global-parameter gradients.
+#[derive(Clone, Debug)]
+pub struct BoundOut {
+    pub f: f64,
+    pub cts: StatsCts,
+    /// Direct ∂F/∂Z (via K_uu only; workers add the Ψ-path partials).
+    pub dz: Mat,
+    /// Direct ∂F/∂log_hyp.
+    pub dhyp: Vec<f64>,
+    /// ∂F/∂log β (complete — β does not enter the worker statistics).
+    pub dlog_beta: f64,
+}
+
+/// Compute F and all gradients at the leader. `log_beta` is the log noise
+/// precision; `kern` carries (σ², ℓ).
+pub fn bound_and_grads(stats: &Stats, z: &Mat, kern: &RbfArd, log_beta: f64)
+                       -> Result<BoundOut> {
+    let d = stats.p.cols();
+    let d_f = d as f64;
+    let n = stats.n_eff;
+    let beta = log_beta.exp();
+
+    let kuu = kern.kuu(z);
+    let mut a = stats.psi2.scale(beta);
+    a.axpy(1.0, &kuu);
+
+    let (lk, _) = Chol::new_with_jitter(&kuu, 6).context("K_uu factorisation")?;
+    let (la, _) = Chol::new_with_jitter(&a, 6).context("A = K_uu + βΦ factorisation")?;
+
+    let logdet_kuu = lk.logdet();
+    let logdet_a = la.logdet();
+
+    let ainv_p = la.solve(&stats.p); // M × D
+    let kuuinv_psi2 = lk.solve(&stats.psi2); // M × M
+    let tr_kuuinv_psi2 = kuuinv_psi2.trace();
+    let p_ainv_p = stats.p.dot(&ainv_p); // tr(Pᵀ A⁻¹ P)
+
+    let f = 0.5 * d_f * (n * log_beta - n * LOG2PI + logdet_kuu - logdet_a)
+        - 0.5 * beta * stats.tryy
+        + 0.5 * beta * beta * p_ainv_p
+        - 0.5 * beta * d_f * stats.psi0
+        + 0.5 * beta * d_f * tr_kuuinv_psi2
+        - stats.kl;
+
+    // ---- gradients ----
+    let ainv = la.inverse();
+    let kuuinv = lk.inverse();
+
+    // dF/dA = −D/2 A⁻¹ − β²/2 (A⁻¹P)(A⁻¹P)ᵀ
+    let mut df_da = ainv.scale(-0.5 * d_f);
+    let app = ainv_p.matmul_t(&ainv_p); // A⁻¹ P Pᵀ A⁻¹
+    df_da.axpy(-0.5 * beta * beta, &app);
+
+    // cotangents for the workers
+    let c_p = ainv_p.scale(beta * beta);
+    let mut c_psi2 = df_da.scale(beta);
+    c_psi2.axpy(0.5 * beta * d_f, &kuuinv);
+    let cts = StatsCts {
+        c_psi0: -0.5 * beta * d_f,
+        c_p,
+        c_psi2,
+        c_tryy: -0.5 * beta,
+        c_kl: -1.0,
+    };
+
+    // dF/dK_uu = D/2 K_uu⁻¹ + dF/dA − βD/2 K_uu⁻¹ Φ K_uu⁻¹
+    let mut df_dkuu = kuuinv.scale(0.5 * d_f);
+    df_dkuu.axpy(1.0, &df_da);
+    let kik = lk.solve(&kuuinv_psi2.t()); // K⁻¹ Φᵀ K⁻¹ = K⁻¹ Φ K⁻¹ (Φ sym)
+    df_dkuu.axpy(-0.5 * beta * d_f, &kik);
+
+    let (dz, dhyp) = kern.kuu_vjp(z, &df_dkuu);
+
+    // dF/dβ, then × β for log-space.
+    let tr_ainv_psi2 = ainv.trace_product(&stats.psi2);
+    let tr_app_psi2 = app.trace_product(&stats.psi2);
+    let df_dbeta = 0.5 * d_f * n / beta
+        - 0.5 * d_f * tr_ainv_psi2
+        - 0.5 * stats.tryy
+        + beta * p_ainv_p
+        - 0.5 * beta * beta * tr_app_psi2
+        - 0.5 * d_f * stats.psi0
+        + 0.5 * d_f * tr_kuuinv_psi2;
+    let dlog_beta = beta * df_dbeta;
+
+    Ok(BoundOut { f, cts, dz, dhyp, dlog_beta })
+}
+
+/// Bound value only (no gradients) — for line-search style probes and
+/// tests that perturb single inputs.
+pub fn bound_value(stats: &Stats, z: &Mat, kern: &RbfArd, log_beta: f64) -> Result<f64> {
+    let d_f = stats.p.cols() as f64;
+    let n = stats.n_eff;
+    let beta = log_beta.exp();
+    let kuu = kern.kuu(z);
+    let mut a = stats.psi2.scale(beta);
+    a.axpy(1.0, &kuu);
+    let (lk, _) = Chol::new_with_jitter(&kuu, 6).context("K_uu")?;
+    let (la, _) = Chol::new_with_jitter(&a, 6).context("A")?;
+    let ainv_p = la.solve(&stats.p);
+    Ok(0.5 * d_f * (n * log_beta - n * LOG2PI + lk.logdet() - la.logdet())
+        - 0.5 * beta * stats.tryy
+        + 0.5 * beta * beta * stats.p.dot(&ainv_p)
+        - 0.5 * beta * d_f * stats.psi0
+        + 0.5 * beta * d_f * lk.solve(&stats.psi2).trace()
+        - stats.kl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::stats::bgplvm_stats_fwd;
+    use crate::testutil::fd::{assert_grad_close, grad_fd};
+    use crate::testutil::prop::Rng64;
+
+    fn problem(seed: u64) -> (RbfArd, Mat, Mat, Vec<f64>, Mat, Mat, f64) {
+        let mut rng = Rng64::new(seed);
+        let (c, m, q, d) = (14, 5, 2, 3);
+        let kern = RbfArd::new(rng.uniform_range(0.5, 1.5),
+                               (0..q).map(|_| rng.uniform_range(0.6, 1.6)).collect());
+        let mu = Mat::from_fn(c, q, |_, _| rng.normal());
+        let s = Mat::from_fn(c, q, |_, _| rng.uniform_range(0.2, 1.0));
+        let w = vec![1.0; c];
+        let y = Mat::from_fn(c, d, |_, _| rng.normal());
+        let z = Mat::from_fn(m, q, |_, _| rng.normal() * 1.2);
+        let log_beta = rng.uniform_range(-0.5, 0.8);
+        (kern, mu, s, w, y, z, log_beta)
+    }
+
+    #[test]
+    fn value_matches_value_and_grads() {
+        let (kern, mu, s, w, y, z, lb) = problem(41);
+        let st = bgplvm_stats_fwd(&kern, &mu, &s, &w, &y, &z);
+        let out = bound_and_grads(&st, &z, &kern, lb).unwrap();
+        let v = bound_value(&st, &z, &kern, lb).unwrap();
+        assert!((out.f - v).abs() < 1e-10);
+        assert!(v.is_finite());
+    }
+
+    #[test]
+    fn stat_cotangents_match_fd() {
+        let (kern, mu, s, w, y, z, lb) = problem(42);
+        let st = bgplvm_stats_fwd(&kern, &mu, &s, &w, &y, &z);
+        let out = bound_and_grads(&st, &z, &kern, lb).unwrap();
+        let eps = 1e-6;
+
+        // scalar stats
+        for (ct, field) in [(out.cts.c_psi0, "psi0"), (out.cts.c_tryy, "tryy"),
+                            (out.cts.c_kl, "kl")] {
+            let mut sp = st.clone();
+            let mut sm = st.clone();
+            match field {
+                "psi0" => { sp.psi0 += eps; sm.psi0 -= eps; }
+                "tryy" => { sp.tryy += eps; sm.tryy -= eps; }
+                _ => { sp.kl += eps; sm.kl -= eps; }
+            }
+            let fd = (bound_value(&sp, &z, &kern, lb).unwrap()
+                      - bound_value(&sm, &z, &kern, lb).unwrap()) / (2.0 * eps);
+            assert!((ct - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                    "{field}: {ct} vs {fd}");
+        }
+
+        // P matrix cotangent (spot-check entries)
+        for (i, j) in [(0, 0), (2, 1), (4, 2)] {
+            let mut sp = st.clone();
+            sp.p[(i, j)] += eps;
+            let mut sm = st.clone();
+            sm.p[(i, j)] -= eps;
+            let fd = (bound_value(&sp, &z, &kern, lb).unwrap()
+                      - bound_value(&sm, &z, &kern, lb).unwrap()) / (2.0 * eps);
+            let ct = out.cts.c_p[(i, j)];
+            assert!((ct - fd).abs() < 1e-5 * (1.0 + fd.abs()), "c_p[{i},{j}]: {ct} vs {fd}");
+        }
+
+        // Ψ2 cotangent: perturb symmetrically (Ψ2 is constrained symmetric),
+        // fd = c[i,j] + c[j,i] for i≠j.
+        for (i, j) in [(0, 0), (1, 3), (2, 4)] {
+            let mut sp = st.clone();
+            sp.psi2[(i, j)] += eps;
+            if i != j { sp.psi2[(j, i)] += eps; }
+            let mut sm = st.clone();
+            sm.psi2[(i, j)] -= eps;
+            if i != j { sm.psi2[(j, i)] -= eps; }
+            let fd = (bound_value(&sp, &z, &kern, lb).unwrap()
+                      - bound_value(&sm, &z, &kern, lb).unwrap()) / (2.0 * eps);
+            let ct = out.cts.c_psi2[(i, j)] + if i != j { out.cts.c_psi2[(j, i)] } else { 0.0 };
+            assert!((ct - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                    "c_psi2[{i},{j}]: {ct} vs {fd}");
+        }
+    }
+
+    #[test]
+    fn direct_z_hyp_beta_grads_match_fd() {
+        let (kern, mu, s, w, y, z, lb) = problem(43);
+        let st = bgplvm_stats_fwd(&kern, &mu, &s, &w, &y, &z);
+        let out = bound_and_grads(&st, &z, &kern, lb).unwrap();
+
+        // Z (direct path: stats held fixed)
+        let f_z = |v: &[f64]| {
+            let zz = Mat::from_vec(5, 2, v.to_vec());
+            bound_value(&st, &zz, &kern, lb).unwrap()
+        };
+        assert_grad_close(out.dz.as_slice(), &grad_fd(f_z, z.as_slice(), 1e-6),
+                          1e-5, 1e-8, "bound/dz");
+
+        // log_hyp (direct)
+        let lh = kern.to_log_hyp();
+        let f_h = |v: &[f64]| {
+            bound_value(&st, &z, &RbfArd::from_log_hyp(v), lb).unwrap()
+        };
+        assert_grad_close(&out.dhyp, &grad_fd(f_h, &lh, 1e-6), 1e-5, 1e-8, "bound/dhyp");
+
+        // log β
+        let f_b = |v: &[f64]| bound_value(&st, &z, &kern, v[0]).unwrap();
+        assert_grad_close(&[out.dlog_beta], &grad_fd(f_b, &[lb], 1e-7),
+                          1e-6, 1e-9, "bound/dlogbeta");
+    }
+
+    #[test]
+    fn more_inducing_points_tighten_bound() {
+        // Adding inducing points (a superset Z) should not decrease the
+        // optimal bound materially; check the bound is finite + ordered
+        // for nested Z on a fixed dataset.
+        let (kern, mu, s, w, y, _, lb) = problem(44);
+        let z_small = Mat::from_fn(3, 2, |i, j| (i as f64 - 1.0) + 0.1 * j as f64);
+        let z_big = Mat::from_fn(6, 2, |i, j| (i as f64 - 2.5) * 0.8 + 0.1 * j as f64);
+        let st_s = bgplvm_stats_fwd(&kern, &mu, &s, &w, &y, &z_small);
+        let st_b = bgplvm_stats_fwd(&kern, &mu, &s, &w, &y, &z_big);
+        let f_s = bound_value(&st_s, &z_small, &kern, lb).unwrap();
+        let f_b = bound_value(&st_b, &z_big, &kern, lb).unwrap();
+        assert!(f_s.is_finite() && f_b.is_finite());
+        assert!(f_b > f_s - 5.0, "wildly looser with more inducing points: {f_s} vs {f_b}");
+    }
+}

@@ -1,0 +1,348 @@
+//! Per-chunk sufficient statistics and their VJP — the worker-side
+//! (distributable) computation, in pure Rust.
+//!
+//! Everything reduced across workers is packed into flat `Vec<f64>`
+//! wire vectors so the collectives can sum them element-wise; the pack /
+//! unpack round-trip is unit-tested.
+
+use crate::kern::RbfArd;
+use crate::linalg::Mat;
+
+/// The paper's global statistics: ψ0 (φ), P = Ψ1ᵀ(w∘Y) (the paper's Ψ),
+/// Φ = Ψ2, plus tr(YᵀY) and the q(X) KL — everything the leader needs.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub psi0: f64,
+    /// M × D.
+    pub p: Mat,
+    /// M × M.
+    pub psi2: Mat,
+    pub tryy: f64,
+    pub kl: f64,
+    /// Effective datapoint count Σw (reduced alongside the rest).
+    pub n_eff: f64,
+}
+
+impl Stats {
+    pub fn zeros(m: usize, d: usize) -> Self {
+        Stats { psi0: 0.0, p: Mat::zeros(m, d), psi2: Mat::zeros(m, m),
+                tryy: 0.0, kl: 0.0, n_eff: 0.0 }
+    }
+
+    pub fn add_assign(&mut self, other: &Stats) {
+        self.psi0 += other.psi0;
+        self.p.axpy(1.0, &other.p);
+        self.psi2.axpy(1.0, &other.psi2);
+        self.tryy += other.tryy;
+        self.kl += other.kl;
+        self.n_eff += other.n_eff;
+    }
+
+    /// Flatten for `allreduce_sum` (order: scalars, P, Ψ2).
+    pub fn pack(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(4 + self.p.as_slice().len() + self.psi2.as_slice().len());
+        v.extend_from_slice(&[self.psi0, self.tryy, self.kl, self.n_eff]);
+        v.extend_from_slice(self.p.as_slice());
+        v.extend_from_slice(self.psi2.as_slice());
+        v
+    }
+
+    pub fn unpack(m: usize, d: usize, v: &[f64]) -> Self {
+        assert_eq!(v.len(), 4 + m * d + m * m, "stats wire length");
+        let p = Mat::from_vec(m, d, v[4..4 + m * d].to_vec());
+        let psi2 = Mat::from_vec(m, m, v[4 + m * d..].to_vec());
+        Stats { psi0: v[0], tryy: v[1], kl: v[2], n_eff: v[3], p, psi2 }
+    }
+}
+
+/// Cotangents of the statistics — what the leader broadcasts back.
+#[derive(Clone, Debug)]
+pub struct StatsCts {
+    pub c_psi0: f64,
+    pub c_p: Mat,
+    pub c_psi2: Mat,
+    pub c_tryy: f64,
+    pub c_kl: f64,
+}
+
+impl StatsCts {
+    pub fn pack(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(3 + self.c_p.as_slice().len() + self.c_psi2.as_slice().len());
+        v.extend_from_slice(&[self.c_psi0, self.c_tryy, self.c_kl]);
+        v.extend_from_slice(self.c_p.as_slice());
+        v.extend_from_slice(self.c_psi2.as_slice());
+        v
+    }
+
+    pub fn unpack(m: usize, d: usize, v: &[f64]) -> Self {
+        assert_eq!(v.len(), 3 + m * d + m * m, "cts wire length");
+        StatsCts {
+            c_psi0: v[0],
+            c_tryy: v[1],
+            c_kl: v[2],
+            c_p: Mat::from_vec(m, d, v[3..3 + m * d].to_vec()),
+            c_psi2: Mat::from_vec(m, m, v[3 + m * d..].to_vec()),
+        }
+    }
+}
+
+/// Gradients a worker produces for its chunk: local (μ, S) plus its
+/// partial contribution to the global (Z, hyp) gradients.
+#[derive(Clone, Debug)]
+pub struct ChunkGrads {
+    /// C × Q (zero rows where the chunk mask is 0). Empty for SGPR.
+    pub dmu: Mat,
+    /// C × Q. Empty for SGPR.
+    pub ds: Mat,
+    /// M × Q partial.
+    pub dz: Mat,
+    /// Q+1 partial (w.r.t. log_hyp).
+    pub dhyp: Vec<f64>,
+}
+
+// ---------------------------------------------------------------------
+// forward
+// ---------------------------------------------------------------------
+
+/// BGP-LVM chunk statistics (Rust backend). Shapes: mu,s `C×Q`; w `C`;
+/// y `C×D`; z `M×Q`.
+pub fn bgplvm_stats_fwd(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &Mat,
+                        z: &Mat) -> Stats {
+    let (m, d) = (z.rows(), y.cols());
+    let c = mu.rows();
+    let psi1 = kern.psi1(mu, s, z);
+
+    // P = Ψ1ᵀ (w ∘ Y)
+    let mut p = Mat::zeros(m, d);
+    for n in 0..c {
+        if w[n] == 0.0 {
+            continue;
+        }
+        let prow = psi1.row(n);
+        let yrow = y.row(n);
+        for mm in 0..m {
+            let pv = prow[mm] * w[n];
+            for dd in 0..d {
+                p[(mm, dd)] += pv * yrow[dd];
+            }
+        }
+    }
+
+    let psi2 = kern.psi2(mu, s, w, z);
+    let psi0 = kern.psi0(w);
+
+    let mut tryy = 0.0;
+    let mut kl = 0.0;
+    let mut n_eff = 0.0;
+    for n in 0..c {
+        if w[n] == 0.0 {
+            continue;
+        }
+        n_eff += w[n];
+        let yrow = y.row(n);
+        tryy += w[n] * yrow.iter().map(|v| v * v).sum::<f64>();
+        for qq in 0..mu.cols() {
+            let (mv, sv) = (mu[(n, qq)], s[(n, qq)]);
+            kl += 0.5 * w[n] * (sv + mv * mv - 1.0 - sv.ln());
+        }
+    }
+    Stats { psi0, p, psi2, tryy, kl, n_eff }
+}
+
+/// Supervised chunk statistics: S ≡ 0, no KL.
+pub fn sgpr_stats_fwd(kern: &RbfArd, x: &Mat, w: &[f64], y: &Mat, z: &Mat) -> Stats {
+    let s0 = Mat::zeros(x.rows(), x.cols());
+    let mut st = bgplvm_stats_fwd(kern, x, &s0, w, y, z);
+    st.kl = 0.0; // log S is −∞ at S=0; supervised bound has no KL term
+    st
+}
+
+// ---------------------------------------------------------------------
+// VJP
+// ---------------------------------------------------------------------
+
+/// Pull the leader's cotangents back to the chunk's parameters (BGP-LVM).
+pub fn bgplvm_stats_vjp(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &Mat,
+                        z: &Mat, cts: &StatsCts) -> ChunkGrads {
+    let (c, q) = (mu.rows(), mu.cols());
+    let (m, d) = (z.rows(), y.cols());
+
+    // c_P -> c_Ψ1: c_Ψ1[n, m] = w_n Σ_d c_P[m, d] y[n, d]
+    let mut c_psi1 = Mat::zeros(c, m);
+    for n in 0..c {
+        if w[n] == 0.0 {
+            continue;
+        }
+        let yrow = y.row(n);
+        for mm in 0..m {
+            let mut acc = 0.0;
+            let crow = cts.c_p.row(mm);
+            for dd in 0..d {
+                acc += crow[dd] * yrow[dd];
+            }
+            c_psi1[(n, mm)] = w[n] * acc;
+        }
+    }
+
+    let (mut dmu, mut ds, mut dz, mut dhyp) = kern.psi1_vjp(mu, s, z, &c_psi1);
+    let (dmu2, ds2, dz2, dhyp2) = kern.psi2_vjp(mu, s, w, z, &cts.c_psi2);
+    dmu.axpy(1.0, &dmu2);
+    ds.axpy(1.0, &ds2);
+    dz.axpy(1.0, &dz2);
+    for (a, b) in dhyp.iter_mut().zip(&dhyp2) {
+        *a += b;
+    }
+
+    // ψ0 depends only on log σ²: ∂ψ0/∂logσ² = ψ0.
+    dhyp[0] += cts.c_psi0 * kern.psi0(w);
+
+    // KL term (c_kl is typically −1): ∂KL/∂μ = wμ, ∂KL/∂S = ½w(1 − 1/S).
+    for n in 0..c {
+        if w[n] == 0.0 {
+            continue;
+        }
+        for qq in 0..q {
+            dmu[(n, qq)] += cts.c_kl * w[n] * mu[(n, qq)];
+            ds[(n, qq)] += cts.c_kl * 0.5 * w[n] * (1.0 - 1.0 / s[(n, qq)]);
+        }
+    }
+
+    ChunkGrads { dmu, ds, dz, dhyp }
+}
+
+/// Supervised VJP: only (dZ, dhyp); the μ/S slots are returned empty.
+pub fn sgpr_stats_vjp(kern: &RbfArd, x: &Mat, w: &[f64], y: &Mat, z: &Mat,
+                      cts: &StatsCts) -> ChunkGrads {
+    let s0 = Mat::zeros(x.rows(), x.cols());
+    let mut cts0 = cts.clone();
+    cts0.c_kl = 0.0;
+    let g = bgplvm_stats_vjp(kern, x, &s0, w, y, z, &cts0);
+    ChunkGrads { dmu: Mat::zeros(0, 0), ds: Mat::zeros(0, 0), dz: g.dz, dhyp: g.dhyp }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::fd::{assert_grad_close, grad_fd};
+    use crate::testutil::prop::{Prop, Rng64};
+
+    fn setup(rng: &mut Rng64, c: usize, m: usize, q: usize, d: usize)
+             -> (RbfArd, Mat, Mat, Vec<f64>, Mat, Mat) {
+        let kern = RbfArd::new(rng.uniform_range(0.5, 1.5),
+                               (0..q).map(|_| rng.uniform_range(0.6, 1.8)).collect());
+        let mu = Mat::from_fn(c, q, |_, _| rng.normal());
+        let s = Mat::from_fn(c, q, |_, _| rng.uniform_range(0.2, 1.2));
+        let w: Vec<f64> = (0..c).map(|i| if i % 5 == 4 { 0.0 } else { 1.0 }).collect();
+        let y = Mat::from_fn(c, d, |_, _| rng.normal());
+        let z = Mat::from_fn(m, q, |_, _| rng.normal());
+        (kern, mu, s, w, y, z)
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng64::new(31);
+        let (kern, mu, s, w, y, z) = setup(&mut rng, 9, 4, 2, 3);
+        let st = bgplvm_stats_fwd(&kern, &mu, &s, &w, &y, &z);
+        let st2 = Stats::unpack(4, 3, &st.pack());
+        assert_eq!(st.psi0, st2.psi0);
+        assert_eq!(st.kl, st2.kl);
+        assert!(st.p.max_abs_diff(&st2.p) == 0.0);
+        assert!(st.psi2.max_abs_diff(&st2.psi2) == 0.0);
+    }
+
+    #[test]
+    fn prop_chunked_equals_full() {
+        // stats computed in two half-chunks sum to the full-chunk stats.
+        Prop::new("stats_chunk_additivity").cases(10).run(|rng| {
+            let (kern, mu, s, w, y, z) = setup(rng, 12, 5, 2, 3);
+            let full = bgplvm_stats_fwd(&kern, &mu, &s, &w, &y, &z);
+
+            let take = |m: &Mat, lo: usize, hi: usize| {
+                Mat::from_vec(hi - lo, m.cols(),
+                              m.as_slice()[lo * m.cols()..hi * m.cols()].to_vec())
+            };
+            let mut acc = Stats::zeros(5, 3);
+            for (lo, hi) in [(0, 7), (7, 12)] {
+                let st = bgplvm_stats_fwd(&kern, &take(&mu, lo, hi), &take(&s, lo, hi),
+                                          &w[lo..hi], &take(&y, lo, hi), &z);
+                acc.add_assign(&st);
+            }
+            assert!((acc.psi0 - full.psi0).abs() < 1e-12);
+            assert!((acc.kl - full.kl).abs() < 1e-11);
+            assert!((acc.tryy - full.tryy).abs() < 1e-11);
+            assert!(acc.p.max_abs_diff(&full.p) < 1e-12);
+            assert!(acc.psi2.max_abs_diff(&full.psi2) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn vjp_matches_finite_difference_through_projection() {
+        let mut rng = Rng64::new(33);
+        let (kern, mu, s, w, y, z) = setup(&mut rng, 6, 4, 2, 2);
+        // random projection of the stats as a scalar objective
+        let cp = Mat::from_fn(4, 2, |_, _| rng.normal());
+        let cp2 = Mat::from_fn(4, 4, |_, _| rng.normal());
+        let (a0, at, ak) = (rng.normal(), rng.normal(), rng.normal());
+        let cts = StatsCts { c_psi0: a0, c_p: cp.clone(), c_psi2: cp2.clone(),
+                             c_tryy: at, c_kl: ak };
+
+        let obj = |kern: &RbfArd, mu: &Mat, s: &Mat, z: &Mat| {
+            let st = bgplvm_stats_fwd(kern, mu, s, &w, &y, z);
+            a0 * st.psi0 + st.p.dot(&cp) + st.psi2.dot(&cp2) + at * st.tryy + ak * st.kl
+        };
+
+        let g = bgplvm_stats_vjp(&kern, &mu, &s, &w, &y, &z, &cts);
+
+        let f_mu = |x: &[f64]| obj(&kern, &Mat::from_vec(6, 2, x.to_vec()), &s, &z);
+        assert_grad_close(g.dmu.as_slice(), &grad_fd(f_mu, mu.as_slice(), 1e-6),
+                          2e-6, 1e-8, "stats/dmu");
+        let f_s = |x: &[f64]| obj(&kern, &mu, &Mat::from_vec(6, 2, x.to_vec()), &z);
+        assert_grad_close(g.ds.as_slice(), &grad_fd(f_s, s.as_slice(), 1e-6),
+                          2e-6, 1e-8, "stats/ds");
+        let f_z = |x: &[f64]| obj(&kern, &mu, &s, &Mat::from_vec(4, 2, x.to_vec()));
+        assert_grad_close(g.dz.as_slice(), &grad_fd(f_z, z.as_slice(), 1e-6),
+                          2e-6, 1e-8, "stats/dz");
+        let lh = kern.to_log_hyp();
+        let f_h = |x: &[f64]| obj(&RbfArd::from_log_hyp(x), &mu, &s, &z);
+        assert_grad_close(&g.dhyp, &grad_fd(f_h, &lh, 1e-6), 2e-6, 1e-8, "stats/dhyp");
+    }
+
+    #[test]
+    fn sgpr_fwd_has_no_kl_and_matches_exact_kernel() {
+        let mut rng = Rng64::new(34);
+        let (kern, x, _, w, y, z) = setup(&mut rng, 8, 3, 2, 2);
+        let st = sgpr_stats_fwd(&kern, &x, &w, &y, &z);
+        assert_eq!(st.kl, 0.0);
+        let kfu = kern.k(&x, &z);
+        let mut p_want = Mat::zeros(3, 2);
+        for n in 0..8 {
+            for mm in 0..3 {
+                for dd in 0..2 {
+                    p_want[(mm, dd)] += w[n] * kfu[(n, mm)] * y[(n, dd)];
+                }
+            }
+        }
+        assert!(st.p.max_abs_diff(&p_want) < 1e-12);
+    }
+
+    #[test]
+    fn sgpr_vjp_matches_fd() {
+        let mut rng = Rng64::new(35);
+        let (kern, x, _, w, y, z) = setup(&mut rng, 7, 3, 2, 2);
+        let cp = Mat::from_fn(3, 2, |_, _| rng.normal());
+        let cp2 = Mat::from_fn(3, 3, |_, _| rng.normal());
+        let cts = StatsCts { c_psi0: 0.7, c_p: cp.clone(), c_psi2: cp2.clone(),
+                             c_tryy: -0.3, c_kl: 0.0 };
+        let obj = |kern: &RbfArd, z: &Mat| {
+            let st = sgpr_stats_fwd(kern, &x, &w, &y, z);
+            0.7 * st.psi0 + st.p.dot(&cp) + st.psi2.dot(&cp2) - 0.3 * st.tryy
+        };
+        let g = sgpr_stats_vjp(&kern, &x, &w, &y, &z, &cts);
+        let f_z = |v: &[f64]| obj(&kern, &Mat::from_vec(3, 2, v.to_vec()));
+        assert_grad_close(g.dz.as_slice(), &grad_fd(f_z, z.as_slice(), 1e-6),
+                          2e-6, 1e-8, "sgpr/dz");
+        let lh = kern.to_log_hyp();
+        let f_h = |v: &[f64]| obj(&RbfArd::from_log_hyp(v), &z);
+        assert_grad_close(&g.dhyp, &grad_fd(f_h, &lh, 1e-6), 2e-6, 1e-8, "sgpr/dhyp");
+    }
+}

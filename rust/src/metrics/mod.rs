@@ -1,0 +1,184 @@
+//! Phase timing and iteration reporting.
+//!
+//! The coordinator attributes every microsecond of an optimisation
+//! iteration to a named phase; the distributable/indistributable split is
+//! exactly what the paper's Fig 1b plots.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Per-thread CPU time in seconds (CLOCK_THREAD_CPUTIME_ID).
+///
+/// On a time-shared host, wall-clock inside a worker includes the slices
+/// other ranks ran; thread CPU time is what the rank actually burned and
+/// is the quantity that divides with the worker count (the basis of
+/// `TrainResult::projected_sec_per_eval`).
+pub fn thread_cpu_time() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    debug_assert_eq!(rc, 0);
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Named phases of one coordinator iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Parameter broadcast to workers.
+    Bcast,
+    /// Worker-side statistics forward pass (distributable).
+    StatsFwd,
+    /// Reduction of partial statistics.
+    Reduce,
+    /// Leader-side bound + cotangents (indistributable M×M core).
+    BoundCore,
+    /// Worker-side VJP (distributable).
+    StatsVjp,
+    /// Gradient gather/reduce.
+    GatherGrads,
+    /// Optimiser step (leader).
+    OptStep,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 7] = [
+        Phase::Bcast, Phase::StatsFwd, Phase::Reduce, Phase::BoundCore,
+        Phase::StatsVjp, Phase::GatherGrads, Phase::OptStep,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Bcast => "bcast",
+            Phase::StatsFwd => "stats_fwd",
+            Phase::Reduce => "reduce",
+            Phase::BoundCore => "bound_core",
+            Phase::StatsVjp => "stats_vjp",
+            Phase::GatherGrads => "gather_grads",
+            Phase::OptStep => "opt_step",
+        }
+    }
+
+    /// Is this phase parallelisable over datapoints (the paper's
+    /// "distributable computation")?
+    pub fn distributable(self) -> bool {
+        matches!(self, Phase::StatsFwd | Phase::StatsVjp)
+    }
+}
+
+/// Accumulates wall-clock per phase.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimer {
+    acc: BTreeMap<Phase, Duration>,
+    evals: usize,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a phase label.
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        *self.acc.entry(phase).or_default() += t0.elapsed();
+        out
+    }
+
+    /// Record an externally measured duration.
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        *self.acc.entry(phase).or_default() += d;
+    }
+
+    pub fn note_eval(&mut self) {
+        self.evals += 1;
+    }
+
+    pub fn evals(&self) -> usize {
+        self.evals
+    }
+
+    pub fn total(&self) -> Duration {
+        self.acc.values().sum()
+    }
+
+    pub fn get(&self, phase: Phase) -> Duration {
+        self.acc.get(&phase).copied().unwrap_or_default()
+    }
+
+    /// Fraction of total time in non-distributable phases — Fig 1b's y-axis.
+    pub fn indistributable_fraction(&self) -> f64 {
+        let total = self.total().as_secs_f64();
+        if total == 0.0 {
+            return 0.0;
+        }
+        let indist: f64 = Phase::ALL
+            .iter()
+            .filter(|p| !p.distributable())
+            .map(|p| self.get(*p).as_secs_f64())
+            .sum();
+        indist / total
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for p in Phase::ALL {
+            let d = self.get(p);
+            if !d.is_zero() {
+                parts.push(format!("{}={:.1}ms", p.name(), d.as_secs_f64() * 1e3));
+            }
+        }
+        format!(
+            "{} | total={:.1}ms indist={:.1}%",
+            parts.join(" "),
+            self.total().as_secs_f64() * 1e3,
+            self.indistributable_fraction() * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_cpu_time_advances_with_work() {
+        let t0 = thread_cpu_time();
+        let mut acc = 0.0f64;
+        for i in 0..2_000_000 {
+            acc += (i as f64).sqrt();
+        }
+        std::hint::black_box(acc);
+        let t1 = thread_cpu_time();
+        assert!(t1 > t0, "cpu time did not advance");
+    }
+
+    #[test]
+    fn accumulates_and_fractions() {
+        let mut t = PhaseTimer::new();
+        t.add(Phase::StatsFwd, Duration::from_millis(90));
+        t.add(Phase::BoundCore, Duration::from_millis(10));
+        assert!((t.indistributable_fraction() - 0.1).abs() < 1e-9);
+        assert_eq!(t.total(), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn time_closure_runs_once() {
+        let mut t = PhaseTimer::new();
+        let mut calls = 0;
+        let v = t.time(Phase::OptStep, || {
+            calls += 1;
+            42
+        });
+        assert_eq!((v, calls), (42, 1));
+        assert!(t.get(Phase::OptStep) > Duration::ZERO);
+    }
+
+    #[test]
+    fn phase_classification() {
+        assert!(Phase::StatsFwd.distributable());
+        assert!(Phase::StatsVjp.distributable());
+        assert!(!Phase::BoundCore.distributable());
+        assert!(!Phase::Reduce.distributable());
+    }
+}

@@ -1,0 +1,95 @@
+//! Bayesian GP-LVM (Titsias & Lawrence 2010) on the distributed engine —
+//! the paper's demonstration model (§4: recover a 1-D latent space from
+//! 3-D observations).
+
+use crate::coordinator::{Engine, EngineConfig, LatentSpec, Problem, TrainResult, ViewSpec};
+use crate::data::rng::Rng64;
+use crate::kern::RbfArd;
+use crate::linalg::Mat;
+use crate::models::pca::pca_latent_init;
+use anyhow::Result;
+
+/// A fitted Bayesian GP-LVM.
+pub struct BayesianGplvm {
+    pub result: TrainResult,
+    pub q: usize,
+}
+
+impl BayesianGplvm {
+    /// Fit a Q-dimensional latent space to `y` with `m` inducing points.
+    /// Latent means initialise from PCA, variances at 0.5, inducing
+    /// inputs to a random subset of the initial latents (GPy defaults).
+    pub fn fit(y: &Mat, q: usize, m: usize, aot_config: &str, cfg: EngineConfig,
+               seed: u64) -> Result<BayesianGplvm> {
+        let problem = Self::problem(y, q, m, aot_config, seed);
+        let engine = Engine::new(problem, cfg)?;
+        let result = engine.train()?;
+        Ok(BayesianGplvm { result, q })
+    }
+
+    /// The Problem (exposed so benches can drive `Engine::time_iterations`
+    /// on exactly the model the examples train).
+    pub fn problem(y: &Mat, q: usize, m: usize, aot_config: &str, seed: u64) -> Problem {
+        let n = y.rows();
+        let mut rng = Rng64::new(seed);
+        let mu0 = pca_latent_init(y, q, seed);
+        let s0 = Mat::from_vec(n, q, vec![0.5; n * q]);
+
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let z0 = Mat::from_fn(m.min(n), q, |i, j| mu0[(idx[i], j)] + 0.01 * rng.normal());
+
+        let mut y_var = 0.0;
+        for j in 0..y.cols() {
+            let mean: f64 = (0..n).map(|i| y[(i, j)]).sum::<f64>() / n as f64;
+            y_var += (0..n).map(|i| (y[(i, j)] - mean).powi(2)).sum::<f64>() / n as f64;
+        }
+        y_var = (y_var / y.cols() as f64).max(1e-6);
+
+        Problem {
+            latent: LatentSpec::Variational { mu0, s0 },
+            views: vec![ViewSpec {
+                y: y.clone(),
+                z0,
+                kern0: RbfArd::iso(y_var, 1.0, q),
+                beta0: 1.0 / (0.01 * y_var),
+                aot_config: aot_config.to_string(),
+            }],
+            q,
+        }
+    }
+
+    /// Learned latent means (N × Q).
+    pub fn latents(&self) -> &Mat {
+        &self.result.fitted.mu
+    }
+
+    /// |Pearson correlation| between a learned 1-D latent and the ground
+    /// truth — the evaluation the paper's synthetic task implies. For
+    /// Q > 1, the best single learned dimension is reported.
+    pub fn latent_alignment(&self, truth: &Mat) -> f64 {
+        let mu = self.latents();
+        let n = mu.rows();
+        assert_eq!(truth.rows(), n);
+        let mut best: f64 = 0.0;
+        for qq in 0..mu.cols() {
+            for tq in 0..truth.cols() {
+                let mx: f64 = (0..n).map(|i| mu[(i, qq)]).sum::<f64>() / n as f64;
+                let mt: f64 = (0..n).map(|i| truth[(i, tq)]).sum::<f64>() / n as f64;
+                let mut num = 0.0;
+                let mut da = 0.0;
+                let mut db = 0.0;
+                for i in 0..n {
+                    let a = mu[(i, qq)] - mx;
+                    let b = truth[(i, tq)] - mt;
+                    num += a * b;
+                    da += a * a;
+                    db += b * b;
+                }
+                let corr = (num / (da.sqrt() * db.sqrt()).max(1e-300)).abs();
+                best = best.max(corr);
+            }
+        }
+        best
+    }
+}

@@ -1,0 +1,16 @@
+//! User-facing models on top of the distributed engine:
+//! [`SparseGpRegression`] (supervised), [`BayesianGplvm`] (unsupervised,
+//! the paper's §4 demonstration), [`Mrd`] (multi-view), plus the PCA
+//! initialiser and the sparse predictive equations.
+
+pub mod bgplvm;
+pub mod mrd;
+pub mod pca;
+pub mod predict;
+pub mod sgpr;
+
+pub use bgplvm::BayesianGplvm;
+pub use mrd::Mrd;
+pub use pca::pca_latent_init;
+pub use predict::Posterior;
+pub use sgpr::SparseGpRegression;

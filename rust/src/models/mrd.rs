@@ -1,0 +1,96 @@
+//! Manifold Relevance Determination (Damianou et al. 2012): several
+//! observation views sharing one variational latent space — the
+//! multi-view member of the family the paper's §1 lists (BGP-LVM, MRD,
+//! deep GPs) as transparently accelerated.
+
+use crate::coordinator::{Engine, EngineConfig, LatentSpec, Problem, TrainResult, ViewSpec};
+use crate::data::rng::Rng64;
+use crate::kern::RbfArd;
+use crate::linalg::Mat;
+use crate::models::pca::pca_latent_init;
+use anyhow::Result;
+
+/// A fitted MRD model.
+pub struct Mrd {
+    pub result: TrainResult,
+    pub q: usize,
+}
+
+impl Mrd {
+    /// Fit a shared Q-dimensional latent space to several views. Latents
+    /// initialise from PCA on the concatenated views; each view gets its
+    /// own ARD kernel, noise and inducing set (all optimised).
+    pub fn fit(views: &[Mat], q: usize, m: usize, aot_configs: &[&str],
+               cfg: EngineConfig, seed: u64) -> Result<Mrd> {
+        let problem = Self::problem(views, q, m, aot_configs, seed);
+        let engine = Engine::new(problem, cfg)?;
+        let result = engine.train()?;
+        Ok(Mrd { result, q })
+    }
+
+    pub fn problem(views: &[Mat], q: usize, m: usize, aot_configs: &[&str],
+                   seed: u64) -> Problem {
+        assert!(!views.is_empty());
+        assert_eq!(views.len(), aot_configs.len());
+        let n = views[0].rows();
+        let mut rng = Rng64::new(seed);
+
+        // PCA on concatenated views
+        let d_total: usize = views.iter().map(Mat::cols).sum();
+        let mut concat = Mat::zeros(n, d_total);
+        let mut off = 0;
+        for v in views {
+            for i in 0..n {
+                concat.row_mut(i)[off..off + v.cols()].copy_from_slice(v.row(i));
+            }
+            off += v.cols();
+        }
+        let mu0 = pca_latent_init(&concat, q, seed);
+        let s0 = Mat::from_vec(n, q, vec![0.5; n * q]);
+
+        let view_specs = views
+            .iter()
+            .zip(aot_configs)
+            .map(|(y, aot)| {
+                let mut idx: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut idx);
+                let z0 = Mat::from_fn(m, q, |i, j| mu0[(idx[i], j)] + 0.01 * rng.normal());
+                let mut y_var = 0.0;
+                for j in 0..y.cols() {
+                    let mean: f64 = (0..n).map(|i| y[(i, j)]).sum::<f64>() / n as f64;
+                    y_var += (0..n).map(|i| (y[(i, j)] - mean).powi(2)).sum::<f64>() / n as f64;
+                }
+                y_var = (y_var / y.cols() as f64).max(1e-6);
+                ViewSpec {
+                    y: y.clone(),
+                    z0,
+                    kern0: RbfArd::iso(y_var, 1.0, q),
+                    beta0: 1.0 / (0.01 * y_var),
+                    aot_config: aot.to_string(),
+                }
+            })
+            .collect();
+
+        Problem {
+            latent: LatentSpec::Variational { mu0, s0 },
+            views: view_specs,
+            q,
+        }
+    }
+
+    /// Per-view ARD relevance profiles: 1/ℓ_q² normalised per view.
+    /// A latent dimension is "private" to a view when its relevance is
+    /// high in that view and ~0 in the others.
+    pub fn relevance(&self) -> Vec<Vec<f64>> {
+        self.result
+            .fitted
+            .kerns
+            .iter()
+            .map(|k| {
+                let alpha = k.alpha();
+                let max = alpha.iter().cloned().fold(0.0f64, f64::max).max(1e-300);
+                alpha.iter().map(|a| a / max).collect()
+            })
+            .collect()
+    }
+}

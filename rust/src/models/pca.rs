@@ -1,0 +1,103 @@
+//! PCA by orthogonal power iteration — the standard initialiser for the
+//! Bayesian GP-LVM latent means (GPy's `initialize_latent('PCA', ...)`).
+
+use crate::data::rng::Rng64;
+use crate::linalg::Mat;
+
+/// Project the (centred) rows of `y` (N × D) onto their top `q` principal
+/// directions; returns the N × Q score matrix, scaled to unit column
+/// variance (the conventional GP-LVM init).
+pub fn pca_latent_init(y: &Mat, q: usize, seed: u64) -> Mat {
+    let (n, d) = (y.rows(), y.cols());
+    assert!(q <= d.min(n), "q={q} must be <= min(N, D)");
+
+    // centre
+    let mut mean = vec![0.0; d];
+    for i in 0..n {
+        for j in 0..d {
+            mean[j] += y[(i, j)];
+        }
+    }
+    for v in &mut mean {
+        *v /= n as f64;
+    }
+    let yc = Mat::from_fn(n, d, |i, j| y[(i, j)] - mean[j]);
+
+    // D × D covariance (D is small in our problems)
+    let mut cov = yc.t_matmul(&yc);
+    cov.scale_mut(1.0 / n as f64);
+
+    // orthogonal power iteration for the top-q eigenvectors
+    let mut rng = Rng64::new(seed ^ 0x9e37);
+    let mut v = Mat::from_fn(d, q, |_, _| rng.normal());
+    for _ in 0..300 {
+        let mut w = cov.matmul(&v);
+        // Gram–Schmidt
+        for j in 0..q {
+            for k in 0..j {
+                let dot: f64 = (0..d).map(|i| w[(i, j)] * w[(i, k)]).sum();
+                for i in 0..d {
+                    let t = w[(i, k)];
+                    w[(i, j)] -= dot * t;
+                }
+            }
+            let norm: f64 = (0..d).map(|i| w[(i, j)] * w[(i, j)]).sum::<f64>().sqrt();
+            for i in 0..d {
+                w[(i, j)] /= norm.max(1e-300);
+            }
+        }
+        v = w;
+    }
+
+    // scores, normalised to unit variance per column
+    let mut scores = yc.matmul(&v);
+    for j in 0..q {
+        let var: f64 = (0..n).map(|i| scores[(i, j)] * scores[(i, j)]).sum::<f64>()
+            / n as f64;
+        let sd = var.sqrt().max(1e-12);
+        for i in 0..n {
+            scores[(i, j)] /= sd;
+        }
+    }
+    scores
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_dominant_direction() {
+        // Data living on a 1-D manifold in 3-D (plus small noise): the
+        // first PC score must correlate ~1 with the latent coordinate.
+        let mut rng = Rng64::new(5);
+        let n = 200;
+        let t: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y = Mat::from_fn(n, 3, |i, j| {
+            let dir = [2.0, -1.0, 0.5][j];
+            t[i] * dir + 0.01 * rng.normal()
+        });
+        let x = pca_latent_init(&y, 1, 0);
+        let mut num = 0.0;
+        let mut den_a = 0.0;
+        let mut den_b = 0.0;
+        for i in 0..n {
+            num += x[(i, 0)] * t[i];
+            den_a += x[(i, 0)] * x[(i, 0)];
+            den_b += t[i] * t[i];
+        }
+        let corr = (num / (den_a.sqrt() * den_b.sqrt())).abs();
+        assert!(corr > 0.99, "corr {corr}");
+    }
+
+    #[test]
+    fn unit_variance_columns() {
+        let mut rng = Rng64::new(6);
+        let y = Mat::from_fn(100, 4, |_, _| rng.normal());
+        let x = pca_latent_init(&y, 2, 1);
+        for j in 0..2 {
+            let var: f64 = (0..100).map(|i| x[(i, j)] * x[(i, j)]).sum::<f64>() / 100.0;
+            assert!((var - 1.0).abs() < 1e-9, "var {var}");
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Sparse-GP predictive equations from the fitted parameters and the
+//! reduced statistics (leader-side, pure Rust).
+//!
+//! With A = K_uu + βΦ and P = ΨᵀY:
+//!   mean(x*) = β k*uᵀ A⁻¹ P
+//!   var(x*)  = k** − k*uᵀ (K_uu⁻¹ − A⁻¹) k*u + β⁻¹
+//! (the standard variational-sparse posterior, e.g. Titsias 2009 eq. 6).
+
+use crate::kern::RbfArd;
+use crate::linalg::{Chol, Mat};
+use crate::math::stats::Stats;
+use anyhow::{Context, Result};
+
+/// Precomputed posterior state for fast repeated prediction.
+pub struct Posterior {
+    kern: RbfArd,
+    z: Mat,
+    beta: f64,
+    /// A⁻¹ P (M × D).
+    ainv_p: Mat,
+    /// K_uu⁻¹ − A⁻¹ (M × M).
+    woodbury: Mat,
+}
+
+impl Posterior {
+    /// Build from fitted parameters and reduced statistics.
+    pub fn new(kern: RbfArd, z: Mat, beta: f64, stats: &Stats) -> Result<Posterior> {
+        let kuu = kern.kuu(&z);
+        let mut a = stats.psi2.scale(beta);
+        a.axpy(1.0, &kuu);
+        let (lk, _) = Chol::new_with_jitter(&kuu, 6).context("K_uu")?;
+        let (la, _) = Chol::new_with_jitter(&a, 6).context("A")?;
+        let ainv_p = la.solve(&stats.p);
+        let mut woodbury = lk.inverse();
+        woodbury.axpy(-1.0, &la.inverse());
+        Ok(Posterior { kern, z, beta, ainv_p, woodbury })
+    }
+
+    /// Predict mean (Nt × D) and per-point predictive variance (Nt),
+    /// including the noise term.
+    pub fn predict(&self, xstar: &Mat) -> (Mat, Vec<f64>) {
+        let ksu = self.kern.k(xstar, &self.z); // Nt × M
+        let mut mean = ksu.matmul(&self.ainv_p);
+        mean.scale_mut(self.beta);
+
+        let wk = ksu.matmul(&self.woodbury); // Nt × M
+        let var: Vec<f64> = (0..xstar.rows())
+            .map(|i| {
+                let mut reduction = 0.0;
+                for mcol in 0..self.z.rows() {
+                    reduction += wk[(i, mcol)] * ksu[(i, mcol)];
+                }
+                (self.kern.variance - reduction + 1.0 / self.beta).max(1e-12)
+            })
+            .collect();
+        (mean, var)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::stats::sgpr_stats_fwd;
+    use crate::testutil::prop::Rng64;
+
+    /// With Z = X, M = N and low noise the sparse posterior mean must
+    /// interpolate the training targets.
+    #[test]
+    fn interpolates_with_full_inducing_set() {
+        let mut rng = Rng64::new(61);
+        let n = 30;
+        let x = Mat::from_fn(n, 1, |i, _| i as f64 * 0.3 - 4.5 + 0.01 * rng.normal());
+        let y = Mat::from_fn(n, 1, |i, _| (x[(i, 0)]).sin());
+        let kern = RbfArd::iso(1.0, 1.0, 1);
+        let beta = 1e4;
+        let w = vec![1.0; n];
+        let st = sgpr_stats_fwd(&kern, &x, &w, &y, &x);
+        let post = Posterior::new(kern, x.clone(), beta, &st).unwrap();
+        let (mean, var) = post.predict(&x);
+        for i in 0..n {
+            assert!((mean[(i, 0)] - y[(i, 0)]).abs() < 1e-2,
+                    "pred {} vs {}", mean[(i, 0)], y[(i, 0)]);
+            assert!(var[i] > 0.0);
+        }
+    }
+
+    #[test]
+    fn variance_grows_away_from_data() {
+        let n = 20;
+        let x = Mat::from_fn(n, 1, |i, _| i as f64 * 0.1); // data in [0, 2]
+        let y = Mat::from_fn(n, 1, |i, _| (x[(i, 0)]).cos());
+        let kern = RbfArd::iso(1.0, 0.5, 1);
+        let w = vec![1.0; n];
+        let st = sgpr_stats_fwd(&kern, &x, &w, &y, &x);
+        let post = Posterior::new(kern, x, 100.0, &st).unwrap();
+        let probe = Mat::from_vec(2, 1, vec![1.0, 10.0]); // in-range vs far
+        let (_, var) = post.predict(&probe);
+        assert!(var[1] > 5.0 * var[0], "far-field variance should dominate: {var:?}");
+    }
+}

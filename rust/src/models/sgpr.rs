@@ -1,0 +1,84 @@
+//! Sparse GP regression (Titsias 2009) on the distributed engine —
+//! the supervised member of the model family.
+
+use crate::coordinator::{Engine, EngineConfig, LatentSpec, Problem, TrainResult, ViewSpec};
+use crate::data::rng::Rng64;
+use crate::kern::RbfArd;
+use crate::linalg::Mat;
+use crate::math::stats::sgpr_stats_fwd;
+use crate::models::predict::Posterior;
+use anyhow::Result;
+
+/// A fitted sparse-GP regressor.
+pub struct SparseGpRegression {
+    pub result: TrainResult,
+    posterior: Posterior,
+}
+
+impl SparseGpRegression {
+    /// Fit to `(x, y)` with `m` inducing points. Inducing inputs are
+    /// initialised to a random subset of X; σ² to the output variance;
+    /// β to 1/(0.01·var(y)); all are then optimised.
+    pub fn fit(x: &Mat, y: &Mat, m: usize, aot_config: &str, cfg: EngineConfig,
+               seed: u64) -> Result<SparseGpRegression> {
+        let (n, q) = (x.rows(), x.cols());
+        assert!(m <= n, "need M <= N");
+        let mut rng = Rng64::new(seed);
+
+        // y variance for scale-aware initialisation
+        let mut y_var = 0.0;
+        for j in 0..y.cols() {
+            let mean: f64 = (0..n).map(|i| y[(i, j)]).sum::<f64>() / n as f64;
+            y_var += (0..n).map(|i| (y[(i, j)] - mean).powi(2)).sum::<f64>() / n as f64;
+        }
+        y_var = (y_var / y.cols() as f64).max(1e-6);
+
+        // random inducing subset
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let z0 = Mat::from_fn(m, q, |i, j| x[(idx[i], j)]);
+
+        let kern0 = RbfArd::iso(y_var, 1.0, q);
+        let beta0 = 1.0 / (0.01 * y_var);
+
+        let problem = Problem {
+            latent: LatentSpec::Observed(x.clone()),
+            views: vec![ViewSpec {
+                y: y.clone(),
+                z0,
+                kern0,
+                beta0,
+                aot_config: aot_config.to_string(),
+            }],
+            q,
+        };
+        let engine = Engine::new(problem, cfg)?;
+        let result = engine.train()?;
+
+        // build the posterior at the fitted parameters
+        let fitted = &result.fitted;
+        let w = vec![1.0; n];
+        let stats = sgpr_stats_fwd(&fitted.kerns[0], x, &w, y, &fitted.zs[0]);
+        let posterior = Posterior::new(fitted.kerns[0].clone(), fitted.zs[0].clone(),
+                                       fitted.betas[0], &stats)?;
+        Ok(SparseGpRegression { result, posterior })
+    }
+
+    /// Predictive mean and variance at test inputs.
+    pub fn predict(&self, xstar: &Mat) -> (Mat, Vec<f64>) {
+        self.posterior.predict(xstar)
+    }
+
+    /// Root-mean-square error against held-out targets.
+    pub fn rmse(&self, xstar: &Mat, ystar: &Mat) -> f64 {
+        let (mean, _) = self.predict(xstar);
+        let mut acc = 0.0;
+        for i in 0..ystar.rows() {
+            for j in 0..ystar.cols() {
+                let e = mean[(i, j)] - ystar[(i, j)];
+                acc += e * e;
+            }
+        }
+        (acc / (ystar.rows() * ystar.cols()) as f64).sqrt()
+    }
+}

@@ -1,0 +1,80 @@
+//! Adam — first-order baseline used by the optimiser-ablation bench
+//! (and handy when the bound is evaluated on minibatches, where L-BFGS's
+//! line search is invalid).
+
+use super::{Objective, OptResult, Optimizer, StopReason};
+
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub max_iters: usize,
+    pub grad_tol: f64,
+}
+
+impl Default for Adam {
+    fn default() -> Self {
+        Adam { lr: 1e-2, beta1: 0.9, beta2: 0.999, eps: 1e-8, max_iters: 1000, grad_tol: 1e-6 }
+    }
+}
+
+impl Optimizer for Adam {
+    fn minimize(&self, obj: &mut Objective, x0: Vec<f64>) -> OptResult {
+        let n = x0.len();
+        let mut x = x0;
+        let mut m = vec![0.0; n];
+        let mut v = vec![0.0; n];
+        let (mut f, mut g) = obj(&x);
+        let mut evals = 1;
+        let mut trace = vec![f];
+        let mut stop = StopReason::MaxIters;
+        let mut iter = 0;
+
+        while iter < self.max_iters {
+            let ginf = g.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+            if ginf < self.grad_tol {
+                stop = StopReason::GradTol;
+                break;
+            }
+            iter += 1;
+            let b1t = 1.0 - self.beta1.powi(iter as i32);
+            let b2t = 1.0 - self.beta2.powi(iter as i32);
+            for i in 0..n {
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g[i];
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
+                let mh = m[i] / b1t;
+                let vh = v[i] / b2t;
+                x[i] -= self.lr * mh / (vh.sqrt() + self.eps);
+            }
+            let (fi, gi) = obj(&x);
+            evals += 1;
+            f = fi;
+            g = gi;
+            trace.push(f);
+        }
+        OptResult { x, f, iterations: iter, evaluations: evals, stop, trace }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_objectives::quadratic;
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let r = Adam { lr: 0.2, max_iters: 3000, ..Default::default() }
+            .minimize(&mut |x: &[f64]| quadratic(x), vec![1.0; 6]);
+        assert!(r.f < 1e-6, "f = {}", r.f);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let r = Adam { max_iters: 7, ..Default::default() }
+            .minimize(&mut |x: &[f64]| quadratic(x), vec![1.0; 3]);
+        assert_eq!(r.iterations, 7);
+        assert_eq!(r.stop, StopReason::MaxIters);
+    }
+}

@@ -1,0 +1,251 @@
+//! L-BFGS (two-loop recursion) with a strong-Wolfe line search — the
+//! in-repo stand-in for the scipy L-BFGS-B optimiser the paper calls.
+
+use super::{Objective, OptResult, Optimizer, StopReason};
+use crate::linalg::{norm2, vdot};
+
+/// L-BFGS configuration.
+#[derive(Clone, Debug)]
+pub struct Lbfgs {
+    /// History length (number of (s, y) pairs).
+    pub history: usize,
+    pub max_iters: usize,
+    /// Stop when the max-abs gradient entry falls below this.
+    pub grad_tol: f64,
+    /// Stop when the relative improvement falls below this.
+    pub f_tol: f64,
+    /// Wolfe constants (c1 sufficient decrease, c2 curvature).
+    pub c1: f64,
+    pub c2: f64,
+    pub max_line_search: usize,
+}
+
+impl Default for Lbfgs {
+    fn default() -> Self {
+        Lbfgs {
+            history: 10,
+            max_iters: 200,
+            grad_tol: 1e-5,
+            f_tol: 1e-10,
+            c1: 1e-4,
+            c2: 0.9,
+            max_line_search: 25,
+        }
+    }
+}
+
+/// Strong-Wolfe line search (Nocedal & Wright alg. 3.5/3.6, simplified
+/// bracketing + bisection-with-interpolation zoom).
+fn wolfe_line_search(
+    obj: &mut Objective,
+    x: &[f64],
+    f0: f64,
+    g0: &[f64],
+    dir: &[f64],
+    c1: f64,
+    c2: f64,
+    max_evals: usize,
+    evals: &mut usize,
+) -> Option<(f64, f64, Vec<f64>, Vec<f64>)> {
+    let dg0 = vdot(g0, dir);
+    if dg0 >= 0.0 {
+        return None; // not a descent direction
+    }
+    let eval = |t: f64, obj: &mut Objective, evals: &mut usize| {
+        let xt: Vec<f64> = x.iter().zip(dir).map(|(xi, di)| xi + t * di).collect();
+        let (f, g) = obj(&xt);
+        *evals += 1;
+        (f, g, xt)
+    };
+
+    let mut t_prev = 0.0;
+    let mut f_prev = f0;
+    let mut t = 1.0;
+    let mut bracket: Option<(f64, f64, f64, f64)> = None; // (lo, f_lo, hi, f_hi)
+    let mut best = None;
+
+    for i in 0..max_evals {
+        let (f, g, xt) = eval(t, obj, evals);
+        let dg = vdot(&g, dir);
+        if f > f0 + c1 * t * dg0 || (i > 0 && f >= f_prev) {
+            bracket = Some((t_prev, f_prev, t, f));
+            break;
+        }
+        if dg.abs() <= -c2 * dg0 {
+            return Some((t, f, g, xt)); // strong Wolfe satisfied
+        }
+        if dg >= 0.0 {
+            bracket = Some((t, f, t_prev, f_prev));
+            break;
+        }
+        best = Some((t, f, g, xt));
+        t_prev = t;
+        f_prev = f;
+        t *= 2.0;
+    }
+
+    let (mut lo, mut f_lo, mut hi, mut _f_hi) = bracket?;
+    // zoom
+    for _ in 0..max_evals {
+        let t_mid = 0.5 * (lo + hi);
+        let (f, g, xt) = eval(t_mid, obj, evals);
+        let dg = vdot(&g, dir);
+        if f > f0 + c1 * t_mid * dg0 || f >= f_lo {
+            hi = t_mid;
+            _f_hi = f;
+        } else {
+            if dg.abs() <= -c2 * dg0 {
+                return Some((t_mid, f, g, xt));
+            }
+            if dg * (hi - lo) >= 0.0 {
+                hi = lo;
+            }
+            lo = t_mid;
+            f_lo = f;
+            best = Some((t_mid, f, g, xt));
+        }
+        if (hi - lo).abs() < 1e-14 {
+            break;
+        }
+    }
+    // Fall back to the best sufficient-decrease point seen, if any.
+    best.filter(|(_, f, _, _)| *f < f0)
+}
+
+impl Optimizer for Lbfgs {
+    fn minimize(&self, obj: &mut Objective, x0: Vec<f64>) -> OptResult {
+        let n = x0.len();
+        let mut x = x0;
+        let (mut f, mut g) = obj(&x);
+        let mut evals = 1;
+        let mut trace = vec![f];
+
+        let mut s_hist: Vec<Vec<f64>> = Vec::new();
+        let mut y_hist: Vec<Vec<f64>> = Vec::new();
+        let mut rho: Vec<f64> = Vec::new();
+
+        let mut stop = StopReason::MaxIters;
+        let mut iter = 0;
+        while iter < self.max_iters {
+            let ginf = g.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+            if ginf < self.grad_tol {
+                stop = StopReason::GradTol;
+                break;
+            }
+
+            // two-loop recursion
+            let mut dir: Vec<f64> = g.iter().map(|v| -v).collect();
+            let k = s_hist.len();
+            let mut alpha = vec![0.0; k];
+            for i in (0..k).rev() {
+                alpha[i] = rho[i] * vdot(&s_hist[i], &dir);
+                for j in 0..n {
+                    dir[j] -= alpha[i] * y_hist[i][j];
+                }
+            }
+            if k > 0 {
+                let last = k - 1;
+                let gamma = vdot(&s_hist[last], &y_hist[last])
+                    / vdot(&y_hist[last], &y_hist[last]).max(1e-300);
+                for d in dir.iter_mut() {
+                    *d *= gamma;
+                }
+            } else {
+                // first step: scale to unit-ish step
+                let gn = norm2(&g).max(1.0);
+                for d in dir.iter_mut() {
+                    *d /= gn;
+                }
+            }
+            for i in 0..k {
+                let beta = rho[i] * vdot(&y_hist[i], &dir);
+                for j in 0..n {
+                    dir[j] += (alpha[i] - beta) * s_hist[i][j];
+                }
+            }
+
+            match wolfe_line_search(obj, &x, f, &g, &dir, self.c1, self.c2,
+                                    self.max_line_search, &mut evals) {
+                Some((t, f_new, g_new, x_new)) => {
+                    let s: Vec<f64> = dir.iter().map(|d| t * d).collect();
+                    let y: Vec<f64> = g_new.iter().zip(&g).map(|(a, b)| a - b).collect();
+                    let sy = vdot(&s, &y);
+                    if sy > 1e-12 * norm2(&s) * norm2(&y) {
+                        s_hist.push(s);
+                        y_hist.push(y);
+                        rho.push(1.0 / sy);
+                        if s_hist.len() > self.history {
+                            s_hist.remove(0);
+                            y_hist.remove(0);
+                            rho.remove(0);
+                        }
+                    }
+                    let rel = (f - f_new).abs() / f.abs().max(f_new.abs()).max(1.0);
+                    x = x_new;
+                    g = g_new;
+                    f = f_new;
+                    trace.push(f);
+                    iter += 1;
+                    if rel < self.f_tol {
+                        stop = StopReason::FtolReached;
+                        break;
+                    }
+                }
+                None => {
+                    // Restart once from steepest descent; give up if the
+                    // memory is already empty.
+                    if s_hist.is_empty() {
+                        stop = StopReason::LineSearchFailed;
+                        break;
+                    }
+                    s_hist.clear();
+                    y_hist.clear();
+                    rho.clear();
+                }
+            }
+        }
+
+        OptResult { x, f, iterations: iter, evaluations: evals, stop, trace }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_objectives::{quadratic, rosenbrock};
+    use super::*;
+
+    #[test]
+    fn solves_quadratic_fast() {
+        let opt = Lbfgs::default();
+        let r = opt.minimize(&mut |x: &[f64]| quadratic(x), vec![1.0; 10]);
+        assert!(r.f < 1e-10, "f = {}", r.f);
+        assert!(r.iterations < 60);
+    }
+
+    #[test]
+    fn solves_rosenbrock_10d() {
+        let opt = Lbfgs { max_iters: 600, ..Default::default() };
+        let r = opt.minimize(&mut |x: &[f64]| rosenbrock(x), vec![-1.2, 1.0, -0.5, 0.8, 0.0, 0.3, -1.0, 1.5, 2.0, -0.2]);
+        assert!(r.f < 1e-8, "f = {} after {} iters ({:?})", r.f, r.iterations, r.stop);
+        for xi in &r.x {
+            assert!((xi - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn trace_is_monotone_nonincreasing() {
+        let opt = Lbfgs::default();
+        let r = opt.minimize(&mut |x: &[f64]| rosenbrock(x), vec![-1.2, 1.0]);
+        for w in r.trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "trace increased: {w:?}");
+        }
+    }
+
+    #[test]
+    fn already_converged_exits_immediately() {
+        let opt = Lbfgs::default();
+        let r = opt.minimize(&mut |x: &[f64]| quadratic(x), vec![0.0; 4]);
+        assert_eq!(r.iterations, 0);
+        assert_eq!(r.stop, StopReason::GradTol);
+    }
+}

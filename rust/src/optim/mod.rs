@@ -1,0 +1,85 @@
+//! Optimisation substrate: the central optimiser of the paper's scheme
+//! (it collects gathered gradients at the leader, steps the packed
+//! parameter vector, and the coordinator broadcasts the result).
+//!
+//! - `lbfgs` — L-BFGS with strong-Wolfe line search (the scipy
+//!   `L-BFGS-B` stand-in the paper uses; bounds are handled upstream by
+//!   `transforms`, which is also how GPy avoids the "-B").
+//! - `scg`   — scaled conjugate gradients (GPy's historical default).
+//! - `adam`  — first-order baseline for the ablation benches.
+//! - `transforms` — positivity transforms so all parameters live in an
+//!   unconstrained vector.
+//!
+//! All optimisers *maximise nothing*: they minimise. The models hand them
+//! the negative bound.
+
+pub mod adam;
+pub mod lbfgs;
+pub mod scg;
+pub mod transforms;
+
+pub use adam::Adam;
+pub use lbfgs::Lbfgs;
+pub use scg::Scg;
+pub use transforms::Transform;
+
+/// Objective: x -> (f(x), ∇f(x)). Mutable because evaluation drives the
+/// whole distributed machine (workers, reductions, …).
+pub type Objective<'a> = dyn FnMut(&[f64]) -> (f64, Vec<f64>) + 'a;
+
+/// Why an optimisation run stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    GradTol,
+    FtolReached,
+    MaxIters,
+    LineSearchFailed,
+}
+
+/// Result of an optimisation run.
+#[derive(Clone, Debug)]
+pub struct OptResult {
+    pub x: Vec<f64>,
+    pub f: f64,
+    pub iterations: usize,
+    pub evaluations: usize,
+    pub stop: StopReason,
+    /// f after every accepted iteration (the loss curve).
+    pub trace: Vec<f64>,
+}
+
+/// Common optimiser interface.
+pub trait Optimizer {
+    fn minimize(&self, obj: &mut Objective, x0: Vec<f64>) -> OptResult;
+}
+
+#[cfg(test)]
+pub(crate) mod test_objectives {
+    /// Rosenbrock function and gradient — the classic line-search torture
+    /// test shared by the optimiser unit tests.
+    pub fn rosenbrock(x: &[f64]) -> (f64, Vec<f64>) {
+        let n = x.len();
+        let mut f = 0.0;
+        let mut g = vec![0.0; n];
+        for i in 0..n - 1 {
+            let a = x[i + 1] - x[i] * x[i];
+            let b = 1.0 - x[i];
+            f += 100.0 * a * a + b * b;
+            g[i] += -400.0 * x[i] * a - 2.0 * b;
+            g[i + 1] += 200.0 * a;
+        }
+        (f, g)
+    }
+
+    /// Convex quadratic with condition number ~100.
+    pub fn quadratic(x: &[f64]) -> (f64, Vec<f64>) {
+        let mut f = 0.0;
+        let mut g = vec![0.0; x.len()];
+        for (i, &xi) in x.iter().enumerate() {
+            let c = 1.0 + (i as f64) * 9.9;
+            f += 0.5 * c * xi * xi;
+            g[i] = c * xi;
+        }
+        (f, g)
+    }
+}

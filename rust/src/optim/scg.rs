@@ -1,0 +1,164 @@
+//! Scaled Conjugate Gradients (Møller 1993) — GPy's historical default
+//! optimiser, included so the examples can reproduce GPy-flavoured runs
+//! and the benches can ablate the optimiser choice.
+
+use super::{Objective, OptResult, Optimizer, StopReason};
+use crate::linalg::{norm2, vdot};
+
+/// SCG configuration (names follow Møller's paper / GPy's scg.py).
+#[derive(Clone, Debug)]
+pub struct Scg {
+    pub max_iters: usize,
+    pub grad_tol: f64,
+    pub f_tol: f64,
+}
+
+impl Default for Scg {
+    fn default() -> Self {
+        Scg { max_iters: 500, grad_tol: 1e-5, f_tol: 1e-10 }
+    }
+}
+
+impl Optimizer for Scg {
+    fn minimize(&self, obj: &mut Objective, x0: Vec<f64>) -> OptResult {
+        let n = x0.len();
+        let mut x = x0;
+        let (mut f_now, mut grad) = obj(&x);
+        let mut evals = 1;
+        let mut trace = vec![f_now];
+
+        let mut d: Vec<f64> = grad.iter().map(|g| -g).collect(); // search dir
+        let mut lambda = 1e-6; // scale parameter
+        let mut lambda_bar = 0.0;
+        let mut success = true;
+        let mut delta = 0.0;
+        let mut mu = 0.0;
+        let mut kappa = 0.0;
+
+        let mut stop = StopReason::MaxIters;
+        let mut iter = 0;
+        let mut n_success = 0;
+
+        while iter < self.max_iters {
+            if success {
+                mu = vdot(&d, &grad);
+                if mu >= 0.0 {
+                    d = grad.iter().map(|g| -g).collect();
+                    mu = vdot(&d, &grad);
+                }
+                kappa = vdot(&d, &d);
+                if kappa < 1e-300 {
+                    stop = StopReason::GradTol;
+                    break;
+                }
+                // second-order information via finite difference along d
+                let sigma = 1e-8 / kappa.sqrt();
+                let x_plus: Vec<f64> = x.iter().zip(&d).map(|(xi, di)| xi + sigma * di).collect();
+                let (_, g_plus) = obj(&x_plus);
+                evals += 1;
+                delta = g_plus
+                    .iter()
+                    .zip(&grad)
+                    .zip(&d)
+                    .map(|((gp, g), di)| (gp - g) * di)
+                    .sum::<f64>()
+                    / sigma;
+            }
+
+            // scale the Hessian estimate
+            delta += (lambda - lambda_bar) * kappa;
+            if delta <= 0.0 {
+                lambda_bar = 2.0 * (lambda - delta / kappa);
+                delta = -delta + lambda * kappa;
+                lambda = lambda_bar;
+            }
+
+            let alpha = -mu / delta;
+            let x_new: Vec<f64> = x.iter().zip(&d).map(|(xi, di)| xi + alpha * di).collect();
+            let (f_new, _) = obj(&x_new);
+            evals += 1;
+
+            let comparison = 2.0 * delta * (f_now - f_new) / (mu * mu);
+            if comparison >= 0.0 {
+                // accept
+                let (f_acc, g_new) = obj(&x_new);
+                evals += 1;
+                x = x_new;
+                let g_old = std::mem::replace(&mut grad, g_new);
+                let rel = (f_now - f_acc).abs() / f_now.abs().max(f_acc.abs()).max(1.0);
+                f_now = f_acc;
+                trace.push(f_now);
+                lambda_bar = 0.0;
+                success = true;
+                n_success += 1;
+                iter += 1;
+
+                if grad.iter().fold(0.0f64, |a, &b| a.max(b.abs())) < self.grad_tol {
+                    stop = StopReason::GradTol;
+                    break;
+                }
+                if rel < self.f_tol {
+                    stop = StopReason::FtolReached;
+                    break;
+                }
+
+                // restart or Polak–Ribiere-style update
+                if n_success % n == 0 {
+                    d = grad.iter().map(|g| -g).collect();
+                } else {
+                    let gg = vdot(&grad, &grad);
+                    let gg_old_new = vdot(&g_old, &grad);
+                    let beta = (gg - gg_old_new) / mu.abs().max(1e-300);
+                    d = grad
+                        .iter()
+                        .zip(&d)
+                        .map(|(g, di)| -g + beta * di)
+                        .collect();
+                }
+                if comparison >= 0.75 {
+                    lambda *= 0.25;
+                }
+            } else {
+                lambda_bar = lambda;
+                success = false;
+            }
+            if comparison < 0.25 {
+                lambda += delta * (1.0 - comparison) / kappa;
+            }
+            if lambda > 1e40 {
+                stop = StopReason::LineSearchFailed;
+                break;
+            }
+        }
+
+        let _ = norm2(&grad);
+        OptResult { x, f: f_now, iterations: iter, evaluations: evals, stop, trace }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_objectives::{quadratic, rosenbrock};
+    use super::*;
+
+    #[test]
+    fn solves_quadratic() {
+        let r = Scg::default().minimize(&mut |x: &[f64]| quadratic(x), vec![1.0; 8]);
+        assert!(r.f < 1e-8, "f = {} ({:?})", r.f, r.stop);
+    }
+
+    #[test]
+    fn makes_progress_on_rosenbrock() {
+        let r = Scg { max_iters: 2000, ..Default::default() }
+            .minimize(&mut |x: &[f64]| rosenbrock(x), vec![-1.2, 1.0]);
+        assert!(r.f < 1e-4, "f = {} after {} iters", r.f, r.iterations);
+    }
+
+    #[test]
+    fn trace_nonincreasing() {
+        let r = Scg::default().minimize(&mut |x: &[f64]| quadratic(x), vec![2.0; 5]);
+        for w in r.trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Parameter transforms: all model parameters are optimised as one
+//! unconstrained vector; positives (variances, lengthscales, S, β) travel
+//! through `Exp`. This is exactly how GPy sidesteps L-BFGS-**B**: the
+//! bound constraint becomes a smooth reparameterisation.
+
+/// A scalar reparameterisation between constrained model space and the
+/// unconstrained optimiser space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transform {
+    /// Identity: parameter is already unconstrained.
+    Linear,
+    /// Positive via `value = exp(raw)`.
+    Exp,
+}
+
+impl Transform {
+    /// Constrained value from unconstrained raw.
+    #[inline]
+    pub fn forward(self, raw: f64) -> f64 {
+        match self {
+            Transform::Linear => raw,
+            Transform::Exp => raw.exp(),
+        }
+    }
+
+    /// Unconstrained raw from constrained value.
+    #[inline]
+    pub fn inverse(self, value: f64) -> f64 {
+        match self {
+            Transform::Linear => value,
+            Transform::Exp => {
+                assert!(value > 0.0, "Exp transform needs positive value, got {value}");
+                value.ln()
+            }
+        }
+    }
+
+    /// Chain rule factor: d value / d raw, given the *value*.
+    #[inline]
+    pub fn dvalue_draw(self, value: f64) -> f64 {
+        match self {
+            Transform::Linear => 1.0,
+            Transform::Exp => value,
+        }
+    }
+}
+
+/// Converts a gradient w.r.t. constrained values into a gradient w.r.t.
+/// the raw vector, in place.
+pub fn chain_gradient(transforms: &[Transform], values: &[f64], grad: &mut [f64]) {
+    assert_eq!(transforms.len(), values.len());
+    assert_eq!(transforms.len(), grad.len());
+    for i in 0..grad.len() {
+        grad[i] *= transforms[i].dvalue_draw(values[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::fd::{assert_grad_close, grad_fd};
+
+    #[test]
+    fn roundtrip() {
+        for t in [Transform::Linear, Transform::Exp] {
+            for v in [0.1, 1.0, 7.5] {
+                assert!((t.forward(t.inverse(v)) - v).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn chain_rule_matches_fd() {
+        // g(raw) = f(forward(raw)) with f = sum of squares.
+        let transforms = [Transform::Exp, Transform::Linear, Transform::Exp];
+        let raw = [0.3, -1.2, -0.5];
+        let g = |r: &[f64]| {
+            let v: Vec<f64> = r.iter().zip(&transforms).map(|(x, t)| t.forward(*x)).collect();
+            v.iter().map(|x| x * x).sum::<f64>()
+        };
+        let values: Vec<f64> = raw.iter().zip(&transforms).map(|(x, t)| t.forward(*x)).collect();
+        let mut grad: Vec<f64> = values.iter().map(|v| 2.0 * v).collect();
+        chain_gradient(&transforms, &values, &mut grad);
+        assert_grad_close(&grad, &grad_fd(g, &raw, 1e-7), 1e-6, 1e-9, "chain");
+    }
+
+    #[test]
+    #[should_panic]
+    fn exp_inverse_rejects_nonpositive() {
+        Transform::Exp.inverse(-1.0);
+    }
+}

@@ -1,0 +1,211 @@
+//! PJRT execution engine: load HLO-text artifacts, compile them on a CPU
+//! PJRT client, execute them from the coordinator's hot path.
+//!
+//! One `Runtime` per worker thread — the `xla` crate's client is
+//! `Rc`-based (deliberately not `Send`), which maps one device context to
+//! one worker exactly like the paper assigns one GPU card per MPI process.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax ≥
+//! 0.5 emits serialized protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use super::manifest::{Manifest, ModuleSpec};
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// A borrowed argument for a module call.
+pub enum Arg<'a> {
+    Scalar(f64),
+    /// Row-major data; the shape is validated against the manifest.
+    Buf(&'a [f64]),
+}
+
+/// A compiled, callable module.
+pub struct Executable {
+    spec: ModuleSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with positional args; returns one flat `Vec<f64>` per
+    /// declared output (row-major).
+    pub fn call(&self, args: &[Arg]) -> Result<Vec<Vec<f64>>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!("{}/{}: expected {} args, got {}", self.spec.config,
+                  self.spec.module, self.spec.inputs.len(), args.len());
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(&self.spec.inputs) {
+            let lit = match arg {
+                Arg::Scalar(v) => {
+                    if !spec.shape.is_empty() {
+                        bail!("{}: scalar passed for tensor {:?}", spec.name, spec.shape);
+                    }
+                    xla::Literal::scalar(*v)
+                }
+                Arg::Buf(data) => {
+                    if data.len() != spec.len() {
+                        bail!("{}: length {} != shape {:?}", spec.name, data.len(), spec.shape);
+                    }
+                    let flat = xla::Literal::vec1(data);
+                    if spec.shape.len() == 1 {
+                        flat
+                    } else {
+                        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                        flat.reshape(&dims)
+                            .with_context(|| format!("reshape {} to {:?}", spec.name, spec.shape))?
+                    }
+                }
+            };
+            literals.push(lit);
+        }
+
+        let result = self.exe.execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}/{}", self.spec.config, self.spec.module))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        // aot.py lowers with return_tuple=True: always a tuple root.
+        let parts = tuple.to_tuple().context("decompose result tuple")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!("{}/{}: {} outputs, manifest says {}", self.spec.config,
+                  self.spec.module, parts.len(), self.spec.outputs.len());
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.iter().zip(&self.spec.outputs) {
+            let v = lit.to_vec::<f64>()
+                .with_context(|| format!("output {} as f64", ospec.name))?;
+            if v.len() != ospec.len() {
+                bail!("output {}: got {} values, expected {:?}", ospec.name, v.len(), ospec.shape);
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    pub fn spec(&self) -> &ModuleSpec {
+        &self.spec
+    }
+}
+
+/// Per-thread runtime: PJRT client + compiled-module cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<(String, String), Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Fetch (compiling + caching on first use) a module.
+    pub fn module(&self, config: &str, module: &str) -> Result<Rc<Executable>> {
+        let key = (config.to_string(), module.to_string());
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.get(config, module)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("artifact path not UTF-8")?)
+            .with_context(|| format!("parse HLO text {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compile {}/{}", config, module))?;
+        let handle = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(key, handle.clone());
+        Ok(handle)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kern::RbfArd;
+    use crate::linalg::Mat;
+    use crate::math::stats::bgplvm_stats_fwd;
+    use crate::testutil::prop::Rng64;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn compile_and_run_bgplvm_fwd_matches_rust() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let rt = Runtime::new(&artifacts_dir()).unwrap();
+        let exe = rt.module("test", "bgplvm_fwd").unwrap();
+        let dims = exe.spec().dims;
+        let (c, m, q, d) = (dims.c, dims.m, dims.q, dims.d);
+
+        let mut rng = Rng64::new(51);
+        let mu = Mat::from_fn(c, q, |_, _| rng.normal());
+        let s = Mat::from_fn(c, q, |_, _| rng.uniform_range(0.3, 1.4));
+        let w: Vec<f64> = (0..c).map(|i| if i < c - 5 { 1.0 } else { 0.0 }).collect();
+        let y = Mat::from_fn(c, d, |_, _| rng.normal());
+        let z = Mat::from_fn(m, q, |_, _| rng.normal());
+        let kern = RbfArd::new(1.3, vec![0.9; q]);
+        let lh = kern.to_log_hyp();
+
+        let out = exe.call(&[
+            Arg::Buf(mu.as_slice()), Arg::Buf(s.as_slice()), Arg::Buf(&w),
+            Arg::Buf(y.as_slice()), Arg::Buf(z.as_slice()), Arg::Buf(&lh),
+        ]).unwrap();
+
+        let st = bgplvm_stats_fwd(&kern, &mu, &s, &w, &y, &z);
+        assert!((out[0][0] - st.psi0).abs() < 1e-9, "psi0");
+        let p_x = Mat::from_vec(m, d, out[1].clone());
+        assert!(p_x.max_abs_diff(&st.p) < 1e-9, "P");
+        let p2_x = Mat::from_vec(m, m, out[2].clone());
+        assert!(p2_x.max_abs_diff(&st.psi2) < 1e-9, "Psi2");
+        assert!((out[3][0] - st.tryy).abs() < 1e-9, "tryy");
+        assert!((out[4][0] - st.kl).abs() < 1e-8, "kl");
+    }
+
+    #[test]
+    fn module_cache_reuses_compilation() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::new(&artifacts_dir()).unwrap();
+        let a = rt.module("test", "bound").unwrap();
+        let b = rt.module("test", "bound").unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn arg_validation_errors() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::new(&artifacts_dir()).unwrap();
+        let exe = rt.module("test", "bgplvm_fwd").unwrap();
+        assert!(exe.call(&[]).is_err(), "arity check");
+        let wrong = vec![0.0; 3];
+        let args: Vec<Arg> = (0..6).map(|_| Arg::Buf(&wrong)).collect();
+        assert!(exe.call(&args).is_err(), "shape check");
+    }
+}

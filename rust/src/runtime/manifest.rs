@@ -1,0 +1,175 @@
+//! Artifact manifest: what `python/compile/aot.py` lowered, with the
+//! positional input/output specs the runtime validates against.
+
+use crate::config::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One tensor slot (positional) of a module.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One lowered HLO module.
+#[derive(Clone, Debug)]
+pub struct ModuleSpec {
+    pub config: String,
+    pub module: String,
+    pub file: PathBuf,
+    /// (chunk, m, q, d).
+    pub dims: Dims,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The static shape configuration of a module family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dims {
+    pub c: usize,
+    pub m: usize,
+    pub q: usize,
+    pub d: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    modules: BTreeMap<(String, String), ModuleSpec>,
+}
+
+fn tensor_list(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensors"))?
+        .iter()
+        .map(|t| {
+            let name = t.get("name").and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tensor missing name"))?.to_string();
+            let shape = t.get("shape").and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("tensor missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { name, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).context("parse manifest.json")?;
+        if j.get("dtype").and_then(Json::as_str) != Some("f64") {
+            bail!("manifest dtype must be f64");
+        }
+        let mut modules = BTreeMap::new();
+        for e in j.get("modules").and_then(Json::as_arr).unwrap_or(&[]) {
+            let config = e.get("config").and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("module missing config"))?.to_string();
+            let module = e.get("module").and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("module missing module"))?.to_string();
+            let file = dir.join(e.get("file").and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("module missing file"))?);
+            if !file.exists() {
+                bail!("artifact {} listed in manifest but missing on disk", file.display());
+            }
+            let d = e.get("dims").ok_or_else(|| anyhow!("missing dims"))?;
+            let dim = |k: &str| d.get(k).and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing dim {k}"));
+            let dims = Dims { c: dim("c")?, m: dim("m")?, q: dim("q")?, d: dim("d")? };
+            let spec = ModuleSpec {
+                config: config.clone(),
+                module: module.clone(),
+                file,
+                dims,
+                inputs: tensor_list(e.get("inputs").ok_or_else(|| anyhow!("missing inputs"))?)?,
+                outputs: tensor_list(e.get("outputs").ok_or_else(|| anyhow!("missing outputs"))?)?,
+            };
+            modules.insert((config, module), spec);
+        }
+        if modules.is_empty() {
+            bail!("manifest has no modules");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), modules })
+    }
+
+    pub fn get(&self, config: &str, module: &str) -> Result<&ModuleSpec> {
+        self.modules
+            .get(&(config.to_string(), module.to_string()))
+            .ok_or_else(|| anyhow!("no module {config}/{module} in manifest \
+                                    (available: {:?})", self.config_names()))
+    }
+
+    pub fn config_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.modules.keys().map(|(c, _)| c.as_str()).collect();
+        v.dedup();
+        v
+    }
+
+    /// Dims of a config (via its bound module, which every config has).
+    pub fn dims(&self, config: &str) -> Result<Dims> {
+        Ok(self.get(config, "bound")?.dims)
+    }
+
+    /// Pick a config matching (m, q, d) with chunk >= a minimum, preferring
+    /// the smallest adequate chunk.
+    pub fn find_config(&self, m: usize, q: usize, d: usize) -> Option<&str> {
+        self.modules
+            .values()
+            .filter(|s| s.module == "bound" && s.dims.m == m && s.dims.q == q && s.dims.d == d)
+            .map(|s| s.config.as_str())
+            .next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let spec = man.get("test", "bgplvm_fwd").unwrap();
+        assert_eq!(spec.dims, Dims { c: 64, m: 16, q: 2, d: 3 });
+        assert_eq!(spec.inputs[0].name, "mu");
+        assert_eq!(spec.inputs[0].shape, vec![64, 2]);
+        assert_eq!(spec.outputs.len(), 5);
+        // every config exposes the full module family
+        for cfg in ["test", "paper", "quickstart", "mrd"] {
+            for m in ["bgplvm_fwd", "bgplvm_vjp", "sgpr_fwd", "sgpr_vjp", "bound"] {
+                assert!(man.get(cfg, m).is_ok(), "{cfg}/{m}");
+            }
+        }
+        assert_eq!(man.dims("paper").unwrap().m, 100);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent/xyz")).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Runtime layer: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them through the PJRT C API
+//! (`xla` crate). Python never runs at inference time — the artifacts
+//! are the only hand-off between the layers.
+
+mod engine;
+mod manifest;
+
+pub use engine::{Arg, Executable, Runtime};
+pub use manifest::{Dims, Manifest, ModuleSpec, TensorSpec};

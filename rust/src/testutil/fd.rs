@@ -1,0 +1,59 @@
+//! Central finite-difference gradient checking — used by every analytic
+//! gradient in `kern/` and `math/` (the Rust mirror of the paper's
+//! Table 2 derivatives).
+
+/// Central finite difference of a scalar function at `x`, one coordinate
+/// at a time.
+pub fn grad_fd(mut f: impl FnMut(&[f64]) -> f64, x: &[f64], eps: f64) -> Vec<f64> {
+    let mut g = vec![0.0; x.len()];
+    let mut xp = x.to_vec();
+    for i in 0..x.len() {
+        let h = eps * (1.0 + x[i].abs());
+        xp[i] = x[i] + h;
+        let fp = f(&xp);
+        xp[i] = x[i] - h;
+        let fm = f(&xp);
+        xp[i] = x[i];
+        g[i] = (fp - fm) / (2.0 * h);
+    }
+    g
+}
+
+/// Assert that an analytic gradient matches finite differences within a
+/// mixed relative/absolute tolerance; panics with the worst coordinate.
+pub fn assert_grad_close(analytic: &[f64], numeric: &[f64], rtol: f64, atol: f64, what: &str) {
+    assert_eq!(analytic.len(), numeric.len(), "{what}: length mismatch");
+    let mut worst = (0usize, 0.0f64, 0.0f64, 0.0f64);
+    for (i, (&a, &n)) in analytic.iter().zip(numeric).enumerate() {
+        let err = (a - n).abs();
+        let tol = atol + rtol * n.abs().max(a.abs());
+        let ratio = err / tol;
+        if ratio > worst.1 {
+            worst = (i, ratio, a, n);
+        }
+    }
+    assert!(
+        worst.1 <= 1.0,
+        "{what}: gradient mismatch at [{}]: analytic={:.10e} numeric={:.10e} (ratio {:.2})",
+        worst.0, worst.2, worst.3, worst.1
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fd_of_quadratic() {
+        let f = |x: &[f64]| x.iter().map(|v| v * v).sum::<f64>();
+        let x = [1.0, -2.0, 0.5];
+        let g = grad_fd(f, &x, 1e-6);
+        assert_grad_close(&[2.0, -4.0, 1.0], &g, 1e-6, 1e-9, "quadratic");
+    }
+
+    #[test]
+    #[should_panic(expected = "gradient mismatch")]
+    fn detects_wrong_gradient() {
+        assert_grad_close(&[1.0], &[2.0], 1e-6, 1e-9, "bad");
+    }
+}

@@ -1,0 +1,9 @@
+//! Test-support substrate: a small property-testing framework and
+//! finite-difference gradient checking.
+//!
+//! `proptest` is unavailable in this offline environment (see DESIGN.md),
+//! so `prop` provides the subset we need: seeded random case generation
+//! with reproducible failure reporting.
+
+pub mod fd;
+pub mod prop;

