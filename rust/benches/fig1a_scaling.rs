@@ -51,6 +51,8 @@ fn main() -> anyhow::Result<()> {
         vec![
             (BackendKind::RustCpu, 1), (BackendKind::RustCpu, 4),
             (BackendKind::RustCpu, 16), (BackendKind::RustCpu, 32),
+            // one multicore node: intra-rank fan-out instead of more ranks
+            (BackendKind::parallel_auto(), 1),
             (BackendKind::Xla, 1), (BackendKind::Xla, 2), (BackendKind::Xla, 4),
         ]
     };
@@ -69,7 +71,9 @@ fn main() -> anyhow::Result<()> {
             // shape-free and shrinks the chunk instead.
             let chunk = match backend {
                 BackendKind::Xla => 1024,
-                BackendKind::RustCpu => (n / workers).min(1024).max(1),
+                BackendKind::RustCpu | BackendKind::ParallelCpu { .. } => {
+                    (n / workers).clamp(1, 1024)
+                }
             };
             if n / chunk < workers {
                 continue;

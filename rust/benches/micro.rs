@@ -5,11 +5,17 @@
 //!   2. chunk-size ablation at fixed N (padding/dispatch overhead trade).
 //!   3. sparse-distributed vs dense O(N³) GP crossover.
 //!   4. optimiser ablation: L-BFGS vs SCG vs Adam on the same model.
+//!   5. linalg kernels: naive vs cache-blocked matmul, matmul_t vs syrk.
+//!
+//! Every timed op is also written to `BENCH_micro.json` as
+//! `{op, size, ns_per_iter}` records — one snapshot per run, committed
+//! alongside perf PRs so the repo's trajectory accumulates
+//! machine-readable data over time.
 //!
 //!   cargo bench --bench micro      (MICRO_FAST=1 for the short version)
 
 use gpparallel::baselines::DenseGp;
-use gpparallel::config::BackendKind;
+use gpparallel::config::{BackendKind, Json};
 use gpparallel::coordinator::backend::{Backend, ChunkData, RustCpuBackend, ViewParams,
                                        XlaBackend};
 use gpparallel::coordinator::{Engine, EngineConfig, OptChoice};
@@ -19,6 +25,7 @@ use gpparallel::kern::RbfArd;
 use gpparallel::linalg::Mat;
 use gpparallel::models::BayesianGplvm;
 use gpparallel::optim::{Adam, Lbfgs, Scg};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 fn time_it<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
@@ -29,8 +36,33 @@ fn time_it<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
     t0.elapsed().as_secs_f64() / reps as f64
 }
 
+/// Machine-readable result sink for BENCH_micro.json.
+#[derive(Default)]
+struct Records(Vec<(String, usize, f64)>);
+
+impl Records {
+    /// Record `seconds` per iteration for (op, size).
+    fn push(&mut self, op: &str, size: usize, seconds: f64) {
+        self.0.push((op.to_string(), size, seconds * 1e9));
+    }
+
+    fn write(&self, path: &str) -> std::io::Result<()> {
+        let arr: Vec<Json> = self.0.iter()
+            .map(|(op, size, ns)| {
+                let mut o = BTreeMap::new();
+                o.insert("op".to_string(), Json::Str(op.clone()));
+                o.insert("size".to_string(), Json::Num(*size as f64));
+                o.insert("ns_per_iter".to_string(), Json::Num(*ns));
+                Json::Obj(o)
+            })
+            .collect();
+        std::fs::write(path, Json::Arr(arr).to_string_pretty())
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let fast = std::env::var("MICRO_FAST").is_ok();
+    let mut rec = Records::default();
 
     // ---------------------------------------------------------------
     // 1. per-chunk stats: Rust vs XLA (the paper's Table-1 kernel)
@@ -51,14 +83,20 @@ fn main() -> anyhow::Result<()> {
     let mut cpu = RustCpuBackend;
     let t_cpu_fwd = time_it(reps, || cpu.stats_fwd(&chunk, Some((&mu, &s)), &vp, true).unwrap());
     println!("  rust-cpu  stats_fwd : {:>9.2} ms", t_cpu_fwd * 1e3);
+    rec.push("stats_fwd_rust_cpu", c, t_cpu_fwd);
 
-    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    // The XLA rows need both the artifacts and the PJRT runtime compiled
+    // in — with the `xla` feature off the runtime is a stub whose
+    // constructor errors, so gate on the feature too instead of aborting.
+    let have_artifacts = cfg!(feature = "xla")
+        && std::path::Path::new("artifacts/manifest.json").exists();
     if have_artifacts {
         let (rt, mut xla) = XlaBackend::from_dir(std::path::Path::new("artifacts"), "paper")?;
         let _ = &rt;
         let t_xla_fwd = time_it(reps, || xla.stats_fwd(&chunk, Some((&mu, &s)), &vp, true).unwrap());
         println!("  xla       stats_fwd : {:>9.2} ms   ({:.2}x vs rust-cpu)",
                  t_xla_fwd * 1e3, t_cpu_fwd / t_xla_fwd);
+        rec.push("stats_fwd_xla", c, t_xla_fwd);
 
         use gpparallel::math::stats::StatsCts;
         let cts = StatsCts {
@@ -73,6 +111,8 @@ fn main() -> anyhow::Result<()> {
         println!("  rust-cpu  stats_vjp : {:>9.2} ms", t_cpu_vjp * 1e3);
         println!("  xla       stats_vjp : {:>9.2} ms   ({:.2}x vs rust-cpu)",
                  t_xla_vjp * 1e3, t_cpu_vjp / t_xla_vjp);
+        rec.push("stats_vjp_rust_cpu", c, t_cpu_vjp);
+        rec.push("stats_vjp_xla", c, t_xla_vjp);
     } else {
         println!("  (artifacts missing; run `make artifacts` for the XLA rows)");
     }
@@ -96,6 +136,7 @@ fn main() -> anyhow::Result<()> {
         };
         let r = Engine::new(problem, cfg)?.time_iterations(1)?;
         println!("  chunk {:>5}: {:>8.3} s/iter", chunk_size, r.sec_per_eval);
+        rec.push("engine_eval_by_chunk", chunk_size, r.sec_per_eval);
     }
 
     // ---------------------------------------------------------------
@@ -136,6 +177,8 @@ fn main() -> anyhow::Result<()> {
         let t_dense = time_it(1, || DenseGp::lml_and_grads(&kern, 10.0f64.ln(), &x, &dsn.y).unwrap());
         println!("{:>6} {:>14.4} {:>14.4} {:>8.2}", n, t_sparse, t_dense,
                  t_dense / t_sparse);
+        rec.push("engine_eval_sparse", n, t_sparse);
+        rec.push("dense_gp_eval", n, t_dense);
     }
 
     // ---------------------------------------------------------------
@@ -164,5 +207,32 @@ fn main() -> anyhow::Result<()> {
                  r.evaluations);
     }
 
+    // ---------------------------------------------------------------
+    // 5. linalg kernels: blocked matmul + syrk vs the naive loops
+    // ---------------------------------------------------------------
+    println!("\n== linalg: naive vs cache-blocked matmul, matmul_t vs syrk ==");
+    println!("{:>6} {:>12} {:>12} {:>8} {:>12} {:>12}",
+             "M", "naive ms", "blocked ms", "speedup", "matmul_t ms", "syrk ms");
+    let mm_sizes: Vec<usize> = if fast { vec![64, 128, 256] } else { vec![64, 128, 256, 512] };
+    let mut rng = Rng64::new(5);
+    for mm in mm_sizes {
+        let a = Mat::from_fn(mm, mm, |_, _| rng.normal());
+        let b = Mat::from_fn(mm, mm, |_, _| rng.normal());
+        let reps = if mm <= 128 { 6 } else { 2 };
+        let t_naive = time_it(reps, || a.matmul_naive(&b));
+        let t_blocked = time_it(reps, || a.matmul_blocked(&b));
+        let t_mm_t = time_it(reps, || a.matmul_t(&a));
+        let t_syrk = time_it(reps, || a.syrk());
+        println!("{:>6} {:>12.3} {:>12.3} {:>8.2} {:>12.3} {:>12.3}",
+                 mm, t_naive * 1e3, t_blocked * 1e3, t_naive / t_blocked,
+                 t_mm_t * 1e3, t_syrk * 1e3);
+        rec.push("matmul_naive", mm, t_naive);
+        rec.push("matmul_blocked", mm, t_blocked);
+        rec.push("matmul_t", mm, t_mm_t);
+        rec.push("syrk", mm, t_syrk);
+    }
+
+    rec.write("BENCH_micro.json")?;
+    println!("\nwrote BENCH_micro.json ({} records)", rec.0.len());
     Ok(())
 }

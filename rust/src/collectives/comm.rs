@@ -1,6 +1,20 @@
 //! Point-to-point and collective operations over in-process channels.
+//!
+//! Collectives come in two interchangeable topologies:
+//!
+//! - **Linear** — the reference implementation: the root receives (or
+//!   sends) `P − 1` messages sequentially. O(P) critical path.
+//! - **Tree** (default) — binomial-tree `bcast`/`reduce_sum`: each round
+//!   doubles the set of ranks reached (or halves the set still holding
+//!   partial sums), so the critical path is O(log P) messages. This is
+//!   the textbook MPI algorithm and what makes the leader's per-iteration
+//!   collectives scale past a handful of ranks.
+//!
+//! Both topologies produce the same results (bit-identical for `bcast`,
+//! equal up to floating-point reduction order for `reduce_sum`); the
+//! equivalence is property-tested below for every cluster size 1–9.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -12,22 +26,46 @@ struct Message {
     data: Vec<f64>,
 }
 
+/// Which algorithm the collectives use. Selectable per-`Comm`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Topology {
+    /// Sequential fan-in/fan-out at the root (reference).
+    Linear,
+    /// Binomial tree: O(log P) critical path.
+    #[default]
+    Tree,
+}
+
 /// Per-rank communicator handle (the MPI_Comm analog).
 pub struct Comm {
     rank: usize,
     size: usize,
+    topology: Topology,
     senders: Vec<Sender<Message>>,
     inbox: Receiver<Message>,
-    /// Out-of-order messages parked until a matching recv.
-    parked: HashMap<(usize, u64), Vec<Vec<f64>>>,
+    /// Out-of-order messages parked until a matching recv. `VecDeque` so
+    /// delivery pops are O(1) (a `Vec::remove(0)` here is O(n) per
+    /// message — O(n²) under sustained out-of-order traffic).
+    parked: HashMap<(usize, u64), VecDeque<Vec<f64>>>,
     bytes_sent: Arc<AtomicU64>,
     messages_sent: Arc<AtomicU64>,
 }
+
+const TAG_BCAST: u64 = u64::MAX - 1;
+const TAG_REDUCE: u64 = u64::MAX - 2;
+const TAG_GATHER: u64 = u64::MAX - 3;
 
 impl Comm {
     pub fn rank(&self) -> usize { self.rank }
     pub fn size(&self) -> usize { self.size }
     pub fn is_root(&self) -> bool { self.rank == 0 }
+
+    /// The collective topology in use.
+    pub fn topology(&self) -> Topology { self.topology }
+
+    /// Switch collective algorithms. Every rank of a communicator must
+    /// agree (SPMD code always does, since they run the same line).
+    pub fn set_topology(&mut self, t: Topology) { self.topology = t; }
 
     /// Total bytes this *cluster* has shipped (shared counter).
     pub fn bytes_sent(&self) -> u64 { self.bytes_sent.load(Ordering::Relaxed) }
@@ -46,8 +84,8 @@ impl Comm {
     /// (out-of-order arrivals are parked, preserving per-(src,tag) order).
     pub fn recv(&mut self, src: usize, tag: u64) -> Vec<f64> {
         if let Some(q) = self.parked.get_mut(&(src, tag)) {
-            if !q.is_empty() {
-                return q.remove(0);
+            if let Some(data) = q.pop_front() {
+                return data;
             }
         }
         loop {
@@ -55,36 +93,99 @@ impl Comm {
             if msg.src == src && msg.tag == tag {
                 return msg.data;
             }
-            self.parked.entry((msg.src, msg.tag)).or_default().push(msg.data);
+            self.parked.entry((msg.src, msg.tag)).or_default().push_back(msg.data);
         }
     }
 
+    // -----------------------------------------------------------------
+    // broadcast
+    // -----------------------------------------------------------------
+
     /// Broadcast from `root`: returns the root's `data` on every rank.
+    /// Dispatches on the communicator's [`Topology`].
     pub fn bcast(&mut self, root: usize, data: Vec<f64>) -> Vec<f64> {
-        const TAG: u64 = u64::MAX - 1;
+        match self.topology {
+            Topology::Linear => self.bcast_linear(root, data),
+            Topology::Tree => self.bcast_tree(root, data),
+        }
+    }
+
+    /// Linear broadcast (reference): root sends to each rank in turn.
+    pub fn bcast_linear(&mut self, root: usize, data: Vec<f64>) -> Vec<f64> {
         if self.rank == root {
             for dst in 0..self.size {
                 if dst != root {
-                    self.send(dst, TAG, &data);
+                    self.send(dst, TAG_BCAST, &data);
                 }
             }
             data
         } else {
-            self.recv(root, TAG)
+            self.recv(root, TAG_BCAST)
         }
     }
 
+    /// Binomial-tree broadcast: rank v (relative to the root) receives
+    /// from `v − lowest_set_bit(v)` and forwards to `v + 2^k` for every
+    /// `2^k` below its lowest set bit — ⌈log₂ P⌉ rounds end to end.
+    pub fn bcast_tree(&mut self, root: usize, data: Vec<f64>) -> Vec<f64> {
+        let size = self.size;
+        let vrank = (self.rank + size - root) % size;
+        let to_real = |v: usize| (v + root) % size;
+
+        // Receive phase (no-op at the root): scan up to the lowest set
+        // bit of vrank — that bit names the parent.
+        let mut mask = 1usize;
+        let data = if vrank == 0 {
+            while mask < size {
+                mask <<= 1;
+            }
+            data
+        } else {
+            loop {
+                if vrank & mask != 0 {
+                    let parent = vrank - mask;
+                    break self.recv(to_real(parent), TAG_BCAST);
+                }
+                mask <<= 1;
+            }
+        };
+
+        // Send phase: peel `mask` back down (always below our lowest set
+        // bit), forwarding to each child in range.
+        mask >>= 1;
+        while mask > 0 {
+            let child = vrank + mask;
+            if child < size {
+                self.send(to_real(child), TAG_BCAST, &data);
+            }
+            mask >>= 1;
+        }
+        data
+    }
+
+    // -----------------------------------------------------------------
+    // reduce
+    // -----------------------------------------------------------------
+
     /// Element-wise sum-reduction to `root`; `Some(total)` on root,
-    /// `None` elsewhere.
+    /// `None` elsewhere. Dispatches on the communicator's [`Topology`].
     pub fn reduce_sum(&mut self, root: usize, data: &[f64]) -> Option<Vec<f64>> {
-        const TAG: u64 = u64::MAX - 2;
+        match self.topology {
+            Topology::Linear => self.reduce_sum_linear(root, data),
+            Topology::Tree => self.reduce_sum_tree(root, data),
+        }
+    }
+
+    /// Linear reduction (reference): root receives P−1 partials in rank
+    /// order and accumulates sequentially.
+    pub fn reduce_sum_linear(&mut self, root: usize, data: &[f64]) -> Option<Vec<f64>> {
         if self.rank == root {
             let mut acc = data.to_vec();
             for src in 0..self.size {
                 if src == root {
                     continue;
                 }
-                let part = self.recv(src, TAG);
+                let part = self.recv(src, TAG_REDUCE);
                 assert_eq!(part.len(), acc.len(), "reduce length mismatch");
                 for (a, b) in acc.iter_mut().zip(&part) {
                     *a += b;
@@ -92,10 +193,44 @@ impl Comm {
             }
             Some(acc)
         } else {
-            self.send(root, TAG, data);
+            self.send(root, TAG_REDUCE, data);
             None
         }
     }
+
+    /// Binomial-tree reduction (mirror image of `bcast_tree`): in round
+    /// `k`, ranks with bit `2^k` set ship their partial sum to the parent
+    /// and drop out; the root absorbs ⌈log₂ P⌉ partials instead of P−1.
+    pub fn reduce_sum_tree(&mut self, root: usize, data: &[f64]) -> Option<Vec<f64>> {
+        let size = self.size;
+        let vrank = (self.rank + size - root) % size;
+        let to_real = |v: usize| (v + root) % size;
+
+        let mut acc = data.to_vec();
+        let mut mask = 1usize;
+        while mask < size {
+            if vrank & mask == 0 {
+                let child = vrank + mask;
+                if child < size {
+                    let part = self.recv(to_real(child), TAG_REDUCE);
+                    assert_eq!(part.len(), acc.len(), "reduce length mismatch");
+                    for (a, b) in acc.iter_mut().zip(&part) {
+                        *a += b;
+                    }
+                }
+            } else {
+                let parent = vrank - mask;
+                self.send(to_real(parent), TAG_REDUCE, &acc);
+                return None;
+            }
+            mask <<= 1;
+        }
+        Some(acc)
+    }
+
+    // -----------------------------------------------------------------
+    // composites
+    // -----------------------------------------------------------------
 
     /// Reduce-to-root followed by broadcast (the classic two-phase
     /// allreduce; the paper's scheme reduces to one node anyway because
@@ -107,20 +242,20 @@ impl Comm {
         }
     }
 
-    /// Gather every rank's vector at `root` (indexed by rank).
+    /// Gather every rank's vector at `root` (indexed by rank). Payloads
+    /// are heterogeneous, so this stays a point-to-point fan-in.
     pub fn gather(&mut self, root: usize, data: &[f64]) -> Option<Vec<Vec<f64>>> {
-        const TAG: u64 = u64::MAX - 3;
         if self.rank == root {
             let mut out = vec![Vec::new(); self.size];
             out[root] = data.to_vec();
             for src in 0..self.size {
                 if src != root {
-                    out[src] = self.recv(src, TAG);
+                    out[src] = self.recv(src, TAG_GATHER);
                 }
             }
             Some(out)
         } else {
-            self.send(root, TAG, data);
+            self.send(root, TAG_GATHER, data);
             None
         }
     }
@@ -136,9 +271,19 @@ pub struct Cluster;
 
 impl Cluster {
     /// Run `f` on `size` ranks (each on its own OS thread; rank r gets a
-    /// connected `Comm`). Returns the per-rank results, indexed by rank.
-    /// Panics in any rank propagate.
+    /// connected `Comm` with the default [`Topology::Tree`] collectives).
+    /// Returns the per-rank results, indexed by rank. Panics in any rank
+    /// propagate.
     pub fn run<T, F>(size: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Comm) -> T + Sync,
+    {
+        Cluster::run_with(size, Topology::default(), f)
+    }
+
+    /// `run` with an explicit collective topology.
+    pub fn run_with<T, F>(size: usize, topology: Topology, f: F) -> Vec<T>
     where
         T: Send,
         F: Fn(Comm) -> T + Sync,
@@ -160,6 +305,7 @@ impl Cluster {
             .map(|rank| Comm {
                 rank,
                 size,
+                topology,
                 senders: senders_per_rank.clone(),
                 inbox: inboxes[rank].take().unwrap(),
                 parked: HashMap::new(),
@@ -206,12 +352,14 @@ mod tests {
 
     #[test]
     fn bcast_delivers_root_value() {
-        let results = Cluster::run(4, |mut comm| {
-            let data = if comm.is_root() { vec![3.5, -1.0] } else { vec![] };
-            comm.bcast(0, data)
-        });
-        for r in results {
-            assert_eq!(r, vec![3.5, -1.0]);
+        for topology in [Topology::Linear, Topology::Tree] {
+            let results = Cluster::run_with(4, topology, |mut comm| {
+                let data = if comm.is_root() { vec![3.5, -1.0] } else { vec![] };
+                comm.bcast(0, data)
+            });
+            for r in results {
+                assert_eq!(r, vec![3.5, -1.0], "{topology:?}");
+            }
         }
     }
 
@@ -243,6 +391,25 @@ mod tests {
             }
         });
         assert_eq!(results[0], vec![5.0, 7.0]);
+    }
+
+    #[test]
+    fn parked_queue_preserves_fifo_order_per_tag() {
+        // Three messages on one (src, tag) arrive while rank 0 waits on a
+        // different tag; they must drain in send order afterwards.
+        let results = Cluster::run(2, |mut comm| {
+            if comm.rank() == 1 {
+                for v in [1.0, 2.0, 3.0] {
+                    comm.send(0, 9, &[v]);
+                }
+                comm.send(0, 4, &[0.0]);
+                vec![]
+            } else {
+                let _ = comm.recv(1, 4); // parks all three tag-9 messages
+                (0..3).map(|_| comm.recv(1, 9)[0]).collect()
+            }
+        });
+        assert_eq!(results[0], vec![1.0, 2.0, 3.0]);
     }
 
     #[test]
@@ -286,18 +453,103 @@ mod tests {
         });
     }
 
+    /// Tree reduce must agree with the linear reference for every cluster
+    /// size 1–9 (covering perfect trees, one-past-a-power, and odd sizes)
+    /// and for every root.
+    #[test]
+    fn prop_tree_reduce_matches_linear() {
+        Prop::new("tree_vs_linear_reduce").cases(6).run(|rng| {
+            let len = 1 + (rng.next_u64() % 16) as usize;
+            for size in 1..=9usize {
+                let root = (rng.next_u64() % size as u64) as usize;
+                let datasets: Vec<Vec<f64>> = (0..size)
+                    .map(|r| {
+                        let mut rr = crate::data::rng::Rng64::new(r as u64 * 7 + 1);
+                        rr.normal_vec(len)
+                    })
+                    .collect();
+                let ds = &datasets;
+                let run = |topology| {
+                    Cluster::run_with(size, topology, move |mut comm| {
+                        comm.reduce_sum(root, &ds[comm.rank()])
+                    })
+                };
+                let lin = run(Topology::Linear);
+                let tree = run(Topology::Tree);
+                for r in 0..size {
+                    match (&lin[r], &tree[r]) {
+                        (Some(a), Some(b)) => {
+                            assert_eq!(r, root);
+                            for (x, y) in a.iter().zip(b) {
+                                assert!((x - y).abs() < 1e-12 * (1.0 + x.abs()),
+                                        "size {size} root {root}: {x} vs {y}");
+                            }
+                        }
+                        (None, None) => assert_ne!(r, root),
+                        _ => panic!("size {size}: topologies disagree on root-ness"),
+                    }
+                }
+            }
+        });
+    }
+
+    /// Tree bcast must deliver the root's exact payload on every rank for
+    /// sizes 1–9 and every root.
+    #[test]
+    fn prop_tree_bcast_matches_linear() {
+        Prop::new("tree_vs_linear_bcast").cases(6).run(|rng| {
+            let payload = rng.normal_vec(1 + (rng.next_u64() % 12) as usize);
+            for size in 1..=9usize {
+                let root = (rng.next_u64() % size as u64) as usize;
+                let pl = &payload;
+                let run = |topology| {
+                    Cluster::run_with(size, topology, move |mut comm| {
+                        let data = if comm.rank() == root { pl.clone() } else { Vec::new() };
+                        comm.bcast(root, data)
+                    })
+                };
+                for (a, b) in run(Topology::Linear).iter().zip(&run(Topology::Tree)) {
+                    assert_eq!(a, b, "size {size} root {root}");
+                    assert_eq!(a, pl, "size {size} root {root}");
+                }
+            }
+        });
+    }
+
+    /// Pipelined collectives (several in flight back to back, mixed with
+    /// point-to-point traffic) stay in lockstep under the tree topology.
+    #[test]
+    fn tree_collectives_pipeline_safely() {
+        let results = Cluster::run_with(5, Topology::Tree, |mut comm| {
+            let mut acc = 0.0;
+            for round in 0..4 {
+                let x = comm.bcast(0, vec![round as f64]);
+                let total = comm.allreduce_sum(&[x[0] + comm.rank() as f64]);
+                acc += total[0];
+            }
+            acc
+        });
+        // round r: sum over ranks of (r + rank) = 5r + 10
+        let expect: f64 = (0..4).map(|r| 5.0 * r as f64 + 10.0).sum();
+        for r in results {
+            assert!((r - expect).abs() < 1e-12, "{r} vs {expect}");
+        }
+    }
+
     #[test]
     fn barrier_synchronises() {
-        // No deadlock across repeated barriers with mixed work.
-        let results = Cluster::run(4, |mut comm| {
-            for i in 0..5 {
-                if comm.rank() % 2 == 0 {
-                    std::thread::sleep(std::time::Duration::from_millis(i));
+        for topology in [Topology::Linear, Topology::Tree] {
+            // No deadlock across repeated barriers with mixed work.
+            let results = Cluster::run_with(4, topology, |mut comm| {
+                for i in 0..5 {
+                    if comm.rank() % 2 == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(i));
+                    }
+                    comm.barrier();
                 }
-                comm.barrier();
-            }
-            true
-        });
-        assert!(results.into_iter().all(|r| r));
+                true
+            });
+            assert!(results.into_iter().all(|r| r));
+        }
     }
 }

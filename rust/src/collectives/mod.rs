@@ -7,6 +7,10 @@
 //! counters report exactly the traffic an MPI run would ship, so the
 //! "communication overhead is negligible" claim (paper §4) is measurable.
 //!
+//! `bcast`/`reduce_sum` run over a binomial tree by default (O(log P)
+//! critical path); the linear reference algorithms are retained and
+//! selectable per-communicator via [`Topology`].
+//!
 //! Usage is SPMD, like MPI:
 //! ```no_run
 //! use gpparallel::collectives::Cluster;
@@ -19,4 +23,4 @@
 
 mod comm;
 
-pub use comm::{Cluster, Comm};
+pub use comm::{Cluster, Comm, Topology};

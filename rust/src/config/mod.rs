@@ -13,22 +13,39 @@ use crate::optim::lbfgs::Lbfgs;
 pub enum BackendKind {
     /// Scalar Rust loops — the per-core "CPU node" analog.
     RustCpu,
+    /// Scalar Rust loops fanned across scoped threads *within* a rank —
+    /// the paper's "multicore node". `threads == 0` means one thread per
+    /// available core. Produces bit-identical statistics to `RustCpu`.
+    ParallelCpu {
+        threads: usize,
+    },
     /// AOT-compiled XLA executable on PJRT — the "GPU card" analog.
     Xla,
 }
 
 impl BackendKind {
+    /// Intra-rank chunk parallelism with auto-detected thread count.
+    pub const fn parallel_auto() -> BackendKind {
+        BackendKind::ParallelCpu { threads: 0 }
+    }
+
     pub fn parse(s: &str) -> Option<BackendKind> {
         match s {
             "cpu" | "rust" | "rust-cpu" => Some(BackendKind::RustCpu),
+            "parallel" | "parallel-cpu" | "multicore" => Some(BackendKind::parallel_auto()),
             "xla" | "gpu" | "device" => Some(BackendKind::Xla),
-            _ => None,
+            _ => {
+                // "parallel:N" pins the intra-rank thread count.
+                let n = s.strip_prefix("parallel:")?.parse().ok()?;
+                Some(BackendKind::ParallelCpu { threads: n })
+            }
         }
     }
 
     pub fn name(self) -> &'static str {
         match self {
             BackendKind::RustCpu => "rust-cpu",
+            BackendKind::ParallelCpu { .. } => "parallel-cpu",
             BackendKind::Xla => "xla",
         }
     }
@@ -87,6 +104,11 @@ mod tests {
         assert_eq!(BackendKind::parse("cpu"), Some(BackendKind::RustCpu));
         assert_eq!(BackendKind::parse("gpu"), Some(BackendKind::Xla));
         assert_eq!(BackendKind::parse("xla"), Some(BackendKind::Xla));
+        assert_eq!(BackendKind::parse("parallel"),
+                   Some(BackendKind::ParallelCpu { threads: 0 }));
+        assert_eq!(BackendKind::parse("parallel:4"),
+                   Some(BackendKind::ParallelCpu { threads: 4 }));
+        assert_eq!(BackendKind::parse("parallel:x"), None);
         assert_eq!(BackendKind::parse("tpu"), None);
     }
 }

@@ -1,12 +1,20 @@
 //! Worker compute backends: who evaluates the per-chunk statistics.
 //!
-//! - `RustCpuBackend` — scalar Rust loops; the per-core "CPU node" of the
-//!   paper's Fig 1a.
-//! - `XlaBackend`     — the AOT Pallas/JAX artifact on a per-worker PJRT
-//!   client; the "GPU card" of Fig 1a.
+//! - `RustCpuBackend`     — scalar Rust loops; the per-core "CPU node" of
+//!   the paper's Fig 1a.
+//! - `ParallelCpuBackend` — the same loops fanned across scoped threads
+//!   *within* a rank (the paper's "multicore node"): the chunk list is
+//!   split into contiguous slices, one per thread, and the per-chunk
+//!   results are re-assembled in chunk order, so the statistics are
+//!   **bit-identical** to `RustCpuBackend`.
+//! - `XlaBackend`         — the AOT Pallas/JAX artifact on a per-worker
+//!   PJRT client; the "GPU card" of Fig 1a (requires the `xla` feature).
 //!
-//! Both produce identical statistics/gradients (cross-checked in
-//! `rust/tests/xla_vs_rust.rs`); they differ only in speed.
+//! All backends produce identical statistics/gradients (cross-checked in
+//! `rust/tests/xla_vs_rust.rs` and `rust/tests/exec_layer_test.rs`); they
+//! differ only in speed. Construction goes through [`make_backends`], the
+//! factory keyed by [`BackendKind`] — the evaluation cycle never matches
+//! on the kind itself.
 
 use crate::config::BackendKind;
 use crate::kern::RbfArd;
@@ -41,9 +49,29 @@ pub struct ViewParams<'a> {
     pub log_hyp: &'a [f64],
 }
 
+/// One chunk's full input for a batch call: the rank's resident chunk
+/// (with its Y tile attached) plus its per-evaluation (μ, S) slice for
+/// unsupervised models (padded to C rows; S padded with 1.0), or `None`
+/// for supervised ones. The chunk is borrowed — static data is never
+/// copied on the evaluation hot path; only the (μ, S) slices are owned.
+pub struct ChunkTask<'a> {
+    pub chunk: &'a ChunkData,
+    pub latent: Option<(Mat, Mat)>,
+}
+
+impl ChunkTask<'_> {
+    pub fn latent(&self) -> Option<(&Mat, &Mat)> {
+        self.latent.as_ref().map(|(mu, s)| (mu, s))
+    }
+}
+
 /// The worker-side compute interface. `latent` is the chunk's (μ, S)
 /// slice (padded to C rows; S padded with 1.0) for unsupervised models,
 /// or `None` for supervised ones (the chunk's own `x` is used, S ≡ 0).
+///
+/// The `*_batch` methods evaluate a rank's whole chunk list; the default
+/// implementations loop serially, and backends with intra-rank
+/// parallelism override them.
 pub trait Backend {
     fn stats_fwd(&mut self, chunk: &ChunkData, latent: Option<(&Mat, &Mat)>,
                  view: &ViewParams, include_kl: bool) -> Result<Stats>;
@@ -52,6 +80,51 @@ pub trait Backend {
                  view: &ViewParams, cts: &StatsCts) -> Result<ChunkGrads>;
 
     fn kind(&self) -> BackendKind;
+
+    /// Forward statistics for every chunk of a rank, in chunk order.
+    fn stats_fwd_batch(&mut self, tasks: &[ChunkTask], view: &ViewParams,
+                       include_kl: bool) -> Result<Vec<Stats>> {
+        tasks.iter()
+            .map(|t| self.stats_fwd(t.chunk, t.latent(), view, include_kl))
+            .collect()
+    }
+
+    /// VJPs for every chunk of a rank, in chunk order.
+    fn stats_vjp_batch(&mut self, tasks: &[ChunkTask], view: &ViewParams,
+                       cts: &StatsCts) -> Result<Vec<ChunkGrads>> {
+        tasks.iter()
+            .map(|t| self.stats_vjp(t.chunk, t.latent(), view, cts))
+            .collect()
+    }
+}
+
+/// Factory: one backend per view for `kind`. The returned `Runtime` (if
+/// any) owns the PJRT client the `XlaBackend`s execute on and must stay
+/// alive as long as they do.
+pub fn make_backends(kind: BackendKind, aot_configs: &[String], artifacts_dir: &Path)
+                     -> Result<(Vec<Box<dyn Backend>>, Option<Runtime>)> {
+    let mut backends: Vec<Box<dyn Backend>> = Vec::with_capacity(aot_configs.len());
+    match kind {
+        BackendKind::RustCpu => {
+            for _ in aot_configs {
+                backends.push(Box::new(RustCpuBackend));
+            }
+            Ok((backends, None))
+        }
+        BackendKind::ParallelCpu { threads } => {
+            for _ in aot_configs {
+                backends.push(Box::new(ParallelCpuBackend::new(threads)));
+            }
+            Ok((backends, None))
+        }
+        BackendKind::Xla => {
+            let rt = Runtime::new(artifacts_dir)?;
+            for config in aot_configs {
+                backends.push(Box::new(XlaBackend::new(&rt, config)?));
+            }
+            Ok((backends, Some(rt)))
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -87,6 +160,94 @@ impl Backend for RustCpuBackend {
 
     fn kind(&self) -> BackendKind {
         BackendKind::RustCpu
+    }
+}
+
+// ---------------------------------------------------------------------
+// parallel CPU backend
+// ---------------------------------------------------------------------
+
+/// Intra-rank chunk parallelism: the batch calls fan a rank's chunk list
+/// across scoped OS threads, each running the scalar `RustCpuBackend`
+/// math on a contiguous slice. Per-chunk results are concatenated in
+/// spawn (= chunk) order and per-chunk computation is untouched, so the
+/// output is bit-identical to the serial backend — the engine's
+/// chunk-order accumulation then produces bit-identical `Stats` and
+/// `ChunkGrads` too (asserted in `tests/exec_layer_test.rs`).
+pub struct ParallelCpuBackend {
+    /// Worker threads for batch calls; 0 = one per available core.
+    threads: usize,
+}
+
+impl ParallelCpuBackend {
+    pub fn new(threads: usize) -> ParallelCpuBackend {
+        ParallelCpuBackend { threads }
+    }
+
+    /// Threads actually used for a batch of `tasks` chunks.
+    fn fan_out(&self, tasks: usize) -> usize {
+        let configured = if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        };
+        configured.max(1).min(tasks.max(1))
+    }
+
+    /// Split `tasks` across threads and apply `f` to each chunk,
+    /// returning results in chunk order.
+    fn run_batch<T: Send>(
+        &self,
+        tasks: &[ChunkTask],
+        f: impl Fn(&ChunkTask) -> Result<T> + Sync,
+    ) -> Result<Vec<T>> {
+        let threads = self.fan_out(tasks.len());
+        if threads <= 1 || tasks.len() <= 1 {
+            return tasks.iter().map(f).collect();
+        }
+        let per = tasks.len().saturating_add(threads - 1) / threads;
+        let f = &f;
+        let per_thread: Result<Vec<Vec<T>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = tasks
+                .chunks(per)
+                .map(|slice| scope.spawn(move || slice.iter().map(f).collect::<Result<Vec<T>>>()))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("parallel-cpu worker panicked"))
+                .collect()
+        });
+        Ok(per_thread?.into_iter().flatten().collect())
+    }
+}
+
+impl Backend for ParallelCpuBackend {
+    fn stats_fwd(&mut self, chunk: &ChunkData, latent: Option<(&Mat, &Mat)>,
+                 view: &ViewParams, include_kl: bool) -> Result<Stats> {
+        RustCpuBackend.stats_fwd(chunk, latent, view, include_kl)
+    }
+
+    fn stats_vjp(&mut self, chunk: &ChunkData, latent: Option<(&Mat, &Mat)>,
+                 view: &ViewParams, cts: &StatsCts) -> Result<ChunkGrads> {
+        RustCpuBackend.stats_vjp(chunk, latent, view, cts)
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::ParallelCpu { threads: self.threads }
+    }
+
+    fn stats_fwd_batch(&mut self, tasks: &[ChunkTask], view: &ViewParams,
+                       include_kl: bool) -> Result<Vec<Stats>> {
+        self.run_batch(tasks, |t| {
+            RustCpuBackend.stats_fwd(t.chunk, t.latent(), view, include_kl)
+        })
+    }
+
+    fn stats_vjp_batch(&mut self, tasks: &[ChunkTask], view: &ViewParams,
+                       cts: &StatsCts) -> Result<Vec<ChunkGrads>> {
+        self.run_batch(tasks, |t| {
+            RustCpuBackend.stats_vjp(t.chunk, t.latent(), view, cts)
+        })
     }
 }
 
@@ -198,5 +359,94 @@ impl Backend for XlaBackend {
 
     fn kind(&self) -> BackendKind {
         BackendKind::Xla
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Rng64;
+
+    fn chunk(rng: &mut Rng64, c: usize, d: usize, start: usize) -> ChunkData {
+        let live = c - 2;
+        let mut w = vec![0.0; c];
+        w[..live].fill(1.0);
+        ChunkData {
+            start,
+            live,
+            y: Mat::from_fn(c, d, |_, _| rng.normal()),
+            x: Mat::zeros(0, 0),
+            w,
+        }
+    }
+
+    /// The parallel backend must reproduce the serial backend's per-chunk
+    /// outputs exactly, for thread counts that do and don't divide the
+    /// chunk count.
+    #[test]
+    fn parallel_batch_bit_identical_to_serial() {
+        let (c, q, d, m) = (16, 2, 3, 5);
+        let mut rng = Rng64::new(77);
+        let chunks: Vec<ChunkData> =
+            (0..7).map(|i| chunk(&mut rng, c, d, i * c)).collect();
+        let tasks: Vec<ChunkTask> = chunks
+            .iter()
+            .map(|ch| ChunkTask {
+                chunk: ch,
+                latent: Some((
+                    Mat::from_fn(c, q, |_, _| rng.normal()),
+                    Mat::from_fn(c, q, |_, _| rng.uniform_range(0.2, 1.2)),
+                )),
+            })
+            .collect();
+        let z = Mat::from_fn(m, q, |_, _| rng.normal());
+        let log_hyp = RbfArd::iso(1.2, 0.8, q).to_log_hyp();
+        let vp = ViewParams { z: &z, log_hyp: &log_hyp };
+
+        let serial = RustCpuBackend.stats_fwd_batch(&tasks, &vp, true).unwrap();
+        for threads in [1, 2, 3, 7, 16] {
+            let par = ParallelCpuBackend::new(threads)
+                .stats_fwd_batch(&tasks, &vp, true)
+                .unwrap();
+            assert_eq!(par.len(), serial.len());
+            for (a, b) in par.iter().zip(&serial) {
+                assert!(a.psi0 == b.psi0 && a.tryy == b.tryy && a.kl == b.kl,
+                        "threads={threads}: scalar stats differ");
+                assert!(a.p.max_abs_diff(&b.p) == 0.0, "threads={threads}: P differs");
+                assert!(a.psi2.max_abs_diff(&b.psi2) == 0.0,
+                        "threads={threads}: Psi2 differs");
+            }
+        }
+
+        let cts = StatsCts {
+            c_psi0: 0.4,
+            c_p: Mat::from_fn(m, d, |_, _| rng.normal()),
+            c_psi2: Mat::from_fn(m, m, |_, _| rng.normal()),
+            c_tryy: -0.2,
+            c_kl: -1.0,
+        };
+        let serial = RustCpuBackend.stats_vjp_batch(&tasks, &vp, &cts).unwrap();
+        let par = ParallelCpuBackend::new(3).stats_vjp_batch(&tasks, &vp, &cts).unwrap();
+        for (a, b) in par.iter().zip(&serial) {
+            assert!(a.dmu.max_abs_diff(&b.dmu) == 0.0);
+            assert!(a.ds.max_abs_diff(&b.ds) == 0.0);
+            assert!(a.dz.max_abs_diff(&b.dz) == 0.0);
+            assert_eq!(a.dhyp, b.dhyp);
+        }
+    }
+
+    #[test]
+    fn factory_builds_cpu_kinds() {
+        let configs = vec!["a".to_string(), "b".to_string()];
+        let (b, rt) = make_backends(BackendKind::RustCpu, &configs, Path::new(".")).unwrap();
+        assert_eq!(b.len(), 2);
+        assert!(rt.is_none());
+        assert_eq!(b[0].kind(), BackendKind::RustCpu);
+
+        let (b, rt) = make_backends(BackendKind::ParallelCpu { threads: 2 }, &configs,
+                                    Path::new(".")).unwrap();
+        assert_eq!(b.len(), 2);
+        assert!(rt.is_none());
+        assert_eq!(b[0].kind(), BackendKind::ParallelCpu { threads: 2 });
     }
 }

@@ -1,0 +1,682 @@
+//! The eight-step SPMD evaluation cycle (DESIGN.md §4) as a reusable
+//! component:
+//!
+//!   1–3. leader broadcasts command + global parameters, ships each
+//!        rank its (μ, S) span            (`bcast` / tagged sends)
+//!   4.   every rank: per-chunk stats_fwd (batched through the backend,
+//!        fanned across threads on `parallel-cpu`) → tree `reduce_sum`
+//!   5.   leader: indistributable M×M core (bound + cotangents)
+//!   5b.  leader broadcasts cotangents    (`bcast`; empty = abort cycle)
+//!   6.   every rank: per-chunk stats_vjp → tree `reduce_sum` of the
+//!        global (Z, hyp) partials
+//!   7.   `gather` of the span-local (dμ, d log S) gradients
+//!   8.   (in `train`) optimiser step at the leader
+//!
+//! [`DistributedEvaluator`] owns one rank's half of that conversation:
+//! the leader drives it through [`DistributedEvaluator::eval`], workers
+//! sit in [`DistributedEvaluator::serve`]. Both sides keep the
+//! collectives in lockstep even when a rank's compute fails mid-cycle:
+//! failures ride a trailing fail-count element on each reduction, and a
+//! leader-side failure aborts the cycle with an empty cotangent
+//! broadcast — so an error surfaces as an `Err` on the optimiser's next
+//! step instead of a protocol desync.
+
+use super::problem::{pad_globals, unpack_globals, GlobalParams, LatentSpec, ParamLayout,
+                     Problem};
+use super::train::EngineConfig;
+use crate::collectives::Comm;
+use crate::config::BackendKind;
+use crate::coordinator::backend::{make_backends, Backend, ChunkData, ChunkTask, ViewParams};
+use crate::coordinator::partition::{ChunkRange, Partition};
+use crate::kern::RbfArd;
+use crate::linalg::Mat;
+use crate::math::bound::bound_and_grads;
+use crate::math::stats::{Stats, StatsCts};
+use crate::metrics::{thread_cpu_time, Phase, PhaseTimer};
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Result};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------
+// wire protocol
+// ---------------------------------------------------------------------
+
+const CMD_EVAL: f64 = 1.0;
+const CMD_STOP: f64 = 0.0;
+const TAG_LOCALS: u64 = 100;
+
+/// Payload length of the per-view statistics, excluding the trailing
+/// fail-count element.
+fn stats_wire_len(m: usize, ds: &[usize]) -> usize {
+    ds.iter().map(|d| 4 + m * d + m * m).sum()
+}
+
+fn cts_wire_len(m: usize, ds: &[usize]) -> usize {
+    ds.iter().map(|d| 3 + m * d + m * m).sum()
+}
+
+/// Payload length of the global-gradient partials (dZ + dhyp per view),
+/// excluding the trailing fail-count element.
+fn grads_wire_len(m: usize, q: usize, views: usize) -> usize {
+    views * (m * q + q + 1)
+}
+
+/// Append the fail flag reducers sum into a fail count: `Some(payload)`
+/// from a rank whose compute succeeded, `None` (zero-filled to `len`) from
+/// one whose compute failed. Both sides of the protocol — leader `eval`
+/// and worker `serve` — pack through this one helper so the wire format
+/// cannot drift between them.
+fn pack_with_flag(payload: Option<Vec<f64>>, len: usize) -> Vec<f64> {
+    match payload {
+        Some(mut wire) => {
+            debug_assert_eq!(wire.len(), len, "wire payload length");
+            wire.push(0.0);
+            wire
+        }
+        None => {
+            let mut wire = vec![0.0; len + 1];
+            wire[len] = 1.0;
+            wire
+        }
+    }
+}
+
+fn pack_stats(stats: &[Stats]) -> Vec<f64> {
+    let mut wire = Vec::new();
+    for st in stats {
+        wire.extend(st.pack());
+    }
+    wire
+}
+
+fn pack_grads(view_grads: &[(Mat, Vec<f64>)]) -> Vec<f64> {
+    let mut wire = Vec::new();
+    for (dz, dhyp) in view_grads {
+        wire.extend_from_slice(dz.as_slice());
+        wire.extend_from_slice(dhyp);
+    }
+    wire
+}
+
+// ---------------------------------------------------------------------
+// per-rank worker state
+// ---------------------------------------------------------------------
+
+/// Per-rank state: resident chunks (one fully-assembled `ChunkData` per
+/// view per chunk — mask, supervised x and the view's Y tile attached at
+/// build time, so nothing static is copied on the evaluation hot path)
+/// and a backend per view.
+struct WorkerState {
+    /// `view_chunks[v][c]` — chunk c's data for view v.
+    view_chunks: Vec<Vec<ChunkData>>,
+    backends: Vec<Box<dyn Backend>>,
+    /// Runtime kept alive for the XLA backends (owns the PJRT client).
+    _runtime: Option<Runtime>,
+    span: Option<ChunkRange>,
+    q: usize,
+    variational: bool,
+}
+
+/// Slice one chunk's (μ, S) rows out of the rank's span-local buffers,
+/// padding the tail (μ = 0, S = 1).
+fn chunk_latent(chunk: &ChunkData, span_start: usize, q: usize,
+                mu_span: &[f64], s_span: &[f64], c: usize) -> (Mat, Mat) {
+    let off = (chunk.start - span_start) * q;
+    let live = chunk.live * q;
+    let mut mu = Mat::zeros(c, q);
+    let mut s = Mat::from_vec(c, q, vec![1.0; c * q]);
+    mu.as_mut_slice()[..live].copy_from_slice(&mu_span[off..off + live]);
+    s.as_mut_slice()[..live].copy_from_slice(&s_span[off..off + live]);
+    (mu, s)
+}
+
+/// Assemble one view's batch: each resident chunk (borrowed) with its
+/// (μ, S) slice attached. `latent_start` is the rank's span start for
+/// variational problems, `None` for supervised ones.
+fn view_tasks<'a>(chunks: &'a [ChunkData], latent_start: Option<usize>, q: usize,
+                  mu_span: &[f64], s_span: &[f64], c: usize) -> Vec<ChunkTask<'a>> {
+    chunks
+        .iter()
+        .map(|chunk| ChunkTask {
+            chunk,
+            latent: latent_start.map(|start| chunk_latent(chunk, start, q, mu_span,
+                                                          s_span, c)),
+        })
+        .collect()
+}
+
+impl WorkerState {
+    fn build(problem: &Problem, cfg: &EngineConfig, part: &Partition, rank: usize)
+             -> Result<WorkerState> {
+        let q = problem.q;
+        let c = part.chunk;
+        let ranges = &part.per_worker[rank];
+        let variational = problem.latent.is_variational();
+
+        // chunk skeletons (mask + supervised x)
+        let mut skeletons = Vec::with_capacity(ranges.len());
+        for r in ranges {
+            let live = r.len();
+            let mut w = vec![0.0; c];
+            w[..live].fill(1.0);
+            let x = match &problem.latent {
+                LatentSpec::Observed(x_all) => {
+                    let mut x = Mat::zeros(c, q);
+                    for i in 0..live {
+                        x.row_mut(i).copy_from_slice(x_all.row(r.start + i));
+                    }
+                    x
+                }
+                LatentSpec::Variational { .. } => Mat::zeros(0, 0),
+            };
+            skeletons.push(ChunkData { start: r.start, live, y: Mat::zeros(0, 0), x, w });
+        }
+
+        // per-view resident chunks: skeleton + the view's padded Y tile
+        let mut view_chunks = Vec::with_capacity(problem.views.len());
+        for view in &problem.views {
+            let d = view.y.cols();
+            let mut chunks = Vec::with_capacity(ranges.len());
+            for (r, skel) in ranges.iter().zip(&skeletons) {
+                let mut y = Mat::zeros(c, d);
+                for i in 0..r.len() {
+                    y.row_mut(i).copy_from_slice(view.y.row(r.start + i));
+                }
+                let mut chunk = skel.clone();
+                chunk.y = y;
+                chunks.push(chunk);
+            }
+            view_chunks.push(chunks);
+        }
+
+        // backends, via the kind-keyed factory
+        let aot_configs: Vec<String> =
+            problem.views.iter().map(|v| v.aot_config.clone()).collect();
+        let (backends, runtime) =
+            make_backends(cfg.backend, &aot_configs, &cfg.artifacts_dir)?;
+
+        Ok(WorkerState {
+            view_chunks,
+            backends,
+            _runtime: runtime,
+            span: part.worker_span(rank),
+            q,
+            variational,
+        })
+    }
+
+    /// The rank's span start when (μ, S) slices must be attached.
+    fn latent_start(&self) -> Option<usize> {
+        if self.variational {
+            self.span.map(|s| s.start)
+        } else {
+            None
+        }
+    }
+
+    /// One full local forward pass: per-view stats summed over chunks
+    /// (in chunk order, regardless of how the backend parallelised them).
+    fn local_fwd(&mut self, globals: &GlobalParams, mu_span: &[f64], s_span: &[f64],
+                 c: usize, m: usize, ds: &[usize]) -> Result<Vec<Stats>> {
+        let latent_start = self.latent_start();
+        let mut out = Vec::with_capacity(globals.views.len());
+        for (v, gv) in globals.views.iter().enumerate() {
+            let tasks = view_tasks(&self.view_chunks[v], latent_start, self.q,
+                                   mu_span, s_span, c);
+            let vp = ViewParams { z: &gv.z, log_hyp: &gv.log_hyp };
+            // KL is counted exactly once: attached to view 0.
+            let include_kl = self.variational && v == 0;
+            let stats = self.backends[v].stats_fwd_batch(&tasks, &vp, include_kl)?;
+            // ds[v] (not the local tile width): ranks with zero chunks must
+            // still pack wire vectors of the global shape for the reducer.
+            let mut acc = Stats::zeros(m, ds[v]);
+            let mut first = true;
+            for st in stats {
+                if first {
+                    acc = st;
+                    first = false;
+                } else {
+                    acc.add_assign(&st);
+                }
+            }
+            out.push(acc);
+        }
+        Ok(out)
+    }
+
+    /// One full local VJP pass. Returns (per-view (dz, dhyp) partials,
+    /// span-local dμ, span-local d log S).
+    fn local_vjp(&mut self, globals: &GlobalParams, all_cts: &[StatsCts],
+                 mu_span: &[f64], s_span: &[f64], c: usize, m: usize)
+                 -> Result<(Vec<(Mat, Vec<f64>)>, Vec<f64>, Vec<f64>)> {
+        let latent_start = self.latent_start();
+        let span_len = self.span.map(|s| s.len()).unwrap_or(0);
+        let mut dmu_span = vec![0.0; span_len * self.q];
+        let mut dls_span = vec![0.0; span_len * self.q];
+        let mut view_grads = Vec::with_capacity(globals.views.len());
+
+        for (v, gv) in globals.views.iter().enumerate() {
+            let tasks = view_tasks(&self.view_chunks[v], latent_start, self.q,
+                                   mu_span, s_span, c);
+            let vp = ViewParams { z: &gv.z, log_hyp: &gv.log_hyp };
+            let grads = self.backends[v].stats_vjp_batch(&tasks, &vp, &all_cts[v])?;
+
+            let mut dz = Mat::zeros(m, self.q);
+            let mut dhyp = vec![0.0; self.q + 1];
+            for (task, g) in tasks.iter().zip(&grads) {
+                if let Some(span_start) = latent_start {
+                    // accumulate local grads (chain dS -> dlogS needs S)
+                    let (_, s) = task.latent().expect("variational task has latent");
+                    let off = (task.chunk.start - span_start) * self.q;
+                    for i in 0..task.chunk.live * self.q {
+                        dmu_span[off + i] += g.dmu.as_slice()[i];
+                        dls_span[off + i] += g.ds.as_slice()[i] * s.as_slice()[i];
+                    }
+                }
+                dz.axpy(1.0, &g.dz);
+                for (a, b) in dhyp.iter_mut().zip(&g.dhyp) {
+                    *a += b;
+                }
+            }
+            view_grads.push((dz, dhyp));
+        }
+        Ok((view_grads, dmu_span, dls_span))
+    }
+}
+
+// ---------------------------------------------------------------------
+// the evaluator
+// ---------------------------------------------------------------------
+
+/// One rank's half of the distributed evaluation cycle. Rank 0 (the
+/// leader) calls [`eval`](DistributedEvaluator::eval) once per objective
+/// evaluation and [`finish`](DistributedEvaluator::finish) when done;
+/// every other rank parks in [`serve`](DistributedEvaluator::serve).
+pub struct DistributedEvaluator {
+    comm: Comm,
+    state: WorkerState,
+    layout: ParamLayout,
+    /// Output width per view (global, identical on every rank).
+    ds: Vec<usize>,
+    /// Fixed chunk size C.
+    chunk: usize,
+    /// Every rank's datapoint span (for scattering (μ,S) and gathering
+    /// their gradients).
+    spans: Vec<Option<ChunkRange>>,
+    timer: PhaseTimer,
+    /// Distributable compute consumed by this rank (seconds).
+    compute: f64,
+    /// Measure compute as wall-clock (intra-rank fan-out spreads the work
+    /// over threads the rank-thread CPU clock cannot see) vs thread CPU
+    /// time (serial backends on a time-shared host).
+    compute_wall: bool,
+}
+
+impl DistributedEvaluator {
+    /// Build this rank's state (chunks, tiles, backends) and bind it to
+    /// the communicator.
+    pub fn new(problem: &Problem, cfg: &EngineConfig, part: &Partition, comm: Comm)
+               -> Result<DistributedEvaluator> {
+        let rank = comm.rank();
+        let state = WorkerState::build(problem, cfg, part, rank)?;
+        let layout = ParamLayout::new(problem);
+        let ds = problem.views.iter().map(|v| v.y.cols()).collect();
+        let spans = (0..part.workers()).map(|r| part.worker_span(r)).collect();
+        let compute_wall = matches!(cfg.backend, BackendKind::ParallelCpu { .. });
+        Ok(DistributedEvaluator {
+            comm,
+            state,
+            layout,
+            ds,
+            chunk: cfg.chunk,
+            spans,
+            timer: PhaseTimer::new(),
+            compute: 0.0,
+            compute_wall,
+        })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+
+    /// Phase timings accumulated on this rank.
+    pub fn timer(&self) -> &PhaseTimer {
+        &self.timer
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        self.comm.bytes_sent()
+    }
+
+    pub fn messages_sent(&self) -> u64 {
+        self.comm.messages_sent()
+    }
+
+    /// Number of optimisable parameters.
+    pub fn n_params(&self) -> usize {
+        self.layout.len()
+    }
+
+    fn clock(&self) -> f64 {
+        if self.compute_wall {
+            // monotonic wall reference; only differences are used
+            thread_wall_time()
+        } else {
+            thread_cpu_time()
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // leader side
+    // -----------------------------------------------------------------
+
+    /// Drive one full distributed cycle at `x`. Returns `(F, ∇F)` — the
+    /// *maximised* bound and its gradient; the trainer flips signs for
+    /// the minimiser. On error the collectives stay in lockstep: workers
+    /// park back at the command broadcast, ready for the next `eval` or
+    /// `finish`.
+    pub fn eval(&mut self, x: &[f64]) -> Result<(f64, Vec<f64>)> {
+        let layout = &self.layout;
+        let (m, q, n) = (layout.m, layout.q, layout.n);
+        let c = self.chunk;
+        let variational = layout.variational;
+        let views = layout.views;
+        let view_len = layout.view_len();
+        let globals = unpack_globals(layout, x);
+
+        // 1–3: command + parameter distribution
+        let (mu_all, s_all): (Vec<f64>, Vec<f64>) = if variational {
+            let mu = layout.mu_slice(x).to_vec();
+            let s: Vec<f64> = layout.log_s_slice(x).iter().map(|v| v.exp()).collect();
+            (mu, s)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+
+        let comm = &mut self.comm;
+        let spans = &self.spans;
+        self.timer.time(Phase::Bcast, || {
+            comm.bcast(0, vec![CMD_EVAL]);
+            comm.bcast(0, x[..views * view_len].to_vec());
+            if variational {
+                for (r, span) in spans.iter().enumerate().skip(1) {
+                    if let Some(sp) = span {
+                        let lo = sp.start * q;
+                        let hi = sp.end * q;
+                        let mut msg = Vec::with_capacity(2 * (hi - lo));
+                        msg.extend_from_slice(&mu_all[lo..hi]);
+                        msg.extend_from_slice(&s_all[lo..hi]);
+                        comm.send(r, TAG_LOCALS, &msg);
+                    }
+                }
+            }
+        });
+
+        let (mu_span, s_span): (&[f64], &[f64]) = if variational {
+            let sp = self.spans[0].expect("rank0 span");
+            (&mu_all[sp.start * q..sp.end * q], &s_all[sp.start * q..sp.end * q])
+        } else {
+            (&[], &[])
+        };
+
+        // 4: local fwd + reduce (a trailing element counts failed ranks)
+        let t0 = Instant::now();
+        let c0 = self.clock();
+        let fwd = self.state.local_fwd(&globals, mu_span, s_span, c, m, &self.ds);
+        self.compute += self.clock() - c0;
+        self.timer.add(Phase::StatsFwd, t0.elapsed());
+
+        let swire_len = stats_wire_len(m, &self.ds);
+        let wire = pack_with_flag(fwd.as_ref().ok().map(|stats| pack_stats(stats)),
+                                  swire_len);
+        let t0 = Instant::now();
+        let reduced = self.comm.reduce_sum(0, &wire).expect("root");
+        self.timer.add(Phase::Reduce, t0.elapsed());
+        let fwd_fails = *reduced.last().expect("non-empty reduce");
+
+        // 5: the indistributable core
+        let t0 = Instant::now();
+        let core = fwd.and_then(|_| {
+            if fwd_fails > 0.0 {
+                return Err(anyhow!("stats_fwd failed on {fwd_fails} rank(s)"));
+            }
+            let mut f_total = 0.0;
+            let mut all_cts = Vec::with_capacity(self.ds.len());
+            let mut direct = Vec::with_capacity(self.ds.len());
+            let mut off = 0;
+            for (v, &d) in self.ds.iter().enumerate() {
+                let len = 4 + m * d + m * m;
+                let stats = Stats::unpack(m, d, &reduced[off..off + len]);
+                off += len;
+                let kern = RbfArd::from_log_hyp(&globals.views[v].log_hyp);
+                let out = bound_and_grads(&stats, &globals.views[v].z, &kern,
+                                          globals.views[v].log_beta)?;
+                f_total += out.f;
+                all_cts.push(out.cts);
+                direct.push((out.dz, out.dhyp, out.dlog_beta));
+            }
+            Ok((f_total, all_cts, direct))
+        });
+        self.timer.add(Phase::BoundCore, t0.elapsed());
+
+        // 5b: cotangent broadcast — empty aborts the cycle in lockstep
+        let comm = &mut self.comm;
+        let (f_total, all_cts, direct) = match core {
+            Ok(parts) => {
+                let ds = &self.ds;
+                self.timer.time(Phase::Bcast, || {
+                    let mut wire = Vec::with_capacity(cts_wire_len(m, ds));
+                    for cts in &parts.1 {
+                        wire.extend(cts.pack());
+                    }
+                    comm.bcast(0, wire);
+                });
+                parts
+            }
+            Err(e) => {
+                self.timer.time(Phase::Bcast, || comm.bcast(0, Vec::new()));
+                return Err(e);
+            }
+        };
+
+        // 6: local vjp
+        let t0 = Instant::now();
+        let c0 = self.clock();
+        let vjp = self.state.local_vjp(&globals, &all_cts, mu_span, s_span, c, m);
+        self.compute += self.clock() - c0;
+        self.timer.add(Phase::StatsVjp, t0.elapsed());
+
+        let span0_len = self.spans[0].map(|s| s.len()).unwrap_or(0) * q;
+        let (view_grads, dmu_span, dls_span, vjp_err) = match vjp {
+            Ok((vg, dmu, dls)) => (vg, dmu, dls, None),
+            Err(e) => (Vec::new(), vec![0.0; span0_len], vec![0.0; span0_len], Some(e)),
+        };
+
+        // 7: reduce global partials + gather locals (fail flag again)
+        let t0 = Instant::now();
+        let gwire_len = grads_wire_len(m, q, self.ds.len());
+        let gwire = pack_with_flag(vjp_err.is_none().then(|| pack_grads(&view_grads)),
+                                   gwire_len);
+        let greduced = self.comm.reduce_sum(0, &gwire).expect("root");
+
+        let locals = if variational {
+            let mut mine = Vec::with_capacity(dmu_span.len() * 2);
+            mine.extend_from_slice(&dmu_span);
+            mine.extend_from_slice(&dls_span);
+            self.comm.gather(0, &mine)
+        } else {
+            self.comm.gather(0, &[])
+        };
+        self.timer.add(Phase::GatherGrads, t0.elapsed());
+
+        if let Some(e) = vjp_err {
+            return Err(e);
+        }
+        let vjp_fails = *greduced.last().expect("non-empty reduce");
+        if vjp_fails > 0.0 {
+            return Err(anyhow!("stats_vjp failed on {vjp_fails} rank(s)"));
+        }
+
+        // assemble ∇F
+        let t0 = Instant::now();
+        let mut grad = vec![0.0; layout.len()];
+        let mut goff = 0;
+        for (v, (dz_direct, dhyp_direct, dlog_beta)) in direct.iter().enumerate() {
+            let o = v * view_len;
+            let dz_part = &greduced[goff..goff + m * q];
+            goff += m * q;
+            let dhyp_part = &greduced[goff..goff + q + 1];
+            goff += q + 1;
+            for i in 0..q + 1 {
+                grad[o + i] = dhyp_direct[i] + dhyp_part[i];
+            }
+            grad[o + q + 1] = *dlog_beta;
+            for i in 0..m * q {
+                grad[o + q + 2 + i] = dz_direct.as_slice()[i] + dz_part[i];
+            }
+        }
+        if variational {
+            let locals = locals.expect("root");
+            let base_mu = views * view_len;
+            let base_ls = base_mu + n * q;
+            for (r, piece) in locals.iter().enumerate() {
+                if let Some(sp) = self.spans[r] {
+                    let len = (sp.end - sp.start) * q;
+                    debug_assert_eq!(piece.len(), 2 * len);
+                    grad[base_mu + sp.start * q..base_mu + sp.end * q]
+                        .copy_from_slice(&piece[..len]);
+                    grad[base_ls + sp.start * q..base_ls + sp.end * q]
+                        .copy_from_slice(&piece[len..2 * len]);
+                }
+            }
+        }
+        self.timer.add(Phase::GatherGrads, t0.elapsed());
+        self.timer.note_eval();
+
+        Ok((f_total, grad))
+    }
+
+    /// Leader: stop the workers and collect every rank's distributable
+    /// compute-seconds (indexed by rank).
+    pub fn finish(&mut self) -> Vec<f64> {
+        self.comm.bcast(0, vec![CMD_STOP]);
+        self.comm
+            .gather(0, &[self.compute])
+            .expect("root")
+            .into_iter()
+            .map(|v| v.first().copied().unwrap_or(0.0))
+            .collect()
+    }
+
+    // -----------------------------------------------------------------
+    // worker side
+    // -----------------------------------------------------------------
+
+    /// Worker loop: obey broadcast commands until STOP. A compute failure
+    /// is reported to the leader through the fail-count elements while
+    /// the rank keeps the collectives in lockstep; the first such error
+    /// is returned once the leader shuts the cluster down.
+    pub fn serve(&mut self) -> Result<()> {
+        let layout = &self.layout;
+        let (m, q) = (layout.m, layout.q);
+        let c = self.chunk;
+        let variational = layout.variational;
+        let rank = self.comm.rank();
+        let mut sticky_err: Option<anyhow::Error> = None;
+
+        loop {
+            let cmd = self.comm.bcast(0, Vec::new());
+            if cmd.is_empty() || cmd[0] == CMD_STOP {
+                let _ = self.comm.gather(0, &[self.compute]);
+                return match sticky_err {
+                    Some(e) => Err(anyhow!("rank {rank}: {e:#}")),
+                    None => Ok(()),
+                };
+            }
+            let gx = self.comm.bcast(0, Vec::new());
+            let globals = unpack_globals(layout, &pad_globals(layout, &gx));
+
+            let (mu_span, s_span): (Vec<f64>, Vec<f64>) = if variational {
+                if let Some(sp) = self.state.span {
+                    let msg = self.comm.recv(0, TAG_LOCALS);
+                    let len = (sp.end - sp.start) * q;
+                    (msg[..len].to_vec(), msg[len..].to_vec())
+                } else {
+                    (Vec::new(), Vec::new())
+                }
+            } else {
+                (Vec::new(), Vec::new())
+            };
+
+            // fwd + reduce (with fail flag)
+            let c0 = self.clock();
+            let fwd = self.state.local_fwd(&globals, &mu_span, &s_span, c, m, &self.ds);
+            self.compute += self.clock() - c0;
+            let swire_len = stats_wire_len(m, &self.ds);
+            let wire = pack_with_flag(fwd.as_ref().ok().map(|stats| pack_stats(stats)),
+                                      swire_len);
+            let _ = self.comm.reduce_sum(0, &wire);
+            if let Err(e) = &fwd {
+                if sticky_err.is_none() {
+                    sticky_err = Some(anyhow!("{e:#}"));
+                }
+            }
+
+            // cts (empty = leader aborted the cycle)
+            let cwire = self.comm.bcast(0, Vec::new());
+            if cwire.is_empty() {
+                continue;
+            }
+            let mut all_cts = Vec::with_capacity(self.ds.len());
+            let mut off = 0;
+            for &d in &self.ds {
+                let len = 3 + m * d + m * m;
+                all_cts.push(StatsCts::unpack(m, d, &cwire[off..off + len]));
+                off += len;
+            }
+
+            // vjp + reduce + gather (fail flag on the reduce)
+            let vjp = if fwd.is_ok() {
+                let c0 = self.clock();
+                let out = self.state.local_vjp(&globals, &all_cts, &mu_span, &s_span, c, m);
+                self.compute += self.clock() - c0;
+                out
+            } else {
+                Err(anyhow!("stats_fwd already failed on this rank"))
+            };
+
+            let span_len = self.state.span.map(|s| s.len()).unwrap_or(0) * q;
+            let (view_grads, dmu_span, dls_span, failed) = match vjp {
+                Ok((vg, dmu, dls)) => (vg, dmu, dls, false),
+                Err(e) => {
+                    if sticky_err.is_none() {
+                        sticky_err = Some(e);
+                    }
+                    (Vec::new(), vec![0.0; span_len], vec![0.0; span_len], true)
+                }
+            };
+            let gwire_len = grads_wire_len(m, q, self.ds.len());
+            let gwire = pack_with_flag((!failed).then(|| pack_grads(&view_grads)),
+                                       gwire_len);
+            let _ = self.comm.reduce_sum(0, &gwire);
+
+            if variational {
+                let mut mine = Vec::with_capacity(dmu_span.len() * 2);
+                mine.extend_from_slice(&dmu_span);
+                mine.extend_from_slice(&dls_span);
+                let _ = self.comm.gather(0, &mine);
+            } else {
+                let _ = self.comm.gather(0, &[]);
+            }
+        }
+    }
+}
+
+/// Monotonic wall clock as seconds-since-first-use (for intra-rank
+/// parallel backends, whose work the per-thread CPU clock cannot see).
+fn thread_wall_time() -> f64 {
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
+}

@@ -1,0 +1,309 @@
+//! Problem statement + parameter-vector layout.
+//!
+//! Everything the optimiser sees is one flat `Vec<f64>`:
+//!
+//!   [ view 0: log_hyp (Q+1) | log β | Z (M·Q) ] … [ view V−1: … ]
+//!   [ μ (N·Q) | log S (N·Q) ]          (variational problems only)
+//!
+//! [`ParamLayout`] is the single source of truth for those offsets; the
+//! cycle and the trainer never hand-compute them.
+
+use crate::kern::RbfArd;
+use crate::linalg::Mat;
+use anyhow::{anyhow, Result};
+
+/// One observed view: outputs plus per-view kernel/noise/inducing state.
+#[derive(Clone, Debug)]
+pub struct ViewSpec {
+    /// N × D_v observations.
+    pub y: Mat,
+    /// Initial inducing inputs, M × Q.
+    pub z0: Mat,
+    /// Initial kernel hyperparameters.
+    pub kern0: RbfArd,
+    /// Initial noise precision β.
+    pub beta0: f64,
+    /// AOT config name for the XLA backend (e.g. "paper").
+    pub aot_config: String,
+}
+
+/// The latent-input specification shared by all views.
+#[derive(Clone, Debug)]
+pub enum LatentSpec {
+    /// Supervised: X observed (N × Q).
+    Observed(Mat),
+    /// Unsupervised: variational q(x_n) = N(μ_n, diag S_n).
+    Variational { mu0: Mat, s0: Mat },
+}
+
+impl LatentSpec {
+    pub fn is_variational(&self) -> bool {
+        matches!(self, LatentSpec::Variational { .. })
+    }
+}
+
+/// A complete inference problem.
+#[derive(Clone, Debug)]
+pub struct Problem {
+    pub latent: LatentSpec,
+    pub views: Vec<ViewSpec>,
+    pub q: usize,
+}
+
+impl Problem {
+    pub fn n(&self) -> usize {
+        self.views[0].y.rows()
+    }
+
+    pub(crate) fn validate(&self) -> Result<()> {
+        let n = self.n();
+        for (v, view) in self.views.iter().enumerate() {
+            if view.y.rows() != n {
+                return Err(anyhow!("view {v}: {} rows, expected {n}", view.y.rows()));
+            }
+            if view.z0.cols() != self.q || view.kern0.q() != self.q {
+                return Err(anyhow!("view {v}: Q mismatch"));
+            }
+        }
+        match &self.latent {
+            LatentSpec::Observed(x) => {
+                if x.rows() != n || x.cols() != self.q {
+                    return Err(anyhow!("X shape mismatch"));
+                }
+            }
+            LatentSpec::Variational { mu0, s0 } => {
+                if mu0.rows() != n || mu0.cols() != self.q
+                    || s0.rows() != n || s0.cols() != self.q {
+                    return Err(anyhow!("mu0/s0 shape mismatch"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Fitted parameters after training.
+#[derive(Clone, Debug)]
+pub struct Fitted {
+    pub kerns: Vec<RbfArd>,
+    pub betas: Vec<f64>,
+    pub zs: Vec<Mat>,
+    /// Posterior means (variational) or the observed X (supervised).
+    pub mu: Mat,
+    /// Posterior variances (variational) — empty for supervised.
+    pub s: Mat,
+}
+
+// ---------------------------------------------------------------------
+// parameter packing
+// ---------------------------------------------------------------------
+
+/// Offsets into the optimiser's flat parameter vector.
+pub(crate) struct ParamLayout {
+    pub q: usize,
+    pub m: usize,
+    pub views: usize,
+    pub n: usize,
+    pub variational: bool,
+}
+
+impl ParamLayout {
+    pub fn new(problem: &Problem) -> ParamLayout {
+        ParamLayout {
+            q: problem.q,
+            m: problem.views[0].z0.rows(),
+            views: problem.views.len(),
+            n: problem.n(),
+            variational: problem.latent.is_variational(),
+        }
+    }
+
+    pub fn view_len(&self) -> usize {
+        (self.q + 1) + 1 + self.m * self.q
+    }
+
+    pub fn len(&self) -> usize {
+        self.views * self.view_len()
+            + if self.variational { 2 * self.n * self.q } else { 0 }
+    }
+
+    /// Length of the global (per-view) prefix broadcast to workers.
+    pub fn global_len(&self) -> usize {
+        self.views * self.view_len()
+    }
+
+    /// (log_hyp, log_beta, z) slices of view v.
+    pub fn view_parts<'a>(&self, x: &'a [f64], v: usize) -> (&'a [f64], f64, &'a [f64]) {
+        let o = v * self.view_len();
+        let h = &x[o..o + self.q + 1];
+        let b = x[o + self.q + 1];
+        let z = &x[o + self.q + 2..o + self.view_len()];
+        (h, b, z)
+    }
+
+    pub fn mu_slice<'a>(&self, x: &'a [f64]) -> &'a [f64] {
+        let o = self.views * self.view_len();
+        &x[o..o + self.n * self.q]
+    }
+
+    pub fn log_s_slice<'a>(&self, x: &'a [f64]) -> &'a [f64] {
+        let o = self.views * self.view_len() + self.n * self.q;
+        &x[o..o + self.n * self.q]
+    }
+
+    /// Pack a problem's initial state into the optimiser vector.
+    pub fn initial_params(&self, problem: &Problem) -> Vec<f64> {
+        let mut x = Vec::with_capacity(self.len());
+        for view in &problem.views {
+            x.extend(view.kern0.to_log_hyp());
+            x.push(view.beta0.ln());
+            x.extend_from_slice(view.z0.as_slice());
+        }
+        if let LatentSpec::Variational { mu0, s0 } = &problem.latent {
+            x.extend_from_slice(mu0.as_slice());
+            x.extend(s0.as_slice().iter().map(|s| s.ln()));
+        }
+        x
+    }
+
+    /// Unpack the optimised vector into user-facing fitted parameters.
+    pub fn unpack_fitted(&self, problem: &Problem, x: &[f64]) -> Fitted {
+        let globals = unpack_globals(self, x);
+        Fitted {
+            kerns: globals.views.iter().map(|v| RbfArd::from_log_hyp(&v.log_hyp)).collect(),
+            betas: globals.views.iter().map(|v| v.log_beta.exp()).collect(),
+            zs: globals.views.iter().map(|v| v.z.clone()).collect(),
+            mu: if self.variational {
+                Mat::from_vec(self.n, self.q, self.mu_slice(x).to_vec())
+            } else {
+                match &problem.latent {
+                    LatentSpec::Observed(xobs) => xobs.clone(),
+                    _ => unreachable!(),
+                }
+            },
+            s: if self.variational {
+                Mat::from_vec(self.n, self.q,
+                              self.log_s_slice(x).iter().map(|v| v.exp()).collect())
+            } else {
+                Mat::zeros(0, 0)
+            },
+        }
+    }
+}
+
+/// Per-view globals as unpacked on every rank each evaluation.
+pub(crate) struct GlobalView {
+    pub log_hyp: Vec<f64>,
+    pub log_beta: f64,
+    pub z: Mat,
+}
+
+pub(crate) struct GlobalParams {
+    pub views: Vec<GlobalView>,
+}
+
+pub(crate) fn unpack_globals(layout: &ParamLayout, x: &[f64]) -> GlobalParams {
+    let views = (0..layout.views)
+        .map(|v| {
+            let (h, b, z) = layout.view_parts(x, v);
+            GlobalView {
+                log_hyp: h.to_vec(),
+                log_beta: b,
+                z: Mat::from_vec(layout.m, layout.q, z.to_vec()),
+            }
+        })
+        .collect();
+    GlobalParams { views }
+}
+
+/// The leader broadcasts only the global prefix of the parameter vector;
+/// workers never need μ/logS in packed form, so pad with zeros to reuse
+/// `unpack_globals`.
+pub(crate) fn pad_globals(layout: &ParamLayout, gx: &[f64]) -> Vec<f64> {
+    let mut x = vec![0.0; layout.len()];
+    x[..gx.len()].copy_from_slice(gx);
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_problem(variational: bool) -> Problem {
+        let (n, q, m, d) = (6, 2, 3, 2);
+        let y = Mat::from_fn(n, d, |i, j| (i * d + j) as f64 * 0.1);
+        let latent = if variational {
+            LatentSpec::Variational {
+                mu0: Mat::from_fn(n, q, |i, j| (i + j) as f64 * 0.2),
+                s0: Mat::from_vec(n, q, vec![0.5; n * q]),
+            }
+        } else {
+            LatentSpec::Observed(Mat::from_fn(n, q, |i, j| (i + 2 * j) as f64 * 0.3))
+        };
+        Problem {
+            latent,
+            views: vec![ViewSpec {
+                y,
+                z0: Mat::from_fn(m, q, |i, j| (i as f64) - (j as f64)),
+                kern0: RbfArd::iso(1.5, 0.7, q),
+                beta0: 4.0,
+                aot_config: "test".into(),
+            }],
+            q,
+        }
+    }
+
+    #[test]
+    fn layout_roundtrips_initial_params() {
+        for variational in [false, true] {
+            let p = toy_problem(variational);
+            p.validate().unwrap();
+            let layout = ParamLayout::new(&p);
+            let x = layout.initial_params(&p);
+            assert_eq!(x.len(), layout.len());
+
+            let globals = unpack_globals(&layout, &x);
+            assert_eq!(globals.views.len(), 1);
+            assert!((globals.views[0].log_beta - 4.0f64.ln()).abs() < 1e-15);
+            assert!(globals.views[0].z.max_abs_diff(&p.views[0].z0) == 0.0);
+
+            let fitted = layout.unpack_fitted(&p, &x);
+            assert!((fitted.betas[0] - 4.0).abs() < 1e-12);
+            assert!((fitted.kerns[0].variance - 1.5).abs() < 1e-12);
+            if variational {
+                if let LatentSpec::Variational { mu0, s0 } = &p.latent {
+                    assert!(fitted.mu.max_abs_diff(mu0) == 0.0);
+                    assert!(fitted.s.max_abs_diff(s0) < 1e-12);
+                }
+            } else {
+                assert_eq!(fitted.s.rows(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn validation_rejects_shape_mismatches() {
+        let mut p = toy_problem(true);
+        p.q = 3; // views were built for q = 2
+        assert!(p.validate().is_err());
+
+        let mut p = toy_problem(false);
+        if let LatentSpec::Observed(x) = &mut p.latent {
+            *x = Mat::zeros(2, 2); // wrong N
+        }
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn global_prefix_padding_reconstructs_views() {
+        let p = toy_problem(true);
+        let layout = ParamLayout::new(&p);
+        let x = layout.initial_params(&p);
+        let gx = &x[..layout.global_len()];
+        let padded = pad_globals(&layout, gx);
+        let a = unpack_globals(&layout, &x);
+        let b = unpack_globals(&layout, &padded);
+        assert!(a.views[0].z.max_abs_diff(&b.views[0].z) == 0.0);
+        assert_eq!(a.views[0].log_hyp, b.views[0].log_hyp);
+    }
+}

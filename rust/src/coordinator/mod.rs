@@ -1,16 +1,22 @@
 //! Layer-3 coordinator: the paper's distributed-inference scheme.
 //!
 //! - `partition` — datapoints -> fixed-shape chunks -> workers
-//! - `backend`   — who computes a chunk's statistics (Rust loops vs the
-//!   AOT XLA artifact; the paper's CPU-core vs GPU-card axis)
-//! - `engine`    — the SPMD leader/worker training loop with per-phase
-//!   timing (distributable vs indistributable, feeding Fig 1b)
+//! - `backend`   — who computes a chunk's statistics, behind the
+//!   [`backend::make_backends`] factory: scalar Rust loops, the
+//!   multicore `parallel-cpu` fan-out, or the AOT XLA artifact (the
+//!   paper's CPU-core vs multicore-node vs GPU-card axis)
+//! - `engine`    — the execution layer: `engine::problem` (model
+//!   statement + parameter layout), `engine::cycle` (the SPMD
+//!   leader/worker evaluation cycle as a reusable
+//!   [`DistributedEvaluator`]), `engine::train` (optimiser loop), with
+//!   per-phase timing (distributable vs indistributable, feeding Fig 1b)
 
 pub mod backend;
 pub mod engine;
 pub mod partition;
 
-pub use backend::{Backend, ChunkData, RustCpuBackend, ViewParams, XlaBackend};
-pub use engine::{Engine, EngineConfig, Fitted, LatentSpec, OptChoice, Problem,
-                 TrainResult, ViewSpec};
+pub use backend::{make_backends, Backend, ChunkData, ChunkTask, ParallelCpuBackend,
+                  RustCpuBackend, ViewParams, XlaBackend};
+pub use engine::{DistributedEvaluator, Engine, EngineConfig, Fitted, LatentSpec, OptChoice,
+                 Problem, TrainResult, ViewSpec};
 pub use partition::{ChunkRange, Partition};

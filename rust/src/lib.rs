@@ -9,16 +9,43 @@
 //!   statistics — the paper's GPU bottleneck.
 //! - **Layer 2** (`python/compile/model.py`): the variational objective in
 //!   JAX, AOT-lowered to HLO-text artifacts.
-//! - **Layer 3** (this crate): the distributed coordinator — data
-//!   partitioning, simulated-MPI collectives, the leader's M×M core, the
-//!   central optimiser — plus every substrate (linear algebra, kernels
-//!   with analytic gradients, optimisers, data generation, JSON, CLI).
+//! - **Layer 3** (this crate): the distributed execution stack.
+//!
+//! ## Layer map (this crate)
+//!
+//! | module | role |
+//! |---|---|
+//! | [`collectives`] | simulated-MPI transport: point-to-point + `bcast`/`reduce_sum`/`gather`, binomial-tree collectives by default (O(log P) critical path), linear reference retained |
+//! | [`coordinator::partition`] | datapoints → fixed-shape chunks → contiguous per-rank runs |
+//! | [`coordinator::backend`] | pluggable chunk compute behind a `BackendKind` factory: `rust-cpu` (scalar), `parallel-cpu` (intra-rank chunk fan-out over scoped threads, bit-identical), `xla` (PJRT, feature-gated) |
+//! | [`coordinator::engine`] | the execution layer: `problem` (model statement + parameter layout), `cycle` (the eight-step SPMD evaluation cycle as a reusable `DistributedEvaluator`), `train` (optimiser loop + stopping), re-exported behind a thin facade |
+//! | [`math`] | worker statistics + the leader's indistributable M×M core |
+//! | [`kern`] | RBF-ARD kernel, psi statistics and analytic VJPs |
+//! | [`linalg`] | dense row-major matrices: Cholesky toolkit, cache-blocked `matmul`, symmetric rank-k (`syrk`) updates |
+//! | [`optim`] | L-BFGS / SCG / Adam — the central optimiser at rank 0 |
+//! | [`models`] | user-facing SGPR / Bayesian GP-LVM / MRD on top of the engine |
+//! | [`runtime`] | AOT artifact loading + PJRT execution (behind the off-by-default `xla` feature; pure-Rust stub otherwise) |
+//! | [`baselines`], [`data`], [`config`], [`metrics`], [`cli`], [`testutil`] | dense-GP baseline, datasets/RNG, JSON + run config, phase timing, CLI parsing, property/FD test harnesses |
 //!
 //! Entry points: [`models::SparseGpRegression`], [`models::BayesianGplvm`],
 //! [`models::Mrd`], and the lower-level [`coordinator::Engine`].
 //!
+//! The default build is pure Rust with no external dependencies (the
+//! `anyhow` shim is vendored in-tree). The `xla` feature swaps the
+//! runtime stub for the real PJRT path, but additionally requires adding
+//! the external `xla` crate as a dependency — see the feature notes in
+//! `rust/Cargo.toml`.
+//!
 //! See DESIGN.md for the paper↔module map and EXPERIMENTS.md for the
 //! reproduced figures.
+
+// Numeric-kernel house style: explicit index loops mirror the paper's
+// formulas (and the Python reference implementation) more faithfully than
+// iterator chains, so these pedantry lints stay off crate-wide.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::many_single_char_names)]
+#![allow(clippy::type_complexity)]
 
 pub mod baselines;
 pub mod cli;

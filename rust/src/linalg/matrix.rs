@@ -8,6 +8,10 @@
 use std::fmt;
 use std::ops::{Index, IndexMut};
 
+/// Tile edge for the cache-blocked matmul: 64×64 f64 tiles are 32 KiB —
+/// one operand tile per L1 slice, three per typical L2 way-set.
+const MM_BLOCK: usize = 64;
+
 /// Dense row-major matrix of `f64`.
 #[derive(Clone, PartialEq)]
 pub struct Mat {
@@ -79,8 +83,21 @@ impl Mat {
         out
     }
 
-    /// `self * other` (naive triple loop with row-major-friendly order).
+    /// `self * other`. Dispatches to the cache-blocked kernel once the
+    /// problem outgrows the last-level-friendly sizes; both kernels
+    /// accumulate each output element in ascending-k order, so the
+    /// results are bit-identical and the dispatch is invisible.
     pub fn matmul(&self, other: &Mat) -> Mat {
+        if self.rows >= MM_BLOCK && self.cols >= MM_BLOCK && other.cols >= MM_BLOCK {
+            self.matmul_blocked(other)
+        } else {
+            self.matmul_naive(other)
+        }
+    }
+
+    /// `self * other` — naive triple loop with row-major-friendly order
+    /// (the reference the blocked kernel is property-tested against).
+    pub fn matmul_naive(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul {}x{} * {}x{}",
                    self.rows, self.cols, other.rows, other.cols);
         let mut out = Mat::zeros(self.rows, other.cols);
@@ -92,6 +109,39 @@ impl Mat {
                 let out_row = out.row_mut(i);
                 for j in 0..other.cols {
                     out_row[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self * other`, cache-blocked: the k-blocks are the outer loop so
+    /// each `MM_BLOCK × MM_BLOCK` tile of `other` stays L1/L2-resident
+    /// while a block of output rows sweeps it. Per output element the
+    /// accumulation order is still ascending k, so the result is
+    /// bit-identical to [`Mat::matmul_naive`].
+    pub fn matmul_blocked(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul {}x{} * {}x{}",
+                   self.rows, self.cols, other.rows, other.cols);
+        let (n, kk, m) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(n, m);
+        for kb in (0..kk).step_by(MM_BLOCK) {
+            let ke = (kb + MM_BLOCK).min(kk);
+            for ib in (0..n).step_by(MM_BLOCK) {
+                let ie = (ib + MM_BLOCK).min(n);
+                for jb in (0..m).step_by(MM_BLOCK) {
+                    let je = (jb + MM_BLOCK).min(m);
+                    for i in ib..ie {
+                        for k in kb..ke {
+                            let a = self.data[i * kk + k];
+                            if a == 0.0 { continue; }
+                            let orow = &other.data[k * m + jb..k * m + je];
+                            let out_row = &mut out.data[i * m + jb..i * m + je];
+                            for (o, &b) in out_row.iter_mut().zip(orow) {
+                                *o += a * b;
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -112,6 +162,57 @@ impl Mat {
                 for j in 0..other.cols {
                     out_row[j] += a * orow[j];
                 }
+            }
+        }
+        out
+    }
+
+    /// Symmetric rank-k update `self * selfᵀ` (n×n from n×k): computes
+    /// only the lower triangle and mirrors — half the flops of
+    /// `matmul_t(self)`, bit-identical on the computed entries (same
+    /// row-dot, ascending k). This is the Ψ2-shaped product at the heart
+    /// of the leader's M×M core (`A⁻¹P (A⁻¹P)ᵀ`).
+    pub fn syrk(&self) -> Mat {
+        let n = self.rows;
+        let mut out = Mat::zeros(n, n);
+        for i in 0..n {
+            let ri = self.row(i);
+            for j in 0..=i {
+                let rj = self.row(j);
+                let mut acc = 0.0;
+                for k in 0..self.cols {
+                    acc += ri[k] * rj[k];
+                }
+                out[(i, j)] = acc;
+                out[(j, i)] = acc;
+            }
+        }
+        out
+    }
+
+    /// Weighted Gram update `selfᵀ · diag(w) · self` (k×k from n×k):
+    /// a row-wise symmetric rank-1 accumulation (upper triangle, then
+    /// mirrored) — the syrk-style form of the SGPR Ψ2 statistic
+    /// `Σ_n w_n k_n k_nᵀ`. Rows with `w == 0` are skipped entirely.
+    pub fn syrk_t_weighted(&self, w: &[f64]) -> Mat {
+        assert_eq!(w.len(), self.rows);
+        let k = self.cols;
+        let mut out = Mat::zeros(k, k);
+        for row in 0..self.rows {
+            if w[row] == 0.0 { continue; }
+            let r = self.row(row);
+            for i in 0..k {
+                let a = w[row] * r[i];
+                if a == 0.0 { continue; }
+                let out_row = out.row_mut(i);
+                for (j, &rv) in r.iter().enumerate().skip(i) {
+                    out_row[j] += a * rv;
+                }
+            }
+        }
+        for i in 0..k {
+            for j in 0..i {
+                out[(i, j)] = out[(j, i)];
             }
         }
         out
@@ -292,5 +393,69 @@ mod tests {
         let a = Mat::zeros(2, 3);
         let b = Mat::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn prop_blocked_matmul_bit_identical_to_naive() {
+        // Sizes straddle the 64-wide tile edge (including ragged tails and
+        // degenerate dims); ascending-k accumulation makes the two kernels
+        // agree exactly, not just within tolerance.
+        use crate::testutil::prop::Prop;
+        Prop::new("matmul_blocked_vs_naive").cases(12).run(|rng| {
+            let n = 1 + (rng.next_u64() % 150) as usize;
+            let k = 1 + (rng.next_u64() % 150) as usize;
+            let m = 1 + (rng.next_u64() % 150) as usize;
+            let a = Mat::from_fn(n, k, |_, _| rng.normal());
+            let b = Mat::from_fn(k, m, |_, _| rng.normal());
+            let diff = a.matmul_naive(&b).max_abs_diff(&a.matmul_blocked(&b));
+            assert!(diff == 0.0, "{n}x{k}x{m}: diff {diff}");
+        });
+    }
+
+    #[test]
+    fn matmul_dispatch_is_invisible() {
+        // Above the dispatch threshold matmul() takes the blocked path;
+        // verify against the naive reference on a 130³ product.
+        let mut rng = crate::testutil::prop::Rng64::new(91);
+        let a = Mat::from_fn(130, 130, |_, _| rng.normal());
+        let b = Mat::from_fn(130, 130, |_, _| rng.normal());
+        assert!(a.matmul(&b).max_abs_diff(&a.matmul_naive(&b)) == 0.0);
+    }
+
+    #[test]
+    fn prop_syrk_matches_matmul_t() {
+        use crate::testutil::prop::Prop;
+        Prop::new("syrk_vs_matmul_t").cases(15).run(|rng| {
+            let n = 1 + (rng.next_u64() % 40) as usize;
+            let k = 1 + (rng.next_u64() % 20) as usize;
+            let a = Mat::from_fn(n, k, |_, _| rng.normal());
+            let s = a.syrk();
+            assert!(s.max_abs_diff(&a.matmul_t(&a)) < 1e-12);
+            assert!(s.max_abs_diff(&s.t()) == 0.0, "syrk must be exactly symmetric");
+        });
+    }
+
+    #[test]
+    fn prop_syrk_t_weighted_matches_dense_reference() {
+        use crate::testutil::prop::Prop;
+        Prop::new("syrk_t_weighted").cases(15).run(|rng| {
+            let n = 1 + (rng.next_u64() % 30) as usize;
+            let k = 1 + (rng.next_u64() % 12) as usize;
+            let a = Mat::from_fn(n, k, |_, _| rng.normal());
+            let w: Vec<f64> = (0..n)
+                .map(|_| if rng.uniform() < 0.75 { rng.uniform_range(0.1, 2.0) } else { 0.0 })
+                .collect();
+            // reference: (diag(w)·A)ᵀ · A
+            let mut wa = a.clone();
+            for i in 0..n {
+                for j in 0..k {
+                    wa[(i, j)] *= w[i];
+                }
+            }
+            let want = wa.t_matmul(&a);
+            let got = a.syrk_t_weighted(&w);
+            assert!(got.max_abs_diff(&want) < 1e-12, "{n}x{k}");
+            assert!(got.max_abs_diff(&got.t()) == 0.0);
+        });
     }
 }

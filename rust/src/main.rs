@@ -26,7 +26,7 @@ const KNOWN: &[&str] = &["n", "q", "d", "m", "workers", "chunk", "backend",
 
 fn engine_config(a: &Args) -> Result<(EngineConfig, String)> {
     let backend = BackendKind::parse(a.get("backend").unwrap_or("cpu"))
-        .ok_or_else(|| anyhow::anyhow!("--backend must be cpu|xla"))?;
+        .ok_or_else(|| anyhow::anyhow!("--backend must be cpu|parallel[:N]|xla"))?;
     let aot = a.get("aot-config").unwrap_or("paper").to_string();
     let cfg = EngineConfig {
         workers: a.get_parse("workers", 1usize)?,
@@ -123,7 +123,7 @@ fn main() -> Result<()> {
         }
         _ => {
             println!("usage: gpparallel <train-bgplvm|train-sgpr|time|info> [options]");
-            println!("options: --n --q --d --m --workers --chunk --backend cpu|xla");
+            println!("options: --n --q --d --m --workers --chunk --backend cpu|parallel[:N]|xla");
             println!("         --iters --evals --seed --artifacts --aot-config --verbose");
             if cmd != "help" {
                 bail!("unknown command {cmd:?}");

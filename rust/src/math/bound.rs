@@ -64,7 +64,7 @@ pub fn bound_and_grads(stats: &Stats, z: &Mat, kern: &RbfArd, log_beta: f64)
 
     // dF/dA = −D/2 A⁻¹ − β²/2 (A⁻¹P)(A⁻¹P)ᵀ
     let mut df_da = ainv.scale(-0.5 * d_f);
-    let app = ainv_p.matmul_t(&ainv_p); // A⁻¹ P Pᵀ A⁻¹
+    let app = ainv_p.syrk(); // A⁻¹ P Pᵀ A⁻¹ — symmetric rank-k, half the flops
     df_da.axpy(-0.5 * beta * beta, &app);
 
     // cotangents for the workers

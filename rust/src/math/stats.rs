@@ -149,12 +149,42 @@ pub fn bgplvm_stats_fwd(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &Mat,
     Stats { psi0, p, psi2, tryy, kl, n_eff }
 }
 
-/// Supervised chunk statistics: S ≡ 0, no KL.
+/// Supervised chunk statistics: S ≡ 0, no KL. At S = 0 the psi
+/// statistics collapse to the exact kernel — Ψ1 = K_fu and
+/// Ψ2 = K_ufᵀ diag(w) K_fu — so the forward pass uses one kernel
+/// cross-covariance plus a syrk-style weighted Gram update instead of the
+/// general exp-pair loop (O(C·M²) mults vs O(C·M²·Q) exps).
 pub fn sgpr_stats_fwd(kern: &RbfArd, x: &Mat, w: &[f64], y: &Mat, z: &Mat) -> Stats {
-    let s0 = Mat::zeros(x.rows(), x.cols());
-    let mut st = bgplvm_stats_fwd(kern, x, &s0, w, y, z);
-    st.kl = 0.0; // log S is −∞ at S=0; supervised bound has no KL term
-    st
+    let d = y.cols();
+    let c = x.rows();
+    let kfu = kern.k(x, z);
+
+    // P = K_ufᵀ (w ∘ Y)
+    let mut wy = Mat::zeros(c, d);
+    for n in 0..c {
+        if w[n] == 0.0 {
+            continue;
+        }
+        for (dst, &src) in wy.row_mut(n).iter_mut().zip(y.row(n)) {
+            *dst = w[n] * src;
+        }
+    }
+    let p = kfu.t_matmul(&wy);
+
+    let psi2 = kfu.syrk_t_weighted(w);
+    let psi0 = kern.psi0(w);
+
+    let mut tryy = 0.0;
+    let mut n_eff = 0.0;
+    for n in 0..c {
+        if w[n] == 0.0 {
+            continue;
+        }
+        n_eff += w[n];
+        tryy += w[n] * y.row(n).iter().map(|v| v * v).sum::<f64>();
+    }
+    // kl = 0: log S is −∞ at S=0; supervised bound has no KL term
+    Stats { psi0, p, psi2, tryy, kl: 0.0, n_eff }
 }
 
 // ---------------------------------------------------------------------
@@ -323,6 +353,24 @@ mod tests {
             }
         }
         assert!(st.p.max_abs_diff(&p_want) < 1e-12);
+    }
+
+    #[test]
+    fn prop_sgpr_fast_path_matches_general_psi_path() {
+        // The syrk-based supervised forward must agree with the general
+        // psi-statistics evaluated at S = 0.
+        Prop::new("sgpr_fast_path").cases(10).run(|rng| {
+            let (kern, x, _, w, y, z) = setup(rng, 11, 4, 2, 3);
+            let fast = sgpr_stats_fwd(&kern, &x, &w, &y, &z);
+            let s0 = Mat::zeros(x.rows(), x.cols());
+            let mut gen = bgplvm_stats_fwd(&kern, &x, &s0, &w, &y, &z);
+            gen.kl = 0.0;
+            assert!((fast.psi0 - gen.psi0).abs() < 1e-12);
+            assert!((fast.tryy - gen.tryy).abs() < 1e-11);
+            assert!((fast.n_eff - gen.n_eff).abs() == 0.0);
+            assert!(fast.p.max_abs_diff(&gen.p) < 1e-12);
+            assert!(fast.psi2.max_abs_diff(&gen.psi2) < 1e-12);
+        });
     }
 
     #[test]

@@ -13,11 +13,44 @@ use std::time::{Duration, Instant};
 /// other ranks ran; thread CPU time is what the rank actually burned and
 /// is the quantity that divides with the worker count (the basis of
 /// `TrainResult::projected_sec_per_eval`).
+///
+/// Calls `clock_gettime` directly (declared here rather than through the
+/// `libc` crate: this is the crate's only FFI and the build is
+/// dependency-free by policy). The hand-declared `Timespec` matches the
+/// 64-bit glibc layout, so the FFI path is gated to 64-bit Linux; other
+/// targets take the portable wall-clock fallback below.
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
 pub fn thread_cpu_time() -> f64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+    extern "C" {
+        fn clock_gettime(clockid: i32, tp: *mut Timespec) -> i32;
+    }
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+    let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
     debug_assert_eq!(rc, 0);
     ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Fallback for hosts without the FFI path: per-thread wall-clock since
+/// first use. Coarser than CPU time (it includes time-sharing slices) but
+/// keeps the phase accounting monotone and the crate portable.
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+pub fn thread_cpu_time() -> f64 {
+    use std::cell::Cell;
+    thread_local! {
+        static START: Cell<Option<Instant>> = const { Cell::new(None) };
+    }
+    START.with(|s| {
+        if s.get().is_none() {
+            s.set(Some(Instant::now()));
+        }
+        s.get().unwrap().elapsed().as_secs_f64()
+    })
 }
 
 /// Named phases of one coordinator iteration.

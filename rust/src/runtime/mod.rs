@@ -2,8 +2,20 @@
 //! `python/compile/aot.py` and executes them through the PJRT C API
 //! (`xla` crate). Python never runs at inference time — the artifacts
 //! are the only hand-off between the layers.
+//!
+//! The PJRT path is gated behind the off-by-default `xla` cargo feature
+//! so the default build is pure Rust with no external native deps. When
+//! the feature is off, `engine` is replaced by a stub with the same API
+//! whose constructors return a descriptive error; everything that merely
+//! *mentions* the runtime (the `XlaBackend` plumbing, the manifest
+//! tooling, `gpparallel info`) still compiles and runs.
 
+#[cfg(feature = "xla")]
 mod engine;
+#[cfg(not(feature = "xla"))]
+#[path = "stub.rs"]
+mod engine;
+
 mod manifest;
 
 pub use engine::{Arg, Executable, Runtime};

@@ -1,0 +1,73 @@
+//! Stub runtime compiled when the `xla` feature is off (the default).
+//!
+//! Mirrors the API of `runtime::engine` exactly — same types, same
+//! signatures — but `Runtime::new` fails with a pointer at the feature
+//! flag instead of creating a PJRT client. This keeps the default build
+//! pure Rust: the coordinator's `XlaBackend` plumbing compiles and
+//! selecting it at runtime produces a clear error. In practice the
+//! artifact-gated tests skip (producing artifacts requires the same
+//! toolchain the feature needs); on a machine that *does* have
+//! `artifacts/manifest.json` but not the feature, they fail loudly with
+//! this stub's message rather than silently passing.
+
+use super::manifest::ModuleSpec;
+use anyhow::{bail, Result};
+use std::path::Path;
+use std::rc::Rc;
+
+const UNAVAILABLE: &str = "built without the `xla` feature: the PJRT runtime is unavailable \
+     (executing AOT artifacts needs a build with the `xla` feature enabled AND the external \
+     `xla` crate added as a dependency — see the feature notes in rust/Cargo.toml)";
+
+/// A borrowed argument for a module call.
+pub enum Arg<'a> {
+    Scalar(f64),
+    /// Row-major data; the shape is validated against the manifest.
+    Buf(&'a [f64]),
+}
+
+/// A compiled, callable module. Never constructed in stub builds.
+pub struct Executable {
+    spec: ModuleSpec,
+}
+
+impl Executable {
+    /// Execute with positional args — always an error in stub builds.
+    pub fn call(&self, _args: &[Arg]) -> Result<Vec<Vec<f64>>> {
+        bail!("{}/{}: {UNAVAILABLE}", self.spec.config, self.spec.module);
+    }
+
+    pub fn spec(&self) -> &ModuleSpec {
+        &self.spec
+    }
+}
+
+/// Stub runtime: creation always fails (there is no device to attach).
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn new(_artifacts_dir: &Path) -> Result<Runtime> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn module(&self, config: &str, module: &str) -> Result<Rc<Executable>> {
+        bail!("{config}/{module}: {UNAVAILABLE}");
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = Runtime::new(Path::new("artifacts")).err().expect("stub must fail");
+        assert!(format!("{err}").contains("xla"), "error should name the feature: {err}");
+    }
+}
