@@ -42,6 +42,7 @@ fn main() -> Result<()> {
         backend,
         artifacts_dir: "artifacts".into(),
         opt: OptChoice::Lbfgs(Lbfgs { max_iters: iters, ..Default::default() }),
+        pipeline: true,
         verbose: false,
     };
     let t0 = std::time::Instant::now();

@@ -47,6 +47,7 @@ fn main() -> Result<()> {
         backend,
         artifacts_dir: "artifacts".into(),
         opt: OptChoice::Lbfgs(Lbfgs { max_iters: iters, ..Default::default() }),
+        pipeline: true,
         verbose: false,
     };
     let model = Mrd::fit(&[y1, y2], 3, 20, &["mrd", "mrd"], cfg, 7)?;

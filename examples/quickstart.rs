@@ -36,6 +36,7 @@ fn main() -> Result<()> {
         backend,
         artifacts_dir: "artifacts".into(),
         opt: OptChoice::Lbfgs(Lbfgs { max_iters: 80, ..Default::default() }),
+        pipeline: true,
         verbose: false,
     };
     let model = SparseGpRegression::fit(&train.x.clone().unwrap(), &train.y, 16,

@@ -36,6 +36,7 @@ fn main() -> Result<()> {
                 backend,
                 artifacts_dir: "artifacts".into(),
                 opt: OptChoice::Lbfgs(Lbfgs::default()),
+                pipeline: true,
                 verbose: false,
             };
             let engine = Engine::new(problem, cfg)?;

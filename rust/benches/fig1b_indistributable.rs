@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
                 backend,
                 artifacts_dir: "artifacts".into(),
                 opt: OptChoice::Lbfgs(Lbfgs::default()),
+                pipeline: true,
                 verbose: false,
             };
             let engine = Engine::new(problem, cfg)?;

@@ -23,7 +23,7 @@ use gpparallel::data::rng::Rng64;
 use gpparallel::data::synthetic::{generate, generate_supervised, SyntheticSpec};
 use gpparallel::kern::RbfArd;
 use gpparallel::linalg::Mat;
-use gpparallel::models::BayesianGplvm;
+use gpparallel::models::{BayesianGplvm, Mrd};
 use gpparallel::optim::{Adam, Lbfgs, Scg};
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -132,6 +132,7 @@ fn main() -> anyhow::Result<()> {
             backend: BackendKind::RustCpu,
             artifacts_dir: "artifacts".into(),
             opt: OptChoice::Lbfgs(Lbfgs::default()),
+            pipeline: true,
             verbose: false,
         };
         let r = Engine::new(problem, cfg)?.time_iterations(1)?;
@@ -169,6 +170,7 @@ fn main() -> anyhow::Result<()> {
             backend: BackendKind::RustCpu,
             artifacts_dir: "artifacts".into(),
             opt: OptChoice::Lbfgs(Lbfgs::default()),
+            pipeline: true,
             verbose: false,
         };
         let t_sparse = Engine::new(problem, cfg)?.time_iterations(1)?.sec_per_eval;
@@ -199,6 +201,7 @@ fn main() -> anyhow::Result<()> {
             backend: BackendKind::RustCpu,
             artifacts_dir: "artifacts".into(),
             opt,
+            pipeline: true,
             verbose: false,
         };
         let r = Engine::new(problem, cfg)?.train()?;
@@ -230,6 +233,47 @@ fn main() -> anyhow::Result<()> {
         rec.push("matmul_blocked", mm, t_blocked);
         rec.push("matmul_t", mm, t_mm_t);
         rec.push("syrk", mm, t_syrk);
+    }
+
+    // ---------------------------------------------------------------
+    // 6. full distributed cycle: pipelined vs synchronous eval
+    //    (ranks × views sweep — the cycle-level perf trajectory)
+    // ---------------------------------------------------------------
+    println!("\n== full cycle: pipelined vs synchronous eval (ranks x views) ==");
+    println!("{:>6} {:>6} {:>6} {:>14} {:>14} {:>8}",
+             "N", "ranks", "views", "sync s/iter", "pipe s/iter", "speedup");
+    let n_cycle = if fast { 512 } else { 2048 };
+    let cycle_evals = if fast { 1 } else { 2 };
+    for views in [1usize, 2] {
+        for workers in [1usize, 2, 4] {
+            let spec = SyntheticSpec { n: n_cycle, q: 1, d: 3, ..Default::default() };
+            let problem = if views == 1 {
+                BayesianGplvm::problem(&generate(&spec, 6).y, 1, 50, "paper", 6)
+            } else {
+                let y1 = generate(&spec, 7).y;
+                let y2 = generate(&spec, 8).y;
+                Mrd::problem(&[y1, y2], 1, 50, &["paper", "paper"], 7)
+            };
+            let mut times = [0.0f64; 2];
+            for (i, pipeline) in [(0usize, false), (1, true)] {
+                let cfg = EngineConfig {
+                    workers,
+                    chunk: 256,
+                    backend: BackendKind::RustCpu,
+                    artifacts_dir: "artifacts".into(),
+                    opt: OptChoice::Lbfgs(Lbfgs::default()),
+                    pipeline,
+                    verbose: false,
+                };
+                let r = Engine::new(problem.clone(), cfg)?.time_iterations(cycle_evals)?;
+                times[i] = r.sec_per_eval;
+                let label = if pipeline { "pipelined" } else { "sync" };
+                rec.push(&format!("cycle_eval_{label}_w{workers}_v{views}"), n_cycle,
+                         r.sec_per_eval);
+            }
+            println!("{:>6} {:>6} {:>6} {:>14.4} {:>14.4} {:>8.2}",
+                     n_cycle, workers, views, times[0], times[1], times[0] / times[1]);
+        }
     }
 
     rec.write("BENCH_micro.json")?;

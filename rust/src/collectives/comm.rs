@@ -170,62 +170,84 @@ impl Comm {
     /// Element-wise sum-reduction to `root`; `Some(total)` on root,
     /// `None` elsewhere. Dispatches on the communicator's [`Topology`].
     pub fn reduce_sum(&mut self, root: usize, data: &[f64]) -> Option<Vec<f64>> {
+        let mut buf = data.to_vec();
+        self.reduce_sum_into(root, &mut buf).then_some(buf)
+    }
+
+    /// Buffer-reusing reduction: accumulates **in place** into `data`
+    /// (the caller's reusable wire buffer), so per-cycle reductions stop
+    /// allocating a fresh accumulator. Returns `true` on `root`, where
+    /// `data` then holds the cluster-wide total; elsewhere returns
+    /// `false` and `data` is left holding the partial this rank shipped
+    /// up the tree (its own contribution plus any absorbed subtree).
+    /// [`reduce_sum`](Comm::reduce_sum) and the topology-pinned variants
+    /// below all delegate here, so there is exactly one copy of each
+    /// accumulation order and the totals are bit-identical
+    /// (property-tested below).
+    pub fn reduce_sum_into(&mut self, root: usize, data: &mut Vec<f64>) -> bool {
         match self.topology {
-            Topology::Linear => self.reduce_sum_linear(root, data),
-            Topology::Tree => self.reduce_sum_tree(root, data),
+            Topology::Linear => self.reduce_into_linear(root, data),
+            Topology::Tree => self.reduce_into_tree(root, data),
         }
     }
 
     /// Linear reduction (reference): root receives P−1 partials in rank
     /// order and accumulates sequentially.
     pub fn reduce_sum_linear(&mut self, root: usize, data: &[f64]) -> Option<Vec<f64>> {
-        if self.rank == root {
-            let mut acc = data.to_vec();
-            for src in 0..self.size {
-                if src == root {
-                    continue;
-                }
-                let part = self.recv(src, TAG_REDUCE);
-                assert_eq!(part.len(), acc.len(), "reduce length mismatch");
-                for (a, b) in acc.iter_mut().zip(&part) {
-                    *a += b;
-                }
-            }
-            Some(acc)
-        } else {
-            self.send(root, TAG_REDUCE, data);
-            None
-        }
+        let mut buf = data.to_vec();
+        self.reduce_into_linear(root, &mut buf).then_some(buf)
     }
 
     /// Binomial-tree reduction (mirror image of `bcast_tree`): in round
     /// `k`, ranks with bit `2^k` set ship their partial sum to the parent
     /// and drop out; the root absorbs ⌈log₂ P⌉ partials instead of P−1.
     pub fn reduce_sum_tree(&mut self, root: usize, data: &[f64]) -> Option<Vec<f64>> {
+        let mut buf = data.to_vec();
+        self.reduce_into_tree(root, &mut buf).then_some(buf)
+    }
+
+    fn reduce_into_linear(&mut self, root: usize, data: &mut Vec<f64>) -> bool {
+        if self.rank == root {
+            for src in 0..self.size {
+                if src == root {
+                    continue;
+                }
+                let part = self.recv(src, TAG_REDUCE);
+                assert_eq!(part.len(), data.len(), "reduce length mismatch");
+                for (a, b) in data.iter_mut().zip(&part) {
+                    *a += b;
+                }
+            }
+            true
+        } else {
+            self.send(root, TAG_REDUCE, data.as_slice());
+            false
+        }
+    }
+
+    fn reduce_into_tree(&mut self, root: usize, data: &mut Vec<f64>) -> bool {
         let size = self.size;
         let vrank = (self.rank + size - root) % size;
         let to_real = |v: usize| (v + root) % size;
-
-        let mut acc = data.to_vec();
         let mut mask = 1usize;
         while mask < size {
             if vrank & mask == 0 {
                 let child = vrank + mask;
                 if child < size {
                     let part = self.recv(to_real(child), TAG_REDUCE);
-                    assert_eq!(part.len(), acc.len(), "reduce length mismatch");
-                    for (a, b) in acc.iter_mut().zip(&part) {
+                    assert_eq!(part.len(), data.len(), "reduce length mismatch");
+                    for (a, b) in data.iter_mut().zip(&part) {
                         *a += b;
                     }
                 }
             } else {
                 let parent = vrank - mask;
-                self.send(to_real(parent), TAG_REDUCE, &acc);
-                return None;
+                self.send(to_real(parent), TAG_REDUCE, data.as_slice());
+                return false;
             }
             mask <<= 1;
         }
-        Some(acc)
+        true
     }
 
     // -----------------------------------------------------------------
@@ -534,6 +556,49 @@ mod tests {
         for r in results {
             assert!((r - expect).abs() < 1e-12, "{r} vs {expect}");
         }
+    }
+
+    /// `reduce_sum_into` must match `reduce_sum` bit-for-bit on the root
+    /// for both topologies and every cluster size 1–9, and leave the
+    /// buffer reusable (no reallocation needed across rounds).
+    #[test]
+    fn prop_reduce_into_matches_reduce() {
+        Prop::new("reduce_into_vs_reduce").cases(6).run(|rng| {
+            let len = 1 + (rng.next_u64() % 16) as usize;
+            for topology in [Topology::Linear, Topology::Tree] {
+                for size in 1..=9usize {
+                    let datasets: Vec<Vec<f64>> = (0..size)
+                        .map(|r| {
+                            let mut rr = crate::data::rng::Rng64::new(r as u64 * 13 + 5);
+                            rr.normal_vec(len)
+                        })
+                        .collect();
+                    let ds = &datasets;
+                    let alloc = Cluster::run_with(size, topology, move |mut comm| {
+                        comm.reduce_sum(0, &ds[comm.rank()])
+                    });
+                    let inplace = Cluster::run_with(size, topology, move |mut comm| {
+                        // two rounds through one buffer: reuse must not
+                        // leak the previous round's partials
+                        let mut buf = ds[comm.rank()].clone();
+                        let first_root = comm.reduce_sum_into(0, &mut buf);
+                        buf.clear();
+                        buf.extend_from_slice(&ds[comm.rank()]);
+                        let root = comm.reduce_sum_into(0, &mut buf);
+                        assert_eq!(first_root, root);
+                        root.then_some(buf)
+                    });
+                    for (a, b) in alloc.iter().zip(&inplace) {
+                        match (a, b) {
+                            (Some(x), Some(y)) => assert_eq!(x, y,
+                                "{topology:?} size {size}: totals differ"),
+                            (None, None) => {}
+                            _ => panic!("{topology:?} size {size}: root-ness differs"),
+                        }
+                    }
+                }
+            }
+        });
     }
 
     #[test]

@@ -52,17 +52,30 @@ pub struct ViewParams<'a> {
 /// One chunk's full input for a batch call: the rank's resident chunk
 /// (with its Y tile attached) plus its per-evaluation (μ, S) slice for
 /// unsupervised models (padded to C rows; S padded with 1.0), or `None`
-/// for supervised ones. The chunk is borrowed — static data is never
-/// copied on the evaluation hot path; only the (μ, S) slices are owned.
+/// for supervised ones. Both parts are borrowed — static data is never
+/// copied on the evaluation hot path, and the (μ, S) slices live in the
+/// evaluator's reusable per-chunk buffers (refreshed in place each
+/// cycle) rather than being allocated per call.
 pub struct ChunkTask<'a> {
     pub chunk: &'a ChunkData,
-    pub latent: Option<(Mat, Mat)>,
+    pub latent: Option<(&'a Mat, &'a Mat)>,
 }
 
 impl ChunkTask<'_> {
     pub fn latent(&self) -> Option<(&Mat, &Mat)> {
-        self.latent.as_ref().map(|(mu, s)| (mu, s))
+        self.latent
     }
+}
+
+/// Opaque per-chunk state the forward pass computes and the matching VJP
+/// pass can reuse — today the chunk's Ψ1 matrix (K_fu for supervised
+/// chunks), which both passes otherwise derive from scratch. An empty
+/// cache is always valid: backends with nothing to carry host-side (the
+/// device-resident XLA path) return `FwdCache::default()` and the VJP
+/// recomputes exactly as before.
+#[derive(Clone, Debug, Default)]
+pub struct FwdCache {
+    psi1: Option<Mat>,
 }
 
 /// The worker-side compute interface. `latent` is the chunk's (μ, S)
@@ -81,21 +94,60 @@ pub trait Backend {
 
     fn kind(&self) -> BackendKind;
 
-    /// Forward statistics for every chunk of a rank, in chunk order.
+    /// Forward statistics for every chunk of a rank, in chunk order,
+    /// plus one fwd→vjp [`FwdCache`] per chunk (possibly empty).
     fn stats_fwd_batch(&mut self, tasks: &[ChunkTask], view: &ViewParams,
-                       include_kl: bool) -> Result<Vec<Stats>> {
-        tasks.iter()
+                       include_kl: bool) -> Result<(Vec<Stats>, Vec<FwdCache>)> {
+        let stats = tasks.iter()
             .map(|t| self.stats_fwd(t.chunk, t.latent(), view, include_kl))
-            .collect()
+            .collect::<Result<Vec<Stats>>>()?;
+        let caches = vec![FwdCache::default(); tasks.len()];
+        Ok((stats, caches))
     }
 
-    /// VJPs for every chunk of a rank, in chunk order.
+    /// VJPs for every chunk of a rank, in chunk order. `caches` is the
+    /// per-chunk state the matching `stats_fwd_batch` call returned (same
+    /// tasks, same order); missing or empty entries mean "recompute".
     fn stats_vjp_batch(&mut self, tasks: &[ChunkTask], view: &ViewParams,
-                       cts: &StatsCts) -> Result<Vec<ChunkGrads>> {
+                       cts: &StatsCts, caches: &[FwdCache]) -> Result<Vec<ChunkGrads>> {
+        let _ = caches; // the default path recomputes
         tasks.iter()
             .map(|t| self.stats_vjp(t.chunk, t.latent(), view, cts))
             .collect()
     }
+}
+
+/// One chunk's forward statistics + fwd→vjp cache on the scalar Rust
+/// path (shared by the serial and parallel CPU backends).
+fn cpu_fwd_one(task: &ChunkTask, view: &ViewParams, include_kl: bool)
+               -> Result<(Stats, FwdCache)> {
+    let kern = RbfArd::from_log_hyp(view.log_hyp);
+    let chunk = task.chunk;
+    let (mut st, psi1) = match task.latent() {
+        Some((mu, s)) => {
+            stats::bgplvm_stats_fwd_cached(&kern, mu, s, &chunk.w, &chunk.y, view.z)
+        }
+        None => stats::sgpr_stats_fwd_cached(&kern, &chunk.x, &chunk.w, &chunk.y, view.z),
+    };
+    if !include_kl {
+        st.kl = 0.0;
+    }
+    Ok((st, FwdCache { psi1: Some(psi1) }))
+}
+
+/// One chunk's VJP on the scalar Rust path, reusing the cached Ψ1/K_fu
+/// when present.
+fn cpu_vjp_one(task: &ChunkTask, view: &ViewParams, cts: &StatsCts,
+               cache: Option<&FwdCache>) -> Result<ChunkGrads> {
+    let kern = RbfArd::from_log_hyp(view.log_hyp);
+    let chunk = task.chunk;
+    let psi1 = cache.and_then(|c| c.psi1.as_ref());
+    Ok(match task.latent() {
+        Some((mu, s)) => stats::bgplvm_stats_vjp_cached(&kern, mu, s, &chunk.w, &chunk.y,
+                                                        view.z, cts, psi1),
+        None => stats::sgpr_stats_vjp_cached(&kern, &chunk.x, &chunk.w, &chunk.y,
+                                             view.z, cts, psi1),
+    })
 }
 
 /// Factory: one backend per view for `kind`. The returned `Runtime` (if
@@ -161,6 +213,26 @@ impl Backend for RustCpuBackend {
     fn kind(&self) -> BackendKind {
         BackendKind::RustCpu
     }
+
+    fn stats_fwd_batch(&mut self, tasks: &[ChunkTask], view: &ViewParams,
+                       include_kl: bool) -> Result<(Vec<Stats>, Vec<FwdCache>)> {
+        let mut stats = Vec::with_capacity(tasks.len());
+        let mut caches = Vec::with_capacity(tasks.len());
+        for t in tasks {
+            let (st, cache) = cpu_fwd_one(t, view, include_kl)?;
+            stats.push(st);
+            caches.push(cache);
+        }
+        Ok((stats, caches))
+    }
+
+    fn stats_vjp_batch(&mut self, tasks: &[ChunkTask], view: &ViewParams,
+                       cts: &StatsCts, caches: &[FwdCache]) -> Result<Vec<ChunkGrads>> {
+        tasks.iter()
+            .enumerate()
+            .map(|(i, t)| cpu_vjp_one(t, view, cts, caches.get(i)))
+            .collect()
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -194,23 +266,33 @@ impl ParallelCpuBackend {
         configured.max(1).min(tasks.max(1))
     }
 
-    /// Split `tasks` across threads and apply `f` to each chunk,
-    /// returning results in chunk order.
+    /// Split `tasks` across threads and apply `f` to each chunk (called
+    /// with the chunk's batch index, so callers can line up per-chunk
+    /// side state like the fwd→vjp caches), returning results in chunk
+    /// order.
     fn run_batch<T: Send>(
         &self,
         tasks: &[ChunkTask],
-        f: impl Fn(&ChunkTask) -> Result<T> + Sync,
+        f: impl Fn(usize, &ChunkTask) -> Result<T> + Sync,
     ) -> Result<Vec<T>> {
         let threads = self.fan_out(tasks.len());
         if threads <= 1 || tasks.len() <= 1 {
-            return tasks.iter().map(f).collect();
+            return tasks.iter().enumerate().map(|(i, t)| f(i, t)).collect();
         }
         let per = tasks.len().saturating_add(threads - 1) / threads;
         let f = &f;
         let per_thread: Result<Vec<Vec<T>>> = std::thread::scope(|scope| {
             let handles: Vec<_> = tasks
                 .chunks(per)
-                .map(|slice| scope.spawn(move || slice.iter().map(f).collect::<Result<Vec<T>>>()))
+                .enumerate()
+                .map(|(slice_idx, slice)| {
+                    scope.spawn(move || {
+                        slice.iter()
+                            .enumerate()
+                            .map(|(i, t)| f(slice_idx * per + i, t))
+                            .collect::<Result<Vec<T>>>()
+                    })
+                })
                 .collect();
             handles
                 .into_iter()
@@ -237,17 +319,14 @@ impl Backend for ParallelCpuBackend {
     }
 
     fn stats_fwd_batch(&mut self, tasks: &[ChunkTask], view: &ViewParams,
-                       include_kl: bool) -> Result<Vec<Stats>> {
-        self.run_batch(tasks, |t| {
-            RustCpuBackend.stats_fwd(t.chunk, t.latent(), view, include_kl)
-        })
+                       include_kl: bool) -> Result<(Vec<Stats>, Vec<FwdCache>)> {
+        let pairs = self.run_batch(tasks, |_, t| cpu_fwd_one(t, view, include_kl))?;
+        Ok(pairs.into_iter().unzip())
     }
 
     fn stats_vjp_batch(&mut self, tasks: &[ChunkTask], view: &ViewParams,
-                       cts: &StatsCts) -> Result<Vec<ChunkGrads>> {
-        self.run_batch(tasks, |t| {
-            RustCpuBackend.stats_vjp(t.chunk, t.latent(), view, cts)
-        })
+                       cts: &StatsCts, caches: &[FwdCache]) -> Result<Vec<ChunkGrads>> {
+        self.run_batch(tasks, |i, t| cpu_vjp_one(t, view, cts, caches.get(i)))
     }
 }
 
@@ -389,23 +468,24 @@ mod tests {
         let mut rng = Rng64::new(77);
         let chunks: Vec<ChunkData> =
             (0..7).map(|i| chunk(&mut rng, c, d, i * c)).collect();
+        let latents: Vec<(Mat, Mat)> = (0..chunks.len())
+            .map(|_| (Mat::from_fn(c, q, |_, _| rng.normal()),
+                      Mat::from_fn(c, q, |_, _| rng.uniform_range(0.2, 1.2))))
+            .collect();
         let tasks: Vec<ChunkTask> = chunks
             .iter()
-            .map(|ch| ChunkTask {
-                chunk: ch,
-                latent: Some((
-                    Mat::from_fn(c, q, |_, _| rng.normal()),
-                    Mat::from_fn(c, q, |_, _| rng.uniform_range(0.2, 1.2)),
-                )),
-            })
+            .zip(&latents)
+            .map(|(ch, (mu, s))| ChunkTask { chunk: ch, latent: Some((mu, s)) })
             .collect();
         let z = Mat::from_fn(m, q, |_, _| rng.normal());
         let log_hyp = RbfArd::iso(1.2, 0.8, q).to_log_hyp();
         let vp = ViewParams { z: &z, log_hyp: &log_hyp };
 
-        let serial = RustCpuBackend.stats_fwd_batch(&tasks, &vp, true).unwrap();
+        let (serial, serial_caches) =
+            RustCpuBackend.stats_fwd_batch(&tasks, &vp, true).unwrap();
+        assert_eq!(serial_caches.len(), tasks.len());
         for threads in [1, 2, 3, 7, 16] {
-            let par = ParallelCpuBackend::new(threads)
+            let (par, _) = ParallelCpuBackend::new(threads)
                 .stats_fwd_batch(&tasks, &vp, true)
                 .unwrap();
             assert_eq!(par.len(), serial.len());
@@ -425,13 +505,22 @@ mod tests {
             c_tryy: -0.2,
             c_kl: -1.0,
         };
-        let serial = RustCpuBackend.stats_vjp_batch(&tasks, &vp, &cts).unwrap();
-        let par = ParallelCpuBackend::new(3).stats_vjp_batch(&tasks, &vp, &cts).unwrap();
-        for (a, b) in par.iter().zip(&serial) {
+        let serial = RustCpuBackend
+            .stats_vjp_batch(&tasks, &vp, &cts, &serial_caches).unwrap();
+        // cache hit and cache miss must be bit-identical on the
+        // variational path (same Ψ1 bits either way)
+        let uncached = RustCpuBackend.stats_vjp_batch(&tasks, &vp, &cts, &[]).unwrap();
+        let (_, par_caches) =
+            ParallelCpuBackend::new(3).stats_fwd_batch(&tasks, &vp, true).unwrap();
+        let par = ParallelCpuBackend::new(3)
+            .stats_vjp_batch(&tasks, &vp, &cts, &par_caches).unwrap();
+        for ((a, b), u) in par.iter().zip(&serial).zip(&uncached) {
             assert!(a.dmu.max_abs_diff(&b.dmu) == 0.0);
             assert!(a.ds.max_abs_diff(&b.ds) == 0.0);
             assert!(a.dz.max_abs_diff(&b.dz) == 0.0);
             assert_eq!(a.dhyp, b.dhyp);
+            assert!(u.dmu.max_abs_diff(&b.dmu) == 0.0, "cache changed the VJP");
+            assert!(u.dz.max_abs_diff(&b.dz) == 0.0, "cache changed the VJP");
         }
     }
 

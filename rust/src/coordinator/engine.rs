@@ -10,9 +10,14 @@
 //!     bcast params → worker stats_fwd → reduce stats → leader M×M core
 //!     → bcast cotangents → worker stats_vjp → reduce/gather grads
 //!
-//!   Worker compute goes through the backend factory (rust-cpu,
-//!   parallel-cpu with intra-rank chunk fan-out, or xla) and the
-//!   collectives run over binomial trees by default.
+//!   By default the cycle runs **pipelined per view** (view v's vjp
+//!   overlaps view v+1's in-flight stats reduction and the leader's
+//!   core work; `EngineConfig::pipeline = false` restores the
+//!   whole-cycle synchronous schedule, bit-identically). Worker compute
+//!   goes through the backend factory (rust-cpu, parallel-cpu with
+//!   intra-rank chunk fan-out, or xla) — with a per-chunk fwd→vjp
+//!   kernel-state cache on the CPU paths — and the collectives run over
+//!   binomial trees by default.
 //! - [`train`] — the optimiser loop + stopping ([`Engine`],
 //!   [`EngineConfig`], [`TrainResult`]): rank 0 is the leader (it also
 //!   computes, like an MPI root), every rank owns a contiguous run of

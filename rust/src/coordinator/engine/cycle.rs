@@ -12,13 +12,38 @@
 //!   7.   `gather` of the span-local (dμ, d log S) gradients
 //!   8.   (in `train`) optimiser step at the leader
 //!
+//! With `EngineConfig::pipeline` on (the default) steps 4–7 run as a
+//! **per-view pipeline** instead of whole-cycle barriers — every rank
+//! issues the same collective sequence, but compute overlaps the
+//! in-flight communication:
+//!
+//!       fwd[0] ── reduce[0]
+//!       for each view v:
+//!   L:    core[v] ── bcast cts[v] ─┐   fwd[v+1] ── reduce[v+1]
+//!   W:    fwd[v+1] ── reduce[v+1]  └─▸ vjp[v] ── reduce grads[v]
+//!       gather (dμ, d log S)
+//!
+//! so view v's `stats_vjp` starts as soon as view v's cotangents land
+//! while view v+1's forward statistics are still reducing through the
+//! tree, and the leader's M×M core for view v overlaps the workers'
+//! fwd[v+1] compute (the cotangent broadcast itself is non-blocking).
+//! Collectives use distinct FIFO tag streams, every rank issues them in
+//! the same global order (fwd[0], fwd[1], grads[0], fwd[2], grads[1], …),
+//! and the per-view payloads reduce element-wise over the same trees as
+//! the synchronous whole-cycle wires — the pipelined objective and
+//! gradient are therefore **bit-identical** to the synchronous path
+//! (asserted in `rust/tests/pipeline_equiv_test.rs`).
+//!
 //! [`DistributedEvaluator`] owns one rank's half of that conversation:
 //! the leader drives it through [`DistributedEvaluator::eval`], workers
 //! sit in [`DistributedEvaluator::serve`]. Both sides keep the
 //! collectives in lockstep even when a rank's compute fails mid-cycle:
 //! failures ride a trailing fail-count element on each reduction, and a
 //! leader-side failure aborts the cycle with an empty cotangent
-//! broadcast — so an error surfaces as an `Err` on the optimiser's next
+//! broadcast for the failing view — in pipeline mode both sides then
+//! truncate the remaining schedule identically (the leader still absorbs
+//! the one fwd reduction the workers issued before they could observe
+//! the abort) — so an error surfaces as an `Err` on the optimiser's next
 //! step instead of a protocol desync.
 
 use super::problem::{pad_globals, unpack_globals, GlobalParams, LatentSpec, ParamLayout,
@@ -26,7 +51,8 @@ use super::problem::{pad_globals, unpack_globals, GlobalParams, LatentSpec, Para
 use super::train::EngineConfig;
 use crate::collectives::Comm;
 use crate::config::BackendKind;
-use crate::coordinator::backend::{make_backends, Backend, ChunkData, ChunkTask, ViewParams};
+use crate::coordinator::backend::{make_backends, Backend, ChunkData, ChunkTask, FwdCache,
+                                  ViewParams};
 use crate::coordinator::partition::{ChunkRange, Partition};
 use crate::kern::RbfArd;
 use crate::linalg::Mat;
@@ -45,14 +71,17 @@ const CMD_EVAL: f64 = 1.0;
 const CMD_STOP: f64 = 0.0;
 const TAG_LOCALS: u64 = 100;
 
-/// Payload length of the per-view statistics, excluding the trailing
-/// fail-count element.
-fn stats_wire_len(m: usize, ds: &[usize]) -> usize {
-    ds.iter().map(|d| 4 + m * d + m * m).sum()
+/// Wire length of one view's statistics (scalars + P + Ψ2), excluding
+/// the trailing fail-count element. The single source of truth for the
+/// per-view payload size — every seal/slice site goes through here.
+fn view_stats_wire_len(m: usize, d: usize) -> usize {
+    4 + m * d + m * m
 }
 
-fn cts_wire_len(m: usize, ds: &[usize]) -> usize {
-    ds.iter().map(|d| 3 + m * d + m * m).sum()
+/// Payload length of the whole-cycle statistics wire (all views),
+/// excluding the trailing fail-count element.
+fn stats_wire_len(m: usize, ds: &[usize]) -> usize {
+    ds.iter().map(|&d| view_stats_wire_len(m, d)).sum()
 }
 
 /// Payload length of the global-gradient partials (dZ + dhyp per view),
@@ -61,41 +90,73 @@ fn grads_wire_len(m: usize, q: usize, views: usize) -> usize {
     views * (m * q + q + 1)
 }
 
-/// Append the fail flag reducers sum into a fail count: `Some(payload)`
-/// from a rank whose compute succeeded, `None` (zero-filled to `len`) from
-/// one whose compute failed. Both sides of the protocol — leader `eval`
-/// and worker `serve` — pack through this one helper so the wire format
-/// cannot drift between them.
-fn pack_with_flag(payload: Option<Vec<f64>>, len: usize) -> Vec<f64> {
-    match payload {
-        Some(mut wire) => {
-            debug_assert_eq!(wire.len(), len, "wire payload length");
-            wire.push(0.0);
-            wire
-        }
-        None => {
-            let mut wire = vec![0.0; len + 1];
-            wire[len] = 1.0;
-            wire
-        }
+/// Finish a wire buffer built in place: append the fail flag reducers
+/// sum into a fail count (`0.0` from a rank whose compute succeeded; on
+/// failure the payload is replaced by zeros and flagged `1.0`). Both
+/// sides of the protocol — leader `eval` and worker `serve` — seal
+/// through this one helper so the wire format cannot drift between them.
+fn seal_wire(wire: &mut Vec<f64>, ok: bool, len: usize) {
+    if ok {
+        debug_assert_eq!(wire.len(), len, "wire payload length");
+        wire.push(0.0);
+    } else {
+        wire.clear();
+        wire.resize(len + 1, 0.0);
+        wire[len] = 1.0;
     }
 }
 
-fn pack_stats(stats: &[Stats]) -> Vec<f64> {
-    let mut wire = Vec::new();
-    for st in stats {
-        wire.extend(st.pack());
-    }
-    wire
+// ---------------------------------------------------------------------
+// reusable hot-path buffers
+// ---------------------------------------------------------------------
+
+/// Everything the evaluation hot path reuses cycle to cycle so the
+/// pack/reduce/unpack round-trips stop allocating: wire buffers for the
+/// three collectives, span-local gradient accumulators, the leader's
+/// (μ, S) expansions, per-chunk (μ, S) slices shared by every view's
+/// fwd and vjp batches, and the per-view fwd→vjp caches. Reuse only
+/// saves the allocations — every buffer is (re)written before it is
+/// read, so the values match a freshly-allocated cycle bit for bit.
+#[derive(Default)]
+struct CycleScratch {
+    /// Wire for the fwd-stats reduction(s); reduced in place.
+    stats_wire: Vec<f64>,
+    /// Wire for the grads reduction(s); reduced in place.
+    grads_wire: Vec<f64>,
+    /// Leader-side cotangent broadcast buffer (round-trips through
+    /// `bcast`, which hands the root its vector back).
+    cts_wire: Vec<f64>,
+    /// Leader-side μ and S = exp(log S) expansions of the parameter
+    /// vector.
+    mu_all: Vec<f64>,
+    s_all: Vec<f64>,
+    /// Span-local gradient accumulators (dμ, d log S), zeroed per cycle.
+    dmu_span: Vec<f64>,
+    dls_span: Vec<f64>,
+    /// Gather payload (dμ ++ d log S).
+    locals: Vec<f64>,
+    /// Per-chunk (μ, S) slices. Live rows are refreshed in place each
+    /// cycle; the padding rows were set once at construction (μ = 0,
+    /// S = 1) and are never dirtied.
+    latents: Vec<(Mat, Mat)>,
+    /// Per-view per-chunk fwd→vjp caches from the latest forward pass.
+    caches: Vec<Vec<FwdCache>>,
+    /// Leader: per-view reduced statistics, unpacked in place.
+    view_stats: Vec<Stats>,
+    /// Workers: per-view cotangents, unpacked in place.
+    view_cts: Vec<StatsCts>,
 }
 
-fn pack_grads(view_grads: &[(Mat, Vec<f64>)]) -> Vec<f64> {
-    let mut wire = Vec::new();
-    for (dz, dhyp) in view_grads {
-        wire.extend_from_slice(dz.as_slice());
-        wire.extend_from_slice(dhyp);
+/// Refresh the per-chunk (μ, S) slices from the rank's span-local
+/// buffers (`mu_span`/`s_span` are the span's rows × Q, row-major).
+fn refresh_latents(latents: &mut [(Mat, Mat)], chunks: &[ChunkData], span_start: usize,
+                   q: usize, mu_span: &[f64], s_span: &[f64]) {
+    for ((mu, s), chunk) in latents.iter_mut().zip(chunks) {
+        let off = (chunk.start - span_start) * q;
+        let live = chunk.live * q;
+        mu.as_mut_slice()[..live].copy_from_slice(&mu_span[off..off + live]);
+        s.as_mut_slice()[..live].copy_from_slice(&s_span[off..off + live]);
     }
-    wire
 }
 
 // ---------------------------------------------------------------------
@@ -117,30 +178,21 @@ struct WorkerState {
     variational: bool,
 }
 
-/// Slice one chunk's (μ, S) rows out of the rank's span-local buffers,
-/// padding the tail (μ = 0, S = 1).
-fn chunk_latent(chunk: &ChunkData, span_start: usize, q: usize,
-                mu_span: &[f64], s_span: &[f64], c: usize) -> (Mat, Mat) {
-    let off = (chunk.start - span_start) * q;
-    let live = chunk.live * q;
-    let mut mu = Mat::zeros(c, q);
-    let mut s = Mat::from_vec(c, q, vec![1.0; c * q]);
-    mu.as_mut_slice()[..live].copy_from_slice(&mu_span[off..off + live]);
-    s.as_mut_slice()[..live].copy_from_slice(&s_span[off..off + live]);
-    (mu, s)
-}
-
 /// Assemble one view's batch: each resident chunk (borrowed) with its
-/// (μ, S) slice attached. `latent_start` is the rank's span start for
-/// variational problems, `None` for supervised ones.
-fn view_tasks<'a>(chunks: &'a [ChunkData], latent_start: Option<usize>, q: usize,
-                  mu_span: &[f64], s_span: &[f64], c: usize) -> Vec<ChunkTask<'a>> {
+/// (μ, S) slice attached for variational problems — borrowed from the
+/// evaluator's reusable per-chunk buffers, not allocated per call.
+fn view_tasks<'a>(chunks: &'a [ChunkData], latents: &'a [(Mat, Mat)],
+                  variational: bool) -> Vec<ChunkTask<'a>> {
     chunks
         .iter()
-        .map(|chunk| ChunkTask {
+        .enumerate()
+        .map(|(i, chunk)| ChunkTask {
             chunk,
-            latent: latent_start.map(|start| chunk_latent(chunk, start, q, mu_span,
-                                                          s_span, c)),
+            latent: if variational {
+                Some((&latents[i].0, &latents[i].1))
+            } else {
+                None
+            },
         })
         .collect()
 }
@@ -214,73 +266,63 @@ impl WorkerState {
         }
     }
 
-    /// One full local forward pass: per-view stats summed over chunks
-    /// (in chunk order, regardless of how the backend parallelised them).
-    fn local_fwd(&mut self, globals: &GlobalParams, mu_span: &[f64], s_span: &[f64],
-                 c: usize, m: usize, ds: &[usize]) -> Result<Vec<Stats>> {
-        let latent_start = self.latent_start();
-        let mut out = Vec::with_capacity(globals.views.len());
-        for (v, gv) in globals.views.iter().enumerate() {
-            let tasks = view_tasks(&self.view_chunks[v], latent_start, self.q,
-                                   mu_span, s_span, c);
-            let vp = ViewParams { z: &gv.z, log_hyp: &gv.log_hyp };
-            // KL is counted exactly once: attached to view 0.
-            let include_kl = self.variational && v == 0;
-            let stats = self.backends[v].stats_fwd_batch(&tasks, &vp, include_kl)?;
-            // ds[v] (not the local tile width): ranks with zero chunks must
-            // still pack wire vectors of the global shape for the reducer.
-            let mut acc = Stats::zeros(m, ds[v]);
-            let mut first = true;
-            for st in stats {
-                if first {
-                    acc = st;
-                    first = false;
-                } else {
-                    acc.add_assign(&st);
-                }
-            }
-            out.push(acc);
+    /// One view's local forward pass: per-chunk stats summed over chunks
+    /// (in chunk order, regardless of how the backend parallelised them)
+    /// plus the per-chunk fwd→vjp caches. `d` is the view's global
+    /// output width: ranks with zero chunks must still produce stats of
+    /// the global shape for the reducer.
+    fn fwd_view(&mut self, v: usize, gv: &super::problem::GlobalView,
+                latents: &[(Mat, Mat)], m: usize, d: usize)
+                -> Result<(Stats, Vec<FwdCache>)> {
+        let tasks = view_tasks(&self.view_chunks[v], latents, self.variational);
+        let vp = ViewParams { z: &gv.z, log_hyp: &gv.log_hyp };
+        // KL is counted exactly once: attached to view 0.
+        let include_kl = self.variational && v == 0;
+        let (stats, caches) = self.backends[v].stats_fwd_batch(&tasks, &vp, include_kl)?;
+        // first chunk's stats become the accumulator — the zero-filled
+        // M×D/M×M matrices are only materialised on chunkless ranks
+        let mut it = stats.into_iter();
+        let mut acc = match it.next() {
+            Some(st) => st,
+            None => Stats::zeros(m, d),
+        };
+        for st in it {
+            acc.add_assign(&st);
         }
-        Ok(out)
+        Ok((acc, caches))
     }
 
-    /// One full local VJP pass. Returns (per-view (dz, dhyp) partials,
-    /// span-local dμ, span-local d log S).
-    fn local_vjp(&mut self, globals: &GlobalParams, all_cts: &[StatsCts],
-                 mu_span: &[f64], s_span: &[f64], c: usize, m: usize)
-                 -> Result<(Vec<(Mat, Vec<f64>)>, Vec<f64>, Vec<f64>)> {
+    /// One view's local VJP pass, reusing the view's fwd caches.
+    /// Accumulates the span-local (dμ, d log S) into the provided
+    /// buffers and returns the view's global (dZ, dhyp) partials.
+    #[allow(clippy::too_many_arguments)]
+    fn vjp_view(&mut self, v: usize, gv: &super::problem::GlobalView, cts: &StatsCts,
+                latents: &[(Mat, Mat)], caches: &[FwdCache],
+                dmu_span: &mut [f64], dls_span: &mut [f64], m: usize)
+                -> Result<(Mat, Vec<f64>)> {
+        let tasks = view_tasks(&self.view_chunks[v], latents, self.variational);
+        let vp = ViewParams { z: &gv.z, log_hyp: &gv.log_hyp };
+        let grads = self.backends[v].stats_vjp_batch(&tasks, &vp, cts, caches)?;
+
         let latent_start = self.latent_start();
-        let span_len = self.span.map(|s| s.len()).unwrap_or(0);
-        let mut dmu_span = vec![0.0; span_len * self.q];
-        let mut dls_span = vec![0.0; span_len * self.q];
-        let mut view_grads = Vec::with_capacity(globals.views.len());
-
-        for (v, gv) in globals.views.iter().enumerate() {
-            let tasks = view_tasks(&self.view_chunks[v], latent_start, self.q,
-                                   mu_span, s_span, c);
-            let vp = ViewParams { z: &gv.z, log_hyp: &gv.log_hyp };
-            let grads = self.backends[v].stats_vjp_batch(&tasks, &vp, &all_cts[v])?;
-
-            let mut dz = Mat::zeros(m, self.q);
-            let mut dhyp = vec![0.0; self.q + 1];
-            for (task, g) in tasks.iter().zip(&grads) {
-                if let Some(span_start) = latent_start {
-                    // accumulate local grads (chain dS -> dlogS needs S)
-                    let (_, s) = task.latent().expect("variational task has latent");
-                    let off = (task.chunk.start - span_start) * self.q;
-                    for i in 0..task.chunk.live * self.q {
-                        dmu_span[off + i] += g.dmu.as_slice()[i];
-                        dls_span[off + i] += g.ds.as_slice()[i] * s.as_slice()[i];
-                    }
-                }
-                dz.axpy(1.0, &g.dz);
-                for (a, b) in dhyp.iter_mut().zip(&g.dhyp) {
-                    *a += b;
+        let mut dz = Mat::zeros(m, self.q);
+        let mut dhyp = vec![0.0; self.q + 1];
+        for (task, g) in tasks.iter().zip(&grads) {
+            if let Some(span_start) = latent_start {
+                // accumulate local grads (chain dS -> dlogS needs S)
+                let (_, s) = task.latent().expect("variational task has latent");
+                let off = (task.chunk.start - span_start) * self.q;
+                for i in 0..task.chunk.live * self.q {
+                    dmu_span[off + i] += g.dmu.as_slice()[i];
+                    dls_span[off + i] += g.ds.as_slice()[i] * s.as_slice()[i];
                 }
             }
-            view_grads.push((dz, dhyp));
+            dz.axpy(1.0, &g.dz);
+            for (a, b) in dhyp.iter_mut().zip(&g.dhyp) {
+                *a += b;
+            }
         }
-        Ok((view_grads, dmu_span, dls_span))
+        Ok((dz, dhyp))
     }
 }
 
@@ -298,8 +340,6 @@ pub struct DistributedEvaluator {
     layout: ParamLayout,
     /// Output width per view (global, identical on every rank).
     ds: Vec<usize>,
-    /// Fixed chunk size C.
-    chunk: usize,
     /// Every rank's datapoint span (for scattering (μ,S) and gathering
     /// their gradients).
     spans: Vec<Option<ChunkRange>>,
@@ -310,6 +350,13 @@ pub struct DistributedEvaluator {
     /// over threads the rank-thread CPU clock cannot see) vs thread CPU
     /// time (serial backends on a time-shared host).
     compute_wall: bool,
+    /// Per-view pipelined schedule vs the whole-cycle synchronous one.
+    /// SPMD: every rank of a cluster shares one `EngineConfig`, so the
+    /// two sides always agree.
+    pipeline: bool,
+    /// Reusable hot-path buffers (taken out for the duration of each
+    /// `eval`/`serve` call so `self` stays freely borrowable).
+    scratch: CycleScratch,
 }
 
 impl DistributedEvaluator {
@@ -320,19 +367,38 @@ impl DistributedEvaluator {
         let rank = comm.rank();
         let state = WorkerState::build(problem, cfg, part, rank)?;
         let layout = ParamLayout::new(problem);
-        let ds = problem.views.iter().map(|v| v.y.cols()).collect();
+        let ds: Vec<usize> = problem.views.iter().map(|v| v.y.cols()).collect();
         let spans = (0..part.workers()).map(|r| part.worker_span(r)).collect();
         let compute_wall = matches!(cfg.backend, BackendKind::ParallelCpu { .. });
+        let scratch = CycleScratch {
+            latents: if problem.latent.is_variational() {
+                state.view_chunks[0]
+                    .iter()
+                    .map(|_| {
+                        (Mat::zeros(cfg.chunk, problem.q),
+                         Mat::from_vec(cfg.chunk, problem.q,
+                                       vec![1.0; cfg.chunk * problem.q]))
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            },
+            caches: vec![Vec::new(); ds.len()],
+            view_stats: ds.iter().map(|&d| Stats::zeros(layout.m, d)).collect(),
+            view_cts: ds.iter().map(|&d| StatsCts::zeros(layout.m, d)).collect(),
+            ..CycleScratch::default()
+        };
         Ok(DistributedEvaluator {
             comm,
             state,
             layout,
             ds,
-            chunk: cfg.chunk,
             spans,
             timer: PhaseTimer::new(),
             compute: 0.0,
             compute_wall,
+            pipeline: cfg.pipeline,
+            scratch,
         })
     }
 
@@ -368,6 +434,120 @@ impl DistributedEvaluator {
     }
 
     // -----------------------------------------------------------------
+    // shared per-cycle pieces
+    // -----------------------------------------------------------------
+
+    /// Step 4 for one view (pipeline mode): compute the local forward
+    /// batch (skipped once an earlier view failed on this rank — the
+    /// first error wins and the leader aborts at the first flagged view
+    /// anyway), seal the fail-flagged wire, and run the view's reduction
+    /// in place. Returns the cluster-wide fail count on the root; the
+    /// return value is meaningless elsewhere.
+    fn fwd_reduce_view(&mut self, v: usize, globals: &GlobalParams,
+                       scratch: &mut CycleScratch,
+                       err: &mut Option<anyhow::Error>) -> f64 {
+        let m = self.layout.m;
+        let wire_len = view_stats_wire_len(m, self.ds[v]);
+        let t0 = Instant::now();
+        let c0 = self.clock();
+        scratch.stats_wire.clear();
+        let ok = if err.is_none() {
+            match self.state.fwd_view(v, &globals.views[v], &scratch.latents, m,
+                                      self.ds[v]) {
+                Ok((st, caches)) => {
+                    scratch.caches[v] = caches;
+                    st.pack_into(&mut scratch.stats_wire);
+                    true
+                }
+                Err(e) => {
+                    *err = Some(e);
+                    false
+                }
+            }
+        } else {
+            false
+        };
+        self.compute += self.clock() - c0;
+        self.timer.add(Phase::StatsFwd, t0.elapsed());
+
+        seal_wire(&mut scratch.stats_wire, ok, wire_len);
+        let t0 = Instant::now();
+        let _ = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
+        self.timer.add(Phase::Reduce, t0.elapsed());
+        *scratch.stats_wire.last().expect("non-empty reduce")
+    }
+
+    /// Step 6/7a for one view (pipeline mode): compute the view's VJP
+    /// (skipped after an earlier failure on this rank), seal and reduce
+    /// its fail-flagged grads wire in place. Returns whether this rank's
+    /// vjp ran.
+    #[allow(clippy::too_many_arguments)]
+    fn vjp_reduce_view(&mut self, v: usize, globals: &GlobalParams, cts: &StatsCts,
+                       scratch: &mut CycleScratch, skip: bool,
+                       err: &mut Option<anyhow::Error>) -> bool {
+        let (m, q) = (self.layout.m, self.layout.q);
+        let t0 = Instant::now();
+        let c0 = self.clock();
+        scratch.grads_wire.clear();
+        let ok = if skip || err.is_some() {
+            false
+        } else {
+            match self.state.vjp_view(v, &globals.views[v], cts, &scratch.latents,
+                                      &scratch.caches[v], &mut scratch.dmu_span,
+                                      &mut scratch.dls_span, m) {
+                Ok((dz, dhyp)) => {
+                    scratch.grads_wire.extend_from_slice(dz.as_slice());
+                    scratch.grads_wire.extend_from_slice(&dhyp);
+                    true
+                }
+                Err(e) => {
+                    *err = Some(e);
+                    false
+                }
+            }
+        };
+        self.compute += self.clock() - c0;
+        self.timer.add(Phase::StatsVjp, t0.elapsed());
+
+        seal_wire(&mut scratch.grads_wire, ok, m * q + q + 1);
+        let t0 = Instant::now();
+        let _ = self.comm.reduce_sum_into(0, &mut scratch.grads_wire);
+        self.timer.add(Phase::GatherGrads, t0.elapsed());
+        ok
+    }
+
+    /// Step 7b: gather the span-local gradients (zeroed first if this
+    /// rank's vjp failed, matching the synchronous protocol).
+    fn gather_locals(&mut self, scratch: &mut CycleScratch, vjp_ok: bool)
+                     -> Option<Vec<Vec<f64>>> {
+        if self.layout.variational {
+            if !vjp_ok {
+                for v in scratch.dmu_span.iter_mut() {
+                    *v = 0.0;
+                }
+                for v in scratch.dls_span.iter_mut() {
+                    *v = 0.0;
+                }
+            }
+            scratch.locals.clear();
+            scratch.locals.extend_from_slice(&scratch.dmu_span);
+            scratch.locals.extend_from_slice(&scratch.dls_span);
+            self.comm.gather(0, &scratch.locals)
+        } else {
+            self.comm.gather(0, &[])
+        }
+    }
+
+    /// Zero the span-local accumulators for a fresh cycle.
+    fn reset_span_grads(&self, scratch: &mut CycleScratch) {
+        let span_len = self.state.span.map(|s| s.len()).unwrap_or(0) * self.layout.q;
+        scratch.dmu_span.clear();
+        scratch.dmu_span.resize(span_len, 0.0);
+        scratch.dls_span.clear();
+        scratch.dls_span.resize(span_len, 0.0);
+    }
+
+    // -----------------------------------------------------------------
     // leader side
     // -----------------------------------------------------------------
 
@@ -377,25 +557,38 @@ impl DistributedEvaluator {
     /// park back at the command broadcast, ready for the next `eval` or
     /// `finish`.
     pub fn eval(&mut self, x: &[f64]) -> Result<(f64, Vec<f64>)> {
+        // Scratch is taken out for the call so `self`'s other fields stay
+        // freely borrowable alongside it; restored even on error.
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let out = if self.pipeline {
+            self.eval_pipelined(x, &mut scratch)
+        } else {
+            self.eval_sync(x, &mut scratch)
+        };
+        self.scratch = scratch;
+        out
+    }
+
+    /// Steps 1–3 at the leader: command + global-parameter broadcast,
+    /// (μ, S) span scatter, and the rank-0 latent refresh. Shared by
+    /// both schedules.
+    fn leader_distribute(&mut self, x: &[f64], scratch: &mut CycleScratch) {
         let layout = &self.layout;
-        let (m, q, n) = (layout.m, layout.q, layout.n);
-        let c = self.chunk;
-        let variational = layout.variational;
+        let q = layout.q;
         let views = layout.views;
         let view_len = layout.view_len();
-        let globals = unpack_globals(layout, x);
+        let variational = layout.variational;
 
-        // 1–3: command + parameter distribution
-        let (mu_all, s_all): (Vec<f64>, Vec<f64>) = if variational {
-            let mu = layout.mu_slice(x).to_vec();
-            let s: Vec<f64> = layout.log_s_slice(x).iter().map(|v| v.exp()).collect();
-            (mu, s)
-        } else {
-            (Vec::new(), Vec::new())
-        };
+        if variational {
+            scratch.mu_all.clear();
+            scratch.mu_all.extend_from_slice(layout.mu_slice(x));
+            scratch.s_all.clear();
+            scratch.s_all.extend(layout.log_s_slice(x).iter().map(|v| v.exp()));
+        }
 
         let comm = &mut self.comm;
         let spans = &self.spans;
+        let (mu_all, s_all) = (&scratch.mu_all, &scratch.s_all);
         self.timer.time(Phase::Bcast, || {
             comm.bcast(0, vec![CMD_EVAL]);
             comm.bcast(0, x[..views * view_len].to_vec());
@@ -413,114 +606,298 @@ impl DistributedEvaluator {
             }
         });
 
-        let (mu_span, s_span): (&[f64], &[f64]) = if variational {
+        if variational {
             let sp = self.spans[0].expect("rank0 span");
-            (&mu_all[sp.start * q..sp.end * q], &s_all[sp.start * q..sp.end * q])
-        } else {
-            (&[], &[])
-        };
+            let (lo, hi) = (sp.start * q, sp.end * q);
+            refresh_latents(&mut scratch.latents, &self.state.view_chunks[0], sp.start,
+                            q, &scratch.mu_all[lo..hi], &scratch.s_all[lo..hi]);
+        }
+    }
 
-        // 4: local fwd + reduce (a trailing element counts failed ranks)
+    /// Unpack view v's reduced statistics (sitting at the head of
+    /// `stats_wire`) and run the M×M core. `fails` is the view's reduced
+    /// fail count; a local fwd error takes precedence.
+    fn view_core(&mut self, v: usize, globals: &GlobalParams,
+                 scratch: &mut CycleScratch, fails: f64,
+                 fwd_err: &mut Option<anyhow::Error>)
+                 -> Result<crate::math::bound::BoundOut> {
+        if let Some(e) = fwd_err.take() {
+            return Err(e);
+        }
+        if fails > 0.0 {
+            return Err(anyhow!("stats_fwd failed on {fails} rank(s)"));
+        }
+        let m = self.layout.m;
+        let len = view_stats_wire_len(m, self.ds[v]);
+        scratch.view_stats[v].unpack_from(&scratch.stats_wire[..len]);
+        let kern = RbfArd::from_log_hyp(&globals.views[v].log_hyp);
+        bound_and_grads(&scratch.view_stats[v], &globals.views[v].z, &kern,
+                        globals.views[v].log_beta)
+    }
+
+    /// The pipelined leader schedule (see the module doc's diagram).
+    fn eval_pipelined(&mut self, x: &[f64], scratch: &mut CycleScratch)
+                      -> Result<(f64, Vec<f64>)> {
+        let (m, q) = (self.layout.m, self.layout.q);
+        let variational = self.layout.variational;
+        let views = self.layout.views;
+        let view_len = self.layout.view_len();
+        let globals = unpack_globals(&self.layout, x);
+
+        self.leader_distribute(x, scratch);
+        self.reset_span_grads(scratch);
+
+        let mut fwd_err: Option<anyhow::Error> = None;
+        let mut vjp_err: Option<anyhow::Error> = None;
+        let mut f_total = 0.0;
+        let mut grad = vec![0.0; self.layout.len()];
+
+        // 4(v=0): first view's forward + reduction
+        let mut fails = self.fwd_reduce_view(0, &globals, scratch, &mut fwd_err);
+
+        for v in 0..views {
+            // 5: view v's M×M core from the just-reduced statistics
+            let t0 = Instant::now();
+            let core = self.view_core(v, &globals, scratch, fails, &mut fwd_err);
+            self.timer.add(Phase::BoundCore, t0.elapsed());
+
+            let out = match core {
+                Ok(out) => out,
+                Err(e) => {
+                    // Abort at view v: empty cotangent broadcast, then
+                    // absorb the one fwd reduction the workers issued
+                    // before they could observe the abort, and truncate
+                    // the rest of the cycle on both sides.
+                    let comm = &mut self.comm;
+                    self.timer.time(Phase::Bcast, || comm.bcast(0, Vec::new()));
+                    if v + 1 < views {
+                        let wire_len = view_stats_wire_len(m, self.ds[v + 1]);
+                        scratch.stats_wire.clear();
+                        seal_wire(&mut scratch.stats_wire, false, wire_len);
+                        let _ = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
+                    }
+                    return Err(e);
+                }
+            };
+            f_total += out.f;
+
+            // 5b: view v's cotangents go out (non-blocking sends), so
+            // workers can start vjp[v] while the leader is still busy
+            // with its own fwd[v+1] below.
+            {
+                let comm = &mut self.comm;
+                let cts_wire = &mut scratch.cts_wire;
+                let cts = &out.cts;
+                self.timer.time(Phase::Bcast, || {
+                    cts_wire.clear();
+                    cts.pack_into(cts_wire);
+                    *cts_wire = comm.bcast(0, std::mem::take(cts_wire));
+                });
+            }
+
+            // 4(v+1): next view's forward + reduction — in flight while
+            // this view's vjp runs everywhere.
+            fails = if v + 1 < views {
+                self.fwd_reduce_view(v + 1, &globals, scratch, &mut fwd_err)
+            } else {
+                0.0
+            };
+
+            // 6/7a: view v's vjp + grads reduction
+            let ok = self.vjp_reduce_view(v, &globals, &out.cts, scratch, false,
+                                          &mut vjp_err);
+            let gfails = *scratch.grads_wire.last().expect("non-empty reduce");
+            if vjp_err.is_none() && (!ok || gfails > 0.0) {
+                vjp_err = Some(anyhow!("stats_vjp failed on {gfails} rank(s)"));
+            }
+
+            // assemble view v's slice of ∇F from the reduced partials
+            if vjp_err.is_none() {
+                let o = v * view_len;
+                let gred = &scratch.grads_wire;
+                for i in 0..q + 1 {
+                    grad[o + i] = out.dhyp[i] + gred[m * q + i];
+                }
+                grad[o + q + 1] = out.dlog_beta;
+                for i in 0..m * q {
+                    grad[o + q + 2 + i] = out.dz.as_slice()[i] + gred[i];
+                }
+            }
+        }
+
+        // 7b: gather the span-local gradients
+        let t0 = Instant::now();
+        let locals = self.gather_locals(scratch, vjp_err.is_none());
+        if let Some(e) = vjp_err {
+            self.timer.add(Phase::GatherGrads, t0.elapsed());
+            return Err(e);
+        }
+        if variational {
+            let locals = locals.expect("root");
+            let n = self.layout.n;
+            let base_mu = views * view_len;
+            let base_ls = base_mu + n * q;
+            for (r, piece) in locals.iter().enumerate() {
+                if let Some(sp) = self.spans[r] {
+                    let len = (sp.end - sp.start) * q;
+                    debug_assert_eq!(piece.len(), 2 * len);
+                    grad[base_mu + sp.start * q..base_mu + sp.end * q]
+                        .copy_from_slice(&piece[..len]);
+                    grad[base_ls + sp.start * q..base_ls + sp.end * q]
+                        .copy_from_slice(&piece[len..2 * len]);
+                }
+            }
+        }
+        self.timer.add(Phase::GatherGrads, t0.elapsed());
+        self.timer.note_eval();
+
+        Ok((f_total, grad))
+    }
+
+    /// The synchronous reference schedule: whole-cycle wires, one
+    /// reduction per direction (the pre-pipeline protocol, kept as the
+    /// escape hatch and the equivalence baseline).
+    fn eval_sync(&mut self, x: &[f64], scratch: &mut CycleScratch)
+                 -> Result<(f64, Vec<f64>)> {
+        let (m, q) = (self.layout.m, self.layout.q);
+        let variational = self.layout.variational;
+        let views = self.layout.views;
+        let view_len = self.layout.view_len();
+        let globals = unpack_globals(&self.layout, x);
+
+        self.leader_distribute(x, scratch);
+
+        // 4: local fwd over all views + one reduction (trailing element
+        // counts failed ranks)
+        let swire_len = stats_wire_len(m, &self.ds);
         let t0 = Instant::now();
         let c0 = self.clock();
-        let fwd = self.state.local_fwd(&globals, mu_span, s_span, c, m, &self.ds);
+        scratch.stats_wire.clear();
+        let mut fwd_err: Option<anyhow::Error> = None;
+        for v in 0..views {
+            match self.state.fwd_view(v, &globals.views[v], &scratch.latents, m,
+                                      self.ds[v]) {
+                Ok((st, caches)) => {
+                    scratch.caches[v] = caches;
+                    st.pack_into(&mut scratch.stats_wire);
+                }
+                Err(e) => {
+                    fwd_err = Some(e);
+                    break;
+                }
+            }
+        }
         self.compute += self.clock() - c0;
         self.timer.add(Phase::StatsFwd, t0.elapsed());
 
-        let swire_len = stats_wire_len(m, &self.ds);
-        let wire = pack_with_flag(fwd.as_ref().ok().map(|stats| pack_stats(stats)),
-                                  swire_len);
+        seal_wire(&mut scratch.stats_wire, fwd_err.is_none(), swire_len);
         let t0 = Instant::now();
-        let reduced = self.comm.reduce_sum(0, &wire).expect("root");
+        let _ = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
         self.timer.add(Phase::Reduce, t0.elapsed());
-        let fwd_fails = *reduced.last().expect("non-empty reduce");
+        let fwd_fails = *scratch.stats_wire.last().expect("non-empty reduce");
 
         // 5: the indistributable core
         let t0 = Instant::now();
-        let core = fwd.and_then(|_| {
-            if fwd_fails > 0.0 {
-                return Err(anyhow!("stats_fwd failed on {fwd_fails} rank(s)"));
-            }
+        let core = if let Some(e) = fwd_err {
+            Err(e)
+        } else if fwd_fails > 0.0 {
+            Err(anyhow!("stats_fwd failed on {fwd_fails} rank(s)"))
+        } else {
             let mut f_total = 0.0;
-            let mut all_cts = Vec::with_capacity(self.ds.len());
-            let mut direct = Vec::with_capacity(self.ds.len());
+            let mut all_cts = Vec::with_capacity(views);
+            let mut direct = Vec::with_capacity(views);
             let mut off = 0;
+            let mut core_err = None;
             for (v, &d) in self.ds.iter().enumerate() {
-                let len = 4 + m * d + m * m;
-                let stats = Stats::unpack(m, d, &reduced[off..off + len]);
+                let len = view_stats_wire_len(m, d);
+                scratch.view_stats[v].unpack_from(&scratch.stats_wire[off..off + len]);
                 off += len;
                 let kern = RbfArd::from_log_hyp(&globals.views[v].log_hyp);
-                let out = bound_and_grads(&stats, &globals.views[v].z, &kern,
-                                          globals.views[v].log_beta)?;
-                f_total += out.f;
-                all_cts.push(out.cts);
-                direct.push((out.dz, out.dhyp, out.dlog_beta));
+                match bound_and_grads(&scratch.view_stats[v], &globals.views[v].z,
+                                      &kern, globals.views[v].log_beta) {
+                    Ok(out) => {
+                        f_total += out.f;
+                        all_cts.push(out.cts);
+                        direct.push((out.dz, out.dhyp, out.dlog_beta));
+                    }
+                    Err(e) => {
+                        core_err = Some(e);
+                        break;
+                    }
+                }
             }
-            Ok((f_total, all_cts, direct))
-        });
+            match core_err {
+                Some(e) => Err(e),
+                None => Ok((f_total, all_cts, direct)),
+            }
+        };
         self.timer.add(Phase::BoundCore, t0.elapsed());
 
         // 5b: cotangent broadcast — empty aborts the cycle in lockstep
-        let comm = &mut self.comm;
         let (f_total, all_cts, direct) = match core {
             Ok(parts) => {
-                let ds = &self.ds;
+                let comm = &mut self.comm;
+                let cts_wire = &mut scratch.cts_wire;
+                let all = &parts.1;
                 self.timer.time(Phase::Bcast, || {
-                    let mut wire = Vec::with_capacity(cts_wire_len(m, ds));
-                    for cts in &parts.1 {
-                        wire.extend(cts.pack());
+                    cts_wire.clear();
+                    for cts in all {
+                        cts.pack_into(cts_wire);
                     }
-                    comm.bcast(0, wire);
+                    *cts_wire = comm.bcast(0, std::mem::take(cts_wire));
                 });
                 parts
             }
             Err(e) => {
+                let comm = &mut self.comm;
                 self.timer.time(Phase::Bcast, || comm.bcast(0, Vec::new()));
                 return Err(e);
             }
         };
 
-        // 6: local vjp
+        // 6: local vjp over all views
+        self.reset_span_grads(scratch);
+        let gwire_len = grads_wire_len(m, q, views);
         let t0 = Instant::now();
         let c0 = self.clock();
-        let vjp = self.state.local_vjp(&globals, &all_cts, mu_span, s_span, c, m);
+        scratch.grads_wire.clear();
+        let mut vjp_err: Option<anyhow::Error> = None;
+        for v in 0..views {
+            match self.state.vjp_view(v, &globals.views[v], &all_cts[v],
+                                      &scratch.latents, &scratch.caches[v],
+                                      &mut scratch.dmu_span, &mut scratch.dls_span, m) {
+                Ok((dz, dhyp)) => {
+                    scratch.grads_wire.extend_from_slice(dz.as_slice());
+                    scratch.grads_wire.extend_from_slice(&dhyp);
+                }
+                Err(e) => {
+                    vjp_err = Some(e);
+                    break;
+                }
+            }
+        }
         self.compute += self.clock() - c0;
         self.timer.add(Phase::StatsVjp, t0.elapsed());
 
-        let span0_len = self.spans[0].map(|s| s.len()).unwrap_or(0) * q;
-        let (view_grads, dmu_span, dls_span, vjp_err) = match vjp {
-            Ok((vg, dmu, dls)) => (vg, dmu, dls, None),
-            Err(e) => (Vec::new(), vec![0.0; span0_len], vec![0.0; span0_len], Some(e)),
-        };
-
         // 7: reduce global partials + gather locals (fail flag again)
+        seal_wire(&mut scratch.grads_wire, vjp_err.is_none(), gwire_len);
         let t0 = Instant::now();
-        let gwire_len = grads_wire_len(m, q, self.ds.len());
-        let gwire = pack_with_flag(vjp_err.is_none().then(|| pack_grads(&view_grads)),
-                                   gwire_len);
-        let greduced = self.comm.reduce_sum(0, &gwire).expect("root");
-
-        let locals = if variational {
-            let mut mine = Vec::with_capacity(dmu_span.len() * 2);
-            mine.extend_from_slice(&dmu_span);
-            mine.extend_from_slice(&dls_span);
-            self.comm.gather(0, &mine)
-        } else {
-            self.comm.gather(0, &[])
-        };
+        let _ = self.comm.reduce_sum_into(0, &mut scratch.grads_wire);
+        let locals = self.gather_locals(scratch, vjp_err.is_none());
         self.timer.add(Phase::GatherGrads, t0.elapsed());
 
         if let Some(e) = vjp_err {
             return Err(e);
         }
-        let vjp_fails = *greduced.last().expect("non-empty reduce");
+        let vjp_fails = *scratch.grads_wire.last().expect("non-empty reduce");
         if vjp_fails > 0.0 {
             return Err(anyhow!("stats_vjp failed on {vjp_fails} rank(s)"));
         }
 
         // assemble ∇F
         let t0 = Instant::now();
-        let mut grad = vec![0.0; layout.len()];
+        let mut grad = vec![0.0; self.layout.len()];
+        let greduced = &scratch.grads_wire;
         let mut goff = 0;
         for (v, (dz_direct, dhyp_direct, dlog_beta)) in direct.iter().enumerate() {
             let o = v * view_len;
@@ -538,6 +915,7 @@ impl DistributedEvaluator {
         }
         if variational {
             let locals = locals.expect("root");
+            let n = self.layout.n;
             let base_mu = views * view_len;
             let base_ls = base_mu + n * q;
             for (r, piece) in locals.iter().enumerate() {
@@ -578,46 +956,151 @@ impl DistributedEvaluator {
     /// the rank keeps the collectives in lockstep; the first such error
     /// is returned once the leader shuts the cluster down.
     pub fn serve(&mut self) -> Result<()> {
-        let layout = &self.layout;
-        let (m, q) = (layout.m, layout.q);
-        let c = self.chunk;
-        let variational = layout.variational;
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let out = if self.pipeline {
+            self.serve_pipelined(&mut scratch)
+        } else {
+            self.serve_sync(&mut scratch)
+        };
+        self.scratch = scratch;
+        out
+    }
+
+    /// Steps 1–3 on a worker: obey the command broadcast, unpack the
+    /// globals, receive the (μ, S) span and refresh the latent slices.
+    /// Returns `None` on STOP.
+    fn worker_receive(&mut self, scratch: &mut CycleScratch) -> Option<GlobalParams> {
+        let cmd = self.comm.bcast(0, Vec::new());
+        if cmd.is_empty() || cmd[0] == CMD_STOP {
+            return None;
+        }
+        let gx = self.comm.bcast(0, Vec::new());
+        let globals = unpack_globals(&self.layout, &pad_globals(&self.layout, &gx));
+
+        if self.layout.variational {
+            if let Some(sp) = self.state.span {
+                let q = self.layout.q;
+                let msg = self.comm.recv(0, TAG_LOCALS);
+                let len = (sp.end - sp.start) * q;
+                refresh_latents(&mut scratch.latents, &self.state.view_chunks[0],
+                                sp.start, q, &msg[..len], &msg[len..]);
+            }
+        }
+        Some(globals)
+    }
+
+    /// The pipelined worker schedule: mirror image of `eval_pipelined` —
+    /// the same global collective order, with the next view's forward
+    /// shipped before blocking on this view's cotangents.
+    fn serve_pipelined(&mut self, scratch: &mut CycleScratch) -> Result<()> {
+        let views = self.layout.views;
         let rank = self.comm.rank();
         let mut sticky_err: Option<anyhow::Error> = None;
 
         loop {
-            let cmd = self.comm.bcast(0, Vec::new());
-            if cmd.is_empty() || cmd[0] == CMD_STOP {
-                let _ = self.comm.gather(0, &[self.compute]);
-                return match sticky_err {
-                    Some(e) => Err(anyhow!("rank {rank}: {e:#}")),
-                    None => Ok(()),
-                };
-            }
-            let gx = self.comm.bcast(0, Vec::new());
-            let globals = unpack_globals(layout, &pad_globals(layout, &gx));
-
-            let (mu_span, s_span): (Vec<f64>, Vec<f64>) = if variational {
-                if let Some(sp) = self.state.span {
-                    let msg = self.comm.recv(0, TAG_LOCALS);
-                    let len = (sp.end - sp.start) * q;
-                    (msg[..len].to_vec(), msg[len..].to_vec())
-                } else {
-                    (Vec::new(), Vec::new())
+            let globals = match self.worker_receive(scratch) {
+                Some(g) => g,
+                None => {
+                    let _ = self.comm.gather(0, &[self.compute]);
+                    return match sticky_err {
+                        Some(e) => Err(anyhow!("rank {rank}: {e:#}")),
+                        None => Ok(()),
+                    };
                 }
-            } else {
-                (Vec::new(), Vec::new())
+            };
+            self.reset_span_grads(scratch);
+
+            let mut fwd_err: Option<anyhow::Error> = None;
+            let mut vjp_err: Option<anyhow::Error> = None;
+            let mut vjp_ok = true;
+            let mut aborted = false;
+
+            self.fwd_reduce_view(0, &globals, scratch, &mut fwd_err);
+
+            for v in 0..views {
+                // ship the next view's forward before blocking on this
+                // view's cotangents — that reduce is what the leader's
+                // core work overlaps with
+                if v + 1 < views {
+                    self.fwd_reduce_view(v + 1, &globals, scratch, &mut fwd_err);
+                }
+
+                let cwire = self.comm.bcast(0, Vec::new());
+                if cwire.is_empty() {
+                    // leader aborted at view v; truncate the cycle the
+                    // same way it does (no vjp[v..], no gather)
+                    aborted = true;
+                    break;
+                }
+                scratch.view_cts[v].unpack_from(&cwire);
+
+                // a fwd failure on this rank skips the vjp (the leader
+                // aborts at the flagged view; see serve_sync)
+                let skip = fwd_err.is_some() || !vjp_ok;
+                let cts = std::mem::replace(&mut scratch.view_cts[v],
+                                            StatsCts::zeros(0, 0));
+                let ok = self.vjp_reduce_view(v, &globals, &cts, scratch, skip,
+                                              &mut vjp_err);
+                scratch.view_cts[v] = cts;
+                if !ok {
+                    vjp_ok = false;
+                }
+            }
+
+            if !aborted {
+                let _ = self.gather_locals(scratch, vjp_ok);
+            }
+            if sticky_err.is_none() {
+                if let Some(e) = fwd_err {
+                    sticky_err = Some(e);
+                } else if let Some(e) = vjp_err {
+                    sticky_err = Some(e);
+                }
+            }
+        }
+    }
+
+    /// The synchronous worker schedule (whole-cycle wires).
+    fn serve_sync(&mut self, scratch: &mut CycleScratch) -> Result<()> {
+        let (m, q) = (self.layout.m, self.layout.q);
+        let views = self.layout.views;
+        let rank = self.comm.rank();
+        let mut sticky_err: Option<anyhow::Error> = None;
+
+        loop {
+            let globals = match self.worker_receive(scratch) {
+                Some(g) => g,
+                None => {
+                    let _ = self.comm.gather(0, &[self.compute]);
+                    return match sticky_err {
+                        Some(e) => Err(anyhow!("rank {rank}: {e:#}")),
+                        None => Ok(()),
+                    };
+                }
             };
 
-            // fwd + reduce (with fail flag)
+            // fwd over all views + one reduction (with fail flag)
             let c0 = self.clock();
-            let fwd = self.state.local_fwd(&globals, &mu_span, &s_span, c, m, &self.ds);
+            scratch.stats_wire.clear();
+            let mut fwd_err: Option<anyhow::Error> = None;
+            for v in 0..views {
+                match self.state.fwd_view(v, &globals.views[v], &scratch.latents, m,
+                                          self.ds[v]) {
+                    Ok((st, caches)) => {
+                        scratch.caches[v] = caches;
+                        st.pack_into(&mut scratch.stats_wire);
+                    }
+                    Err(e) => {
+                        fwd_err = Some(e);
+                        break;
+                    }
+                }
+            }
             self.compute += self.clock() - c0;
-            let swire_len = stats_wire_len(m, &self.ds);
-            let wire = pack_with_flag(fwd.as_ref().ok().map(|stats| pack_stats(stats)),
-                                      swire_len);
-            let _ = self.comm.reduce_sum(0, &wire);
-            if let Err(e) = &fwd {
+            seal_wire(&mut scratch.stats_wire, fwd_err.is_none(),
+                      stats_wire_len(m, &self.ds));
+            let _ = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
+            if let Some(e) = fwd_err.as_ref() {
                 if sticky_err.is_none() {
                     sticky_err = Some(anyhow!("{e:#}"));
                 }
@@ -628,47 +1111,46 @@ impl DistributedEvaluator {
             if cwire.is_empty() {
                 continue;
             }
-            let mut all_cts = Vec::with_capacity(self.ds.len());
             let mut off = 0;
-            for &d in &self.ds {
+            for (v, &d) in self.ds.iter().enumerate() {
                 let len = 3 + m * d + m * m;
-                all_cts.push(StatsCts::unpack(m, d, &cwire[off..off + len]));
+                scratch.view_cts[v].unpack_from(&cwire[off..off + len]);
                 off += len;
             }
 
             // vjp + reduce + gather (fail flag on the reduce)
-            let vjp = if fwd.is_ok() {
+            self.reset_span_grads(scratch);
+            scratch.grads_wire.clear();
+            let mut vjp_ok = fwd_err.is_none();
+            if vjp_ok {
                 let c0 = self.clock();
-                let out = self.state.local_vjp(&globals, &all_cts, &mu_span, &s_span, c, m);
-                self.compute += self.clock() - c0;
-                out
-            } else {
-                Err(anyhow!("stats_fwd already failed on this rank"))
-            };
-
-            let span_len = self.state.span.map(|s| s.len()).unwrap_or(0) * q;
-            let (view_grads, dmu_span, dls_span, failed) = match vjp {
-                Ok((vg, dmu, dls)) => (vg, dmu, dls, false),
-                Err(e) => {
-                    if sticky_err.is_none() {
-                        sticky_err = Some(e);
+                for v in 0..views {
+                    let cts = std::mem::replace(&mut scratch.view_cts[v],
+                                                StatsCts::zeros(0, 0));
+                    let res = self.state.vjp_view(v, &globals.views[v], &cts,
+                                                  &scratch.latents, &scratch.caches[v],
+                                                  &mut scratch.dmu_span,
+                                                  &mut scratch.dls_span, m);
+                    scratch.view_cts[v] = cts;
+                    match res {
+                        Ok((dz, dhyp)) => {
+                            scratch.grads_wire.extend_from_slice(dz.as_slice());
+                            scratch.grads_wire.extend_from_slice(&dhyp);
+                        }
+                        Err(e) => {
+                            if sticky_err.is_none() {
+                                sticky_err = Some(e);
+                            }
+                            vjp_ok = false;
+                            break;
+                        }
                     }
-                    (Vec::new(), vec![0.0; span_len], vec![0.0; span_len], true)
                 }
-            };
-            let gwire_len = grads_wire_len(m, q, self.ds.len());
-            let gwire = pack_with_flag((!failed).then(|| pack_grads(&view_grads)),
-                                       gwire_len);
-            let _ = self.comm.reduce_sum(0, &gwire);
-
-            if variational {
-                let mut mine = Vec::with_capacity(dmu_span.len() * 2);
-                mine.extend_from_slice(&dmu_span);
-                mine.extend_from_slice(&dls_span);
-                let _ = self.comm.gather(0, &mine);
-            } else {
-                let _ = self.comm.gather(0, &[]);
+                self.compute += self.clock() - c0;
             }
+            seal_wire(&mut scratch.grads_wire, vjp_ok, grads_wire_len(m, q, views));
+            let _ = self.comm.reduce_sum_into(0, &mut scratch.grads_wire);
+            let _ = self.gather_locals(scratch, vjp_ok);
         }
     }
 }

@@ -41,6 +41,10 @@ pub struct EngineConfig {
     pub backend: BackendKind,
     pub artifacts_dir: PathBuf,
     pub opt: OptChoice,
+    /// Per-view pipelined evaluation cycle (compute overlapping the
+    /// collectives) vs the whole-cycle synchronous schedule. The two are
+    /// bit-identical in outputs; `false` is the debugging escape hatch.
+    pub pipeline: bool,
     pub verbose: bool,
 }
 
@@ -52,6 +56,7 @@ impl Default for EngineConfig {
             backend: BackendKind::RustCpu,
             artifacts_dir: PathBuf::from("artifacts"),
             opt: OptChoice::Lbfgs(Lbfgs { max_iters: 100, ..Default::default() }),
+            pipeline: true,
             verbose: false,
         }
     }

@@ -15,8 +15,8 @@ pub mod backend;
 pub mod engine;
 pub mod partition;
 
-pub use backend::{make_backends, Backend, ChunkData, ChunkTask, ParallelCpuBackend,
-                  RustCpuBackend, ViewParams, XlaBackend};
+pub use backend::{make_backends, Backend, ChunkData, ChunkTask, FwdCache,
+                  ParallelCpuBackend, RustCpuBackend, ViewParams, XlaBackend};
 pub use engine::{DistributedEvaluator, Engine, EngineConfig, Fitted, LatentSpec, OptChoice,
                  Problem, TrainResult, ViewSpec};
 pub use partition::{ChunkRange, Partition};

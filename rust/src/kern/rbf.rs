@@ -172,12 +172,20 @@ impl RbfArd {
     /// Pull a cotangent `ct` (n×m) of Ψ1 back to (dμ, dS, dZ, d log_hyp).
     pub fn psi1_vjp(&self, mu: &Mat, s: &Mat, z: &Mat, ct: &Mat)
                     -> (Mat, Mat, Mat, Vec<f64>) {
+        let p1 = self.psi1(mu, s, z);
+        self.psi1_vjp_with(mu, s, z, ct, &p1)
+    }
+
+    /// [`psi1_vjp`](RbfArd::psi1_vjp) with the forward Ψ1 supplied — the
+    /// fwd→vjp cache path. `p1` must equal `psi1(mu, s, z)` for these
+    /// inputs (its S = 0 limit `k(mu, z)` is the supervised case).
+    pub fn psi1_vjp_with(&self, mu: &Mat, s: &Mat, z: &Mat, ct: &Mat, p1: &Mat)
+                         -> (Mat, Mat, Mat, Vec<f64>) {
         let alpha = self.alpha();
         let q = self.q();
         let (n, m) = (mu.rows(), z.rows());
         assert_eq!((ct.rows(), ct.cols()), (n, m));
-
-        let p1 = self.psi1(mu, s, z);
+        assert_eq!((p1.rows(), p1.cols()), (n, m));
         let mut dmu = Mat::zeros(n, q);
         let mut ds = Mat::zeros(n, q);
         let mut dz = Mat::zeros(m, q);
@@ -560,6 +568,33 @@ mod tests {
         let lh = kern.to_log_hyp();
         let f_h = |x: &[f64]| RbfArd::from_log_hyp(x).kuu(&z).dot(&ct);
         assert_grad_close(&dhyp, &grad_fd(f_h, &lh, 1e-6), 1e-6, 1e-8, "kuu/dhyp");
+    }
+
+    /// Feeding the forward Ψ1 back into the VJP (the fwd→vjp cache path)
+    /// must be bit-identical to the recomputing entry point, and the S=0
+    /// exact-kernel form must agree to rounding error.
+    #[test]
+    fn prop_psi1_vjp_with_matches_recompute() {
+        Prop::new("psi1_vjp_cached").cases(10).run(|rng| {
+            let (kern, mu, s, _, z) = setup(rng, 8, 4, 2);
+            let ct = Mat::from_fn(8, 4, |_, _| rng.normal());
+            let a = kern.psi1_vjp(&mu, &s, &z, &ct);
+            let p1 = kern.psi1(&mu, &s, &z);
+            let b = kern.psi1_vjp_with(&mu, &s, &z, &ct, &p1);
+            assert!(a.0.max_abs_diff(&b.0) == 0.0, "dmu");
+            assert!(a.1.max_abs_diff(&b.1) == 0.0, "ds");
+            assert!(a.2.max_abs_diff(&b.2) == 0.0, "dz");
+            assert_eq!(a.3, b.3, "dhyp");
+
+            // supervised limit: k(x, z) is a valid Ψ1(S = 0) cache
+            let s0 = Mat::zeros(8, 2);
+            let a = kern.psi1_vjp(&mu, &s0, &z, &ct);
+            let b = kern.psi1_vjp_with(&mu, &s0, &z, &ct, &kern.k(&mu, &z));
+            assert!(a.2.max_abs_diff(&b.2) < 1e-12, "dz (S=0)");
+            for (x, y) in a.3.iter().zip(&b.3) {
+                assert!((x - y).abs() < 1e-12 * (1.0 + x.abs()), "dhyp (S=0)");
+            }
+        });
     }
 
     #[test]

@@ -63,6 +63,15 @@ impl Mat {
     pub fn as_mut_slice(&mut self) -> &mut [f64] { &mut self.data }
     pub fn into_vec(self) -> Vec<f64> { self.data }
 
+    /// Overwrite the whole matrix from a row-major slice without
+    /// reallocating (the wire-unpack hot path reuses one `Mat` per cycle
+    /// instead of a fresh `from_vec`). Panics on length mismatch.
+    pub fn set_from(&mut self, data: &[f64]) {
+        assert_eq!(data.len(), self.rows * self.cols, "set_from length {} != {}x{}",
+                   data.len(), self.rows, self.cols);
+        self.data.copy_from_slice(data);
+    }
+
     /// Borrow row `i` as a slice.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]

@@ -37,6 +37,7 @@ fn engine_config(a: &Args) -> Result<(EngineConfig, String)> {
             max_iters: a.get_parse("iters", 100usize)?,
             ..Default::default()
         }),
+        pipeline: !a.flag("no-pipeline"),
         verbose: a.flag("verbose"),
     };
     Ok((cfg, aot))
@@ -44,7 +45,7 @@ fn engine_config(a: &Args) -> Result<(EngineConfig, String)> {
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["verbose", "help"])?;
+    let args = Args::parse(argv, &["verbose", "help", "no-pipeline"])?;
     args.check_known(KNOWN)?;
 
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
@@ -125,6 +126,7 @@ fn main() -> Result<()> {
             println!("usage: gpparallel <train-bgplvm|train-sgpr|time|info> [options]");
             println!("options: --n --q --d --m --workers --chunk --backend cpu|parallel[:N]|xla");
             println!("         --iters --evals --seed --artifacts --aot-config --verbose");
+            println!("         --no-pipeline (synchronous evaluation cycle)");
             if cmd != "help" {
                 bail!("unknown command {cmd:?}");
             }

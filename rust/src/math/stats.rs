@@ -41,17 +41,35 @@ impl Stats {
     /// Flatten for `allreduce_sum` (order: scalars, P, Ψ2).
     pub fn pack(&self) -> Vec<f64> {
         let mut v = Vec::with_capacity(4 + self.p.as_slice().len() + self.psi2.as_slice().len());
-        v.extend_from_slice(&[self.psi0, self.tryy, self.kl, self.n_eff]);
-        v.extend_from_slice(self.p.as_slice());
-        v.extend_from_slice(self.psi2.as_slice());
+        self.pack_into(&mut v);
         v
     }
 
+    /// Append the wire form to `out` — the buffer-reusing pack the cycle
+    /// calls every evaluation (same layout as [`pack`](Stats::pack)).
+    pub fn pack_into(&self, out: &mut Vec<f64>) {
+        out.extend_from_slice(&[self.psi0, self.tryy, self.kl, self.n_eff]);
+        out.extend_from_slice(self.p.as_slice());
+        out.extend_from_slice(self.psi2.as_slice());
+    }
+
     pub fn unpack(m: usize, d: usize, v: &[f64]) -> Self {
+        let mut st = Stats::zeros(m, d);
+        st.unpack_from(v);
+        st
+    }
+
+    /// Overwrite `self` from a wire slice without reallocating; shapes
+    /// must match the wire length.
+    pub fn unpack_from(&mut self, v: &[f64]) {
+        let (m, d) = (self.p.rows(), self.p.cols());
         assert_eq!(v.len(), 4 + m * d + m * m, "stats wire length");
-        let p = Mat::from_vec(m, d, v[4..4 + m * d].to_vec());
-        let psi2 = Mat::from_vec(m, m, v[4 + m * d..].to_vec());
-        Stats { psi0: v[0], tryy: v[1], kl: v[2], n_eff: v[3], p, psi2 }
+        self.psi0 = v[0];
+        self.tryy = v[1];
+        self.kl = v[2];
+        self.n_eff = v[3];
+        self.p.set_from(&v[4..4 + m * d]);
+        self.psi2.set_from(&v[4 + m * d..]);
     }
 }
 
@@ -66,23 +84,39 @@ pub struct StatsCts {
 }
 
 impl StatsCts {
+    pub fn zeros(m: usize, d: usize) -> Self {
+        StatsCts { c_psi0: 0.0, c_p: Mat::zeros(m, d), c_psi2: Mat::zeros(m, m),
+                   c_tryy: 0.0, c_kl: 0.0 }
+    }
+
     pub fn pack(&self) -> Vec<f64> {
         let mut v = Vec::with_capacity(3 + self.c_p.as_slice().len() + self.c_psi2.as_slice().len());
-        v.extend_from_slice(&[self.c_psi0, self.c_tryy, self.c_kl]);
-        v.extend_from_slice(self.c_p.as_slice());
-        v.extend_from_slice(self.c_psi2.as_slice());
+        self.pack_into(&mut v);
         v
     }
 
+    /// Append the wire form to `out` (buffer-reusing pack).
+    pub fn pack_into(&self, out: &mut Vec<f64>) {
+        out.extend_from_slice(&[self.c_psi0, self.c_tryy, self.c_kl]);
+        out.extend_from_slice(self.c_p.as_slice());
+        out.extend_from_slice(self.c_psi2.as_slice());
+    }
+
     pub fn unpack(m: usize, d: usize, v: &[f64]) -> Self {
+        let mut cts = StatsCts::zeros(m, d);
+        cts.unpack_from(v);
+        cts
+    }
+
+    /// Overwrite `self` from a wire slice without reallocating.
+    pub fn unpack_from(&mut self, v: &[f64]) {
+        let (m, d) = (self.c_p.rows(), self.c_p.cols());
         assert_eq!(v.len(), 3 + m * d + m * m, "cts wire length");
-        StatsCts {
-            c_psi0: v[0],
-            c_tryy: v[1],
-            c_kl: v[2],
-            c_p: Mat::from_vec(m, d, v[3..3 + m * d].to_vec()),
-            c_psi2: Mat::from_vec(m, m, v[3 + m * d..].to_vec()),
-        }
+        self.c_psi0 = v[0];
+        self.c_tryy = v[1];
+        self.c_kl = v[2];
+        self.c_p.set_from(&v[3..3 + m * d]);
+        self.c_psi2.set_from(&v[3 + m * d..]);
     }
 }
 
@@ -108,6 +142,13 @@ pub struct ChunkGrads {
 /// y `C×D`; z `M×Q`.
 pub fn bgplvm_stats_fwd(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &Mat,
                         z: &Mat) -> Stats {
+    bgplvm_stats_fwd_cached(kern, mu, s, w, y, z).0
+}
+
+/// [`bgplvm_stats_fwd`] returning the Ψ1 matrix it already computed, so
+/// the matching VJP can skip recomputing it (the fwd→vjp cache).
+pub fn bgplvm_stats_fwd_cached(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &Mat,
+                               z: &Mat) -> (Stats, Mat) {
     let (m, d) = (z.rows(), y.cols());
     let c = mu.rows();
     let psi1 = kern.psi1(mu, s, z);
@@ -146,7 +187,7 @@ pub fn bgplvm_stats_fwd(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &Mat,
             kl += 0.5 * w[n] * (sv + mv * mv - 1.0 - sv.ln());
         }
     }
-    Stats { psi0, p, psi2, tryy, kl, n_eff }
+    (Stats { psi0, p, psi2, tryy, kl, n_eff }, psi1)
 }
 
 /// Supervised chunk statistics: S ≡ 0, no KL. At S = 0 the psi
@@ -155,6 +196,15 @@ pub fn bgplvm_stats_fwd(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &Mat,
 /// cross-covariance plus a syrk-style weighted Gram update instead of the
 /// general exp-pair loop (O(C·M²) mults vs O(C·M²·Q) exps).
 pub fn sgpr_stats_fwd(kern: &RbfArd, x: &Mat, w: &[f64], y: &Mat, z: &Mat) -> Stats {
+    sgpr_stats_fwd_cached(kern, x, w, y, z).0
+}
+
+/// [`sgpr_stats_fwd`] returning the K_fu matrix it already computed —
+/// mathematically Ψ1 at S = 0, reusable by the matching VJP. (K_fu and
+/// the general Ψ1 loop at S = 0 agree to rounding error, not bitwise, so
+/// the cached and cache-less supervised VJPs may differ in the last ulp.)
+pub fn sgpr_stats_fwd_cached(kern: &RbfArd, x: &Mat, w: &[f64], y: &Mat,
+                             z: &Mat) -> (Stats, Mat) {
     let d = y.cols();
     let c = x.rows();
     let kfu = kern.k(x, z);
@@ -184,7 +234,7 @@ pub fn sgpr_stats_fwd(kern: &RbfArd, x: &Mat, w: &[f64], y: &Mat, z: &Mat) -> St
         tryy += w[n] * y.row(n).iter().map(|v| v * v).sum::<f64>();
     }
     // kl = 0: log S is −∞ at S=0; supervised bound has no KL term
-    Stats { psi0, p, psi2, tryy, kl: 0.0, n_eff }
+    (Stats { psi0, p, psi2, tryy, kl: 0.0, n_eff }, kfu)
 }
 
 // ---------------------------------------------------------------------
@@ -194,6 +244,24 @@ pub fn sgpr_stats_fwd(kern: &RbfArd, x: &Mat, w: &[f64], y: &Mat, z: &Mat) -> St
 /// Pull the leader's cotangents back to the chunk's parameters (BGP-LVM).
 pub fn bgplvm_stats_vjp(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &Mat,
                         z: &Mat, cts: &StatsCts) -> ChunkGrads {
+    stats_vjp_impl(kern, mu, s, w, y, z, cts, cts.c_kl, None)
+}
+
+/// [`bgplvm_stats_vjp`] reusing the forward pass's Ψ1 (`psi1` from
+/// [`bgplvm_stats_fwd_cached`]) — bit-identical to recomputing, since the
+/// forward and VJP Ψ1 loops are the same pure function of the inputs.
+pub fn bgplvm_stats_vjp_cached(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &Mat,
+                               z: &Mat, cts: &StatsCts, psi1: Option<&Mat>)
+                               -> ChunkGrads {
+    stats_vjp_impl(kern, mu, s, w, y, z, cts, cts.c_kl, psi1)
+}
+
+/// Shared VJP body. `c_kl` is passed separately so the supervised path
+/// can zero it without cloning the whole cotangent struct (the M×D and
+/// M×M matrices stay borrowed). `psi1` is the optional fwd→vjp cache.
+fn stats_vjp_impl(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &Mat,
+                  z: &Mat, cts: &StatsCts, c_kl: f64, psi1: Option<&Mat>)
+                  -> ChunkGrads {
     let (c, q) = (mu.rows(), mu.cols());
     let (m, d) = (z.rows(), y.cols());
 
@@ -214,7 +282,10 @@ pub fn bgplvm_stats_vjp(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &Mat,
         }
     }
 
-    let (mut dmu, mut ds, mut dz, mut dhyp) = kern.psi1_vjp(mu, s, z, &c_psi1);
+    let (mut dmu, mut ds, mut dz, mut dhyp) = match psi1 {
+        Some(p1) => kern.psi1_vjp_with(mu, s, z, &c_psi1, p1),
+        None => kern.psi1_vjp(mu, s, z, &c_psi1),
+    };
     let (dmu2, ds2, dz2, dhyp2) = kern.psi2_vjp(mu, s, w, z, &cts.c_psi2);
     dmu.axpy(1.0, &dmu2);
     ds.axpy(1.0, &ds2);
@@ -232,8 +303,8 @@ pub fn bgplvm_stats_vjp(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &Mat,
             continue;
         }
         for qq in 0..q {
-            dmu[(n, qq)] += cts.c_kl * w[n] * mu[(n, qq)];
-            ds[(n, qq)] += cts.c_kl * 0.5 * w[n] * (1.0 - 1.0 / s[(n, qq)]);
+            dmu[(n, qq)] += c_kl * w[n] * mu[(n, qq)];
+            ds[(n, qq)] += c_kl * 0.5 * w[n] * (1.0 - 1.0 / s[(n, qq)]);
         }
     }
 
@@ -243,10 +314,15 @@ pub fn bgplvm_stats_vjp(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &Mat,
 /// Supervised VJP: only (dZ, dhyp); the μ/S slots are returned empty.
 pub fn sgpr_stats_vjp(kern: &RbfArd, x: &Mat, w: &[f64], y: &Mat, z: &Mat,
                       cts: &StatsCts) -> ChunkGrads {
+    sgpr_stats_vjp_cached(kern, x, w, y, z, cts, None)
+}
+
+/// [`sgpr_stats_vjp`] reusing the forward pass's K_fu (`kfu` from
+/// [`sgpr_stats_fwd_cached`]) as the Ψ1(S = 0) cache.
+pub fn sgpr_stats_vjp_cached(kern: &RbfArd, x: &Mat, w: &[f64], y: &Mat, z: &Mat,
+                             cts: &StatsCts, kfu: Option<&Mat>) -> ChunkGrads {
     let s0 = Mat::zeros(x.rows(), x.cols());
-    let mut cts0 = cts.clone();
-    cts0.c_kl = 0.0;
-    let g = bgplvm_stats_vjp(kern, x, &s0, w, y, z, &cts0);
+    let g = stats_vjp_impl(kern, x, &s0, w, y, z, cts, 0.0, kfu);
     ChunkGrads { dmu: Mat::zeros(0, 0), ds: Mat::zeros(0, 0), dz: g.dz, dhyp: g.dhyp }
 }
 
@@ -370,6 +446,44 @@ mod tests {
             assert!((fast.n_eff - gen.n_eff).abs() == 0.0);
             assert!(fast.p.max_abs_diff(&gen.p) < 1e-12);
             assert!(fast.psi2.max_abs_diff(&gen.psi2) < 1e-12);
+        });
+    }
+
+    /// The fwd→vjp cache must change nothing observable: bit-identical
+    /// gradients for BGP-LVM (same Ψ1 bits both ways) and rounding-error
+    /// agreement for the supervised K_fu form.
+    #[test]
+    fn prop_cached_vjp_matches_uncached() {
+        Prop::new("stats_vjp_cached").cases(10).run(|rng| {
+            let (kern, mu, s, w, y, z) = setup(rng, 10, 4, 2, 3);
+            let cts = StatsCts {
+                c_psi0: rng.normal(),
+                c_p: Mat::from_fn(4, 3, |_, _| rng.normal()),
+                c_psi2: Mat::from_fn(4, 4, |_, _| rng.normal()),
+                c_tryy: rng.normal(),
+                c_kl: rng.normal(),
+            };
+
+            let (st, psi1) = bgplvm_stats_fwd_cached(&kern, &mu, &s, &w, &y, &z);
+            assert!(psi1.max_abs_diff(&kern.psi1(&mu, &s, &z)) == 0.0);
+            let st2 = bgplvm_stats_fwd(&kern, &mu, &s, &w, &y, &z);
+            assert!(st.p.max_abs_diff(&st2.p) == 0.0 && st.psi0 == st2.psi0);
+
+            let a = bgplvm_stats_vjp(&kern, &mu, &s, &w, &y, &z, &cts);
+            let b = bgplvm_stats_vjp_cached(&kern, &mu, &s, &w, &y, &z, &cts, Some(&psi1));
+            assert!(a.dmu.max_abs_diff(&b.dmu) == 0.0, "dmu");
+            assert!(a.ds.max_abs_diff(&b.ds) == 0.0, "ds");
+            assert!(a.dz.max_abs_diff(&b.dz) == 0.0, "dz");
+            assert_eq!(a.dhyp, b.dhyp, "dhyp");
+
+            let (st, kfu) = sgpr_stats_fwd_cached(&kern, &mu, &w, &y, &z);
+            assert!(st.p.max_abs_diff(&sgpr_stats_fwd(&kern, &mu, &w, &y, &z).p) == 0.0);
+            let a = sgpr_stats_vjp(&kern, &mu, &w, &y, &z, &cts);
+            let b = sgpr_stats_vjp_cached(&kern, &mu, &w, &y, &z, &cts, Some(&kfu));
+            assert!(a.dz.max_abs_diff(&b.dz) < 1e-11, "sgpr dz");
+            for (x, yv) in a.dhyp.iter().zip(&b.dhyp) {
+                assert!((x - yv).abs() < 1e-11 * (1.0 + x.abs()), "sgpr dhyp");
+            }
         });
     }
 

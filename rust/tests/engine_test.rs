@@ -32,6 +32,7 @@ fn cfg(workers: usize, chunk: usize, backend: BackendKind, iters: usize) -> Engi
         backend,
         artifacts_dir: artifacts_dir(),
         opt: OptChoice::Lbfgs(Lbfgs { max_iters: iters, ..Default::default() }),
+        pipeline: true,
         verbose: false,
     }
 }

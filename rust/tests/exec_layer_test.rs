@@ -22,6 +22,7 @@ fn cfg(workers: usize, chunk: usize, backend: BackendKind, iters: usize) -> Engi
         backend,
         artifacts_dir: "artifacts".into(),
         opt: OptChoice::Lbfgs(Lbfgs { max_iters: iters, ..Default::default() }),
+        pipeline: true,
         verbose: false,
     }
 }

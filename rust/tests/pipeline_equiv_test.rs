@@ -1,0 +1,201 @@
+//! Pipelined vs synchronous evaluation-cycle equivalence. The per-view
+//! pipeline reorders *when* collectives run, never *what* they carry:
+//! the same chunk math reduces element-wise over the same trees, so the
+//! objective and every optimiser step must match the synchronous
+//! schedule bit for bit — across worker counts (including ranks with
+//! zero chunks), backends, and model families. The per-view abort
+//! protocol must surface mid-cycle failures as `Err` without desyncing
+//! the collectives.
+
+use gpparallel::config::BackendKind;
+use gpparallel::coordinator::{Engine, EngineConfig, LatentSpec, OptChoice, Problem,
+                              ViewSpec};
+use gpparallel::data::synthetic::{generate_supervised, SyntheticSpec};
+use gpparallel::kern::RbfArd;
+use gpparallel::linalg::Mat;
+use gpparallel::models::Mrd;
+use gpparallel::optim::Lbfgs;
+use gpparallel::testutil::prop::Rng64;
+
+fn cfg(workers: usize, chunk: usize, backend: BackendKind, iters: usize,
+       pipeline: bool) -> EngineConfig {
+    EngineConfig {
+        workers,
+        chunk,
+        backend,
+        artifacts_dir: "artifacts".into(),
+        opt: OptChoice::Lbfgs(Lbfgs { max_iters: iters, ..Default::default() }),
+        pipeline,
+        verbose: false,
+    }
+}
+
+/// Two unsupervised views sharing q(X) — the pipeline's interesting
+/// case: cotangents for view 0 arrive while view 1's stats still reduce.
+fn multi_view_problem(n: usize, seed: u64) -> Problem {
+    let mut rng = Rng64::new(seed);
+    let shared: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let v1 = Mat::from_fn(n, 3, |i, j| (shared[i] * (1.0 + 0.3 * j as f64)).sin()
+        + 0.05 * ((i * 7 + j) as f64).cos());
+    let v2 = Mat::from_fn(n, 4, |i, j| (shared[i] + 0.5 * j as f64).cos()
+        + 0.05 * ((i * 3 + j) as f64).sin());
+    Mrd::problem(&[v1, v2], 2, 12, &["test", "test"], seed)
+}
+
+/// Three views — two fwd reductions can be in flight behind a vjp, the
+/// deepest pipelining the schedule produces.
+fn three_view_problem(n: usize, seed: u64) -> Problem {
+    let mut rng = Rng64::new(seed);
+    let shared: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let views: Vec<Mat> = (0..3)
+        .map(|k| {
+            Mat::from_fn(n, 2 + k, |i, j| (shared[i] + 0.4 * (k * 2 + j) as f64).sin()
+                + 0.05 * ((i * 5 + j + k) as f64).cos())
+        })
+        .collect();
+    Mrd::problem(&views, 2, 10, &["test", "test", "test"], seed)
+}
+
+/// A supervised single-view problem (SGPR) — exercises the K_fu fwd→vjp
+/// cache path end to end.
+fn supervised_problem(n: usize, seed: u64) -> Problem {
+    let spec = SyntheticSpec { n, q: 1, d: 2, ..Default::default() };
+    let ds = generate_supervised(&spec, seed);
+    Problem {
+        latent: LatentSpec::Observed(ds.x.clone().unwrap()),
+        views: vec![ViewSpec {
+            y: ds.y.clone(),
+            z0: Mat::from_fn(8, 1, |i, _| -2.0 + 0.5 * i as f64),
+            kern0: RbfArd::iso(1.0, 1.0, 1),
+            beta0: 10.0,
+            aot_config: "test".into(),
+        }],
+        q: 1,
+    }
+}
+
+/// The pipelined objective must equal the synchronous one exactly, for
+/// every cluster size 1–9 (N=96 at chunk 16 leaves the tail ranks with
+/// zero chunks) and for both CPU backends.
+#[test]
+fn pipelined_objective_bit_identical_across_ranks() {
+    let problem = multi_view_problem(96, 31);
+    for workers in 1..=9usize {
+        for backend in [BackendKind::RustCpu, BackendKind::ParallelCpu { threads: 2 }] {
+            let sync = Engine::new(problem.clone(), cfg(workers, 16, backend, 0, false))
+                .unwrap()
+                .time_iterations(1)
+                .unwrap();
+            let pipe = Engine::new(problem.clone(), cfg(workers, 16, backend, 0, true))
+                .unwrap()
+                .time_iterations(1)
+                .unwrap();
+            assert_eq!(sync.f, pipe.f,
+                       "objective differs (workers={workers}, backend={backend:?})");
+        }
+    }
+
+    // three views: two fwd reductions in flight behind each vjp
+    let problem = three_view_problem(64, 35);
+    for workers in [1usize, 2, 5, 9] {
+        let sync = Engine::new(problem.clone(),
+                               cfg(workers, 16, BackendKind::RustCpu, 0, false))
+            .unwrap().time_iterations(1).unwrap();
+        let pipe = Engine::new(problem.clone(),
+                               cfg(workers, 16, BackendKind::RustCpu, 0, true))
+            .unwrap().time_iterations(1).unwrap();
+        assert_eq!(sync.f, pipe.f, "3-view objective differs (workers={workers})");
+    }
+}
+
+/// Short training runs must follow the identical trajectory — the
+/// optimiser is deterministic, so bit-equal traces mean bit-equal
+/// gradients at every accepted step.
+#[test]
+fn pipelined_training_trajectory_bit_identical() {
+    let problem = multi_view_problem(72, 32);
+    for backend in [BackendKind::RustCpu, BackendKind::ParallelCpu { threads: 2 }] {
+        let sync = Engine::new(problem.clone(), cfg(3, 8, backend, 6, false))
+            .unwrap().train().unwrap();
+        let pipe = Engine::new(problem.clone(), cfg(3, 8, backend, 6, true))
+            .unwrap().train().unwrap();
+        assert_eq!(sync.trace.len(), pipe.trace.len(),
+                   "iteration counts differ ({backend:?})");
+        for (a, b) in sync.trace.iter().zip(&pipe.trace) {
+            assert_eq!(a, b, "trajectories diverged ({backend:?})");
+        }
+    }
+}
+
+/// Supervised models ride the same pipeline (no (μ, S) scatter, no
+/// gather payload): objective and training must match exactly too.
+#[test]
+fn pipelined_supervised_matches_sync() {
+    let problem = supervised_problem(100, 33);
+    for workers in [1usize, 3, 5] {
+        let sync = Engine::new(problem.clone(),
+                               cfg(workers, 16, BackendKind::RustCpu, 0, false))
+            .unwrap().time_iterations(1).unwrap();
+        let pipe = Engine::new(problem.clone(),
+                               cfg(workers, 16, BackendKind::RustCpu, 0, true))
+            .unwrap().time_iterations(1).unwrap();
+        assert_eq!(sync.f, pipe.f, "supervised objective differs (workers={workers})");
+    }
+    let sync = Engine::new(problem.clone(), cfg(2, 32, BackendKind::RustCpu, 5, false))
+        .unwrap().train().unwrap();
+    let pipe = Engine::new(problem, cfg(2, 32, BackendKind::RustCpu, 5, true))
+        .unwrap().train().unwrap();
+    for (a, b) in sync.trace.iter().zip(&pipe.trace) {
+        assert_eq!(a, b, "supervised trajectories diverged");
+    }
+}
+
+/// Failure injection for the per-view abort: the *middle* view of a
+/// three-view problem is poisoned so its leader-side M×M core fails
+/// after view 0's cotangents have already been broadcast and while view
+/// 2's forward reduction is already in flight — the mid-cycle abort the
+/// pipelined protocol must truncate identically on both sides (the
+/// leader absorbs the in-flight reduction, nobody issues view 2's
+/// cotangents or gradients). Driving three evaluations through the same
+/// evaluator proves each abort left the collectives in lockstep (a
+/// desync would hang or panic, not return `Err`).
+#[test]
+fn per_view_abort_surfaces_err_without_desync() {
+    let n = 40;
+    let mut rng = Rng64::new(34);
+    let y0 = Mat::from_fn(n, 2, |_, _| rng.normal());
+    let y1 = Mat::from_fn(n, 2, |_, _| rng.normal());
+    let y2 = Mat::from_fn(n, 3, |_, _| rng.normal());
+    let mu0 = Mat::from_fn(n, 1, |_, _| rng.normal());
+    let s0 = Mat::from_vec(n, 1, vec![0.5; n]);
+    let mk_healthy = |y: Mat| ViewSpec {
+        y,
+        z0: Mat::from_fn(4, 1, |i, _| i as f64 - 1.5),
+        kern0: RbfArd::iso(1.0, 1.0, 1),
+        beta0: 2.0,
+        aot_config: "test".into(),
+    };
+    // duplicate + enormous inducing inputs with a degenerate lengthscale:
+    // view 1's statistics go non-finite and its Cholesky fails at the
+    // leader, while views 0 and 2 stay healthy.
+    let poisoned = ViewSpec {
+        y: y1,
+        z0: Mat::from_vec(4, 1, vec![f64::MAX / 1e3; 4]),
+        kern0: RbfArd::iso(1.0, 1e-300, 1),
+        beta0: 1e300,
+        aot_config: "test".into(),
+    };
+    let problem = Problem {
+        latent: LatentSpec::Variational { mu0, s0 },
+        views: vec![mk_healthy(y0), poisoned, mk_healthy(y2)],
+        q: 1,
+    };
+    for pipeline in [false, true] {
+        let result = Engine::new(problem.clone(),
+                                 cfg(3, 8, BackendKind::RustCpu, 0, pipeline))
+            .unwrap()
+            .time_iterations(3);
+        assert!(result.is_err(),
+                "poisoned view must surface Err (pipeline={pipeline})");
+    }
+}

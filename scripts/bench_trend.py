@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Validate (and summarise) BENCH_micro.json, the machine-readable bench
+snapshot `cargo bench --bench micro` writes and perf PRs commit.
+
+Schema: a JSON array of records, each
+    {"op": <non-empty str>, "size": <number > 0>, "ns_per_iter": <finite number > 0>}
+
+Exit codes:
+    0  file valid (or absent without --require)
+    1  file absent with --require
+    2  malformed JSON or records violating the schema
+
+Usage:
+    python3 scripts/bench_trend.py [--require] [path ...]
+
+Defaults to ./BENCH_micro.json. Run from CI as a non-blocking step after
+the bench so a bad emitter is caught the moment it lands, and locally to
+eyeball the per-op trend (min/max ns across sizes).
+"""
+
+import json
+import math
+import sys
+
+
+def validate(path, require):
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+    except FileNotFoundError:
+        if require:
+            print(f"{path}: missing (run `cargo bench --bench micro` first)")
+            return 1
+        print(f"{path}: not present, skipping (pass --require to enforce)")
+        return 0
+    except json.JSONDecodeError as e:
+        print(f"{path}: malformed JSON: {e}")
+        return 2
+
+    if not isinstance(data, list):
+        print(f"{path}: top level must be an array, got {type(data).__name__}")
+        return 2
+
+    errors = []
+    by_op = {}
+    for i, rec in enumerate(data):
+        where = f"{path}[{i}]"
+        if not isinstance(rec, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        extra = set(rec) - {"op", "size", "ns_per_iter"}
+        if extra:
+            errors.append(f"{where}: unknown keys {sorted(extra)}")
+        op = rec.get("op")
+        if not isinstance(op, str) or not op:
+            errors.append(f"{where}: 'op' must be a non-empty string, got {op!r}")
+            continue
+        size = rec.get("size")
+        if not isinstance(size, (int, float)) or isinstance(size, bool) or size <= 0:
+            errors.append(f"{where} ({op}): 'size' must be a positive number, got {size!r}")
+        ns = rec.get("ns_per_iter")
+        if (not isinstance(ns, (int, float)) or isinstance(ns, bool)
+                or not math.isfinite(ns) or ns <= 0):
+            errors.append(f"{where} ({op}): 'ns_per_iter' must be a finite positive "
+                          f"number, got {ns!r}")
+            continue
+        by_op.setdefault(op, []).append((size, ns))
+
+    if errors:
+        for e in errors:
+            print(e)
+        print(f"{path}: {len(errors)} malformed entr{'y' if len(errors) == 1 else 'ies'} "
+              f"out of {len(data)}")
+        return 2
+
+    print(f"{path}: {len(data)} records across {len(by_op)} ops")
+    for op in sorted(by_op):
+        points = sorted(by_op[op])
+        lo, hi = min(ns for _, ns in points), max(ns for _, ns in points)
+        sizes = "..".join(str(int(s)) for s in (points[0][0], points[-1][0]))
+        print(f"  {op:<34} sizes {sizes:<14} ns/iter {lo:>14.1f} .. {hi:>14.1f}")
+    return 0
+
+
+def main(argv):
+    require = "--require" in argv
+    paths = [a for a in argv if not a.startswith("--")] or ["BENCH_micro.json"]
+    return max(validate(p, require) for p in paths)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
