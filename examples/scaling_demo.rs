@@ -1,19 +1,30 @@
-//! Scaling demo: a small interactive slice of Fig 1a.
+//! Scaling demo: a small interactive slice of Fig 1a, plus the serving
+//! fan-out.
 //!
-//!   cargo run --release --example scaling_demo [-- --backend xla]
+//!   cargo run --release --example scaling_demo [-- --backend parallel]
 //!
-//! Times one full optimisation iteration (stats fwd + reduce + M×M core
-//! + vjp + gradient collection) of the Bayesian GP-LVM for a few dataset
-//! sizes and worker counts, and prints the paper-style table. The full
-//! sweep lives in `cargo bench --bench fig1a_scaling`.
+//! Part 1 times one full optimisation iteration (stats fwd + reduce +
+//! M×M core + vjp + gradient collection) of the Bayesian GP-LVM for a
+//! few dataset sizes and worker counts and prints the paper-style table
+//! (the full sweep lives in `cargo bench --bench fig1a_scaling`).
+//!
+//! Part 2 fits a sparse GP regressor once, then serves the same
+//! posterior through the sharded serving subsystem at several cluster
+//! sizes — the posterior is broadcast once, each prediction batch is
+//! partitioned over the ranks, and the assembled result is checked
+//! bit-identical against the single-node posterior.
 
 use anyhow::Result;
 use gpparallel::cli::Args;
+use gpparallel::collectives::Cluster;
 use gpparallel::config::BackendKind;
-use gpparallel::coordinator::{Engine, EngineConfig, OptChoice};
-use gpparallel::data::synthetic::{generate, SyntheticSpec};
-use gpparallel::models::BayesianGplvm;
+use gpparallel::coordinator::engine::serve::{worker_serve, DistributedPosterior};
+use gpparallel::coordinator::{make_backends, Engine, EngineConfig, OptChoice};
+use gpparallel::data::synthetic::{generate, generate_supervised, SyntheticSpec};
+use gpparallel::linalg::Mat;
+use gpparallel::models::{BayesianGplvm, SparseGpRegression};
 use gpparallel::optim::Lbfgs;
+use std::time::{Duration, Instant};
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), &[])?;
@@ -48,5 +59,68 @@ fn main() -> Result<()> {
     }
     println!("\n(single-core host: wall-clock is flat in workers; the projected");
     println!(" column divides the distributable work across ranks — see DESIGN.md)");
+
+    // ---------------------------------------------------------------
+    // sharded serving: one posterior, prediction batches fanned out
+    // ---------------------------------------------------------------
+    let (n, nt, batches, rows_per_chunk) = (2048usize, 2048usize, 4usize, 256usize);
+    println!("\n== sharded serving (SGPR, N={n}, Nt={nt}, {batches} batches, \
+              chunk={rows_per_chunk}) ==");
+
+    let spec = SyntheticSpec { n, q: 1, d: 2, ..Default::default() };
+    let ds = generate_supervised(&spec, 1);
+    let x = ds.x.clone().unwrap();
+    let fit_cfg = EngineConfig {
+        workers: 1,
+        chunk: 1024,
+        backend,
+        artifacts_dir: "artifacts".into(),
+        opt: OptChoice::Lbfgs(Lbfgs { max_iters: 15, ..Default::default() }),
+        pipeline: true,
+        verbose: false,
+    };
+    let model = SparseGpRegression::fit(&x, &ds.y, 48, "paper", fit_cfg, 1)?;
+    let core = model.posterior().core().clone();
+    let xstar = Mat::from_fn(nt, 1, |i, _| -2.5 + 5.0 * i as f64 / (nt - 1) as f64);
+    let (single_mean, single_var) = model.predict(&xstar);
+
+    println!("{:>8} {:>14} {:>14} {:>12}",
+             "workers", "s/batch", "rows/s", "max |Δ| vs 1-node");
+    for workers in [1usize, 2, 4] {
+        let (core_ref, xs) = (&core, &xstar);
+        let results = Cluster::run(workers, move |mut comm| {
+            let (mut backends, _rt) = make_backends(backend, &["paper".to_string()],
+                                                    std::path::Path::new("artifacts"))
+                .expect("backend construction");
+            let be = backends[0].as_mut();
+            if comm.rank() == 0 {
+                let mut dp = DistributedPosterior::leader(core_ref.clone(),
+                                                          rows_per_chunk, &mut comm);
+                let mut mean = Mat::zeros(0, 0);
+                let mut var = Vec::new();
+                let mut elapsed = Duration::ZERO;
+                for _ in 0..batches {
+                    let t0 = Instant::now();
+                    dp.predict_into(&mut comm, be, xs, &mut mean, &mut var)
+                        .expect("sharded predict");
+                    elapsed += t0.elapsed();
+                }
+                dp.finish(&mut comm);
+                Some((mean, var, elapsed.as_secs_f64() / batches as f64))
+            } else {
+                worker_serve(&mut comm, be).expect("serve");
+                None
+            }
+        });
+        let (mean, var, sec) = results[0].as_ref().expect("leader result");
+        let mut dv = 0.0f64;
+        for (a, b) in var.iter().zip(&single_var) {
+            dv = dv.max((a - b).abs());
+        }
+        let max_diff = mean.max_abs_diff(&single_mean).max(dv);
+        println!("{:>8} {:>14.5} {:>14.0} {:>12.1e}",
+                 workers, sec, nt as f64 / sec, max_diff);
+    }
+    println!("(serving is bit-identical across cluster sizes: |Δ| must print 0.0e0)");
     Ok(())
 }

@@ -276,6 +276,64 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---------------------------------------------------------------
+    // 7. sharded serving: posterior prediction fanned over ranks
+    // ---------------------------------------------------------------
+    println!("\n== sharded serving: predict throughput (M=100, Q=1, D=3) ==");
+    println!("{:>6} {:>8} {:>14} {:>14}", "Nt", "workers", "s/batch", "rows/s");
+    {
+        use gpparallel::collectives::Cluster;
+        use gpparallel::coordinator::engine::serve::{worker_serve, DistributedPosterior};
+        use gpparallel::coordinator::RustCpuBackend;
+        use gpparallel::math::predict::PosteriorCore;
+        use gpparallel::math::stats::sgpr_stats_fwd;
+
+        let (n_fit, m, q, d) = (2048usize, 100usize, 1usize, 3usize);
+        let spec = SyntheticSpec { n: n_fit, q, d, ..Default::default() };
+        let dsf = generate_supervised(&spec, 9);
+        let xf = dsf.x.clone().unwrap();
+        let zf = Mat::from_fn(m, q, |i, _| -2.0 + 4.0 * i as f64 / (m - 1) as f64);
+        let kernf = RbfArd::iso(1.0, 1.0, q);
+        let wf = vec![1.0; n_fit];
+        let stf = sgpr_stats_fwd(&kernf, &xf, &wf, &dsf.y, &zf);
+        let core = PosteriorCore::new(kernf, zf, 50.0, &stf)?;
+
+        let nt = if fast { 1024usize } else { 8192 };
+        let serve_reps = if fast { 2 } else { 5 };
+        let mut rngp = Rng64::new(10);
+        let xstar = Mat::from_fn(nt, q, |_, _| rngp.uniform_range(-2.0, 2.0));
+        for workers in [1usize, 2, 4] {
+            let (core_ref, xs) = (&core, &xstar);
+            let results = Cluster::run(workers, move |mut comm| {
+                let mut backend = RustCpuBackend;
+                if comm.rank() == 0 {
+                    let mut dp = DistributedPosterior::leader(core_ref.clone(), 256,
+                                                             &mut comm);
+                    let mut mean = Mat::zeros(0, 0);
+                    let mut var = Vec::new();
+                    // warm the partition + scratch, then time steady state
+                    dp.predict_into(&mut comm, &mut backend, xs, &mut mean, &mut var)
+                        .expect("warmup");
+                    let t0 = Instant::now();
+                    for _ in 0..serve_reps {
+                        dp.predict_into(&mut comm, &mut backend, xs, &mut mean,
+                                        &mut var).expect("predict");
+                    }
+                    let per = t0.elapsed().as_secs_f64() / serve_reps as f64;
+                    dp.finish(&mut comm);
+                    per
+                } else {
+                    worker_serve(&mut comm, &mut backend).expect("serve");
+                    0.0
+                }
+            });
+            let t_serve = results[0];
+            println!("{:>6} {:>8} {:>14.5} {:>14.0}",
+                     nt, workers, t_serve, nt as f64 / t_serve);
+            rec.push(&format!("serve_predict_w{workers}"), nt, t_serve);
+        }
+    }
+
     rec.write("BENCH_micro.json")?;
     println!("\nwrote BENCH_micro.json ({} records)", rec.0.len());
     Ok(())

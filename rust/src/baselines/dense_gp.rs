@@ -8,12 +8,15 @@
 use crate::kern::RbfArd;
 use crate::linalg::{Chol, Mat};
 use crate::math::bound::LOG2PI;
+use crate::math::predict::MIN_PREDICTIVE_VARIANCE;
 use crate::optim::{Lbfgs, Optimizer};
 use anyhow::{Context, Result};
 
 /// A dense GP regressor with RBF-ARD kernel.
 pub struct DenseGp {
+    /// Fitted (or fixed) kernel.
     pub kern: RbfArd,
+    /// Noise precision β.
     pub beta: f64,
     x: Mat,
     /// K + β⁻¹I factor.
@@ -96,7 +99,8 @@ impl DenseGp {
         let var: Vec<f64> = (0..xstar.rows())
             .map(|i| {
                 let col: f64 = (0..self.x.rows()).map(|r| v[(r, i)] * v[(r, i)]).sum();
-                (self.kern.variance - col + 1.0 / self.beta).max(1e-12)
+                (self.kern.kdiag_at(xstar.row(i)) - col + 1.0 / self.beta)
+                    .max(MIN_PREDICTIVE_VARIANCE)
             })
             .collect();
         (mean, var)

@@ -7,8 +7,11 @@ use std::collections::BTreeMap;
 /// Parsed `--key value` / `--flag` arguments plus positionals.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Non-flag arguments, in order (subcommand first).
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches that were present.
     pub flags: Vec<String>,
 }
 
@@ -37,14 +40,18 @@ impl Args {
         Ok(out)
     }
 
+    /// Was the bare switch `--name` present?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The raw value of option `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(String::as_str)
     }
 
+    /// Parse option `--name` into `T`, falling back to `default` when
+    /// absent; parse failures are errors.
     pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
         match self.get(name) {
             None => Ok(default),
@@ -53,6 +60,7 @@ impl Args {
         }
     }
 
+    /// The value of option `--name`, or an error naming it.
     pub fn require(&self, name: &str) -> Result<&str> {
         self.get(name).ok_or_else(|| anyhow!("missing required --{name}"))
     }

@@ -56,8 +56,11 @@ const TAG_REDUCE: u64 = u64::MAX - 2;
 const TAG_GATHER: u64 = u64::MAX - 3;
 
 impl Comm {
+    /// This rank's index in the cluster.
     pub fn rank(&self) -> usize { self.rank }
+    /// Cluster size P.
     pub fn size(&self) -> usize { self.size }
+    /// Is this rank 0?
     pub fn is_root(&self) -> bool { self.rank == 0 }
 
     /// The collective topology in use.
@@ -69,6 +72,7 @@ impl Comm {
 
     /// Total bytes this *cluster* has shipped (shared counter).
     pub fn bytes_sent(&self) -> u64 { self.bytes_sent.load(Ordering::Relaxed) }
+    /// Total messages this *cluster* has shipped (shared counter).
     pub fn messages_sent(&self) -> u64 { self.messages_sent.load(Ordering::Relaxed) }
 
     /// Send `data` to `dst` with a tag (non-blocking; channels buffer).

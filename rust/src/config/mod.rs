@@ -29,6 +29,8 @@ impl BackendKind {
         BackendKind::ParallelCpu { threads: 0 }
     }
 
+    /// Parse a CLI spelling: `cpu`, `parallel`, `parallel:N`, `xla`
+    /// (plus aliases); `None` when unrecognised.
     pub fn parse(s: &str) -> Option<BackendKind> {
         match s {
             "cpu" | "rust" | "rust-cpu" => Some(BackendKind::RustCpu),
@@ -42,6 +44,7 @@ impl BackendKind {
         }
     }
 
+    /// Canonical display name.
     pub fn name(self) -> &'static str {
         match self {
             BackendKind::RustCpu => "rust-cpu",
@@ -59,6 +62,7 @@ pub struct RunConfig {
     /// Datapoints per fixed-shape chunk (must match an AOT config for
     /// the Xla backend).
     pub chunk: usize,
+    /// Which backend computes the per-worker statistics.
     pub backend: BackendKind,
     /// Inducing point count M.
     pub m: usize,
@@ -70,6 +74,7 @@ pub struct RunConfig {
     pub artifacts_dir: std::path::PathBuf,
     /// AOT config name (e.g. "paper") for the Xla backend.
     pub aot_config: String,
+    /// RNG seed (datasets, initialisation, partitions).
     pub seed: u64,
 }
 
@@ -90,6 +95,7 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
+    /// The optimiser this configuration implies.
     pub fn optimizer(&self) -> Lbfgs {
         Lbfgs { max_iters: self.max_iters, ..Default::default() }
     }

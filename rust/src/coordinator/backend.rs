@@ -15,10 +15,25 @@
 //! differ only in speed. Construction goes through [`make_backends`], the
 //! factory keyed by [`BackendKind`] — the evaluation cycle never matches
 //! on the kind itself.
+//!
+//! ## The `FwdCache` contract
+//!
+//! The batch API threads an opaque per-chunk [`FwdCache`] from
+//! `stats_fwd_batch` to the matching `stats_vjp_batch` call (same tasks,
+//! same order) so the VJP can reuse what the forward pass already
+//! computed (today: the chunk's Ψ1 / K_fu matrix). The contract is
+//! **accept-and-ignore**: an empty cache is always valid, a backend with
+//! nothing to carry host-side returns `FwdCache::default()`, and a VJP
+//! handed an empty/missing cache recomputes — so caching can never
+//! change results, only skip work. [`Backend::predict_batch`] follows
+//! the same philosophy for serving: backends without a prediction
+//! kernel (the XLA artifact set has none) accept the call and run the
+//! shared host fallback.
 
 use crate::config::BackendKind;
 use crate::kern::RbfArd;
 use crate::linalg::Mat;
+use crate::math::predict::PosteriorCore;
 use crate::math::stats::{self, ChunkGrads, Stats, StatsCts};
 use crate::runtime::{Arg, Executable, Runtime};
 use anyhow::{Context, Result};
@@ -45,7 +60,9 @@ pub struct ChunkData {
 
 /// Per-view parameters as broadcast each evaluation.
 pub struct ViewParams<'a> {
+    /// Inducing inputs, M × Q.
     pub z: &'a Mat,
+    /// Kernel hyperparameters as `[log σ², log ℓ_1, …]`.
     pub log_hyp: &'a [f64],
 }
 
@@ -57,11 +74,15 @@ pub struct ViewParams<'a> {
 /// evaluator's reusable per-chunk buffers (refreshed in place each
 /// cycle) rather than being allocated per call.
 pub struct ChunkTask<'a> {
+    /// The rank-resident chunk (mask, Y tile, supervised x).
     pub chunk: &'a ChunkData,
+    /// The chunk's (μ, S) slice for variational problems; `None` for
+    /// supervised ones.
     pub latent: Option<(&'a Mat, &'a Mat)>,
 }
 
 impl ChunkTask<'_> {
+    /// The chunk's (μ, S) slice, reborrowed at the local lifetime.
     pub fn latent(&self) -> Option<(&Mat, &Mat)> {
         self.latent
     }
@@ -86,12 +107,15 @@ pub struct FwdCache {
 /// implementations loop serially, and backends with intra-rank
 /// parallelism override them.
 pub trait Backend {
+    /// One chunk's forward statistics.
     fn stats_fwd(&mut self, chunk: &ChunkData, latent: Option<(&Mat, &Mat)>,
                  view: &ViewParams, include_kl: bool) -> Result<Stats>;
 
+    /// One chunk's VJP under the leader's cotangents.
     fn stats_vjp(&mut self, chunk: &ChunkData, latent: Option<(&Mat, &Mat)>,
                  view: &ViewParams, cts: &StatsCts) -> Result<ChunkGrads>;
 
+    /// Which [`BackendKind`] built this backend.
     fn kind(&self) -> BackendKind;
 
     /// Forward statistics for every chunk of a rank, in chunk order,
@@ -114,6 +138,24 @@ pub trait Backend {
         tasks.iter()
             .map(|t| self.stats_vjp(t.chunk, t.latent(), view, cts))
             .collect()
+    }
+
+    /// Predictive mean/variance for rows `[row0, row0 + rows)` of
+    /// `xstar` against a broadcast [`PosteriorCore`] — the serving
+    /// counterpart of the training batch calls. Writes into `mean_out`
+    /// (`rows × D`, row-major) and `var_out` (`rows`).
+    ///
+    /// The default is the core's serial per-row loop.
+    /// [`ParallelCpuBackend`] overrides it to fan contiguous row blocks
+    /// across scoped threads (bit-identical — the per-row arithmetic is
+    /// untouched and rows are independent). The XLA backend has no
+    /// prediction artifact, so it accepts the call and takes this host
+    /// fallback — the `FwdCache`-style accept-and-ignore contract.
+    fn predict_batch(&mut self, core: &PosteriorCore, xstar: &Mat, row0: usize,
+                     rows: usize, mean_out: &mut [f64], var_out: &mut [f64])
+                     -> Result<()> {
+        core.predict_rows_into(xstar, row0, rows, mean_out, var_out);
+        Ok(())
     }
 }
 
@@ -252,6 +294,7 @@ pub struct ParallelCpuBackend {
 }
 
 impl ParallelCpuBackend {
+    /// Build with a fixed thread count; 0 = one per available core.
     pub fn new(threads: usize) -> ParallelCpuBackend {
         ParallelCpuBackend { threads }
     }
@@ -327,6 +370,35 @@ impl Backend for ParallelCpuBackend {
     fn stats_vjp_batch(&mut self, tasks: &[ChunkTask], view: &ViewParams,
                        cts: &StatsCts, caches: &[FwdCache]) -> Result<Vec<ChunkGrads>> {
         self.run_batch(tasks, |i, t| cpu_vjp_one(t, view, cts, caches.get(i)))
+    }
+
+    /// Row-block fan-out: contiguous blocks of prediction rows go to
+    /// scoped threads, each writing a disjoint slice of the output
+    /// buffers. Per-row arithmetic is the shared core loop, so the
+    /// result is bit-identical to the serial default.
+    fn predict_batch(&mut self, core: &PosteriorCore, xstar: &Mat, row0: usize,
+                     rows: usize, mean_out: &mut [f64], var_out: &mut [f64])
+                     -> Result<()> {
+        let d = core.d();
+        let threads = self.fan_out(rows);
+        if threads <= 1 || rows <= 1 || d == 0 {
+            core.predict_rows_into(xstar, row0, rows, mean_out, var_out);
+            return Ok(());
+        }
+        let per = rows.saturating_add(threads - 1) / threads;
+        std::thread::scope(|scope| {
+            for (b, (mblock, vblock)) in mean_out
+                .chunks_mut(per * d)
+                .zip(var_out.chunks_mut(per))
+                .enumerate()
+            {
+                scope.spawn(move || {
+                    core.predict_rows_into(xstar, row0 + b * per, vblock.len(),
+                                           mblock, vblock);
+                });
+            }
+        });
+        Ok(())
     }
 }
 
@@ -521,6 +593,44 @@ mod tests {
             assert_eq!(a.dhyp, b.dhyp);
             assert!(u.dmu.max_abs_diff(&b.dmu) == 0.0, "cache changed the VJP");
             assert!(u.dz.max_abs_diff(&b.dz) == 0.0, "cache changed the VJP");
+        }
+    }
+
+    /// `predict_batch` on the parallel backend must reproduce the serial
+    /// default bit for bit, for thread counts that do and don't divide
+    /// the row count, and for offset row ranges.
+    #[test]
+    fn parallel_predict_batch_bit_identical_to_serial() {
+        use crate::math::predict::PosteriorCore;
+        use crate::math::stats::sgpr_stats_fwd;
+
+        let (n, m, q, d) = (40usize, 9usize, 2usize, 3usize);
+        let mut rng = Rng64::new(123);
+        let x = Mat::from_fn(n, q, |_, _| rng.normal());
+        let y = Mat::from_fn(n, d, |_, _| rng.normal());
+        let z = Mat::from_fn(m, q, |_, _| rng.normal());
+        let kern = RbfArd::iso(1.1, 0.9, q);
+        let w = vec![1.0; n];
+        let st = sgpr_stats_fwd(&kern, &x, &w, &y, &z);
+        let core = PosteriorCore::new(kern, z, 30.0, &st).unwrap();
+
+        let nt = 23;
+        let xstar = Mat::from_fn(nt, q, |_, _| rng.normal());
+        for (row0, rows) in [(0usize, nt), (5, 11), (22, 1)] {
+            let mut mean_s = vec![0.0; rows * d];
+            let mut var_s = vec![0.0; rows];
+            RustCpuBackend
+                .predict_batch(&core, &xstar, row0, rows, &mut mean_s, &mut var_s)
+                .unwrap();
+            for threads in [1usize, 2, 3, 7, 32] {
+                let mut mean_p = vec![0.0; rows * d];
+                let mut var_p = vec![0.0; rows];
+                ParallelCpuBackend::new(threads)
+                    .predict_batch(&core, &xstar, row0, rows, &mut mean_p, &mut var_p)
+                    .unwrap();
+                assert_eq!(mean_p, mean_s, "threads={threads} rows={row0}+{rows}");
+                assert_eq!(var_p, var_s, "threads={threads} rows={row0}+{rows}");
+            }
         }
     }
 

@@ -22,6 +22,12 @@
 //!   [`EngineConfig`], [`TrainResult`]): rank 0 is the leader (it also
 //!   computes, like an MPI root), every rank owns a contiguous run of
 //!   fixed-shape chunks.
+//! - [`serve`] — sharded serving: the fitted posterior is broadcast
+//!   once and prediction batches are partitioned over the same ranks
+//!   ([`DistributedPosterior`], bit-identical to the single-node
+//!   posterior). Entered from a training cluster via
+//!   `DistributedEvaluator::begin_serving` or standalone over a raw
+//!   `Comm`.
 //!
 //! The engine is **multi-view** from the start: SGPR is one supervised
 //! view, the Bayesian GP-LVM is one unsupervised view, MRD is several
@@ -34,8 +40,10 @@
 
 pub mod cycle;
 pub mod problem;
+pub mod serve;
 pub mod train;
 
 pub use cycle::DistributedEvaluator;
 pub use problem::{Fitted, LatentSpec, Problem, ViewSpec};
+pub use serve::DistributedPosterior;
 pub use train::{Engine, EngineConfig, OptChoice, TrainResult};

@@ -17,11 +17,13 @@
 //! issues the same collective sequence, but compute overlaps the
 //! in-flight communication:
 //!
-//!       fwd[0] ── reduce[0]
-//!       for each view v:
-//!   L:    core[v] ── bcast cts[v] ─┐   fwd[v+1] ── reduce[v+1]
-//!   W:    fwd[v+1] ── reduce[v+1]  └─▸ vjp[v] ── reduce grads[v]
-//!       gather (dμ, d log S)
+//! ```text
+//!     fwd[0] ── reduce[0]
+//!     for each view v:
+//! L:    core[v] ── bcast cts[v] ─┐   fwd[v+1] ── reduce[v+1]
+//! W:    fwd[v+1] ── reduce[v+1]  └─▸ vjp[v] ── reduce grads[v]
+//!     gather (dμ, d log S)
+//! ```
 //!
 //! so view v's `stats_vjp` starts as soon as view v's cotangents land
 //! while view v+1's forward statistics are still reducing through the
@@ -36,7 +38,16 @@
 //!
 //! [`DistributedEvaluator`] owns one rank's half of that conversation:
 //! the leader drives it through [`DistributedEvaluator::eval`], workers
-//! sit in [`DistributedEvaluator::serve`]. Both sides keep the
+//! sit in [`DistributedEvaluator::serve`]. Beyond EVAL and STOP, the
+//! command broadcast carries a third verb, SERVE: the leader switches
+//! the whole cluster into a sharded *prediction* session
+//! ([`begin_serving`](DistributedEvaluator::begin_serving) /
+//! [`predict_sharded`](DistributedEvaluator::predict_sharded) /
+//! [`end_serving`](DistributedEvaluator::end_serving), protocol in
+//! [`super::serve`]) and back, so a freshly fitted model is served by
+//! the same ranks that trained it without leaving the SPMD world.
+//!
+//! Both sides keep the
 //! collectives in lockstep even when a rank's compute fails mid-cycle:
 //! failures ride a trailing fail-count element on each reduction, and a
 //! leader-side failure aborts the cycle with an empty cotangent
@@ -48,6 +59,7 @@
 
 use super::problem::{pad_globals, unpack_globals, GlobalParams, LatentSpec, ParamLayout,
                      Problem};
+use super::serve::{self, DistributedPosterior};
 use super::train::EngineConfig;
 use crate::collectives::Comm;
 use crate::config::BackendKind;
@@ -57,6 +69,7 @@ use crate::coordinator::partition::{ChunkRange, Partition};
 use crate::kern::RbfArd;
 use crate::linalg::Mat;
 use crate::math::bound::bound_and_grads;
+use crate::math::predict::PosteriorCore;
 use crate::math::stats::{Stats, StatsCts};
 use crate::metrics::{thread_cpu_time, Phase, PhaseTimer};
 use crate::runtime::Runtime;
@@ -69,7 +82,19 @@ use std::time::Instant;
 
 const CMD_EVAL: f64 = 1.0;
 const CMD_STOP: f64 = 0.0;
+/// Switch the cluster into a sharded serving session (`engine::serve`).
+const CMD_SERVE: f64 = 2.0;
 const TAG_LOCALS: u64 = 100;
+
+/// What the leader's command broadcast told a worker to do next.
+enum WorkerCmd {
+    /// Run one evaluation cycle with these global parameters.
+    Eval(GlobalParams),
+    /// Enter a sharded serving session until the leader closes it.
+    Serve,
+    /// Shut down (report compute totals and return).
+    Stop,
+}
 
 /// Wire length of one view's statistics (scalars + P + Ψ2), excluding
 /// the trailing fail-count element. The single source of truth for the
@@ -357,6 +382,9 @@ pub struct DistributedEvaluator {
     /// Reusable hot-path buffers (taken out for the duration of each
     /// `eval`/`serve` call so `self` stays freely borrowable).
     scratch: CycleScratch,
+    /// Leader-side serving session, when one is open
+    /// ([`begin_serving`](DistributedEvaluator::begin_serving)).
+    sharded: Option<DistributedPosterior>,
 }
 
 impl DistributedEvaluator {
@@ -399,9 +427,11 @@ impl DistributedEvaluator {
             compute_wall,
             pipeline: cfg.pipeline,
             scratch,
+            sharded: None,
         })
     }
 
+    /// This rank's index (0 = leader).
     pub fn rank(&self) -> usize {
         self.comm.rank()
     }
@@ -411,10 +441,12 @@ impl DistributedEvaluator {
         &self.timer
     }
 
+    /// Cluster-wide bytes shipped so far (shared counter).
     pub fn bytes_sent(&self) -> u64 {
         self.comm.bytes_sent()
     }
 
+    /// Cluster-wide message count so far (shared counter).
     pub fn messages_sent(&self) -> u64 {
         self.comm.messages_sent()
     }
@@ -557,6 +589,12 @@ impl DistributedEvaluator {
     /// park back at the command broadcast, ready for the next `eval` or
     /// `finish`.
     pub fn eval(&mut self, x: &[f64]) -> Result<(f64, Vec<f64>)> {
+        if self.sharded.is_some() {
+            // Workers are parked in the serving loop; an EVAL broadcast
+            // would be misread as a serve sub-command and desync the
+            // cluster. Refuse instead.
+            return Err(anyhow!("a serving session is open: call end_serving first"));
+        }
         // Scratch is taken out for the call so `self`'s other fields stay
         // freely borrowable alongside it; restored even on error.
         let mut scratch = std::mem::take(&mut self.scratch);
@@ -936,8 +974,14 @@ impl DistributedEvaluator {
     }
 
     /// Leader: stop the workers and collect every rank's distributable
-    /// compute-seconds (indexed by rank).
+    /// compute-seconds (indexed by rank). A still-open serving session
+    /// is closed first, so the workers are back at the command broadcast
+    /// when the STOP lands (a raw STOP would be misread inside the
+    /// serving loop and deadlock the shutdown).
     pub fn finish(&mut self) -> Vec<f64> {
+        if self.sharded.is_some() {
+            let _ = self.end_serving();
+        }
         self.comm.bcast(0, vec![CMD_STOP]);
         self.comm
             .gather(0, &[self.compute])
@@ -945,6 +989,50 @@ impl DistributedEvaluator {
             .into_iter()
             .map(|v| v.first().copied().unwrap_or(0.0))
             .collect()
+    }
+
+    // -----------------------------------------------------------------
+    // leader side: sharded serving
+    // -----------------------------------------------------------------
+
+    /// Leader: switch the cluster into a sharded serving session —
+    /// broadcast the precomputed posterior once; workers leave the
+    /// training command loop and enter the serving loop. Batches then go
+    /// through [`predict_sharded`](DistributedEvaluator::predict_sharded)
+    /// until [`end_serving`](DistributedEvaluator::end_serving) hands
+    /// the workers back to the training loop.
+    pub fn begin_serving(&mut self, core: PosteriorCore, rows_per_chunk: usize)
+                         -> Result<()> {
+        if self.sharded.is_some() {
+            return Err(anyhow!("a serving session is already open"));
+        }
+        self.comm.bcast(0, vec![CMD_SERVE]);
+        self.sharded = Some(DistributedPosterior::leader(core, rows_per_chunk,
+                                                         &mut self.comm));
+        Ok(())
+    }
+
+    /// Leader: predict one batch through the open serving session,
+    /// sharded across every rank of the cluster (rank 0 computes its own
+    /// shard through the same backend it trains with).
+    pub fn predict_sharded(&mut self, xstar: &Mat) -> Result<(Mat, Vec<f64>)> {
+        match self.sharded.as_mut() {
+            None => Err(anyhow!("no serving session: call begin_serving first")),
+            Some(dp) => dp.predict(&mut self.comm, self.state.backends[0].as_mut(),
+                                   xstar),
+        }
+    }
+
+    /// Leader: close the serving session (workers park back at the
+    /// training command broadcast, ready for `eval` or `finish`).
+    pub fn end_serving(&mut self) -> Result<()> {
+        match self.sharded.take() {
+            None => Err(anyhow!("no serving session is open")),
+            Some(mut dp) => {
+                dp.finish(&mut self.comm);
+                Ok(())
+            }
+        }
     }
 
     // -----------------------------------------------------------------
@@ -968,11 +1056,13 @@ impl DistributedEvaluator {
 
     /// Steps 1–3 on a worker: obey the command broadcast, unpack the
     /// globals, receive the (μ, S) span and refresh the latent slices.
-    /// Returns `None` on STOP.
-    fn worker_receive(&mut self, scratch: &mut CycleScratch) -> Option<GlobalParams> {
+    fn worker_receive(&mut self, scratch: &mut CycleScratch) -> WorkerCmd {
         let cmd = self.comm.bcast(0, Vec::new());
         if cmd.is_empty() || cmd[0] == CMD_STOP {
-            return None;
+            return WorkerCmd::Stop;
+        }
+        if cmd[0] == CMD_SERVE {
+            return WorkerCmd::Serve;
         }
         let gx = self.comm.bcast(0, Vec::new());
         let globals = unpack_globals(&self.layout, &pad_globals(&self.layout, &gx));
@@ -986,7 +1076,15 @@ impl DistributedEvaluator {
                                 sp.start, q, &msg[..len], &msg[len..]);
             }
         }
-        Some(globals)
+        WorkerCmd::Eval(globals)
+    }
+
+    /// Worker side of a whole serving session (entered on CMD_SERVE,
+    /// returns when the leader closes it). A serving failure is reported
+    /// through the session's own fail-flag protocol; the returned error
+    /// is merged into the worker loop's sticky error.
+    fn worker_serve_session(&mut self) -> Result<()> {
+        serve::worker_serve(&mut self.comm, self.state.backends[0].as_mut())
     }
 
     /// The pipelined worker schedule: mirror image of `eval_pipelined` —
@@ -999,8 +1097,16 @@ impl DistributedEvaluator {
 
         loop {
             let globals = match self.worker_receive(scratch) {
-                Some(g) => g,
-                None => {
+                WorkerCmd::Eval(g) => g,
+                WorkerCmd::Serve => {
+                    if let Err(e) = self.worker_serve_session() {
+                        if sticky_err.is_none() {
+                            sticky_err = Some(e);
+                        }
+                    }
+                    continue;
+                }
+                WorkerCmd::Stop => {
                     let _ = self.comm.gather(0, &[self.compute]);
                     return match sticky_err {
                         Some(e) => Err(anyhow!("rank {rank}: {e:#}")),
@@ -1069,8 +1175,16 @@ impl DistributedEvaluator {
 
         loop {
             let globals = match self.worker_receive(scratch) {
-                Some(g) => g,
-                None => {
+                WorkerCmd::Eval(g) => g,
+                WorkerCmd::Serve => {
+                    if let Err(e) = self.worker_serve_session() {
+                        if sticky_err.is_none() {
+                            sticky_err = Some(e);
+                        }
+                    }
+                    continue;
+                }
+                WorkerCmd::Stop => {
                     let _ = self.comm.gather(0, &[self.compute]);
                     return match sticky_err {
                         Some(e) => Err(anyhow!("rank {rank}: {e:#}")),

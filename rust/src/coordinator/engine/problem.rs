@@ -5,8 +5,8 @@
 //!   [ view 0: log_hyp (Q+1) | log β | Z (M·Q) ] … [ view V−1: … ]
 //!   [ μ (N·Q) | log S (N·Q) ]          (variational problems only)
 //!
-//! [`ParamLayout`] is the single source of truth for those offsets; the
-//! cycle and the trainer never hand-compute them.
+//! `ParamLayout` (crate-internal) is the single source of truth for
+//! those offsets; the cycle and the trainer never hand-compute them.
 
 use crate::kern::RbfArd;
 use crate::linalg::Mat;
@@ -37,6 +37,7 @@ pub enum LatentSpec {
 }
 
 impl LatentSpec {
+    /// Does q(X) carry optimisable variational parameters?
     pub fn is_variational(&self) -> bool {
         matches!(self, LatentSpec::Variational { .. })
     }
@@ -45,12 +46,16 @@ impl LatentSpec {
 /// A complete inference problem.
 #[derive(Clone, Debug)]
 pub struct Problem {
+    /// The latent-input specification shared by all views.
     pub latent: LatentSpec,
+    /// The observed views (one for SGPR/BGP-LVM, several for MRD).
     pub views: Vec<ViewSpec>,
+    /// Latent dimensionality Q.
     pub q: usize,
 }
 
 impl Problem {
+    /// Datapoint count N.
     pub fn n(&self) -> usize {
         self.views[0].y.rows()
     }
@@ -85,8 +90,11 @@ impl Problem {
 /// Fitted parameters after training.
 #[derive(Clone, Debug)]
 pub struct Fitted {
+    /// Per-view fitted kernels.
     pub kerns: Vec<RbfArd>,
+    /// Per-view fitted noise precisions β.
     pub betas: Vec<f64>,
+    /// Per-view fitted inducing inputs (M × Q).
     pub zs: Vec<Mat>,
     /// Posterior means (variational) or the observed X (supervised).
     pub mu: Mat,

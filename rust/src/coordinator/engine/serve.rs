@@ -1,0 +1,402 @@
+//! Sharded serving: distribute the posterior prediction path across
+//! ranks.
+//!
+//! Training parallelises the *fit*; this module parallelises the
+//! *serve*. The precomputed posterior state
+//! ([`PosteriorCore`]: `A⁻¹P`, the Woodbury matrix, kernel, Z) is
+//! broadcast through `Comm::bcast` **once per session**, then each
+//! prediction batch is partitioned over ranks with the same
+//! [`Partition`] machinery training uses for datapoints:
+//!
+//! ```text
+//!   L:  bcast [PREDICT, Nt] ── send shard rows ──▸ compute own shard ── gather
+//!   W:  bcast ───────────────▸ recv shard ───────▸ predict_batch ────── gather
+//! ```
+//!
+//! Per-shard evaluation goes through [`Backend::predict_batch`] (serial
+//! scalar rows on `rust-cpu`, intra-rank row-block fan-out on
+//! `parallel-cpu`, host fallback on `xla`), and the per-rank results are
+//! gathered back to the leader in rank order. Prediction rows are
+//! independent — there is **no cross-row reduction** — so the assembled
+//! output is bit-identical to the single-node
+//! [`Posterior`](crate::models::Posterior) built from the same core, at
+//! every cluster size (asserted for ranks 1–9 in
+//! `rust/tests/serve_test.rs`).
+//!
+//! Failure protocol: a rank whose shard computation errors ships a
+//! one-element `[1.0]` failure payload instead of its results, so the
+//! gather stays in lockstep and the leader surfaces the failure as an
+//! `Err` without desyncing the session.
+//!
+//! Steady-state allocation: the leader caches the row partition per
+//! batch size and reuses wire/output scratch buffers
+//! (`CycleScratch`-style), so serving a stream of same-sized batches
+//! does not allocate beyond the transport's own message copies.
+//!
+//! Two ways in:
+//! - standalone, over a raw [`Comm`] (see `examples/scaling_demo.rs`):
+//!   [`DistributedPosterior::leader`] / [`worker_serve`];
+//! - from a training cluster, via
+//!   [`DistributedEvaluator::begin_serving`](super::cycle::DistributedEvaluator::begin_serving) —
+//!   a fitted model is served by the same ranks without leaving the
+//!   SPMD world.
+
+use crate::collectives::Comm;
+use crate::coordinator::backend::Backend;
+use crate::coordinator::partition::Partition;
+use crate::linalg::Mat;
+use crate::math::predict::PosteriorCore;
+use anyhow::{anyhow, Result};
+
+/// Tag for the leader → worker prediction-shard sends (disjoint from the
+/// training cycle's `TAG_LOCALS` and the collective tags).
+const TAG_XSTAR: u64 = 300;
+
+/// Serve-session sub-commands (broadcast at each batch).
+const SRV_PREDICT: f64 = 1.0;
+const SRV_DONE: f64 = 0.0;
+
+/// Reusable per-session buffers so the steady-state serve loop stops
+/// allocating: command/shard wires, the worker's shard matrix, per-rank
+/// mean/variance staging and the gather payload.
+#[derive(Default)]
+struct ServeScratch {
+    /// Sub-command broadcast buffer (round-trips through `bcast`).
+    cmd: Vec<f64>,
+    /// Leader-side per-rank shard wire (packed X* rows).
+    xwire: Vec<f64>,
+    /// Worker-side received shard (rows × Q).
+    xshard: Mat,
+    /// This rank's shard mean (rows × D, row-major).
+    mean: Vec<f64>,
+    /// This rank's shard variance (rows).
+    var: Vec<f64>,
+    /// Gather payload: `mean ++ var ++ [fail flag]`.
+    payload: Vec<f64>,
+}
+
+/// One rank's half of a sharded serving session. Build with
+/// [`DistributedPosterior::leader`] on rank 0 and
+/// [`DistributedPosterior::worker`] elsewhere (or let
+/// [`worker_serve`] do both worker steps); the construction pair
+/// performs the one-time posterior broadcast.
+pub struct DistributedPosterior {
+    core: PosteriorCore,
+    /// Rows per partition chunk (the serving analog of the training
+    /// chunk size; granularity of the per-rank row split).
+    rows_per_chunk: usize,
+    /// Cached row partition, keyed by the batch size it was built for.
+    part: Option<Partition>,
+    scratch: ServeScratch,
+}
+
+impl DistributedPosterior {
+    /// Leader (rank 0): broadcast `core` (and the partition granularity)
+    /// to every rank, opening the serving session.
+    pub fn leader(core: PosteriorCore, rows_per_chunk: usize, comm: &mut Comm)
+                  -> DistributedPosterior {
+        assert!(rows_per_chunk > 0, "rows_per_chunk must be positive");
+        let mut wire = Vec::with_capacity(
+            1 + PosteriorCore::wire_len(core.q(), core.m(), core.d()));
+        wire.push(rows_per_chunk as f64);
+        core.pack_into(&mut wire);
+        comm.bcast(0, wire);
+        DistributedPosterior { core, rows_per_chunk, part: None,
+                               scratch: ServeScratch::default() }
+    }
+
+    /// Worker: receive the posterior broadcast that opens the session.
+    pub fn worker(comm: &mut Comm) -> Result<DistributedPosterior> {
+        let wire = comm.bcast(0, Vec::new());
+        if wire.is_empty() {
+            return Err(anyhow!("empty posterior broadcast"));
+        }
+        let rows_per_chunk = wire[0] as usize;
+        if rows_per_chunk == 0 {
+            return Err(anyhow!("rows_per_chunk must be positive"));
+        }
+        let core = PosteriorCore::unpack(&wire[1..])?;
+        Ok(DistributedPosterior { core, rows_per_chunk, part: None,
+                                  scratch: ServeScratch::default() })
+    }
+
+    /// The broadcast posterior state.
+    pub fn core(&self) -> &PosteriorCore {
+        &self.core
+    }
+
+    /// Refresh the cached row partition for a batch of `nt` rows
+    /// (recomputed only when the batch size changes).
+    fn partition_for(&mut self, nt: usize, ranks: usize) -> &Partition {
+        let stale = self.part.as_ref().map(|p| p.n != nt).unwrap_or(true);
+        if stale {
+            self.part = Some(Partition::new(nt, self.rows_per_chunk, ranks));
+        }
+        self.part.as_ref().expect("partition just ensured")
+    }
+
+    /// Leader: predict one batch, sharded across ranks (allocating
+    /// convenience wrapper around
+    /// [`predict_into`](DistributedPosterior::predict_into)).
+    pub fn predict(&mut self, comm: &mut Comm, backend: &mut dyn Backend,
+                   xstar: &Mat) -> Result<(Mat, Vec<f64>)> {
+        let mut mean = Mat::zeros(0, 0);
+        let mut var = Vec::new();
+        self.predict_into(comm, backend, xstar, &mut mean, &mut var)?;
+        Ok((mean, var))
+    }
+
+    /// Leader: predict one batch, sharded across ranks, into reusable
+    /// output buffers (resized only when the batch shape changes — the
+    /// zero-allocation steady-state entry point).
+    ///
+    /// Row `i` of `xstar` produces row `i` of `mean_out` and
+    /// `var_out[i]`; results are assembled in rank order, which is row
+    /// order, so the output is bit-identical to the single-node
+    /// posterior.
+    pub fn predict_into(&mut self, comm: &mut Comm, backend: &mut dyn Backend,
+                        xstar: &Mat, mean_out: &mut Mat, var_out: &mut Vec<f64>)
+                        -> Result<()> {
+        let nt = xstar.rows();
+        let d = self.core.d();
+        if xstar.cols() != self.core.q() {
+            return Err(anyhow!("xstar has Q={}, posterior expects Q={}",
+                               xstar.cols(), self.core.q()));
+        }
+        if mean_out.rows() != nt || mean_out.cols() != d {
+            *mean_out = Mat::zeros(nt, d);
+        }
+        var_out.resize(nt, 0.0);
+        if nt == 0 {
+            return Ok(()); // nothing to shard; no collective round needed
+        }
+
+        let ranks = comm.size();
+        self.partition_for(nt, ranks);
+        let scratch = &mut self.scratch;
+
+        // announce the batch
+        scratch.cmd.clear();
+        scratch.cmd.extend_from_slice(&[SRV_PREDICT, nt as f64]);
+        scratch.cmd = comm.bcast(0, std::mem::take(&mut scratch.cmd));
+
+        // ship each worker its contiguous run of rows
+        let part = self.part.as_ref().expect("partition cached above");
+        for r in 1..ranks {
+            if let Some(sp) = part.worker_span(r) {
+                scratch.xwire.clear();
+                scratch.xwire.extend_from_slice(
+                    &xstar.as_slice()[sp.start * xstar.cols()..sp.end * xstar.cols()]);
+                comm.send(r, TAG_XSTAR, &scratch.xwire);
+            }
+        }
+
+        // leader's own shard (rank 0 always owns the first run of rows),
+        // computed straight into the output buffers — no staging copies
+        let sp0 = part.worker_span(0).expect("rank 0 owns chunks when nt > 0");
+        let rows0 = sp0.len();
+        let own = backend.predict_batch(&self.core, xstar, sp0.start, rows0,
+                                        &mut mean_out.as_mut_slice()
+                                            [sp0.start * d..sp0.end * d],
+                                        &mut var_out[sp0.start..sp0.end]);
+
+        // gather (fail-flagged payloads keep the collective in lockstep
+        // even when a rank's compute errored; the leader's own results
+        // are already in place, so its payload is the flag alone)
+        scratch.payload.clear();
+        scratch.payload.push(if own.is_ok() { 0.0 } else { 1.0 });
+        let gathered = comm.gather(0, &scratch.payload).expect("root");
+        own.map_err(|e| anyhow!("rank 0 prediction failed: {e:#}"))?;
+
+        // assemble worker shards into the output rows
+        for (r, piece) in gathered.iter().enumerate().skip(1) {
+            let Some(sp) = part.worker_span(r) else {
+                continue; // chunkless rank contributed nothing
+            };
+            let rows = sp.len();
+            let want = rows * (d + 1) + 1;
+            if piece.len() != want || *piece.last().expect("non-empty payload") != 0.0 {
+                return Err(anyhow!("prediction failed on rank {r}"));
+            }
+            mean_out.as_mut_slice()[sp.start * d..sp.end * d]
+                .copy_from_slice(&piece[..rows * d]);
+            var_out[sp.start..sp.end].copy_from_slice(&piece[rows * d..rows * (d + 1)]);
+        }
+        Ok(())
+    }
+
+    /// Worker: serve prediction batches until the leader ends the
+    /// session. A failing shard computation is reported through the
+    /// fail-flagged gather payload (the session keeps running); the
+    /// first such error is returned once the leader closes the session.
+    pub fn serve(&mut self, comm: &mut Comm, backend: &mut dyn Backend) -> Result<()> {
+        let rank = comm.rank();
+        let ranks = comm.size();
+        let d = self.core.d();
+        let q = self.core.q();
+        let mut sticky_err: Option<anyhow::Error> = None;
+
+        loop {
+            let cmd = comm.bcast(0, Vec::new());
+            if cmd.is_empty() || cmd[0] == SRV_DONE {
+                return match sticky_err {
+                    Some(e) => Err(anyhow!("rank {rank}: {e:#}")),
+                    None => Ok(()),
+                };
+            }
+            let nt = cmd[1] as usize;
+            self.partition_for(nt, ranks);
+            let span = self.part.as_ref().expect("partition cached").worker_span(rank);
+            let scratch = &mut self.scratch;
+            scratch.payload.clear();
+
+            match span {
+                None => scratch.payload.push(0.0), // no rows, success by definition
+                Some(sp) => {
+                    let rows = sp.len();
+                    let msg = comm.recv(0, TAG_XSTAR);
+                    debug_assert_eq!(msg.len(), rows * q, "shard wire length");
+                    if scratch.xshard.rows() == rows && scratch.xshard.cols() == q {
+                        scratch.xshard.set_from(&msg);
+                    } else {
+                        scratch.xshard = Mat::from_vec(rows, q, msg);
+                    }
+                    scratch.mean.clear();
+                    scratch.mean.resize(rows * d, 0.0);
+                    scratch.var.clear();
+                    scratch.var.resize(rows, 0.0);
+                    match backend.predict_batch(&self.core, &scratch.xshard, 0, rows,
+                                                &mut scratch.mean, &mut scratch.var) {
+                        Ok(()) => {
+                            scratch.payload.extend_from_slice(&scratch.mean);
+                            scratch.payload.extend_from_slice(&scratch.var);
+                            scratch.payload.push(0.0);
+                        }
+                        Err(e) => {
+                            scratch.payload.push(1.0);
+                            if sticky_err.is_none() {
+                                sticky_err = Some(e);
+                            }
+                        }
+                    }
+                }
+            }
+            let _ = comm.gather(0, &scratch.payload);
+        }
+    }
+
+    /// Leader: close the session — workers return from
+    /// [`serve`](DistributedPosterior::serve).
+    pub fn finish(&mut self, comm: &mut Comm) {
+        comm.bcast(0, vec![SRV_DONE]);
+    }
+}
+
+/// Worker half of a whole serving session in one call: receive the
+/// posterior broadcast, then serve batches until the leader closes the
+/// session. This is what the training cycle's worker loop calls when the
+/// leader switches the cluster into serving mode.
+pub fn worker_serve(comm: &mut Comm, backend: &mut dyn Backend) -> Result<()> {
+    let mut dp = DistributedPosterior::worker(comm)?;
+    dp.serve(comm, backend)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::Cluster;
+    use crate::coordinator::backend::RustCpuBackend;
+    use crate::kern::RbfArd;
+    use crate::math::stats::sgpr_stats_fwd;
+    use crate::models::Posterior;
+    use crate::testutil::prop::Rng64;
+
+    fn toy_core(seed: u64) -> PosteriorCore {
+        let (n, m, q, d) = (50usize, 8usize, 2usize, 3usize);
+        let mut rng = Rng64::new(seed);
+        let x = Mat::from_fn(n, q, |_, _| rng.normal());
+        let y = Mat::from_fn(n, d, |_, _| rng.normal());
+        let z = Mat::from_fn(m, q, |_, _| rng.normal());
+        let kern = RbfArd::iso(1.2, 1.1, q);
+        let w = vec![1.0; n];
+        let st = sgpr_stats_fwd(&kern, &x, &w, &y, &z);
+        PosteriorCore::new(kern, z, 20.0, &st).unwrap()
+    }
+
+    /// Several batches (including a resize and an empty batch) through
+    /// one session must each match the single-node posterior exactly.
+    #[test]
+    fn session_serves_multiple_batch_sizes() {
+        let core = toy_core(42);
+        let single = Posterior::from_core(core.clone());
+        let mut rng = Rng64::new(43);
+        let batches: Vec<Mat> = [17usize, 17, 0, 5]
+            .iter()
+            .map(|&nt| Mat::from_fn(nt, 2, |_, _| rng.normal()))
+            .collect();
+        let expect: Vec<(Mat, Vec<f64>)> =
+            batches.iter().map(|b| single.predict(b)).collect();
+
+        for size in [1usize, 3, 4] {
+            let core_ref = &core;
+            let batches_ref = &batches;
+            let results = Cluster::run(size, move |mut comm| {
+                let mut backend = RustCpuBackend;
+                if comm.rank() == 0 {
+                    let mut dp = DistributedPosterior::leader(core_ref.clone(), 4,
+                                                             &mut comm);
+                    let mut out = Vec::new();
+                    let mut mean = Mat::zeros(0, 0);
+                    let mut var = Vec::new();
+                    for b in batches_ref {
+                        dp.predict_into(&mut comm, &mut backend, b, &mut mean,
+                                        &mut var).unwrap();
+                        out.push((mean.clone(), var.clone()));
+                    }
+                    dp.finish(&mut comm);
+                    Some(out)
+                } else {
+                    worker_serve(&mut comm, &mut backend).unwrap();
+                    None
+                }
+            });
+            let got = results[0].as_ref().expect("leader output");
+            for (i, ((gm, gv), (em, ev))) in got.iter().zip(&expect).enumerate() {
+                assert_eq!(gm.rows(), em.rows(), "size {size} batch {i}");
+                if em.rows() > 0 {
+                    assert!(gm.max_abs_diff(em) == 0.0, "size {size} batch {i}: mean");
+                }
+                assert_eq!(gv, ev, "size {size} batch {i}: var");
+            }
+        }
+    }
+
+    /// A batch smaller than the rank count leaves trailing ranks without
+    /// rows; they must still stay in lockstep.
+    #[test]
+    fn tiny_batches_leave_ranks_idle_but_synchronised() {
+        let core = toy_core(44);
+        let single = Posterior::from_core(core.clone());
+        let mut rng = Rng64::new(45);
+        let xstar = Mat::from_fn(2, 2, |_, _| rng.normal());
+        let (em, ev) = single.predict(&xstar);
+
+        let core_ref = &core;
+        let xs = &xstar;
+        let results = Cluster::run(5, move |mut comm| {
+            let mut backend = RustCpuBackend;
+            if comm.rank() == 0 {
+                let mut dp = DistributedPosterior::leader(core_ref.clone(), 1, &mut comm);
+                let out = dp.predict(&mut comm, &mut backend, xs).unwrap();
+                dp.finish(&mut comm);
+                Some(out)
+            } else {
+                worker_serve(&mut comm, &mut backend).unwrap();
+                None
+            }
+        });
+        let (gm, gv) = results[0].as_ref().expect("leader output");
+        assert!(gm.max_abs_diff(&em) == 0.0);
+        assert_eq!(gv, &ev);
+    }
+}

@@ -4,21 +4,27 @@
 //! [`DistributedEvaluator::serve`].
 
 use super::cycle::DistributedEvaluator;
-use super::problem::{ParamLayout, Problem};
+use super::problem::{Fitted, LatentSpec, ParamLayout, Problem};
 use crate::collectives::Cluster;
 use crate::config::BackendKind;
 use crate::coordinator::partition::Partition;
+use crate::linalg::Mat;
+use crate::math::predict::PosteriorCore;
+use crate::math::stats::sgpr_stats_fwd;
 use crate::metrics::{Phase, PhaseTimer};
 use crate::optim::{Adam, Lbfgs, OptResult, Optimizer, Scg, StopReason};
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
 use std::time::Instant;
 
 /// Optimiser selection.
 #[derive(Clone, Debug)]
 pub enum OptChoice {
+    /// L-BFGS with strong-Wolfe line search (default).
     Lbfgs(Lbfgs),
+    /// Scaled conjugate gradients.
     Scg(Scg),
+    /// Adam (first-order baseline).
     Adam(Adam),
 }
 
@@ -35,16 +41,21 @@ impl OptChoice {
 /// Engine configuration.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
+    /// Number of SPMD ranks (rank 0 is the leader and also computes).
     pub workers: usize,
     /// Fixed chunk size C (must equal the AOT config's C for Xla).
     pub chunk: usize,
+    /// Which backend evaluates the per-chunk statistics.
     pub backend: BackendKind,
+    /// AOT artifact directory (manifest + HLO text) for the Xla backend.
     pub artifacts_dir: PathBuf,
+    /// Optimiser driving step 8 of the cycle.
     pub opt: OptChoice,
     /// Per-view pipelined evaluation cycle (compute overlapping the
     /// collectives) vs the whole-cycle synchronous schedule. The two are
     /// bit-identical in outputs; `false` is the debugging escape hatch.
     pub pipeline: bool,
+    /// Print the leader's phase-timing summary after a run.
     pub verbose: bool,
 }
 
@@ -69,12 +80,19 @@ pub struct TrainResult {
     pub f: f64,
     /// Bound after each accepted optimiser iteration.
     pub trace: Vec<f64>,
-    pub fitted: super::problem::Fitted,
+    /// Fitted parameters (kernels, noise, inducing inputs, latents).
+    pub fitted: Fitted,
+    /// Leader-side per-phase wall-clock accounting.
     pub timing: PhaseTimer,
+    /// Accepted optimiser iterations.
     pub iterations: usize,
+    /// Objective evaluations (distributed cycles) driven.
     pub evaluations: usize,
+    /// Why the optimiser stopped.
     pub stop: StopReason,
+    /// Cluster-wide bytes shipped over the collectives.
     pub bytes_sent: u64,
+    /// Cluster-wide message count over the collectives.
     pub messages_sent: u64,
     /// Mean wall-clock per objective evaluation (the paper's
     /// "time per iteration"), seconds.
@@ -116,11 +134,14 @@ enum RunMode {
 
 /// Distributed trainer for sparse-GP models.
 pub struct Engine {
+    /// The inference problem being fit.
     pub problem: Problem,
+    /// Cluster + optimiser configuration.
     pub cfg: EngineConfig,
 }
 
 impl Engine {
+    /// Validate the problem and bind it to a configuration.
     pub fn new(problem: Problem, cfg: EngineConfig) -> Result<Engine> {
         problem.validate()?;
         if problem.views.iter().any(|v| v.z0.rows() != problem.views[0].z0.rows()) {
@@ -131,16 +152,66 @@ impl Engine {
 
     /// Train to convergence (or the iteration budget).
     pub fn train(&self) -> Result<TrainResult> {
-        self.run(RunMode::Optimize)
+        Ok(self.run(RunMode::Optimize, None)?.0)
     }
 
     /// Benchmark mode: time `evals` objective evaluations without
     /// optimising (Fig 1a/1b harness).
     pub fn time_iterations(&self, evals: usize) -> Result<TrainResult> {
-        self.run(RunMode::TimeOnly(evals))
+        Ok(self.run(RunMode::TimeOnly(evals), None)?.0)
     }
 
-    fn run(&self, mode: RunMode) -> Result<TrainResult> {
+    /// Train, then serve `xstar` through the sharded posterior on the
+    /// *same* cluster before it shuts down — the fitted model's
+    /// predictions never leave the SPMD world. Returns the training
+    /// result plus the predictive mean (Nt × D) and variance (Nt).
+    ///
+    /// Supervised (observed-X) problems only: the posterior is built
+    /// from view 0's full-data statistics at the fitted parameters.
+    /// `rows_per_chunk` is the serving partition granularity (rows per
+    /// chunk of the batch split, the serving analog of
+    /// [`EngineConfig::chunk`]).
+    pub fn train_then_predict(&self, xstar: &Mat, rows_per_chunk: usize)
+                              -> Result<(TrainResult, Mat, Vec<f64>)> {
+        if !matches!(self.problem.latent, LatentSpec::Observed(_)) {
+            bail!("train_then_predict needs a supervised problem (observed X)");
+        }
+        if xstar.cols() != self.problem.q {
+            bail!("xstar has Q={}, problem has Q={}", xstar.cols(), self.problem.q);
+        }
+        if rows_per_chunk == 0 {
+            bail!("rows_per_chunk must be positive");
+        }
+        let (result, served) = self.run(RunMode::Optimize, Some((xstar, rows_per_chunk)))?;
+        let (mean, var) = served.expect("serving was requested");
+        Ok((result, mean, var))
+    }
+
+    /// The posterior state served after training: view 0's full-data
+    /// statistics at the fitted parameters (the same construction
+    /// `models::SparseGpRegression` uses single-node).
+    ///
+    /// Known cost: this recomputes the O(N·M²) statistics serially on
+    /// the leader — one extra objective-evaluation's worth of work at
+    /// the very end of a run. Reusing the cluster for a stats-only
+    /// distributed pass (or capturing the final accepted evaluation's
+    /// reduced statistics) is the planned follow-up (see ROADMAP).
+    fn posterior_core(&self, fitted: &Fitted) -> Result<PosteriorCore> {
+        let x = match &self.problem.latent {
+            LatentSpec::Observed(x) => x,
+            LatentSpec::Variational { .. } => {
+                bail!("sharded serving needs a supervised problem (observed X)")
+            }
+        };
+        let y = &self.problem.views[0].y;
+        let w = vec![1.0; x.rows()];
+        let stats = sgpr_stats_fwd(&fitted.kerns[0], x, &w, y, &fitted.zs[0]);
+        PosteriorCore::new(fitted.kerns[0].clone(), fitted.zs[0].clone(),
+                           fitted.betas[0], &stats)
+    }
+
+    fn run(&self, mode: RunMode, predict: Option<(&Mat, usize)>)
+           -> Result<(TrainResult, Option<(Mat, Vec<f64>)>)> {
         let part = Partition::new(self.problem.n(), self.cfg.chunk, self.cfg.workers);
 
         let mut results = Cluster::run(self.cfg.workers, |comm| {
@@ -149,7 +220,7 @@ impl Engine {
                 Err(e) => Err(anyhow!("rank {rank}: {e:#}")),
                 Ok(mut ev) => {
                     if rank == 0 {
-                        self.leader(ev, &mode).map(Some)
+                        self.leader(&mut ev, &mode, predict).map(Some)
                     } else {
                         ev.serve().map(|_| None)
                     }
@@ -168,8 +239,12 @@ impl Engine {
     }
 
     /// Leader: drives the optimiser; each objective call runs the full
-    /// distributed cycle through the evaluator.
-    fn leader(&self, mut ev: DistributedEvaluator, mode: &RunMode) -> Result<TrainResult> {
+    /// distributed cycle through the evaluator. When `predict` is set,
+    /// a serving session runs between the last optimiser step and the
+    /// shutdown broadcast.
+    fn leader(&self, ev: &mut DistributedEvaluator, mode: &RunMode,
+              predict: Option<(&Mat, usize)>)
+              -> Result<(TrainResult, Option<(Mat, Vec<f64>)>)> {
         let layout = ParamLayout::new(&self.problem);
         let x0 = layout.initial_params(&self.problem);
         let n_params = ev.n_params();
@@ -224,20 +299,35 @@ impl Engine {
             }
         };
 
+        let fitted = layout.unpack_fitted(&self.problem, &opt_result.x);
+
+        // serve the fitted posterior on the same cluster before shutdown
+        let mut served = None;
+        let mut serve_err: Option<anyhow::Error> = None;
+        if let Some((xstar, rows_per_chunk)) = predict {
+            if eval_err.is_none() {
+                match self.serve_fitted(ev, &fitted, xstar, rows_per_chunk) {
+                    Ok(out) => served = Some(out),
+                    Err(e) => serve_err = Some(e),
+                }
+            }
+        }
+
         // 8. stop the workers and collect their compute-time totals
         let per_rank_compute = ev.finish();
 
         if let Some(e) = eval_err {
             return Err(e);
         }
-
-        let fitted = layout.unpack_fitted(&self.problem, &opt_result.x);
+        if let Some(e) = serve_err {
+            return Err(e);
+        }
 
         if self.cfg.verbose {
             eprintln!("[leader] {}", ev.timer().summary());
         }
 
-        Ok(TrainResult {
+        Ok((TrainResult {
             f: -opt_result.f,
             trace: opt_result.trace.iter().map(|v| -v).collect(),
             fitted,
@@ -249,6 +339,21 @@ impl Engine {
             messages_sent: ev.messages_sent(),
             sec_per_eval: if eval_count > 0 { eval_seconds / eval_count as f64 } else { 0.0 },
             per_rank_compute,
-        })
+        }, served))
+    }
+
+    /// Leader: one complete serving session over the training cluster —
+    /// open (posterior broadcast), predict the batch, close. The session
+    /// is always closed, even when the batch fails, so the workers are
+    /// back at the command broadcast before `finish` stops them.
+    fn serve_fitted(&self, ev: &mut DistributedEvaluator, fitted: &Fitted, xstar: &Mat,
+                    rows_per_chunk: usize) -> Result<(Mat, Vec<f64>)> {
+        let core = self.posterior_core(fitted)?;
+        ev.begin_serving(core, rows_per_chunk)?;
+        let out = ev.predict_sharded(xstar);
+        let end = ev.end_serving();
+        let out = out?;
+        end?;
+        Ok(out)
     }
 }

@@ -8,8 +8,10 @@
 //! - `engine`    — the execution layer: `engine::problem` (model
 //!   statement + parameter layout), `engine::cycle` (the SPMD
 //!   leader/worker evaluation cycle as a reusable
-//!   [`DistributedEvaluator`]), `engine::train` (optimiser loop), with
-//!   per-phase timing (distributable vs indistributable, feeding Fig 1b)
+//!   [`DistributedEvaluator`]), `engine::train` (optimiser loop), and
+//!   `engine::serve` (sharded posterior serving,
+//!   [`DistributedPosterior`]), with per-phase timing (distributable vs
+//!   indistributable, feeding Fig 1b)
 
 pub mod backend;
 pub mod engine;
@@ -17,6 +19,6 @@ pub mod partition;
 
 pub use backend::{make_backends, Backend, ChunkData, ChunkTask, FwdCache,
                   ParallelCpuBackend, RustCpuBackend, ViewParams, XlaBackend};
-pub use engine::{DistributedEvaluator, Engine, EngineConfig, Fitted, LatentSpec, OptChoice,
-                 Problem, TrainResult, ViewSpec};
+pub use engine::{DistributedEvaluator, DistributedPosterior, Engine, EngineConfig, Fitted,
+                 LatentSpec, OptChoice, Problem, TrainResult, ViewSpec};
 pub use partition::{ChunkRange, Partition};

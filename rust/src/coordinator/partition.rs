@@ -8,15 +8,19 @@
 /// A contiguous run of datapoint indices `[start, end)`, `end − start ≤ C`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChunkRange {
+    /// First datapoint index (inclusive).
     pub start: usize,
+    /// One past the last datapoint index.
     pub end: usize,
 }
 
 impl ChunkRange {
+    /// Number of datapoints in the range.
     pub fn len(&self) -> usize {
         self.end - self.start
     }
 
+    /// Is the range empty?
     pub fn is_empty(&self) -> bool {
         self.start == self.end
     }
@@ -25,7 +29,9 @@ impl ChunkRange {
 /// The full assignment of chunks to workers.
 #[derive(Clone, Debug)]
 pub struct Partition {
+    /// Total datapoint count.
     pub n: usize,
+    /// Fixed chunk size C (the last chunk may be shorter).
     pub chunk: usize,
     /// `per_worker[r]` = the chunks owned by rank r (contiguous run).
     pub per_worker: Vec<Vec<ChunkRange>>,
@@ -67,6 +73,7 @@ impl Partition {
         }
     }
 
+    /// Number of ranks the chunks are dealt across.
     pub fn workers(&self) -> usize {
         self.per_worker.len()
     }

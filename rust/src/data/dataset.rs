@@ -17,16 +17,20 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Outputs only (BGP-LVM / MRD input).
     pub fn unsupervised(y: Mat) -> Self {
         Dataset { x: None, y, latent_truth: None }
     }
 
+    /// Inputs + outputs (SGPR input).
     pub fn supervised(x: Mat, y: Mat) -> Self {
         assert_eq!(x.rows(), y.rows(), "X and Y row count mismatch");
         Dataset { x: Some(x), y, latent_truth: None }
     }
 
+    /// Datapoint count N.
     pub fn n(&self) -> usize { self.y.rows() }
+    /// Output dimensionality D.
     pub fn d(&self) -> usize { self.y.cols() }
 
     /// Column means of Y.

@@ -39,6 +39,7 @@ impl Rng64 {
         Rng64::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97f4A7C15))
     }
 
+    /// Next raw 64-bit output of the xoshiro256** core.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);

@@ -16,6 +16,7 @@ use crate::linalg::{Chol, Mat};
 /// Parameters for the synthetic GP dataset.
 #[derive(Clone, Debug)]
 pub struct SyntheticSpec {
+    /// Dataset size N.
     pub n: usize,
     /// Latent dimensionality (paper: 1).
     pub q: usize,

@@ -19,6 +19,8 @@ pub struct RbfArd {
 }
 
 impl RbfArd {
+    /// Construct from variance σ² and per-dimension lengthscales ℓ_q
+    /// (all strictly positive).
     pub fn new(variance: f64, lengthscales: Vec<f64>) -> Self {
         assert!(variance > 0.0);
         assert!(lengthscales.iter().all(|&l| l > 0.0));
@@ -30,6 +32,7 @@ impl RbfArd {
         RbfArd::new(variance, vec![lengthscale; q])
     }
 
+    /// Input dimensionality Q.
     pub fn q(&self) -> usize {
         self.lengthscales.len()
     }
@@ -47,6 +50,7 @@ impl RbfArd {
         v
     }
 
+    /// Inverse of [`RbfArd::to_log_hyp`].
     pub fn from_log_hyp(log_hyp: &[f64]) -> Self {
         RbfArd {
             variance: log_hyp[0].exp(),
@@ -85,6 +89,43 @@ impl RbfArd {
     /// Diagonal of `K(x, x)` — constant σ² for RBF.
     pub fn kdiag(&self, n: usize) -> Vec<f64> {
         vec![self.variance; n]
+    }
+
+    /// `k(x, x)` for a single input row — the constant σ² for this
+    /// stationary kernel. The predictive equations route `k**` through
+    /// here (rather than reading `variance` at the call site) so a
+    /// future non-stationary kernel cannot silently miscompute the
+    /// predictive variance.
+    pub fn kdiag_at(&self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.q());
+        self.variance
+    }
+
+    /// One row of `K(x, Z)` written into `out` (length = Z rows) without
+    /// allocating — the serving hot path's kernel evaluation. The loops
+    /// run dimension-outer so each `α_q = ℓ_q⁻²` is divided once per
+    /// call (not once per inducing point); for every output element the
+    /// `α_q d²` contributions still accumulate in ascending-q order with
+    /// the same operand values as [`RbfArd::k`], so the two agree bit
+    /// for bit.
+    pub fn k_row_into(&self, x: &[f64], z: &Mat, out: &mut [f64]) {
+        let q = self.q();
+        assert_eq!(x.len(), q, "input row Q mismatch");
+        assert_eq!(z.cols(), q, "Z Q mismatch");
+        assert_eq!(out.len(), z.rows(), "output length");
+        out.fill(0.0); // accumulate r² in place
+        for qq in 0..q {
+            let l = self.lengthscales[qq];
+            let a = 1.0 / (l * l);
+            let xq = x[qq];
+            for (j, o) in out.iter_mut().enumerate() {
+                let d = xq - z[(j, qq)];
+                *o += a * d * d;
+            }
+        }
+        for o in out.iter_mut() {
+            *o = self.variance * (-0.5 * *o).exp();
+        }
     }
 
     // -----------------------------------------------------------------
@@ -471,6 +512,24 @@ mod tests {
             let (kern, mu, s, w, z) = setup(rng, 10, 6, 2);
             let p2 = kern.psi2(&mu, &s, &w, &z);
             assert!(p2.max_abs_diff(&p2.t()) < 1e-14);
+        });
+    }
+
+    /// The allocation-free row kernel must agree with the full `k`
+    /// matrix bit for bit, and `kdiag_at` with `kdiag`.
+    #[test]
+    fn prop_k_row_into_matches_k() {
+        Prop::new("k_row_into").cases(15).run(|rng| {
+            let (kern, mu, _, _, z) = setup(rng, 9, 5, 2);
+            let full = kern.k(&mu, &z);
+            let mut row = vec![0.0; 5];
+            for i in 0..9 {
+                kern.k_row_into(mu.row(i), &z, &mut row);
+                for j in 0..5 {
+                    assert!(row[j] == full[(i, j)], "row {i} col {j}");
+                }
+                assert_eq!(kern.kdiag_at(mu.row(i)), kern.kdiag(1)[0]);
+            }
         });
     }
 

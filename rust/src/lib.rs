@@ -18,7 +18,7 @@
 //! | [`collectives`] | simulated-MPI transport: point-to-point + `bcast`/`reduce_sum`/`gather`, binomial-tree collectives by default (O(log P) critical path), linear reference retained |
 //! | [`coordinator::partition`] | datapoints → fixed-shape chunks → contiguous per-rank runs |
 //! | [`coordinator::backend`] | pluggable chunk compute behind a `BackendKind` factory: `rust-cpu` (scalar), `parallel-cpu` (intra-rank chunk fan-out over scoped threads, bit-identical), `xla` (PJRT, feature-gated) |
-//! | [`coordinator::engine`] | the execution layer: `problem` (model statement + parameter layout), `cycle` (the eight-step SPMD evaluation cycle as a reusable `DistributedEvaluator`), `train` (optimiser loop + stopping), re-exported behind a thin facade |
+//! | [`coordinator::engine`] | the execution layer: `problem` (model statement + parameter layout), `cycle` (the eight-step SPMD evaluation cycle as a reusable `DistributedEvaluator`), `train` (optimiser loop + stopping), `serve` (sharded posterior serving: broadcast-once state, per-batch row partitioning, rank-order gather), re-exported behind a thin facade |
 //! | [`math`] | worker statistics + the leader's indistributable M×M core |
 //! | [`kern`] | RBF-ARD kernel, psi statistics and analytic VJPs |
 //! | [`linalg`] | dense row-major matrices: Cholesky toolkit, cache-blocked `matmul`, symmetric rank-k (`syrk`) updates |
@@ -36,9 +36,14 @@
 //! the external `xla` crate as a dependency — see the feature notes in
 //! `rust/Cargo.toml`.
 //!
-//! See DESIGN.md for the paper↔module map and EXPERIMENTS.md for the
-//! reproduced figures.
+//! See docs/ARCHITECTURE.md for the end-to-end walkthrough of the
+//! execution layer (layer map, the 8-step SPMD cycle, the pipelined
+//! schedule and its abort protocol, and the serving fan-out) and
+//! docs/BENCHMARKS.md for the bench/trend workflow.
 
+// The public API is documentation-complete and gated in CI
+// (`cargo doc --no-deps` with `RUSTDOCFLAGS="-D warnings"`).
+#![warn(missing_docs)]
 // Numeric-kernel house style: explicit index loops mirror the paper's
 // formulas (and the Python reference implementation) more faithfully than
 // iterator chains, so these pedantry lints stay off crate-wide.

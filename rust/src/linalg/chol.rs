@@ -15,7 +15,9 @@ pub struct Chol {
 /// Error type for a failed factorisation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NotPositiveDefinite {
+    /// Index of the first failing pivot.
     pub pivot: usize,
+    /// The non-positive value encountered there.
     pub value: f64,
 }
 
@@ -75,7 +77,9 @@ impl Chol {
         }
     }
 
+    /// The lower-triangular factor L.
     pub fn l(&self) -> &Mat { &self.l }
+    /// Matrix dimension N.
     pub fn dim(&self) -> usize { self.l.rows() }
 
     /// `log det A = 2 Σ log L_ii`.

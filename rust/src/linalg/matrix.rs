@@ -54,13 +54,18 @@ impl Mat {
         Mat::from_vec(v.len(), 1, v.to_vec())
     }
 
+    /// Row count.
     pub fn rows(&self) -> usize { self.rows }
+    /// Column count.
     pub fn cols(&self) -> usize { self.cols }
+    /// Is this matrix square?
     pub fn is_square(&self) -> bool { self.rows == self.cols }
 
     /// Underlying row-major storage.
     pub fn as_slice(&self) -> &[f64] { &self.data }
+    /// Mutable view of the row-major storage.
     pub fn as_mut_slice(&mut self) -> &mut [f64] { &mut self.data }
+    /// Unwrap into the row-major data vector.
     pub fn into_vec(self) -> Vec<f64> { self.data }
 
     /// Overwrite the whole matrix from a row-major slice without
@@ -77,6 +82,7 @@ impl Mat {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Borrow row `i` mutably.
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }

@@ -3,12 +3,16 @@
 //! Subcommands:
 //!   train-bgplvm   fit a Bayesian GP-LVM to the paper's synthetic data
 //!   train-sgpr     fit sparse GP regression to synthetic data
+//!   predict        fit sparse GP regression, then serve a held-out test
+//!                  batch through the sharded posterior (prediction rows
+//!                  partitioned across the same ranks that trained)
 //!   time           benchmark mode: time objective evaluations
 //!                  (the paper's "average time per iteration")
 //!   info           show the artifact manifest
 //!
 //! Examples:
 //!   gpparallel train-bgplvm --n 2000 --workers 4 --backend xla --iters 100
+//!   gpparallel predict --n 2000 --nt 1000 --workers 4 --backend parallel --batch 256
 //!   gpparallel time --n 8000 --workers 8 --backend cpu --evals 5
 
 use anyhow::{bail, Result};
@@ -16,13 +20,15 @@ use gpparallel::cli::Args;
 use gpparallel::config::BackendKind;
 use gpparallel::coordinator::{Engine, EngineConfig, OptChoice};
 use gpparallel::data::synthetic::{generate, generate_supervised, SyntheticSpec};
+use gpparallel::linalg::mean;
 use gpparallel::models::{BayesianGplvm, SparseGpRegression};
 use gpparallel::optim::Lbfgs;
 use gpparallel::runtime::Manifest;
 use std::path::PathBuf;
 
 const KNOWN: &[&str] = &["n", "q", "d", "m", "workers", "chunk", "backend",
-                         "iters", "evals", "seed", "artifacts", "aot-config"];
+                         "iters", "evals", "seed", "artifacts", "aot-config",
+                         "nt", "batch"];
 
 fn engine_config(a: &Args) -> Result<(EngineConfig, String)> {
     let backend = BackendKind::parse(a.get("backend").unwrap_or("cpu"))
@@ -90,6 +96,45 @@ fn main() -> Result<()> {
                      r.f, r.iterations, model.rmse(&x, &ds.y));
             println!("timing: {}", r.timing.summary());
         }
+        "predict" => {
+            let spec = SyntheticSpec {
+                n: args.get_parse("n", 2000usize)?,
+                q: args.get_parse("q", 1usize)?,
+                d: args.get_parse("d", 1usize)?,
+                ..Default::default()
+            };
+            let seed = args.get_parse("seed", 0u64)?;
+            let m = args.get_parse("m", 32usize)?;
+            let nt = args.get_parse("nt", 1000usize)?;
+            let batch = args.get_parse("batch", 256usize)?;
+            let (cfg, aot) = engine_config(&args)?;
+
+            let ds = generate_supervised(&spec, seed);
+            let x = ds.x.clone().unwrap();
+            // held-out batch from the same generator, different seed
+            let test_spec = SyntheticSpec { n: nt, ..spec.clone() };
+            let test = generate_supervised(&test_spec, seed.wrapping_add(1));
+            let xstar = test.x.clone().unwrap();
+
+            eprintln!("dataset: N={} Nt={nt} Q={} D={}  backend={} workers={} batch={batch}",
+                      spec.n, spec.q, spec.d, cfg.backend.name(), cfg.workers);
+            let problem = SparseGpRegression::problem(&x, &ds.y, m, &aot, seed);
+            let engine = Engine::new(problem, cfg)?;
+            let (r, pred_mean, pred_var) = engine.train_then_predict(&xstar, batch)?;
+
+            let mut se = 0.0;
+            for i in 0..nt {
+                for j in 0..test.y.cols() {
+                    let e = pred_mean[(i, j)] - test.y[(i, j)];
+                    se += e * e;
+                }
+            }
+            let rmse = (se / (nt * test.y.cols()) as f64).sqrt();
+            println!("bound: {:.4}  iters: {}  evals: {}", r.f, r.iterations, r.evaluations);
+            println!("served {nt} rows across {} rank(s): test-RMSE {:.4}  mean var {:.4}",
+                     engine.cfg.workers, rmse, mean(&pred_var));
+            println!("timing: {}", r.timing.summary());
+        }
         "time" => {
             let spec = SyntheticSpec {
                 n: args.get_parse("n", 8000usize)?,
@@ -123,9 +168,10 @@ fn main() -> Result<()> {
             }
         }
         _ => {
-            println!("usage: gpparallel <train-bgplvm|train-sgpr|time|info> [options]");
+            println!("usage: gpparallel <train-bgplvm|train-sgpr|predict|time|info> [options]");
             println!("options: --n --q --d --m --workers --chunk --backend cpu|parallel[:N]|xla");
             println!("         --iters --evals --seed --artifacts --aot-config --verbose");
+            println!("         --nt --batch (predict: test rows, serving batch granularity)");
             println!("         --no-pipeline (synchronous evaluation cycle)");
             if cmd != "help" {
                 bail!("unknown command {cmd:?}");

@@ -11,13 +11,16 @@ use crate::kern::RbfArd;
 use crate::linalg::{Chol, Mat};
 use anyhow::{Context, Result};
 
+/// `ln(2π)` — the Gaussian normalisation constant.
 pub const LOG2PI: f64 = 1.8378770664093453;
 
 /// Everything the leader sends back: bound value, stat cotangents for the
 /// workers, and the direct global-parameter gradients.
 #[derive(Clone, Debug)]
 pub struct BoundOut {
+    /// The (maximised) variational bound F.
     pub f: f64,
+    /// Cotangents of the reduced statistics (broadcast to workers).
     pub cts: StatsCts,
     /// Direct ∂F/∂Z (via K_uu only; workers add the Ψ-path partials).
     pub dz: Mat,

@@ -1,17 +1,22 @@
 //! Model mathematics in Rust — the second, independent implementation of
 //! everything `python/compile/model.py` lowers to HLO.
 //!
-//! Two jobs:
+//! Three jobs:
 //! 1. the **RustCpu backend**: scalar per-worker statistics (`stats`),
 //!    playing the role GPy's NumPy code plays in the paper's CPU runs;
 //! 2. the **leader core** (`bound`): the indistributable M×M bound +
-//!    analytic gradient assembly (the Rust mirror of jax.grad over eq. 3).
+//!    analytic gradient assembly (the Rust mirror of jax.grad over eq. 3);
+//! 3. the **posterior core** (`predict`): the precomputed predictive
+//!    state + per-row predictive equations shared by single-node and
+//!    sharded serving.
 //!
-//! The two paths (Rust here, XLA artifacts from L2) are cross-checked to
-//! ~1e-8 in `rust/tests/xla_vs_rust.rs`.
+//! The two statistics paths (Rust here, XLA artifacts from L2) are
+//! cross-checked to ~1e-8 in `rust/tests/xla_vs_rust.rs`.
 
 pub mod bound;
+pub mod predict;
 pub mod stats;
 
 pub use bound::{bound_and_grads, BoundOut};
+pub use predict::{PosteriorCore, MIN_PREDICTIVE_VARIANCE};
 pub use stats::{ChunkGrads, Stats, StatsCts};

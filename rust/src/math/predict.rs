@@ -1,0 +1,275 @@
+//! The precomputed sparse-GP posterior and its per-row predictive
+//! equations — the compute core shared by the single-node
+//! [`Posterior`](crate::models::Posterior) and the sharded serving path
+//! ([`DistributedPosterior`](crate::coordinator::engine::serve::DistributedPosterior)).
+//!
+//! With `A = K_uu + βΦ` and `P = ΨᵀY`:
+//!
+//! ```text
+//!   mean(x*) = β k*uᵀ A⁻¹ P
+//!   var(x*)  = k** − k*uᵀ (K_uu⁻¹ − A⁻¹) k*u + β⁻¹
+//! ```
+//!
+//! (the standard variational-sparse posterior, e.g. Titsias 2009 eq. 6).
+//! Every prediction row is independent of every other row, which is what
+//! makes the posterior *embarrassingly shardable*: the serving layer
+//! broadcasts one [`PosteriorCore`] and partitions the test rows, and
+//! because [`PosteriorCore::predict_rows_into`] is the single per-row
+//! implementation used everywhere, sharded output is **bit-identical**
+//! to single-node output by construction (no cross-row reductions
+//! exist to reorder).
+
+use crate::kern::RbfArd;
+use crate::linalg::{Chol, Mat};
+use crate::math::stats::Stats;
+use anyhow::{Context, Result};
+
+/// Floor applied to every predictive variance. The exact expression
+/// `k** − k*uᵀ(K_uu⁻¹ − A⁻¹)k*u + β⁻¹` is positive in exact arithmetic,
+/// but cancellation between the two quadratic-form terms can drive it a
+/// few ulps negative for test points deep inside dense training data;
+/// clamping at a tiny positive value keeps downstream `sqrt`/`ln` calls
+/// (log-likelihoods, confidence intervals) well defined.
+pub const MIN_PREDICTIVE_VARIANCE: f64 = 1e-12;
+
+/// Precomputed posterior state for fast repeated prediction: everything
+/// the predictive equations need, with the two M×M solves already done.
+///
+/// The struct is plain data (kernel + matrices), so it can be packed
+/// onto a collective wire ([`PosteriorCore::pack_into`]) and broadcast to
+/// serving ranks once, then applied to any number of prediction batches.
+#[derive(Clone, Debug)]
+pub struct PosteriorCore {
+    /// Fitted kernel (supplies `k*u` rows and the `k**` diagonal).
+    pub kern: RbfArd,
+    /// Inducing inputs, M × Q.
+    pub z: Mat,
+    /// Noise precision β.
+    pub beta: f64,
+    /// `A⁻¹ P` (M × D).
+    pub ainv_p: Mat,
+    /// `K_uu⁻¹ − A⁻¹` (M × M) — the Woodbury variance correction.
+    pub woodbury: Mat,
+}
+
+impl PosteriorCore {
+    /// Build from fitted parameters and reduced statistics: factor
+    /// `K_uu` and `A = K_uu + βΦ` once, precompute `A⁻¹P` and the
+    /// Woodbury matrix.
+    pub fn new(kern: RbfArd, z: Mat, beta: f64, stats: &Stats) -> Result<PosteriorCore> {
+        let kuu = kern.kuu(&z);
+        let mut a = stats.psi2.scale(beta);
+        a.axpy(1.0, &kuu);
+        let (lk, _) = Chol::new_with_jitter(&kuu, 6).context("K_uu")?;
+        let (la, _) = Chol::new_with_jitter(&a, 6).context("A")?;
+        let ainv_p = la.solve(&stats.p);
+        let mut woodbury = lk.inverse();
+        woodbury.axpy(-1.0, &la.inverse());
+        Ok(PosteriorCore { kern, z, beta, ainv_p, woodbury })
+    }
+
+    /// Latent dimensionality Q.
+    pub fn q(&self) -> usize {
+        self.z.cols()
+    }
+
+    /// Inducing-point count M.
+    pub fn m(&self) -> usize {
+        self.z.rows()
+    }
+
+    /// Output dimensionality D.
+    pub fn d(&self) -> usize {
+        self.ainv_p.cols()
+    }
+
+    /// Predictive mean and variance for rows `[row0, row0 + rows)` of
+    /// `xstar`, written into `mean_out` (`rows × D`, row-major) and
+    /// `var_out` (`rows`; includes the β⁻¹ noise term, floored at
+    /// [`MIN_PREDICTIVE_VARIANCE`]).
+    ///
+    /// This is the one per-row implementation of the predictive
+    /// equations; the single-node `Posterior`, both CPU backends and the
+    /// sharded serving loop all call it, so their outputs agree bit for
+    /// bit. `k**` is routed through [`RbfArd::kdiag_at`] rather than
+    /// reading the variance field directly, so a future non-stationary
+    /// kernel cannot silently miscompute the variance. The only per-call
+    /// allocation is one M-length `k*u` scratch row.
+    pub fn predict_rows_into(&self, xstar: &Mat, row0: usize, rows: usize,
+                             mean_out: &mut [f64], var_out: &mut [f64]) {
+        let m = self.m();
+        let d = self.d();
+        assert_eq!(xstar.cols(), self.q(), "xstar Q mismatch");
+        assert!(row0 + rows <= xstar.rows(), "row range out of bounds");
+        assert_eq!(mean_out.len(), rows * d, "mean_out length");
+        assert_eq!(var_out.len(), rows, "var_out length");
+
+        let mut ks = vec![0.0; m];
+        for i in 0..rows {
+            let x = xstar.row(row0 + i);
+            self.kern.k_row_into(x, &self.z, &mut ks);
+
+            // mean row: β · k*uᵀ (A⁻¹P), accumulated in ascending-j order
+            let mrow = &mut mean_out[i * d..(i + 1) * d];
+            mrow.fill(0.0);
+            for (j, &k) in ks.iter().enumerate() {
+                let prow = self.ainv_p.row(j);
+                for (mv, &pv) in mrow.iter_mut().zip(prow) {
+                    *mv += k * pv;
+                }
+            }
+            for mv in mrow.iter_mut() {
+                *mv *= self.beta;
+            }
+
+            // variance: k** − Σ_j (Σ_l k_l W_lj) k_j + β⁻¹
+            let mut reduction = 0.0;
+            for j in 0..m {
+                let mut wk = 0.0;
+                for l in 0..m {
+                    wk += ks[l] * self.woodbury[(l, j)];
+                }
+                reduction += wk * ks[j];
+            }
+            let kss = self.kern.kdiag_at(x);
+            var_out[i] = (kss - reduction + 1.0 / self.beta).max(MIN_PREDICTIVE_VARIANCE);
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // wire form (for the one-time serving broadcast)
+    // -----------------------------------------------------------------
+
+    /// Wire length of a core with the given dimensions:
+    /// `[q, m, d, β, σ²] ++ ℓ (Q) ++ Z (M·Q) ++ A⁻¹P (M·D) ++ W (M·M)`.
+    pub fn wire_len(q: usize, m: usize, d: usize) -> usize {
+        5 + q + m * q + m * d + m * m
+    }
+
+    /// Append the wire form to `out`. Hyperparameters travel as raw
+    /// values (not logs) so the unpacked kernel is bit-identical to the
+    /// packed one — `exp(ln(x))` round-trips are not exact in f64.
+    pub fn pack_into(&self, out: &mut Vec<f64>) {
+        out.extend_from_slice(&[self.q() as f64, self.m() as f64, self.d() as f64,
+                                self.beta, self.kern.variance]);
+        out.extend_from_slice(&self.kern.lengthscales);
+        out.extend_from_slice(self.z.as_slice());
+        out.extend_from_slice(self.ainv_p.as_slice());
+        out.extend_from_slice(self.woodbury.as_slice());
+    }
+
+    /// Parse a wire vector produced by [`PosteriorCore::pack_into`].
+    pub fn unpack(v: &[f64]) -> Result<PosteriorCore> {
+        if v.len() < 5 {
+            anyhow::bail!("posterior wire too short ({} elements)", v.len());
+        }
+        let (q, m, d) = (v[0] as usize, v[1] as usize, v[2] as usize);
+        let want = Self::wire_len(q, m, d);
+        if v.len() != want {
+            anyhow::bail!("posterior wire length {} != {want} for (Q={q}, M={m}, D={d})",
+                          v.len());
+        }
+        let beta = v[3];
+        let variance = v[4];
+        let mut off = 5;
+        let lengthscales = v[off..off + q].to_vec();
+        off += q;
+        let z = Mat::from_vec(m, q, v[off..off + m * q].to_vec());
+        off += m * q;
+        let ainv_p = Mat::from_vec(m, d, v[off..off + m * d].to_vec());
+        off += m * d;
+        let woodbury = Mat::from_vec(m, m, v[off..].to_vec());
+        Ok(PosteriorCore {
+            kern: RbfArd::new(variance, lengthscales),
+            z,
+            beta,
+            ainv_p,
+            woodbury,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::stats::sgpr_stats_fwd;
+    use crate::testutil::prop::Rng64;
+
+    fn toy_core(seed: u64, n: usize, m: usize, q: usize, d: usize) -> PosteriorCore {
+        let mut rng = Rng64::new(seed);
+        let x = Mat::from_fn(n, q, |_, _| rng.normal());
+        let y = Mat::from_fn(n, d, |_, _| rng.normal());
+        let z = Mat::from_fn(m, q, |_, _| rng.normal());
+        let kern = RbfArd::new(1.3, (0..q).map(|_| rng.uniform_range(0.6, 1.4)).collect());
+        let w = vec![1.0; n];
+        let st = sgpr_stats_fwd(&kern, &x, &w, &y, &z);
+        PosteriorCore::new(kern, z, 25.0, &st).unwrap()
+    }
+
+    /// The wire round-trip must reproduce the core bit for bit — raw
+    /// hyperparameters, not logs, travel on the wire.
+    #[test]
+    fn wire_roundtrip_is_bit_exact() {
+        let core = toy_core(3, 30, 7, 2, 3);
+        let mut wire = Vec::new();
+        core.pack_into(&mut wire);
+        assert_eq!(wire.len(), PosteriorCore::wire_len(2, 7, 3));
+        let back = PosteriorCore::unpack(&wire).unwrap();
+        assert_eq!(back.kern.variance, core.kern.variance);
+        assert_eq!(back.kern.lengthscales, core.kern.lengthscales);
+        assert_eq!(back.beta, core.beta);
+        assert!(back.z.max_abs_diff(&core.z) == 0.0);
+        assert!(back.ainv_p.max_abs_diff(&core.ainv_p) == 0.0);
+        assert!(back.woodbury.max_abs_diff(&core.woodbury) == 0.0);
+
+        let mut rng = Rng64::new(17);
+        let xstar = Mat::from_fn(9, 2, |_, _| rng.normal());
+        let (mut m1, mut v1) = (vec![0.0; 9 * 3], vec![0.0; 9]);
+        let (mut m2, mut v2) = (vec![0.0; 9 * 3], vec![0.0; 9]);
+        core.predict_rows_into(&xstar, 0, 9, &mut m1, &mut v1);
+        back.predict_rows_into(&xstar, 0, 9, &mut m2, &mut v2);
+        assert_eq!(m1, m2);
+        assert_eq!(v1, v2);
+    }
+
+    /// Predicting a sub-range of rows must equal the matching slice of a
+    /// whole-batch prediction (the sharding invariant).
+    #[test]
+    fn row_ranges_compose() {
+        let core = toy_core(5, 40, 8, 1, 2);
+        let mut rng = Rng64::new(23);
+        let nt = 13;
+        let xstar = Mat::from_fn(nt, 1, |_, _| rng.normal());
+        let (mut mean_all, mut var_all) = (vec![0.0; nt * 2], vec![0.0; nt]);
+        core.predict_rows_into(&xstar, 0, nt, &mut mean_all, &mut var_all);
+        for (lo, hi) in [(0usize, 5usize), (5, 13), (12, 13)] {
+            let rows = hi - lo;
+            let (mut mn, mut vr) = (vec![0.0; rows * 2], vec![0.0; rows]);
+            core.predict_rows_into(&xstar, lo, rows, &mut mn, &mut vr);
+            assert_eq!(mn, mean_all[lo * 2..hi * 2], "mean rows {lo}..{hi}");
+            assert_eq!(vr, var_all[lo..hi], "var rows {lo}..{hi}");
+        }
+    }
+
+    #[test]
+    fn malformed_wire_is_rejected() {
+        assert!(PosteriorCore::unpack(&[1.0, 2.0]).is_err());
+        let core = toy_core(7, 10, 3, 1, 1);
+        let mut wire = Vec::new();
+        core.pack_into(&mut wire);
+        wire.pop();
+        assert!(PosteriorCore::unpack(&wire).is_err());
+    }
+
+    #[test]
+    fn variance_respects_floor() {
+        let core = toy_core(9, 20, 5, 1, 1);
+        let mut rng = Rng64::new(31);
+        let xstar = Mat::from_fn(4, 1, |_, _| rng.normal());
+        let (mut mean, mut var) = (vec![0.0; 4], vec![0.0; 4]);
+        core.predict_rows_into(&xstar, 0, 4, &mut mean, &mut var);
+        for v in var {
+            assert!(v >= MIN_PREDICTIVE_VARIANCE);
+        }
+    }
+}

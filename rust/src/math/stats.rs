@@ -12,23 +12,28 @@ use crate::linalg::Mat;
 /// Φ = Ψ2, plus tr(YᵀY) and the q(X) KL — everything the leader needs.
 #[derive(Clone, Debug)]
 pub struct Stats {
+    /// ψ0 = Σ_n w_n ⟨k(x_n, x_n)⟩.
     pub psi0: f64,
     /// M × D.
     pub p: Mat,
     /// M × M.
     pub psi2: Mat,
+    /// tr(Yᵀ diag(w) Y).
     pub tryy: f64,
+    /// KL[q(X) ‖ p(X)] contribution (variational problems; view 0 only).
     pub kl: f64,
     /// Effective datapoint count Σw (reduced alongside the rest).
     pub n_eff: f64,
 }
 
 impl Stats {
+    /// All-zero statistics of the given shape (the reducer identity).
     pub fn zeros(m: usize, d: usize) -> Self {
         Stats { psi0: 0.0, p: Mat::zeros(m, d), psi2: Mat::zeros(m, m),
                 tryy: 0.0, kl: 0.0, n_eff: 0.0 }
     }
 
+    /// Element-wise accumulate (the chunk-order reduction step).
     pub fn add_assign(&mut self, other: &Stats) {
         self.psi0 += other.psi0;
         self.p.axpy(1.0, &other.p);
@@ -53,6 +58,7 @@ impl Stats {
         out.extend_from_slice(self.psi2.as_slice());
     }
 
+    /// Parse a wire vector produced by [`pack`](Stats::pack).
     pub fn unpack(m: usize, d: usize, v: &[f64]) -> Self {
         let mut st = Stats::zeros(m, d);
         st.unpack_from(v);
@@ -76,19 +82,26 @@ impl Stats {
 /// Cotangents of the statistics — what the leader broadcasts back.
 #[derive(Clone, Debug)]
 pub struct StatsCts {
+    /// ∂F/∂ψ0.
     pub c_psi0: f64,
+    /// ∂F/∂P (M × D).
     pub c_p: Mat,
+    /// ∂F/∂Ψ2 (M × M).
     pub c_psi2: Mat,
+    /// ∂F/∂ tr(YᵀY).
     pub c_tryy: f64,
+    /// ∂F/∂KL (−1 when the KL term is active).
     pub c_kl: f64,
 }
 
 impl StatsCts {
+    /// All-zero cotangents of the given shape.
     pub fn zeros(m: usize, d: usize) -> Self {
         StatsCts { c_psi0: 0.0, c_p: Mat::zeros(m, d), c_psi2: Mat::zeros(m, m),
                    c_tryy: 0.0, c_kl: 0.0 }
     }
 
+    /// Flatten to the broadcast wire (order: scalars, c_P, c_Ψ2).
     pub fn pack(&self) -> Vec<f64> {
         let mut v = Vec::with_capacity(3 + self.c_p.as_slice().len() + self.c_psi2.as_slice().len());
         self.pack_into(&mut v);
@@ -102,6 +115,7 @@ impl StatsCts {
         out.extend_from_slice(self.c_psi2.as_slice());
     }
 
+    /// Parse a wire vector produced by [`pack`](StatsCts::pack).
     pub fn unpack(m: usize, d: usize, v: &[f64]) -> Self {
         let mut cts = StatsCts::zeros(m, d);
         cts.unpack_from(v);

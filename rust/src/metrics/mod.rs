@@ -73,11 +73,13 @@ pub enum Phase {
 }
 
 impl Phase {
+    /// Every phase, in cycle order (for iteration/reporting).
     pub const ALL: [Phase; 7] = [
         Phase::Bcast, Phase::StatsFwd, Phase::Reduce, Phase::BoundCore,
         Phase::StatsVjp, Phase::GatherGrads, Phase::OptStep,
     ];
 
+    /// Stable snake_case label (used in timing summaries and benches).
     pub fn name(self) -> &'static str {
         match self {
             Phase::Bcast => "bcast",
@@ -105,6 +107,7 @@ pub struct PhaseTimer {
 }
 
 impl PhaseTimer {
+    /// Empty timer.
     pub fn new() -> Self {
         Self::default()
     }
@@ -122,18 +125,22 @@ impl PhaseTimer {
         *self.acc.entry(phase).or_default() += d;
     }
 
+    /// Count one completed objective evaluation.
     pub fn note_eval(&mut self) {
         self.evals += 1;
     }
 
+    /// Completed objective evaluations.
     pub fn evals(&self) -> usize {
         self.evals
     }
 
+    /// Total accumulated time across all phases.
     pub fn total(&self) -> Duration {
         self.acc.values().sum()
     }
 
+    /// Accumulated time in one phase.
     pub fn get(&self, phase: Phase) -> Duration {
         self.acc.get(&phase).copied().unwrap_or_default()
     }

@@ -11,7 +11,9 @@ use anyhow::Result;
 
 /// A fitted Bayesian GP-LVM.
 pub struct BayesianGplvm {
+    /// Training outcome (bound, trace, fitted parameters, timing).
     pub result: TrainResult,
+    /// Latent dimensionality Q.
     pub q: usize,
 }
 

@@ -12,7 +12,9 @@ use anyhow::Result;
 
 /// A fitted MRD model.
 pub struct Mrd {
+    /// Training outcome (bound, trace, fitted parameters, timing).
     pub result: TrainResult,
+    /// Shared latent dimensionality Q.
     pub q: usize,
 }
 
@@ -28,6 +30,8 @@ impl Mrd {
         Ok(Mrd { result, q })
     }
 
+    /// The Problem (exposed so benches can drive the engine on exactly
+    /// the model [`Mrd::fit`] trains).
     pub fn problem(views: &[Mat], q: usize, m: usize, aot_configs: &[&str],
                    seed: u64) -> Problem {
         assert!(!views.is_empty());

@@ -1,58 +1,55 @@
 //! Sparse-GP predictive equations from the fitted parameters and the
-//! reduced statistics (leader-side, pure Rust).
+//! reduced statistics (single-node entry point).
 //!
-//! With A = K_uu + βΦ and P = ΨᵀY:
-//!   mean(x*) = β k*uᵀ A⁻¹ P
-//!   var(x*)  = k** − k*uᵀ (K_uu⁻¹ − A⁻¹) k*u + β⁻¹
-//! (the standard variational-sparse posterior, e.g. Titsias 2009 eq. 6).
+//! [`Posterior`] is a thin wrapper over
+//! [`PosteriorCore`](crate::math::predict::PosteriorCore), which holds
+//! the precomputed state (`A⁻¹P`, the Woodbury matrix, kernel, Z) and
+//! the one per-row implementation of the predictive equations. The
+//! sharded serving path
+//! ([`DistributedPosterior`](crate::coordinator::engine::serve::DistributedPosterior))
+//! broadcasts the same core, so its predictions are bit-identical to
+//! [`Posterior::predict`] by construction.
 
 use crate::kern::RbfArd;
-use crate::linalg::{Chol, Mat};
+use crate::linalg::Mat;
+use crate::math::predict::PosteriorCore;
 use crate::math::stats::Stats;
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-/// Precomputed posterior state for fast repeated prediction.
+/// Precomputed posterior state for fast repeated single-node prediction.
 pub struct Posterior {
-    kern: RbfArd,
-    z: Mat,
-    beta: f64,
-    /// A⁻¹ P (M × D).
-    ainv_p: Mat,
-    /// K_uu⁻¹ − A⁻¹ (M × M).
-    woodbury: Mat,
+    core: PosteriorCore,
 }
 
 impl Posterior {
     /// Build from fitted parameters and reduced statistics.
     pub fn new(kern: RbfArd, z: Mat, beta: f64, stats: &Stats) -> Result<Posterior> {
-        let kuu = kern.kuu(&z);
-        let mut a = stats.psi2.scale(beta);
-        a.axpy(1.0, &kuu);
-        let (lk, _) = Chol::new_with_jitter(&kuu, 6).context("K_uu")?;
-        let (la, _) = Chol::new_with_jitter(&a, 6).context("A")?;
-        let ainv_p = la.solve(&stats.p);
-        let mut woodbury = lk.inverse();
-        woodbury.axpy(-1.0, &la.inverse());
-        Ok(Posterior { kern, z, beta, ainv_p, woodbury })
+        Ok(Posterior { core: PosteriorCore::new(kern, z, beta, stats)? })
+    }
+
+    /// Wrap an already-built core (e.g. one received over a collective).
+    pub fn from_core(core: PosteriorCore) -> Posterior {
+        Posterior { core }
+    }
+
+    /// The precomputed state — what sharded serving broadcasts.
+    pub fn core(&self) -> &PosteriorCore {
+        &self.core
+    }
+
+    /// Unwrap into the precomputed state.
+    pub fn into_core(self) -> PosteriorCore {
+        self.core
     }
 
     /// Predict mean (Nt × D) and per-point predictive variance (Nt),
-    /// including the noise term.
+    /// including the β⁻¹ noise term (floored at
+    /// [`MIN_PREDICTIVE_VARIANCE`](crate::math::predict::MIN_PREDICTIVE_VARIANCE)).
     pub fn predict(&self, xstar: &Mat) -> (Mat, Vec<f64>) {
-        let ksu = self.kern.k(xstar, &self.z); // Nt × M
-        let mut mean = ksu.matmul(&self.ainv_p);
-        mean.scale_mut(self.beta);
-
-        let wk = ksu.matmul(&self.woodbury); // Nt × M
-        let var: Vec<f64> = (0..xstar.rows())
-            .map(|i| {
-                let mut reduction = 0.0;
-                for mcol in 0..self.z.rows() {
-                    reduction += wk[(i, mcol)] * ksu[(i, mcol)];
-                }
-                (self.kern.variance - reduction + 1.0 / self.beta).max(1e-12)
-            })
-            .collect();
+        let nt = xstar.rows();
+        let mut mean = Mat::zeros(nt, self.core.d());
+        let mut var = vec![0.0; nt];
+        self.core.predict_rows_into(xstar, 0, nt, mean.as_mut_slice(), &mut var);
         (mean, var)
     }
 }
@@ -96,5 +93,24 @@ mod tests {
         let probe = Mat::from_vec(2, 1, vec![1.0, 10.0]); // in-range vs far
         let (_, var) = post.predict(&probe);
         assert!(var[1] > 5.0 * var[0], "far-field variance should dominate: {var:?}");
+    }
+
+    /// Far from all data the predictive variance must approach
+    /// k** + β⁻¹ with k** routed through the kernel's own diagonal.
+    #[test]
+    fn far_field_variance_is_kdiag_plus_noise() {
+        let n = 15;
+        let x = Mat::from_fn(n, 1, |i, _| i as f64 * 0.1);
+        let y = Mat::from_fn(n, 1, |i, _| (x[(i, 0)]).cos());
+        let kern = RbfArd::iso(2.5, 0.4, 1);
+        let beta = 50.0;
+        let w = vec![1.0; n];
+        let st = sgpr_stats_fwd(&kern, &x, &w, &y, &x);
+        let expect = kern.kdiag_at(&[100.0]) + 1.0 / beta;
+        let post = Posterior::new(kern, x, beta, &st).unwrap();
+        let probe = Mat::from_vec(1, 1, vec![100.0]);
+        let (_, var) = post.predict(&probe);
+        assert!((var[0] - expect).abs() < 1e-6 * expect,
+                "far-field var {} vs k** + 1/beta = {}", var[0], expect);
     }
 }

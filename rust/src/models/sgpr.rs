@@ -11,16 +11,18 @@ use anyhow::Result;
 
 /// A fitted sparse-GP regressor.
 pub struct SparseGpRegression {
+    /// Training outcome (bound, trace, fitted parameters, timing).
     pub result: TrainResult,
     posterior: Posterior,
 }
 
 impl SparseGpRegression {
-    /// Fit to `(x, y)` with `m` inducing points. Inducing inputs are
-    /// initialised to a random subset of X; σ² to the output variance;
-    /// β to 1/(0.01·var(y)); all are then optimised.
-    pub fn fit(x: &Mat, y: &Mat, m: usize, aot_config: &str, cfg: EngineConfig,
-               seed: u64) -> Result<SparseGpRegression> {
+    /// The Problem (exposed so the CLI and benches can drive
+    /// `Engine::train_then_predict` / `Engine::time_iterations` on
+    /// exactly the model this type trains). Inducing inputs initialise
+    /// to a random subset of X; σ² to the output variance; β to
+    /// 1/(0.01·var(y)); all are then optimised.
+    pub fn problem(x: &Mat, y: &Mat, m: usize, aot_config: &str, seed: u64) -> Problem {
         let (n, q) = (x.rows(), x.cols());
         assert!(m <= n, "need M <= N");
         let mut rng = Rng64::new(seed);
@@ -41,7 +43,7 @@ impl SparseGpRegression {
         let kern0 = RbfArd::iso(y_var, 1.0, q);
         let beta0 = 1.0 / (0.01 * y_var);
 
-        let problem = Problem {
+        Problem {
             latent: LatentSpec::Observed(x.clone()),
             views: vec![ViewSpec {
                 y: y.clone(),
@@ -51,7 +53,15 @@ impl SparseGpRegression {
                 aot_config: aot_config.to_string(),
             }],
             q,
-        };
+        }
+    }
+
+    /// Fit to `(x, y)` with `m` inducing points (see
+    /// [`SparseGpRegression::problem`] for the initialisation).
+    pub fn fit(x: &Mat, y: &Mat, m: usize, aot_config: &str, cfg: EngineConfig,
+               seed: u64) -> Result<SparseGpRegression> {
+        let n = x.rows();
+        let problem = Self::problem(x, y, m, aot_config, seed);
         let engine = Engine::new(problem, cfg)?;
         let result = engine.train()?;
 
@@ -67,6 +77,13 @@ impl SparseGpRegression {
     /// Predictive mean and variance at test inputs.
     pub fn predict(&self, xstar: &Mat) -> (Mat, Vec<f64>) {
         self.posterior.predict(xstar)
+    }
+
+    /// The precomputed posterior (its
+    /// [`core`](crate::models::Posterior::core) is what sharded serving
+    /// broadcasts).
+    pub fn posterior(&self) -> &Posterior {
+        &self.posterior
     }
 
     /// Root-mean-square error against held-out targets.

@@ -4,13 +4,20 @@
 
 use super::{Objective, OptResult, Optimizer, StopReason};
 
+/// Adam configuration (Kingma & Ba 2015 defaults).
 #[derive(Clone, Debug)]
 pub struct Adam {
+    /// Step size.
     pub lr: f64,
+    /// First-moment decay rate.
     pub beta1: f64,
+    /// Second-moment decay rate.
     pub beta2: f64,
+    /// Denominator fuzz.
     pub eps: f64,
+    /// Iteration budget.
     pub max_iters: usize,
+    /// Stop when the max-abs gradient entry falls below this.
     pub grad_tol: f64,
 }
 

@@ -9,14 +9,17 @@ use crate::linalg::{norm2, vdot};
 pub struct Lbfgs {
     /// History length (number of (s, y) pairs).
     pub history: usize,
+    /// Iteration budget.
     pub max_iters: usize,
     /// Stop when the max-abs gradient entry falls below this.
     pub grad_tol: f64,
     /// Stop when the relative improvement falls below this.
     pub f_tol: f64,
-    /// Wolfe constants (c1 sufficient decrease, c2 curvature).
+    /// Wolfe sufficient-decrease constant c1.
     pub c1: f64,
+    /// Wolfe curvature constant c2.
     pub c2: f64,
+    /// Line-search probe budget per iteration.
     pub max_line_search: usize,
 }
 

@@ -30,19 +30,28 @@ pub type Objective<'a> = dyn FnMut(&[f64]) -> (f64, Vec<f64>) + 'a;
 /// Why an optimisation run stopped.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StopReason {
+    /// Gradient norm fell below the tolerance.
     GradTol,
+    /// Relative objective improvement fell below the tolerance.
     FtolReached,
+    /// Iteration budget exhausted.
     MaxIters,
+    /// Line search could not find an acceptable step.
     LineSearchFailed,
 }
 
 /// Result of an optimisation run.
 #[derive(Clone, Debug)]
 pub struct OptResult {
+    /// Final parameter vector.
     pub x: Vec<f64>,
+    /// Final objective value.
     pub f: f64,
+    /// Accepted iterations.
     pub iterations: usize,
+    /// Objective evaluations (including line-search probes).
     pub evaluations: usize,
+    /// Why the run stopped.
     pub stop: StopReason,
     /// f after every accepted iteration (the loss curve).
     pub trace: Vec<f64>,
@@ -50,6 +59,7 @@ pub struct OptResult {
 
 /// Common optimiser interface.
 pub trait Optimizer {
+    /// Minimise `obj` from `x0` until a stopping criterion fires.
     fn minimize(&self, obj: &mut Objective, x0: Vec<f64>) -> OptResult;
 }
 

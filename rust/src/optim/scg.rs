@@ -8,8 +8,11 @@ use crate::linalg::{norm2, vdot};
 /// SCG configuration (names follow Møller's paper / GPy's scg.py).
 #[derive(Clone, Debug)]
 pub struct Scg {
+    /// Iteration budget.
     pub max_iters: usize,
+    /// Stop when the max-abs gradient entry falls below this.
     pub grad_tol: f64,
+    /// Stop when the relative improvement falls below this.
     pub f_tol: f64,
 }
 

@@ -18,6 +18,7 @@ use std::rc::Rc;
 
 /// A borrowed argument for a module call.
 pub enum Arg<'a> {
+    /// A scalar (rank-0) argument.
     Scalar(f64),
     /// Row-major data; the shape is validated against the manifest.
     Buf(&'a [f64]),
@@ -86,6 +87,7 @@ impl Executable {
         Ok(out)
     }
 
+    /// The manifest spec this executable was compiled from.
     pub fn spec(&self) -> &ModuleSpec {
         &self.spec
     }
@@ -106,6 +108,7 @@ impl Runtime {
         Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
@@ -128,6 +131,7 @@ impl Runtime {
         Ok(handle)
     }
 
+    /// The PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

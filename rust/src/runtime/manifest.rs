@@ -9,15 +9,19 @@ use std::path::{Path, PathBuf};
 /// One tensor slot (positional) of a module.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
+    /// Slot name (diagnostics only; binding is positional).
     pub name: String,
+    /// Tensor shape, row-major.
     pub shape: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Is the tensor zero-sized?
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -26,27 +30,37 @@ impl TensorSpec {
 /// One lowered HLO module.
 #[derive(Clone, Debug)]
 pub struct ModuleSpec {
+    /// Config family (e.g. "paper").
     pub config: String,
+    /// Module name within the family (e.g. "bgplvm_fwd").
     pub module: String,
+    /// The HLO-text artifact on disk.
     pub file: PathBuf,
     /// (chunk, m, q, d).
     pub dims: Dims,
+    /// Positional input tensor specs.
     pub inputs: Vec<TensorSpec>,
+    /// Positional output tensor specs.
     pub outputs: Vec<TensorSpec>,
 }
 
 /// The static shape configuration of a module family.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Dims {
+    /// Chunk size C.
     pub c: usize,
+    /// Inducing point count M.
     pub m: usize,
+    /// Latent dimensionality Q.
     pub q: usize,
+    /// Output dimensionality D.
     pub d: usize,
 }
 
 /// Parsed manifest.json.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// The artifact directory the manifest was loaded from.
     pub dir: PathBuf,
     modules: BTreeMap<(String, String), ModuleSpec>,
 }
@@ -109,6 +123,7 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), modules })
     }
 
+    /// Look up one module of one config.
     pub fn get(&self, config: &str, module: &str) -> Result<&ModuleSpec> {
         self.modules
             .get(&(config.to_string(), module.to_string()))
@@ -116,6 +131,7 @@ impl Manifest {
                                     (available: {:?})", self.config_names()))
     }
 
+    /// Every config name in the manifest (duplicates collapsed).
     pub fn config_names(&self) -> Vec<&str> {
         let mut v: Vec<&str> = self.modules.keys().map(|(c, _)| c.as_str()).collect();
         v.dedup();

@@ -21,6 +21,7 @@ const UNAVAILABLE: &str = "built without the `xla` feature: the PJRT runtime is 
 
 /// A borrowed argument for a module call.
 pub enum Arg<'a> {
+    /// A scalar (rank-0) argument.
     Scalar(f64),
     /// Row-major data; the shape is validated against the manifest.
     Buf(&'a [f64]),
@@ -37,6 +38,7 @@ impl Executable {
         bail!("{}/{}: {UNAVAILABLE}", self.spec.config, self.spec.module);
     }
 
+    /// The manifest spec this executable was built from.
     pub fn spec(&self) -> &ModuleSpec {
         &self.spec
     }
@@ -48,14 +50,17 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Always fails in stub builds — points at the `xla` feature flag.
     pub fn new(_artifacts_dir: &Path) -> Result<Runtime> {
         bail!("{UNAVAILABLE}");
     }
 
+    /// Always fails in stub builds (there is nothing to load).
     pub fn module(&self, config: &str, module: &str) -> Result<Rc<Executable>> {
         bail!("{config}/{module}: {UNAVAILABLE}");
     }
 
+    /// The PJRT platform name — `"unavailable"` in stub builds.
     pub fn platform(&self) -> String {
         "unavailable".to_string()
     }

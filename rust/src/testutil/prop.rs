@@ -23,6 +23,7 @@ pub struct Prop {
 }
 
 impl Prop {
+    /// Name the property (the name seeds its deterministic case stream).
     pub fn new(name: &str) -> Self {
         // FNV-1a over the name: stable per-property seed stream.
         let mut h: u64 = 0xcbf29ce484222325;
@@ -33,6 +34,7 @@ impl Prop {
         Prop { name: name.to_string(), cases: 64, base_seed: h }
     }
 
+    /// Override the case budget (default 64).
     pub fn cases(mut self, n: usize) -> Self {
         self.cases = n;
         self
