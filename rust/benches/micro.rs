@@ -334,6 +334,77 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---------------------------------------------------------------
+    // 8. stats-only pass + posterior hot-swap (the STATS verb):
+    //    distributed posterior rebuild across ranks, and a full
+    //    refit-and-swap round against an open serving session
+    // ---------------------------------------------------------------
+    println!("\n== stats-only pass + hot-swap (supervised, M=64, Q=1, D=2) ==");
+    println!("{:>6} {:>8} {:>14} {:>14}", "N", "workers", "stats s", "swap s");
+    {
+        use gpparallel::collectives::Cluster;
+        use gpparallel::coordinator::{DistributedEvaluator, Partition};
+        use gpparallel::models::SparseGpRegression;
+
+        let n_stats = if fast { 1024usize } else { 4096 };
+        let chunk = 256usize;
+        let spec = SyntheticSpec { n: n_stats, q: 1, d: 2, ..Default::default() };
+        let dss = generate_supervised(&spec, 12);
+        let xs = dss.x.clone().unwrap();
+        let problem = SparseGpRegression::problem(&xs, &dss.y, 64, "paper", 12);
+        let x0 = problem.initial_params();
+        let stats_reps = if fast { 2 } else { 5 };
+
+        for workers in [1usize, 2, 4] {
+            let part = Partition::new(n_stats, chunk, workers);
+            let cfg = EngineConfig {
+                workers,
+                chunk,
+                backend: BackendKind::RustCpu,
+                artifacts_dir: "artifacts".into(),
+                opt: OptChoice::Lbfgs(Lbfgs::default()),
+                pipeline: true,
+                verbose: false,
+            };
+            let (p, x0_r) = (&problem, &x0);
+            let results = Cluster::run(workers, move |comm| {
+                let mut ev = DistributedEvaluator::new(p, &cfg, &part, comm)
+                    .expect("evaluator");
+                if ev.rank() == 0 {
+                    // warm, then time the steady-state stats pass
+                    let _ = ev.stats_pass(x0_r).expect("warmup");
+                    let t0 = Instant::now();
+                    for _ in 0..stats_reps {
+                        std::hint::black_box(ev.stats_pass(x0_r).expect("stats"));
+                    }
+                    let t_stats = t0.elapsed().as_secs_f64() / stats_reps as f64;
+
+                    // hot-swap: STATS round + core rebuild + rebroadcast
+                    // against an open serving session
+                    let core = ev.posterior_core_at(x0_r).expect("core");
+                    ev.begin_serving(core, chunk).expect("serve");
+                    let t0 = Instant::now();
+                    for _ in 0..stats_reps {
+                        ev.refit_and_swap(x0_r).expect("swap");
+                    }
+                    let t_swap = t0.elapsed().as_secs_f64() / stats_reps as f64;
+                    ev.end_serving().expect("end");
+                    ev.finish();
+                    Some((t_stats, t_swap))
+                } else {
+                    ev.serve().expect("worker");
+                    None
+                }
+            });
+            let (t_stats, t_swap) = results[0].expect("leader timing");
+            println!("{:>6} {:>8} {:>14.5} {:>14.5}", n_stats, workers, t_stats, t_swap);
+            rec.push(&format!("stats_pass_w{workers}"), n_stats, t_stats);
+            if workers == 2 {
+                rec.push("hot_swap", n_stats, t_swap);
+            }
+        }
+    }
+
     rec.write("BENCH_micro.json")?;
     println!("\nwrote BENCH_micro.json ({} records)", rec.0.len());
     Ok(())

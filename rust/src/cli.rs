@@ -74,6 +74,58 @@ impl Args {
         }
         Ok(())
     }
+
+    /// Reject bare switches the current subcommand does not accept.
+    pub fn check_known_flags(&self, known: &[&str]) -> Result<()> {
+        for f in &self.flags {
+            if !known.contains(&f.as_str()) {
+                bail!("--{f} is not accepted here (known flags: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// the launcher's per-subcommand argument scopes
+// ---------------------------------------------------------------------
+
+/// Dataset/model/engine options shared by every engine-driving
+/// subcommand (each adds its own extras on top — see [`known_options`]).
+const ENGINE_OPTIONS: &[&str] = &["n", "q", "d", "m", "workers", "chunk", "backend",
+                                  "seed", "artifacts", "aot-config"];
+/// Flags shared by every engine-driving subcommand.
+const ENGINE_FLAGS: &[&str] = &["verbose", "no-pipeline", "help"];
+
+/// The `--key value` options subcommand `cmd` accepts, or `None` for an
+/// unknown subcommand. Validation is **per subcommand**, not global:
+/// `gpparallel time --batch 64` is an error, not a silently ignored
+/// option (`--batch` belongs to `predict`). Every engine-driving scope
+/// is built from the one shared [`ENGINE_OPTIONS`] base plus its own
+/// extras, so a new shared option cannot drift out of some scopes.
+pub fn known_options(cmd: &str) -> Option<Vec<&'static str>> {
+    let (base, extra): (&[&str], &[&str]) = match cmd {
+        "train-bgplvm" | "train-sgpr" => (ENGINE_OPTIONS, &["iters"]),
+        "predict" => (ENGINE_OPTIONS, &["iters", "nt", "batch"]),
+        "time" => (ENGINE_OPTIONS, &["evals"]),
+        "info" => (&[], &["artifacts"]),
+        "help" => (&[], &[]),
+        _ => return None,
+    };
+    Some(base.iter().chain(extra).copied().collect())
+}
+
+/// The bare `--flag` switches subcommand `cmd` accepts (same per-scope
+/// discipline as [`known_options`], built from the shared
+/// [`ENGINE_FLAGS`] base so a new shared flag cannot drift out of some
+/// scopes).
+pub fn known_flags(cmd: &str) -> Vec<&'static str> {
+    let (base, extra): (&[&str], &[&str]) = match cmd {
+        "train-bgplvm" | "train-sgpr" | "time" => (ENGINE_FLAGS, &[]),
+        "predict" => (ENGINE_FLAGS, &["refit-demo"]),
+        _ => (&[], &["help"]),
+    };
+    base.iter().chain(extra).copied().collect()
 }
 
 #[cfg(test)]
@@ -108,6 +160,49 @@ mod tests {
         let a = parse("--typo 1");
         assert!(a.check_known(&["n", "m"]).is_err());
         assert!(a.check_known(&["typo"]).is_ok());
+    }
+
+    /// Regression: argument validation is per-subcommand — an option
+    /// that belongs to a *different* subcommand is rejected instead of
+    /// being silently ignored.
+    #[test]
+    fn per_subcommand_scopes_reject_out_of_scope_options() {
+        // `time --batch 64` used to pass the (global) typo guard and be
+        // silently ignored; now it is an error
+        let a = parse("time --batch 64");
+        let known = known_options("time").expect("time is a known command");
+        assert!(!known.contains(&"batch"));
+        assert!(a.check_known(&known).is_err());
+
+        // the same option is in scope for `predict`
+        let p = known_options("predict").expect("predict is a known command");
+        assert!(p.contains(&"batch") && p.contains(&"nt"));
+        assert!(parse("predict --batch 64").check_known(&p).is_ok());
+
+        // `evals` belongs to `time`, not the training subcommands
+        assert!(known_options("train-sgpr").unwrap().contains(&"iters"));
+        assert!(!known_options("train-sgpr").unwrap().contains(&"evals"));
+
+        // the shared engine base appears in every engine-driving scope
+        for cmd in ["train-bgplvm", "train-sgpr", "predict", "time"] {
+            assert!(known_options(cmd).unwrap().contains(&"workers"), "{cmd}");
+        }
+
+        assert!(known_options("frobnicate").is_none());
+    }
+
+    /// Flags follow the same scoping: `--refit-demo` is predict-only,
+    /// and the shared engine flags appear in every engine-driving scope.
+    #[test]
+    fn per_subcommand_flag_scopes() {
+        let a = Args::parse("time --refit-demo".split_whitespace().map(String::from),
+                            &["refit-demo"]).unwrap();
+        assert!(a.check_known_flags(&known_flags("time")).is_err());
+        assert!(a.check_known_flags(&known_flags("predict")).is_ok());
+        assert_eq!(known_flags("info"), vec!["help"]);
+        for cmd in ["train-bgplvm", "train-sgpr", "predict", "time"] {
+            assert!(known_flags(cmd).contains(&"no-pipeline"), "{cmd}");
+        }
     }
 
     #[test]

@@ -120,6 +120,14 @@ pub trait Backend {
 
     /// Forward statistics for every chunk of a rank, in chunk order,
     /// plus one fwd→vjp [`FwdCache`] per chunk (possibly empty).
+    ///
+    /// The training cycle sums the per-chunk results; the engine's
+    /// stats-only pass (the STATS verb behind serving posterior
+    /// rebuilds and hot-swaps) instead keeps them separate, packing
+    /// each into its global-chunk slot of the reduction wire — both
+    /// rely on the **chunk-order** guarantee here, which is what makes
+    /// the assembled statistics identical across backends and thread
+    /// counts.
     fn stats_fwd_batch(&mut self, tasks: &[ChunkTask], view: &ViewParams,
                        include_kl: bool) -> Result<(Vec<Stats>, Vec<FwdCache>)> {
         let stats = tasks.iter()

@@ -27,7 +27,12 @@
 //!   ([`DistributedPosterior`], bit-identical to the single-node
 //!   posterior). Entered from a training cluster via
 //!   `DistributedEvaluator::begin_serving` or standalone over a raw
-//!   `Comm`.
+//!   `Comm`. The posterior itself is built by a **distributed
+//!   stats-only pass** (the STATS verb,
+//!   `DistributedEvaluator::stats_pass`/`posterior_core_at`) — the
+//!   leader does no full-data work — and can be **hot-swapped**
+//!   mid-session at new parameters (`refit_and_swap`, or a standalone
+//!   `DistributedPosterior::rebroadcast`).
 //!
 //! The engine is **multi-view** from the start: SGPR is one supervised
 //! view, the Bayesian GP-LVM is one unsupervised view, MRD is several
@@ -45,5 +50,5 @@ pub mod train;
 
 pub use cycle::DistributedEvaluator;
 pub use problem::{Fitted, LatentSpec, Problem, ViewSpec};
-pub use serve::DistributedPosterior;
+pub use serve::{DistributedPosterior, ServeSignal};
 pub use train::{Engine, EngineConfig, OptChoice, TrainResult};

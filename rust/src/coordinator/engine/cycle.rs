@@ -39,13 +39,30 @@
 //! [`DistributedEvaluator`] owns one rank's half of that conversation:
 //! the leader drives it through [`DistributedEvaluator::eval`], workers
 //! sit in [`DistributedEvaluator::serve`]. Beyond EVAL and STOP, the
-//! command broadcast carries a third verb, SERVE: the leader switches
-//! the whole cluster into a sharded *prediction* session
-//! ([`begin_serving`](DistributedEvaluator::begin_serving) /
-//! [`predict_sharded`](DistributedEvaluator::predict_sharded) /
-//! [`end_serving`](DistributedEvaluator::end_serving), protocol in
-//! [`super::serve`]) and back, so a freshly fitted model is served by
-//! the same ranks that trained it without leaving the SPMD world.
+//! command broadcast carries two more verbs:
+//!
+//! - SERVE: the leader switches the whole cluster into a sharded
+//!   *prediction* session
+//!   ([`begin_serving`](DistributedEvaluator::begin_serving) /
+//!   [`predict_sharded`](DistributedEvaluator::predict_sharded) /
+//!   [`end_serving`](DistributedEvaluator::end_serving), protocol in
+//!   [`super::serve`]) and back, so a freshly fitted model is served by
+//!   the same ranks that trained it without leaving the SPMD world.
+//! - STATS: a **stats-only pass** ([`stats_pass`](DistributedEvaluator::stats_pass)) —
+//!   the leader broadcasts parameters, every rank computes its chunks'
+//!   view-0 sufficient statistics through the backend batch API, and one
+//!   `reduce_sum_into` tree-reduction assembles them on the leader. Each
+//!   chunk's statistics occupy their **own slot** of the reduction wire
+//!   (zeros elsewhere), so the reduction adds exact zeros and the
+//!   leader's chunk-order fold reproduces the serial chunked
+//!   construction ([`sgpr_stats_fwd_chunked`](crate::math::stats::sgpr_stats_fwd_chunked))
+//!   **bit for bit at every cluster size and on either CPU backend**.
+//!   This is how [`posterior_core_at`](DistributedEvaluator::posterior_core_at)
+//!   builds the serving posterior with zero leader-side full-data work,
+//!   and — via the serve loop's REFIT sub-command
+//!   ([`refit_and_swap`](DistributedEvaluator::refit_and_swap)) — how an
+//!   open serving session hot-swaps its posterior at new parameters
+//!   without tearing the session down.
 //!
 //! Both sides keep the
 //! collectives in lockstep even when a rank's compute fails mid-cycle:
@@ -59,7 +76,7 @@
 
 use super::problem::{pad_globals, unpack_globals, GlobalParams, LatentSpec, ParamLayout,
                      Problem};
-use super::serve::{self, DistributedPosterior};
+use super::serve::{DistributedPosterior, ServeSignal};
 use super::train::EngineConfig;
 use crate::collectives::Comm;
 use crate::config::BackendKind;
@@ -84,6 +101,8 @@ const CMD_EVAL: f64 = 1.0;
 const CMD_STOP: f64 = 0.0;
 /// Switch the cluster into a sharded serving session (`engine::serve`).
 const CMD_SERVE: f64 = 2.0;
+/// Run one stats-only collective round (distributed posterior rebuild).
+const CMD_STATS: f64 = 3.0;
 const TAG_LOCALS: u64 = 100;
 
 /// What the leader's command broadcast told a worker to do next.
@@ -92,6 +111,8 @@ enum WorkerCmd {
     Eval(GlobalParams),
     /// Enter a sharded serving session until the leader closes it.
     Serve,
+    /// Contribute this rank's chunk statistics to a stats-only round.
+    Stats,
     /// Shut down (report compute totals and return).
     Stop,
 }
@@ -291,6 +312,19 @@ impl WorkerState {
         }
     }
 
+    /// View 0's **per-chunk** forward statistics at the given parameters
+    /// — the stats-only pass. Supervised chunks only (no latents, KL
+    /// off); results come back in chunk order regardless of how the
+    /// backend parallelised them, which is what lets the leader fold
+    /// them into the serial chunk-order construction.
+    fn fwd_view0_per_chunk(&mut self, gv: &super::problem::GlobalView)
+                           -> Result<Vec<Stats>> {
+        let tasks = view_tasks(&self.view_chunks[0], &[], false);
+        let vp = ViewParams { z: &gv.z, log_hyp: &gv.log_hyp };
+        let (stats, _caches) = self.backends[0].stats_fwd_batch(&tasks, &vp, false)?;
+        Ok(stats)
+    }
+
     /// One view's local forward pass: per-chunk stats summed over chunks
     /// (in chunk order, regardless of how the backend parallelised them)
     /// plus the per-chunk fwd→vjp caches. `d` is the view's global
@@ -368,6 +402,11 @@ pub struct DistributedEvaluator {
     /// Every rank's datapoint span (for scattering (μ,S) and gathering
     /// their gradients).
     spans: Vec<Option<ChunkRange>>,
+    /// Fixed chunk size C (slot indexing for the stats-only pass:
+    /// global chunk index = chunk.start / C).
+    chunk_rows: usize,
+    /// Total chunk count K across the cluster (sizes the STATS wire).
+    num_chunks: usize,
     timer: PhaseTimer,
     /// Distributable compute consumed by this rank (seconds).
     compute: f64,
@@ -422,6 +461,8 @@ impl DistributedEvaluator {
             layout,
             ds,
             spans,
+            chunk_rows: part.chunk,
+            num_chunks: part.num_chunks(),
             timer: PhaseTimer::new(),
             compute: 0.0,
             compute_wall,
@@ -577,6 +618,204 @@ impl DistributedEvaluator {
         scratch.dmu_span.resize(span_len, 0.0);
         scratch.dls_span.clear();
         scratch.dls_span.resize(span_len, 0.0);
+    }
+
+    // -----------------------------------------------------------------
+    // the stats-only round (both sides)
+    // -----------------------------------------------------------------
+
+    /// One rank's half of the stats-only collective (run by every rank
+    /// after the verb + parameter broadcasts): compute this rank's
+    /// view-0 chunk statistics, pack **each chunk into its own
+    /// global-chunk slot** of the K-slot wire (zeros everywhere else),
+    /// and tree-reduce in place. Every slot has exactly one non-zero
+    /// contributor, so the reduction only ever adds zeros — exact in
+    /// IEEE arithmetic — and the reduced wire is independent of the
+    /// cluster size and reduction topology. Failures ride the trailing
+    /// fail-count element exactly like the training reductions.
+    ///
+    /// The slot wire is K× larger than the training reduction's
+    /// (deliberate: it buys the rank-count-invariant fold through the
+    /// same `reduce_sum_into` collective the rest of the cycle uses,
+    /// and a refit runs once per posterior rebuild, not per optimiser
+    /// step). If huge-K refits ever become hot, a rank-order `gather`
+    /// of each rank's *owned* slots would ship every slot exactly once
+    /// while preserving the identical chunk-order fold (see ROADMAP).
+    ///
+    /// Returns the cluster-wide fail count on the root (meaningless
+    /// elsewhere) plus this rank's local error, if any.
+    fn stats_round(&mut self, globals: &GlobalParams, scratch: &mut CycleScratch)
+                   -> (f64, Option<anyhow::Error>) {
+        let slot = view_stats_wire_len(self.layout.m, self.ds[0]);
+        let wire_len = self.num_chunks * slot;
+
+        let t0 = Instant::now();
+        let c0 = self.clock();
+        scratch.stats_wire.clear();
+        scratch.stats_wire.resize(wire_len, 0.0);
+        let mut err: Option<anyhow::Error> = None;
+        if self.state.variational {
+            // defensive: the leader refuses STATS for variational
+            // problems before any broadcast, so this only fires if a
+            // mixed-problem cluster ever desyncs — flag, stay lockstep
+            err = Some(anyhow!("stats pass needs a supervised problem"));
+        } else {
+            match self.state.fwd_view0_per_chunk(&globals.views[0]) {
+                Ok(stats) => {
+                    let mut packed = Vec::with_capacity(slot);
+                    for (chunk, st) in self.state.view_chunks[0].iter().zip(&stats) {
+                        let k = chunk.start / self.chunk_rows;
+                        packed.clear();
+                        st.pack_into(&mut packed);
+                        scratch.stats_wire[k * slot..(k + 1) * slot]
+                            .copy_from_slice(&packed);
+                    }
+                }
+                Err(e) => err = Some(e),
+            }
+        }
+        self.compute += self.clock() - c0;
+        self.timer.add(Phase::StatsFwd, t0.elapsed());
+
+        seal_wire(&mut scratch.stats_wire, err.is_none(), wire_len);
+        let t0 = Instant::now();
+        let _ = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
+        self.timer.add(Phase::Reduce, t0.elapsed());
+        (*scratch.stats_wire.last().expect("non-empty reduce"), err)
+    }
+
+    /// Leader half of the stats collective, after the verb broadcast:
+    /// parameter broadcast, this rank's own chunk contributions, the
+    /// tree reduction, and the chunk-order fold of the reduced slots.
+    fn stats_collective(&mut self, x: &[f64], scratch: &mut CycleScratch)
+                        -> Result<Stats> {
+        let gx = x[..self.layout.global_len()].to_vec();
+        {
+            let comm = &mut self.comm;
+            self.timer.time(Phase::Bcast, || {
+                comm.bcast(0, gx);
+            });
+        }
+        let globals = unpack_globals(&self.layout,
+                                     &pad_globals(&self.layout,
+                                                  &x[..self.layout.global_len()]));
+
+        let (fails, err) = self.stats_round(&globals, scratch);
+        if let Some(e) = err {
+            return Err(e);
+        }
+        if fails > 0.0 {
+            return Err(anyhow!("stats pass failed on {fails} rank(s)"));
+        }
+
+        // fold the per-chunk slots in global chunk order — the serial
+        // summation discipline, independent of the cluster size
+        let (m, d) = (self.layout.m, self.ds[0]);
+        let slot = view_stats_wire_len(m, d);
+        let mut acc = Stats::zeros(m, d);
+        let mut st = Stats::zeros(m, d);
+        for k in 0..self.num_chunks {
+            st.unpack_from(&scratch.stats_wire[k * slot..(k + 1) * slot]);
+            acc.add_assign(&st);
+        }
+        Ok(acc)
+    }
+
+    /// Leader: run a distributed **stats-only pass** (the STATS verb) at
+    /// the packed parameter vector `x`: every rank contributes its
+    /// chunks' view-0 sufficient statistics and the leader receives the
+    /// global [`Stats`] — bit-identical to the serial chunked
+    /// construction [`sgpr_stats_fwd_chunked`](crate::math::stats::sgpr_stats_fwd_chunked)
+    /// at the engine's chunk size, for every cluster size and CPU
+    /// backend. Supervised (observed-X) problems only.
+    pub fn stats_pass(&mut self, x: &[f64]) -> Result<Stats> {
+        if self.sharded.is_some() {
+            return Err(anyhow!(
+                "a serving session is open: use refit_and_swap or end_serving first"));
+        }
+        if self.layout.variational {
+            return Err(anyhow!("stats pass needs a supervised problem (observed X)"));
+        }
+        {
+            let comm = &mut self.comm;
+            self.timer.time(Phase::Bcast, || {
+                comm.bcast(0, vec![CMD_STATS]);
+            });
+        }
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let out = self.stats_collective(x, &mut scratch);
+        self.scratch = scratch;
+        out
+    }
+
+    /// Leader: distributed rebuild of the serving posterior at `x` — a
+    /// stats-only pass followed by the M×M factorisations
+    /// ([`PosteriorCore::new`]) on the reduced statistics. The leader
+    /// does **no full-data work**: its own contribution is its resident
+    /// chunks, like any other rank.
+    pub fn posterior_core_at(&mut self, x: &[f64]) -> Result<PosteriorCore> {
+        let stats = self.stats_pass(x)?;
+        self.core_from_stats(x, &stats)
+    }
+
+    /// The posterior core implied by parameters `x` and reduced
+    /// statistics: view 0's kernel/Z/β exactly as `unpack_fitted` would
+    /// produce them, so the core is bit-identical to one built from the
+    /// trainer's `Fitted` at the same `x`.
+    fn core_from_stats(&self, x: &[f64], stats: &Stats) -> Result<PosteriorCore> {
+        let globals = unpack_globals(&self.layout,
+                                     &pad_globals(&self.layout,
+                                                  &x[..self.layout.global_len()]));
+        let gv = &globals.views[0];
+        PosteriorCore::new(RbfArd::from_log_hyp(&gv.log_hyp), gv.z.clone(),
+                           gv.log_beta.exp(), stats)
+    }
+
+    /// Leader: **posterior hot-swap** — with a serving session open, run
+    /// a stats-only round at the (new) parameters `x` and re-broadcast
+    /// the rebuilt core, without tearing the session down: workers leave
+    /// the serve loop for exactly one stats round and resume serving.
+    ///
+    /// Failure is atomic: if any rank's stats computation or the
+    /// leader's factorisation fails, no swap broadcast goes out and the
+    /// session keeps serving the old posterior (every rank is back at
+    /// the serve sub-command broadcast either way).
+    pub fn refit_and_swap(&mut self, x: &[f64]) -> Result<()> {
+        if self.layout.variational {
+            return Err(anyhow!("stats pass needs a supervised problem (observed X)"));
+        }
+        let Some(mut dp) = self.sharded.take() else {
+            return Err(anyhow!("no serving session: call begin_serving first"));
+        };
+        dp.request_refit(&mut self.comm);
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let stats = self.stats_collective(x, &mut scratch);
+        self.scratch = scratch;
+        let result = match stats.and_then(|st| self.core_from_stats(x, &st)) {
+            Ok(core) => {
+                dp.rebroadcast(core, &mut self.comm);
+                Ok(())
+            }
+            Err(e) => Err(e),
+        };
+        self.sharded = Some(dp);
+        result
+    }
+
+    /// Worker half of a stats-only round (entered on a STATS verb from
+    /// the training loop or a REFIT sub-command from a serving session):
+    /// receive the parameter broadcast and contribute this rank's chunk
+    /// slots to the reduction. A local failure is flagged on the wire
+    /// (the collective stays in lockstep) and returned for the worker's
+    /// sticky error.
+    fn worker_stats_half(&mut self, scratch: &mut CycleScratch) -> Result<()> {
+        let gx = self.comm.bcast(0, Vec::new());
+        let globals = unpack_globals(&self.layout, &pad_globals(&self.layout, &gx));
+        let (_, err) = self.stats_round(&globals, scratch);
+        match err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     // -----------------------------------------------------------------
@@ -1064,6 +1303,9 @@ impl DistributedEvaluator {
         if cmd[0] == CMD_SERVE {
             return WorkerCmd::Serve;
         }
+        if cmd[0] == CMD_STATS {
+            return WorkerCmd::Stats;
+        }
         let gx = self.comm.bcast(0, Vec::new());
         let globals = unpack_globals(&self.layout, &pad_globals(&self.layout, &gx));
 
@@ -1082,9 +1324,44 @@ impl DistributedEvaluator {
     /// Worker side of a whole serving session (entered on CMD_SERVE,
     /// returns when the leader closes it). A serving failure is reported
     /// through the session's own fail-flag protocol; the returned error
-    /// is merged into the worker loop's sticky error.
-    fn worker_serve_session(&mut self) -> Result<()> {
-        serve::worker_serve(&mut self.comm, self.state.backends[0].as_mut())
+    /// is merged into the worker loop's sticky error. REFIT sub-commands
+    /// send this rank through one stats-only round (the worker half of
+    /// [`refit_and_swap`](DistributedEvaluator::refit_and_swap)); the
+    /// leader follows a successful refit with a swap broadcast, which
+    /// the serve loop applies internally.
+    fn worker_serve_session(&mut self, scratch: &mut CycleScratch) -> Result<()> {
+        let mut dp = DistributedPosterior::worker(&mut self.comm)?;
+        let mut sticky: Option<anyhow::Error> = None;
+        loop {
+            match dp.serve_until(&mut self.comm, self.state.backends[0].as_mut()) {
+                Ok(ServeSignal::Done) => {
+                    return match sticky {
+                        Some(e) => Err(e),
+                        None => Ok(()),
+                    };
+                }
+                Ok(ServeSignal::Refit) => {
+                    // a local stats failure is flagged on the wire (the
+                    // leader then abandons the swap cluster-wide), so
+                    // serving continues against the old posterior
+                    if let Err(e) = self.worker_stats_half(scratch) {
+                        if sticky.is_none() {
+                            sticky = Some(e);
+                        }
+                    }
+                }
+                Err(e) => {
+                    // the session's own first-error-wins stream is the
+                    // primary diagnostic; a refit stats-round failure is
+                    // appended rather than allowed to mask it
+                    return match sticky {
+                        Some(s) => Err(anyhow!(
+                            "{e:#}; also failed a refit stats round: {s:#}")),
+                        None => Err(e),
+                    };
+                }
+            }
+        }
     }
 
     /// The pipelined worker schedule: mirror image of `eval_pipelined` —
@@ -1099,7 +1376,15 @@ impl DistributedEvaluator {
             let globals = match self.worker_receive(scratch) {
                 WorkerCmd::Eval(g) => g,
                 WorkerCmd::Serve => {
-                    if let Err(e) = self.worker_serve_session() {
+                    if let Err(e) = self.worker_serve_session(scratch) {
+                        if sticky_err.is_none() {
+                            sticky_err = Some(e);
+                        }
+                    }
+                    continue;
+                }
+                WorkerCmd::Stats => {
+                    if let Err(e) = self.worker_stats_half(scratch) {
                         if sticky_err.is_none() {
                             sticky_err = Some(e);
                         }
@@ -1177,7 +1462,15 @@ impl DistributedEvaluator {
             let globals = match self.worker_receive(scratch) {
                 WorkerCmd::Eval(g) => g,
                 WorkerCmd::Serve => {
-                    if let Err(e) = self.worker_serve_session() {
+                    if let Err(e) = self.worker_serve_session(scratch) {
+                        if sticky_err.is_none() {
+                            sticky_err = Some(e);
+                        }
+                    }
+                    continue;
+                }
+                WorkerCmd::Stats => {
+                    if let Err(e) = self.worker_stats_half(scratch) {
                         if sticky_err.is_none() {
                             sticky_err = Some(e);
                         }

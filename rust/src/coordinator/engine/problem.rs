@@ -60,6 +60,14 @@ impl Problem {
         self.views[0].y.rows()
     }
 
+    /// The packed optimiser parameter vector at the problem's initial
+    /// state — the flat layout every rank agrees on, as accepted by
+    /// [`DistributedEvaluator::eval`](super::cycle::DistributedEvaluator::eval)
+    /// and [`stats_pass`](super::cycle::DistributedEvaluator::stats_pass).
+    pub fn initial_params(&self) -> Vec<f64> {
+        ParamLayout::new(self).initial_params(self)
+    }
+
     pub(crate) fn validate(&self) -> Result<()> {
         let n = self.n();
         for (v, view) in self.views.iter().enumerate() {

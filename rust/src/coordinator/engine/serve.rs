@@ -33,9 +33,21 @@
 //! (`CycleScratch`-style), so serving a stream of same-sized batches
 //! does not allocate beyond the transport's own message copies.
 //!
+//! Mid-session the leader can **hot-swap** the posterior: a `SRV_SWAP`
+//! broadcast carries a replacement core and every subsequent batch is
+//! evaluated against it on every rank (no teardown, no re-partition).
+//! From a training cluster the swap composes with the engine's
+//! stats-only pass: `SRV_REFIT` sends the workers into one distributed
+//! STATS round, the leader rebuilds the core from the reduced
+//! statistics, and the swap broadcast follows
+//! ([`DistributedEvaluator::refit_and_swap`](super::cycle::DistributedEvaluator::refit_and_swap)).
+//! A failed refit is atomic: no swap broadcast goes out and the session
+//! keeps serving the old posterior.
+//!
 //! Two ways in:
 //! - standalone, over a raw [`Comm`] (see `examples/scaling_demo.rs`):
-//!   [`DistributedPosterior::leader`] / [`worker_serve`];
+//!   [`DistributedPosterior::leader`] / [`worker_serve`] (plus
+//!   [`DistributedPosterior::rebroadcast`] for leader-built swaps);
 //! - from a training cluster, via
 //!   [`DistributedEvaluator::begin_serving`](super::cycle::DistributedEvaluator::begin_serving) —
 //!   a fitted model is served by the same ranks without leaving the
@@ -55,6 +67,26 @@ const TAG_XSTAR: u64 = 300;
 /// Serve-session sub-commands (broadcast at each batch).
 const SRV_PREDICT: f64 = 1.0;
 const SRV_DONE: f64 = 0.0;
+/// Posterior hot-swap: the rest of the broadcast carries a replacement
+/// [`PosteriorCore`] wire; workers unpack it and keep serving.
+const SRV_SWAP: f64 = 2.0;
+/// Refit request (training clusters only): workers leave the serve loop
+/// for one stats-only collective round, after which the leader either
+/// follows with a [`SRV_SWAP`] broadcast (success) or resumes issuing
+/// sub-commands against the old posterior (failed refit).
+const SRV_REFIT: f64 = 3.0;
+
+/// What ended a [`DistributedPosterior::serve_until`] stint.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ServeSignal {
+    /// The leader closed the session.
+    Done,
+    /// The leader requested a refit round: the caller must run the
+    /// worker half of the stats collective, then call `serve_until`
+    /// again (a successful refit is followed by a swap broadcast, which
+    /// `serve_until` handles internally).
+    Refit,
+}
 
 /// Reusable per-session buffers so the steady-state serve loop stops
 /// allocating: command/shard wires, the worker's shard matrix, per-rank
@@ -85,9 +117,19 @@ pub struct DistributedPosterior {
     /// Rows per partition chunk (the serving analog of the training
     /// chunk size; granularity of the per-rank row split).
     rows_per_chunk: usize,
-    /// Cached row partition, keyed by the batch size it was built for.
+    /// Cached row partition, keyed by the **(batch size, rank count)**
+    /// pair it was built for — a posterior reused against a
+    /// different-sized communicator must not reuse the old row split.
     part: Option<Partition>,
     scratch: ServeScratch,
+    /// First worker-side error of the session (reported when it closes).
+    sticky: Option<anyhow::Error>,
+    /// Set when a swap broadcast failed to unpack: the rank no longer
+    /// holds the posterior the leader believes it does, so every
+    /// subsequent batch is fail-flagged (never silently served stale)
+    /// while the collectives stay in lockstep. A later good swap clears
+    /// it.
+    poisoned: bool,
 }
 
 impl DistributedPosterior {
@@ -102,10 +144,20 @@ impl DistributedPosterior {
         core.pack_into(&mut wire);
         comm.bcast(0, wire);
         DistributedPosterior { core, rows_per_chunk, part: None,
-                               scratch: ServeScratch::default() }
+                               scratch: ServeScratch::default(), sticky: None,
+                               poisoned: false }
     }
 
     /// Worker: receive the posterior broadcast that opens the session.
+    ///
+    /// A wire whose *core* fails to unpack does not eject the rank (the
+    /// leader would desync into the first batch): the session opens
+    /// **poisoned** — the partition granularity in the header is enough
+    /// to mirror the leader's shard sends, every batch is fail-flagged,
+    /// and the sticky error names the cause at close. Only a wire too
+    /// broken to carry the granularity itself (empty, or zero
+    /// rows-per-chunk — which the leader cannot produce) is a hard
+    /// error, because without it the shard recvs cannot be mirrored.
     pub fn worker(comm: &mut Comm) -> Result<DistributedPosterior> {
         let wire = comm.bcast(0, Vec::new());
         if wire.is_empty() {
@@ -115,9 +167,23 @@ impl DistributedPosterior {
         if rows_per_chunk == 0 {
             return Err(anyhow!("rows_per_chunk must be positive"));
         }
-        let core = PosteriorCore::unpack(&wire[1..])?;
+        let (core, sticky, poisoned) = match PosteriorCore::unpack(&wire[1..]) {
+            Ok(core) => (core, None, false),
+            Err(e) => {
+                // placeholder core, never evaluated while poisoned
+                let empty = PosteriorCore {
+                    kern: crate::kern::RbfArd::new(1.0, Vec::new()),
+                    z: Mat::zeros(0, 0),
+                    beta: 1.0,
+                    ainv_p: Mat::zeros(0, 0),
+                    woodbury: Mat::zeros(0, 0),
+                };
+                (empty, Some(anyhow!("posterior broadcast: {e:#}")), true)
+            }
+        };
         Ok(DistributedPosterior { core, rows_per_chunk, part: None,
-                                  scratch: ServeScratch::default() })
+                                  scratch: ServeScratch::default(), sticky,
+                                  poisoned })
     }
 
     /// The broadcast posterior state.
@@ -125,10 +191,14 @@ impl DistributedPosterior {
         &self.core
     }
 
-    /// Refresh the cached row partition for a batch of `nt` rows
-    /// (recomputed only when the batch size changes).
+    /// Refresh the cached row partition for a batch of `nt` rows over
+    /// `ranks` ranks (recomputed only when either changes — keying on
+    /// the batch size alone would silently mis-shard a posterior reused
+    /// against a different-sized communicator).
     fn partition_for(&mut self, nt: usize, ranks: usize) -> &Partition {
-        let stale = self.part.as_ref().map(|p| p.n != nt).unwrap_or(true);
+        let stale = self.part.as_ref()
+            .map(|p| p.n != nt || p.workers() != ranks)
+            .unwrap_or(true);
         if stale {
             self.part = Some(Partition::new(nt, self.rows_per_chunk, ranks));
         }
@@ -229,21 +299,64 @@ impl DistributedPosterior {
     /// session. A failing shard computation is reported through the
     /// fail-flagged gather payload (the session keeps running); the
     /// first such error is returned once the leader closes the session.
+    /// A refit request outside a training cluster is a protocol error —
+    /// only [`serve_until`](DistributedPosterior::serve_until) callers
+    /// (the evaluator's worker loop) can run the stats round it needs.
     pub fn serve(&mut self, comm: &mut Comm, backend: &mut dyn Backend) -> Result<()> {
+        match self.serve_until(comm, backend)? {
+            ServeSignal::Done => Ok(()),
+            ServeSignal::Refit => Err(anyhow!(
+                "refit requested outside a training cluster")),
+        }
+    }
+
+    /// Worker: obey serve sub-commands until the leader closes the
+    /// session ([`ServeSignal::Done`]) or requests a refit round
+    /// ([`ServeSignal::Refit`] — training clusters only; the caller runs
+    /// the worker half of the stats collective and re-enters). Posterior
+    /// hot-swaps (`SRV_SWAP` broadcasts) are handled internally: the
+    /// replacement core takes effect for every subsequent batch.
+    pub fn serve_until(&mut self, comm: &mut Comm, backend: &mut dyn Backend)
+                       -> Result<ServeSignal> {
         let rank = comm.rank();
         let ranks = comm.size();
-        let d = self.core.d();
-        let q = self.core.q();
-        let mut sticky_err: Option<anyhow::Error> = None;
 
         loop {
             let cmd = comm.bcast(0, Vec::new());
             if cmd.is_empty() || cmd[0] == SRV_DONE {
-                return match sticky_err {
+                return match self.sticky.take() {
                     Some(e) => Err(anyhow!("rank {rank}: {e:#}")),
-                    None => Ok(()),
+                    None => Ok(ServeSignal::Done),
                 };
             }
+            if cmd[0] == SRV_REFIT {
+                return Ok(ServeSignal::Refit);
+            }
+            if cmd[0] == SRV_SWAP {
+                // hot-swap: the rest of the broadcast is the new core. A
+                // malformed swap wire must neither eject this rank from
+                // the session (the leader would desync into the next
+                // batch) nor let it silently serve the stale core — so
+                // the session is poisoned: every subsequent batch is
+                // fail-flagged until a good swap lands, and the sticky
+                // error names the cause at close.
+                match PosteriorCore::unpack(&cmd[1..]) {
+                    Ok(core) => {
+                        self.core = core;
+                        self.poisoned = false;
+                    }
+                    Err(e) => {
+                        self.poisoned = true;
+                        if self.sticky.is_none() {
+                            self.sticky = Some(anyhow!("posterior swap: {e:#}"));
+                        }
+                    }
+                }
+                continue;
+            }
+            // per-batch, not per-session: a hot-swap may change D/Q
+            let d = self.core.d();
+            let q = self.core.q();
             let nt = cmd[1] as usize;
             self.partition_for(nt, ranks);
             let span = self.part.as_ref().expect("partition cached").worker_span(rank);
@@ -254,8 +367,29 @@ impl DistributedPosterior {
                 None => scratch.payload.push(0.0), // no rows, success by definition
                 Some(sp) => {
                     let rows = sp.len();
+                    // the shard send is drained even on the failure
+                    // paths below, so the point-to-point channel stays
+                    // clean for the next batch
                     let msg = comm.recv(0, TAG_XSTAR);
-                    debug_assert_eq!(msg.len(), rows * q, "shard wire length");
+                    if self.poisoned {
+                        scratch.payload.push(1.0);
+                        let _ = comm.gather(0, &scratch.payload);
+                        continue;
+                    }
+                    if msg.len() != rows * q {
+                        // malformed shard wire: report through the
+                        // fail-flagged gather instead of feeding a short
+                        // buffer to `Mat::from_vec` (panic) or a long
+                        // one to a silently wrong shard
+                        scratch.payload.push(1.0);
+                        if self.sticky.is_none() {
+                            self.sticky = Some(anyhow!(
+                                "shard wire length {} != {rows} rows × Q {q}",
+                                msg.len()));
+                        }
+                        let _ = comm.gather(0, &scratch.payload);
+                        continue;
+                    }
                     if scratch.xshard.rows() == rows && scratch.xshard.cols() == q {
                         scratch.xshard.set_from(&msg);
                     } else {
@@ -274,8 +408,8 @@ impl DistributedPosterior {
                         }
                         Err(e) => {
                             scratch.payload.push(1.0);
-                            if sticky_err.is_none() {
-                                sticky_err = Some(e);
+                            if self.sticky.is_none() {
+                                self.sticky = Some(e);
                             }
                         }
                     }
@@ -283,6 +417,29 @@ impl DistributedPosterior {
             }
             let _ = comm.gather(0, &scratch.payload);
         }
+    }
+
+    /// Leader: **posterior hot-swap** — broadcast a replacement core
+    /// mid-session; every subsequent batch on every rank is evaluated
+    /// against the new posterior. The cached row partition is unaffected
+    /// (it depends only on batch size and rank count).
+    pub fn rebroadcast(&mut self, core: PosteriorCore, comm: &mut Comm) {
+        let mut wire = Vec::with_capacity(
+            1 + PosteriorCore::wire_len(core.q(), core.m(), core.d()));
+        wire.push(SRV_SWAP);
+        core.pack_into(&mut wire);
+        comm.bcast(0, wire);
+        self.core = core;
+    }
+
+    /// Leader: ask every serving worker to leave the serve loop for one
+    /// stats-only collective round ([`ServeSignal::Refit`] on their
+    /// side). The caller runs the leader half of that collective next,
+    /// then either [`rebroadcast`](DistributedPosterior::rebroadcast)s
+    /// the rebuilt core or — if the refit failed — simply resumes
+    /// issuing sub-commands against the old posterior.
+    pub fn request_refit(&mut self, comm: &mut Comm) {
+        comm.bcast(0, vec![SRV_REFIT]);
     }
 
     /// Leader: close the session — workers return from
@@ -369,6 +526,133 @@ mod tests {
                 assert_eq!(gv, ev, "size {size} batch {i}: var");
             }
         }
+    }
+
+    /// Regression: the row-partition cache must be keyed on
+    /// **(batch size, rank count)**, not the batch size alone — a
+    /// posterior reused against a different-sized communicator used to
+    /// silently keep the old rank split.
+    #[test]
+    fn partition_cache_keyed_on_batch_and_ranks() {
+        let mut dp = DistributedPosterior {
+            core: toy_core(46),
+            rows_per_chunk: 2,
+            part: None,
+            scratch: ServeScratch::default(),
+            sticky: None,
+            poisoned: false,
+        };
+        assert_eq!(dp.partition_for(12, 2).workers(), 2);
+        // same batch size, different comm size: must rebuild
+        let p = dp.partition_for(12, 3);
+        assert_eq!(p.workers(), 3);
+        assert_eq!(p.n, 12);
+        // same (nt, ranks): the cache holds
+        assert_eq!(dp.partition_for(12, 3).workers(), 3);
+        // same ranks, different batch size: must rebuild
+        assert_eq!(dp.partition_for(7, 3).n, 7);
+    }
+
+    /// Standalone hot-swap: after `rebroadcast`, every rank serves the
+    /// replacement posterior — batches match the single-node posterior
+    /// of the *new* core exactly, and differ from the old one.
+    #[test]
+    fn rebroadcast_swaps_the_served_posterior() {
+        let core_a = toy_core(51);
+        let core_b = toy_core(52); // independent fit: genuinely different
+        let single_a = Posterior::from_core(core_a.clone());
+        let single_b = Posterior::from_core(core_b.clone());
+        let mut rng = Rng64::new(53);
+        let xstar = Mat::from_fn(11, 2, |_, _| rng.normal());
+        let (ea, _) = single_a.predict(&xstar);
+        let (eb, evb) = single_b.predict(&xstar);
+        assert!(ea.max_abs_diff(&eb) > 0.0, "cores must differ for the test to bite");
+
+        for size in [1usize, 3, 4] {
+            let (ca, cb, xs) = (&core_a, &core_b, &xstar);
+            let results = Cluster::run(size, move |mut comm| {
+                let mut backend = RustCpuBackend;
+                if comm.rank() == 0 {
+                    let mut dp = DistributedPosterior::leader(ca.clone(), 3, &mut comm);
+                    let before = dp.predict(&mut comm, &mut backend, xs).unwrap();
+                    dp.rebroadcast(cb.clone(), &mut comm);
+                    let after = dp.predict(&mut comm, &mut backend, xs).unwrap();
+                    dp.finish(&mut comm);
+                    Some((before, after))
+                } else {
+                    worker_serve(&mut comm, &mut backend).unwrap();
+                    None
+                }
+            });
+            let (before, after) = results[0].as_ref().expect("leader output");
+            assert!(before.0.max_abs_diff(&ea) == 0.0, "size {size}: pre-swap mean");
+            assert!(after.0.max_abs_diff(&eb) == 0.0, "size {size}: post-swap mean");
+            assert_eq!(after.1, evb, "size {size}: post-swap var");
+        }
+    }
+
+    /// A malformed swap broadcast must not eject the worker
+    /// mid-protocol: the session stays in lockstep, subsequent batches
+    /// come back fail-flagged (never silently served from the stale
+    /// core), and the sticky error at close names the swap.
+    #[test]
+    fn malformed_swap_wire_poisons_instead_of_desyncing() {
+        let core = toy_core(60);
+        let core_ref = &core;
+        let mut rng = Rng64::new(61);
+        let xstar = Mat::from_fn(6, 2, |_, _| rng.normal());
+        let xs = &xstar;
+        let results = Cluster::run(2, move |mut comm| {
+            let mut backend = RustCpuBackend;
+            if comm.rank() == 0 {
+                let mut dp = DistributedPosterior::leader(core_ref.clone(), 2,
+                                                          &mut comm);
+                // corrupt swap: far too short to be a core wire
+                comm.bcast(0, vec![SRV_SWAP, 1.0, 2.0]);
+                let err = dp.predict(&mut comm, &mut backend, xs)
+                    .expect_err("poisoned worker must fail the batch");
+                dp.finish(&mut comm);
+                Some(format!("{err:#}"))
+            } else {
+                let err = worker_serve(&mut comm, &mut backend)
+                    .expect_err("worker must report the swap failure");
+                assert!(format!("{err:#}").contains("posterior swap"),
+                        "unhelpful error: {err:#}");
+                None
+            }
+        });
+        let msg = results[0].as_ref().expect("leader");
+        assert!(msg.contains("rank 1"), "leader error must name the rank: {msg}");
+    }
+
+    /// A session-open wire whose core is corrupt must open the session
+    /// poisoned (fail-flagged batches, lockstep preserved) rather than
+    /// eject the worker before the first batch — the granularity header
+    /// alone is enough to mirror the leader's shard sends.
+    #[test]
+    fn malformed_session_open_poisons_instead_of_desyncing() {
+        let results = Cluster::run(2, |mut comm| {
+            if comm.rank() == 0 {
+                // corrupt session-open: valid granularity header (4
+                // rows per chunk), junk core payload
+                comm.bcast(0, vec![4.0, 1.0, 2.0]);
+                // one 8-row batch: rank 1 owns rows 4..8
+                comm.bcast(0, vec![SRV_PREDICT, 8.0]);
+                comm.send(1, TAG_XSTAR, &[0.0; 8]);
+                let gathered = comm.gather(0, &[0.0]).expect("root");
+                comm.bcast(0, vec![SRV_DONE]);
+                Some(gathered[1].clone())
+            } else {
+                let mut backend = RustCpuBackend;
+                let err = worker_serve(&mut comm, &mut backend)
+                    .expect_err("worker must report the open failure");
+                assert!(format!("{err:#}").contains("posterior broadcast"),
+                        "unhelpful error: {err:#}");
+                None
+            }
+        });
+        // the batch came back fail-flagged, in lockstep
+        assert_eq!(results[0].as_ref().expect("leader"), &vec![1.0]);
     }
 
     /// A batch smaller than the rank count leaves trailing ranks without

@@ -9,8 +9,6 @@ use crate::collectives::Cluster;
 use crate::config::BackendKind;
 use crate::coordinator::partition::Partition;
 use crate::linalg::Mat;
-use crate::math::predict::PosteriorCore;
-use crate::math::stats::sgpr_stats_fwd;
 use crate::metrics::{Phase, PhaseTimer};
 use crate::optim::{Adam, Lbfgs, OptResult, Optimizer, Scg, StopReason};
 use anyhow::{anyhow, bail, Result};
@@ -132,6 +130,23 @@ enum RunMode {
     TimeOnly(usize),
 }
 
+/// What the end-of-run serving session should do.
+#[derive(Clone, Copy)]
+struct ServePlan<'a> {
+    /// Test inputs to serve (Nt × Q).
+    xstar: &'a Mat,
+    /// Serving partition granularity (rows per chunk of the batch split).
+    rows_per_chunk: usize,
+    /// After the first batch, hot-swap the posterior at the same fitted
+    /// parameters (a full STATS round + swap broadcast) and serve the
+    /// batch again — the protocol demo behind the CLI's `--refit-demo`.
+    refit_demo: bool,
+}
+
+/// What a serving session produced: the batch output, plus the
+/// post-hot-swap output when the plan asked for the refit demo.
+type Served = ((Mat, Vec<f64>), Option<(Mat, Vec<f64>)>);
+
 /// Distributed trainer for sparse-GP models.
 pub struct Engine {
     /// The inference problem being fit.
@@ -166,13 +181,40 @@ impl Engine {
     /// predictions never leave the SPMD world. Returns the training
     /// result plus the predictive mean (Nt × D) and variance (Nt).
     ///
-    /// Supervised (observed-X) problems only: the posterior is built
-    /// from view 0's full-data statistics at the fitted parameters.
-    /// `rows_per_chunk` is the serving partition granularity (rows per
-    /// chunk of the batch split, the serving analog of
-    /// [`EngineConfig::chunk`]).
+    /// Supervised (observed-X) problems only. The posterior is built by
+    /// the cluster itself: a distributed stats-only pass (the STATS
+    /// verb) reduces view 0's statistics at the fitted parameters, so
+    /// the leader does **no full-data work** — its own contribution is
+    /// its resident chunks, like any other rank. `rows_per_chunk` is the
+    /// serving partition granularity (rows per chunk of the batch
+    /// split, the serving analog of [`EngineConfig::chunk`]).
     pub fn train_then_predict(&self, xstar: &Mat, rows_per_chunk: usize)
                               -> Result<(TrainResult, Mat, Vec<f64>)> {
+        let plan = self.serve_plan(xstar, rows_per_chunk, false)?;
+        let (result, served) = self.run(RunMode::Optimize, Some(plan))?;
+        let ((mean, var), _) = served.expect("serving was requested");
+        Ok((result, mean, var))
+    }
+
+    /// [`train_then_predict`](Engine::train_then_predict), plus a
+    /// **posterior hot-swap exercise**: after the first batch the leader
+    /// refits the posterior at the same fitted parameters through
+    /// `DistributedEvaluator::refit_and_swap` (STATS round + swap
+    /// broadcast, session kept open) and serves the batch again.
+    /// Returns the training result and the (before, after) predictions —
+    /// identical by construction, which is exactly what the CLI's
+    /// `predict --refit-demo` asserts.
+    pub fn train_predict_refit(&self, xstar: &Mat, rows_per_chunk: usize)
+                               -> Result<(TrainResult, (Mat, Vec<f64>), (Mat, Vec<f64>))> {
+        let plan = self.serve_plan(xstar, rows_per_chunk, true)?;
+        let (result, served) = self.run(RunMode::Optimize, Some(plan))?;
+        let (before, after) = served.expect("serving was requested");
+        Ok((result, before, after.expect("refit demo was requested")))
+    }
+
+    /// Validate a serving request against the problem.
+    fn serve_plan<'a>(&self, xstar: &'a Mat, rows_per_chunk: usize, refit_demo: bool)
+                      -> Result<ServePlan<'a>> {
         if !matches!(self.problem.latent, LatentSpec::Observed(_)) {
             bail!("train_then_predict needs a supervised problem (observed X)");
         }
@@ -182,36 +224,11 @@ impl Engine {
         if rows_per_chunk == 0 {
             bail!("rows_per_chunk must be positive");
         }
-        let (result, served) = self.run(RunMode::Optimize, Some((xstar, rows_per_chunk)))?;
-        let (mean, var) = served.expect("serving was requested");
-        Ok((result, mean, var))
+        Ok(ServePlan { xstar, rows_per_chunk, refit_demo })
     }
 
-    /// The posterior state served after training: view 0's full-data
-    /// statistics at the fitted parameters (the same construction
-    /// `models::SparseGpRegression` uses single-node).
-    ///
-    /// Known cost: this recomputes the O(N·M²) statistics serially on
-    /// the leader — one extra objective-evaluation's worth of work at
-    /// the very end of a run. Reusing the cluster for a stats-only
-    /// distributed pass (or capturing the final accepted evaluation's
-    /// reduced statistics) is the planned follow-up (see ROADMAP).
-    fn posterior_core(&self, fitted: &Fitted) -> Result<PosteriorCore> {
-        let x = match &self.problem.latent {
-            LatentSpec::Observed(x) => x,
-            LatentSpec::Variational { .. } => {
-                bail!("sharded serving needs a supervised problem (observed X)")
-            }
-        };
-        let y = &self.problem.views[0].y;
-        let w = vec![1.0; x.rows()];
-        let stats = sgpr_stats_fwd(&fitted.kerns[0], x, &w, y, &fitted.zs[0]);
-        PosteriorCore::new(fitted.kerns[0].clone(), fitted.zs[0].clone(),
-                           fitted.betas[0], &stats)
-    }
-
-    fn run(&self, mode: RunMode, predict: Option<(&Mat, usize)>)
-           -> Result<(TrainResult, Option<(Mat, Vec<f64>)>)> {
+    fn run(&self, mode: RunMode, predict: Option<ServePlan>)
+           -> Result<(TrainResult, Option<Served>)> {
         let part = Partition::new(self.problem.n(), self.cfg.chunk, self.cfg.workers);
 
         let mut results = Cluster::run(self.cfg.workers, |comm| {
@@ -243,8 +260,8 @@ impl Engine {
     /// a serving session runs between the last optimiser step and the
     /// shutdown broadcast.
     fn leader(&self, ev: &mut DistributedEvaluator, mode: &RunMode,
-              predict: Option<(&Mat, usize)>)
-              -> Result<(TrainResult, Option<(Mat, Vec<f64>)>)> {
+              predict: Option<ServePlan>)
+              -> Result<(TrainResult, Option<Served>)> {
         let layout = ParamLayout::new(&self.problem);
         let x0 = layout.initial_params(&self.problem);
         let n_params = ev.n_params();
@@ -256,6 +273,14 @@ impl Engine {
         let opt_result: OptResult = {
             // The distributed objective (−F, −∇F for minimisation).
             let mut objective = |x: &[f64]| -> (f64, Vec<f64>) {
+                if eval_err.is_some() {
+                    // The first hard error is sticky: stop driving the
+                    // (possibly poisoned) evaluator and hand the
+                    // optimiser the NaN abort sentinel — it stops with
+                    // `StopReason::Aborted` instead of burning further
+                    // doomed cluster rounds.
+                    return (f64::NAN, vec![0.0; n_params]);
+                }
                 let t0 = Instant::now();
                 match ev.eval(x) {
                     Ok((f, mut grad)) => {
@@ -267,11 +292,8 @@ impl Engine {
                         (-f, grad)
                     }
                     Err(e) => {
-                        // abort the optimiser with a large value; remember why
-                        if eval_err.is_none() {
-                            eval_err = Some(e);
-                        }
-                        (f64::INFINITY, vec![0.0; n_params])
+                        eval_err = Some(e);
+                        (f64::NAN, vec![0.0; n_params])
                     }
                 }
             };
@@ -304,9 +326,9 @@ impl Engine {
         // serve the fitted posterior on the same cluster before shutdown
         let mut served = None;
         let mut serve_err: Option<anyhow::Error> = None;
-        if let Some((xstar, rows_per_chunk)) = predict {
+        if let Some(plan) = predict {
             if eval_err.is_none() {
-                match self.serve_fitted(ev, &fitted, xstar, rows_per_chunk) {
+                match self.serve_fitted(ev, &opt_result.x, plan) {
                     Ok(out) => served = Some(out),
                     Err(e) => serve_err = Some(e),
                 }
@@ -343,17 +365,28 @@ impl Engine {
     }
 
     /// Leader: one complete serving session over the training cluster —
-    /// open (posterior broadcast), predict the batch, close. The session
-    /// is always closed, even when the batch fails, so the workers are
-    /// back at the command broadcast before `finish` stops them.
-    fn serve_fitted(&self, ev: &mut DistributedEvaluator, fitted: &Fitted, xstar: &Mat,
-                    rows_per_chunk: usize) -> Result<(Mat, Vec<f64>)> {
-        let core = self.posterior_core(fitted)?;
-        ev.begin_serving(core, rows_per_chunk)?;
-        let out = ev.predict_sharded(xstar);
+    /// the posterior is rebuilt by a **distributed stats-only pass** at
+    /// the fitted parameter vector `x` (no leader-side full-data
+    /// recompute), broadcast, the batch predicted, and — for the refit
+    /// demo — hot-swapped via another STATS round and predicted again.
+    /// The session is always closed, even when a step fails, so the
+    /// workers are back at the command broadcast before `finish` stops
+    /// them.
+    fn serve_fitted(&self, ev: &mut DistributedEvaluator, x: &[f64], plan: ServePlan)
+                    -> Result<Served> {
+        let core = ev.posterior_core_at(x)?;
+        ev.begin_serving(core, plan.rows_per_chunk)?;
+        let first = ev.predict_sharded(plan.xstar);
+        let second = if plan.refit_demo && first.is_ok() {
+            Some(ev.refit_and_swap(x)
+                 .and_then(|()| ev.predict_sharded(plan.xstar)))
+        } else {
+            None
+        };
         let end = ev.end_serving();
-        let out = out?;
+        let first = first?;
+        let second = second.transpose()?;
         end?;
-        Ok(out)
+        Ok((first, second))
     }
 }

@@ -20,5 +20,5 @@ pub mod partition;
 pub use backend::{make_backends, Backend, ChunkData, ChunkTask, FwdCache,
                   ParallelCpuBackend, RustCpuBackend, ViewParams, XlaBackend};
 pub use engine::{DistributedEvaluator, DistributedPosterior, Engine, EngineConfig, Fitted,
-                 LatentSpec, OptChoice, Problem, TrainResult, ViewSpec};
+                 LatentSpec, OptChoice, Problem, ServeSignal, TrainResult, ViewSpec};
 pub use partition::{ChunkRange, Partition};

@@ -16,7 +16,7 @@
 //!   gpparallel time --n 8000 --workers 8 --backend cpu --evals 5
 
 use anyhow::{bail, Result};
-use gpparallel::cli::Args;
+use gpparallel::cli::{known_flags, known_options, Args};
 use gpparallel::config::BackendKind;
 use gpparallel::coordinator::{Engine, EngineConfig, OptChoice};
 use gpparallel::data::synthetic::{generate, generate_supervised, SyntheticSpec};
@@ -25,10 +25,6 @@ use gpparallel::models::{BayesianGplvm, SparseGpRegression};
 use gpparallel::optim::Lbfgs;
 use gpparallel::runtime::Manifest;
 use std::path::PathBuf;
-
-const KNOWN: &[&str] = &["n", "q", "d", "m", "workers", "chunk", "backend",
-                         "iters", "evals", "seed", "artifacts", "aot-config",
-                         "nt", "batch"];
 
 fn engine_config(a: &Args) -> Result<(EngineConfig, String)> {
     let backend = BackendKind::parse(a.get("backend").unwrap_or("cpu"))
@@ -51,10 +47,19 @@ fn engine_config(a: &Args) -> Result<(EngineConfig, String)> {
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["verbose", "help", "no-pipeline"])?;
-    args.check_known(KNOWN)?;
+    let args = Args::parse(argv, &["verbose", "help", "no-pipeline", "refit-demo"])?;
 
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    // per-subcommand argument validation: an option or flag that only
+    // another subcommand accepts is an error, not silently ignored.
+    // A bare `gpparallel --opt ...` with no subcommand at all, and
+    // unknown subcommands, fall through to the usage text instead.
+    if !args.positional.is_empty() {
+        if let Some(known) = known_options(cmd) {
+            args.check_known(&known)?;
+            args.check_known_flags(&known_flags(cmd))?;
+        }
+    }
     match cmd {
         "train-bgplvm" => {
             let spec = SyntheticSpec {
@@ -120,7 +125,22 @@ fn main() -> Result<()> {
                       spec.n, spec.q, spec.d, cfg.backend.name(), cfg.workers);
             let problem = SparseGpRegression::problem(&x, &ds.y, m, &aot, seed);
             let engine = Engine::new(problem, cfg)?;
-            let (r, pred_mean, pred_var) = engine.train_then_predict(&xstar, batch)?;
+            let (r, pred_mean, pred_var) = if args.flag("refit-demo") {
+                // serve, hot-swap the posterior at the fitted parameters
+                // (a full distributed STATS round + swap broadcast, the
+                // session stays open), serve again: the swap must change
+                // nothing, and the printed |Δ| proves it
+                let (r, (m1, v1), (m2, v2)) = engine.train_predict_refit(&xstar, batch)?;
+                let mut dmax = m1.max_abs_diff(&m2);
+                for (a, b) in v1.iter().zip(&v2) {
+                    dmax = dmax.max((a - b).abs());
+                }
+                println!("hot-swap at fitted params: max |Δ| vs pre-swap = {dmax:.1e} \
+                          (must be 0e0)");
+                (r, m2, v2)
+            } else {
+                engine.train_then_predict(&xstar, batch)?
+            };
 
             let mut se = 0.0;
             for i in 0..nt {
@@ -172,7 +192,9 @@ fn main() -> Result<()> {
             println!("options: --n --q --d --m --workers --chunk --backend cpu|parallel[:N]|xla");
             println!("         --iters --evals --seed --artifacts --aot-config --verbose");
             println!("         --nt --batch (predict: test rows, serving batch granularity)");
+            println!("         --refit-demo (predict: hot-swap the posterior mid-session)");
             println!("         --no-pipeline (synchronous evaluation cycle)");
+            println!("(options are validated per subcommand; see each command's scope)");
             if cmd != "help" {
                 bail!("unknown command {cmd:?}");
             }

@@ -137,7 +137,8 @@ impl PosteriorCore {
     }
 
     // -----------------------------------------------------------------
-    // wire form (for the one-time serving broadcast)
+    // wire form (for the serving broadcast: once at session open, and
+    // again on every mid-session posterior hot-swap)
     // -----------------------------------------------------------------
 
     /// Wire length of a core with the given dimensions:

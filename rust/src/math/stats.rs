@@ -251,6 +251,48 @@ pub fn sgpr_stats_fwd_cached(kern: &RbfArd, x: &Mat, w: &[f64], y: &Mat,
     (Stats { psi0, p, psi2, tryy, kl: 0.0, n_eff }, kfu)
 }
 
+/// The **serial reference for the distributed stats-only pass**: the
+/// full-data supervised statistics accumulated per fixed-shape chunk of
+/// `chunk` rows, **in chunk order**, each chunk padded with zero rows
+/// masked by w = 0 — exactly how the execution layer builds its
+/// rank-resident chunks.
+///
+/// This is the summation-order discipline the engine's STATS verb
+/// reproduces at every cluster size (each chunk's statistics occupy
+/// their own slot of the reduction wire, and the leader folds the slots
+/// in global chunk order), so the distributed pass is **bit-identical**
+/// to this construction for any rank count and either CPU backend
+/// (asserted in `rust/tests/serve_test.rs`). Note it is *not* bitwise
+/// equal to the monolithic [`sgpr_stats_fwd`] over the full data —
+/// floating-point addition is non-associative, so the chunk grouping
+/// matters; this function pins the grouping once for everyone.
+pub fn sgpr_stats_fwd_chunked(kern: &RbfArd, x: &Mat, w: &[f64], y: &Mat, z: &Mat,
+                              chunk: usize) -> Stats {
+    assert!(chunk > 0, "chunk must be positive");
+    let (n, q, d, m) = (x.rows(), x.cols(), y.cols(), z.rows());
+    assert_eq!(w.len(), n, "weight length");
+    assert_eq!(y.rows(), n, "y rows");
+    let mut acc = Stats::zeros(m, d);
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        let live = hi - lo;
+        // pad to the fixed chunk shape, exactly like the engine's
+        // resident chunks (zero rows, w = 0 mask)
+        let mut xc = Mat::zeros(chunk, q);
+        let mut yc = Mat::zeros(chunk, d);
+        let mut wc = vec![0.0; chunk];
+        for i in 0..live {
+            xc.row_mut(i).copy_from_slice(x.row(lo + i));
+            yc.row_mut(i).copy_from_slice(y.row(lo + i));
+            wc[i] = w[lo + i];
+        }
+        acc.add_assign(&sgpr_stats_fwd(kern, &xc, &wc, &yc, z));
+        lo = hi;
+    }
+    acc
+}
+
 // ---------------------------------------------------------------------
 // VJP
 // ---------------------------------------------------------------------
@@ -497,6 +539,33 @@ mod tests {
             assert!(a.dz.max_abs_diff(&b.dz) < 1e-11, "sgpr dz");
             for (x, yv) in a.dhyp.iter().zip(&b.dhyp) {
                 assert!((x - yv).abs() < 1e-11 * (1.0 + x.abs()), "sgpr dhyp");
+            }
+        });
+    }
+
+    /// The chunked serial reference must agree with the monolithic pass
+    /// to rounding error for any chunking, be exactly the monolithic
+    /// pass when one chunk covers everything, and be invariant to the
+    /// padding of the ragged tail.
+    #[test]
+    fn prop_chunked_reference_matches_monolithic() {
+        Prop::new("sgpr_chunked_reference").cases(10).run(|rng| {
+            let (kern, x, _, w, y, z) = setup(rng, 13, 4, 2, 3);
+            let full = sgpr_stats_fwd(&kern, &x, &w, &y, &z);
+            // one covering chunk: identical construction, identical bits
+            let whole = sgpr_stats_fwd_chunked(&kern, &x, &w, &y, &z, 13);
+            assert_eq!(whole.psi0, full.psi0);
+            assert_eq!(whole.tryy, full.tryy);
+            assert!(whole.p.max_abs_diff(&full.p) == 0.0);
+            assert!(whole.psi2.max_abs_diff(&full.psi2) == 0.0);
+            for chunk in [1usize, 4, 5, 13, 40] {
+                let c = sgpr_stats_fwd_chunked(&kern, &x, &w, &y, &z, chunk);
+                assert!((c.psi0 - full.psi0).abs() < 1e-12, "chunk {chunk}");
+                assert!((c.tryy - full.tryy).abs() < 1e-11, "chunk {chunk}");
+                assert!((c.n_eff - full.n_eff).abs() == 0.0, "chunk {chunk}");
+                assert!(c.p.max_abs_diff(&full.p) < 1e-12, "chunk {chunk}");
+                assert!(c.psi2.max_abs_diff(&full.psi2) < 1e-12, "chunk {chunk}");
+                assert_eq!(c.kl, 0.0, "chunk {chunk}");
             }
         });
     }

@@ -8,7 +8,17 @@
 //! sharded serving path
 //! ([`DistributedPosterior`](crate::coordinator::engine::serve::DistributedPosterior))
 //! broadcasts the same core, so its predictions are bit-identical to
-//! [`Posterior::predict`] by construction.
+//! [`Posterior::predict`] by construction — including after a
+//! mid-session posterior **hot-swap**, which replaces the core on every
+//! rank with one rebuilt by the engine's distributed stats-only pass.
+//!
+//! On statistics provenance: the engine's serving path builds its cores
+//! from the **chunk-ordered** statistics
+//! ([`sgpr_stats_fwd_chunked`](crate::math::stats::sgpr_stats_fwd_chunked),
+//! the summation discipline the distributed STATS pass pins), while the
+//! single-node [`SparseGpRegression::fit`](crate::models::SparseGpRegression)
+//! convenience path uses the monolithic full-data pass — the two agree
+//! to rounding error, and each is bit-reproducible against itself.
 
 use crate::kern::RbfArd;
 use crate::linalg::Mat;

@@ -58,6 +58,12 @@ impl SparseGpRegression {
 
     /// Fit to `(x, y)` with `m` inducing points (see
     /// [`SparseGpRegression::problem`] for the initialisation).
+    ///
+    /// The posterior kept here is built single-node from the monolithic
+    /// full-data statistics. The engine's serving entry points
+    /// (`Engine::train_then_predict`, hot-swap) instead rebuild theirs
+    /// with the distributed stats-only pass, whose chunk-ordered
+    /// summation agrees with this one to rounding error.
     pub fn fit(x: &Mat, y: &Mat, m: usize, aot_config: &str, cfg: EngineConfig,
                seed: u64) -> Result<SparseGpRegression> {
         let n = x.rows();

@@ -31,6 +31,7 @@ impl Optimizer for Adam {
     fn minimize(&self, obj: &mut Objective, x0: Vec<f64>) -> OptResult {
         let n = x0.len();
         let mut x = x0;
+        let mut x_prev = vec![0.0; n];
         let mut m = vec![0.0; n];
         let mut v = vec![0.0; n];
         let (mut f, mut g) = obj(&x);
@@ -38,6 +39,10 @@ impl Optimizer for Adam {
         let mut trace = vec![f];
         let mut stop = StopReason::MaxIters;
         let mut iter = 0;
+        if f.is_nan() {
+            return OptResult { x, f, iterations: 0, evaluations: evals,
+                               stop: StopReason::Aborted, trace };
+        }
 
         while iter < self.max_iters {
             let ginf = g.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
@@ -46,6 +51,7 @@ impl Optimizer for Adam {
                 break;
             }
             iter += 1;
+            x_prev.copy_from_slice(&x);
             let b1t = 1.0 - self.beta1.powi(iter as i32);
             let b2t = 1.0 - self.beta2.powi(iter as i32);
             for i in 0..n {
@@ -57,6 +63,13 @@ impl Optimizer for Adam {
             }
             let (fi, gi) = obj(&x);
             evals += 1;
+            if fi.is_nan() {
+                // abort with the last vetted iterate (and its f), the
+                // same contract L-BFGS and SCG keep on the sentinel
+                x.copy_from_slice(&x_prev);
+                stop = StopReason::Aborted;
+                break;
+            }
             f = fi;
             g = gi;
             trace.push(f);
@@ -75,6 +88,22 @@ mod tests {
         let r = Adam { lr: 0.2, max_iters: 3000, ..Default::default() }
             .minimize(&mut |x: &[f64]| quadratic(x), vec![1.0; 6]);
         assert!(r.f < 1e-6, "f = {}", r.f);
+    }
+
+    /// The NaN abort sentinel stops the run after one further step.
+    #[test]
+    fn nan_objective_aborts() {
+        let mut calls = 0usize;
+        let r = Adam::default().minimize(&mut |x: &[f64]| {
+            calls += 1;
+            if calls > 2 {
+                (f64::NAN, vec![0.0; x.len()])
+            } else {
+                quadratic(x)
+            }
+        }, vec![1.0; 3]);
+        assert_eq!(r.stop, StopReason::Aborted);
+        assert!(r.evaluations <= 3, "kept evaluating: {}", r.evaluations);
     }
 
     #[test]

@@ -122,6 +122,10 @@ impl Optimizer for Lbfgs {
         let (mut f, mut g) = obj(&x);
         let mut evals = 1;
         let mut trace = vec![f];
+        if f.is_nan() {
+            return OptResult { x, f, iterations: 0, evaluations: evals,
+                               stop: StopReason::Aborted, trace };
+        }
 
         let mut s_hist: Vec<Vec<f64>> = Vec::new();
         let mut y_hist: Vec<Vec<f64>> = Vec::new();
@@ -167,8 +171,27 @@ impl Optimizer for Lbfgs {
                 }
             }
 
-            match wolfe_line_search(obj, &x, f, &g, &dir, self.c1, self.c2,
-                                    self.max_line_search, &mut evals) {
+            // The abort latch: a NaN value anywhere inside the line
+            // search means the objective is gone for good (the sentinel
+            // is sticky by contract), so the search outcome is unusable
+            // and the run stops with `Aborted`.
+            let aborted = std::cell::Cell::new(false);
+            let searched = {
+                let mut latched = |xv: &[f64]| {
+                    let (fv, gv) = obj(xv);
+                    if fv.is_nan() {
+                        aborted.set(true);
+                    }
+                    (fv, gv)
+                };
+                wolfe_line_search(&mut latched, &x, f, &g, &dir, self.c1, self.c2,
+                                  self.max_line_search, &mut evals)
+            };
+            if aborted.get() {
+                stop = StopReason::Aborted;
+                break;
+            }
+            match searched {
                 Some((t, f_new, g_new, x_new)) => {
                     let s: Vec<f64> = dir.iter().map(|d| t * d).collect();
                     let y: Vec<f64> = g_new.iter().zip(&g).map(|(a, b)| a - b).collect();
@@ -242,6 +265,29 @@ mod tests {
         for w in r.trace.windows(2) {
             assert!(w[1] <= w[0] + 1e-12, "trace increased: {w:?}");
         }
+    }
+
+    /// A NaN objective (the abort sentinel) must stop the run with
+    /// `Aborted` after a bounded number of further evaluations, both
+    /// when it appears immediately and mid-run.
+    #[test]
+    fn nan_objective_aborts() {
+        let r = Lbfgs::default()
+            .minimize(&mut |x: &[f64]| (f64::NAN, vec![0.0; x.len()]), vec![1.0; 4]);
+        assert_eq!(r.stop, StopReason::Aborted);
+        assert_eq!(r.evaluations, 1);
+
+        let mut calls = 0usize;
+        let r = Lbfgs::default().minimize(&mut |x: &[f64]| {
+            calls += 1;
+            if calls > 3 {
+                (f64::NAN, vec![0.0; x.len()])
+            } else {
+                quadratic(x)
+            }
+        }, vec![1.0; 4]);
+        assert_eq!(r.stop, StopReason::Aborted);
+        assert!(r.evaluations <= 5, "kept evaluating: {}", r.evaluations);
     }
 
     #[test]

@@ -25,6 +25,13 @@ pub use transforms::Transform;
 
 /// Objective: x -> (f(x), ∇f(x)). Mutable because evaluation drives the
 /// whole distributed machine (workers, reductions, …).
+///
+/// A **NaN objective value is the abort sentinel**: it means the
+/// objective can no longer be evaluated at all (e.g. the distributed
+/// evaluator is poisoned after a hard rank failure), not merely that the
+/// current point is bad. Every optimiser stops immediately with
+/// [`StopReason::Aborted`] when it sees one, so a dead evaluator is not
+/// asked for further doomed cluster rounds.
 pub type Objective<'a> = dyn FnMut(&[f64]) -> (f64, Vec<f64>) + 'a;
 
 /// Why an optimisation run stopped.
@@ -38,6 +45,9 @@ pub enum StopReason {
     MaxIters,
     /// Line search could not find an acceptable step.
     LineSearchFailed,
+    /// The objective signalled a hard failure (NaN sentinel) — e.g. the
+    /// distributed evaluator errored and cannot be driven further.
+    Aborted,
 }
 
 /// Result of an optimisation run.

@@ -29,6 +29,10 @@ impl Optimizer for Scg {
         let (mut f_now, mut grad) = obj(&x);
         let mut evals = 1;
         let mut trace = vec![f_now];
+        if f_now.is_nan() {
+            return OptResult { x, f: f_now, iterations: 0, evaluations: evals,
+                               stop: StopReason::Aborted, trace };
+        }
 
         let mut d: Vec<f64> = grad.iter().map(|g| -g).collect(); // search dir
         let mut lambda = 1e-6; // scale parameter
@@ -57,8 +61,12 @@ impl Optimizer for Scg {
                 // second-order information via finite difference along d
                 let sigma = 1e-8 / kappa.sqrt();
                 let x_plus: Vec<f64> = x.iter().zip(&d).map(|(xi, di)| xi + sigma * di).collect();
-                let (_, g_plus) = obj(&x_plus);
+                let (f_plus, g_plus) = obj(&x_plus);
                 evals += 1;
+                if f_plus.is_nan() {
+                    stop = StopReason::Aborted;
+                    break;
+                }
                 delta = g_plus
                     .iter()
                     .zip(&grad)
@@ -78,18 +86,28 @@ impl Optimizer for Scg {
 
             let alpha = -mu / delta;
             let x_new: Vec<f64> = x.iter().zip(&d).map(|(xi, di)| xi + alpha * di).collect();
-            let (f_new, _) = obj(&x_new);
+            // one evaluation serves both the accept test and, on
+            // acceptance, the next gradient — with the distributed
+            // objective every call here is a full cluster round, so a
+            // second obj(&x_new) in the accept branch would double the
+            // SPMD work of every accepted iteration
+            let (f_new, g_new) = obj(&x_new);
             evals += 1;
+            // NaN is the abort sentinel: without this check the NaN
+            // comparison below rejects forever *and* never grows lambda,
+            // so the loop would spin without incrementing `iter`.
+            if f_new.is_nan() {
+                stop = StopReason::Aborted;
+                break;
+            }
 
             let comparison = 2.0 * delta * (f_now - f_new) / (mu * mu);
             if comparison >= 0.0 {
                 // accept
-                let (f_acc, g_new) = obj(&x_new);
-                evals += 1;
                 x = x_new;
                 let g_old = std::mem::replace(&mut grad, g_new);
-                let rel = (f_now - f_acc).abs() / f_now.abs().max(f_acc.abs()).max(1.0);
-                f_now = f_acc;
+                let rel = (f_now - f_new).abs() / f_now.abs().max(f_new.abs()).max(1.0);
+                f_now = f_new;
                 trace.push(f_now);
                 lambda_bar = 0.0;
                 success = true;
@@ -163,5 +181,28 @@ mod tests {
         for w in r.trace.windows(2) {
             assert!(w[1] <= w[0] + 1e-12);
         }
+    }
+
+    /// A NaN objective must terminate promptly with `Aborted` — without
+    /// the explicit checks the NaN comparison rejects forever without
+    /// growing lambda, and the loop never advances.
+    #[test]
+    fn nan_objective_aborts() {
+        let r = Scg::default()
+            .minimize(&mut |x: &[f64]| (f64::NAN, vec![0.0; x.len()]), vec![1.0; 4]);
+        assert_eq!(r.stop, StopReason::Aborted);
+        assert_eq!(r.evaluations, 1);
+
+        let mut calls = 0usize;
+        let r = Scg::default().minimize(&mut |x: &[f64]| {
+            calls += 1;
+            if calls > 2 {
+                (f64::NAN, vec![0.0; x.len()])
+            } else {
+                quadratic(x)
+            }
+        }, vec![1.0; 4]);
+        assert_eq!(r.stop, StopReason::Aborted);
+        assert!(r.evaluations <= 4, "kept evaluating: {}", r.evaluations);
     }
 }

@@ -1,26 +1,38 @@
 //! Sharded-serving equivalence + posterior correctness.
 //!
-//! Three layers of guarantees:
+//! Five layers of guarantees:
 //! 1. the single-node `Posterior` agrees with the dense O(N³) GP oracle
 //!    when the inducing set is the full training set (where the
 //!    variational sparse posterior is exact);
 //! 2. `DistributedPosterior` reproduces the single-node `Posterior`
 //!    **bit for bit** for every cluster size 1–9 and both CPU backends
 //!    (prediction rows are independent, so sharding reorders nothing);
-//! 3. the training→serving hand-off (`Engine::train_then_predict`)
-//!    serves exactly the posterior implied by the fitted parameters.
+//! 3. the distributed **stats-only pass** (the STATS verb) reproduces
+//!    the serial chunked construction `sgpr_stats_fwd_chunked` bit for
+//!    bit for every cluster size 1–9 and both CPU backends — each chunk
+//!    owns a slot of the reduction wire, so the tree reduction only
+//!    adds exact zeros and the leader's chunk-order fold is
+//!    rank-count-invariant;
+//! 4. the training→serving hand-off (`Engine::train_then_predict`)
+//!    serves exactly the posterior implied by the fitted parameters,
+//!    with no leader-side full-data recompute;
+//! 5. a **posterior hot-swap** mid-session (`refit_and_swap`) produces
+//!    predictions bit-identical to a fresh session opened directly at
+//!    the new parameters, and the serving protocol survives a
+//!    malformed shard wire as a clean error.
 
-use gpparallel::baselines::DenseGp;
 use gpparallel::collectives::Cluster;
+use gpparallel::baselines::DenseGp;
 use gpparallel::config::BackendKind;
 use gpparallel::coordinator::engine::serve::{worker_serve, DistributedPosterior};
-use gpparallel::coordinator::{Backend, EngineConfig, Engine, OptChoice, ParallelCpuBackend,
+use gpparallel::coordinator::{Backend, DistributedEvaluator, Engine, EngineConfig,
+                              OptChoice, ParallelCpuBackend, Partition, Problem,
                               RustCpuBackend};
 use gpparallel::data::synthetic::{generate_supervised, SyntheticSpec};
 use gpparallel::kern::RbfArd;
 use gpparallel::linalg::Mat;
 use gpparallel::math::predict::PosteriorCore;
-use gpparallel::math::stats::sgpr_stats_fwd;
+use gpparallel::math::stats::{sgpr_stats_fwd, sgpr_stats_fwd_chunked, Stats};
 use gpparallel::models::{Posterior, SparseGpRegression};
 use gpparallel::optim::Lbfgs;
 use gpparallel::testutil::prop::{Prop, Rng64};
@@ -136,7 +148,10 @@ fn distributed_matches_single_node_ranks_1_to_9() {
 /// Training → serving hand-off on one cluster: `train_then_predict`
 /// must serve exactly the posterior implied by the fitted parameters
 /// (cross-checked against a freshly built single-node posterior), for a
-/// worker count with ragged chunk assignment.
+/// worker count with ragged chunk assignment. The serving posterior is
+/// now built by the distributed stats-only pass, whose summation
+/// discipline is the serial **chunked** construction at the engine's
+/// chunk size — so that is the single-node reference to rebuild with.
 #[test]
 fn train_then_predict_matches_single_node_posterior() {
     let spec = SyntheticSpec { n: 96, q: 1, d: 2, ..Default::default() };
@@ -162,14 +177,249 @@ fn train_then_predict_matches_single_node_posterior() {
     assert_eq!(var.len(), 29);
 
     // rebuild the posterior single-node from the same fitted parameters
+    // and the same chunk-ordered statistics discipline
     let fitted = &result.fitted;
     let w = vec![1.0; x.rows()];
-    let st = sgpr_stats_fwd(&fitted.kerns[0], &x, &w, &ds.y, &fitted.zs[0]);
+    let st = sgpr_stats_fwd_chunked(&fitted.kerns[0], &x, &w, &ds.y, &fitted.zs[0], 16);
     let single = Posterior::new(fitted.kerns[0].clone(), fitted.zs[0].clone(),
                                 fitted.betas[0], &st).unwrap();
     let (em, ev) = single.predict(&xstar);
     assert!(mean.max_abs_diff(&em) == 0.0, "served mean differs from single-node");
     assert_eq!(var, ev, "served variance differs from single-node");
+
+    // and the chunked construction matches the old monolithic one to
+    // rounding error (sanity that the discipline change is benign)
+    let st_full = sgpr_stats_fwd(&fitted.kerns[0], &x, &w, &ds.y, &fitted.zs[0]);
+    assert!(st.p.max_abs_diff(&st_full.p) < 1e-10);
+    assert!(st.psi2.max_abs_diff(&st_full.psi2) < 1e-10);
+}
+
+fn eval_cfg(workers: usize, chunk: usize, backend: BackendKind) -> EngineConfig {
+    EngineConfig {
+        workers,
+        chunk,
+        backend,
+        artifacts_dir: "artifacts".into(),
+        opt: OptChoice::Lbfgs(Lbfgs::default()),
+        pipeline: true,
+        verbose: false,
+    }
+}
+
+/// Run a distributed stats-only pass at `x0` on a `size`-rank cluster.
+fn run_stats_pass(problem: &Problem, x0: &[f64], chunk: usize, size: usize,
+                  backend: BackendKind) -> Stats {
+    let part = Partition::new(problem.n(), chunk, size);
+    let cfg = eval_cfg(size, chunk, backend);
+    let results = Cluster::run(size, |comm| {
+        let mut ev = DistributedEvaluator::new(problem, &cfg, &part, comm).unwrap();
+        if ev.rank() == 0 {
+            let st = ev.stats_pass(x0).unwrap();
+            ev.finish();
+            Some(st)
+        } else {
+            ev.serve().unwrap();
+            None
+        }
+    });
+    results.into_iter().next().unwrap().expect("leader stats")
+}
+
+/// Assert two stats are bit-identical (as observed by `==`).
+fn assert_stats_identical(got: &Stats, want: &Stats, ctx: &str) {
+    assert_eq!(got.psi0, want.psi0, "{ctx}: psi0");
+    assert_eq!(got.tryy, want.tryy, "{ctx}: tryy");
+    assert_eq!(got.kl, want.kl, "{ctx}: kl");
+    assert_eq!(got.n_eff, want.n_eff, "{ctx}: n_eff");
+    assert!(got.p.max_abs_diff(&want.p) == 0.0, "{ctx}: P");
+    assert!(got.psi2.max_abs_diff(&want.psi2) == 0.0, "{ctx}: Psi2");
+}
+
+/// The STATS-parity acceptance matrix: the distributed stats-only pass
+/// must be **bit-identical** to the serial chunked construction
+/// (`sgpr_stats_fwd_chunked` at the engine's chunk size) for every
+/// cluster size 1–9 and both CPU backends (N=77, C=8 → 10 chunks with
+/// a ragged, padded tail), plus a cluster with more ranks than chunks
+/// (chunkless ranks must contribute exact zeros and stay in lockstep).
+#[test]
+fn stats_pass_parity_ranks_1_to_9() {
+    let spec = SyntheticSpec { n: 77, q: 2, d: 3, ..Default::default() };
+    let ds = generate_supervised(&spec, 11);
+    let x = ds.x.clone().unwrap();
+    let chunk = 8;
+    let problem = SparseGpRegression::problem(&x, &ds.y, 6, "test", 11);
+    let x0 = problem.initial_params();
+
+    // the serial reference, through the same log-hyp round-trip the
+    // broadcast parameters take
+    let kern = RbfArd::from_log_hyp(&problem.views[0].kern0.to_log_hyp());
+    let w = vec![1.0; x.rows()];
+    let want = sgpr_stats_fwd_chunked(&kern, &x, &w, &ds.y, &problem.views[0].z0, chunk);
+
+    for kind in [BackendKind::RustCpu, BackendKind::ParallelCpu { threads: 3 }] {
+        for size in 1..=9usize {
+            let got = run_stats_pass(&problem, &x0, chunk, size, kind);
+            assert_stats_identical(&got, &want, &format!("{kind:?} size {size}"));
+        }
+    }
+
+    // more ranks than chunks: N=20, C=8 → 3 chunks over 7 ranks
+    let spec = SyntheticSpec { n: 20, q: 2, d: 3, ..Default::default() };
+    let ds = generate_supervised(&spec, 12);
+    let x = ds.x.clone().unwrap();
+    let problem = SparseGpRegression::problem(&x, &ds.y, 5, "test", 12);
+    let x0 = problem.initial_params();
+    let kern = RbfArd::from_log_hyp(&problem.views[0].kern0.to_log_hyp());
+    let w = vec![1.0; x.rows()];
+    let want = sgpr_stats_fwd_chunked(&kern, &x, &w, &ds.y, &problem.views[0].z0, chunk);
+    let got = run_stats_pass(&problem, &x0, chunk, 7, BackendKind::RustCpu);
+    assert_stats_identical(&got, &want, "chunkless ranks");
+}
+
+/// Posterior hot-swap: a serving session opened at parameters A and
+/// `refit_and_swap`ped to parameters B must serve predictions
+/// **bit-identical** to (a) a fresh session opened directly at B and
+/// (b) the single-node posterior built from the serial chunked stats at
+/// B — at several cluster sizes. The pre-swap batch must differ, so the
+/// swap demonstrably took effect.
+#[test]
+fn hot_swap_matches_fresh_session_at_new_params() {
+    let spec = SyntheticSpec { n: 61, q: 1, d: 2, ..Default::default() };
+    let ds = generate_supervised(&spec, 17);
+    let x = ds.x.clone().unwrap();
+    let chunk = 8;
+    let m = 7;
+    let problem = SparseGpRegression::problem(&x, &ds.y, m, "test", 17);
+    let xa = problem.initial_params();
+    // layout (q=1): [log σ², log ℓ, log β, Z (m)] — perturb all four kinds
+    let mut xb = xa.clone();
+    xb[0] += 0.3;
+    xb[1] -= 0.25;
+    xb[2] += 0.2;
+    xb[3] += 0.1;
+
+    let mut rng = Rng64::new(18);
+    let xstar = Mat::from_fn(23, 1, |_, _| rng.normal());
+
+    // single-node expectation at B (serial chunked stats discipline)
+    let kern_b = RbfArd::from_log_hyp(&xb[0..2]);
+    let z_b = Mat::from_vec(m, 1, xb[3..3 + m].to_vec());
+    let w = vec![1.0; x.rows()];
+    let st_b = sgpr_stats_fwd_chunked(&kern_b, &x, &w, &ds.y, &z_b, chunk);
+    let single_b = Posterior::new(kern_b, z_b, xb[2].exp(), &st_b).unwrap();
+    let (em, ev) = single_b.predict(&xstar);
+
+    for size in [1usize, 2, 5] {
+        let part = Partition::new(problem.n(), chunk, size);
+        let cfg = eval_cfg(size, chunk, BackendKind::RustCpu);
+
+        // session opened at A, served, hot-swapped to B, served again
+        let (p, xa_r, xb_r, xs) = (&problem, &xa, &xb, &xstar);
+        let results = Cluster::run(size, |comm| {
+            let mut ev = DistributedEvaluator::new(p, &cfg, &part, comm).unwrap();
+            if ev.rank() == 0 {
+                let core = ev.posterior_core_at(xa_r).unwrap();
+                ev.begin_serving(core, 4).unwrap();
+                let pre = ev.predict_sharded(xs).unwrap();
+                ev.refit_and_swap(xb_r).unwrap();
+                let post = ev.predict_sharded(xs).unwrap();
+                ev.end_serving().unwrap();
+                ev.finish();
+                Some((pre, post))
+            } else {
+                ev.serve().unwrap();
+                None
+            }
+        });
+        let (pre, post) = results.into_iter().next().unwrap().expect("leader output");
+
+        // fresh session opened directly at B
+        let results = Cluster::run(size, |comm| {
+            let mut ev = DistributedEvaluator::new(p, &cfg, &part, comm).unwrap();
+            if ev.rank() == 0 {
+                let core = ev.posterior_core_at(xb_r).unwrap();
+                ev.begin_serving(core, 4).unwrap();
+                let out = ev.predict_sharded(xs).unwrap();
+                ev.end_serving().unwrap();
+                ev.finish();
+                Some(out)
+            } else {
+                ev.serve().unwrap();
+                None
+            }
+        });
+        let fresh = results.into_iter().next().unwrap().expect("leader output");
+
+        assert!(post.0.max_abs_diff(&fresh.0) == 0.0,
+                "size {size}: post-swap mean != fresh session at B");
+        assert_eq!(post.1, fresh.1, "size {size}: post-swap var != fresh session");
+        assert!(post.0.max_abs_diff(&em) == 0.0,
+                "size {size}: post-swap mean != single-node at B");
+        assert_eq!(post.1, ev, "size {size}: post-swap var != single-node");
+        assert!(pre.0.max_abs_diff(&post.0) > 0.0,
+                "size {size}: the swap changed nothing — test is vacuous");
+    }
+}
+
+/// A malformed (truncated) shard wire must surface as a fail-flagged
+/// gather + a clean worker error, not a `Mat::from_vec` panic or a
+/// silently wrong shard. The leader half of the batch protocol is
+/// hand-rolled so a short wire can be injected (sub-command 1.0 =
+/// PREDICT, tag 300 = the X* shard channel).
+#[test]
+fn malformed_shard_wire_is_a_clean_error() {
+    let core = toy_core(13, 40, 6, 2, 2);
+    let core_ref = &core;
+    let results = Cluster::run(2, move |mut comm| {
+        if comm.rank() == 0 {
+            let mut dp = DistributedPosterior::leader(core_ref.clone(), 4, &mut comm);
+            // announce an 8-row batch: rank 1 owns rows 4..8 and expects
+            // 4 rows × Q=2 = 8 wire elements; ship 3 instead
+            comm.bcast(0, vec![1.0, 8.0]);
+            comm.send(1, 300, &[0.5; 3]);
+            let gathered = comm.gather(0, &[0.0]).expect("root");
+            dp.finish(&mut comm);
+            Some(gathered[1].clone())
+        } else {
+            let mut backend = RustCpuBackend;
+            let err = worker_serve(&mut comm, &mut backend)
+                .expect_err("short wire must be an error");
+            assert!(format!("{err:#}").contains("shard wire length"),
+                    "unhelpful error: {err:#}");
+            None
+        }
+    });
+    // the worker reported the failure through the flag payload, keeping
+    // the gather in lockstep
+    assert_eq!(results[0].as_ref().expect("leader"), &vec![1.0]);
+}
+
+/// The stats-only pass must refuse variational problems on the leader
+/// *before* any broadcast, so the cluster stays in lockstep and shuts
+/// down cleanly.
+#[test]
+fn stats_pass_refuses_variational_problems() {
+    use gpparallel::models::BayesianGplvm;
+    let spec = SyntheticSpec { n: 24, q: 1, d: 2, ..Default::default() };
+    let ds = gpparallel::data::synthetic::generate(&spec, 3);
+    let problem = BayesianGplvm::problem(&ds.y, 1, 6, "test", 3);
+    let x0 = problem.initial_params();
+    let part = Partition::new(problem.n(), 8, 2);
+    let cfg = eval_cfg(2, 8, BackendKind::RustCpu);
+    let (p, x0_r) = (&problem, &x0);
+    let results = Cluster::run(2, |comm| {
+        let mut ev = DistributedEvaluator::new(p, &cfg, &part, comm).unwrap();
+        if ev.rank() == 0 {
+            let err = ev.stats_pass(x0_r).expect_err("variational must refuse");
+            ev.finish();
+            Some(format!("{err:#}"))
+        } else {
+            ev.serve().unwrap();
+            None
+        }
+    });
+    let msg = results[0].as_ref().expect("leader");
+    assert!(msg.contains("supervised"), "unhelpful error: {msg}");
 }
 
 /// A variational problem must refuse the serving hand-off with a clear

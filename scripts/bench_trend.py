@@ -5,13 +5,20 @@ snapshot `cargo bench --bench micro` writes and perf PRs commit.
 Schema: a JSON array of records, each
     {"op": <non-empty str>, "size": <number > 0>, "ns_per_iter": <finite number > 0>}
 
+Op names are additionally matched against the known op families below
+(e.g. `stats_pass_w{W}`, `hot_swap`, `serve_predict_w{W}`,
+`cycle_eval_{sync|pipelined}_w{W}_v{V}`). An op outside every family is
+a **warning**, not an error — the gate stays non-blocking for new bench
+keys — unless `--strict-ops` is passed.
+
 Exit codes:
-    0  file valid (or absent without --require)
+    0  file valid (or absent without --require); op-family warnings only
     1  file absent with --require
-    2  malformed JSON or records violating the schema
+    2  malformed JSON, records violating the schema, or unknown op
+       families under --strict-ops
 
 Usage:
-    python3 scripts/bench_trend.py [--require] [path ...]
+    python3 scripts/bench_trend.py [--require] [--strict-ops] [path ...]
 
 Defaults to ./BENCH_micro.json. Run from CI as a non-blocking step after
 the bench so a bad emitter is caught the moment it lands, and locally to
@@ -20,10 +27,30 @@ eyeball the per-op trend (min/max ns across sizes).
 
 import json
 import math
+import re
 import sys
 
+# The bench emitter's op vocabulary, one regex per family. Keep in sync
+# with rust/benches/micro.rs (each `rec.push` site).
+KNOWN_OP_FAMILIES = [
+    r"stats_fwd_(rust_cpu|xla)",
+    r"stats_vjp_(rust_cpu|xla)",
+    r"engine_eval_by_chunk",
+    r"engine_eval_sparse",
+    r"dense_gp_eval",
+    r"matmul_(naive|blocked|t)",
+    r"syrk",
+    r"cycle_eval_(sync|pipelined)_w\d+_v\d+",
+    r"serve_predict_w\d+",
+    # the stats-only pass (distributed posterior rebuild) per worker
+    # count, and the end-to-end refit-and-swap round
+    r"stats_pass_w\d+",
+    r"hot_swap",
+]
+_KNOWN_OPS = re.compile("^(?:" + "|".join(KNOWN_OP_FAMILIES) + ")$")
 
-def validate(path, require):
+
+def validate(path, require, strict_ops=False):
     try:
         with open(path) as fh:
             data = json.load(fh)
@@ -73,6 +100,14 @@ def validate(path, require):
               f"out of {len(data)}")
         return 2
 
+    unknown = sorted(op for op in by_op if not _KNOWN_OPS.match(op))
+    if unknown:
+        for op in unknown:
+            print(f"{path}: warning: op {op!r} matches no known op family "
+                  f"(new bench key? teach scripts/bench_trend.py)")
+        if strict_ops:
+            return 2
+
     print(f"{path}: {len(data)} records across {len(by_op)} ops")
     for op in sorted(by_op):
         points = sorted(by_op[op])
@@ -84,8 +119,9 @@ def validate(path, require):
 
 def main(argv):
     require = "--require" in argv
+    strict_ops = "--strict-ops" in argv
     paths = [a for a in argv if not a.startswith("--")] or ["BENCH_micro.json"]
-    return max(validate(p, require) for p in paths)
+    return max(validate(p, require, strict_ops) for p in paths)
 
 
 if __name__ == "__main__":
