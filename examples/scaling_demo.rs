@@ -14,7 +14,14 @@
 //! partitioned over the ranks, and the assembled result is checked
 //! bit-identical against the single-node posterior.
 //!
-//! Part 3 hot-swaps the served posterior mid-session: a second core
+//! Part 3 re-serves the same batches as a **batch stream**
+//! (`predict_stream`): batch k+1's announcement and shard sends overlap
+//! batch k's gather, so the serving ranks never idle for the leader's
+//! round-trip — the streamed outputs are checked bit-identical to the
+//! sequential ones (streaming is a protocol reordering, not a different
+//! computation).
+//!
+//! Part 4 hot-swaps the served posterior mid-session: a second core
 //! (same fit, different noise precision) is `rebroadcast` without
 //! tearing the session down, and the post-swap batch is checked
 //! bit-identical against the single-node posterior of the *new* core.
@@ -129,6 +136,60 @@ fn main() -> Result<()> {
                  workers, sec, nt as f64 / sec, max_diff);
     }
     println!("(serving is bit-identical across cluster sizes: |Δ| must print 0.0e0)");
+
+    // ---------------------------------------------------------------
+    // batch streams: the same batches, sequential vs streamed protocol
+    // (batch k+1's announcement + shard sends overlap batch k's gather)
+    // ---------------------------------------------------------------
+    println!("\n== batch streams: {batches} × {nt}-row batches, sequential vs streamed ==");
+    let stream_in: Vec<Mat> = (0..batches).map(|_| xstar.clone()).collect();
+    println!("{:>8} {:>14} {:>14} {:>8} {:>12}",
+             "workers", "seq s/batch", "stream s/batch", "ratio", "max |Δ|");
+    for workers in [2usize, 4] {
+        let (core_ref, bs) = (&core, &stream_in);
+        let results = Cluster::run(workers, move |mut comm| {
+            let (mut backends, _rt) = make_backends(backend, &["paper".to_string()],
+                                                    std::path::Path::new("artifacts"))
+                .expect("backend construction");
+            let be = backends[0].as_mut();
+            if comm.rank() == 0 {
+                let mut dp = DistributedPosterior::leader(core_ref.clone(),
+                                                          rows_per_chunk, &mut comm);
+                let mut mean = Mat::zeros(0, 0);
+                let mut var = Vec::new();
+                // warm the partition + scratch, then time both protocols
+                dp.predict_into(&mut comm, be, &bs[0], &mut mean, &mut var)
+                    .expect("warmup");
+                let t0 = Instant::now();
+                for b in bs.iter() {
+                    dp.predict_into(&mut comm, be, b, &mut mean, &mut var)
+                        .expect("sequential batch");
+                }
+                let t_seq = t0.elapsed().as_secs_f64() / bs.len() as f64;
+                let t0 = Instant::now();
+                let outs = dp.predict_stream(&mut comm, be, bs).expect("streamed run");
+                let t_stream = t0.elapsed().as_secs_f64() / bs.len() as f64;
+                dp.finish(&mut comm);
+                Some((outs, t_seq, t_stream, mean, var))
+            } else {
+                worker_serve(&mut comm, be).expect("serve");
+                None
+            }
+        });
+        let (outs, t_seq, t_stream, seq_mean, seq_var) =
+            results[0].as_ref().expect("leader result");
+        // streamed output must equal the sequential output bit for bit
+        let mut dmax = 0.0f64;
+        for (m, v) in outs {
+            dmax = dmax.max(m.max_abs_diff(seq_mean));
+            for (a, b) in v.iter().zip(seq_var) {
+                dmax = dmax.max((a - b).abs());
+            }
+        }
+        println!("{:>8} {:>14.5} {:>14.5} {:>8.2} {:>12.1e}",
+                 workers, t_seq, t_stream, t_seq / t_stream, dmax);
+    }
+    println!("(streaming is a protocol reordering: |Δ| must print 0.0e0)");
 
     // ---------------------------------------------------------------
     // posterior hot-swap: rebroadcast a new core mid-session

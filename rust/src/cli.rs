@@ -122,7 +122,7 @@ pub fn known_options(cmd: &str) -> Option<Vec<&'static str>> {
 pub fn known_flags(cmd: &str) -> Vec<&'static str> {
     let (base, extra): (&[&str], &[&str]) = match cmd {
         "train-bgplvm" | "train-sgpr" | "time" => (ENGINE_FLAGS, &[]),
-        "predict" => (ENGINE_FLAGS, &["refit-demo"]),
+        "predict" => (ENGINE_FLAGS, &["refit-demo", "stream"]),
         _ => (&[], &["help"]),
     };
     base.iter().chain(extra).copied().collect()
@@ -203,6 +203,9 @@ mod tests {
         for cmd in ["train-bgplvm", "train-sgpr", "predict", "time"] {
             assert!(known_flags(cmd).contains(&"no-pipeline"), "{cmd}");
         }
+        // `--stream` (streamed serving) is predict-only too
+        assert!(known_flags("predict").contains(&"stream"));
+        assert!(!known_flags("time").contains(&"stream"));
     }
 
     #[test]

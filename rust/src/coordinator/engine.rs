@@ -25,13 +25,17 @@
 //! - [`serve`] — sharded serving: the fitted posterior is broadcast
 //!   once and prediction batches are partitioned over the same ranks
 //!   ([`DistributedPosterior`], bit-identical to the single-node
-//!   posterior). Entered from a training cluster via
-//!   `DistributedEvaluator::begin_serving` or standalone over a raw
-//!   `Comm`. The posterior itself is built by a **distributed
-//!   stats-only pass** (the STATS verb,
-//!   `DistributedEvaluator::stats_pass`/`posterior_core_at`) — the
-//!   leader does no full-data work — and can be **hot-swapped**
-//!   mid-session at new parameters (`refit_and_swap`, or a standalone
+//!   posterior), sequentially (`predict_into`) or as a **batch stream**
+//!   (`predict_stream`: batch k+1 issued before batch k's gather, so
+//!   serving ranks never idle between batches). Entered from a training
+//!   cluster via `DistributedEvaluator::begin_serving` or standalone
+//!   over a raw `Comm`. The posterior itself is built by a
+//!   **distributed stats-only pass** (the STATS verb,
+//!   `DistributedEvaluator::stats_pass`/`posterior_core_fresh`) — the
+//!   leader does no full-data work — or, at the fitted parameters, for
+//!   **free** from the final evaluation's captured statistics
+//!   (`posterior_core_at`), and can be **hot-swapped** mid-session at
+//!   new parameters (`refit_and_swap`, or a standalone
 //!   `DistributedPosterior::rebroadcast`).
 //!
 //! The engine is **multi-view** from the start: SGPR is one supervised

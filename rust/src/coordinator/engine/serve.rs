@@ -23,6 +23,33 @@
 //! every cluster size (asserted for ranks 1–9 in
 //! `rust/tests/serve_test.rs`).
 //!
+//! **Batch streams.** The per-batch protocol above is lock-step: the
+//! leader only announces batch k+1 after batch k's gather has fully
+//! drained, so workers idle for a whole leader round-trip between
+//! batches. [`DistributedPosterior::predict_stream`] reorders the
+//! protocol — nothing else — so at most **two batches are in flight**:
+//!
+//! ```text
+//!   L:  issue(k) ─ issue(k+1) ─ own(k) ─ gather(k) ─ issue(k+2) ─ own(k+1) ─ …
+//!   W:  recv cmd(k) ─ recv shard(k) ─ prefetch cmd+shard(k+1) ─┐
+//!                                      compute(k) ─ gather(k) ─┴─▸ compute(k+1) ─ …
+//! ```
+//!
+//! `issue` = sub-command broadcast + shard sends (both non-blocking on
+//! this transport), so batch k+1's rows are already parked in a worker's
+//! mailbox while it computes batch k: the command wire carries a
+//! *stream flag* telling the worker the next announcement is in flight,
+//! and the worker pulls it (plus its shard) into a back buffer (the
+//! serve scratch's pending pair) **before** computing the current
+//! batch. Per-batch compute and rank-order assembly are the exact same
+//! code as the sequential path, so streamed output is **bit-identical**
+//! to `predict_into` batch for batch. Fail-flag, poison and hot-swap
+//! semantics survive mid-stream: a failed batch is completed (lockstep
+//! preserved, first error returned, the session stays usable), and a
+//! swap broadcast that lands between two streamed announcements is
+//! applied after the earlier batch and before the later one — broadcast
+//! order.
+//!
 //! Failure protocol: a rank whose shard computation errors ships a
 //! one-element `[1.0]` failure payload instead of its results, so the
 //! gather stays in lockstep and the leader surfaces the failure as an
@@ -64,7 +91,11 @@ use anyhow::{anyhow, Result};
 /// training cycle's `TAG_LOCALS` and the collective tags).
 const TAG_XSTAR: u64 = 300;
 
-/// Serve-session sub-commands (broadcast at each batch).
+/// Serve-session sub-commands (broadcast at each batch). A `SRV_PREDICT`
+/// wire is `[SRV_PREDICT, nt]` or `[SRV_PREDICT, nt, stream]`, where a
+/// `stream` flag of 1.0 announces that the *next* sub-command broadcast
+/// (and its shard sends) are already in flight — the worker may prefetch
+/// them before computing this batch.
 const SRV_PREDICT: f64 = 1.0;
 const SRV_DONE: f64 = 0.0;
 /// Posterior hot-swap: the rest of the broadcast carries a replacement
@@ -75,6 +106,48 @@ const SRV_SWAP: f64 = 2.0;
 /// follows with a [`SRV_SWAP`] broadcast (success) or resumes issuing
 /// sub-commands against the old posterior (failed refit).
 const SRV_REFIT: f64 = 3.0;
+
+/// Sanity cap on a `SRV_PREDICT` row count. The value comes off a
+/// collective wire as f64; a corrupt wire can carry NaN (`as usize`
+/// saturates to 0 and the partition constructor asserts), a negative, or
+/// something huge (the per-batch partition build allocates one chunk
+/// entry per `rows_per_chunk` rows, so an absurd count is an OOM before
+/// it is anything else). Matches `MAX_WIRE_DIM` in `math::predict` — far
+/// above any servable batch, small enough that the worst-case partition
+/// allocation stays bounded. Anything past it is corruption, not a batch.
+const MAX_BATCH_ROWS: f64 = 16_777_216.0; // 2^24
+
+/// How many recent row partitions a session caches. Streamed serving
+/// holds two batches in flight (plus the one being issued), so a single
+/// slot would thrash on mixed-size streams; three keeps every partition
+/// the protocol can still need resident.
+const PARTITION_CACHE: usize = 3;
+
+/// Parse a serve sub-command wire as a `SRV_PREDICT` announcement:
+/// `Ok(Some((nt, stream)))` for a well-formed batch, `Ok(None)` when the
+/// verb is not `SRV_PREDICT` at all, `Err` for a `SRV_PREDICT` wire too
+/// short/long to carry its fields or whose row count is not a valid
+/// batch size. Both the worker's main dispatch and its streamed prefetch
+/// go through here, so the validation cannot drift between them.
+fn parse_predict(cmd: &[f64]) -> Result<Option<(usize, bool)>> {
+    if cmd.first() != Some(&SRV_PREDICT) {
+        return Ok(None);
+    }
+    if cmd.len() < 2 || cmd.len() > 3 {
+        return Err(anyhow!("SRV_PREDICT wire has {} element(s)", cmd.len()));
+    }
+    let ntf = cmd[1];
+    if !ntf.is_finite() || ntf < 1.0 || ntf.fract() != 0.0 || ntf > MAX_BATCH_ROWS {
+        return Err(anyhow!("SRV_PREDICT row count {ntf} is not a valid batch size"));
+    }
+    let stream = match cmd.get(2) {
+        None => false,
+        Some(&v) if v == 0.0 => false,
+        Some(&v) if v == 1.0 => true,
+        Some(&v) => return Err(anyhow!("SRV_PREDICT stream flag {v} is neither 0 nor 1")),
+    };
+    Ok(Some((ntf as usize, stream)))
+}
 
 /// What ended a [`DistributedPosterior::serve_until`] stint.
 #[derive(Debug, PartialEq, Eq)]
@@ -90,7 +163,10 @@ pub enum ServeSignal {
 
 /// Reusable per-session buffers so the steady-state serve loop stops
 /// allocating: command/shard wires, the worker's shard matrix, per-rank
-/// mean/variance staging and the gather payload.
+/// mean/variance staging, the gather payload, and — in streamed mode —
+/// the **back buffer** holding the next batch's prefetched command and
+/// shard wire while the front buffers (`xshard`/`mean`/`var`) carry the
+/// batch currently being computed.
 #[derive(Default)]
 struct ServeScratch {
     /// Sub-command broadcast buffer (round-trips through `bcast`).
@@ -105,6 +181,12 @@ struct ServeScratch {
     var: Vec<f64>,
     /// Gather payload: `mean ++ var ++ [fail flag]`.
     payload: Vec<f64>,
+    /// Streamed mode: the next sub-command wire, prefetched before the
+    /// current batch's compute; handled at the top of the serve loop.
+    pending_cmd: Option<Vec<f64>>,
+    /// Streamed mode: the next batch's shard wire (the double buffer's
+    /// back half — the current batch occupies `xshard`).
+    pending_shard: Option<Vec<f64>>,
 }
 
 /// One rank's half of a sharded serving session. Build with
@@ -117,10 +199,12 @@ pub struct DistributedPosterior {
     /// Rows per partition chunk (the serving analog of the training
     /// chunk size; granularity of the per-rank row split).
     rows_per_chunk: usize,
-    /// Cached row partition, keyed by the **(batch size, rank count)**
-    /// pair it was built for — a posterior reused against a
-    /// different-sized communicator must not reuse the old row split.
-    part: Option<Partition>,
+    /// Recently used row partitions, each keyed by the **(batch size,
+    /// rank count)** pair it was built for (a posterior reused against a
+    /// different-sized communicator must not reuse the old row split).
+    /// Front entry is the most recent; capacity [`PARTITION_CACHE`], so
+    /// a stream with two batch sizes in flight keeps both resident.
+    parts: Vec<(usize, usize, Partition)>,
     scratch: ServeScratch,
     /// First worker-side error of the session (reported when it closes).
     sticky: Option<anyhow::Error>,
@@ -143,7 +227,7 @@ impl DistributedPosterior {
         wire.push(rows_per_chunk as f64);
         core.pack_into(&mut wire);
         comm.bcast(0, wire);
-        DistributedPosterior { core, rows_per_chunk, part: None,
+        DistributedPosterior { core, rows_per_chunk, parts: Vec::new(),
                                scratch: ServeScratch::default(), sticky: None,
                                poisoned: false }
     }
@@ -181,7 +265,7 @@ impl DistributedPosterior {
                 (empty, Some(anyhow!("posterior broadcast: {e:#}")), true)
             }
         };
-        Ok(DistributedPosterior { core, rows_per_chunk, part: None,
+        Ok(DistributedPosterior { core, rows_per_chunk, parts: Vec::new(),
                                   scratch: ServeScratch::default(), sticky,
                                   poisoned })
     }
@@ -191,18 +275,26 @@ impl DistributedPosterior {
         &self.core
     }
 
-    /// Refresh the cached row partition for a batch of `nt` rows over
-    /// `ranks` ranks (recomputed only when either changes — keying on
-    /// the batch size alone would silently mis-shard a posterior reused
-    /// against a different-sized communicator).
+    /// Look up (or build) the row partition for a batch of `nt` rows
+    /// over `ranks` ranks and move it to the cache front. Keying on the
+    /// full **(batch size, rank count)** pair matters: a posterior
+    /// reused against a different-sized communicator must not reuse the
+    /// old row split. The cache keeps [`PARTITION_CACHE`] entries so the
+    /// streamed protocol's in-flight window (the batch being completed,
+    /// the batch behind it, and the batch being issued) never evicts a
+    /// partition it still needs.
     fn partition_for(&mut self, nt: usize, ranks: usize) -> &Partition {
-        let stale = self.part.as_ref()
-            .map(|p| p.n != nt || p.workers() != ranks)
-            .unwrap_or(true);
-        if stale {
-            self.part = Some(Partition::new(nt, self.rows_per_chunk, ranks));
+        match self.parts.iter().position(|(n, r, _)| *n == nt && *r == ranks) {
+            Some(i) => self.parts.swap(0, i),
+            None => {
+                if self.parts.len() == PARTITION_CACHE {
+                    self.parts.pop();
+                }
+                self.parts.insert(
+                    0, (nt, ranks, Partition::new(nt, self.rows_per_chunk, ranks)));
+            }
         }
-        self.part.as_ref().expect("partition just ensured")
+        &self.parts[0].2
     }
 
     /// Leader: predict one batch, sharded across ranks (allocating
@@ -227,6 +319,89 @@ impl DistributedPosterior {
     pub fn predict_into(&mut self, comm: &mut Comm, backend: &mut dyn Backend,
                         xstar: &Mat, mean_out: &mut Mat, var_out: &mut Vec<f64>)
                         -> Result<()> {
+        self.prepare_outputs(xstar, mean_out, var_out)?;
+        if xstar.rows() == 0 {
+            return Ok(()); // nothing to shard; no collective round needed
+        }
+        self.issue_batch(comm, xstar, false);
+        self.complete_batch(comm, backend, xstar, mean_out, var_out)
+    }
+
+    /// Leader: serve a run of batches as a **stream** — batch k+1's
+    /// sub-command broadcast and shard sends go out *before* batch k's
+    /// gather is collected (at most two batches in flight, see the
+    /// module doc), so workers roll from one batch's compute straight
+    /// into the next instead of idling for the leader's round-trip.
+    ///
+    /// Per-batch compute and rank-order assembly are the same code as
+    /// [`predict_into`](DistributedPosterior::predict_into), so the
+    /// output is bit-identical to serving the batches sequentially. A
+    /// failing batch does not tear the stream down: every issued batch
+    /// is completed (the collectives stay in lockstep and the session
+    /// stays usable) and the first error is returned.
+    pub fn predict_stream(&mut self, comm: &mut Comm, backend: &mut dyn Backend,
+                          batches: &[Mat]) -> Result<Vec<(Mat, Vec<f64>)>> {
+        let mut outs: Vec<(Mat, Vec<f64>)> =
+            batches.iter().map(|_| (Mat::zeros(0, 0), Vec::new())).collect();
+        self.predict_stream_into(comm, backend, batches, &mut outs)?;
+        Ok(outs)
+    }
+
+    /// [`predict_stream`](DistributedPosterior::predict_stream) into
+    /// reusable output buffers, one `(mean, variance)` slot per batch —
+    /// the steady-state entry point, like
+    /// [`predict_into`](DistributedPosterior::predict_into) for the
+    /// sequential path. Empty batches cost no collective round, exactly
+    /// as in the sequential path.
+    pub fn predict_stream_into(&mut self, comm: &mut Comm, backend: &mut dyn Backend,
+                               batches: &[Mat], outs: &mut [(Mat, Vec<f64>)])
+                               -> Result<()> {
+        if batches.len() != outs.len() {
+            return Err(anyhow!("{} batches but {} output slots",
+                               batches.len(), outs.len()));
+        }
+        // validate and size every slot before any collective goes out,
+        // so a malformed batch fails the call without touching the wire
+        for (b, (mean, var)) in batches.iter().zip(outs.iter_mut()) {
+            self.prepare_outputs(b, mean, var)?;
+        }
+        let next_live =
+            |from: usize| (from..batches.len()).find(|&i| batches[i].rows() > 0);
+        let Some(mut cur) = next_live(0) else {
+            return Ok(()); // all batches empty: nothing to shard
+        };
+        let mut nxt = next_live(cur + 1);
+        self.issue_batch(comm, &batches[cur], nxt.is_some());
+
+        let mut first_err: Option<anyhow::Error> = None;
+        loop {
+            // issue batch k+1 before collecting batch k
+            let issued = nxt;
+            if let Some(n) = issued {
+                nxt = next_live(n + 1);
+                self.issue_batch(comm, &batches[n], nxt.is_some());
+            }
+            let (mean, var) = &mut outs[cur];
+            if let Err(e) = self.complete_batch(comm, backend, &batches[cur], mean, var) {
+                if first_err.is_none() {
+                    first_err = Some(anyhow!("stream batch {cur}: {e:#}"));
+                }
+            }
+            match issued {
+                Some(n) => cur = n,
+                None => break,
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Validate a batch against the posterior and size the caller's
+    /// output buffers (reallocated only when the batch shape changes).
+    fn prepare_outputs(&self, xstar: &Mat, mean_out: &mut Mat, var_out: &mut Vec<f64>)
+                       -> Result<()> {
         let nt = xstar.rows();
         let d = self.core.d();
         if xstar.cols() != self.core.q() {
@@ -237,21 +412,28 @@ impl DistributedPosterior {
             *mean_out = Mat::zeros(nt, d);
         }
         var_out.resize(nt, 0.0);
-        if nt == 0 {
-            return Ok(()); // nothing to shard; no collective round needed
-        }
+        Ok(())
+    }
 
+    /// First half of one batch's leader protocol: broadcast the
+    /// sub-command (`stream` marks a batch whose successor will be
+    /// issued before this batch's gather) and ship each worker its
+    /// contiguous run of rows. `xstar` must be non-empty. Sends are
+    /// non-blocking, so this returns without waiting on any rank.
+    fn issue_batch(&mut self, comm: &mut Comm, xstar: &Mat, stream: bool) {
+        let nt = xstar.rows();
         let ranks = comm.size();
         self.partition_for(nt, ranks);
         let scratch = &mut self.scratch;
 
         // announce the batch
         scratch.cmd.clear();
-        scratch.cmd.extend_from_slice(&[SRV_PREDICT, nt as f64]);
+        scratch.cmd.extend_from_slice(&[SRV_PREDICT, nt as f64,
+                                        if stream { 1.0 } else { 0.0 }]);
         scratch.cmd = comm.bcast(0, std::mem::take(&mut scratch.cmd));
 
         // ship each worker its contiguous run of rows
-        let part = self.part.as_ref().expect("partition cached above");
+        let part = &self.parts[0].2;
         for r in 1..ranks {
             if let Some(sp) = part.worker_span(r) {
                 scratch.xwire.clear();
@@ -260,10 +442,21 @@ impl DistributedPosterior {
                 comm.send(r, TAG_XSTAR, &scratch.xwire);
             }
         }
+    }
 
-        // leader's own shard (rank 0 always owns the first run of rows),
-        // computed straight into the output buffers — no staging copies
-        let sp0 = part.worker_span(0).expect("rank 0 owns chunks when nt > 0");
+    /// Second half of one batch's leader protocol: compute rank 0's own
+    /// shard straight into the output buffers (no staging copies),
+    /// gather the fail-flagged worker payloads, and assemble them in
+    /// rank order — which is row order.
+    fn complete_batch(&mut self, comm: &mut Comm, backend: &mut dyn Backend,
+                      xstar: &Mat, mean_out: &mut Mat, var_out: &mut Vec<f64>)
+                      -> Result<()> {
+        let nt = xstar.rows();
+        let d = self.core.d();
+        let ranks = comm.size();
+        // leader's own shard (rank 0 always owns the first run of rows)
+        let sp0 = self.partition_for(nt, ranks).worker_span(0)
+            .expect("rank 0 owns chunks when nt > 0");
         let rows0 = sp0.len();
         let own = backend.predict_batch(&self.core, xstar, sp0.start, rows0,
                                         &mut mean_out.as_mut_slice()
@@ -273,12 +466,14 @@ impl DistributedPosterior {
         // gather (fail-flagged payloads keep the collective in lockstep
         // even when a rank's compute errored; the leader's own results
         // are already in place, so its payload is the flag alone)
+        let scratch = &mut self.scratch;
         scratch.payload.clear();
         scratch.payload.push(if own.is_ok() { 0.0 } else { 1.0 });
         let gathered = comm.gather(0, &scratch.payload).expect("root");
         own.map_err(|e| anyhow!("rank 0 prediction failed: {e:#}"))?;
 
         // assemble worker shards into the output rows
+        let part = &self.parts[0].2;
         for (r, piece) in gathered.iter().enumerate().skip(1) {
             let Some(sp) = part.worker_span(r) else {
                 continue; // chunkless rank contributed nothing
@@ -322,7 +517,12 @@ impl DistributedPosterior {
         let ranks = comm.size();
 
         loop {
-            let cmd = comm.bcast(0, Vec::new());
+            // streamed mode parks the next command here before the
+            // previous batch's compute; otherwise read the broadcast
+            let cmd = match self.scratch.pending_cmd.take() {
+                Some(c) => c,
+                None => comm.bcast(0, Vec::new()),
+            };
             if cmd.is_empty() || cmd[0] == SRV_DONE {
                 return match self.sticky.take() {
                     Some(e) => Err(anyhow!("rank {rank}: {e:#}")),
@@ -354,29 +554,77 @@ impl DistributedPosterior {
                 }
                 continue;
             }
+            let (nt, stream) = match parse_predict(&cmd) {
+                Ok(Some(v)) => v,
+                Ok(None) => {
+                    // Unknown verb: guessing the leader's protocol state
+                    // (the old code fell through to SRV_PREDICT and
+                    // indexed cmd[1] — a panic on short wires, a
+                    // mis-serve otherwise) is how one corrupt wire tears
+                    // a cluster down. No wire an honest leader produces
+                    // looks like this, so stay parked at the sub-command
+                    // broadcast — lockstep by construction — and report
+                    // through the sticky error at close.
+                    if self.sticky.is_none() {
+                        self.sticky = Some(anyhow!(
+                            "unknown serve sub-command {}", cmd[0]));
+                    }
+                    continue;
+                }
+                Err(e) => {
+                    // malformed SRV_PREDICT wire (short, or a row count
+                    // that is NaN/negative/fractional/absurd): same
+                    // treatment — no honest leader produces it
+                    if self.sticky.is_none() {
+                        self.sticky = Some(e);
+                    }
+                    continue;
+                }
+            };
+
             // per-batch, not per-session: a hot-swap may change D/Q
             let d = self.core.d();
             let q = self.core.q();
-            let nt = cmd[1] as usize;
-            self.partition_for(nt, ranks);
-            let span = self.part.as_ref().expect("partition cached").worker_span(rank);
+            let span = self.partition_for(nt, ranks).worker_span(rank);
+            // the shard send is drained even on the failure paths below,
+            // so the point-to-point channel stays clean for the next
+            // batch; in streamed mode it may already sit in the back
+            // buffer from the previous batch's prefetch
+            let msg = match span {
+                Some(_) => Some(match self.scratch.pending_shard.take() {
+                    Some(m) => m,
+                    None => comm.recv(0, TAG_XSTAR),
+                }),
+                None => None,
+            };
+            // streamed mode: the leader has already broadcast the next
+            // batch's sub-command and shipped its shards — pull them
+            // into the back buffer *before* this batch's compute, so
+            // the compute overlaps the next batch's delivery instead of
+            // idling for the leader's gather round-trip. A non-PREDICT
+            // broadcast landing here (swap, done, refit, junk) is just
+            // parked: the loop top handles it after this batch, which
+            // is broadcast order.
+            if stream {
+                let next = comm.bcast(0, Vec::new());
+                if let Ok(Some((nt2, _))) = parse_predict(&next) {
+                    if self.partition_for(nt2, ranks).worker_span(rank).is_some() {
+                        self.scratch.pending_shard = Some(comm.recv(0, TAG_XSTAR));
+                    }
+                }
+                self.scratch.pending_cmd = Some(next);
+            }
+
             let scratch = &mut self.scratch;
             scratch.payload.clear();
-
             match span {
                 None => scratch.payload.push(0.0), // no rows, success by definition
                 Some(sp) => {
                     let rows = sp.len();
-                    // the shard send is drained even on the failure
-                    // paths below, so the point-to-point channel stays
-                    // clean for the next batch
-                    let msg = comm.recv(0, TAG_XSTAR);
+                    let msg = msg.expect("shard received above");
                     if self.poisoned {
                         scratch.payload.push(1.0);
-                        let _ = comm.gather(0, &scratch.payload);
-                        continue;
-                    }
-                    if msg.len() != rows * q {
+                    } else if msg.len() != rows * q {
                         // malformed shard wire: report through the
                         // fail-flagged gather instead of feeding a short
                         // buffer to `Mat::from_vec` (panic) or a long
@@ -387,29 +635,29 @@ impl DistributedPosterior {
                                 "shard wire length {} != {rows} rows × Q {q}",
                                 msg.len()));
                         }
-                        let _ = comm.gather(0, &scratch.payload);
-                        continue;
-                    }
-                    if scratch.xshard.rows() == rows && scratch.xshard.cols() == q {
-                        scratch.xshard.set_from(&msg);
                     } else {
-                        scratch.xshard = Mat::from_vec(rows, q, msg);
-                    }
-                    scratch.mean.clear();
-                    scratch.mean.resize(rows * d, 0.0);
-                    scratch.var.clear();
-                    scratch.var.resize(rows, 0.0);
-                    match backend.predict_batch(&self.core, &scratch.xshard, 0, rows,
-                                                &mut scratch.mean, &mut scratch.var) {
-                        Ok(()) => {
-                            scratch.payload.extend_from_slice(&scratch.mean);
-                            scratch.payload.extend_from_slice(&scratch.var);
-                            scratch.payload.push(0.0);
+                        if scratch.xshard.rows() == rows && scratch.xshard.cols() == q {
+                            scratch.xshard.set_from(&msg);
+                        } else {
+                            scratch.xshard = Mat::from_vec(rows, q, msg);
                         }
-                        Err(e) => {
-                            scratch.payload.push(1.0);
-                            if self.sticky.is_none() {
-                                self.sticky = Some(e);
+                        scratch.mean.clear();
+                        scratch.mean.resize(rows * d, 0.0);
+                        scratch.var.clear();
+                        scratch.var.resize(rows, 0.0);
+                        match backend.predict_batch(&self.core, &scratch.xshard, 0,
+                                                    rows, &mut scratch.mean,
+                                                    &mut scratch.var) {
+                            Ok(()) => {
+                                scratch.payload.extend_from_slice(&scratch.mean);
+                                scratch.payload.extend_from_slice(&scratch.var);
+                                scratch.payload.push(0.0);
+                            }
+                            Err(e) => {
+                                scratch.payload.push(1.0);
+                                if self.sticky.is_none() {
+                                    self.sticky = Some(e);
+                                }
                             }
                         }
                     }
@@ -531,13 +779,15 @@ mod tests {
     /// Regression: the row-partition cache must be keyed on
     /// **(batch size, rank count)**, not the batch size alone — a
     /// posterior reused against a different-sized communicator used to
-    /// silently keep the old rank split.
+    /// silently keep the old rank split. The cache now holds several
+    /// recent keys (the streamed protocol's in-flight window), so
+    /// alternating keys must all come back correct.
     #[test]
     fn partition_cache_keyed_on_batch_and_ranks() {
         let mut dp = DistributedPosterior {
             core: toy_core(46),
             rows_per_chunk: 2,
-            part: None,
+            parts: Vec::new(),
             scratch: ServeScratch::default(),
             sticky: None,
             poisoned: false,
@@ -551,6 +801,15 @@ mod tests {
         assert_eq!(dp.partition_for(12, 3).workers(), 3);
         // same ranks, different batch size: must rebuild
         assert_eq!(dp.partition_for(7, 3).n, 7);
+        // alternating keys inside the cache window stay correct
+        for _ in 0..3 {
+            assert_eq!(dp.partition_for(12, 3).n, 12);
+            assert_eq!(dp.partition_for(7, 3).n, 7);
+            assert_eq!(dp.partition_for(12, 2).workers(), 2);
+        }
+        // a fourth key evicts the oldest; a rebuilt entry is still right
+        assert_eq!(dp.partition_for(5, 4).n, 5);
+        assert_eq!(dp.partition_for(12, 3).workers(), 3);
     }
 
     /// Standalone hot-swap: after `rebroadcast`, every rank serves the
@@ -653,6 +912,151 @@ mod tests {
         });
         // the batch came back fail-flagged, in lockstep
         assert_eq!(results[0].as_ref().expect("leader"), &vec![1.0]);
+    }
+
+    /// Streamed serving is a protocol reordering only: a stream of
+    /// batches (including empty and tiny ones) must produce exactly the
+    /// sequential outputs, and the session must keep serving sequential
+    /// batches afterwards.
+    #[test]
+    fn streamed_session_matches_sequential_batches() {
+        let core = toy_core(80);
+        let single = Posterior::from_core(core.clone());
+        let mut rng = Rng64::new(81);
+        let batches: Vec<Mat> = [13usize, 0, 2, 13, 5]
+            .iter()
+            .map(|&nt| Mat::from_fn(nt, 2, |_, _| rng.normal()))
+            .collect();
+        let expect: Vec<(Mat, Vec<f64>)> =
+            batches.iter().map(|b| single.predict(b)).collect();
+
+        for size in [1usize, 3, 4] {
+            let (core_ref, bs, exp) = (&core, &batches, &expect);
+            let results = Cluster::run(size, move |mut comm| {
+                let mut backend = RustCpuBackend;
+                if comm.rank() == 0 {
+                    let mut dp = DistributedPosterior::leader(core_ref.clone(), 3,
+                                                              &mut comm);
+                    let streamed = dp.predict_stream(&mut comm, &mut backend, bs)
+                        .unwrap();
+                    // the session keeps serving sequentially afterwards
+                    let tail = dp.predict(&mut comm, &mut backend, &bs[0]).unwrap();
+                    dp.finish(&mut comm);
+                    Some((streamed, tail))
+                } else {
+                    worker_serve(&mut comm, &mut backend).unwrap();
+                    None
+                }
+            });
+            let (streamed, tail) = results[0].as_ref().expect("leader output");
+            for (i, ((gm, gv), (em, ev))) in streamed.iter().zip(exp).enumerate() {
+                assert_eq!(gm.rows(), em.rows(), "size {size} batch {i}");
+                if em.rows() > 0 {
+                    assert!(gm.max_abs_diff(em) == 0.0,
+                            "size {size} batch {i}: streamed mean");
+                }
+                assert_eq!(gv, ev, "size {size} batch {i}: streamed var");
+            }
+            assert!(tail.0.max_abs_diff(&expect[0].0) == 0.0,
+                    "size {size}: post-stream sequential batch");
+            assert_eq!(tail.1, expect[0].1, "size {size}: post-stream var");
+        }
+    }
+
+    /// Regression: an unknown sub-command verb or a short/corrupt
+    /// `SRV_PREDICT` wire used to fall through to the predict path and
+    /// index `cmd[1]` — a panic (cluster teardown) on short wires, a
+    /// mis-serve otherwise. The worker must instead stay parked at the
+    /// sub-command broadcast (lockstep: a real batch afterwards still
+    /// serves exactly) and report the junk at close.
+    #[test]
+    fn unknown_verbs_and_short_command_wires_keep_lockstep() {
+        let core = toy_core(90);
+        let single = Posterior::from_core(core.clone());
+        let mut rng = Rng64::new(91);
+        let xstar = Mat::from_fn(6, 2, |_, _| rng.normal());
+        let (em, ev) = single.predict(&xstar);
+
+        let (core_ref, xs) = (&core, &xstar);
+        let results = Cluster::run(2, move |mut comm| {
+            let mut backend = RustCpuBackend;
+            if comm.rank() == 0 {
+                let mut dp = DistributedPosterior::leader(core_ref.clone(), 2,
+                                                          &mut comm);
+                comm.bcast(0, vec![7.25, 1.0]);            // unknown verb
+                comm.bcast(0, vec![SRV_PREDICT]);          // short predict wire
+                comm.bcast(0, vec![SRV_PREDICT, f64::NAN, 0.0]); // NaN row count
+                comm.bcast(0, vec![SRV_PREDICT, -4.0, 0.0]);     // negative
+                comm.bcast(0, vec![SRV_PREDICT, 1e300, 0.0]);    // absurd
+                // corrupt but integral and allocatable-looking: must be
+                // rejected by the sanity cap, not partitioned (OOM)
+                comm.bcast(0, vec![SRV_PREDICT, 3.0e9, 0.0]);
+                // lockstep held: a real batch still serves exactly
+                let out = dp.predict(&mut comm, &mut backend, xs).unwrap();
+                dp.finish(&mut comm);
+                Some(out)
+            } else {
+                let err = worker_serve(&mut comm, &mut backend)
+                    .expect_err("junk verbs must be reported");
+                assert!(format!("{err:#}").contains("unknown serve sub-command"),
+                        "unhelpful error: {err:#}");
+                None
+            }
+        });
+        let (gm, gv) = results[0].as_ref().expect("leader output");
+        assert!(gm.max_abs_diff(&em) == 0.0, "post-junk batch must serve exactly");
+        assert_eq!(gv, &ev);
+    }
+
+    /// A poisoned worker inside a stream fail-flags every in-flight
+    /// batch (the stream returns the first error but completes the
+    /// protocol), and a good swap afterwards restores full service —
+    /// the session is never torn down.
+    #[test]
+    fn stream_with_poisoned_worker_fails_cleanly_and_recovers() {
+        let core_a = toy_core(95);
+        let core_b = toy_core(96);
+        let single_b = Posterior::from_core(core_b.clone());
+        let mut rng = Rng64::new(97);
+        let b0 = Mat::from_fn(6, 2, |_, _| rng.normal());
+        let b1 = Mat::from_fn(4, 2, |_, _| rng.normal());
+        let expect: Vec<(Mat, Vec<f64>)> =
+            [&b0, &b1].iter().map(|b| single_b.predict(b)).collect();
+
+        let (ca, cb, b0r, b1r, exp) = (&core_a, &core_b, &b0, &b1, &expect);
+        let results = Cluster::run(2, move |mut comm| {
+            let mut backend = RustCpuBackend;
+            if comm.rank() == 0 {
+                let mut dp = DistributedPosterior::leader(ca.clone(), 2, &mut comm);
+                // corrupt swap wire: rank 1's session is poisoned
+                comm.bcast(0, vec![SRV_SWAP, 1.0, 2.0]);
+                let err = dp
+                    .predict_stream(&mut comm, &mut backend,
+                                    &[b0r.clone(), b1r.clone()])
+                    .expect_err("poisoned worker must fail the stream");
+                assert!(format!("{err:#}").contains("stream batch 0"),
+                        "first error must win: {err:#}");
+                // a good swap clears the poison; the stream serves again
+                dp.rebroadcast(cb.clone(), &mut comm);
+                let outs = dp
+                    .predict_stream(&mut comm, &mut backend,
+                                    &[b0r.clone(), b1r.clone()])
+                    .unwrap();
+                dp.finish(&mut comm);
+                Some(outs)
+            } else {
+                let err = worker_serve(&mut comm, &mut backend)
+                    .expect_err("worker must report the corrupt swap");
+                assert!(format!("{err:#}").contains("posterior swap"),
+                        "unhelpful error: {err:#}");
+                None
+            }
+        });
+        let outs = results[0].as_ref().expect("leader output");
+        for (i, ((gm, gv), (em, ev))) in outs.iter().zip(exp).enumerate() {
+            assert!(gm.max_abs_diff(em) == 0.0, "recovered stream batch {i}: mean");
+            assert_eq!(gv, ev, "recovered stream batch {i}: var");
+        }
     }
 
     /// A batch smaller than the rank count leaves trailing ranks without

@@ -141,6 +141,11 @@ struct ServePlan<'a> {
     /// parameters (a full STATS round + swap broadcast) and serve the
     /// batch again — the protocol demo behind the CLI's `--refit-demo`.
     refit_demo: bool,
+    /// `Some(rows)`: split `xstar` into runs of at most `rows` rows and
+    /// serve them as a **batch stream** (batch k+1 issued before batch
+    /// k's gather); `None`: one sequential batch. Bit-identical outputs
+    /// either way — streaming is a protocol reordering.
+    stream_rows: Option<usize>,
 }
 
 /// What a serving session produced: the batch output, plus the
@@ -190,7 +195,23 @@ impl Engine {
     /// split, the serving analog of [`EngineConfig::chunk`]).
     pub fn train_then_predict(&self, xstar: &Mat, rows_per_chunk: usize)
                               -> Result<(TrainResult, Mat, Vec<f64>)> {
-        let plan = self.serve_plan(xstar, rows_per_chunk, false)?;
+        let plan = self.serve_plan(xstar, rows_per_chunk, false, None)?;
+        let (result, served) = self.run(RunMode::Optimize, Some(plan))?;
+        let ((mean, var), _) = served.expect("serving was requested");
+        Ok((result, mean, var))
+    }
+
+    /// [`train_then_predict`](Engine::train_then_predict), but the test
+    /// batch is split into runs of at most `stream_rows` rows and served
+    /// as a **batch stream**: batch k+1's shard sends overlap batch k's
+    /// gather, so the serving ranks never idle for the leader's
+    /// round-trip between batches. The assembled output is bit-identical
+    /// to the sequential path (streaming is a protocol reordering, not a
+    /// different computation).
+    pub fn train_then_predict_stream(&self, xstar: &Mat, rows_per_chunk: usize,
+                                     stream_rows: usize)
+                                     -> Result<(TrainResult, Mat, Vec<f64>)> {
+        let plan = self.serve_plan(xstar, rows_per_chunk, false, Some(stream_rows))?;
         let (result, served) = self.run(RunMode::Optimize, Some(plan))?;
         let ((mean, var), _) = served.expect("serving was requested");
         Ok((result, mean, var))
@@ -206,15 +227,15 @@ impl Engine {
     /// `predict --refit-demo` asserts.
     pub fn train_predict_refit(&self, xstar: &Mat, rows_per_chunk: usize)
                                -> Result<(TrainResult, (Mat, Vec<f64>), (Mat, Vec<f64>))> {
-        let plan = self.serve_plan(xstar, rows_per_chunk, true)?;
+        let plan = self.serve_plan(xstar, rows_per_chunk, true, None)?;
         let (result, served) = self.run(RunMode::Optimize, Some(plan))?;
         let (before, after) = served.expect("serving was requested");
         Ok((result, before, after.expect("refit demo was requested")))
     }
 
     /// Validate a serving request against the problem.
-    fn serve_plan<'a>(&self, xstar: &'a Mat, rows_per_chunk: usize, refit_demo: bool)
-                      -> Result<ServePlan<'a>> {
+    fn serve_plan<'a>(&self, xstar: &'a Mat, rows_per_chunk: usize, refit_demo: bool,
+                      stream_rows: Option<usize>) -> Result<ServePlan<'a>> {
         if !matches!(self.problem.latent, LatentSpec::Observed(_)) {
             bail!("train_then_predict needs a supervised problem (observed X)");
         }
@@ -224,7 +245,10 @@ impl Engine {
         if rows_per_chunk == 0 {
             bail!("rows_per_chunk must be positive");
         }
-        Ok(ServePlan { xstar, rows_per_chunk, refit_demo })
+        if stream_rows == Some(0) {
+            bail!("stream batch rows must be positive");
+        }
+        Ok(ServePlan { xstar, rows_per_chunk, refit_demo, stream_rows })
     }
 
     fn run(&self, mode: RunMode, predict: Option<ServePlan>)
@@ -365,21 +389,32 @@ impl Engine {
     }
 
     /// Leader: one complete serving session over the training cluster —
-    /// the posterior is rebuilt by a **distributed stats-only pass** at
-    /// the fitted parameter vector `x` (no leader-side full-data
-    /// recompute), broadcast, the batch predicted, and — for the refit
-    /// demo — hot-swapped via another STATS round and predicted again.
-    /// The session is always closed, even when a step fails, so the
-    /// workers are back at the command broadcast before `finish` stops
-    /// them.
+    /// the posterior is rebuilt at the fitted parameter vector `x`
+    /// (usually **free**: the final accepted evaluation's captured
+    /// statistics are reused when `x` matches, and only otherwise does a
+    /// distributed stats-only pass run — either way, no leader-side
+    /// full-data recompute), broadcast, the batch served (sequentially
+    /// or as a batch stream, per the plan), and — for the refit demo —
+    /// hot-swapped via a STATS round and served again. The session is
+    /// always closed, even when a step fails, so the workers are back at
+    /// the command broadcast before `finish` stops them.
     fn serve_fitted(&self, ev: &mut DistributedEvaluator, x: &[f64], plan: ServePlan)
                     -> Result<Served> {
-        let core = ev.posterior_core_at(x)?;
+        // The refit demo asserts a hot-swap at the same parameters
+        // changes *nothing*, and the swapped-in core always comes from
+        // the slot-wire STATS round — so its pre-swap core must too (the
+        // captured final-eval statistics agree only up to float
+        // summation order).
+        let core = if plan.refit_demo {
+            ev.posterior_core_fresh(x)?
+        } else {
+            ev.posterior_core_at(x)?
+        };
         ev.begin_serving(core, plan.rows_per_chunk)?;
-        let first = ev.predict_sharded(plan.xstar);
+        let first = self.serve_batches(ev, &plan);
         let second = if plan.refit_demo && first.is_ok() {
             Some(ev.refit_and_swap(x)
-                 .and_then(|()| ev.predict_sharded(plan.xstar)))
+                 .and_then(|()| self.serve_batches(ev, &plan)))
         } else {
             None
         };
@@ -388,5 +423,39 @@ impl Engine {
         let second = second.transpose()?;
         end?;
         Ok((first, second))
+    }
+
+    /// Leader: serve the plan's test inputs through the open session —
+    /// one sequential batch, or a stream of `stream_rows`-row batches
+    /// whose per-row results are reassembled into the same (Nt × D, Nt)
+    /// shape (row order is preserved, so the two modes are
+    /// bit-identical).
+    fn serve_batches(&self, ev: &mut DistributedEvaluator, plan: &ServePlan)
+                     -> Result<(Mat, Vec<f64>)> {
+        let Some(rows) = plan.stream_rows else {
+            return ev.predict_sharded(plan.xstar);
+        };
+        let nt = plan.xstar.rows();
+        let q = plan.xstar.cols();
+        let d = self.problem.views[0].y.cols();
+        let mut batches = Vec::with_capacity((nt + rows - 1) / rows);
+        let mut start = 0;
+        while start < nt {
+            let end = (start + rows).min(nt);
+            let slice = plan.xstar.as_slice()[start * q..end * q].to_vec();
+            batches.push(Mat::from_vec(end - start, q, slice));
+            start = end;
+        }
+        let outs = ev.predict_stream_sharded(&batches)?;
+        let mut mean = Mat::zeros(nt, d);
+        let mut var = Vec::with_capacity(nt);
+        let mut row = 0;
+        for (bm, bv) in &outs {
+            mean.as_mut_slice()[row * d..(row + bm.rows()) * d]
+                .copy_from_slice(bm.as_slice());
+            var.extend_from_slice(bv);
+            row += bm.rows();
+        }
+        Ok((mean, var))
     }
 }

@@ -47,7 +47,8 @@ fn engine_config(a: &Args) -> Result<(EngineConfig, String)> {
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["verbose", "help", "no-pipeline", "refit-demo"])?;
+    let args = Args::parse(argv, &["verbose", "help", "no-pipeline", "refit-demo",
+                                   "stream"])?;
 
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     // per-subcommand argument validation: an option or flag that only
@@ -126,6 +127,10 @@ fn main() -> Result<()> {
             let problem = SparseGpRegression::problem(&x, &ds.y, m, &aot, seed);
             let engine = Engine::new(problem, cfg)?;
             let (r, pred_mean, pred_var) = if args.flag("refit-demo") {
+                if args.flag("stream") {
+                    bail!("--refit-demo and --stream are mutually exclusive \
+                           (the refit demo serves sequentially)");
+                }
                 // serve, hot-swap the posterior at the fitted parameters
                 // (a full distributed STATS round + swap broadcast, the
                 // session stays open), serve again: the swap must change
@@ -138,6 +143,19 @@ fn main() -> Result<()> {
                 println!("hot-swap at fitted params: max |Δ| vs pre-swap = {dmax:.1e} \
                           (must be 0e0)");
                 (r, m2, v2)
+            } else if args.flag("stream") {
+                // streamed serving: --batch rows per stream batch, split
+                // across the ranks at a granularity that keeps every
+                // rank busy within each batch
+                if batch == 0 {
+                    bail!("--batch must be positive");
+                }
+                let ranks = engine.cfg.workers.max(1);
+                let rpc = ((batch + ranks - 1) / ranks).max(1);
+                let out = engine.train_then_predict_stream(&xstar, rpc, batch)?;
+                println!("streamed {} batch(es) of ≤{batch} rows (shard chunk {rpc})",
+                         (nt + batch - 1) / batch);
+                out
             } else {
                 engine.train_then_predict(&xstar, batch)?
             };
@@ -193,6 +211,7 @@ fn main() -> Result<()> {
             println!("         --iters --evals --seed --artifacts --aot-config --verbose");
             println!("         --nt --batch (predict: test rows, serving batch granularity)");
             println!("         --refit-demo (predict: hot-swap the posterior mid-session)");
+            println!("         --stream (predict: pipeline --batch-row serving batches)");
             println!("         --no-pipeline (synchronous evaluation cycle)");
             println!("(options are validated per subcommand; see each command's scope)");
             if cmd != "help" {

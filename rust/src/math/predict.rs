@@ -24,6 +24,26 @@ use crate::linalg::{Chol, Mat};
 use crate::math::stats::Stats;
 use anyhow::{Context, Result};
 
+/// Sanity cap on any single wire-header dimension (Q, M, D). Far above
+/// any model this system can hold in memory, far below anything whose
+/// products could lose integer precision in f64 (2^24 squared is 2^48 <
+/// 2^53) — a header outside it is wire corruption, not a big model.
+const MAX_WIRE_DIM: f64 = 16_777_216.0; // 2^24
+
+/// Parse one wire-header dimension. The header travels as f64, and a
+/// corrupt swap wire can carry literally any bit pattern here — `as
+/// usize` on a NaN or negative saturates to 0 and on 1e300 to
+/// `usize::MAX`, either of which would drive the downstream slice
+/// arithmetic out of bounds and panic the worker thread (tearing down
+/// the whole cluster). So: finite, integral, in `[0, MAX_WIRE_DIM]`, or
+/// a clean `Err` the poison path already knows how to absorb.
+fn header_dim(v: f64, name: &str) -> Result<usize> {
+    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 || v > MAX_WIRE_DIM {
+        anyhow::bail!("posterior wire header: {name} = {v} is not a valid dimension");
+    }
+    Ok(v as usize)
+}
+
 /// Floor applied to every predictive variance. The exact expression
 /// `k** − k*uᵀ(K_uu⁻¹ − A⁻¹)k*u + β⁻¹` is positive in exact arithmetic,
 /// but cancellation between the two quadratic-form terms can drive it a
@@ -147,6 +167,22 @@ impl PosteriorCore {
         5 + q + m * q + m * d + m * m
     }
 
+    /// [`wire_len`](PosteriorCore::wire_len) with overflow-checked
+    /// arithmetic, for header values that are not yet trusted: `None`
+    /// when any product or sum would wrap (which, in a release build,
+    /// would otherwise alias a huge header onto a small wire length and
+    /// send the unpack slices out of bounds).
+    pub fn checked_wire_len(q: usize, m: usize, d: usize) -> Option<usize> {
+        let mq = m.checked_mul(q)?;
+        let md = m.checked_mul(d)?;
+        let mm = m.checked_mul(m)?;
+        5usize
+            .checked_add(q)?
+            .checked_add(mq)?
+            .checked_add(md)?
+            .checked_add(mm)
+    }
+
     /// Append the wire form to `out`. Hyperparameters travel as raw
     /// values (not logs) so the unpacked kernel is bit-identical to the
     /// packed one — `exp(ln(x))` round-trips are not exact in f64.
@@ -160,12 +196,23 @@ impl PosteriorCore {
     }
 
     /// Parse a wire vector produced by [`PosteriorCore::pack_into`].
+    ///
+    /// The `(Q, M, D)` header is validated before any length arithmetic:
+    /// a corrupt wire (NaN, negative, fractional or absurdly large
+    /// header values) is an `Err` — which the serving poison path
+    /// already handles — never an out-of-bounds slice panic on the
+    /// worker thread.
     pub fn unpack(v: &[f64]) -> Result<PosteriorCore> {
         if v.len() < 5 {
             anyhow::bail!("posterior wire too short ({} elements)", v.len());
         }
-        let (q, m, d) = (v[0] as usize, v[1] as usize, v[2] as usize);
-        let want = Self::wire_len(q, m, d);
+        let q = header_dim(v[0], "Q")?;
+        let m = header_dim(v[1], "M")?;
+        let d = header_dim(v[2], "D")?;
+        let want = Self::checked_wire_len(q, m, d).ok_or_else(|| {
+            anyhow::anyhow!("posterior wire header (Q={q}, M={m}, D={d}) \
+                             overflows the wire length")
+        })?;
         if v.len() != want {
             anyhow::bail!("posterior wire length {} != {want} for (Q={q}, M={m}, D={d})",
                           v.len());
@@ -260,6 +307,56 @@ mod tests {
         core.pack_into(&mut wire);
         wire.pop();
         assert!(PosteriorCore::unpack(&wire).is_err());
+    }
+
+    /// Regression: the `(Q, M, D)` header floats come straight off a
+    /// collective wire and used to be trusted — `as usize` on a NaN or
+    /// negative saturates to 0, on 1e300 to `usize::MAX`, and the
+    /// follow-on length arithmetic could wrap in release builds, driving
+    /// the unpack slices out of bounds (a worker-thread panic tears the
+    /// whole cluster down). Every corrupt header shape must be a clean
+    /// `Err` instead.
+    #[test]
+    fn corrupt_headers_are_errors_not_panics() {
+        let core = toy_core(11, 10, 3, 2, 1);
+        let mut wire = Vec::new();
+        core.pack_into(&mut wire);
+
+        for (slot, bad) in [
+            (0usize, f64::NAN),       // Q = NaN ("as usize" would give 0)
+            (1, -3.0),                // M negative (would give 0)
+            (2, 1e300),               // D huge (would give usize::MAX)
+            (0, f64::INFINITY),       // Q infinite
+            (1, 2.5),                 // M fractional (silent truncation)
+            (2, 1e308),               // D huge again, different slot
+        ] {
+            let mut v = wire.clone();
+            v[slot] = bad;
+            let err = PosteriorCore::unpack(&v)
+                .expect_err(&format!("header slot {slot} = {bad} must be rejected"));
+            assert!(format!("{err:#}").contains("posterior wire header"),
+                    "unhelpful error for slot {slot} = {bad}: {err:#}");
+        }
+
+        // in-bounds but mutually inconsistent header: the checked length
+        // simply fails the exact-length comparison
+        let mut v = wire.clone();
+        v[1] = 1000.0; // M claims 1000 on a tiny wire
+        assert!(PosteriorCore::unpack(&v).is_err());
+
+        // the bound itself: one past MAX_WIRE_DIM is rejected up front
+        let mut v = wire;
+        v[0] = MAX_WIRE_DIM + 1.0;
+        assert!(PosteriorCore::unpack(&v).is_err());
+    }
+
+    #[test]
+    fn checked_wire_len_matches_trusted_and_catches_overflow() {
+        assert_eq!(PosteriorCore::checked_wire_len(2, 7, 3),
+                   Some(PosteriorCore::wire_len(2, 7, 3)));
+        assert_eq!(PosteriorCore::checked_wire_len(0, 0, 0), Some(5));
+        // usize::MAX² wraps; the checked path reports it instead
+        assert_eq!(PosteriorCore::checked_wire_len(1, usize::MAX, 1), None);
     }
 
     #[test]

@@ -1,25 +1,34 @@
 //! Sharded-serving equivalence + posterior correctness.
 //!
-//! Five layers of guarantees:
+//! Seven layers of guarantees:
 //! 1. the single-node `Posterior` agrees with the dense O(N³) GP oracle
 //!    when the inducing set is the full training set (where the
 //!    variational sparse posterior is exact);
 //! 2. `DistributedPosterior` reproduces the single-node `Posterior`
 //!    **bit for bit** for every cluster size 1–9 and both CPU backends
 //!    (prediction rows are independent, so sharding reorders nothing);
-//! 3. the distributed **stats-only pass** (the STATS verb) reproduces
+//! 3. **streamed** serving (`predict_stream`: batch k+1 issued before
+//!    batch k's gather) is bit-identical to the sequential path for
+//!    every cluster size 1–9 and both CPU backends, including ragged,
+//!    tiny and empty batches, a mid-stream hot-swap, and a fail-flagged
+//!    batch inside the stream;
+//! 4. the distributed **stats-only pass** (the STATS verb) reproduces
 //!    the serial chunked construction `sgpr_stats_fwd_chunked` bit for
 //!    bit for every cluster size 1–9 and both CPU backends — each chunk
 //!    owns a slot of the reduction wire, so the tree reduction only
 //!    adds exact zeros and the leader's chunk-order fold is
 //!    rank-count-invariant;
-//! 4. the training→serving hand-off (`Engine::train_then_predict`)
-//!    serves exactly the posterior implied by the fitted parameters,
-//!    with no leader-side full-data recompute;
-//! 5. a **posterior hot-swap** mid-session (`refit_and_swap`) produces
+//! 5. the training→serving hand-off (`Engine::train_then_predict`)
+//!    serves the posterior implied by the fitted parameters with no
+//!    leader-side full-data recompute — and when the final accepted
+//!    evaluation's captured statistics match, with **zero extra
+//!    collective rounds** (asserted via the cluster message counters);
+//! 6. a **posterior hot-swap** mid-session (`refit_and_swap`) produces
 //!    predictions bit-identical to a fresh session opened directly at
 //!    the new parameters, and the serving protocol survives a
-//!    malformed shard wire as a clean error.
+//!    malformed shard wire as a clean error;
+//! 7. streamed and sequential `Engine`-level serving agree bit for bit
+//!    (`train_then_predict_stream` vs `train_then_predict`).
 
 use gpparallel::collectives::Cluster;
 use gpparallel::baselines::DenseGp;
@@ -146,52 +155,72 @@ fn distributed_matches_single_node_ranks_1_to_9() {
 }
 
 /// Training → serving hand-off on one cluster: `train_then_predict`
-/// must serve exactly the posterior implied by the fitted parameters
+/// must serve the posterior implied by the fitted parameters
 /// (cross-checked against a freshly built single-node posterior), for a
-/// worker count with ragged chunk assignment. The serving posterior is
-/// now built by the distributed stats-only pass, whose summation
-/// discipline is the serial **chunked** construction at the engine's
-/// chunk size — so that is the single-node reference to rebuild with.
+/// worker count with ragged chunk assignment.
+///
+/// Reference discipline: when the final accepted evaluation's captured
+/// statistics match the fitted parameters, the serving posterior is
+/// built from the *training* reduction (rank partials summed over the
+/// tree); otherwise from the slot-wire STATS round (global chunk-order
+/// fold). The two differ only in float summation order, so the serial
+/// chunked single-node reference matches to reduction-order tolerance
+/// at several ranks — and **bit for bit** on a single-rank engine,
+/// where both folds are the serial chunk-order sum.
 #[test]
 fn train_then_predict_matches_single_node_posterior() {
     let spec = SyntheticSpec { n: 96, q: 1, d: 2, ..Default::default() };
     let ds = generate_supervised(&spec, 5);
     let x = ds.x.clone().unwrap();
-    let cfg = EngineConfig {
-        workers: 3,
-        chunk: 16,
-        backend: BackendKind::RustCpu,
-        artifacts_dir: "artifacts".into(),
-        opt: OptChoice::Lbfgs(Lbfgs { max_iters: 5, ..Default::default() }),
-        pipeline: true,
-        verbose: false,
-    };
-    let problem = SparseGpRegression::problem(&x, &ds.y, 8, "test", 5);
-    let engine = Engine::new(problem, cfg).unwrap();
-
     let mut rng = Rng64::new(6);
     let xstar = Mat::from_fn(29, 1, |_, _| rng.normal());
-    let (result, mean, var) = engine.train_then_predict(&xstar, 8).unwrap();
-    assert!(result.f.is_finite());
-    assert_eq!(mean.rows(), 29);
-    assert_eq!(var.len(), 29);
-
-    // rebuild the posterior single-node from the same fitted parameters
-    // and the same chunk-ordered statistics discipline
-    let fitted = &result.fitted;
     let w = vec![1.0; x.rows()];
-    let st = sgpr_stats_fwd_chunked(&fitted.kerns[0], &x, &w, &ds.y, &fitted.zs[0], 16);
-    let single = Posterior::new(fitted.kerns[0].clone(), fitted.zs[0].clone(),
-                                fitted.betas[0], &st).unwrap();
-    let (em, ev) = single.predict(&xstar);
-    assert!(mean.max_abs_diff(&em) == 0.0, "served mean differs from single-node");
-    assert_eq!(var, ev, "served variance differs from single-node");
 
-    // and the chunked construction matches the old monolithic one to
-    // rounding error (sanity that the discipline change is benign)
-    let st_full = sgpr_stats_fwd(&fitted.kerns[0], &x, &w, &ds.y, &fitted.zs[0]);
-    assert!(st.p.max_abs_diff(&st_full.p) < 1e-10);
-    assert!(st.psi2.max_abs_diff(&st_full.psi2) < 1e-10);
+    for workers in [1usize, 3] {
+        let cfg = EngineConfig {
+            workers,
+            chunk: 16,
+            backend: BackendKind::RustCpu,
+            artifacts_dir: "artifacts".into(),
+            opt: OptChoice::Lbfgs(Lbfgs { max_iters: 5, ..Default::default() }),
+            pipeline: true,
+            verbose: false,
+        };
+        let problem = SparseGpRegression::problem(&x, &ds.y, 8, "test", 5);
+        let engine = Engine::new(problem, cfg).unwrap();
+
+        let (result, mean, var) = engine.train_then_predict(&xstar, 8).unwrap();
+        assert!(result.f.is_finite());
+        assert_eq!(mean.rows(), 29);
+        assert_eq!(var.len(), 29);
+
+        // rebuild the posterior single-node from the same fitted
+        // parameters and the chunk-ordered statistics discipline
+        let fitted = &result.fitted;
+        let st = sgpr_stats_fwd_chunked(&fitted.kerns[0], &x, &w, &ds.y,
+                                        &fitted.zs[0], 16);
+        let single = Posterior::new(fitted.kerns[0].clone(), fitted.zs[0].clone(),
+                                    fitted.betas[0], &st).unwrap();
+        let (em, ev) = single.predict(&xstar);
+        if workers == 1 {
+            assert!(mean.max_abs_diff(&em) == 0.0,
+                    "1-rank served mean differs from single-node");
+            assert_eq!(var, ev, "1-rank served variance differs from single-node");
+        } else {
+            assert!(mean.max_abs_diff(&em) < 1e-8,
+                    "served mean beyond reduction-order tolerance: {}",
+                    mean.max_abs_diff(&em));
+            for (a, b) in var.iter().zip(&ev) {
+                assert!((a - b).abs() < 1e-8, "served var: {a} vs {b}");
+            }
+        }
+
+        // and the chunked construction matches the old monolithic one to
+        // rounding error (sanity that the discipline change is benign)
+        let st_full = sgpr_stats_fwd(&fitted.kerns[0], &x, &w, &ds.y, &fitted.zs[0]);
+        assert!(st.p.max_abs_diff(&st_full.p) < 1e-10);
+        assert!(st.psi2.max_abs_diff(&st_full.psi2) < 1e-10);
+    }
 }
 
 fn eval_cfg(workers: usize, chunk: usize, backend: BackendKind) -> EngineConfig {
@@ -420,6 +449,331 @@ fn stats_pass_refuses_variational_problems() {
     });
     let msg = results[0].as_ref().expect("leader");
     assert!(msg.contains("supervised"), "unhelpful error: {msg}");
+}
+
+/// Tentpole acceptance: **streamed** serving ≡ sequential serving, bit
+/// for bit, for every cluster size 1–9 on both CPU backends — with
+/// ragged batches, an empty batch, and a batch smaller than the rank
+/// count inside the stream, plus a sequential batch through the same
+/// session afterwards (the stream leaves the session in lockstep).
+#[test]
+fn streamed_serving_matches_sequential_ranks_1_to_9() {
+    let core = toy_core(19, 60, 10, 2, 3);
+    let single = Posterior::from_core(core.clone());
+    let mut rng = Rng64::new(20);
+    let batches: Vec<Mat> = [23usize, 0, 3, 23, 1]
+        .iter()
+        .map(|&nt| Mat::from_fn(nt, 2, |_, _| rng.normal()))
+        .collect();
+    let expect: Vec<(Mat, Vec<f64>)> =
+        batches.iter().map(|b| single.predict(b)).collect();
+
+    for kind in [BackendKind::RustCpu, BackendKind::ParallelCpu { threads: 3 }] {
+        for size in 1..=9usize {
+            let (core_ref, bs) = (&core, &batches);
+            let results = Cluster::run(size, move |mut comm| {
+                let mut backend = backend_for(kind);
+                if comm.rank() == 0 {
+                    let mut dp = DistributedPosterior::leader(core_ref.clone(), 4,
+                                                              &mut comm);
+                    let streamed = dp
+                        .predict_stream(&mut comm, backend.as_mut(), bs)
+                        .unwrap();
+                    let tail = dp.predict(&mut comm, backend.as_mut(), &bs[0]).unwrap();
+                    dp.finish(&mut comm);
+                    Some((streamed, tail))
+                } else {
+                    worker_serve(&mut comm, backend.as_mut()).unwrap();
+                    None
+                }
+            });
+            let (streamed, tail) = results[0].as_ref().expect("leader output");
+            for (i, ((gm, gv), (em, ev))) in streamed.iter().zip(&expect).enumerate() {
+                assert_eq!(gm.rows(), em.rows(), "{kind:?} size {size} batch {i}");
+                if em.rows() > 0 {
+                    assert!(gm.max_abs_diff(em) == 0.0,
+                            "{kind:?} size {size} batch {i}: streamed mean differs");
+                }
+                assert_eq!(gv, ev, "{kind:?} size {size} batch {i}: streamed var differs");
+            }
+            assert!(tail.0.max_abs_diff(&expect[0].0) == 0.0,
+                    "{kind:?} size {size}: post-stream sequential batch differs");
+            assert_eq!(tail.1, expect[0].1, "{kind:?} size {size}: post-stream var");
+        }
+    }
+}
+
+/// A hot-swap broadcast landing *between* two streamed batch
+/// announcements must apply after the earlier batch and before the
+/// later one — broadcast order — even though the worker prefetches it
+/// before computing the earlier batch. The leader half is hand-rolled
+/// so the exact interleaving can be pinned (sub-command 1.0 = PREDICT
+/// with trailing stream flag, 2.0 = SWAP, tag 300 = the X* shard
+/// channel).
+#[test]
+fn mid_stream_hot_swap_applies_from_the_next_batch() {
+    let core_a = toy_core(61, 50, 8, 2, 3);
+    let core_b = toy_core(62, 50, 8, 2, 3);
+    let single_a = Posterior::from_core(core_a.clone());
+    let single_b = Posterior::from_core(core_b.clone());
+    let mut rng = Rng64::new(63);
+    let xstar = Mat::from_fn(8, 2, |_, _| rng.normal());
+    let (ma, va) = single_a.predict(&xstar);
+    let (mb, vb) = single_b.predict(&xstar);
+    assert!(ma.max_abs_diff(&mb) > 0.0, "cores must differ for the test to bite");
+
+    let (ca, cb, xs) = (&core_a, &core_b, &xstar);
+    let results = Cluster::run(2, move |mut comm| {
+        if comm.rank() == 0 {
+            // session open (granularity 4): rank 1 owns rows 4..8 of an
+            // 8-row batch
+            let _dp = DistributedPosterior::leader(ca.clone(), 4, &mut comm);
+            // batch 0, stream flag set: the next announcement is in flight
+            comm.bcast(0, vec![1.0, 8.0, 1.0]);
+            comm.send(1, 300, &xs.as_slice()[4 * 2..8 * 2]);
+            // the swap lands between the two streamed announcements
+            let mut swap = vec![2.0];
+            cb.pack_into(&mut swap);
+            comm.bcast(0, swap);
+            let g0 = comm.gather(0, &[0.0]).expect("root")[1].clone();
+            // batch 1, the stream's tail
+            comm.bcast(0, vec![1.0, 8.0, 0.0]);
+            comm.send(1, 300, &xs.as_slice()[4 * 2..8 * 2]);
+            let g1 = comm.gather(0, &[0.0]).expect("root")[1].clone();
+            comm.bcast(0, vec![0.0]);
+            Some((g0, g1))
+        } else {
+            let mut backend = RustCpuBackend;
+            worker_serve(&mut comm, &mut backend).unwrap();
+            None
+        }
+    });
+    let (g0, g1) = results[0].as_ref().expect("leader");
+    // worker payload: mean rows 4..8 (row-major, D = 3) ++ var ++ [flag]
+    let expect = |m: &Mat, v: &[f64]| {
+        let mut e = m.as_slice()[4 * 3..8 * 3].to_vec();
+        e.extend_from_slice(&v[4..8]);
+        e.push(0.0);
+        e
+    };
+    assert_eq!(g0, &expect(&ma, &va),
+               "batch announced before the swap must serve the old core");
+    assert_eq!(g1, &expect(&mb, &vb),
+               "batch announced after the swap must serve the new core");
+}
+
+/// A malformed shard wire on a *streamed* batch fail-flags that batch
+/// only: the prefetched next batch still serves exactly, every gather
+/// stays in lockstep, and the worker reports the short wire at close.
+#[test]
+fn fail_flagged_batch_inside_a_stream_keeps_lockstep() {
+    let core = toy_core(65, 50, 8, 2, 3);
+    let single = Posterior::from_core(core.clone());
+    let mut rng = Rng64::new(66);
+    let xstar = Mat::from_fn(8, 2, |_, _| rng.normal());
+    let (em, ev) = single.predict(&xstar);
+
+    let (core_ref, xs) = (&core, &xstar);
+    let results = Cluster::run(2, move |mut comm| {
+        if comm.rank() == 0 {
+            let _dp = DistributedPosterior::leader(core_ref.clone(), 4, &mut comm);
+            // batch 0 (streamed): rank 1 expects 4 rows × Q 2 = 8 wire
+            // elements; ship 3 instead
+            comm.bcast(0, vec![1.0, 8.0, 1.0]);
+            comm.send(1, 300, &[0.5; 3]);
+            // batch 1 issued before batch 0's gather — true stream order
+            comm.bcast(0, vec![1.0, 8.0, 0.0]);
+            comm.send(1, 300, &xs.as_slice()[4 * 2..8 * 2]);
+            let g0 = comm.gather(0, &[0.0]).expect("root")[1].clone();
+            let g1 = comm.gather(0, &[0.0]).expect("root")[1].clone();
+            comm.bcast(0, vec![0.0]);
+            Some((g0, g1))
+        } else {
+            let mut backend = RustCpuBackend;
+            let err = worker_serve(&mut comm, &mut backend)
+                .expect_err("short shard wire must be reported");
+            assert!(format!("{err:#}").contains("shard wire length"),
+                    "unhelpful error: {err:#}");
+            None
+        }
+    });
+    let (g0, g1) = results[0].as_ref().expect("leader");
+    assert_eq!(g0, &vec![1.0], "bad batch must come back fail-flagged");
+    let mut want = em.as_slice()[4 * 3..8 * 3].to_vec();
+    want.extend_from_slice(&ev[4..8]);
+    want.push(0.0);
+    assert_eq!(g1, &want, "the batch after the failure must serve exactly");
+}
+
+/// Free end-of-run stats: after a successful evaluation at `x`, the
+/// posterior rebuild at the same `x` must cost **zero messages** (the
+/// evaluation's captured statistics are reused), while a rebuild at
+/// different parameters pays exactly one STATS round (verb + parameter
+/// broadcast + reduction = 3·(P−1) tree messages) and keeps the
+/// slot-wire bit-exactness guarantee. On one rank the captured fold
+/// *is* the serial chunk-order sum, so the capture-hit core is
+/// bit-identical to the chunked single-node reference; across ranks it
+/// agrees to float reduction order.
+#[test]
+fn final_eval_capture_makes_the_stats_round_free() {
+    let spec = SyntheticSpec { n: 40, q: 1, d: 2, ..Default::default() };
+    let ds = generate_supervised(&spec, 31);
+    let x = ds.x.clone().unwrap();
+    let chunk = 8;
+    let problem = SparseGpRegression::problem(&x, &ds.y, 5, "test", 31);
+    let x0 = problem.initial_params();
+    let mut x1 = x0.clone();
+    x1[0] += 0.25; // log σ² of view 0
+
+    // single-node chunked references at x0 and x1, through the same
+    // log-hyp round-trip the broadcast parameters take
+    let w = vec![1.0; x.rows()];
+    let z0 = problem.views[0].z0.clone();
+    let kern0 = RbfArd::from_log_hyp(&x0[0..2]);
+    let st0 = sgpr_stats_fwd_chunked(&kern0, &x, &w, &ds.y, &z0, chunk);
+    let single0 = Posterior::new(kern0, z0.clone(), x0[2].exp(), &st0).unwrap();
+    let kern1 = RbfArd::from_log_hyp(&x1[0..2]);
+    let st1 = sgpr_stats_fwd_chunked(&kern1, &x, &w, &ds.y, &z0, chunk);
+    let single1 = Posterior::new(kern1, z0.clone(), x1[2].exp(), &st1).unwrap();
+
+    let mut rng = Rng64::new(33);
+    let xstar = Mat::from_fn(9, 1, |_, _| rng.normal());
+    let (e0m, e0v) = single0.predict(&xstar);
+    let (e1m, e1v) = single1.predict(&xstar);
+
+    for size in [1usize, 3] {
+        let part = Partition::new(problem.n(), chunk, size);
+        let cfg = eval_cfg(size, chunk, BackendKind::RustCpu);
+        let (p, x0_r, x1_r) = (&problem, &x0, &x1);
+        let results = Cluster::run(size, |comm| {
+            let mut ev = DistributedEvaluator::new(p, &cfg, &part, comm).unwrap();
+            if ev.rank() == 0 {
+                ev.eval(x0_r).unwrap();
+                let before = ev.messages_sent();
+                let hit = ev.posterior_core_at(x0_r).unwrap();
+                let after_hit = ev.messages_sent();
+                let miss = ev.posterior_core_at(x1_r).unwrap();
+                let after_miss = ev.messages_sent();
+                ev.finish();
+                Some((hit, miss, before, after_hit, after_miss))
+            } else {
+                ev.serve().unwrap();
+                None
+            }
+        });
+        let (hit, miss, before, after_hit, after_miss) =
+            results.into_iter().next().unwrap().expect("leader output");
+        assert_eq!(after_hit, before,
+                   "size {size}: a capture hit must run zero collective rounds");
+        assert_eq!(after_miss - after_hit, 3 * (size as u64 - 1),
+                   "size {size}: a capture miss must pay exactly one STATS round");
+
+        let (hm, hv) = Posterior::from_core(hit).predict(&xstar);
+        if size == 1 {
+            assert!(hm.max_abs_diff(&e0m) == 0.0,
+                    "size 1: captured fold must equal the serial chunk-order sum");
+            assert_eq!(hv, e0v);
+        } else {
+            assert!(hm.max_abs_diff(&e0m) < 1e-8,
+                    "size {size}: capture-hit core beyond reduction-order tolerance \
+                     ({})", hm.max_abs_diff(&e0m));
+            for (a, b) in hv.iter().zip(&e0v) {
+                assert!((a - b).abs() < 1e-8, "size {size}: var {a} vs {b}");
+            }
+        }
+        // the miss path keeps the slot-wire bit-exactness guarantee
+        let (mm, mv) = Posterior::from_core(miss).predict(&xstar);
+        assert!(mm.max_abs_diff(&e1m) == 0.0,
+                "size {size}: a fresh STATS round must stay bit-identical to chunked");
+        assert_eq!(mv, e1v);
+    }
+}
+
+/// `train_then_predict` must not pay any STATS round when the final
+/// accepted evaluation's capture hits: the message delta between a
+/// train-only run and a train-then-serve run is exactly the serving
+/// session's own traffic. `max_iters = 0` makes the hit a certainty
+/// (one evaluation, at exactly the returned parameter vector) instead
+/// of an optimiser-dependent likelihood.
+#[test]
+fn train_then_predict_skips_the_stats_round_when_capture_hits() {
+    let spec = SyntheticSpec { n: 84, q: 1, d: 2, ..Default::default() };
+    let ds = generate_supervised(&spec, 41);
+    let x = ds.x.clone().unwrap();
+    let workers = 3usize;
+    let cfg = EngineConfig {
+        workers,
+        chunk: 16,
+        backend: BackendKind::RustCpu,
+        artifacts_dir: "artifacts".into(),
+        opt: OptChoice::Lbfgs(Lbfgs { max_iters: 0, ..Default::default() }),
+        pipeline: true,
+        verbose: false,
+    };
+    let mk = || SparseGpRegression::problem(&x, &ds.y, 6, "test", 41);
+    let train_only = Engine::new(mk(), cfg.clone()).unwrap().train().unwrap();
+
+    let mut rng = Rng64::new(42);
+    let nt = 21usize;
+    let rpc = 4usize;
+    let xstar = Mat::from_fn(nt, 1, |_, _| rng.normal());
+    let (served, mean, var) = Engine::new(mk(), cfg)
+        .unwrap()
+        .train_then_predict(&xstar, rpc)
+        .unwrap();
+    assert_eq!(mean.rows(), nt);
+    assert_eq!(var.len(), nt);
+
+    // Expected serving-only traffic (a tree bcast or a gather each move
+    // P−1 messages): SERVE verb + posterior broadcast + batch
+    // announcement + shard sends + gather + DONE. A STATS round would
+    // add 3·(P−1) on top — the capture must make it zero.
+    let p = Partition::new(nt, rpc, workers);
+    let shard_sends =
+        (1..workers).filter(|&r| p.worker_span(r).is_some()).count() as u64;
+    let serve_only = 5 * (workers as u64 - 1) + shard_sends;
+    assert_eq!(served.messages_sent - train_only.messages_sent, serve_only,
+               "train_then_predict paid collective rounds beyond the serving \
+                session — the final-eval stats capture did not hit");
+}
+
+/// `Engine`-level stream ≡ sequential: `train_then_predict_stream`
+/// (the batch split + streamed protocol + reassembly) must reproduce
+/// `train_then_predict` bit for bit — training is deterministic, the
+/// serving posterior is the same, and streaming reorders only the
+/// protocol.
+#[test]
+fn train_then_predict_stream_matches_sequential_serving() {
+    let spec = SyntheticSpec { n: 72, q: 1, d: 2, ..Default::default() };
+    let ds = generate_supervised(&spec, 51);
+    let x = ds.x.clone().unwrap();
+    let cfg = EngineConfig {
+        workers: 3,
+        chunk: 16,
+        backend: BackendKind::RustCpu,
+        artifacts_dir: "artifacts".into(),
+        opt: OptChoice::Lbfgs(Lbfgs { max_iters: 3, ..Default::default() }),
+        pipeline: true,
+        verbose: false,
+    };
+    let mk = || SparseGpRegression::problem(&x, &ds.y, 6, "test", 51);
+    let mut rng = Rng64::new(52);
+    let xstar = Mat::from_fn(31, 1, |_, _| rng.normal());
+
+    let (r_seq, m_seq, v_seq) = Engine::new(mk(), cfg.clone())
+        .unwrap()
+        .train_then_predict(&xstar, 4)
+        .unwrap();
+    // 8-row stream batches: 31 rows → three full batches + a ragged tail
+    let (r_str, m_str, v_str) = Engine::new(mk(), cfg)
+        .unwrap()
+        .train_then_predict_stream(&xstar, 4, 8)
+        .unwrap();
+
+    assert_eq!(r_seq.f, r_str.f, "training must be identical across the two runs");
+    assert!(m_seq.max_abs_diff(&m_str) == 0.0,
+            "streamed serving mean differs from sequential");
+    assert_eq!(v_seq, v_str, "streamed serving variance differs from sequential");
 }
 
 /// A variational problem must refuse the serving hand-off with a clear

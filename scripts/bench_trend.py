@@ -6,8 +6,9 @@ Schema: a JSON array of records, each
     {"op": <non-empty str>, "size": <number > 0>, "ns_per_iter": <finite number > 0>}
 
 Op names are additionally matched against the known op families below
-(e.g. `stats_pass_w{W}`, `hot_swap`, `serve_predict_w{W}`,
-`cycle_eval_{sync|pipelined}_w{W}_v{V}`). An op outside every family is
+(e.g. `stats_pass_w{W}`, `hot_swap`, `free_stats`, `serve_predict_w{W}`,
+`serve_stream_w{W}`, `cycle_eval_{sync|pipelined}_w{W}_v{V}`). An op
+outside every family is
 a **warning**, not an error — the gate stays non-blocking for new bench
 keys — unless `--strict-ops` is passed.
 
@@ -42,10 +43,16 @@ KNOWN_OP_FAMILIES = [
     r"syrk",
     r"cycle_eval_(sync|pipelined)_w\d+_v\d+",
     r"serve_predict_w\d+",
+    # streamed serving: same batches through predict_stream (batch k+1
+    # issued before batch k's gather) — compare against serve_predict_w{W}
+    r"serve_stream_w\d+",
     # the stats-only pass (distributed posterior rebuild) per worker
     # count, and the end-to-end refit-and-swap round
     r"stats_pass_w\d+",
     r"hot_swap",
+    # posterior rebuild from the captured final-eval statistics (zero
+    # collective rounds; only the leader's M×M factorisations remain)
+    r"free_stats",
 ]
 _KNOWN_OPS = re.compile("^(?:" + "|".join(KNOWN_OP_FAMILIES) + ")$")
 
