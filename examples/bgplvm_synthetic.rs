@@ -44,6 +44,7 @@ fn main() -> Result<()> {
         opt: OptChoice::Lbfgs(Lbfgs { max_iters: iters, ..Default::default() }),
         pipeline: true,
         verbose: false,
+        simd: None,
     };
     let t0 = std::time::Instant::now();
     let model = BayesianGplvm::fit(&ds.y, 1, 100, "paper", cfg, seed)?;

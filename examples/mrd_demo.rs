@@ -49,6 +49,7 @@ fn main() -> Result<()> {
         opt: OptChoice::Lbfgs(Lbfgs { max_iters: iters, ..Default::default() }),
         pipeline: true,
         verbose: false,
+        simd: None,
     };
     let model = Mrd::fit(&[y1, y2], 3, 20, &["mrd", "mrd"], cfg, 7)?;
     let r = &model.result;

@@ -38,6 +38,7 @@ fn main() -> Result<()> {
         opt: OptChoice::Lbfgs(Lbfgs { max_iters: 80, ..Default::default() }),
         pipeline: true,
         verbose: false,
+        simd: None,
     };
     let model = SparseGpRegression::fit(&train.x.clone().unwrap(), &train.y, 16,
                                         "quickstart", cfg, 42)?;

@@ -63,6 +63,7 @@ fn main() -> Result<()> {
                 opt: OptChoice::Lbfgs(Lbfgs::default()),
                 pipeline: true,
                 verbose: false,
+                simd: None,
             };
             let engine = Engine::new(problem, cfg)?;
             let r = engine.time_iterations(evals)?;
@@ -92,6 +93,7 @@ fn main() -> Result<()> {
         opt: OptChoice::Lbfgs(Lbfgs { max_iters: 15, ..Default::default() }),
         pipeline: true,
         verbose: false,
+        simd: None,
     };
     let model = SparseGpRegression::fit(&x, &ds.y, 48, "paper", fit_cfg, 1)?;
     let core = model.posterior().core().clone();

@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
                 opt: OptChoice::Lbfgs(Lbfgs::default()),
                 pipeline: true,
                 verbose: false,
+                simd: None,
             };
             let engine = Engine::new(problem, cfg)?;
             let r = engine.time_iterations(evals)?;

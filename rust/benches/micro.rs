@@ -134,6 +134,7 @@ fn main() -> anyhow::Result<()> {
             opt: OptChoice::Lbfgs(Lbfgs::default()),
             pipeline: true,
             verbose: false,
+            simd: None,
         };
         let r = Engine::new(problem, cfg)?.time_iterations(1)?;
         println!("  chunk {:>5}: {:>8.3} s/iter", chunk_size, r.sec_per_eval);
@@ -172,6 +173,7 @@ fn main() -> anyhow::Result<()> {
             opt: OptChoice::Lbfgs(Lbfgs::default()),
             pipeline: true,
             verbose: false,
+            simd: None,
         };
         let t_sparse = Engine::new(problem, cfg)?.time_iterations(1)?.sec_per_eval;
 
@@ -203,6 +205,7 @@ fn main() -> anyhow::Result<()> {
             opt,
             pipeline: true,
             verbose: false,
+            simd: None,
         };
         let r = Engine::new(problem, cfg)?.train()?;
         println!("  {:>7}: bound {:>10.2} -> {:>10.2}  ({} evals)",
@@ -264,6 +267,7 @@ fn main() -> anyhow::Result<()> {
                     opt: OptChoice::Lbfgs(Lbfgs::default()),
                     pipeline,
                     verbose: false,
+                    simd: None,
                 };
                 let r = Engine::new(problem.clone(), cfg)?.time_iterations(cycle_evals)?;
                 times[i] = r.sec_per_eval;
@@ -404,6 +408,7 @@ fn main() -> anyhow::Result<()> {
                 opt: OptChoice::Lbfgs(Lbfgs::default()),
                 pipeline: true,
                 verbose: false,
+                simd: None,
             };
             let (p, x0_r) = (&problem, &x0);
             let results = Cluster::run(workers, move |comm| {
@@ -456,6 +461,56 @@ fn main() -> anyhow::Result<()> {
                 rec.push("free_stats", n_stats, t_free);
             }
         }
+    }
+
+    // ---------------------------------------------------------------
+    // 9. SIMD dispatch tiers: the rewired microkernels at the scalar
+    //    escape hatch vs the resolved default tier. The bench binary is
+    //    its own process, so flipping the process-global level between
+    //    timing loops is safe (no concurrent kernels).
+    // ---------------------------------------------------------------
+    {
+        use gpparallel::linalg::simd::{self, SimdLevel};
+
+        let default_level = simd::active();
+        println!("\n== SIMD dispatch: off vs {} ==", default_level.name());
+        println!("{:>8} {:>12} {:>12} {:>12} {:>12}",
+                 "tier", "matmul ms", "syrk ms", "psi1 ms", "psi2 ms");
+        let mm = if fast { 128usize } else { 256 };
+        let mut rngs = Rng64::new(21);
+        let a = Mat::from_fn(mm, mm, |_, _| rngs.normal());
+        let b = Mat::from_fn(mm, mm, |_, _| rngs.normal());
+        let (c_psi, m_psi, q_psi) = (if fast { 256usize } else { 1024 }, 100usize, 3usize);
+        let mu = Mat::from_fn(c_psi, q_psi, |_, _| rngs.normal());
+        let s = Mat::from_fn(c_psi, q_psi, |_, _| rngs.uniform_range(0.2, 1.2));
+        let z = Mat::from_fn(m_psi, q_psi, |_, _| rngs.normal());
+        let w = vec![1.0; c_psi];
+        let kern = RbfArd::iso(1.0, 0.9, q_psi);
+        let reps_mm = if fast { 4 } else { 8 };
+        let reps_psi = if fast { 2 } else { 4 };
+
+        // GPPAR_SIMD=off would make the two tiers identical; skip the
+        // duplicate rather than emit two records under the same key
+        let tiers: Vec<SimdLevel> = if default_level == SimdLevel::Off {
+            vec![SimdLevel::Off]
+        } else {
+            vec![SimdLevel::Off, default_level]
+        };
+        for level in tiers {
+            simd::set_active(level);
+            let lv = level.name();
+            let t_matmul = time_it(reps_mm, || a.matmul(&b));
+            let t_syrk = time_it(reps_mm, || a.syrk());
+            let t_psi1 = time_it(reps_psi, || kern.psi1(&mu, &s, &z));
+            let t_psi2 = time_it(reps_psi, || kern.psi2(&mu, &s, &w, &z));
+            println!("{:>8} {:>12.3} {:>12.3} {:>12.3} {:>12.3}",
+                     lv, t_matmul * 1e3, t_syrk * 1e3, t_psi1 * 1e3, t_psi2 * 1e3);
+            rec.push(&format!("simd_matmul_{lv}"), mm, t_matmul);
+            rec.push(&format!("simd_syrk_{lv}"), mm, t_syrk);
+            rec.push(&format!("simd_psi1_{lv}"), c_psi, t_psi1);
+            rec.push(&format!("simd_psi2_{lv}"), c_psi, t_psi2);
+        }
+        simd::set_active(default_level);
     }
 
     rec.write("BENCH_micro.json")?;

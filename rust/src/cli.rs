@@ -93,7 +93,7 @@ impl Args {
 /// Dataset/model/engine options shared by every engine-driving
 /// subcommand (each adds its own extras on top — see [`known_options`]).
 const ENGINE_OPTIONS: &[&str] = &["n", "q", "d", "m", "workers", "chunk", "backend",
-                                  "seed", "artifacts", "aot-config"];
+                                  "seed", "artifacts", "aot-config", "simd"];
 /// Flags shared by every engine-driving subcommand.
 const ENGINE_FLAGS: &[&str] = &["verbose", "no-pipeline", "help"];
 

@@ -101,6 +101,24 @@ impl Comm {
         }
     }
 
+    /// Drain every message already sitting in this rank's inbox into the
+    /// parked map (non-blocking; never waits). Per-(src, tag) FIFO order
+    /// is preserved, so a later [`recv`](Comm::recv) returns exactly what
+    /// it would have returned without the drain — this is a *progress*
+    /// primitive, not a semantic one. The serving leader calls it before
+    /// computing its own shard so worker gather payloads that are already
+    /// in flight get absorbed while the compute runs, instead of queueing
+    /// behind it (the in-process analog of posting MPI receives early).
+    /// Returns the number of messages parked.
+    pub fn drain_pending(&mut self) -> usize {
+        let mut n = 0;
+        while let Ok(msg) = self.inbox.try_recv() {
+            self.parked.entry((msg.src, msg.tag)).or_default().push_back(msg.data);
+            n += 1;
+        }
+        n
+    }
+
     // -----------------------------------------------------------------
     // broadcast
     // -----------------------------------------------------------------
@@ -436,6 +454,43 @@ mod tests {
             }
         });
         assert_eq!(results[0], vec![1.0, 2.0, 3.0]);
+    }
+
+    /// `drain_pending` is a progress primitive only: it moves messages
+    /// into the parked map without sending anything, and later `recv`s
+    /// see exactly the per-(src, tag) FIFO order they would have seen
+    /// without the drain — including messages that arrive *after* it.
+    #[test]
+    fn drain_pending_preserves_recv_order_and_sends_nothing() {
+        let results = Cluster::run(2, |mut comm| {
+            if comm.rank() == 0 {
+                // first wave: exactly three messages are in flight
+                let mut drained = 0;
+                while drained < 3 {
+                    drained += comm.drain_pending();
+                    std::thread::yield_now();
+                }
+                let before = comm.messages_sent();
+                assert_eq!(comm.drain_pending(), 0, "nothing else is in flight");
+                assert_eq!(comm.messages_sent(), before, "drain must not send");
+                // parked messages drain through recv in send order
+                let mut got = vec![comm.recv(1, 9)[0], comm.recv(1, 9)[0]];
+                // second wave (ack-gated, so it arrives after the drain)
+                // interleaves with the remaining parked message correctly
+                comm.send(1, 8, &[0.0]);
+                got.push(comm.recv(1, 9)[0]);
+                got.push(comm.recv(1, 9)[0]);
+                got
+            } else {
+                for v in [1.0, 2.0, 3.0] {
+                    comm.send(0, 9, &[v]);
+                }
+                let _ = comm.recv(0, 8); // wait until the drain happened
+                comm.send(0, 9, &[4.0]);
+                vec![]
+            }
+        });
+        assert_eq!(results[0], vec![1.0, 2.0, 3.0, 4.0]);
     }
 
     #[test]

@@ -454,6 +454,11 @@ impl DistributedPosterior {
         let nt = xstar.rows();
         let d = self.core.d();
         let ranks = comm.size();
+        // absorb worker payloads already in flight before the leader's
+        // own compute, so they park during it instead of queueing behind
+        // it (a drain moves messages, never sends, and preserves
+        // per-(src, tag) order — the gather below is oblivious to it)
+        comm.drain_pending();
         // leader's own shard (rank 0 always owns the first run of rows)
         let sp0 = self.partition_for(nt, ranks).worker_span(0)
             .expect("rank 0 owns chunks when nt > 0");

@@ -8,6 +8,7 @@ use super::problem::{Fitted, LatentSpec, ParamLayout, Problem};
 use crate::collectives::Cluster;
 use crate::config::BackendKind;
 use crate::coordinator::partition::Partition;
+use crate::linalg::simd::{self, SimdLevel};
 use crate::linalg::Mat;
 use crate::metrics::{Phase, PhaseTimer};
 use crate::optim::{Adam, Lbfgs, OptResult, Optimizer, Scg, StopReason};
@@ -55,6 +56,13 @@ pub struct EngineConfig {
     pub pipeline: bool,
     /// Print the leader's phase-timing summary after a run.
     pub verbose: bool,
+    /// SIMD dispatch tier for the f64 microkernels. `None` defers to the
+    /// `GPPAR_SIMD` environment variable, and failing that to
+    /// auto-detection (AVX2+FMA when the CPU has it, the portable
+    /// chunked-scalar tier otherwise). `Some(SimdLevel::Off)` is the
+    /// escape hatch: bit-identical to the pre-SIMD scalar kernels.
+    /// Applied process-wide by [`Engine::new`] before any rank spawns.
+    pub simd: Option<SimdLevel>,
 }
 
 impl Default for EngineConfig {
@@ -67,6 +75,7 @@ impl Default for EngineConfig {
             opt: OptChoice::Lbfgs(Lbfgs { max_iters: 100, ..Default::default() }),
             pipeline: true,
             verbose: false,
+            simd: None,
         }
     }
 }
@@ -162,7 +171,15 @@ pub struct Engine {
 
 impl Engine {
     /// Validate the problem and bind it to a configuration.
+    ///
+    /// An explicit [`EngineConfig::simd`] tier is applied process-wide
+    /// here, before any compute rank spawns, so every rank and backend
+    /// runs the same dispatch tier (the serial-vs-distributed
+    /// bit-identity guarantees depend on that).
     pub fn new(problem: Problem, cfg: EngineConfig) -> Result<Engine> {
+        if let Some(level) = cfg.simd {
+            simd::set_active(level);
+        }
         problem.validate()?;
         if problem.views.iter().any(|v| v.z0.rows() != problem.views[0].z0.rows()) {
             return Err(anyhow!("all views must share M (per-view M is future work)"));

@@ -7,7 +7,15 @@
 //! the jitter convention in `kuu`), so the two implementations agree to
 //! rounding error — asserted by `rust/tests/xla_vs_rust.rs`.
 
+use crate::linalg::simd::{self, SimdLevel};
 use crate::linalg::Mat;
+use std::cell::RefCell;
+
+thread_local! {
+    // Per-thread α scratch for the allocation-free serving hot path
+    // (`k_row_into` computes α once per call, not once per inducing point).
+    static ALPHA_SCRATCH: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+}
 
 /// RBF-ARD kernel hyperparameters.
 #[derive(Clone, Debug, PartialEq)]
@@ -62,19 +70,20 @@ impl RbfArd {
     // exact covariances
     // -----------------------------------------------------------------
 
-    /// Cross-covariance `K(a, b)`, `a: n×Q`, `b: m×Q` → `n×m`.
+    /// Cross-covariance `K(a, b)`, `a: n×Q`, `b: m×Q` → `n×m`. The
+    /// exponent is the fused SIMD `wsq_diff` primitive (weights α); its
+    /// `off` tier is exactly the pre-SIMD ascending-q scalar loop.
     pub fn k(&self, a: &Mat, b: &Mat) -> Mat {
+        self.k_at(simd::active(), a, b)
+    }
+
+    fn k_at(&self, level: SimdLevel, a: &Mat, b: &Mat) -> Mat {
         let alpha = self.alpha();
         let q = self.q();
         assert_eq!(a.cols(), q);
         assert_eq!(b.cols(), q);
         Mat::from_fn(a.rows(), b.rows(), |i, j| {
-            let (ra, rb) = (a.row(i), b.row(j));
-            let mut r2 = 0.0;
-            for qq in 0..q {
-                let d = ra[qq] - rb[qq];
-                r2 += alpha[qq] * d * d;
-            }
+            let r2 = simd::wsq_diff_at(level, &alpha, a.row(i), b.row(j));
             self.variance * (-0.5 * r2).exp()
         })
     }
@@ -102,30 +111,30 @@ impl RbfArd {
     }
 
     /// One row of `K(x, Z)` written into `out` (length = Z rows) without
-    /// allocating — the serving hot path's kernel evaluation. The loops
-    /// run dimension-outer so each `α_q = ℓ_q⁻²` is divided once per
-    /// call (not once per inducing point); for every output element the
-    /// `α_q d²` contributions still accumulate in ascending-q order with
-    /// the same operand values as [`RbfArd::k`], so the two agree bit
-    /// for bit.
+    /// allocating — the serving hot path's kernel evaluation. α is
+    /// computed once per call into a thread-local scratch (one division
+    /// per dimension, not per inducing point); each output element then
+    /// runs the same fused SIMD `wsq_diff` exponent as [`RbfArd::k`] at
+    /// the same dispatch level, so the two agree bit for bit at every
+    /// tier.
     pub fn k_row_into(&self, x: &[f64], z: &Mat, out: &mut [f64]) {
+        self.k_row_into_at(simd::active(), x, z, out)
+    }
+
+    fn k_row_into_at(&self, level: SimdLevel, x: &[f64], z: &Mat, out: &mut [f64]) {
         let q = self.q();
         assert_eq!(x.len(), q, "input row Q mismatch");
         assert_eq!(z.cols(), q, "Z Q mismatch");
         assert_eq!(out.len(), z.rows(), "output length");
-        out.fill(0.0); // accumulate r² in place
-        for qq in 0..q {
-            let l = self.lengthscales[qq];
-            let a = 1.0 / (l * l);
-            let xq = x[qq];
+        ALPHA_SCRATCH.with(|cell| {
+            let mut alpha = cell.borrow_mut();
+            alpha.clear();
+            alpha.extend(self.lengthscales.iter().map(|l| 1.0 / (l * l)));
             for (j, o) in out.iter_mut().enumerate() {
-                let d = xq - z[(j, qq)];
-                *o += a * d * d;
+                let r2 = simd::wsq_diff_at(level, &alpha, x, z.row(j));
+                *o = self.variance * (-0.5 * r2).exp();
             }
-        }
-        for o in out.iter_mut() {
-            *o = self.variance * (-0.5 * *o).exp();
-        }
+        });
     }
 
     // -----------------------------------------------------------------
@@ -138,11 +147,23 @@ impl RbfArd {
     }
 
     /// Ψ1 `n×m`: ⟨K_fu⟩ under q(X) = N(μ, diag S).
+    ///
+    /// At the `off` SIMD tier the exponent runs the original per-term
+    /// `α d²/(αS+1)` loop bit-for-bit; at `scalar`/`native` the
+    /// denominators are hoisted per point (`invd_q = α_q/(α_q S_q + 1)`,
+    /// one division per dimension instead of per inducing point) and the
+    /// exponent becomes the fused `wsq_diff` primitive — tight-ulp, not
+    /// bitwise, against `off`.
     pub fn psi1(&self, mu: &Mat, s: &Mat, z: &Mat) -> Mat {
+        self.psi1_at(simd::active(), mu, s, z)
+    }
+
+    fn psi1_at(&self, level: SimdLevel, mu: &Mat, s: &Mat, z: &Mat) -> Mat {
         let alpha = self.alpha();
         let q = self.q();
         let (n, m) = (mu.rows(), z.rows());
         let mut out = Mat::zeros(n, m);
+        let mut invd = vec![0.0; q];
         for i in 0..n {
             let (mr, sr) = (mu.row(i), s.row(i));
             // per-point coefficient σ² Π_q (α S + 1)^{-1/2}
@@ -150,14 +171,24 @@ impl RbfArd {
             for qq in 0..q {
                 logcoef -= 0.5 * (alpha[qq] * sr[qq] + 1.0).ln();
             }
+            if level != SimdLevel::Off {
+                for qq in 0..q {
+                    invd[qq] = alpha[qq] / (alpha[qq] * sr[qq] + 1.0);
+                }
+            }
             for j in 0..m {
                 let zr = z.row(j);
-                let mut expo = 0.0;
-                for qq in 0..q {
-                    let dnm = alpha[qq] * sr[qq] + 1.0;
-                    let diff = mr[qq] - zr[qq];
-                    expo += alpha[qq] * diff * diff / dnm;
-                }
+                let expo = if level == SimdLevel::Off {
+                    let mut expo = 0.0;
+                    for qq in 0..q {
+                        let dnm = alpha[qq] * sr[qq] + 1.0;
+                        let diff = mr[qq] - zr[qq];
+                        expo += alpha[qq] * diff * diff / dnm;
+                    }
+                    expo
+                } else {
+                    simd::wsq_diff_at(level, &invd, mr, zr)
+                };
                 out[(i, j)] = (logcoef - 0.5 * expo).exp();
             }
         }
@@ -165,14 +196,27 @@ impl RbfArd {
     }
 
     /// Ψ2 `m×m`: Σ_n w_n ⟨(K_fu)_nᵀ(K_fu)_n⟩.
+    ///
+    /// At the `off` SIMD tier the exponent runs the original interleaved
+    /// `¼α dz² + α g²/e` loop bit-for-bit; at `scalar`/`native` it splits
+    /// into two fused reductions — `wsq_diff` with weights ¼α over the
+    /// inducing pair, plus `wsq_mid_diff` with weights α/e against the
+    /// pair midpoint — hoisting the per-point divisions out of the m²
+    /// pair loop. Tight-ulp, not bitwise, against `off`.
     pub fn psi2(&self, mu: &Mat, s: &Mat, w: &[f64], z: &Mat) -> Mat {
+        self.psi2_at(simd::active(), mu, s, w, z)
+    }
+
+    fn psi2_at(&self, level: SimdLevel, mu: &Mat, s: &Mat, w: &[f64], z: &Mat) -> Mat {
         let alpha = self.alpha();
         let q = self.q();
         let (n, m) = (mu.rows(), z.rows());
         assert_eq!(w.len(), n);
         let sigma4 = self.variance * self.variance;
 
-        // precompute pair terms: dist_zz[m1,m2], zbar[m1,m2,q]
+        // ¼α is exact (power-of-two scale); α/e is refreshed per point.
+        let qa: Vec<f64> = alpha.iter().map(|a| 0.25 * a).collect();
+        let mut ae = vec![0.0; q];
         let mut out = Mat::zeros(m, m);
         for i in 0..n {
             if w[i] == 0.0 {
@@ -183,18 +227,29 @@ impl RbfArd {
             for qq in 0..q {
                 coef /= (2.0 * alpha[qq] * sr[qq] + 1.0).sqrt();
             }
+            if level != SimdLevel::Off {
+                for qq in 0..q {
+                    ae[qq] = alpha[qq] / (2.0 * alpha[qq] * sr[qq] + 1.0);
+                }
+            }
             for m1 in 0..m {
                 let z1 = z.row(m1);
                 // symmetric: fill upper triangle then mirror
                 for m2 in m1..m {
                     let z2 = z.row(m2);
-                    let mut expo = 0.0;
-                    for qq in 0..q {
-                        let e = 2.0 * alpha[qq] * sr[qq] + 1.0;
-                        let dz = z1[qq] - z2[qq];
-                        let g = mr[qq] - 0.5 * (z1[qq] + z2[qq]);
-                        expo += 0.25 * alpha[qq] * dz * dz + alpha[qq] * g * g / e;
-                    }
+                    let expo = if level == SimdLevel::Off {
+                        let mut expo = 0.0;
+                        for qq in 0..q {
+                            let e = 2.0 * alpha[qq] * sr[qq] + 1.0;
+                            let dz = z1[qq] - z2[qq];
+                            let g = mr[qq] - 0.5 * (z1[qq] + z2[qq]);
+                            expo += 0.25 * alpha[qq] * dz * dz + alpha[qq] * g * g / e;
+                        }
+                        expo
+                    } else {
+                        simd::wsq_diff_at(level, &qa, z1, z2)
+                            + simd::wsq_mid_diff_at(level, &ae, mr, z1, z2)
+                    };
                     let v = coef * (-expo).exp();
                     out[(m1, m2)] += v;
                     if m1 != m2 {
@@ -220,6 +275,12 @@ impl RbfArd {
     /// [`psi1_vjp`](RbfArd::psi1_vjp) with the forward Ψ1 supplied — the
     /// fwd→vjp cache path. `p1` must equal `psi1(mu, s, z)` for these
     /// inputs (its S = 0 limit `k(mu, z)` is the supervised case).
+    ///
+    /// The per-dimension loop here stays scalar at every SIMD tier: Q is
+    /// 1–3 in every model in this repo, below the 4-wide lane width, so
+    /// the lane primitives would degenerate to the same sequential tail.
+    /// The O(N·M·D) cotangent build feeding this VJP *is* vectorized — it
+    /// rides the SIMD `dot` in `math::stats`.
     pub fn psi1_vjp_with(&self, mu: &Mat, s: &Mat, z: &Mat, ct: &Mat, p1: &Mat)
                          -> (Mat, Mat, Mat, Vec<f64>) {
         let alpha = self.alpha();
@@ -285,14 +346,25 @@ impl RbfArd {
         }
     }
 
-    /// General (dense-pair) VJP loop; reference implementation.
+    /// General (dense-pair) VJP loop; reference implementation. The
+    /// per-pair exponent recompute rides the same fused SIMD reductions
+    /// as [`RbfArd::psi2`] (with the original interleaved loop as the
+    /// `off` tier); the per-dimension gradient accumulation stays scalar
+    /// — Q is 1–3 in every model here, below the 4-wide lane width.
     pub fn psi2_vjp_general(&self, mu: &Mat, s: &Mat, w: &[f64], z: &Mat, ct: &Mat)
                             -> (Mat, Mat, Mat, Vec<f64>) {
+        self.psi2_vjp_general_at(simd::active(), mu, s, w, z, ct)
+    }
+
+    fn psi2_vjp_general_at(&self, level: SimdLevel, mu: &Mat, s: &Mat, w: &[f64],
+                           z: &Mat, ct: &Mat) -> (Mat, Mat, Mat, Vec<f64>) {
         let alpha = self.alpha();
         let q = self.q();
         let (n, m) = (mu.rows(), z.rows());
         let sigma4 = self.variance * self.variance;
 
+        let qa: Vec<f64> = alpha.iter().map(|a| 0.25 * a).collect();
+        let mut ae = vec![0.0; q];
         let mut dmu = Mat::zeros(n, q);
         let mut ds = Mat::zeros(n, q);
         let mut dz = Mat::zeros(m, q);
@@ -308,6 +380,11 @@ impl RbfArd {
             for qq in 0..q {
                 coef /= (2.0 * alpha[qq] * sr[qq] + 1.0).sqrt();
             }
+            if level != SimdLevel::Off {
+                for qq in 0..q {
+                    ae[qq] = alpha[qq] / (2.0 * alpha[qq] * sr[qq] + 1.0);
+                }
+            }
             for m1 in 0..m {
                 let z1 = z.row(m1);
                 for m2 in 0..m {
@@ -316,13 +393,19 @@ impl RbfArd {
                         continue;
                     }
                     let z2 = z.row(m2);
-                    let mut expo = 0.0;
-                    for qq in 0..q {
-                        let e = 2.0 * alpha[qq] * sr[qq] + 1.0;
-                        let dzq = z1[qq] - z2[qq];
-                        let g = mr[qq] - 0.5 * (z1[qq] + z2[qq]);
-                        expo += 0.25 * alpha[qq] * dzq * dzq + alpha[qq] * g * g / e;
-                    }
+                    let expo = if level == SimdLevel::Off {
+                        let mut expo = 0.0;
+                        for qq in 0..q {
+                            let e = 2.0 * alpha[qq] * sr[qq] + 1.0;
+                            let dzq = z1[qq] - z2[qq];
+                            let g = mr[qq] - 0.5 * (z1[qq] + z2[qq]);
+                            expo += 0.25 * alpha[qq] * dzq * dzq + alpha[qq] * g * g / e;
+                        }
+                        expo
+                    } else {
+                        simd::wsq_diff_at(level, &qa, z1, z2)
+                            + simd::wsq_mid_diff_at(level, &ae, mr, z1, z2)
+                    };
                     let t = coef * (-expo).exp();
                     let c = cij * t;
                     dlogvar += 2.0 * c; // ∂Ψ2/∂logσ² = 2Ψ2
@@ -355,11 +438,18 @@ impl RbfArd {
     /// `psi2_vjp_general` by property test.
     pub fn psi2_vjp_sym(&self, mu: &Mat, s: &Mat, w: &[f64], z: &Mat, ct: &Mat)
                         -> (Mat, Mat, Mat, Vec<f64>) {
+        self.psi2_vjp_sym_at(simd::active(), mu, s, w, z, ct)
+    }
+
+    fn psi2_vjp_sym_at(&self, level: SimdLevel, mu: &Mat, s: &Mat, w: &[f64],
+                       z: &Mat, ct: &Mat) -> (Mat, Mat, Mat, Vec<f64>) {
         let alpha = self.alpha();
         let q = self.q();
         let (n, m) = (mu.rows(), z.rows());
         let sigma4 = self.variance * self.variance;
 
+        let qa: Vec<f64> = alpha.iter().map(|a| 0.25 * a).collect();
+        let mut ae = vec![0.0; q];
         let mut dmu = Mat::zeros(n, q);
         let mut ds = Mat::zeros(n, q);
         let mut dz = Mat::zeros(m, q);
@@ -375,6 +465,11 @@ impl RbfArd {
             for qq in 0..q {
                 coef /= (2.0 * alpha[qq] * sr[qq] + 1.0).sqrt();
             }
+            if level != SimdLevel::Off {
+                for qq in 0..q {
+                    ae[qq] = alpha[qq] / (2.0 * alpha[qq] * sr[qq] + 1.0);
+                }
+            }
             for m1 in 0..m {
                 let z1 = z.row(m1);
                 for m2 in m1..m {
@@ -384,13 +479,19 @@ impl RbfArd {
                         continue;
                     }
                     let z2 = z.row(m2);
-                    let mut expo = 0.0;
-                    for qq in 0..q {
-                        let e = 2.0 * alpha[qq] * sr[qq] + 1.0;
-                        let dzq = z1[qq] - z2[qq];
-                        let g = mr[qq] - 0.5 * (z1[qq] + z2[qq]);
-                        expo += 0.25 * alpha[qq] * dzq * dzq + alpha[qq] * g * g / e;
-                    }
+                    let expo = if level == SimdLevel::Off {
+                        let mut expo = 0.0;
+                        for qq in 0..q {
+                            let e = 2.0 * alpha[qq] * sr[qq] + 1.0;
+                            let dzq = z1[qq] - z2[qq];
+                            let g = mr[qq] - 0.5 * (z1[qq] + z2[qq]);
+                            expo += 0.25 * alpha[qq] * dzq * dzq + alpha[qq] * g * g / e;
+                        }
+                        expo
+                    } else {
+                        simd::wsq_diff_at(level, &qa, z1, z2)
+                            + simd::wsq_mid_diff_at(level, &ae, mr, z1, z2)
+                    };
                     let c = cij * coef * (-expo).exp();
                     dlogvar += 2.0 * c;
                     for qq in 0..q {
@@ -432,11 +533,7 @@ impl RbfArd {
                     continue;
                 }
                 let z2 = z.row(m2);
-                let mut r2 = 0.0;
-                for qq in 0..q {
-                    let d = z1[qq] - z2[qq];
-                    r2 += alpha[qq] * d * d;
-                }
+                let r2 = simd::wsq_diff(&alpha, z1, z2);
                 let k = self.variance * (-0.5 * r2).exp();
                 let c = c0 * k;
                 dlogvar += c;
@@ -674,6 +771,67 @@ mod tests {
             // and the dispatcher picks the same answer
             let c = kern.psi2_vjp(&mu, &s, &w, &z, &ct);
             assert!(c.2.max_abs_diff(&b.2) < 1e-15);
+        });
+    }
+
+    /// Every SIMD-rewritten kernel × every dispatch level vs the `off`
+    /// tier (the exact pre-SIMD scalar order), over ragged Q up to 9 —
+    /// past the 4-wide lane boundary with non-multiple tails. The psi
+    /// outputs pass through `exp`, which amplifies the exponent's ulp
+    /// error by its magnitude, hence the generous ulp budget backed by a
+    /// tiny absolute-tolerance escape for the deep tails; the VJP sums
+    /// can cancel, hence their absolute escape.
+    #[test]
+    fn prop_simd_kernels_match_off_reference() {
+        use crate::testutil::ulp::{assert_close_ulps, assert_mat_close_ulps};
+        Prop::new("rbf_kernels_vs_off").cases(12).run(|rng| {
+            let q = 1 + (rng.next_u64() % 9) as usize;
+            let n = 1 + (rng.next_u64() % 8) as usize;
+            let m = 1 + (rng.next_u64() % 7) as usize;
+            let (kern, mu, s, w, z) = setup(rng, n, m, q);
+            let ct = Mat::from_fn(m, m, |_, _| rng.normal());
+            let off = SimdLevel::Off;
+            let k_off = kern.k_at(off, &mu, &z);
+            let p1_off = kern.psi1_at(off, &mu, &s, &z);
+            let p2_off = kern.psi2_at(off, &mu, &s, &w, &z);
+            let vjp_off = kern.psi2_vjp_general_at(off, &mu, &s, &w, &z, &ct);
+            let sym_off = kern.psi2_vjp_sym_at(off, &mu, &s, &w, &z, &ct);
+            let mut row = vec![0.0; m];
+            for level in SimdLevel::ALL {
+                let tag = level.name();
+                assert_mat_close_ulps(&kern.k_at(level, &mu, &z), &k_off,
+                                      4096, 1e-12, &format!("k {tag}"));
+                // k_row_into must stay bit-for-bit with k at its own level
+                let full = kern.k_at(level, &mu, &z);
+                for i in 0..n {
+                    kern.k_row_into_at(level, mu.row(i), &z, &mut row);
+                    for j in 0..m {
+                        assert!(row[j] == full[(i, j)],
+                                "k_row_into {tag} row {i} col {j}");
+                    }
+                }
+                assert_mat_close_ulps(&kern.psi1_at(level, &mu, &s, &z), &p1_off,
+                                      4096, 1e-12, &format!("psi1 {tag}"));
+                assert_mat_close_ulps(&kern.psi2_at(level, &mu, &s, &w, &z), &p2_off,
+                                      4096, 1e-12, &format!("psi2 {tag}"));
+                for (got, want, what) in [
+                    (kern.psi2_vjp_general_at(level, &mu, &s, &w, &z, &ct), &vjp_off,
+                     "psi2_vjp_general"),
+                    (kern.psi2_vjp_sym_at(level, &mu, &s, &w, &z, &ct), &sym_off,
+                     "psi2_vjp_sym"),
+                ] {
+                    assert_mat_close_ulps(&got.0, &want.0, 4096, 1e-9,
+                                          &format!("{what}/dmu {tag}"));
+                    assert_mat_close_ulps(&got.1, &want.1, 4096, 1e-9,
+                                          &format!("{what}/ds {tag}"));
+                    assert_mat_close_ulps(&got.2, &want.2, 4096, 1e-9,
+                                          &format!("{what}/dz {tag}"));
+                    for (g, w_) in got.3.iter().zip(&want.3) {
+                        assert_close_ulps(*g, *w_, 4096, 1e-9,
+                                          &format!("{what}/dhyp {tag}"));
+                    }
+                }
+            }
         });
     }
 

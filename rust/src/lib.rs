@@ -21,7 +21,7 @@
 //! | [`coordinator::engine`] | the execution layer: `problem` (model statement + parameter layout), `cycle` (the eight-step SPMD evaluation cycle as a reusable `DistributedEvaluator`), `train` (optimiser loop + stopping), `serve` (sharded posterior serving: broadcast-once state, per-batch row partitioning, rank-order gather), re-exported behind a thin facade |
 //! | [`math`] | worker statistics + the leader's indistributable M×M core |
 //! | [`kern`] | RBF-ARD kernel, psi statistics and analytic VJPs |
-//! | [`linalg`] | dense row-major matrices: Cholesky toolkit, cache-blocked `matmul`, symmetric rank-k (`syrk`) updates |
+//! | [`linalg`] | dense row-major matrices: Cholesky toolkit, cache-blocked `matmul`, symmetric rank-k (`syrk`) updates — inner loops run on the runtime-dispatched SIMD tier in [`linalg::simd`] (AVX2+FMA / portable chunked scalar / bit-identical scalar escape hatch, pinned via `GPPAR_SIMD`, `--simd`, or `EngineConfig::simd`) |
 //! | [`optim`] | L-BFGS / SCG / Adam — the central optimiser at rank 0 |
 //! | [`models`] | user-facing SGPR / Bayesian GP-LVM / MRD on top of the engine |
 //! | [`runtime`] | AOT artifact loading + PJRT execution (behind the off-by-default `xla` feature; pure-Rust stub otherwise) |

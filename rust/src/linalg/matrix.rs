@@ -5,6 +5,7 @@
 //! broadcasting magic. Everything here is O(M²)/O(M³) leader-side work;
 //! the O(N) data-parallel work lives in `math::stats` / the XLA artifacts.
 
+use crate::linalg::simd::{self, SimdLevel};
 use std::fmt;
 use std::ops::{Index, IndexMut};
 
@@ -98,16 +99,30 @@ impl Mat {
         out
     }
 
-    /// `self * other`. Dispatches to the cache-blocked kernel once the
-    /// problem outgrows the last-level-friendly sizes; both kernels
-    /// accumulate each output element in ascending-k order, so the
-    /// results are bit-identical and the dispatch is invisible.
+    /// `self * other`. Dispatches to the cache-blocked (and
+    /// SIMD-accelerated) kernel once the combined working set outgrows the
+    /// cache-friendly sizes; both kernels accumulate each output element
+    /// in ascending-k order, so at the `off`/`scalar` SIMD tiers the
+    /// results are bit-identical and the dispatch is invisible. At the
+    /// `native` tier the blocked kernel fuses multiply-adds, so blocked
+    /// and naive agree to tight ulps rather than bitwise — the dispatch
+    /// is still deterministic per shape.
     pub fn matmul(&self, other: &Mat) -> Mat {
-        if self.rows >= MM_BLOCK && self.cols >= MM_BLOCK && other.cols >= MM_BLOCK {
+        if Self::use_blocked(self.rows, self.cols, other.cols) {
             self.matmul_blocked(other)
         } else {
             self.matmul_naive(other)
         }
+    }
+
+    /// Blocked-kernel dispatch predicate for an n×k · k×m product: take
+    /// the blocked path once the three operands' combined footprint
+    /// reaches three `MM_BLOCK²` tiles. Unlike the old all-dims ≥
+    /// `MM_BLOCK` rule, this catches the tall-skinny N×Q·Q×M and N×M·M×M
+    /// products that dominate the Ψ1 path (huge `n`, tiny `k`), which
+    /// previously always fell through to the naive loop.
+    fn use_blocked(n: usize, k: usize, m: usize) -> bool {
+        n * k + k * m + n * m >= 3 * MM_BLOCK * MM_BLOCK
     }
 
     /// `self * other` — naive triple loop with row-major-friendly order
@@ -133,9 +148,15 @@ impl Mat {
     /// `self * other`, cache-blocked: the k-blocks are the outer loop so
     /// each `MM_BLOCK × MM_BLOCK` tile of `other` stays L1/L2-resident
     /// while a block of output rows sweeps it. Per output element the
-    /// accumulation order is still ascending k, so the result is
-    /// bit-identical to [`Mat::matmul_naive`].
+    /// accumulation order is still ascending k; the inner row update runs
+    /// on the SIMD `axpy` primitive at the active dispatch level, which is
+    /// bit-identical to [`Mat::matmul_naive`] at the `off`/`scalar` tiers
+    /// and tight-ulp (fused multiply-add) at `native`.
     pub fn matmul_blocked(&self, other: &Mat) -> Mat {
+        self.matmul_blocked_at(simd::active(), other)
+    }
+
+    fn matmul_blocked_at(&self, level: SimdLevel, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul {}x{} * {}x{}",
                    self.rows, self.cols, other.rows, other.cols);
         let (n, kk, m) = (self.rows, self.cols, other.cols);
@@ -152,9 +173,7 @@ impl Mat {
                             if a == 0.0 { continue; }
                             let orow = &other.data[k * m + jb..k * m + je];
                             let out_row = &mut out.data[i * m + jb..i * m + je];
-                            for (o, &b) in out_row.iter_mut().zip(orow) {
-                                *o += a * b;
-                            }
+                            simd::axpy_at(level, out_row, a, orow);
                         }
                     }
                 }
@@ -163,8 +182,13 @@ impl Mat {
         out
     }
 
-    /// `selfᵀ * other` without materialising the transpose.
+    /// `selfᵀ * other` without materialising the transpose. The inner row
+    /// update runs on the SIMD `axpy` primitive at the active level.
     pub fn t_matmul(&self, other: &Mat) -> Mat {
+        self.t_matmul_at(simd::active(), other)
+    }
+
+    fn t_matmul_at(&self, level: SimdLevel, other: &Mat) -> Mat {
         assert_eq!(self.rows, other.rows);
         let mut out = Mat::zeros(self.cols, other.cols);
         for k in 0..self.rows {
@@ -173,10 +197,7 @@ impl Mat {
             for i in 0..self.cols {
                 let a = srow[i];
                 if a == 0.0 { continue; }
-                let out_row = out.row_mut(i);
-                for j in 0..other.cols {
-                    out_row[j] += a * orow[j];
-                }
+                simd::axpy_at(level, out.row_mut(i), a, orow);
             }
         }
         out
@@ -184,20 +205,21 @@ impl Mat {
 
     /// Symmetric rank-k update `self * selfᵀ` (n×n from n×k): computes
     /// only the lower triangle and mirrors — half the flops of
-    /// `matmul_t(self)`, bit-identical on the computed entries (same
-    /// row-dot, ascending k). This is the Ψ2-shaped product at the heart
-    /// of the leader's M×M core (`A⁻¹P (A⁻¹P)ᵀ`).
+    /// `matmul_t(self)`, bit-identical on the computed entries (both run
+    /// the same SIMD row-dot at the same dispatch level). This is the
+    /// Ψ2-shaped product at the heart of the leader's M×M core
+    /// (`A⁻¹P (A⁻¹P)ᵀ`).
     pub fn syrk(&self) -> Mat {
+        self.syrk_at(simd::active())
+    }
+
+    fn syrk_at(&self, level: SimdLevel) -> Mat {
         let n = self.rows;
         let mut out = Mat::zeros(n, n);
         for i in 0..n {
             let ri = self.row(i);
             for j in 0..=i {
-                let rj = self.row(j);
-                let mut acc = 0.0;
-                for k in 0..self.cols {
-                    acc += ri[k] * rj[k];
-                }
+                let acc = simd::dot_at(level, ri, self.row(j));
                 out[(i, j)] = acc;
                 out[(j, i)] = acc;
             }
@@ -210,6 +232,10 @@ impl Mat {
     /// mirrored) — the syrk-style form of the SGPR Ψ2 statistic
     /// `Σ_n w_n k_n k_nᵀ`. Rows with `w == 0` are skipped entirely.
     pub fn syrk_t_weighted(&self, w: &[f64]) -> Mat {
+        self.syrk_t_weighted_at(simd::active(), w)
+    }
+
+    fn syrk_t_weighted_at(&self, level: SimdLevel, w: &[f64]) -> Mat {
         assert_eq!(w.len(), self.rows);
         let k = self.cols;
         let mut out = Mat::zeros(k, k);
@@ -219,10 +245,7 @@ impl Mat {
             for i in 0..k {
                 let a = w[row] * r[i];
                 if a == 0.0 { continue; }
-                let out_row = out.row_mut(i);
-                for (j, &rv) in r.iter().enumerate().skip(i) {
-                    out_row[j] += a * rv;
-                }
+                simd::axpy_at(level, &mut out.row_mut(i)[i..], a, &r[i..]);
             }
         }
         for i in 0..k {
@@ -233,19 +256,18 @@ impl Mat {
         out
     }
 
-    /// `self * otherᵀ`.
+    /// `self * otherᵀ` — row dots on the SIMD `dot` primitive.
     pub fn matmul_t(&self, other: &Mat) -> Mat {
+        self.matmul_t_at(simd::active(), other)
+    }
+
+    fn matmul_t_at(&self, level: SimdLevel, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.cols);
         let mut out = Mat::zeros(self.rows, other.rows);
         for i in 0..self.rows {
             let srow = self.row(i);
             for j in 0..other.rows {
-                let orow = other.row(j);
-                let mut acc = 0.0;
-                for k in 0..self.cols {
-                    acc += srow[k] * orow[k];
-                }
-                out[(i, j)] = acc;
+                out[(i, j)] = simd::dot_at(level, srow, other.row(j));
             }
         }
         out
@@ -254,9 +276,7 @@ impl Mat {
     /// Element-wise in-place `self += c * other`.
     pub fn axpy(&mut self, c: f64, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += c * b;
-        }
+        simd::axpy(&mut self.data, c, &other.data);
     }
 
     /// `self * c` (copy).
@@ -287,7 +307,7 @@ impl Mat {
     /// Frobenius inner product `sum_ij self_ij * other_ij`.
     pub fn dot(&self, other: &Mat) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+        simd::dot(&self.data, &other.data)
     }
 
     /// `tr(self * other)` for square same-size matrices, without the product.
@@ -377,14 +397,14 @@ mod tests {
     fn t_matmul_equals_explicit() {
         let a = Mat::from_fn(5, 3, |i, j| (i as f64 - j as f64) * 0.7);
         let b = Mat::from_fn(5, 2, |i, j| (i + 2 * j) as f64 * 0.3);
-        assert!(a.t().matmul(&b).max_abs_diff(&a.t_matmul(&b)) < 1e-14);
+        assert!(a.t().matmul(&b).max_abs_diff(&a.t_matmul(&b)) < 1e-13);
     }
 
     #[test]
     fn matmul_t_equals_explicit() {
         let a = Mat::from_fn(4, 3, |i, j| (i * j) as f64 + 1.0);
         let b = Mat::from_fn(5, 3, |i, j| i as f64 - 0.5 * j as f64);
-        assert!(a.matmul(&b.t()).max_abs_diff(&a.matmul_t(&b)) < 1e-14);
+        assert!(a.matmul(&b.t()).max_abs_diff(&a.matmul_t(&b)) < 1e-13);
     }
 
     #[test]
@@ -411,30 +431,112 @@ mod tests {
     }
 
     #[test]
-    fn prop_blocked_matmul_bit_identical_to_naive() {
+    fn prop_blocked_matmul_matches_naive_per_level() {
         // Sizes straddle the 64-wide tile edge (including ragged tails and
-        // degenerate dims); ascending-k accumulation makes the two kernels
-        // agree exactly, not just within tolerance.
+        // degenerate dims). At off/scalar the ascending-k axpy makes the
+        // two kernels agree exactly; at native the fused multiply-add
+        // perturbs each element by at most one rounding per k-term, so
+        // the contract is tight-ulp against the untouched naive loop.
+        use crate::linalg::simd::SimdLevel;
         use crate::testutil::prop::Prop;
+        use crate::testutil::ulp::assert_mat_close_ulps;
         Prop::new("matmul_blocked_vs_naive").cases(12).run(|rng| {
             let n = 1 + (rng.next_u64() % 150) as usize;
             let k = 1 + (rng.next_u64() % 150) as usize;
             let m = 1 + (rng.next_u64() % 150) as usize;
             let a = Mat::from_fn(n, k, |_, _| rng.normal());
             let b = Mat::from_fn(k, m, |_, _| rng.normal());
-            let diff = a.matmul_naive(&b).max_abs_diff(&a.matmul_blocked(&b));
-            assert!(diff == 0.0, "{n}x{k}x{m}: diff {diff}");
+            let want = a.matmul_naive(&b);
+            for level in SimdLevel::ALL {
+                let got = a.matmul_blocked_at(level, &b);
+                match level {
+                    SimdLevel::Off | SimdLevel::Scalar => {
+                        let diff = want.max_abs_diff(&got);
+                        assert!(diff == 0.0, "{n}x{k}x{m} {}: diff {diff}", level.name());
+                    }
+                    SimdLevel::Native => {
+                        assert_mat_close_ulps(&got, &want, 128, 1e-10,
+                                              &format!("{n}x{k}x{m} native"));
+                    }
+                }
+            }
         });
     }
 
     #[test]
-    fn matmul_dispatch_is_invisible() {
+    fn matmul_dispatch_matches_naive() {
         // Above the dispatch threshold matmul() takes the blocked path;
-        // verify against the naive reference on a 130³ product.
+        // verify against the naive reference on a 130³ product (bitwise
+        // only when the active tier keeps the scalar accumulation order).
+        use crate::linalg::simd::{self, SimdLevel};
+        use crate::testutil::ulp::assert_mat_close_ulps;
         let mut rng = crate::testutil::prop::Rng64::new(91);
         let a = Mat::from_fn(130, 130, |_, _| rng.normal());
         let b = Mat::from_fn(130, 130, |_, _| rng.normal());
-        assert!(a.matmul(&b).max_abs_diff(&a.matmul_naive(&b)) == 0.0);
+        let (got, want) = (a.matmul(&b), a.matmul_naive(&b));
+        match simd::active() {
+            SimdLevel::Off | SimdLevel::Scalar => {
+                assert!(got.max_abs_diff(&want) == 0.0);
+            }
+            SimdLevel::Native => {
+                assert_mat_close_ulps(&got, &want, 128, 1e-10, "matmul 130^3");
+            }
+        }
+    }
+
+    #[test]
+    fn tall_skinny_products_take_blocked_path() {
+        // The Ψ1-path shapes: N×Q·Q×M (huge n, tiny k) and N×M·M×M must
+        // hit the blocked kernel under the working-set dispatch even
+        // though some dims are far below MM_BLOCK.
+        assert!(Mat::use_blocked(2048, 2, 100), "N×Q · Q×M");
+        assert!(Mat::use_blocked(2048, 100, 100), "N×M · M×M");
+        assert!(Mat::use_blocked(64, 64, 64), "old threshold boundary");
+        assert!(Mat::use_blocked(130, 130, 130));
+        assert!(!Mat::use_blocked(8, 8, 8), "small products stay naive");
+        assert!(!Mat::use_blocked(32, 32, 32));
+        // And the blocked result on a tall-skinny product matches naive.
+        use crate::linalg::simd::SimdLevel;
+        use crate::testutil::ulp::assert_mat_close_ulps;
+        let mut rng = crate::testutil::prop::Rng64::new(17);
+        let a = Mat::from_fn(300, 2, |_, _| rng.normal());
+        let b = Mat::from_fn(2, 90, |_, _| rng.normal());
+        let want = a.matmul_naive(&b);
+        for level in SimdLevel::ALL {
+            assert_mat_close_ulps(&a.matmul_blocked_at(level, &b), &want, 4, 0.0,
+                                  &format!("tall-skinny {}", level.name()));
+        }
+    }
+
+    #[test]
+    fn prop_simd_kernels_match_off_reference() {
+        // syrk / syrk_t_weighted / t_matmul / matmul_t at every SIMD level
+        // vs the Off (pre-SIMD scalar) tier, over ragged non-lane-multiple
+        // sizes.
+        use crate::linalg::simd::SimdLevel;
+        use crate::testutil::prop::Prop;
+        use crate::testutil::ulp::assert_mat_close_ulps;
+        Prop::new("matrix_kernels_vs_off").cases(20).run(|rng| {
+            let n = 1 + (rng.next_u64() % 33) as usize;
+            let k = 1 + (rng.next_u64() % 33) as usize;
+            let a = Mat::from_fn(n, k, |_, _| rng.normal());
+            let b = Mat::from_fn(n, k, |_, _| rng.normal());
+            let w: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.0, 2.0)).collect();
+            for level in SimdLevel::ALL {
+                assert_mat_close_ulps(&a.syrk_at(level), &a.syrk_at(SimdLevel::Off),
+                                      64, 1e-12, &format!("syrk {}", level.name()));
+                assert_mat_close_ulps(&a.syrk_t_weighted_at(level, &w),
+                                      &a.syrk_t_weighted_at(SimdLevel::Off, &w),
+                                      64, 1e-12,
+                                      &format!("syrk_t_weighted {}", level.name()));
+                assert_mat_close_ulps(&a.t_matmul_at(level, &b),
+                                      &a.t_matmul_at(SimdLevel::Off, &b),
+                                      64, 1e-12, &format!("t_matmul {}", level.name()));
+                assert_mat_close_ulps(&a.matmul_t_at(level, &b),
+                                      &a.matmul_t_at(SimdLevel::Off, &b),
+                                      64, 1e-12, &format!("matmul_t {}", level.name()));
+            }
+        });
     }
 
     #[test]

@@ -7,9 +7,11 @@
 
 mod chol;
 mod matrix;
+pub mod simd;
 
 pub use chol::{Chol, NotPositiveDefinite};
 pub use matrix::Mat;
+pub use simd::SimdLevel;
 
 /// Mean of a slice (helper shared by metrics/benches).
 pub fn mean(xs: &[f64]) -> f64 {

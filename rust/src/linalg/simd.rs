@@ -1,0 +1,597 @@
+//! Runtime-dispatched SIMD lane primitives for the innermost f64 loops.
+//!
+//! Every hot inner loop in the codebase — the blocked matmul / syrk
+//! kernels, the RBF-ARD Ψ-statistics and their VJPs, and the stats-layer
+//! accumulators — reduces to four shapes:
+//!
+//! * [`dot`]   — `Σ aᵢ·bᵢ` (syrk row-dots, `matmul_t`, trace terms)
+//! * [`axpy`]  — `yᵢ += c·xᵢ` (the fmadd row kernel inside blocked matmul)
+//! * [`wsq_diff`] — `Σ wᵢ·(aᵢ−bᵢ)²` (the RBF exponent, fused)
+//! * [`wsq_mid_diff`] — `Σ wᵢ·(mᵢ−½(aᵢ+bᵢ))²` (the Ψ2 exponent's midpoint term)
+//!
+//! Each primitive is implemented at three [`SimdLevel`]s:
+//!
+//! * `Off` — the exact pre-SIMD sequential scalar loop, preserved
+//!   bit-for-bit as the escape hatch and the property-test reference.
+//! * `Scalar` — portable 4-lane-chunked scalar code (four independent
+//!   accumulators, combined in the same tree order as the AVX2 horizontal
+//!   sum, sequential tail). Compiles everywhere; autovectorizes well.
+//! * `Native` — AVX2+FMA intrinsics on `x86_64`, selected once at startup
+//!   via `is_x86_feature_detected!`. Falls back to the `Scalar` body when
+//!   the features are absent (checked inside the dispatch arm, so an
+//!   explicit `Native` request is always sound).
+//!
+//! Numerical contract: `Off` and `Scalar` agree bit-for-bit on the
+//! elementwise `axpy` and on any reduction of ≤ 3 elements (the chunked
+//! path degenerates to the sequential tail); longer reductions reorder the
+//! summation and `Native` fuses multiply-adds, so cross-level agreement is
+//! tight-ulp, property-tested in `testutil::ulp` terms over ragged sizes.
+//!
+//! The active level is a process-global resolved lazily from the
+//! `GPPAR_SIMD` environment variable (`off|scalar|native`, anything else —
+//! including unset — means auto-detect), overridable via [`set_active`]
+//! (the engine applies `EngineConfig::simd` there, before any compute
+//! threads spawn). Tests never mutate the global: they exercise explicit
+//! levels through the `*_at` variants.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// SIMD dispatch tier. See the module docs for the numerical contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Exact pre-SIMD sequential scalar loops (bit-identical escape hatch).
+    Off,
+    /// Portable 4-lane-chunked scalar fallback.
+    Scalar,
+    /// AVX2+FMA intrinsics where detected; `Scalar` body otherwise.
+    Native,
+}
+
+impl SimdLevel {
+    /// All levels, lowest to highest — test sweeps iterate this.
+    pub const ALL: [SimdLevel; 3] = [SimdLevel::Off, SimdLevel::Scalar, SimdLevel::Native];
+
+    /// Parse `off|scalar|native` (case-insensitive). `None` on anything
+    /// else — callers decide whether that means "auto" (env) or an error
+    /// (CLI).
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" => Some(SimdLevel::Off),
+            "scalar" => Some(SimdLevel::Scalar),
+            "native" => Some(SimdLevel::Native),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name (round-trips through [`SimdLevel::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdLevel::Off => "off",
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Native => "native",
+        }
+    }
+}
+
+// Level encoding in the global: 0 = unresolved, 1..=3 = Off/Scalar/Native.
+const UNINIT: u8 = 0;
+
+fn to_u8(level: SimdLevel) -> u8 {
+    match level {
+        SimdLevel::Off => 1,
+        SimdLevel::Scalar => 2,
+        SimdLevel::Native => 3,
+    }
+}
+
+fn from_u8(v: u8) -> SimdLevel {
+    match v {
+        1 => SimdLevel::Off,
+        2 => SimdLevel::Scalar,
+        _ => SimdLevel::Native,
+    }
+}
+
+static ACTIVE: AtomicU8 = AtomicU8::new(UNINIT);
+
+/// The process-global active level. Resolved on first call from
+/// `GPPAR_SIMD` (`off|scalar|native`; unset or unrecognized → `Native` if
+/// AVX2+FMA are detected, else `Scalar`), then cached.
+pub fn active() -> SimdLevel {
+    match ACTIVE.load(Ordering::Relaxed) {
+        UNINIT => {
+            let level = resolve(std::env::var("GPPAR_SIMD").ok().as_deref());
+            // A racing first call resolves the same value, so this store
+            // is idempotent.
+            ACTIVE.store(to_u8(level), Ordering::Relaxed);
+            level
+        }
+        v => from_u8(v),
+    }
+}
+
+/// Override the process-global level. Call before spawning compute threads
+/// (the engine does this once, from `Engine::new`); concurrent kernels
+/// observe the switch at an arbitrary point, which would break any
+/// bit-identity assumption mid-computation.
+pub fn set_active(level: SimdLevel) {
+    ACTIVE.store(to_u8(level), Ordering::Relaxed);
+}
+
+/// `GPPAR_SIMD` → level: recognized names win, anything else auto-detects.
+fn resolve(env: Option<&str>) -> SimdLevel {
+    if let Some(level) = env.and_then(SimdLevel::parse) {
+        return level;
+    }
+    if native_available() { SimdLevel::Native } else { SimdLevel::Scalar }
+}
+
+// Detection result cache: 0 = unknown, 1 = available, 2 = absent.
+static NATIVE: AtomicU8 = AtomicU8::new(0);
+
+/// Whether the `Native` tier's AVX2+FMA code paths can run on this CPU
+/// (always `false` off x86_64). Cached after the first query.
+pub fn native_available() -> bool {
+    match NATIVE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let ok = detect_native();
+            NATIVE.store(if ok { 1 } else { 2 }, Ordering::Relaxed);
+            ok
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_native() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_native() -> bool {
+    false
+}
+
+// ---------------------------------------------------------------------
+// dot: Σ aᵢ·bᵢ
+// ---------------------------------------------------------------------
+
+/// `Σ aᵢ·bᵢ` at the process-global level. Panics on length mismatch.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    dot_at(active(), a, b)
+}
+
+/// [`dot`] at an explicit level (test sweeps; level-pinned callers).
+pub fn dot_at(level: SimdLevel, a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    match level {
+        SimdLevel::Off => dot_off(a, b),
+        SimdLevel::Scalar => dot_chunks(a, b),
+        SimdLevel::Native => dot_native(a, b),
+    }
+}
+
+fn dot_off(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+fn dot_chunks(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let mut acc = [0.0f64; 4];
+    let mut i = 0;
+    while i + 4 <= n {
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    // Same tree as the AVX2 horizontal sum: (lane0+lane2)+(lane1+lane3).
+    let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+fn dot_native(a: &[f64], b: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if native_available() {
+        // SAFETY: AVX2+FMA presence verified by native_available().
+        return unsafe { avx::dot(a, b) };
+    }
+    dot_chunks(a, b)
+}
+
+// ---------------------------------------------------------------------
+// axpy: yᵢ += c·xᵢ
+// ---------------------------------------------------------------------
+
+/// `yᵢ += c·xᵢ` in place at the process-global level. Elementwise, so
+/// `Off` and `Scalar` are bit-identical; `Native` fuses the multiply-add.
+/// Panics on length mismatch.
+pub fn axpy(y: &mut [f64], c: f64, x: &[f64]) {
+    axpy_at(active(), y, c, x)
+}
+
+/// [`axpy`] at an explicit level.
+pub fn axpy_at(level: SimdLevel, y: &mut [f64], c: f64, x: &[f64]) {
+    assert_eq!(y.len(), x.len(), "axpy length mismatch");
+    match level {
+        SimdLevel::Off | SimdLevel::Scalar => axpy_off(y, c, x),
+        SimdLevel::Native => axpy_native(y, c, x),
+    }
+}
+
+fn axpy_off(y: &mut [f64], c: f64, x: &[f64]) {
+    for i in 0..y.len() {
+        y[i] += c * x[i];
+    }
+}
+
+fn axpy_native(y: &mut [f64], c: f64, x: &[f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if native_available() {
+        // SAFETY: AVX2+FMA presence verified by native_available().
+        unsafe { avx::axpy(y, c, x) };
+        return;
+    }
+    axpy_off(y, c, x)
+}
+
+// ---------------------------------------------------------------------
+// wsq_diff: Σ wᵢ·(aᵢ−bᵢ)²
+// ---------------------------------------------------------------------
+
+/// `Σ wᵢ·(aᵢ−bᵢ)²` at the process-global level — the fused RBF-ARD
+/// exponent (weights = inverse-squared lengthscales). Terms are
+/// nonnegative, so the reduction never cancels and cross-level agreement
+/// stays within a few ulps per element. Panics on length mismatch.
+pub fn wsq_diff(w: &[f64], a: &[f64], b: &[f64]) -> f64 {
+    wsq_diff_at(active(), w, a, b)
+}
+
+/// [`wsq_diff`] at an explicit level.
+pub fn wsq_diff_at(level: SimdLevel, w: &[f64], a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(w.len(), a.len(), "wsq_diff length mismatch");
+    assert_eq!(w.len(), b.len(), "wsq_diff length mismatch");
+    match level {
+        SimdLevel::Off => wsq_diff_off(w, a, b),
+        SimdLevel::Scalar => wsq_diff_chunks(w, a, b),
+        SimdLevel::Native => wsq_diff_native(w, a, b),
+    }
+}
+
+fn wsq_diff_off(w: &[f64], a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..w.len() {
+        let d = a[i] - b[i];
+        acc += w[i] * d * d;
+    }
+    acc
+}
+
+fn wsq_diff_chunks(w: &[f64], a: &[f64], b: &[f64]) -> f64 {
+    let n = w.len();
+    let mut acc = [0.0f64; 4];
+    let mut i = 0;
+    while i + 4 <= n {
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        acc[0] += w[i] * d0 * d0;
+        acc[1] += w[i + 1] * d1 * d1;
+        acc[2] += w[i + 2] * d2 * d2;
+        acc[3] += w[i + 3] * d3 * d3;
+        i += 4;
+    }
+    let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+    while i < n {
+        let d = a[i] - b[i];
+        s += w[i] * d * d;
+        i += 1;
+    }
+    s
+}
+
+fn wsq_diff_native(w: &[f64], a: &[f64], b: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if native_available() {
+        // SAFETY: AVX2+FMA presence verified by native_available().
+        return unsafe { avx::wsq_diff(w, a, b) };
+    }
+    wsq_diff_chunks(w, a, b)
+}
+
+// ---------------------------------------------------------------------
+// wsq_mid_diff: Σ wᵢ·(mᵢ − ½(aᵢ+bᵢ))²
+// ---------------------------------------------------------------------
+
+/// `Σ wᵢ·(mᵢ − ½(aᵢ+bᵢ))²` at the process-global level — the Ψ2
+/// exponent's inducing-midpoint term. Panics on length mismatch.
+pub fn wsq_mid_diff(w: &[f64], m: &[f64], a: &[f64], b: &[f64]) -> f64 {
+    wsq_mid_diff_at(active(), w, m, a, b)
+}
+
+/// [`wsq_mid_diff`] at an explicit level.
+pub fn wsq_mid_diff_at(level: SimdLevel, w: &[f64], m: &[f64], a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(w.len(), m.len(), "wsq_mid_diff length mismatch");
+    assert_eq!(w.len(), a.len(), "wsq_mid_diff length mismatch");
+    assert_eq!(w.len(), b.len(), "wsq_mid_diff length mismatch");
+    match level {
+        SimdLevel::Off => wsq_mid_diff_off(w, m, a, b),
+        SimdLevel::Scalar => wsq_mid_diff_chunks(w, m, a, b),
+        SimdLevel::Native => wsq_mid_diff_native(w, m, a, b),
+    }
+}
+
+fn wsq_mid_diff_off(w: &[f64], m: &[f64], a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..w.len() {
+        let g = m[i] - 0.5 * (a[i] + b[i]);
+        acc += w[i] * g * g;
+    }
+    acc
+}
+
+fn wsq_mid_diff_chunks(w: &[f64], m: &[f64], a: &[f64], b: &[f64]) -> f64 {
+    let n = w.len();
+    let mut acc = [0.0f64; 4];
+    let mut i = 0;
+    while i + 4 <= n {
+        let g0 = m[i] - 0.5 * (a[i] + b[i]);
+        let g1 = m[i + 1] - 0.5 * (a[i + 1] + b[i + 1]);
+        let g2 = m[i + 2] - 0.5 * (a[i + 2] + b[i + 2]);
+        let g3 = m[i + 3] - 0.5 * (a[i + 3] + b[i + 3]);
+        acc[0] += w[i] * g0 * g0;
+        acc[1] += w[i + 1] * g1 * g1;
+        acc[2] += w[i + 2] * g2 * g2;
+        acc[3] += w[i + 3] * g3 * g3;
+        i += 4;
+    }
+    let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+    while i < n {
+        let g = m[i] - 0.5 * (a[i] + b[i]);
+        s += w[i] * g * g;
+        i += 1;
+    }
+    s
+}
+
+fn wsq_mid_diff_native(w: &[f64], m: &[f64], a: &[f64], b: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if native_available() {
+        // SAFETY: AVX2+FMA presence verified by native_available().
+        return unsafe { avx::wsq_mid_diff(w, m, a, b) };
+    }
+    wsq_mid_diff_chunks(w, m, a, b)
+}
+
+// ---------------------------------------------------------------------
+// AVX2+FMA bodies (x86_64 only; callers gate on native_available()).
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum in the fixed tree order (lane0+lane2)+(lane1+lane3),
+    /// mirrored exactly by the chunked-scalar combine.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v); // [lane0, lane1]
+        let hi = _mm256_extractf128_pd::<1>(v); // [lane2, lane3]
+        let pair = _mm_add_pd(lo, hi); // [l0+l2, l1+l3]
+        let swapped = _mm_unpackhi_pd(pair, pair);
+        _mm_cvtsd_f64(_mm_add_sd(pair, swapped))
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 4 <= n {
+            let va = _mm256_loadu_pd(a.as_ptr().add(i));
+            let vb = _mm256_loadu_pd(b.as_ptr().add(i));
+            acc = _mm256_fmadd_pd(va, vb, acc);
+            i += 4;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(y: &mut [f64], c: f64, x: &[f64]) {
+        let n = y.len();
+        let vc = _mm256_set1_pd(c);
+        let mut i = 0;
+        while i + 4 <= n {
+            let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+            let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+            _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_fmadd_pd(vc, vx, vy));
+            i += 4;
+        }
+        while i < n {
+            y[i] += c * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn wsq_diff(w: &[f64], a: &[f64], b: &[f64]) -> f64 {
+        let n = w.len();
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 4 <= n {
+            let vd = _mm256_sub_pd(_mm256_loadu_pd(a.as_ptr().add(i)),
+                                   _mm256_loadu_pd(b.as_ptr().add(i)));
+            let t = _mm256_mul_pd(_mm256_loadu_pd(w.as_ptr().add(i)), vd);
+            acc = _mm256_fmadd_pd(t, vd, acc);
+            i += 4;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            let d = a[i] - b[i];
+            s += w[i] * d * d;
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn wsq_mid_diff(w: &[f64], m: &[f64], a: &[f64], b: &[f64]) -> f64 {
+        let n = w.len();
+        let half = _mm256_set1_pd(0.5);
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 4 <= n {
+            let mid = _mm256_mul_pd(half, _mm256_add_pd(_mm256_loadu_pd(a.as_ptr().add(i)),
+                                                        _mm256_loadu_pd(b.as_ptr().add(i))));
+            let g = _mm256_sub_pd(_mm256_loadu_pd(m.as_ptr().add(i)), mid);
+            let t = _mm256_mul_pd(_mm256_loadu_pd(w.as_ptr().add(i)), g);
+            acc = _mm256_fmadd_pd(t, g, acc);
+            i += 4;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            let g = m[i] - 0.5 * (a[i] + b[i]);
+            s += w[i] * g * g;
+            i += 1;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Prop;
+    use crate::testutil::ulp::assert_close_ulps;
+
+    #[test]
+    fn parse_round_trips() {
+        for level in SimdLevel::ALL {
+            assert_eq!(SimdLevel::parse(level.name()), Some(level));
+        }
+        assert_eq!(SimdLevel::parse("OFF"), Some(SimdLevel::Off));
+        assert_eq!(SimdLevel::parse(" native "), Some(SimdLevel::Native));
+        assert_eq!(SimdLevel::parse("auto"), None);
+        assert_eq!(SimdLevel::parse(""), None);
+    }
+
+    #[test]
+    fn resolve_env_values() {
+        assert_eq!(resolve(Some("off")), SimdLevel::Off);
+        assert_eq!(resolve(Some("scalar")), SimdLevel::Scalar);
+        assert_eq!(resolve(Some("native")), SimdLevel::Native);
+        // Unset / unrecognized auto-detect — never Off.
+        for env in [None, Some("auto"), Some("bogus")] {
+            let level = resolve(env);
+            assert!(level == SimdLevel::Scalar || level == SimdLevel::Native);
+            if level == SimdLevel::Native {
+                assert!(native_available());
+            }
+        }
+    }
+
+    #[test]
+    fn active_is_resolved_and_stable() {
+        // Never mutate the global here (other tests run concurrently);
+        // just check lazy resolution yields a stable non-sentinel level.
+        assert_eq!(active(), active());
+    }
+
+    #[test]
+    fn tails_are_bit_identical_across_levels() {
+        // Reductions of ≤ 3 elements take the sequential tail at every
+        // level, so Q-sized (1–3) kernel loops agree bit-for-bit.
+        let mut rng = crate::testutil::prop::Rng64::new(7);
+        for n in 0..=3usize {
+            let w: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.1, 2.0)).collect();
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let m: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            for level in SimdLevel::ALL {
+                assert_eq!(dot_at(level, &a, &b).to_bits(),
+                           dot_at(SimdLevel::Off, &a, &b).to_bits(), "dot n={n}");
+                assert_eq!(wsq_diff_at(level, &w, &a, &b).to_bits(),
+                           wsq_diff_at(SimdLevel::Off, &w, &a, &b).to_bits(),
+                           "wsq_diff n={n}");
+                assert_eq!(wsq_mid_diff_at(level, &w, &m, &a, &b).to_bits(),
+                           wsq_mid_diff_at(SimdLevel::Off, &w, &m, &a, &b).to_bits(),
+                           "wsq_mid_diff n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_off_and_scalar_bit_identical() {
+        let mut rng = crate::testutil::prop::Rng64::new(11);
+        for n in 0..=33usize {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut y0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut y1 = y0.clone();
+            axpy_at(SimdLevel::Off, &mut y0, 0.37, &x);
+            axpy_at(SimdLevel::Scalar, &mut y1, 0.37, &x);
+            for i in 0..n {
+                assert_eq!(y0[i].to_bits(), y1[i].to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_primitives_ulp_close_across_levels_and_ragged_sizes() {
+        // Every primitive × every level × sizes 1..=33 (straddling the
+        // 4-wide lane boundary with ragged tails) vs the Off reference.
+        Prop::new("simd_primitives_vs_off").cases(40).run(|rng| {
+            let n = 1 + (rng.next_u64() % 33) as usize;
+            let w: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.05, 3.0)).collect();
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let m: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let c = rng.normal();
+            for level in SimdLevel::ALL {
+                assert_close_ulps(dot_at(level, &a, &b), dot_at(SimdLevel::Off, &a, &b),
+                                  64, 1e-12, &format!("dot n={n} {}", level.name()));
+                assert_close_ulps(wsq_diff_at(level, &w, &a, &b),
+                                  wsq_diff_at(SimdLevel::Off, &w, &a, &b),
+                                  16, 0.0, &format!("wsq_diff n={n} {}", level.name()));
+                assert_close_ulps(wsq_mid_diff_at(level, &w, &m, &a, &b),
+                                  wsq_mid_diff_at(SimdLevel::Off, &w, &m, &a, &b),
+                                  16, 0.0, &format!("wsq_mid_diff n={n} {}", level.name()));
+                let mut y0: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+                let mut y1 = y0.clone();
+                axpy_at(SimdLevel::Off, &mut y0, c, &a);
+                axpy_at(level, &mut y1, c, &a);
+                for i in 0..n {
+                    assert_close_ulps(y1[i], y0[i], 1, 0.0,
+                                      &format!("axpy n={n} i={i} {}", level.name()));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn dot_matches_naive_values() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [2.0, 0.5, -1.0, 3.0, 0.0];
+        for level in SimdLevel::ALL {
+            assert!((dot_at(level, &a, &b) - 12.0).abs() < 1e-12);
+        }
+        for level in SimdLevel::ALL {
+            assert_eq!(dot_at(level, &[], &[]), 0.0);
+        }
+    }
+}

@@ -20,7 +20,7 @@ use gpparallel::cli::{known_flags, known_options, Args};
 use gpparallel::config::BackendKind;
 use gpparallel::coordinator::{Engine, EngineConfig, OptChoice};
 use gpparallel::data::synthetic::{generate, generate_supervised, SyntheticSpec};
-use gpparallel::linalg::mean;
+use gpparallel::linalg::{mean, SimdLevel};
 use gpparallel::models::{BayesianGplvm, SparseGpRegression};
 use gpparallel::optim::Lbfgs;
 use gpparallel::runtime::Manifest;
@@ -30,6 +30,15 @@ fn engine_config(a: &Args) -> Result<(EngineConfig, String)> {
     let backend = BackendKind::parse(a.get("backend").unwrap_or("cpu"))
         .ok_or_else(|| anyhow::anyhow!("--backend must be cpu|parallel[:N]|xla"))?;
     let aot = a.get("aot-config").unwrap_or("paper").to_string();
+    // --simd off|scalar|native pins the dispatch tier; "auto" (or absent)
+    // defers to GPPAR_SIMD and then CPU detection
+    let simd = match a.get("simd") {
+        None => None,
+        Some(s) if s.eq_ignore_ascii_case("auto") => None,
+        Some(s) => Some(SimdLevel::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("--simd must be off|scalar|native|auto, got {s:?}")
+        })?),
+    };
     let cfg = EngineConfig {
         workers: a.get_parse("workers", 1usize)?,
         chunk: a.get_parse("chunk", 1024usize)?,
@@ -41,6 +50,7 @@ fn engine_config(a: &Args) -> Result<(EngineConfig, String)> {
         }),
         pipeline: !a.flag("no-pipeline"),
         verbose: a.flag("verbose"),
+        simd,
     };
     Ok((cfg, aot))
 }
@@ -209,6 +219,7 @@ fn main() -> Result<()> {
             println!("usage: gpparallel <train-bgplvm|train-sgpr|predict|time|info> [options]");
             println!("options: --n --q --d --m --workers --chunk --backend cpu|parallel[:N]|xla");
             println!("         --iters --evals --seed --artifacts --aot-config --verbose");
+            println!("         --simd off|scalar|native|auto (f64 microkernel dispatch tier)");
             println!("         --nt --batch (predict: test rows, serving batch granularity)");
             println!("         --refit-demo (predict: hot-swap the posterior mid-session)");
             println!("         --stream (predict: pipeline --batch-row serving batches)");

@@ -6,6 +6,7 @@
 //! unpack round-trip is unit-tested.
 
 use crate::kern::RbfArd;
+use crate::linalg::simd;
 use crate::linalg::Mat;
 
 /// The paper's global statistics: ψ0 (φ), P = Ψ1ᵀ(w∘Y) (the paper's Ψ),
@@ -177,9 +178,7 @@ pub fn bgplvm_stats_fwd_cached(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &
         let yrow = y.row(n);
         for mm in 0..m {
             let pv = prow[mm] * w[n];
-            for dd in 0..d {
-                p[(mm, dd)] += pv * yrow[dd];
-            }
+            simd::axpy(p.row_mut(mm), pv, yrow);
         }
     }
 
@@ -195,7 +194,7 @@ pub fn bgplvm_stats_fwd_cached(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &
         }
         n_eff += w[n];
         let yrow = y.row(n);
-        tryy += w[n] * yrow.iter().map(|v| v * v).sum::<f64>();
+        tryy += w[n] * simd::dot(yrow, yrow);
         for qq in 0..mu.cols() {
             let (mv, sv) = (mu[(n, qq)], s[(n, qq)]);
             kl += 0.5 * w[n] * (sv + mv * mv - 1.0 - sv.ln());
@@ -245,7 +244,7 @@ pub fn sgpr_stats_fwd_cached(kern: &RbfArd, x: &Mat, w: &[f64], y: &Mat,
             continue;
         }
         n_eff += w[n];
-        tryy += w[n] * y.row(n).iter().map(|v| v * v).sum::<f64>();
+        tryy += w[n] * simd::dot(y.row(n), y.row(n));
     }
     // kl = 0: log S is −∞ at S=0; supervised bound has no KL term
     (Stats { psi0, p, psi2, tryy, kl: 0.0, n_eff }, kfu)
@@ -319,9 +318,10 @@ fn stats_vjp_impl(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &Mat,
                   z: &Mat, cts: &StatsCts, c_kl: f64, psi1: Option<&Mat>)
                   -> ChunkGrads {
     let (c, q) = (mu.rows(), mu.cols());
-    let (m, d) = (z.rows(), y.cols());
+    let m = z.rows();
 
-    // c_P -> c_Ψ1: c_Ψ1[n, m] = w_n Σ_d c_P[m, d] y[n, d]
+    // c_P -> c_Ψ1: c_Ψ1[n, m] = w_n Σ_d c_P[m, d] y[n, d] — the Ψ1-VJP
+    // cotangent build, an O(C·M·D) row-dot on the SIMD primitive.
     let mut c_psi1 = Mat::zeros(c, m);
     for n in 0..c {
         if w[n] == 0.0 {
@@ -329,11 +329,7 @@ fn stats_vjp_impl(kern: &RbfArd, mu: &Mat, s: &Mat, w: &[f64], y: &Mat,
         }
         let yrow = y.row(n);
         for mm in 0..m {
-            let mut acc = 0.0;
-            let crow = cts.c_p.row(mm);
-            for dd in 0..d {
-                acc += crow[dd] * yrow[dd];
-            }
+            let acc = simd::dot(cts.c_p.row(mm), yrow);
             c_psi1[(n, mm)] = w[n] * acc;
         }
     }

@@ -7,3 +7,4 @@
 
 pub mod fd;
 pub mod prop;
+pub mod ulp;

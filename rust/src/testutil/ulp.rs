@@ -1,0 +1,116 @@
+//! Ulp-distance assertions for SIMD-vs-scalar property tests.
+//!
+//! SIMD tiers reorder reductions and fuse multiply-adds, so rewritten
+//! kernels agree with their scalar references only to within a few units
+//! in the last place — "tight-ulp", not bitwise. `ulp_distance` counts
+//! representable doubles between two values; `assert_close_ulps` adds an
+//! absolute-tolerance escape for the two places where ulp counting is the
+//! wrong lens: cancellation in mixed-sign sums (tiny absolute error, huge
+//! relative error) and the deep tails of `exp` (ditto).
+
+/// Number of representable `f64` values strictly between `a` and `b`
+/// (0 when equal, including `+0.0` vs `-0.0`). NaNs and values straddling
+/// a sign change map to distances large enough to fail any sane bound.
+pub fn ulp_distance(a: f64, b: f64) -> u64 {
+    if a == b {
+        return 0;
+    }
+    if a.is_nan() || b.is_nan() {
+        return u64::MAX;
+    }
+    ordered(a).abs_diff(ordered(b))
+}
+
+/// Monotone map from f64 to i64: preserves ordering, adjacent floats map
+/// to adjacent integers, and ±0.0 both map to 0.
+fn ordered(x: f64) -> i64 {
+    let bits = x.to_bits() as i64;
+    if bits < 0 { i64::MIN.wrapping_sub(bits) } else { bits }
+}
+
+/// Assert `got` is within `max_ulps` of `want`, or within `abs_tol`
+/// absolutely (pass `abs_tol = 0.0` to disable the escape). Panics with
+/// both distances on failure.
+pub fn assert_close_ulps(got: f64, want: f64, max_ulps: u64, abs_tol: f64, what: &str) {
+    let ulps = ulp_distance(got, want);
+    if ulps <= max_ulps {
+        return;
+    }
+    let abs = (got - want).abs();
+    if abs <= abs_tol {
+        return;
+    }
+    panic!(
+        "{what}: got {got:e}, want {want:e} — {ulps} ulps apart (max {max_ulps}), \
+         |diff| = {abs:e} (abs_tol {abs_tol:e})"
+    );
+}
+
+/// [`assert_close_ulps`] over every element of two equal-shape matrices.
+pub fn assert_mat_close_ulps(got: &crate::linalg::Mat, want: &crate::linalg::Mat,
+                             max_ulps: u64, abs_tol: f64, what: &str) {
+    assert_eq!((got.rows(), got.cols()), (want.rows(), want.cols()), "{what}: shape");
+    for i in 0..got.rows() {
+        for j in 0..got.cols() {
+            assert_close_ulps(got[(i, j)], want[(i, j)], max_ulps, abs_tol,
+                              &format!("{what}[{i},{j}]"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_values_are_zero_ulps() {
+        assert_eq!(ulp_distance(1.5, 1.5), 0);
+        assert_eq!(ulp_distance(0.0, -0.0), 0);
+        assert_eq!(ulp_distance(f64::INFINITY, f64::INFINITY), 0);
+    }
+
+    #[test]
+    fn adjacent_floats_are_one_ulp() {
+        let x = 1.0f64;
+        let next = f64::from_bits(x.to_bits() + 1);
+        assert_eq!(ulp_distance(x, next), 1);
+        let neg = -2.5f64;
+        let neg_next = f64::from_bits(neg.to_bits() + 1); // toward -inf
+        assert_eq!(ulp_distance(neg, neg_next), 1);
+    }
+
+    #[test]
+    fn distance_is_symmetric_and_monotone() {
+        assert_eq!(ulp_distance(1.0, 2.0), ulp_distance(2.0, 1.0));
+        assert!(ulp_distance(1.0, 1.0000000001) < ulp_distance(1.0, 1.1));
+    }
+
+    #[test]
+    fn sign_crossing_counts_through_zero() {
+        // -min_subnormal .. +min_subnormal is 2 ulps (one step to ±0).
+        let tiny = f64::from_bits(1);
+        assert_eq!(ulp_distance(-tiny, tiny), 2);
+        assert!(ulp_distance(-1.0, 1.0) > u64::MAX / 4);
+    }
+
+    #[test]
+    fn nan_is_maximally_far() {
+        assert_eq!(ulp_distance(f64::NAN, 1.0), u64::MAX);
+        assert_eq!(ulp_distance(1.0, f64::NAN), u64::MAX);
+    }
+
+    #[test]
+    fn assert_close_ulps_accepts_within_bounds() {
+        let x = 1.0f64;
+        let next = f64::from_bits(x.to_bits() + 2);
+        assert_close_ulps(x, next, 2, 0.0, "two ulps");
+        // Cancellation escape: far in ulps, close absolutely.
+        assert_close_ulps(1e-30, -1e-30, 0, 1e-12, "abs escape");
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_ulps_rejects_out_of_bounds() {
+        assert_close_ulps(1.0, 1.1, 4, 1e-6, "must fail");
+    }
+}

@@ -34,6 +34,7 @@ fn cfg(workers: usize, chunk: usize, backend: BackendKind, iters: usize) -> Engi
         opt: OptChoice::Lbfgs(Lbfgs { max_iters: iters, ..Default::default() }),
         pipeline: true,
         verbose: false,
+        simd: None,
     }
 }
 

@@ -27,6 +27,7 @@ fn cfg(workers: usize, chunk: usize, backend: BackendKind, iters: usize,
         opt: OptChoice::Lbfgs(Lbfgs { max_iters: iters, ..Default::default() }),
         pipeline,
         verbose: false,
+        simd: None,
     }
 }
 

@@ -154,6 +154,72 @@ fn distributed_matches_single_node_ranks_1_to_9() {
     }
 }
 
+/// Regression for the leader-side compute/gather overlap: before
+/// computing its own shard, the leader now drains already-arrived worker
+/// payloads into its parked queue (`Comm::drain_pending`), so delivery
+/// overlaps the rank-0 compute instead of queueing behind it. The drain
+/// moves messages — it never sends — so the session's total message
+/// count must be exactly the protocol formula (open + per-batch
+/// announce/shards/gather + close), and the assembled output must stay
+/// bit-identical to the single-node posterior.
+#[test]
+fn leader_overlap_drain_sends_nothing_and_stays_bit_identical() {
+    let core = toy_core(71, 60, 10, 2, 3);
+    let single = Posterior::from_core(core.clone());
+    let mut rng = Rng64::new(72);
+    let batches: Vec<Mat> = [17usize, 3, 9]
+        .iter()
+        .map(|&nt| Mat::from_fn(nt, 2, |_, _| rng.normal()))
+        .collect();
+    let expect: Vec<(Mat, Vec<f64>)> =
+        batches.iter().map(|b| single.predict(b)).collect();
+    let rpc = 4usize;
+
+    for size in [2usize, 3, 5] {
+        let (core_ref, bs) = (&core, &batches);
+        let results = Cluster::run(size, move |mut comm| {
+            let mut backend = RustCpuBackend;
+            let out = if comm.rank() == 0 {
+                let mut dp = DistributedPosterior::leader(core_ref.clone(), rpc,
+                                                          &mut comm);
+                let out: Vec<(Mat, Vec<f64>)> = bs
+                    .iter()
+                    .map(|b| dp.predict(&mut comm, &mut backend, b).unwrap())
+                    .collect();
+                dp.finish(&mut comm);
+                Some(out)
+            } else {
+                worker_serve(&mut comm, &mut backend).unwrap();
+                None
+            };
+            // linear fan-in sync: when the root returns, every rank's
+            // prior sends are on the shared counter (a tree barrier
+            // leaks in-flight forwards, so the count would be racy)
+            comm.reduce_sum_linear(0, &[]);
+            out.map(|o| (o, comm.messages_sent()))
+        });
+        let (got, messages) = results[0].as_ref().expect("leader output");
+        for (i, ((gm, gv), (em, ev))) in got.iter().zip(&expect).enumerate() {
+            assert!(gm.max_abs_diff(em) == 0.0, "size {size} batch {i}: mean");
+            assert_eq!(gv, ev, "size {size} batch {i}: var");
+        }
+        // open bcast + per-batch (announce bcast + shard sends + gather)
+        // + DONE bcast + the sync reduce itself; each tree bcast and
+        // each gather moves exactly P−1 messages cluster-wide
+        let p1 = (size - 1) as u64;
+        let shard_sends: u64 = batches
+            .iter()
+            .map(|b| {
+                let part = Partition::new(b.rows(), rpc, size);
+                (1..size).filter(|&r| part.worker_span(r).is_some()).count() as u64
+            })
+            .sum();
+        let want = p1 * (3 + 2 * batches.len() as u64) + shard_sends;
+        assert_eq!(*messages, want,
+                   "size {size}: the overlap drain must not add or drop messages");
+    }
+}
+
 /// Training → serving hand-off on one cluster: `train_then_predict`
 /// must serve the posterior implied by the fitted parameters
 /// (cross-checked against a freshly built single-node posterior), for a
@@ -185,6 +251,7 @@ fn train_then_predict_matches_single_node_posterior() {
             opt: OptChoice::Lbfgs(Lbfgs { max_iters: 5, ..Default::default() }),
             pipeline: true,
             verbose: false,
+            simd: None,
         };
         let problem = SparseGpRegression::problem(&x, &ds.y, 8, "test", 5);
         let engine = Engine::new(problem, cfg).unwrap();
@@ -232,6 +299,7 @@ fn eval_cfg(workers: usize, chunk: usize, backend: BackendKind) -> EngineConfig 
         opt: OptChoice::Lbfgs(Lbfgs::default()),
         pipeline: true,
         verbose: false,
+        simd: None,
     }
 }
 
@@ -709,6 +777,7 @@ fn train_then_predict_skips_the_stats_round_when_capture_hits() {
         opt: OptChoice::Lbfgs(Lbfgs { max_iters: 0, ..Default::default() }),
         pipeline: true,
         verbose: false,
+        simd: None,
     };
     let mk = || SparseGpRegression::problem(&x, &ds.y, 6, "test", 41);
     let train_only = Engine::new(mk(), cfg.clone()).unwrap().train().unwrap();
@@ -755,6 +824,7 @@ fn train_then_predict_stream_matches_sequential_serving() {
         opt: OptChoice::Lbfgs(Lbfgs { max_iters: 3, ..Default::default() }),
         pipeline: true,
         verbose: false,
+        simd: None,
     };
     let mk = || SparseGpRegression::problem(&x, &ds.y, 6, "test", 51);
     let mut rng = Rng64::new(52);
@@ -792,6 +862,7 @@ fn train_then_predict_rejects_unsupervised_problems() {
         opt: OptChoice::Lbfgs(Lbfgs { max_iters: 2, ..Default::default() }),
         pipeline: true,
         verbose: false,
+        simd: None,
     };
     let engine = Engine::new(problem, cfg).unwrap();
     let xstar = Mat::from_fn(4, 1, |i, _| i as f64);

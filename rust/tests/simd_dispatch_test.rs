@@ -1,0 +1,128 @@
+//! Integration test for the process-global SIMD dispatch level.
+//!
+//! The in-crate property tests pin each tier's *numerics* (scalar
+//! reference vs chunked-scalar vs AVX2+FMA, per kernel, via the `_at`
+//! variants, without touching the global). This binary exercises the
+//! *global* instead: the env-resolved startup level, `set_active`
+//! actually redirecting the public kernel wrappers, and `EngineConfig`
+//! plumbing the level through `Engine::new`.
+//!
+//! CI runs the whole test suite twice — once unadorned and once under
+//! `GPPAR_SIMD=off` — and the first assertion here is what gives the
+//! off-job teeth: with the variable set, every public kernel in that job
+//! demonstrably runs the bit-identical pre-SIMD scalar code.
+//!
+//! Everything lives in ONE `#[test]` on purpose: cargo runs a binary's
+//! tests on parallel threads, and these steps mutate the process-global
+//! level. Sequencing inside a single test is the only race-free option.
+
+use gpparallel::config::BackendKind;
+use gpparallel::coordinator::{Engine, EngineConfig, OptChoice};
+use gpparallel::data::synthetic::{generate, SyntheticSpec};
+use gpparallel::kern::RbfArd;
+use gpparallel::linalg::simd::{self, SimdLevel};
+use gpparallel::linalg::Mat;
+use gpparallel::models::BayesianGplvm;
+use gpparallel::optim::Lbfgs;
+use gpparallel::testutil::prop::Rng64;
+use gpparallel::testutil::ulp::assert_mat_close_ulps;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Run every public kernel the SIMD rewrite touched, at the current
+/// global level, and bundle the outputs for comparison across levels.
+fn kernel_outputs(seed: u64) -> (Mat, Mat, Mat, Mat, Mat) {
+    let mut rng = Rng64::new(seed);
+    // deliberately non-multiple-of-4 dims so lane tails are exercised
+    let a = Mat::from_fn(19, 13, |_, _| rng.normal());
+    let b = Mat::from_fn(13, 17, |_, _| rng.normal());
+    let (c, m, q) = (23usize, 7usize, 3usize);
+    let mu = Mat::from_fn(c, q, |_, _| rng.normal());
+    let s = Mat::from_fn(c, q, |_, _| 0.2 + rng.normal().abs());
+    let z = Mat::from_fn(m, q, |_, _| rng.normal());
+    let w: Vec<f64> = (0..c).map(|_| 0.5 + rng.normal().abs()).collect();
+    let kern = RbfArd::new(1.3, vec![0.8, 1.1, 0.6]);
+    (
+        a.matmul(&b),
+        a.t_matmul(&a),
+        kern.k(&mu, &z),
+        kern.psi1(&mu, &s, &z),
+        kern.psi2(&mu, &s, &w, &z),
+    )
+}
+
+#[test]
+fn global_dispatch_env_set_active_and_engine_config() {
+    // -- 1. startup resolution honours GPPAR_SIMD ---------------------
+    // `active()` has not been forced yet in this process, so the first
+    // call performs the lazy env resolution `Engine::new`-less binaries
+    // (and every rank of a cluster) see at startup.
+    let startup = simd::active();
+    match std::env::var("GPPAR_SIMD").ok().as_deref().and_then(SimdLevel::parse) {
+        Some(pinned) => assert_eq!(
+            startup, pinned,
+            "GPPAR_SIMD is set: the startup level must obey it"
+        ),
+        None => {
+            // auto: never the Off escape hatch, Native only if detected
+            assert_ne!(startup, SimdLevel::Off, "auto-detection must never pick Off");
+            if startup == SimdLevel::Native {
+                assert!(simd::native_available());
+            }
+        }
+    }
+
+    // -- 2. set_active redirects the public kernel wrappers -----------
+    // Off twice must be bitwise-reproducible (it is plain sequential
+    // scalar code), and every other tier must agree with Off to tight
+    // ulps on the same inputs.
+    simd::set_active(SimdLevel::Off);
+    assert_eq!(simd::active(), SimdLevel::Off);
+    let off = kernel_outputs(42);
+    let off_again = kernel_outputs(42);
+    for (x, y) in [
+        (&off.0, &off_again.0),
+        (&off.1, &off_again.1),
+        (&off.2, &off_again.2),
+        (&off.3, &off_again.3),
+        (&off.4, &off_again.4),
+    ] {
+        assert_mat_close_ulps(x, y, 0, 0.0, "Off tier must be deterministic");
+    }
+    for level in [SimdLevel::Scalar, SimdLevel::Native] {
+        simd::set_active(level);
+        let got = kernel_outputs(42);
+        let what = |k: &str| format!("{k} at {} vs Off", level.name());
+        assert_mat_close_ulps(&got.0, &off.0, 64, 1e-12, &what("matmul"));
+        assert_mat_close_ulps(&got.1, &off.1, 64, 1e-12, &what("t_matmul"));
+        assert_mat_close_ulps(&got.2, &off.2, 4096, 1e-12, &what("k"));
+        assert_mat_close_ulps(&got.3, &off.3, 4096, 1e-12, &what("psi1"));
+        assert_mat_close_ulps(&got.4, &off.4, 4096, 1e-12, &what("psi2"));
+    }
+
+    // -- 3. EngineConfig { simd: Some(level) } wins over everything ---
+    let spec = SyntheticSpec { n: 40, q: 1, d: 2, ..Default::default() };
+    let ds = generate(&spec, 3);
+    for level in [SimdLevel::Scalar, SimdLevel::Off] {
+        let cfg = EngineConfig {
+            workers: 1,
+            chunk: 32,
+            backend: BackendKind::RustCpu,
+            artifacts_dir: artifacts_dir(),
+            opt: OptChoice::Lbfgs(Lbfgs { max_iters: 0, ..Default::default() }),
+            pipeline: true,
+            verbose: false,
+            simd: Some(level),
+        };
+        let problem = BayesianGplvm::problem(&ds.y, 1, 8, "test", 3);
+        let _engine = Engine::new(problem, cfg).expect("engine construction");
+        assert_eq!(simd::active(), level,
+                   "Engine::new must apply cfg.simd process-wide");
+    }
+
+    // leave the process at its startup level for any later assertions
+    simd::set_active(startup);
+}

@@ -53,6 +53,9 @@ KNOWN_OP_FAMILIES = [
     # posterior rebuild from the captured final-eval statistics (zero
     # collective rounds; only the leader's M×M factorisations remain)
     r"free_stats",
+    # SIMD dispatch tiers: the rewired microkernels at the scalar escape
+    # hatch ("off") vs the chunked-scalar / AVX2+FMA tiers
+    r"simd_(matmul|syrk|psi1|psi2)_(off|scalar|native)",
 ]
 _KNOWN_OPS = re.compile("^(?:" + "|".join(KNOWN_OP_FAMILIES) + ")$")
 
