@@ -513,6 +513,145 @@ fn main() -> anyhow::Result<()> {
         simd::set_active(default_level);
     }
 
+    // ---------------------------------------------------------------
+    // 10. serving front-end under concurrent load: C closed-loop
+    //     single-row clients through the micro-batching scheduler vs
+    //     the same requests served sequentially (no coalescing). The
+    //     scheduler's win is rows-per-cluster-round: at C=8 the
+    //     deadline-coalesced batches amortise the leader round-trip
+    //     across ~C rows.
+    // ---------------------------------------------------------------
+    println!("\n== serving front-end: closed-loop single-row clients (2 ranks) ==");
+    println!("{:>8} {:>12} {:>12} {:>12} {:>8}",
+             "clients", "p50 µs", "p99 µs", "rows/s", "fill");
+    {
+        use gpparallel::collectives::Cluster;
+        use gpparallel::coordinator::engine::serve::{worker_serve, DistributedPosterior};
+        use gpparallel::coordinator::{FrontendConfig, RustCpuBackend, ServingFrontend};
+        use gpparallel::math::predict::PosteriorCore;
+        use gpparallel::math::stats::sgpr_stats_fwd;
+        use std::time::Duration;
+
+        let (n_fit, m, q, d) = (1024usize, 64usize, 1usize, 2usize);
+        let spec = SyntheticSpec { n: n_fit, q, d, ..Default::default() };
+        let dsf = generate_supervised(&spec, 30);
+        let xf = dsf.x.clone().unwrap();
+        let zf = Mat::from_fn(m, q, |i, _| -2.0 + 4.0 * i as f64 / (m - 1) as f64);
+        let kernf = RbfArd::iso(1.0, 1.0, q);
+        let wf = vec![1.0; n_fit];
+        let stf = sgpr_stats_fwd(&kernf, &xf, &wf, &dsf.y, &zf);
+        let core = PosteriorCore::new(kernf, zf, 50.0, &stf)?;
+
+        let k_req = if fast { 64usize } else { 256 };
+        let nt = 512usize;
+        let mut rngp = Rng64::new(31);
+        let xstar = Mat::from_fn(nt, q, |_, _| rngp.uniform_range(-2.0, 2.0));
+
+        // sequential baseline: the same single-row requests, one
+        // cluster round each, no coalescing
+        let (core_ref, xs_ref) = (&core, &xstar);
+        let results = Cluster::run(2, move |mut comm| {
+            let mut backend = RustCpuBackend;
+            if comm.rank() == 0 {
+                let mut dp = DistributedPosterior::leader(core_ref.clone(), 16, &mut comm);
+                let mut mean = Mat::zeros(0, 0);
+                let mut var = Vec::new();
+                let one = |row: usize| {
+                    Mat::from_vec(1, q, xs_ref.as_slice()[row * q..(row + 1) * q].to_vec())
+                };
+                dp.predict_into(&mut comm, &mut backend, &one(0), &mut mean, &mut var)
+                    .expect("warmup");
+                let t0 = Instant::now();
+                for i in 0..k_req {
+                    dp.predict_into(&mut comm, &mut backend, &one(i % nt), &mut mean,
+                                    &mut var).expect("predict");
+                }
+                let per = t0.elapsed().as_secs_f64() / k_req as f64;
+                dp.finish(&mut comm);
+                per
+            } else {
+                worker_serve(&mut comm, &mut backend).expect("serve");
+                0.0
+            }
+        });
+        let t_seq = results[0];
+        println!("{:>8} {:>12.1} {:>12.1} {:>12.0} {:>8}",
+                 "seq", t_seq * 1e6, t_seq * 1e6, 1.0 / t_seq, "-");
+        rec.push("frontend_seq_1row", 1, t_seq);
+
+        let mut rows_per_sec_c8 = 0.0;
+        for clients in [1usize, 4, 8] {
+            let (core_ref, xs_ref) = (&core, &xstar);
+            let results = Cluster::run(2, move |mut comm| {
+                let mut backend = RustCpuBackend;
+                if comm.rank() == 0 {
+                    let mut dp = DistributedPosterior::leader(core_ref.clone(), 16,
+                                                              &mut comm);
+                    let fe = ServingFrontend::new(FrontendConfig {
+                        max_batch_rows: 32,
+                        max_wait: Duration::from_micros(50),
+                        queue_rows: 1024,
+                        dump_every: None,
+                    }, q, d);
+                    let t0 = Instant::now();
+                    let (report, mut lats) = std::thread::scope(|s| {
+                        let handle = fe.handle();
+                        let client_joins: Vec<_> = (0..clients).map(|c| {
+                            let h = handle.clone();
+                            s.spawn(move || {
+                                let mut lats = Vec::with_capacity(k_req);
+                                for i in 0..k_req {
+                                    let row = (c * k_req + i) % nt;
+                                    let xrow = Mat::from_vec(
+                                        1, q,
+                                        xs_ref.as_slice()[row * q..(row + 1) * q].to_vec());
+                                    let t = Instant::now();
+                                    h.predict(xrow).expect("predict");
+                                    lats.push(t.elapsed().as_secs_f64());
+                                }
+                                lats
+                            })
+                        }).collect();
+                        // closer: when every client is done, close the
+                        // queue so the scheduler below drains and returns
+                        let closer = s.spawn(move || {
+                            let mut all = Vec::new();
+                            for j in client_joins {
+                                all.extend(j.join().expect("client thread"));
+                            }
+                            handle.close();
+                            all
+                        });
+                        let report = fe.run(&mut dp, &mut comm, &mut backend);
+                        (report, closer.join().expect("closer thread"))
+                    });
+                    let wall = t0.elapsed().as_secs_f64();
+                    dp.finish(&mut comm);
+                    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    let p50 = lats[lats.len() / 2];
+                    let p99 = lats[(lats.len() * 99 / 100).min(lats.len() - 1)];
+                    let rps = (clients * k_req) as f64 / wall;
+                    Some((p50, p99, rps, report.snapshot.batch_fill))
+                } else {
+                    worker_serve(&mut comm, &mut backend).expect("serve");
+                    None
+                }
+            });
+            let (p50, p99, rps, fill) = results[0].expect("leader timing");
+            println!("{:>8} {:>12.1} {:>12.1} {:>12.0} {:>8.3}",
+                     clients, p50 * 1e6, p99 * 1e6, rps, fill);
+            rec.push(&format!("frontend_load_c{clients}_p50"), clients, p50);
+            rec.push(&format!("frontend_load_c{clients}_p99"), clients, p99);
+            rec.push(&format!("frontend_load_c{clients}_row"), clients * k_req, 1.0 / rps);
+            if clients == 8 {
+                rows_per_sec_c8 = rps;
+            }
+        }
+        println!("  c=8 throughput vs sequential: {:.2}x (micro-batching amortises the \
+                  per-round leader round-trip)",
+                 rows_per_sec_c8 * t_seq);
+    }
+
     rec.write("BENCH_micro.json")?;
     println!("\nwrote BENCH_micro.json ({} records)", rec.0.len());
     Ok(())

@@ -106,7 +106,9 @@ const ENGINE_FLAGS: &[&str] = &["verbose", "no-pipeline", "help"];
 pub fn known_options(cmd: &str) -> Option<Vec<&'static str>> {
     let (base, extra): (&[&str], &[&str]) = match cmd {
         "train-bgplvm" | "train-sgpr" => (ENGINE_OPTIONS, &["iters"]),
-        "predict" => (ENGINE_OPTIONS, &["iters", "nt", "batch"]),
+        "predict" => (ENGINE_OPTIONS,
+                      &["iters", "nt", "batch", "clients", "max-batch-rows",
+                        "max-wait-us", "serve-requests", "req-rows", "queue-rows"]),
         "time" => (ENGINE_OPTIONS, &["evals"]),
         "info" => (&[], &["artifacts"]),
         "help" => (&[], &[]),
@@ -122,7 +124,7 @@ pub fn known_options(cmd: &str) -> Option<Vec<&'static str>> {
 pub fn known_flags(cmd: &str) -> Vec<&'static str> {
     let (base, extra): (&[&str], &[&str]) = match cmd {
         "train-bgplvm" | "train-sgpr" | "time" => (ENGINE_FLAGS, &[]),
-        "predict" => (ENGINE_FLAGS, &["refit-demo", "stream"]),
+        "predict" => (ENGINE_FLAGS, &["refit-demo", "stream", "serve"]),
         _ => (&[], &["help"]),
     };
     base.iter().chain(extra).copied().collect()
@@ -206,6 +208,15 @@ mod tests {
         // `--stream` (streamed serving) is predict-only too
         assert!(known_flags("predict").contains(&"stream"));
         assert!(!known_flags("time").contains(&"stream"));
+        // so is the front-end's `--serve` mode and its knobs
+        assert!(known_flags("predict").contains(&"serve"));
+        assert!(!known_flags("train-sgpr").contains(&"serve"));
+        let p = known_options("predict").unwrap();
+        for opt in ["clients", "max-batch-rows", "max-wait-us", "serve-requests",
+                    "req-rows", "queue-rows"] {
+            assert!(p.contains(&opt), "{opt}");
+            assert!(!known_options("time").unwrap().contains(&opt), "{opt}");
+        }
     }
 
     #[test]

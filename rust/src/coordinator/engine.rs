@@ -37,6 +37,15 @@
 //!   (`posterior_core_at`), and can be **hot-swapped** mid-session at
 //!   new parameters (`refit_and_swap`, or a standalone
 //!   `DistributedPosterior::rebroadcast`).
+//! - [`frontend`] — the concurrent-client serving front-end: N client
+//!   handles enqueue prediction rows into a bounded queue
+//!   (backpressure), a batcher coalesces them into size-or-deadline
+//!   micro-batches through the streamed issue/complete machinery (two
+//!   in flight), and replies fan back out to the callers — bit-identical
+//!   per request to a direct `predict_into`, with Prometheus-style
+//!   latency/throughput metrics ([`ServingFrontend`],
+//!   [`FrontendHandle`], `Engine::train_then_serve`, CLI
+//!   `predict --serve`).
 //!
 //! The engine is **multi-view** from the start: SGPR is one supervised
 //! view, the Bayesian GP-LVM is one unsupervised view, MRD is several
@@ -48,11 +57,13 @@
 //! `models::*`, the examples and the tests import exactly as before.
 
 pub mod cycle;
+pub mod frontend;
 pub mod problem;
 pub mod serve;
 pub mod train;
 
 pub use cycle::DistributedEvaluator;
+pub use frontend::{FrontendConfig, FrontendHandle, ServingFrontend, ServingReport};
 pub use problem::{Fitted, LatentSpec, Problem, ViewSpec};
 pub use serve::{DistributedPosterior, ServeSignal};
 pub use train::{Engine, EngineConfig, OptChoice, TrainResult};

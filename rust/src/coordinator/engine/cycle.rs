@@ -83,6 +83,7 @@
 
 use super::problem::{pad_globals, unpack_globals, GlobalParams, LatentSpec, ParamLayout,
                      Problem};
+use super::frontend::{ControlOp, ServeDriver, ServingFrontend, ServingReport};
 use super::serve::{DistributedPosterior, ServeSignal};
 use super::train::EngineConfig;
 use crate::collectives::Comm;
@@ -1340,6 +1341,25 @@ impl DistributedEvaluator {
         }
     }
 
+    /// Leader: drive a [`ServingFrontend`]'s micro-batcher over the
+    /// open serving session — concurrent client handles enqueue rows,
+    /// the batcher coalesces them through the streamed issue/complete
+    /// machinery, and replies fan back out
+    /// ([`super::frontend`] has the full semantics). Returns when the
+    /// front-end is closed and drained; the serving session itself stays
+    /// open. On a training cluster,
+    /// [`refit`](super::frontend::FrontendHandle::refit) works: it
+    /// routes through
+    /// [`refit_and_swap`](DistributedEvaluator::refit_and_swap) on a
+    /// batch boundary.
+    pub fn serve_frontend(&mut self, fe: &ServingFrontend) -> Result<ServingReport> {
+        if self.sharded.is_none() {
+            return Err(anyhow!("no serving session: call begin_serving first"));
+        }
+        let mut drv = EvaluatorServeDriver { ev: self };
+        Ok(fe.run_driver(&mut drv))
+    }
+
     /// Leader: close the serving session (workers park back at the
     /// training command broadcast, ready for `eval` or `finish`).
     pub fn end_serving(&mut self) -> Result<()> {
@@ -1637,6 +1657,63 @@ impl DistributedEvaluator {
             let _ = self.comm.reduce_sum_into(0, &mut scratch.grads_wire);
             let _ = self.gather_locals(scratch, vjp_ok);
         }
+    }
+}
+
+/// The serving front-end's view of a training cluster: the batch
+/// issue/complete halves go through the evaluator's open serving
+/// session (`sharded`) with its own comm and rank-0 backend, and the
+/// `Refit` control routes through the distributed stats pass
+/// ([`DistributedEvaluator::refit_and_swap`]) — the one thing the
+/// standalone driver cannot do.
+struct EvaluatorServeDriver<'a> {
+    ev: &'a mut DistributedEvaluator,
+}
+
+impl EvaluatorServeDriver<'_> {
+    /// The open session (checked by `serve_frontend` before the batcher
+    /// starts; nothing closes it mid-run).
+    fn dp_and_ctx(&mut self) -> (&mut DistributedPosterior, &mut Comm, &mut dyn Backend) {
+        let ev = &mut *self.ev;
+        (ev.sharded.as_mut().expect("serving session checked open"),
+         &mut ev.comm, ev.state.backends[0].as_mut())
+    }
+}
+
+impl ServeDriver for EvaluatorServeDriver<'_> {
+    fn prepare(&mut self, batch: &Mat, mean: &mut Mat, var: &mut Vec<f64>)
+               -> Result<()> {
+        let (dp, _, _) = self.dp_and_ctx();
+        dp.prepare_outputs(batch, mean, var)
+    }
+
+    fn issue(&mut self, batch: &Mat, stream: bool) {
+        let (dp, comm, _) = self.dp_and_ctx();
+        dp.issue_batch(comm, batch, stream);
+    }
+
+    fn complete(&mut self, batch: &Mat, mean: &mut Mat, var: &mut Vec<f64>)
+                -> Result<()> {
+        let (dp, comm, backend) = self.dp_and_ctx();
+        dp.complete_batch(comm, backend, batch, mean, var)
+    }
+
+    fn control(&mut self, op: ControlOp) -> Result<()> {
+        match op {
+            ControlOp::Swap(core) => {
+                let (dp, comm, _) = self.dp_and_ctx();
+                dp.rebroadcast(*core, comm);
+                Ok(())
+            }
+            // a failed refit is atomic (no swap broadcast): the session
+            // keeps serving the old posterior and the error goes back to
+            // the control's caller
+            ControlOp::Refit(x) => self.ev.refit_and_swap(&x),
+        }
+    }
+
+    fn comm_counters(&self) -> (u64, u64) {
+        (self.ev.comm.bytes_sent(), self.ev.comm.messages_sent())
     }
 }
 

@@ -1,0 +1,752 @@
+//! Concurrent-client serving front-end: a dynamic micro-batching
+//! scheduler over the streamed predict pipeline.
+//!
+//! The streamed serving protocol (`serve.rs`) is single-caller: one
+//! leader-side loop issues batches and collects gathers. This module
+//! puts a **request scheduler** in front of it so N concurrent clients
+//! share one cluster:
+//!
+//! ```text
+//!   client 0 ──┐                           ┌─▸ reply (mean, var) ── client 0
+//!   client 1 ──┤  bounded     batcher      │
+//!      …       ├─▸ queue ──▸ (size-or-  ──▸┤  sharded cluster round
+//!   client N ──┘  (rows)      deadline)    │  (issue/complete, ≤2 in
+//!        ▲                      │          │   flight — predict_stream's
+//!        └────── backpressure ──┘          └─▸ machinery)   … fan-out
+//! ```
+//!
+//! - **Enqueue.** [`FrontendHandle::predict`] pushes a request's rows
+//!   into a bounded queue and blocks until its reply arrives. When the
+//!   queued rows would exceed [`FrontendConfig::queue_rows`] the enqueue
+//!   itself blocks (backpressure) — the queue never grows unboundedly. A
+//!   request larger than the whole capacity is still admitted, but only
+//!   once the queue is empty, so it cannot deadlock.
+//! - **Batching.** The batcher closes a micro-batch when the queued rows
+//!   reach [`FrontendConfig::max_batch_rows`] (size trigger) **or** the
+//!   oldest queued request has waited [`FrontendConfig::max_wait`]
+//!   (deadline trigger), whichever comes first. Coalescing is pure row
+//!   concatenation in arrival order.
+//! - **Cluster rounds.** Coalesced batches go through the exact
+//!   `issue_batch`/`complete_batch` halves `predict_stream` uses, with
+//!   at most two batches in flight; the stream flag is raised only for a
+//!   batch whose successor is issued immediately (a dangling flag would
+//!   deadlock the worker prefetch against the leader's gather).
+//! - **Fan-out.** A completed batch's rows are split back out to the
+//!   originating requests in arrival order. Because sharded serving is
+//!   bit-identical to the single-node posterior *row by row*, every
+//!   reply is **bit-identical** to a direct
+//!   [`DistributedPosterior::predict_into`] call on that request alone
+//!   (asserted in `rust/tests/frontend_test.rs` for ranks 1–9 × both
+//!   CPU backends).
+//! - **Controls.** [`FrontendHandle::swap`] / [`FrontendHandle::refit`]
+//!   are applied on a **batch boundary**: the batcher drains its
+//!   in-flight window first, so no coalesced batch ever mixes two
+//!   posteriors, and every reply is entirely pre-swap or entirely
+//!   post-swap. The calls block until the control has been applied.
+//! - **Failure.** A failed cluster round (poisoned worker, compute
+//!   error) fails *that batch's* requests with a clean error and leaves
+//!   the session usable — exactly `predict_stream`'s semantics; later
+//!   requests succeed again (e.g. after a good swap).
+//!
+//! Observability rides [`ServingMetrics`] (latency histogram,
+//! throughput, batch fill, queue depth, backpressure counters — see
+//! [`crate::metrics::serving`]) plus the serve-side [`Phase`] variants
+//! on the shared [`PhaseTimer`], and the transport's own message/byte
+//! counters; [`FrontendConfig::dump_every`] enables the periodic
+//! Prometheus-style dump the CLI's `predict --serve` mode prints.
+//!
+//! Two ways in, mirroring `serve.rs`: standalone over a raw [`Comm`]
+//! via [`ServingFrontend::run`], or from a training cluster via
+//! [`DistributedEvaluator::serve_frontend`](super::cycle::DistributedEvaluator::serve_frontend)
+//! (which is what [`Engine::train_then_serve`](super::train::Engine::train_then_serve)
+//! wires up end to end — there `refit` works too).
+
+use crate::collectives::Comm;
+use crate::coordinator::backend::Backend;
+use crate::linalg::Mat;
+use crate::math::predict::PosteriorCore;
+use crate::metrics::serving::{ServingMetrics, ServingSnapshot};
+use crate::metrics::{Phase, PhaseTimer};
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::serve::DistributedPosterior;
+
+/// Knobs of the micro-batching scheduler.
+#[derive(Clone, Debug)]
+pub struct FrontendConfig {
+    /// Size trigger: close a micro-batch once this many rows are queued
+    /// (a single larger request still goes through as one batch).
+    pub max_batch_rows: usize,
+    /// Deadline trigger: close a micro-batch once the oldest queued
+    /// request has waited this long, full or not.
+    pub max_wait: Duration,
+    /// Backpressure bound: enqueues block while the queue already holds
+    /// rows and admitting the request would push it past this many.
+    pub queue_rows: usize,
+    /// Print the Prometheus-style metrics dump (plus the serve-phase
+    /// timer summary) to stderr this often; `None` disables it.
+    pub dump_every: Option<Duration>,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        FrontendConfig {
+            max_batch_rows: 256,
+            max_wait: Duration::from_micros(200),
+            queue_rows: 4096,
+            dump_every: None,
+        }
+    }
+}
+
+/// A client's reply channel: the served rows or a displayable error.
+/// (`anyhow::Error` is not `Clone`, and one failed batch must error
+/// several requests, so the wire type is the rendered message.)
+type Reply = std::result::Result<(Mat, Vec<f64>), String>;
+
+/// One queued client request.
+struct Request {
+    rows: Mat,
+    tx: Sender<Reply>,
+    enqueued: Instant,
+}
+
+/// A control operation the batcher applies on a batch boundary.
+pub(crate) enum ControlOp {
+    /// Hot-swap the served posterior (standalone and training clusters).
+    Swap(Box<PosteriorCore>),
+    /// Refit at the given packed parameters through the distributed
+    /// stats pass, then swap (training clusters only).
+    Refit(Vec<f64>),
+}
+
+/// A control operation plus the channel its caller blocks on.
+struct ControlMsg {
+    op: ControlOp,
+    done: Sender<std::result::Result<(), String>>,
+}
+
+/// Everything behind the mutex: the request queue (with its row count),
+/// pending controls, and the closed flag.
+struct QueueState {
+    reqs: VecDeque<Request>,
+    /// Total rows across `reqs` (the backpressure quantity).
+    rows: usize,
+    control: VecDeque<ControlMsg>,
+    closed: bool,
+}
+
+/// State shared between every handle and the batcher.
+struct Shared {
+    q: Mutex<QueueState>,
+    /// Batcher waits here for arrivals/controls/close.
+    arrived: Condvar,
+    /// Producers wait here for queue space (backpressure).
+    space: Condvar,
+    cfg: FrontendConfig,
+    metrics: ServingMetrics,
+    /// Input width Q every request must match.
+    q_cols: usize,
+    /// Output width D (sizes the empty-request fast path's reply).
+    d_cols: usize,
+}
+
+/// A cloneable client handle onto a [`ServingFrontend`]: enqueue
+/// prediction requests, apply posterior controls, read metrics, close
+/// the front-end. Safe to use from any thread.
+#[derive(Clone)]
+pub struct FrontendHandle {
+    sh: Arc<Shared>,
+}
+
+impl FrontendHandle {
+    /// Predict `rows` (an `n × Q` matrix) through the shared cluster.
+    /// Blocks until the reply arrives — through backpressure first, if
+    /// the queue is full. Row `i` of the reply corresponds to row `i` of
+    /// `rows`, bit-identical to a direct `predict_into` of `rows` alone.
+    /// An empty request returns empty outputs without a cluster round,
+    /// exactly like `predict_into`.
+    pub fn predict(&self, rows: Mat) -> Result<(Mat, Vec<f64>)> {
+        let sh = &*self.sh;
+        if rows.cols() != sh.q_cols {
+            return Err(anyhow!("request has Q={}, posterior expects Q={}",
+                               rows.cols(), sh.q_cols));
+        }
+        let n = rows.rows();
+        let enqueued = Instant::now();
+        if n == 0 {
+            sh.metrics.note_unqueued_request();
+            sh.metrics.note_finished(true, 0, enqueued.elapsed());
+            return Ok((Mat::zeros(0, sh.d_cols), Vec::new()));
+        }
+        let (tx, rx) = channel();
+        {
+            let mut q = sh.q.lock().unwrap();
+            let mut blocked = false;
+            // backpressure: wait while the queue holds rows and this
+            // request would push it past capacity (an oversized request
+            // is admitted alone, once the queue is empty)
+            while !q.closed && q.rows > 0 && q.rows + n > sh.cfg.queue_rows {
+                blocked = true;
+                q = sh.space.wait(q).unwrap();
+            }
+            if q.closed {
+                return Err(anyhow!("serving front-end is closed"));
+            }
+            if blocked {
+                sh.metrics.note_blocked(enqueued.elapsed());
+            }
+            q.rows += n;
+            q.reqs.push_back(Request { rows, tx, enqueued });
+            sh.metrics.note_enqueued(q.rows);
+            sh.arrived.notify_all();
+        }
+        match rx.recv() {
+            Ok(Ok(out)) => Ok(out),
+            Ok(Err(msg)) => Err(anyhow!("{msg}")),
+            Err(_) => Err(anyhow!("serving front-end shut down before the reply")),
+        }
+    }
+
+    /// Hot-swap the served posterior. Applied on a batch boundary: the
+    /// batcher drains its in-flight window first, so no coalesced batch
+    /// mixes the two posteriors. Blocks until the swap broadcast is out;
+    /// every request enqueued after this returns sees the new posterior.
+    pub fn swap(&self, core: PosteriorCore) -> Result<()> {
+        self.control(ControlOp::Swap(Box::new(core)))
+    }
+
+    /// Refit the posterior at packed parameters `x` through the
+    /// distributed stats pass, then swap — training clusters only
+    /// (a standalone front-end has no training cluster to refit with).
+    /// Batch-boundary and blocking semantics as
+    /// [`swap`](FrontendHandle::swap); a failed refit leaves the old
+    /// posterior serving (the error comes back here).
+    pub fn refit(&self, x: &[f64]) -> Result<()> {
+        self.control(ControlOp::Refit(x.to_vec()))
+    }
+
+    /// Close the front-end: new requests are rejected, queued and
+    /// in-flight ones are still served, and the batcher's `run` returns
+    /// once drained. Idempotent.
+    pub fn close(&self) {
+        let sh = &*self.sh;
+        let mut q = sh.q.lock().unwrap();
+        q.closed = true;
+        sh.arrived.notify_all();
+        sh.space.notify_all();
+    }
+
+    /// Point-in-time metrics (no transport counters — those only the
+    /// batcher sees; its report and periodic dump include them).
+    pub fn metrics(&self) -> ServingSnapshot {
+        self.sh.metrics.snapshot(None)
+    }
+
+    fn control(&self, op: ControlOp) -> Result<()> {
+        let sh = &*self.sh;
+        let (done, rx) = channel();
+        {
+            let mut q = sh.q.lock().unwrap();
+            if q.closed {
+                return Err(anyhow!("serving front-end is closed"));
+            }
+            q.control.push_back(ControlMsg { op, done });
+            sh.arrived.notify_all();
+        }
+        match rx.recv() {
+            Ok(Ok(())) => Ok(()),
+            Ok(Err(msg)) => Err(anyhow!("{msg}")),
+            Err(_) => Err(anyhow!("serving front-end shut down before the control")),
+        }
+    }
+}
+
+/// What the batcher needs from the serving substrate: the
+/// issue/complete halves of one sharded batch round, control
+/// application, and the transport counters. Implemented over a raw
+/// `(DistributedPosterior, Comm, Backend)` triple here and over a
+/// `DistributedEvaluator` in `cycle.rs` (where `Refit` works).
+pub(crate) trait ServeDriver {
+    /// Validate a batch and size the output buffers (`prepare_outputs`).
+    fn prepare(&mut self, batch: &Mat, mean: &mut Mat, var: &mut Vec<f64>)
+               -> Result<()>;
+    /// Issue one non-empty batch (`issue_batch`); `stream` promises the
+    /// next `issue` follows before this batch's `complete`.
+    fn issue(&mut self, batch: &Mat, stream: bool);
+    /// Complete the oldest issued batch (`complete_batch`). An error
+    /// fails the batch, not the session.
+    fn complete(&mut self, batch: &Mat, mean: &mut Mat, var: &mut Vec<f64>)
+                -> Result<()>;
+    /// Apply a control operation (the in-flight window is empty here).
+    fn control(&mut self, op: ControlOp) -> Result<()>;
+    /// Transport `(bytes_sent, messages_sent)` counters.
+    fn comm_counters(&self) -> (u64, u64);
+}
+
+/// The standalone driver: a raw serving session over `Comm`.
+struct PosteriorDriver<'a> {
+    dp: &'a mut DistributedPosterior,
+    comm: &'a mut Comm,
+    backend: &'a mut dyn Backend,
+}
+
+impl ServeDriver for PosteriorDriver<'_> {
+    fn prepare(&mut self, batch: &Mat, mean: &mut Mat, var: &mut Vec<f64>)
+               -> Result<()> {
+        self.dp.prepare_outputs(batch, mean, var)
+    }
+
+    fn issue(&mut self, batch: &Mat, stream: bool) {
+        self.dp.issue_batch(self.comm, batch, stream);
+    }
+
+    fn complete(&mut self, batch: &Mat, mean: &mut Mat, var: &mut Vec<f64>)
+                -> Result<()> {
+        self.dp.complete_batch(self.comm, self.backend, batch, mean, var)
+    }
+
+    fn control(&mut self, op: ControlOp) -> Result<()> {
+        match op {
+            ControlOp::Swap(core) => {
+                self.dp.rebroadcast(*core, self.comm);
+                Ok(())
+            }
+            ControlOp::Refit(_) => Err(anyhow!(
+                "refit requires a training cluster (standalone front-end)")),
+        }
+    }
+
+    fn comm_counters(&self) -> (u64, u64) {
+        (self.comm.bytes_sent(), self.comm.messages_sent())
+    }
+}
+
+/// One coalesced batch: the concatenated rows and, in arrival order,
+/// the requests whose rows they are.
+struct InFlight {
+    batch: Mat,
+    members: Vec<Request>,
+}
+
+/// Everything the batcher learned over one `run`: the final metrics
+/// (including the session's transport counter deltas) and the
+/// serve-phase timer.
+#[derive(Clone, Debug)]
+pub struct ServingReport {
+    /// Final metrics snapshot (transport deltas included).
+    pub snapshot: ServingSnapshot,
+    /// Where the batcher's time went (`Srv*` phases).
+    pub timer: PhaseTimer,
+}
+
+/// The micro-batching scheduler. Construct once per serving session,
+/// hand [`FrontendHandle`]s to client threads, and drive the batcher on
+/// the leader rank with [`ServingFrontend::run`] (standalone) or
+/// [`DistributedEvaluator::serve_frontend`](super::cycle::DistributedEvaluator::serve_frontend)
+/// (training cluster). `run` returns once every handle's work is done
+/// and some handle called [`FrontendHandle::close`].
+pub struct ServingFrontend {
+    sh: Arc<Shared>,
+}
+
+impl ServingFrontend {
+    /// New front-end for a posterior with input width `q_cols` and
+    /// output width `d_cols`.
+    pub fn new(cfg: FrontendConfig, q_cols: usize, d_cols: usize) -> ServingFrontend {
+        assert!(cfg.max_batch_rows > 0, "max_batch_rows must be positive");
+        assert!(cfg.queue_rows > 0, "queue_rows must be positive");
+        let metrics = ServingMetrics::new(cfg.max_batch_rows);
+        ServingFrontend {
+            sh: Arc::new(Shared {
+                q: Mutex::new(QueueState {
+                    reqs: VecDeque::new(),
+                    rows: 0,
+                    control: VecDeque::new(),
+                    closed: false,
+                }),
+                arrived: Condvar::new(),
+                space: Condvar::new(),
+                cfg,
+                metrics,
+                q_cols,
+                d_cols,
+            }),
+        }
+    }
+
+    /// A client handle (cloneable; hand one per client thread).
+    pub fn handle(&self) -> FrontendHandle {
+        FrontendHandle { sh: Arc::clone(&self.sh) }
+    }
+
+    /// Drive the batcher over a standalone serving session (leader rank
+    /// only; the `DistributedPosterior` must already be constructed —
+    /// its session-open broadcast out). Returns once the front-end is
+    /// closed and drained; the session itself stays open (callers still
+    /// own `finish`).
+    pub fn run(&self, dp: &mut DistributedPosterior, comm: &mut Comm,
+               backend: &mut dyn Backend) -> ServingReport {
+        let mut drv = PosteriorDriver { dp, comm, backend };
+        self.run_driver(&mut drv)
+    }
+
+    /// The batcher loop, generic over the serving substrate.
+    pub(crate) fn run_driver(&self, drv: &mut dyn ServeDriver) -> ServingReport {
+        let sh = &*self.sh;
+        let base = drv.comm_counters();
+        let mut timer = PhaseTimer::new();
+        let mut inflight: VecDeque<InFlight> = VecDeque::new();
+        // one reusable output pair: completions happen one at a time
+        let mut mean = Mat::zeros(0, 0);
+        let mut var: Vec<f64> = Vec::new();
+        let mut last_dump = Instant::now();
+
+        loop {
+            // controls apply on a batch boundary: drain the in-flight
+            // window first, so no coalesced batch mixes two posteriors
+            if self.control_pending() {
+                while let Some(fl) = inflight.pop_front() {
+                    self.complete_one(drv, fl, &mut mean, &mut var, &mut timer);
+                }
+                for msg in self.take_controls() {
+                    let res = drv.control(msg.op).map_err(|e| format!("{e:#}"));
+                    let _ = msg.done.send(res);
+                }
+                continue;
+            }
+
+            // top up the ≤2-deep in-flight window; only the first batch
+            // may block (on arrivals or the deadline)
+            let mut formed: Vec<InFlight> = Vec::new();
+            while inflight.len() + formed.len() < 2 {
+                let may_block = inflight.is_empty() && formed.is_empty();
+                match self.form_batch(may_block, &mut timer) {
+                    Some(fl) => formed.push(fl),
+                    None => break,
+                }
+            }
+            // issue back to back; the stream flag is raised only when
+            // another issue follows immediately (a dangling flag would
+            // deadlock the worker prefetch against our gather)
+            let k = formed.len();
+            for (i, fl) in formed.into_iter().enumerate() {
+                let t0 = Instant::now();
+                drv.issue(&fl.batch, i + 1 < k);
+                timer.add(Phase::SrvClusterRound, t0.elapsed());
+                inflight.push_back(fl);
+            }
+
+            // complete the oldest in-flight batch and fan it back out
+            match inflight.pop_front() {
+                Some(fl) => self.complete_one(drv, fl, &mut mean, &mut var,
+                                              &mut timer),
+                None => {
+                    // nothing in flight and nothing formable: done once
+                    // closed and fully drained
+                    if self.closed_and_idle() {
+                        break;
+                    }
+                }
+            }
+
+            if let Some(every) = sh.cfg.dump_every {
+                if last_dump.elapsed() >= every {
+                    last_dump = Instant::now();
+                    let snap = sh.metrics.snapshot(Some(self.counter_delta(drv, base)));
+                    eprint!("{}", snap.render_text());
+                    eprintln!("# serve phases: {}", timer.summary());
+                }
+            }
+        }
+
+        // reject anything that slipped in between the last drain and the
+        // close (and any controls), so no caller blocks forever
+        self.shutdown_pending();
+        ServingReport {
+            snapshot: sh.metrics.snapshot(Some(self.counter_delta(drv, base))),
+            timer,
+        }
+    }
+
+    /// Transport counters accumulated since the batcher started.
+    fn counter_delta(&self, drv: &dyn ServeDriver, base: (u64, u64)) -> (u64, u64) {
+        let now = drv.comm_counters();
+        (now.0.saturating_sub(base.0), now.1.saturating_sub(base.1))
+    }
+
+    fn control_pending(&self) -> bool {
+        !self.sh.q.lock().unwrap().control.is_empty()
+    }
+
+    fn take_controls(&self) -> Vec<ControlMsg> {
+        self.sh.q.lock().unwrap().control.drain(..).collect()
+    }
+
+    fn closed_and_idle(&self) -> bool {
+        let q = self.sh.q.lock().unwrap();
+        q.closed && q.reqs.is_empty() && q.control.is_empty()
+    }
+
+    /// Try to close one micro-batch. Returns `None` when no trigger has
+    /// fired (and `may_block` is false), when a control is pending, or
+    /// when the front-end is closed with an empty queue. With
+    /// `may_block`, waits on arrivals up to the oldest request's
+    /// deadline.
+    fn form_batch(&self, may_block: bool, timer: &mut PhaseTimer) -> Option<InFlight> {
+        let sh = &*self.sh;
+        let mut members: Vec<Request> = Vec::new();
+        let rows;
+        {
+            let mut q = sh.q.lock().unwrap();
+            loop {
+                if !q.control.is_empty() {
+                    return None; // boundary first: let the caller apply it
+                }
+                match q.reqs.front() {
+                    Some(front) => {
+                        let deadline = front.enqueued + sh.cfg.max_wait;
+                        let now = Instant::now();
+                        // size trigger, deadline trigger, or flush-on-close
+                        if q.rows >= sh.cfg.max_batch_rows || q.closed
+                            || now >= deadline {
+                            break;
+                        }
+                        if !may_block {
+                            return None;
+                        }
+                        let t0 = Instant::now();
+                        let (g, _) = sh.arrived.wait_timeout(q, deadline - now)
+                            .unwrap();
+                        timer.add(Phase::SrvEnqueueWait, t0.elapsed());
+                        q = g;
+                    }
+                    None => {
+                        if q.closed || !may_block {
+                            return None;
+                        }
+                        let t0 = Instant::now();
+                        q = sh.arrived.wait(q).unwrap();
+                        timer.add(Phase::SrvEnqueueWait, t0.elapsed());
+                    }
+                }
+            }
+            // take whole requests up to the size cap (the first request
+            // is always taken, even when alone it exceeds the cap)
+            let mut took = 0usize;
+            while let Some(r) = q.reqs.front() {
+                let n = r.rows.rows();
+                if !members.is_empty() && took + n > sh.cfg.max_batch_rows {
+                    break;
+                }
+                took += n;
+                members.push(q.reqs.pop_front().unwrap());
+                if took >= sh.cfg.max_batch_rows {
+                    break;
+                }
+            }
+            q.rows -= took;
+            rows = took;
+            sh.metrics.note_batch(rows, q.rows);
+            sh.space.notify_all();
+        }
+        // concatenate outside the lock (arrival order = row order)
+        let t0 = Instant::now();
+        let mut batch = Mat::zeros(rows, sh.q_cols);
+        let mut at = 0usize;
+        for m in &members {
+            let len = m.rows.rows() * sh.q_cols;
+            batch.as_mut_slice()[at..at + len].copy_from_slice(m.rows.as_slice());
+            at += len;
+        }
+        timer.add(Phase::SrvBatchAssembly, t0.elapsed());
+        Some(InFlight { batch, members })
+    }
+
+    /// Complete one issued batch and fan its rows (or its error) back
+    /// out to the member requests.
+    fn complete_one(&self, drv: &mut dyn ServeDriver, fl: InFlight, mean: &mut Mat,
+                    var: &mut Vec<f64>, timer: &mut PhaseTimer) {
+        let sh = &*self.sh;
+        let t0 = Instant::now();
+        let res = drv.prepare(&fl.batch, mean, var)
+            .and_then(|()| drv.complete(&fl.batch, mean, var));
+        timer.add(Phase::SrvClusterRound, t0.elapsed());
+
+        let t0 = Instant::now();
+        match res {
+            Ok(()) => {
+                let d = mean.cols();
+                let mut row = 0usize;
+                for m in fl.members {
+                    let n = m.rows.rows();
+                    let m_mean = Mat::from_vec(
+                        n, d, mean.as_slice()[row * d..(row + n) * d].to_vec());
+                    let m_var = var[row..row + n].to_vec();
+                    row += n;
+                    sh.metrics.note_finished(true, n, m.enqueued.elapsed());
+                    let _ = m.tx.send(Ok((m_mean, m_var)));
+                }
+            }
+            Err(e) => {
+                // the batch failed, the session did not: fail exactly
+                // these requests and keep serving
+                let msg = format!("{e:#}");
+                for m in fl.members {
+                    sh.metrics.note_finished(false, m.rows.rows(),
+                                             m.enqueued.elapsed());
+                    let _ = m.tx.send(Err(msg.clone()));
+                }
+            }
+        }
+        timer.add(Phase::SrvFanout, t0.elapsed());
+    }
+
+    /// Terminal sweep: mark the front-end closed and reject whatever is
+    /// still queued, so no client blocks on a reply that will never
+    /// come.
+    fn shutdown_pending(&self) {
+        let sh = &*self.sh;
+        let mut q = sh.q.lock().unwrap();
+        q.closed = true;
+        q.rows = 0;
+        for r in q.reqs.drain(..) {
+            sh.metrics.note_finished(false, r.rows.rows(), r.enqueued.elapsed());
+            let _ = r.tx.send(Err("serving front-end shut down".into()));
+        }
+        for c in q.control.drain(..) {
+            let _ = c.done.send(Err("serving front-end shut down".into()));
+        }
+        sh.space.notify_all();
+        sh.arrived.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frontend(cfg: FrontendConfig) -> ServingFrontend {
+        ServingFrontend::new(cfg, 2, 3)
+    }
+
+    /// An empty request replies immediately — no queue, no batcher.
+    #[test]
+    fn empty_request_short_circuits() {
+        let fe = frontend(FrontendConfig::default());
+        let (mean, var) = fe.handle().predict(Mat::zeros(0, 2)).unwrap();
+        assert_eq!((mean.rows(), mean.cols()), (0, 3));
+        assert!(var.is_empty());
+        assert_eq!(fe.handle().metrics().completed, 1);
+    }
+
+    /// A wrong-width request is rejected at the handle, like
+    /// `predict_into`'s validation.
+    #[test]
+    fn wrong_width_request_is_rejected() {
+        let fe = frontend(FrontendConfig::default());
+        let err = fe.handle().predict(Mat::zeros(3, 5)).unwrap_err();
+        assert!(format!("{err:#}").contains("Q=5"), "{err:#}");
+    }
+
+    /// After close, new requests are rejected instead of queued forever.
+    #[test]
+    fn closed_frontend_rejects_requests_and_controls() {
+        let fe = frontend(FrontendConfig::default());
+        let h = fe.handle();
+        h.close();
+        let err = h.predict(Mat::zeros(1, 2)).unwrap_err();
+        assert!(format!("{err:#}").contains("closed"), "{err:#}");
+        let err = h.refit(&[0.0]).unwrap_err();
+        assert!(format!("{err:#}").contains("closed"), "{err:#}");
+    }
+
+    /// The batcher coalesces by size and by deadline: queued rows below
+    /// the size trigger still form a batch once the oldest request's
+    /// deadline expires. (Driven through `form_batch` directly — the
+    /// full cluster path is exercised in `tests/frontend_test.rs`.)
+    #[test]
+    fn form_batch_fires_on_size_or_deadline() {
+        let fe = frontend(FrontendConfig {
+            max_batch_rows: 4,
+            max_wait: Duration::from_millis(5),
+            ..FrontendConfig::default()
+        });
+        let mut timer = PhaseTimer::new();
+        // below the size trigger, non-blocking: no batch yet
+        let (tx, _rx) = channel();
+        fe.sh.q.lock().unwrap().reqs.push_back(Request {
+            rows: Mat::zeros(2, 2), tx, enqueued: Instant::now(),
+        });
+        fe.sh.q.lock().unwrap().rows = 2;
+        assert!(fe.form_batch(false, &mut timer).is_none());
+        // blocking: the deadline fires and the undersized batch closes
+        let fl = fe.form_batch(true, &mut timer).expect("deadline batch");
+        assert_eq!(fl.batch.rows(), 2);
+        assert!(timer.get(Phase::SrvEnqueueWait) > Duration::ZERO);
+        // at the size trigger, non-blocking: closes immediately, split
+        // along whole-request boundaries
+        for n in [3usize, 1, 2] {
+            let (tx, _rx) = channel();
+            fe.sh.q.lock().unwrap().reqs.push_back(Request {
+                rows: Mat::zeros(n, 2), tx, enqueued: Instant::now(),
+            });
+        }
+        fe.sh.q.lock().unwrap().rows = 6;
+        let fl = fe.form_batch(false, &mut timer).expect("size batch");
+        assert_eq!(fl.batch.rows(), 4, "3+1 fits, +2 would exceed the cap");
+        assert_eq!(fl.members.len(), 2);
+        assert_eq!(fe.sh.q.lock().unwrap().rows, 2);
+    }
+
+    /// Backpressure math: an enqueue that would overflow the bound waits
+    /// for space; an oversized request is admitted once the queue is
+    /// empty (never deadlocks).
+    #[test]
+    fn backpressure_blocks_then_admits() {
+        let fe = frontend(FrontendConfig {
+            queue_rows: 4,
+            ..FrontendConfig::default()
+        });
+        let h = fe.handle();
+        // fill the queue to capacity from a client thread
+        let filler = {
+            let h = h.clone();
+            std::thread::spawn(move || h.predict(Mat::zeros(4, 2)))
+        };
+        while fe.sh.q.lock().unwrap().rows < 4 {
+            std::thread::yield_now();
+        }
+        // this enqueue must block (4 + 3 > 4) until the batcher drains;
+        // an oversized request (6 > 4) must also be admitted then
+        let blocked = {
+            let h = h.clone();
+            std::thread::spawn(move || h.predict(Mat::zeros(6, 2)))
+        };
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(fe.sh.q.lock().unwrap().reqs.len(), 1,
+                   "second request must still be waiting for space");
+        // drain one batch's worth by hand (no cluster in a unit test):
+        // form_batch frees the rows and signals `space`
+        let mut timer = PhaseTimer::new();
+        let fl = fe.form_batch(false, &mut timer).expect("full batch");
+        assert_eq!(fl.batch.rows(), 4);
+        // the blocked enqueue now lands
+        while fe.sh.q.lock().unwrap().reqs.is_empty() {
+            std::thread::yield_now();
+        }
+        assert!(fe.handle().metrics().enqueue_blocked >= 1);
+        // shut down: both callers get clean errors, nobody hangs
+        h.close();
+        for m in fl.members {
+            let _ = m.tx.send(Err("test shutdown".into()));
+        }
+        fe.shutdown_pending();
+        assert!(filler.join().unwrap().is_err());
+        assert!(blocked.join().unwrap().is_err());
+    }
+}

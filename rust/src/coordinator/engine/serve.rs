@@ -117,11 +117,14 @@ const SRV_REFIT: f64 = 3.0;
 /// allocation stays bounded. Anything past it is corruption, not a batch.
 const MAX_BATCH_ROWS: f64 = 16_777_216.0; // 2^24
 
-/// How many recent row partitions a session caches. Streamed serving
-/// holds two batches in flight (plus the one being issued), so a single
-/// slot would thrash on mixed-size streams; three keeps every partition
-/// the protocol can still need resident.
-const PARTITION_CACHE: usize = 3;
+/// How many recent row partitions a session caches (LRU). Streamed
+/// serving holds two batches in flight (plus the one being issued), so a
+/// single slot would thrash on mixed-size streams — and the serving
+/// front-end's micro-batcher emits *ragged* sizes (whatever mix of
+/// client requests a deadline closed over), so the window must be wide
+/// enough that a steady traffic mix of a dozen-odd distinct batch sizes
+/// stays resident instead of rebuilding a partition per batch.
+const PARTITION_CACHE: usize = 16;
 
 /// Parse a serve sub-command wire as a `SRV_PREDICT` announcement:
 /// `Ok(Some((nt, stream)))` for a well-formed batch, `Ok(None)` when the
@@ -202,9 +205,15 @@ pub struct DistributedPosterior {
     /// Recently used row partitions, each keyed by the **(batch size,
     /// rank count)** pair it was built for (a posterior reused against a
     /// different-sized communicator must not reuse the old row split).
-    /// Front entry is the most recent; capacity [`PARTITION_CACHE`], so
-    /// a stream with two batch sizes in flight keeps both resident.
+    /// True LRU: front entry is the most recent, a hit moves its entry
+    /// back to the front, the back entry is evicted at capacity
+    /// [`PARTITION_CACHE`] — so a recurring mix of ragged batch sizes
+    /// (the serving front-end's steady state) stays resident.
     parts: Vec<(usize, usize, Partition)>,
+    /// How many partitions this session has **built** (cache misses).
+    /// Cheap observability for the LRU: a steady stream of recurring
+    /// batch sizes must keep this flat (see `partition_builds`).
+    builds: u64,
     scratch: ServeScratch,
     /// First worker-side error of the session (reported when it closes).
     sticky: Option<anyhow::Error>,
@@ -227,7 +236,7 @@ impl DistributedPosterior {
         wire.push(rows_per_chunk as f64);
         core.pack_into(&mut wire);
         comm.bcast(0, wire);
-        DistributedPosterior { core, rows_per_chunk, parts: Vec::new(),
+        DistributedPosterior { core, rows_per_chunk, parts: Vec::new(), builds: 0,
                                scratch: ServeScratch::default(), sticky: None,
                                poisoned: false }
     }
@@ -265,7 +274,7 @@ impl DistributedPosterior {
                 (empty, Some(anyhow!("posterior broadcast: {e:#}")), true)
             }
         };
-        Ok(DistributedPosterior { core, rows_per_chunk, parts: Vec::new(),
+        Ok(DistributedPosterior { core, rows_per_chunk, parts: Vec::new(), builds: 0,
                                   scratch: ServeScratch::default(), sticky,
                                   poisoned })
     }
@@ -279,22 +288,38 @@ impl DistributedPosterior {
     /// over `ranks` ranks and move it to the cache front. Keying on the
     /// full **(batch size, rank count)** pair matters: a posterior
     /// reused against a different-sized communicator must not reuse the
-    /// old row split. The cache keeps [`PARTITION_CACHE`] entries so the
-    /// streamed protocol's in-flight window (the batch being completed,
-    /// the batch behind it, and the batch being issued) never evicts a
-    /// partition it still needs.
+    /// old row split. The cache is a true LRU of [`PARTITION_CACHE`]
+    /// entries: a hit moves the entry to the front, a miss evicts the
+    /// *least recently used* (back) entry — so both the streamed
+    /// protocol's in-flight window and the front-end batcher's recurring
+    /// mix of ragged batch sizes stay resident.
     fn partition_for(&mut self, nt: usize, ranks: usize) -> &Partition {
         match self.parts.iter().position(|(n, r, _)| *n == nt && *r == ranks) {
-            Some(i) => self.parts.swap(0, i),
+            Some(i) => {
+                // move-to-front keeps `parts` in recency order, which is
+                // what makes the pop() below evict the LRU entry
+                let hit = self.parts.remove(i);
+                self.parts.insert(0, hit);
+            }
             None => {
                 if self.parts.len() == PARTITION_CACHE {
                     self.parts.pop();
                 }
                 self.parts.insert(
                     0, (nt, ranks, Partition::new(nt, self.rows_per_chunk, ranks)));
+                self.builds += 1;
             }
         }
         &self.parts[0].2
+    }
+
+    /// How many row partitions this session has built (LRU cache
+    /// misses). A steady stream of recurring batch sizes must keep this
+    /// flat at the number of *distinct* sizes — if it grows with the
+    /// batch count, the cache is thrashing (the regression the
+    /// front-end's ragged micro-batches would otherwise reintroduce).
+    pub fn partition_builds(&self) -> u64 {
+        self.builds
     }
 
     /// Leader: predict one batch, sharded across ranks (allocating
@@ -400,8 +425,10 @@ impl DistributedPosterior {
 
     /// Validate a batch against the posterior and size the caller's
     /// output buffers (reallocated only when the batch shape changes).
-    fn prepare_outputs(&self, xstar: &Mat, mean_out: &mut Mat, var_out: &mut Vec<f64>)
-                       -> Result<()> {
+    /// Crate-visible for the serving front-end's batcher, which drives
+    /// the issue/complete halves directly.
+    pub(crate) fn prepare_outputs(&self, xstar: &Mat, mean_out: &mut Mat,
+                                  var_out: &mut Vec<f64>) -> Result<()> {
         let nt = xstar.rows();
         let d = self.core.d();
         if xstar.cols() != self.core.q() {
@@ -420,7 +447,16 @@ impl DistributedPosterior {
     /// issued before this batch's gather) and ship each worker its
     /// contiguous run of rows. `xstar` must be non-empty. Sends are
     /// non-blocking, so this returns without waiting on any rank.
-    fn issue_batch(&mut self, comm: &mut Comm, xstar: &Mat, stream: bool) {
+    ///
+    /// Crate-visible for the serving front-end: its batcher keeps up to
+    /// two coalesced batches in flight by pairing `issue_batch` /
+    /// `complete_batch` directly, exactly as `predict_stream_into` does.
+    /// Callers must pass `stream = true` **only** when the next batch's
+    /// `issue_batch` follows immediately (before this batch's
+    /// `complete_batch`): the flag makes the worker block on the next
+    /// sub-command broadcast before computing this batch, so a flag with
+    /// no follow-up broadcast deadlocks the cluster.
+    pub(crate) fn issue_batch(&mut self, comm: &mut Comm, xstar: &Mat, stream: bool) {
         let nt = xstar.rows();
         let ranks = comm.size();
         self.partition_for(nt, ranks);
@@ -447,10 +483,13 @@ impl DistributedPosterior {
     /// Second half of one batch's leader protocol: compute rank 0's own
     /// shard straight into the output buffers (no staging copies),
     /// gather the fail-flagged worker payloads, and assemble them in
-    /// rank order — which is row order.
-    fn complete_batch(&mut self, comm: &mut Comm, backend: &mut dyn Backend,
-                      xstar: &Mat, mean_out: &mut Mat, var_out: &mut Vec<f64>)
-                      -> Result<()> {
+    /// rank order — which is row order. Crate-visible for the serving
+    /// front-end (see [`issue_batch`](DistributedPosterior::issue_batch));
+    /// a batch error leaves the session usable, exactly as in
+    /// `predict_stream_into`.
+    pub(crate) fn complete_batch(&mut self, comm: &mut Comm, backend: &mut dyn Backend,
+                                 xstar: &Mat, mean_out: &mut Mat,
+                                 var_out: &mut Vec<f64>) -> Result<()> {
         let nt = xstar.rows();
         let d = self.core.d();
         let ranks = comm.size();
@@ -793,6 +832,7 @@ mod tests {
             core: toy_core(46),
             rows_per_chunk: 2,
             parts: Vec::new(),
+            builds: 0,
             scratch: ServeScratch::default(),
             sticky: None,
             poisoned: false,
@@ -812,9 +852,44 @@ mod tests {
             assert_eq!(dp.partition_for(7, 3).n, 7);
             assert_eq!(dp.partition_for(12, 2).workers(), 2);
         }
-        // a fourth key evicts the oldest; a rebuilt entry is still right
+        assert_eq!(dp.partition_builds(), 3, "revisits must not rebuild");
+        // overflow the LRU: the *least recently used* key (5, 4) is the
+        // one evicted, recently touched keys survive
         assert_eq!(dp.partition_for(5, 4).n, 5);
-        assert_eq!(dp.partition_for(12, 3).workers(), 3);
+        for nt in 100..100 + PARTITION_CACHE - 1 {
+            assert_eq!(dp.partition_for(nt, 3).n, nt);
+        }
+        let builds = dp.partition_builds();
+        assert_eq!(dp.partition_for(100, 3).n, 100); // still resident
+        assert_eq!(dp.partition_builds(), builds, "LRU hit must not rebuild");
+        assert_eq!(dp.partition_for(5, 4).n, 5); // evicted: rebuilt
+        assert_eq!(dp.partition_builds(), builds + 1);
+    }
+
+    /// Regression for the serving front-end's traffic shape: a 100-batch
+    /// stream of *ragged* sizes (whatever mix of client requests each
+    /// deadline closed over) must not rebuild partitions O(batches)
+    /// times. With the old 3-slot window, any 4+ recurring sizes
+    /// thrashed — every lookup was a rebuild.
+    #[test]
+    fn ragged_batch_stream_does_not_thrash_partition_cache() {
+        let mut dp = DistributedPosterior {
+            core: toy_core(47),
+            rows_per_chunk: 2,
+            parts: Vec::new(),
+            builds: 0,
+            scratch: ServeScratch::default(),
+            sticky: None,
+            poisoned: false,
+        };
+        // six recurring ragged sizes — more than the old 3-slot window
+        let sizes = [3usize, 8, 1, 13, 5, 21];
+        for i in 0..100 {
+            let nt = sizes[i % sizes.len()];
+            assert_eq!(dp.partition_for(nt, 4).n, nt);
+        }
+        assert_eq!(dp.partition_builds(), sizes.len() as u64,
+                   "a recurring mix of batch sizes must build each partition once");
     }
 
     /// Standalone hot-swap: after `rebroadcast`, every rank serves the

@@ -4,6 +4,7 @@
 //! [`DistributedEvaluator::serve`].
 
 use super::cycle::DistributedEvaluator;
+use super::frontend::{FrontendConfig, FrontendHandle, ServingFrontend, ServingReport};
 use super::problem::{Fitted, LatentSpec, ParamLayout, Problem};
 use crate::collectives::Cluster;
 use crate::config::BackendKind;
@@ -250,6 +251,67 @@ impl Engine {
         Ok((result, before, after.expect("refit demo was requested")))
     }
 
+    /// Train, then stand up the **concurrent-client serving front-end**
+    /// on the same cluster: a micro-batching scheduler
+    /// ([`ServingFrontend`]) coalesces rows enqueued by any number of
+    /// client threads into size-or-deadline-triggered batches and feeds
+    /// them through the streamed sharded-predict pipeline. Per-request
+    /// results are bit-identical to serving each request alone.
+    ///
+    /// `drive` receives a cloneable [`FrontendHandle`] and runs on its
+    /// own thread while the leader thread pumps the scheduler; hand
+    /// clones to as many client threads as the load calls for. The
+    /// session ends when `drive` returns (the queue is closed for it,
+    /// even on panic) or when it calls [`FrontendHandle::close`] itself.
+    /// Returns the training result, `drive`'s output, and the serving
+    /// report (latency/throughput snapshot + serve-phase timings).
+    ///
+    /// Supervised (observed-X) problems only; `rows_per_chunk` is the
+    /// serving partition granularity, as in
+    /// [`train_then_predict`](Engine::train_then_predict).
+    pub fn train_then_serve<T: Send>(&self, rows_per_chunk: usize, fcfg: FrontendConfig,
+                                     drive: impl FnOnce(FrontendHandle) -> T + Send)
+                                     -> Result<(TrainResult, T, ServingReport)> {
+        if !matches!(self.problem.latent, LatentSpec::Observed(_)) {
+            bail!("train_then_serve needs a supervised problem (observed X)");
+        }
+        if rows_per_chunk == 0 {
+            bail!("rows_per_chunk must be positive");
+        }
+        let part = Partition::new(self.problem.n(), self.cfg.chunk, self.cfg.workers);
+
+        // `Cluster::run` wants `Fn`, but `drive` is `FnOnce`; only
+        // rank 0 takes it out of the slot, exactly once.
+        let drive_slot = std::sync::Mutex::new(Some(drive));
+        let mut results = Cluster::run(self.cfg.workers, |comm| {
+            let rank = comm.rank();
+            match DistributedEvaluator::new(&self.problem, &self.cfg, &part, comm) {
+                Err(e) => Err(anyhow!("rank {rank}: {e:#}")),
+                Ok(mut ev) => {
+                    if rank == 0 {
+                        let drive = drive_slot
+                            .lock()
+                            .unwrap()
+                            .take()
+                            .expect("rank 0 runs the leader exactly once");
+                        self.leader_frontend(&mut ev, rows_per_chunk, &fcfg, drive).map(Some)
+                    } else {
+                        ev.serve().map(|_| None)
+                    }
+                }
+            }
+        });
+        // propagate worker errors first, then take the leader's result
+        for r in &results {
+            if let Err(e) = r {
+                return Err(anyhow!("{e:#}"));
+            }
+        }
+        results
+            .remove(0)
+            .map(|o| o.expect("leader returns a result"))
+    }
+
     /// Validate a serving request against the problem.
     fn serve_plan<'a>(&self, xstar: &'a Mat, rows_per_chunk: usize, refit_demo: bool,
                       stream_rows: Option<usize>) -> Result<ServePlan<'a>> {
@@ -305,6 +367,46 @@ impl Engine {
               -> Result<(TrainResult, Option<Served>)> {
         let layout = ParamLayout::new(&self.problem);
         let x0 = layout.initial_params(&self.problem);
+        let (opt_result, eval_err, eval_count, eval_seconds) = self.optimise(ev, mode, &x0);
+        let fitted = layout.unpack_fitted(&self.problem, &opt_result.x);
+
+        // serve the fitted posterior on the same cluster before shutdown
+        let mut served = None;
+        let mut serve_err: Option<anyhow::Error> = None;
+        if let Some(plan) = predict {
+            if eval_err.is_none() {
+                match self.serve_fitted(ev, &opt_result.x, plan) {
+                    Ok(out) => served = Some(out),
+                    Err(e) => serve_err = Some(e),
+                }
+            }
+        }
+
+        // 8. stop the workers and collect their compute-time totals
+        let per_rank_compute = ev.finish();
+
+        if let Some(e) = eval_err {
+            return Err(e);
+        }
+        if let Some(e) = serve_err {
+            return Err(e);
+        }
+
+        if self.cfg.verbose {
+            eprintln!("[leader] {}", ev.timer().summary());
+        }
+
+        Ok((self.assemble(ev, opt_result, fitted, eval_count, eval_seconds,
+                          per_rank_compute),
+            served))
+    }
+
+    /// Drive one optimiser run over the distributed objective. Returns
+    /// the optimiser's raw (minimisation-sign) result plus the
+    /// evaluation accounting: the first hard cluster error, the number
+    /// of successful evaluations, and the wall-clock they took.
+    fn optimise(&self, ev: &mut DistributedEvaluator, mode: &RunMode, x0: &[f64])
+                -> (OptResult, Option<anyhow::Error>, usize, f64) {
         let n_params = ev.n_params();
 
         let mut eval_err: Option<anyhow::Error> = None;
@@ -342,16 +444,16 @@ impl Engine {
             match mode {
                 RunMode::Optimize => {
                     let opt = self.cfg.opt.as_optimizer();
-                    opt.minimize(&mut objective, x0.clone())
+                    opt.minimize(&mut objective, x0.to_vec())
                 }
                 RunMode::TimeOnly(k) => {
                     let mut f_last = 0.0;
                     for _ in 0..*k {
-                        let (f, _) = objective(&x0);
+                        let (f, _) = objective(x0);
                         f_last = f;
                     }
                     OptResult {
-                        x: x0.clone(),
+                        x: x0.to_vec(),
                         f: f_last,
                         iterations: *k,
                         evaluations: *k,
@@ -362,35 +464,15 @@ impl Engine {
             }
         };
 
-        let fitted = layout.unpack_fitted(&self.problem, &opt_result.x);
+        (opt_result, eval_err, eval_count, eval_seconds)
+    }
 
-        // serve the fitted posterior on the same cluster before shutdown
-        let mut served = None;
-        let mut serve_err: Option<anyhow::Error> = None;
-        if let Some(plan) = predict {
-            if eval_err.is_none() {
-                match self.serve_fitted(ev, &opt_result.x, plan) {
-                    Ok(out) => served = Some(out),
-                    Err(e) => serve_err = Some(e),
-                }
-            }
-        }
-
-        // 8. stop the workers and collect their compute-time totals
-        let per_rank_compute = ev.finish();
-
-        if let Some(e) = eval_err {
-            return Err(e);
-        }
-        if let Some(e) = serve_err {
-            return Err(e);
-        }
-
-        if self.cfg.verbose {
-            eprintln!("[leader] {}", ev.timer().summary());
-        }
-
-        Ok((TrainResult {
+    /// Assemble the public [`TrainResult`] from a finished run (the sign
+    /// flips undo the minimisation convention handed to the optimiser).
+    fn assemble(&self, ev: &DistributedEvaluator, opt_result: OptResult, fitted: Fitted,
+                eval_count: usize, eval_seconds: f64, per_rank_compute: Vec<f64>)
+                -> TrainResult {
+        TrainResult {
             f: -opt_result.f,
             trace: opt_result.trace.iter().map(|v| -v).collect(),
             fitted,
@@ -402,7 +484,7 @@ impl Engine {
             messages_sent: ev.messages_sent(),
             sec_per_eval: if eval_count > 0 { eval_seconds / eval_count as f64 } else { 0.0 },
             per_rank_compute,
-        }, served))
+        }
     }
 
     /// Leader: one complete serving session over the training cluster —
@@ -474,5 +556,86 @@ impl Engine {
             row += bm.rows();
         }
         Ok((mean, var))
+    }
+
+    /// Leader for [`train_then_serve`](Engine::train_then_serve):
+    /// optimise, run one front-end serving session at the fitted
+    /// parameters, and shut the workers down — mirroring
+    /// [`leader`](Engine::leader)'s error ordering (evaluation errors
+    /// beat serving errors, and `finish` always runs).
+    fn leader_frontend<T: Send>(&self, ev: &mut DistributedEvaluator, rows_per_chunk: usize,
+                                fcfg: &FrontendConfig,
+                                drive: impl FnOnce(FrontendHandle) -> T + Send)
+                                -> Result<(TrainResult, T, ServingReport)> {
+        let layout = ParamLayout::new(&self.problem);
+        let x0 = layout.initial_params(&self.problem);
+        let (opt_result, eval_err, eval_count, eval_seconds) =
+            self.optimise(ev, &RunMode::Optimize, &x0);
+        let fitted = layout.unpack_fitted(&self.problem, &opt_result.x);
+
+        let mut served: Option<(T, ServingReport)> = None;
+        let mut serve_err: Option<anyhow::Error> = None;
+        if eval_err.is_none() {
+            match self.serve_frontend_session(ev, &opt_result.x, rows_per_chunk, fcfg, drive) {
+                Ok(out) => served = Some(out),
+                Err(e) => serve_err = Some(e),
+            }
+        }
+
+        let per_rank_compute = ev.finish();
+
+        if let Some(e) = eval_err {
+            return Err(e);
+        }
+        if let Some(e) = serve_err {
+            return Err(e);
+        }
+        let (out, report) = served.expect("serving ran: no eval or serve error");
+
+        if self.cfg.verbose {
+            eprintln!("[leader] {}", ev.timer().summary());
+        }
+
+        let result = self.assemble(ev, opt_result, fitted, eval_count, eval_seconds,
+                                   per_rank_compute);
+        Ok((result, out, report))
+    }
+
+    /// Leader: one complete front-end serving session — build and
+    /// broadcast the posterior at `x`, pump the micro-batch scheduler on
+    /// this thread while `drive` generates load from its own, and close
+    /// the session. The client queue is closed when `drive` returns
+    /// **even if it panics**, so the scheduler always drains and this
+    /// function cannot hang the cluster.
+    fn serve_frontend_session<T: Send>(&self, ev: &mut DistributedEvaluator, x: &[f64],
+                                       rows_per_chunk: usize, fcfg: &FrontendConfig,
+                                       drive: impl FnOnce(FrontendHandle) -> T + Send)
+                                       -> Result<(T, ServingReport)> {
+        let core = ev.posterior_core_at(x)?;
+        ev.begin_serving(core, rows_per_chunk)?;
+        let d = self.problem.views[0].y.cols();
+        let fe = ServingFrontend::new(fcfg.clone(), self.problem.q, d);
+        let (report, out) = std::thread::scope(|s| {
+            let handle = fe.handle();
+            let jh = s.spawn(move || {
+                // Close the queue even when `drive` panics, so the
+                // scheduler below always sees end-of-input.
+                struct CloseOnDrop(FrontendHandle);
+                impl Drop for CloseOnDrop {
+                    fn drop(&mut self) {
+                        self.0.close();
+                    }
+                }
+                let guard = CloseOnDrop(handle);
+                drive(guard.0.clone())
+            });
+            let report = ev.serve_frontend(&fe);
+            (report, jh.join())
+        });
+        let end = ev.end_serving();
+        let report = report?;
+        let out = out.map_err(|_| anyhow!("serve drive thread panicked"))?;
+        end?;
+        Ok((out, report))
     }
 }

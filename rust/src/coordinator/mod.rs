@@ -8,10 +8,12 @@
 //! - `engine`    — the execution layer: `engine::problem` (model
 //!   statement + parameter layout), `engine::cycle` (the SPMD
 //!   leader/worker evaluation cycle as a reusable
-//!   [`DistributedEvaluator`]), `engine::train` (optimiser loop), and
+//!   [`DistributedEvaluator`]), `engine::train` (optimiser loop),
 //!   `engine::serve` (sharded posterior serving,
-//!   [`DistributedPosterior`]), with per-phase timing (distributable vs
-//!   indistributable, feeding Fig 1b)
+//!   [`DistributedPosterior`]), and `engine::frontend` (the
+//!   concurrent-client micro-batching scheduler, [`ServingFrontend`]),
+//!   with per-phase timing (distributable vs indistributable, feeding
+//!   Fig 1b)
 
 pub mod backend;
 pub mod engine;
@@ -20,5 +22,6 @@ pub mod partition;
 pub use backend::{make_backends, Backend, ChunkData, ChunkTask, FwdCache,
                   ParallelCpuBackend, RustCpuBackend, ViewParams, XlaBackend};
 pub use engine::{DistributedEvaluator, DistributedPosterior, Engine, EngineConfig, Fitted,
-                 LatentSpec, OptChoice, Problem, ServeSignal, TrainResult, ViewSpec};
+                 FrontendConfig, FrontendHandle, LatentSpec, OptChoice, Problem,
+                 ServeSignal, ServingFrontend, ServingReport, TrainResult, ViewSpec};
 pub use partition::{ChunkRange, Partition};

@@ -18,7 +18,7 @@
 //! | [`collectives`] | simulated-MPI transport: point-to-point + `bcast`/`reduce_sum`/`gather`, binomial-tree collectives by default (O(log P) critical path), linear reference retained |
 //! | [`coordinator::partition`] | datapoints → fixed-shape chunks → contiguous per-rank runs |
 //! | [`coordinator::backend`] | pluggable chunk compute behind a `BackendKind` factory: `rust-cpu` (scalar), `parallel-cpu` (intra-rank chunk fan-out over scoped threads, bit-identical), `xla` (PJRT, feature-gated) |
-//! | [`coordinator::engine`] | the execution layer: `problem` (model statement + parameter layout), `cycle` (the eight-step SPMD evaluation cycle as a reusable `DistributedEvaluator`), `train` (optimiser loop + stopping), `serve` (sharded posterior serving: broadcast-once state, per-batch row partitioning, rank-order gather), re-exported behind a thin facade |
+//! | [`coordinator::engine`] | the execution layer: `problem` (model statement + parameter layout), `cycle` (the eight-step SPMD evaluation cycle as a reusable `DistributedEvaluator`), `train` (optimiser loop + stopping), `serve` (sharded posterior serving: broadcast-once state, per-batch row partitioning, rank-order gather), `frontend` (concurrent-client micro-batching scheduler over the streamed serving pipeline, with latency/throughput metrics), re-exported behind a thin facade |
 //! | [`math`] | worker statistics + the leader's indistributable M×M core |
 //! | [`kern`] | RBF-ARD kernel, psi statistics and analytic VJPs |
 //! | [`linalg`] | dense row-major matrices: Cholesky toolkit, cache-blocked `matmul`, symmetric rank-k (`syrk`) updates — inner loops run on the runtime-dispatched SIMD tier in [`linalg::simd`] (AVX2+FMA / portable chunked scalar / bit-identical scalar escape hatch, pinned via `GPPAR_SIMD`, `--simd`, or `EngineConfig::simd`) |

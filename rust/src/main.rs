@@ -13,18 +13,20 @@
 //! Examples:
 //!   gpparallel train-bgplvm --n 2000 --workers 4 --backend xla --iters 100
 //!   gpparallel predict --n 2000 --nt 1000 --workers 4 --backend parallel --batch 256
+//!   gpparallel predict --n 2000 --workers 4 --serve --clients 8 --max-batch-rows 64
 //!   gpparallel time --n 8000 --workers 8 --backend cpu --evals 5
 
 use anyhow::{bail, Result};
 use gpparallel::cli::{known_flags, known_options, Args};
 use gpparallel::config::BackendKind;
-use gpparallel::coordinator::{Engine, EngineConfig, OptChoice};
+use gpparallel::coordinator::{Engine, EngineConfig, FrontendConfig, OptChoice};
 use gpparallel::data::synthetic::{generate, generate_supervised, SyntheticSpec};
-use gpparallel::linalg::{mean, SimdLevel};
+use gpparallel::linalg::{mean, Mat, SimdLevel};
 use gpparallel::models::{BayesianGplvm, SparseGpRegression};
 use gpparallel::optim::Lbfgs;
 use gpparallel::runtime::Manifest;
 use std::path::PathBuf;
+use std::time::Duration;
 
 fn engine_config(a: &Args) -> Result<(EngineConfig, String)> {
     let backend = BackendKind::parse(a.get("backend").unwrap_or("cpu"))
@@ -58,7 +60,7 @@ fn engine_config(a: &Args) -> Result<(EngineConfig, String)> {
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(argv, &["verbose", "help", "no-pipeline", "refit-demo",
-                                   "stream"])?;
+                                   "stream", "serve"])?;
 
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     // per-subcommand argument validation: an option or flag that only
@@ -136,6 +138,71 @@ fn main() -> Result<()> {
                       spec.n, spec.q, spec.d, cfg.backend.name(), cfg.workers);
             let problem = SparseGpRegression::problem(&x, &ds.y, m, &aot, seed);
             let engine = Engine::new(problem, cfg)?;
+
+            if args.flag("serve") {
+                // long-running concurrent-client mode: N closed-loop
+                // client threads drive the micro-batching front-end,
+                // requests round-robin over the held-out rows
+                if args.flag("refit-demo") || args.flag("stream") {
+                    bail!("--serve is exclusive with --refit-demo and --stream \
+                           (it is its own serving mode)");
+                }
+                let clients = args.get_parse("clients", 4usize)?;
+                let per_client = args.get_parse("serve-requests", 64usize)?;
+                let req_rows = args.get_parse("req-rows", 1usize)?;
+                if clients == 0 || per_client == 0 || req_rows == 0 {
+                    bail!("--clients, --serve-requests and --req-rows must be positive");
+                }
+                let fcfg = FrontendConfig {
+                    max_batch_rows: args.get_parse("max-batch-rows", 256usize)?,
+                    max_wait: Duration::from_micros(args.get_parse("max-wait-us", 200u64)?),
+                    queue_rows: args.get_parse("queue-rows", 4096usize)?,
+                    dump_every: Some(Duration::from_secs(1)),
+                };
+                let ranks = engine.cfg.workers.max(1);
+                let rpc = ((fcfg.max_batch_rows + ranks - 1) / ranks).max(1);
+                eprintln!("serving: {clients} client(s) × {per_client} request(s) × \
+                           {req_rows} row(s); micro-batch ≤{} rows, deadline {}µs, \
+                           queue {} rows",
+                          fcfg.max_batch_rows, fcfg.max_wait.as_micros(), fcfg.queue_rows);
+                let q = spec.q;
+                let xs = xstar.as_slice();
+                let (r, failed, report) = engine.train_then_serve(rpc, fcfg, |handle| {
+                    std::thread::scope(|s| {
+                        let joins: Vec<_> = (0..clients).map(|c| {
+                            let h = handle.clone();
+                            s.spawn(move || {
+                                let mut failed = 0usize;
+                                for i in 0..per_client {
+                                    let start = ((c * per_client + i) * req_rows) % nt;
+                                    let mut rows = Vec::with_capacity(req_rows * q);
+                                    for k in 0..req_rows {
+                                        let row = (start + k) % nt;
+                                        rows.extend_from_slice(&xs[row * q..(row + 1) * q]);
+                                    }
+                                    if h.predict(Mat::from_vec(req_rows, q, rows)).is_err() {
+                                        failed += 1;
+                                    }
+                                }
+                                failed
+                            })
+                        }).collect();
+                        joins.into_iter()
+                             .map(|j| j.join().expect("client thread panicked"))
+                             .sum::<usize>()
+                    })
+                })?;
+                println!("bound: {:.4}  iters: {}  evals: {}",
+                         r.f, r.iterations, r.evaluations);
+                if failed > 0 {
+                    println!("{failed} request(s) failed");
+                }
+                println!("{}", report.snapshot.render_text());
+                println!("# serve phases: {}", report.timer.summary());
+                println!("{}", report.snapshot.to_json().to_string_pretty());
+                return Ok(());
+            }
+
             let (r, pred_mean, pred_var) = if args.flag("refit-demo") {
                 if args.flag("stream") {
                     bail!("--refit-demo and --stream are mutually exclusive \
@@ -223,6 +290,9 @@ fn main() -> Result<()> {
             println!("         --nt --batch (predict: test rows, serving batch granularity)");
             println!("         --refit-demo (predict: hot-swap the posterior mid-session)");
             println!("         --stream (predict: pipeline --batch-row serving batches)");
+            println!("         --serve (predict: concurrent-client micro-batching front-end;");
+            println!("           knobs: --clients --serve-requests --req-rows");
+            println!("           --max-batch-rows --max-wait-us --queue-rows)");
             println!("         --no-pipeline (synchronous evaluation cycle)");
             println!("(options are validated per subcommand; see each command's scope)");
             if cmd != "help" {

@@ -2,7 +2,12 @@
 //!
 //! The coordinator attributes every microsecond of an optimisation
 //! iteration to a named phase; the distributable/indistributable split is
-//! exactly what the paper's Fig 1b plots.
+//! exactly what the paper's Fig 1b plots. The serving front-end reuses
+//! the same [`PhaseTimer`] over its own `Srv*` phases, and layers the
+//! counter/histogram side of serving observability in
+//! [`serving::ServingMetrics`].
+
+pub mod serving;
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -70,13 +75,28 @@ pub enum Phase {
     GatherGrads,
     /// Optimiser step (leader).
     OptStep,
+    /// Serving front-end: batcher idle, waiting for client requests to
+    /// arrive (or for a micro-batch deadline to expire).
+    SrvEnqueueWait,
+    /// Serving front-end: coalescing queued requests into one
+    /// micro-batch (row concatenation + span bookkeeping).
+    SrvBatchAssembly,
+    /// Serving front-end: the sharded cluster round (issue + own-shard
+    /// compute + gather) for a coalesced batch.
+    SrvClusterRound,
+    /// Serving front-end: splitting a completed batch's rows back out to
+    /// the originating client requests.
+    SrvFanout,
 }
 
 impl Phase {
-    /// Every phase, in cycle order (for iteration/reporting).
-    pub const ALL: [Phase; 7] = [
+    /// Every phase, in cycle order (for iteration/reporting); the
+    /// serving front-end phases follow the training cycle's.
+    pub const ALL: [Phase; 11] = [
         Phase::Bcast, Phase::StatsFwd, Phase::Reduce, Phase::BoundCore,
         Phase::StatsVjp, Phase::GatherGrads, Phase::OptStep,
+        Phase::SrvEnqueueWait, Phase::SrvBatchAssembly, Phase::SrvClusterRound,
+        Phase::SrvFanout,
     ];
 
     /// Stable snake_case label (used in timing summaries and benches).
@@ -89,11 +109,18 @@ impl Phase {
             Phase::StatsVjp => "stats_vjp",
             Phase::GatherGrads => "gather_grads",
             Phase::OptStep => "opt_step",
+            Phase::SrvEnqueueWait => "srv_enqueue_wait",
+            Phase::SrvBatchAssembly => "srv_batch_assembly",
+            Phase::SrvClusterRound => "srv_cluster_round",
+            Phase::SrvFanout => "srv_fanout",
         }
     }
 
     /// Is this phase parallelisable over datapoints (the paper's
-    /// "distributable computation")?
+    /// "distributable computation")? The serving phases are leader-side
+    /// scheduling work, not datapoint compute, so they are all
+    /// indistributable by this classification (they never feed Fig 1b —
+    /// the serving dump reports them separately).
     pub fn distributable(self) -> bool {
         matches!(self, Phase::StatsFwd | Phase::StatsVjp)
     }

@@ -1,0 +1,378 @@
+//! Serving-side observability: lock-free counters and a latency
+//! histogram for the micro-batching front-end.
+//!
+//! [`ServingMetrics`] is the shared sink: client handles record
+//! enqueue/complete events (including the enqueue-to-complete latency of
+//! every request) and the batcher records batch formation and queue
+//! depth — all through atomics, so the hot path never takes a lock. A
+//! [`ServingSnapshot`] is a consistent-enough point-in-time read with
+//! derived rates (rows/sec, batch-fill ratio, p50/p99 latency), rendered
+//! either as a Prometheus-style text dump ([`ServingSnapshot::render_text`],
+//! the `--serve` periodic dump) or as a machine-readable JSON record
+//! ([`ServingSnapshot::to_json`]).
+//!
+//! The latency histogram uses power-of-two nanosecond buckets with
+//! linear interpolation inside the winning bucket — coarse but
+//! allocation-free, bounded (64 buckets cover 1 ns to ~584 years), and
+//! mergeable across threads without coordination, which is exactly the
+//! Prometheus histogram trade-off.
+
+use crate::config::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Power-of-two nanosecond buckets: index `i` counts latencies in
+/// `[2^i, 2^(i+1))` ns (index 0 also absorbs 0 ns).
+const BUCKETS: usize = 64;
+
+/// Lock-free latency histogram over power-of-two nanosecond buckets.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: [const { AtomicU64::new(0) }; BUCKETS],
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one latency observation.
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        let idx = (63 - ns.max(1).leading_zeros()) as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in nanoseconds (0 when empty).
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// The `q`-quantile latency in nanoseconds (`q` in `[0, 1]`),
+    /// linearly interpolated inside the winning power-of-two bucket.
+    /// Returns 0 when no observations have been recorded.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        // rank of the wanted observation, 1-based, clamped to the range
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= rank {
+                // interpolate within [2^i, 2^(i+1)) by the rank's
+                // position among this bucket's observations
+                let lo = (1u64 << i) as f64;
+                let frac = (rank - seen) as f64 / c as f64;
+                return lo + lo * frac;
+            }
+            seen += c;
+        }
+        // unreachable with a consistent count; fall back to the top edge
+        f64::MAX
+    }
+}
+
+/// Shared serving metrics sink: atomically updated by every client
+/// handle and by the batcher thread. Construct once per front-end and
+/// share behind an `Arc`.
+#[derive(Debug)]
+pub struct ServingMetrics {
+    start: Instant,
+    /// Micro-batch size cap — denominator of the batch-fill ratio.
+    max_batch_rows: u64,
+    requests: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    rows_done: AtomicU64,
+    batches: AtomicU64,
+    batch_rows: AtomicU64,
+    queue_rows: AtomicU64,
+    queue_rows_max: AtomicU64,
+    enqueue_blocked: AtomicU64,
+    enqueue_blocked_ns: AtomicU64,
+    /// Enqueue-to-complete latency of every finished request.
+    pub latency: LatencyHistogram,
+}
+
+impl ServingMetrics {
+    /// Fresh sink. `max_batch_rows` is the batcher's size trigger (the
+    /// batch-fill ratio's denominator).
+    pub fn new(max_batch_rows: usize) -> ServingMetrics {
+        ServingMetrics {
+            start: Instant::now(),
+            max_batch_rows: max_batch_rows.max(1) as u64,
+            requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            rows_done: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_rows: AtomicU64::new(0),
+            queue_rows: AtomicU64::new(0),
+            queue_rows_max: AtomicU64::new(0),
+            enqueue_blocked: AtomicU64::new(0),
+            enqueue_blocked_ns: AtomicU64::new(0),
+            latency: LatencyHistogram::default(),
+        }
+    }
+
+    /// A request entered the queue; `depth_rows` is the queue depth (in
+    /// rows) right after the push.
+    pub fn note_enqueued(&self, depth_rows: usize) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.set_queue_depth(depth_rows);
+    }
+
+    /// A request was answered without touching the queue (the empty
+    /// request fast path): counted, no depth update.
+    pub fn note_unqueued_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An enqueue had to block on backpressure for `waited`.
+    pub fn note_blocked(&self, waited: Duration) {
+        self.enqueue_blocked.fetch_add(1, Ordering::Relaxed);
+        self.enqueue_blocked_ns
+            .fetch_add(waited.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+    }
+
+    /// The batcher closed one micro-batch of `rows` rows; `depth_rows`
+    /// is the queue depth right after the batch was taken.
+    pub fn note_batch(&self, rows: usize, depth_rows: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.set_queue_depth(depth_rows);
+    }
+
+    /// A request finished; `ok` tells success from failure, `rows` is
+    /// its row count and `latency` its enqueue-to-complete time.
+    pub fn note_finished(&self, ok: bool, rows: usize, latency: Duration) {
+        if ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+            self.rows_done.fetch_add(rows as u64, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.latency.record(latency);
+    }
+
+    fn set_queue_depth(&self, depth_rows: usize) {
+        let d = depth_rows as u64;
+        self.queue_rows.store(d, Ordering::Relaxed);
+        self.queue_rows_max.fetch_max(d, Ordering::Relaxed);
+    }
+
+    /// Point-in-time read with derived rates. `comm` carries the
+    /// session's transport counter deltas (bytes, messages) when the
+    /// caller has them — the metrics sink itself never touches the
+    /// transport.
+    pub fn snapshot(&self, comm: Option<(u64, u64)>) -> ServingSnapshot {
+        let elapsed = self.start.elapsed().as_secs_f64().max(1e-9);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batch_rows = self.batch_rows.load(Ordering::Relaxed);
+        let rows_done = self.rows_done.load(Ordering::Relaxed);
+        let (comm_bytes, comm_messages) = comm.unwrap_or((0, 0));
+        ServingSnapshot {
+            elapsed_sec: elapsed,
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            rows: rows_done,
+            rows_per_sec: rows_done as f64 / elapsed,
+            batches,
+            batch_fill: if batches == 0 {
+                0.0
+            } else {
+                batch_rows as f64 / (batches * self.max_batch_rows) as f64
+            },
+            queue_rows: self.queue_rows.load(Ordering::Relaxed),
+            queue_rows_max: self.queue_rows_max.load(Ordering::Relaxed),
+            enqueue_blocked: self.enqueue_blocked.load(Ordering::Relaxed),
+            enqueue_blocked_sec: self.enqueue_blocked_ns.load(Ordering::Relaxed) as f64
+                * 1e-9,
+            latency_mean_us: self.latency.mean_ns() * 1e-3,
+            latency_p50_us: self.latency.quantile_ns(0.50) * 1e-3,
+            latency_p99_us: self.latency.quantile_ns(0.99) * 1e-3,
+            comm_bytes,
+            comm_messages,
+        }
+    }
+}
+
+/// One consistent-enough read of a [`ServingMetrics`] sink, with the
+/// derived rates the dumps report.
+#[derive(Clone, Debug, Default)]
+pub struct ServingSnapshot {
+    /// Seconds since the sink was created.
+    pub elapsed_sec: f64,
+    /// Requests that entered the queue.
+    pub requests: u64,
+    /// Requests that completed successfully.
+    pub completed: u64,
+    /// Requests that finished with an error.
+    pub failed: u64,
+    /// Prediction rows served (successful requests only).
+    pub rows: u64,
+    /// Served rows per second since the sink was created.
+    pub rows_per_sec: f64,
+    /// Coalesced micro-batches issued to the cluster.
+    pub batches: u64,
+    /// Mean batch rows / `max_batch_rows` — 1.0 means every batch closed
+    /// on the size trigger, small values mean the deadline fired first.
+    pub batch_fill: f64,
+    /// Queue depth in rows at snapshot time.
+    pub queue_rows: u64,
+    /// High-water queue depth in rows.
+    pub queue_rows_max: u64,
+    /// Enqueues that blocked on backpressure.
+    pub enqueue_blocked: u64,
+    /// Total seconds enqueues spent blocked on backpressure.
+    pub enqueue_blocked_sec: f64,
+    /// Mean enqueue-to-complete latency, microseconds.
+    pub latency_mean_us: f64,
+    /// Median enqueue-to-complete latency, microseconds.
+    pub latency_p50_us: f64,
+    /// 99th-percentile enqueue-to-complete latency, microseconds.
+    pub latency_p99_us: f64,
+    /// Transport bytes sent over the session (0 when not supplied).
+    pub comm_bytes: u64,
+    /// Transport messages sent over the session (0 when not supplied).
+    pub comm_messages: u64,
+}
+
+impl ServingSnapshot {
+    /// Prometheus-style text exposition (the `--serve` periodic dump).
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("# serving front-end t={:.1}s\n", self.elapsed_sec));
+        s.push_str(&format!("gp_serve_requests_total {}\n", self.requests));
+        s.push_str(&format!("gp_serve_requests_completed {}\n", self.completed));
+        s.push_str(&format!("gp_serve_requests_failed {}\n", self.failed));
+        s.push_str(&format!("gp_serve_rows_total {}\n", self.rows));
+        s.push_str(&format!("gp_serve_rows_per_sec {:.1}\n", self.rows_per_sec));
+        s.push_str(&format!("gp_serve_latency_us{{quantile=\"0.5\"}} {:.1}\n",
+                            self.latency_p50_us));
+        s.push_str(&format!("gp_serve_latency_us{{quantile=\"0.99\"}} {:.1}\n",
+                            self.latency_p99_us));
+        s.push_str(&format!("gp_serve_latency_us_mean {:.1}\n", self.latency_mean_us));
+        s.push_str(&format!("gp_serve_batches_total {}\n", self.batches));
+        s.push_str(&format!("gp_serve_batch_fill_ratio {:.3}\n", self.batch_fill));
+        s.push_str(&format!("gp_serve_queue_rows {}\n", self.queue_rows));
+        s.push_str(&format!("gp_serve_queue_rows_max {}\n", self.queue_rows_max));
+        s.push_str(&format!("gp_serve_enqueue_blocked_total {}\n", self.enqueue_blocked));
+        s.push_str(&format!("gp_serve_enqueue_blocked_sec {:.3}\n",
+                            self.enqueue_blocked_sec));
+        s.push_str(&format!("gp_serve_comm_bytes_total {}\n", self.comm_bytes));
+        s.push_str(&format!("gp_serve_comm_messages_total {}\n", self.comm_messages));
+        s
+    }
+
+    /// Machine-readable record (one [`Json`] object, sorted keys).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("elapsed_sec".into(), Json::Num(self.elapsed_sec));
+        m.insert("requests".into(), Json::Num(self.requests as f64));
+        m.insert("completed".into(), Json::Num(self.completed as f64));
+        m.insert("failed".into(), Json::Num(self.failed as f64));
+        m.insert("rows".into(), Json::Num(self.rows as f64));
+        m.insert("rows_per_sec".into(), Json::Num(self.rows_per_sec));
+        m.insert("batches".into(), Json::Num(self.batches as f64));
+        m.insert("batch_fill".into(), Json::Num(self.batch_fill));
+        m.insert("queue_rows".into(), Json::Num(self.queue_rows as f64));
+        m.insert("queue_rows_max".into(), Json::Num(self.queue_rows_max as f64));
+        m.insert("enqueue_blocked".into(), Json::Num(self.enqueue_blocked as f64));
+        m.insert("enqueue_blocked_sec".into(), Json::Num(self.enqueue_blocked_sec));
+        m.insert("latency_mean_us".into(), Json::Num(self.latency_mean_us));
+        m.insert("latency_p50_us".into(), Json::Num(self.latency_p50_us));
+        m.insert("latency_p99_us".into(), Json::Num(self.latency_p99_us));
+        m.insert("comm_bytes".into(), Json::Num(self.comm_bytes as f64));
+        m.insert("comm_messages".into(), Json::Num(self.comm_messages as f64));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_interpolate_sensibly() {
+        let h = LatencyHistogram::default();
+        // 100 observations at ~1 µs, 1 at ~1 ms: p50 lands in the µs
+        // bucket, p99+ near the outlier's bucket
+        for _ in 0..100 {
+            h.record(Duration::from_nanos(1_100));
+        }
+        h.record(Duration::from_millis(1));
+        assert_eq!(h.count(), 101);
+        let p50 = h.quantile_ns(0.5);
+        assert!((1_024.0..2_048.0).contains(&p50), "p50 = {p50}");
+        let p100 = h.quantile_ns(1.0);
+        assert!(p100 >= 524_288.0, "max quantile must reach the outlier: {p100}");
+        // quantiles are monotone in q
+        assert!(h.quantile_ns(0.99) >= p50);
+        // mean sits between the mass and the outlier
+        assert!(h.mean_ns() > 1_000.0 && h.mean_ns() < 1_000_000.0);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile_ns(0.5), 0.0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_derives_rates_and_renders() {
+        let m = ServingMetrics::new(8);
+        m.note_enqueued(3);
+        m.note_enqueued(5);
+        m.note_blocked(Duration::from_micros(10));
+        m.note_batch(5, 0);
+        m.note_finished(true, 3, Duration::from_micros(50));
+        m.note_finished(false, 2, Duration::from_micros(70));
+        let s = m.snapshot(Some((1234, 7)));
+        assert_eq!((s.requests, s.completed, s.failed), (2, 1, 1));
+        assert_eq!(s.rows, 3);
+        assert_eq!(s.batches, 1);
+        assert!((s.batch_fill - 5.0 / 8.0).abs() < 1e-12);
+        assert_eq!(s.queue_rows_max, 5);
+        assert_eq!(s.enqueue_blocked, 1);
+        assert_eq!((s.comm_bytes, s.comm_messages), (1234, 7));
+        let text = s.render_text();
+        for key in ["gp_serve_requests_total 2", "gp_serve_requests_failed 1",
+                    "gp_serve_batches_total 1", "gp_serve_queue_rows_max 5",
+                    "gp_serve_enqueue_blocked_total 1",
+                    "gp_serve_comm_messages_total 7",
+                    "gp_serve_latency_us{quantile=\"0.99\"}"] {
+            assert!(text.contains(key), "dump missing `{key}`:\n{text}");
+        }
+        let j = s.to_json().to_string_pretty();
+        assert!(j.contains("\"requests\": 2"), "{j}");
+    }
+}

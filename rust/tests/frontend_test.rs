@@ -1,0 +1,557 @@
+//! Concurrent-client serving front-end: correctness under concurrency.
+//!
+//! Five layers of guarantees over the micro-batching scheduler
+//! (`ServingFrontend`) in front of the sharded serving protocol:
+//! 1. with several clients enqueueing interleaved ragged (and empty)
+//!    requests, every reply is **bit-identical** to the single-node
+//!    posterior's answer for that request alone — for every cluster
+//!    size 1–9 and both CPU backends (coalescing is pure row
+//!    concatenation and sharded serving is row-independent);
+//! 2. a mid-stream hot-swap is applied on a **batch boundary**: every
+//!    reply is entirely pre-swap or entirely post-swap (never a mix),
+//!    and every request issued after `swap` returned sees the new
+//!    posterior;
+//! 3. a poisoned worker fails only the in-flight batch — the session
+//!    stays usable, later requests (and a good swap) succeed, the
+//!    worker reports the sticky error at close, and nothing deadlocks;
+//! 4. backpressure bounds the queue: an enqueue that would overflow
+//!    `queue_rows` blocks until the queue drains, and both requests
+//!    still complete bit-identically;
+//! 5. the `Engine`-level hand-off (`train_then_serve`) serves replies
+//!    bit-identical to `train_then_predict`, and a mid-session `refit`
+//!    swaps to exactly the posterior implied by the serial chunked
+//!    stats at the refit parameters.
+
+use anyhow::{bail, Result};
+use gpparallel::collectives::Cluster;
+use gpparallel::config::BackendKind;
+use gpparallel::coordinator::engine::serve::{worker_serve, DistributedPosterior};
+use gpparallel::coordinator::{Backend, ChunkData, Engine, EngineConfig, FrontendConfig,
+                              OptChoice, ParallelCpuBackend, RustCpuBackend,
+                              ServingFrontend, ViewParams};
+use gpparallel::data::synthetic::{generate_supervised, SyntheticSpec};
+use gpparallel::kern::RbfArd;
+use gpparallel::linalg::Mat;
+use gpparallel::math::predict::PosteriorCore;
+use gpparallel::math::stats::{sgpr_stats_fwd, sgpr_stats_fwd_chunked, ChunkGrads,
+                              Stats, StatsCts};
+use gpparallel::models::{Posterior, SparseGpRegression};
+use gpparallel::optim::Lbfgs;
+use gpparallel::testutil::prop::Rng64;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn toy_core(seed: u64, n: usize, m: usize, q: usize, d: usize) -> PosteriorCore {
+    let mut rng = Rng64::new(seed);
+    let x = Mat::from_fn(n, q, |_, _| rng.normal());
+    let y = Mat::from_fn(n, d, |_, _| rng.normal());
+    let z = Mat::from_fn(m, q, |_, _| rng.normal());
+    let kern = RbfArd::new(1.4, (0..q).map(|_| rng.uniform_range(0.7, 1.3)).collect());
+    let w = vec![1.0; n];
+    let st = sgpr_stats_fwd(&kern, &x, &w, &y, &z);
+    PosteriorCore::new(kern, z, 15.0, &st).unwrap()
+}
+
+fn backend_for(kind: BackendKind) -> Box<dyn Backend> {
+    match kind {
+        BackendKind::RustCpu => Box::new(RustCpuBackend),
+        BackendKind::ParallelCpu { threads } => Box::new(ParallelCpuBackend::new(threads)),
+        BackendKind::Xla => unreachable!("not exercised here"),
+    }
+}
+
+/// Assert one reply is bit-identical to an expectation.
+fn assert_reply(got: &(Mat, Vec<f64>), want: &(Mat, Vec<f64>), ctx: &str) {
+    assert!(got.0.max_abs_diff(&want.0) == 0.0, "{ctx}: mean differs");
+    assert_eq!(got.1, want.1, "{ctx}: var differs");
+}
+
+/// The acceptance-criteria matrix: three concurrent clients with
+/// interleaved ragged (and empty) request streams, every reply
+/// bit-identical to the single-node posterior's answer for that request
+/// alone — ranks 1–9 × both CPU backends. The micro-batch size (6) is
+/// deliberately smaller than most coalesced loads so batches routinely
+/// span requests from different clients.
+#[test]
+fn frontend_replies_bit_identical_ranks_1_to_9() {
+    let core = toy_core(21, 60, 10, 2, 3);
+    let single = Posterior::from_core(core.clone());
+    let mut rng = Rng64::new(22);
+    let client_rows: [&[usize]; 3] = [&[5, 0, 3, 1], &[7, 2], &[1, 1, 4]];
+    let requests: Vec<Vec<Mat>> = client_rows
+        .iter()
+        .map(|rows| rows.iter()
+            .map(|&nt| Mat::from_fn(nt, 2, |_, _| rng.normal()))
+            .collect())
+        .collect();
+    let expect: Vec<Vec<(Mat, Vec<f64>)>> = requests
+        .iter()
+        .map(|c| c.iter().map(|r| single.predict(r)).collect())
+        .collect();
+
+    for kind in [BackendKind::RustCpu, BackendKind::ParallelCpu { threads: 3 }] {
+        for size in 1..=9usize {
+            let (core_ref, reqs) = (&core, &requests);
+            let results = Cluster::run(size, move |mut comm| {
+                let mut backend = backend_for(kind);
+                if comm.rank() == 0 {
+                    let mut dp = DistributedPosterior::leader(core_ref.clone(), 4,
+                                                             &mut comm);
+                    let fe = ServingFrontend::new(
+                        FrontendConfig {
+                            max_batch_rows: 6,
+                            max_wait: Duration::from_micros(200),
+                            queue_rows: 64,
+                            dump_every: None,
+                        },
+                        2, 3);
+                    let (served, report) = std::thread::scope(|s| {
+                        let clients: Vec<_> = reqs
+                            .iter()
+                            .map(|reqs_c| {
+                                let h = fe.handle();
+                                s.spawn(move || -> Vec<(Mat, Vec<f64>)> {
+                                    reqs_c.iter()
+                                        .map(|r| h.predict(r.clone()).unwrap())
+                                        .collect()
+                                })
+                            })
+                            .collect();
+                        let closer = {
+                            let h = fe.handle();
+                            s.spawn(move || {
+                                let out: Vec<_> = clients.into_iter()
+                                    .map(|c| c.join().unwrap())
+                                    .collect();
+                                h.close();
+                                out
+                            })
+                        };
+                        let report = fe.run(&mut dp, &mut comm, backend.as_mut());
+                        (closer.join().unwrap(), report)
+                    });
+                    dp.finish(&mut comm);
+                    Some((served, report))
+                } else {
+                    worker_serve(&mut comm, backend.as_mut()).unwrap();
+                    None
+                }
+            });
+            let (served, report) =
+                results.into_iter().next().unwrap().expect("leader output");
+
+            for (c, (got_c, want_c)) in served.iter().zip(&expect).enumerate() {
+                for (i, (got, want)) in got_c.iter().zip(want_c).enumerate() {
+                    assert_reply(got, want,
+                                 &format!("{kind:?} size {size} client {c} req {i}"));
+                }
+            }
+            assert_eq!(report.snapshot.requests, 9, "{kind:?} size {size}");
+            assert_eq!(report.snapshot.completed, 9, "{kind:?} size {size}");
+            assert_eq!(report.snapshot.failed, 0, "{kind:?} size {size}");
+            assert_eq!(report.snapshot.rows, 24, "{kind:?} size {size}");
+            assert_eq!(report.snapshot.queue_rows, 0, "{kind:?} size {size}");
+            assert!(report.snapshot.batches >= 1, "{kind:?} size {size}");
+        }
+    }
+}
+
+/// A mid-stream hot-swap under concurrent load is applied on a batch
+/// boundary: every reply bit-equals the old posterior's answer or the
+/// new one's — never a row-level mix — and requests issued after `swap`
+/// returned see the new posterior. Requests issued and completed before
+/// the swap was even enqueued see the old one.
+#[test]
+fn frontend_swap_applies_on_batch_boundary() {
+    let core_a = toy_core(31, 50, 8, 1, 2);
+    let core_b = toy_core(32, 50, 8, 1, 2);
+    let mut rng = Rng64::new(33);
+    let xstar = Mat::from_fn(6, 1, |_, _| rng.normal());
+    let want_a = Posterior::from_core(core_a.clone()).predict(&xstar);
+    let want_b = Posterior::from_core(core_b.clone()).predict(&xstar);
+    assert!(want_a.0.max_abs_diff(&want_b.0) > 0.0,
+            "cores A and B predict identically — test is vacuous");
+
+    const PRE: usize = 10; // per-client requests before the swap gate opens
+    let swapped = AtomicBool::new(false);
+    let pre_done = AtomicUsize::new(0);
+    let (ca, cb, xs, fl, pd) = (&core_a, &core_b, &xstar, &swapped, &pre_done);
+
+    let results = Cluster::run(2, move |mut comm| {
+        let mut backend = backend_for(BackendKind::RustCpu);
+        if comm.rank() == 0 {
+            let mut dp = DistributedPosterior::leader(ca.clone(), 3, &mut comm);
+            let fe = ServingFrontend::new(
+                FrontendConfig {
+                    max_batch_rows: 12,
+                    max_wait: Duration::from_micros(100),
+                    queue_rows: 256,
+                    dump_every: None,
+                },
+                1, 2);
+            type Reply = (Mat, Vec<f64>);
+            let served = std::thread::scope(|s| {
+                let clients: Vec<_> = (0..2)
+                    .map(|_| {
+                        let h = fe.handle();
+                        s.spawn(move || -> (Vec<Reply>, Vec<Reply>, Vec<Reply>) {
+                            // phase 1: completed before the swap can be
+                            // enqueued (the swapper waits for both
+                            // clients' phase-1 counts) — must be all-A
+                            let pre: Vec<Reply> = (0..PRE)
+                                .map(|_| h.predict(xs.clone()).unwrap())
+                                .collect();
+                            pd.fetch_add(1, Ordering::SeqCst);
+                            // phase 2: concurrent with the swap — A or B
+                            let mut mid = Vec::new();
+                            while !fl.load(Ordering::SeqCst) && mid.len() < 200 {
+                                mid.push(h.predict(xs.clone()).unwrap());
+                            }
+                            while !fl.load(Ordering::SeqCst) {
+                                std::thread::yield_now();
+                            }
+                            // phase 3: issued after `swap` returned —
+                            // must be all-B
+                            let post: Vec<Reply> = (0..3)
+                                .map(|_| h.predict(xs.clone()).unwrap())
+                                .collect();
+                            (pre, mid, post)
+                        })
+                    })
+                    .collect();
+                let swapper = {
+                    let h = fe.handle();
+                    s.spawn(move || {
+                        while pd.load(Ordering::SeqCst) < 2 {
+                            std::thread::yield_now();
+                        }
+                        h.swap(cb.clone()).unwrap();
+                        fl.store(true, Ordering::SeqCst);
+                    })
+                };
+                let closer = {
+                    let h = fe.handle();
+                    s.spawn(move || {
+                        swapper.join().unwrap();
+                        let out: Vec<_> = clients.into_iter()
+                            .map(|c| c.join().unwrap())
+                            .collect();
+                        h.close();
+                        out
+                    })
+                };
+                fe.run(&mut dp, &mut comm, backend.as_mut());
+                closer.join().unwrap()
+            });
+            dp.finish(&mut comm);
+            Some(served)
+        } else {
+            worker_serve(&mut comm, backend.as_mut()).unwrap();
+            None
+        }
+    });
+    let served = results.into_iter().next().unwrap().expect("leader output");
+
+    let is = |r: &(Mat, Vec<f64>), w: &(Mat, Vec<f64>)| {
+        r.0.max_abs_diff(&w.0) == 0.0 && r.1 == w.1
+    };
+    for (c, (pre, mid, post)) in served.iter().enumerate() {
+        for (i, r) in pre.iter().enumerate() {
+            assert!(is(r, &want_a), "client {c} pre-swap req {i}: not posterior A");
+        }
+        for (i, r) in mid.iter().enumerate() {
+            assert!(is(r, &want_a) || is(r, &want_b),
+                    "client {c} concurrent req {i}: mixes posteriors A and B");
+        }
+        for (i, r) in post.iter().enumerate() {
+            assert!(is(r, &want_b), "client {c} post-swap req {i}: not posterior B");
+        }
+    }
+}
+
+/// A backend whose serving compute can be poisoned at runtime; training
+/// entry points delegate to the scalar CPU backend untouched.
+struct FailingBackend {
+    fail: Arc<AtomicBool>,
+    inner: RustCpuBackend,
+}
+
+impl Backend for FailingBackend {
+    fn stats_fwd(&mut self, chunk: &ChunkData, latent: Option<(&Mat, &Mat)>,
+                 view: &ViewParams, include_kl: bool) -> Result<Stats> {
+        self.inner.stats_fwd(chunk, latent, view, include_kl)
+    }
+
+    fn stats_vjp(&mut self, chunk: &ChunkData, latent: Option<(&Mat, &Mat)>,
+                 view: &ViewParams, cts: &StatsCts) -> Result<ChunkGrads> {
+        self.inner.stats_vjp(chunk, latent, view, cts)
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::RustCpu
+    }
+
+    fn predict_batch(&mut self, core: &PosteriorCore, xstar: &Mat, row0: usize,
+                     rows: usize, mean_out: &mut [f64], var_out: &mut [f64])
+                     -> Result<()> {
+        if self.fail.load(Ordering::SeqCst) {
+            bail!("injected backend failure");
+        }
+        self.inner.predict_batch(core, xstar, row0, rows, mean_out, var_out)
+    }
+}
+
+/// A poisoned worker fails only the in-flight request — with a clean
+/// error naming the rank — and the front-end session stays usable: once
+/// the poison lifts, later requests (and a good swap) serve
+/// bit-identically, a standalone `refit` is refused with a clear error,
+/// and the worker reports the sticky failure at close. The test
+/// completing at all proves nothing deadlocked.
+#[test]
+fn poisoned_worker_fails_in_flight_only() {
+    let core = toy_core(41, 40, 6, 2, 2);
+    let single = Posterior::from_core(core.clone());
+    let mut rng = Rng64::new(42);
+    // 4 rows at rows_per_chunk=2 on 2 ranks: rank 1 owns rows 2..4, so
+    // its poisoned compute fail-flags every batch
+    let xstar = Mat::from_fn(4, 2, |_, _| rng.normal());
+    let want = single.predict(&xstar);
+    let fail = Arc::new(AtomicBool::new(true));
+    let (core_ref, xs, fl) = (&core, &xstar, &fail);
+
+    let results = Cluster::run(2, move |mut comm| {
+        if comm.rank() == 0 {
+            let mut backend = RustCpuBackend;
+            let mut dp = DistributedPosterior::leader(core_ref.clone(), 2, &mut comm);
+            let fe = ServingFrontend::new(
+                FrontendConfig {
+                    max_batch_rows: 8,
+                    max_wait: Duration::from_micros(100),
+                    queue_rows: 64,
+                    dump_every: None,
+                },
+                2, 2);
+            let (out, report) = std::thread::scope(|s| {
+                let h = fe.handle();
+                let drive = s.spawn(move || {
+                    // 1. poisoned worker: the batch fails cleanly
+                    let err = h.predict(xs.clone())
+                        .expect_err("poisoned worker must fail the request");
+                    assert!(format!("{err:#}").contains("rank 1"),
+                            "error must name the failing rank: {err:#}");
+                    // 2. poison lifted: the session recovered
+                    fl.store(false, Ordering::SeqCst);
+                    let ok1 = h.predict(xs.clone()).unwrap();
+                    // 3. a good swap still works after the failure
+                    h.swap(core_ref.clone()).unwrap();
+                    let ok2 = h.predict(xs.clone()).unwrap();
+                    // 4. standalone front-ends refuse refit clearly
+                    let err = h.refit(&[0.0])
+                        .expect_err("standalone refit must be refused");
+                    assert!(format!("{err:#}").contains("training cluster"),
+                            "unhelpful refit error: {err:#}");
+                    h.close();
+                    (ok1, ok2)
+                });
+                let report = fe.run(&mut dp, &mut comm, &mut backend);
+                (drive.join().unwrap(), report)
+            });
+            dp.finish(&mut comm);
+            Some((out, report))
+        } else {
+            let mut backend = FailingBackend {
+                fail: Arc::clone(fl),
+                inner: RustCpuBackend,
+            };
+            let err = worker_serve(&mut comm, &mut backend)
+                .expect_err("worker must report the sticky failure at close");
+            assert!(format!("{err:#}").contains("injected"),
+                    "unhelpful worker error: {err:#}");
+            None
+        }
+    });
+    let ((ok1, ok2), report) =
+        results.into_iter().next().unwrap().expect("leader output");
+
+    assert_reply(&ok1, &want, "first request after the poison lifted");
+    assert_reply(&ok2, &want, "request after the recovery swap");
+    assert_eq!(report.snapshot.completed, 2);
+    assert_eq!(report.snapshot.failed, 1);
+}
+
+/// Backpressure bounds the queue deterministically: with a 4-row bound
+/// and the size trigger out of reach, a first request fills the queue,
+/// a second blocks in `predict` until the deadline-triggered batch
+/// drains, and both still complete bit-identically. The queue high-water
+/// mark never exceeds the bound.
+#[test]
+fn frontend_backpressure_bounds_queue() {
+    let core = toy_core(51, 40, 6, 1, 2);
+    let single = Posterior::from_core(core.clone());
+    let mut rng = Rng64::new(52);
+    let xa = Mat::from_fn(4, 1, |_, _| rng.normal());
+    let xb = Mat::from_fn(1, 1, |_, _| rng.normal());
+    let want_a = single.predict(&xa);
+    let want_b = single.predict(&xb);
+    let (core_ref, ra, rb) = (&core, &xa, &xb);
+
+    let results = Cluster::run(2, move |mut comm| {
+        let mut backend = backend_for(BackendKind::RustCpu);
+        if comm.rank() == 0 {
+            let mut dp = DistributedPosterior::leader(core_ref.clone(), 2, &mut comm);
+            let fe = ServingFrontend::new(
+                FrontendConfig {
+                    // size trigger unreachable: only the 100 ms deadline
+                    // can close a batch, so client A's rows sit in the
+                    // queue long enough for client B to block on them
+                    max_batch_rows: 100,
+                    max_wait: Duration::from_millis(100),
+                    queue_rows: 4,
+                    dump_every: None,
+                },
+                1, 2);
+            let (got_a, got_b, report) = std::thread::scope(|s| {
+                let ha = fe.handle();
+                let a = s.spawn(move || ha.predict(ra.clone()).unwrap());
+                let hb = fe.handle();
+                let b = s.spawn(move || {
+                    // wait until A's 4 rows fill the queue, then enqueue:
+                    // 4 + 1 > 4 must block until the deadline batch drains
+                    let t0 = Instant::now();
+                    while hb.metrics().queue_rows < 4 {
+                        assert!(t0.elapsed() < Duration::from_secs(10),
+                                "client A's rows never reached the queue");
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    hb.predict(rb.clone()).unwrap()
+                });
+                let closer = {
+                    let h = fe.handle();
+                    s.spawn(move || {
+                        let (ga, gb) = (a.join().unwrap(), b.join().unwrap());
+                        h.close();
+                        (ga, gb)
+                    })
+                };
+                let report = fe.run(&mut dp, &mut comm, backend.as_mut());
+                let (ga, gb) = closer.join().unwrap();
+                (ga, gb, report)
+            });
+            dp.finish(&mut comm);
+            Some((got_a, got_b, report))
+        } else {
+            worker_serve(&mut comm, backend.as_mut()).unwrap();
+            None
+        }
+    });
+    let (got_a, got_b, report) =
+        results.into_iter().next().unwrap().expect("leader output");
+
+    assert_reply(&got_a, &want_a, "queue-filling request");
+    assert_reply(&got_b, &want_b, "backpressured request");
+    assert_eq!(report.snapshot.completed, 2);
+    assert_eq!(report.snapshot.failed, 0);
+    assert_eq!(report.snapshot.batches, 2,
+               "the blocked request must land in its own batch");
+    assert_eq!(report.snapshot.queue_rows_max, 4,
+               "the queue grew past its backpressure bound");
+    assert_eq!(report.snapshot.enqueue_blocked, 1);
+    assert!(report.snapshot.enqueue_blocked_sec > 0.0);
+    assert_eq!(report.snapshot.queue_rows, 0);
+}
+
+/// `Engine`-level hand-off: `train_then_serve` replies (ragged chunks +
+/// an empty request from the drive closure) are bit-identical to
+/// `train_then_predict` rows, and a mid-session `refit` swaps to
+/// exactly the posterior implied by the serial chunked stats at the
+/// refit parameters (the slot-wire STATS discipline — *not* the
+/// captured final-eval statistics the pre-refit posterior came from).
+#[test]
+fn train_then_serve_matches_train_then_predict() {
+    let spec = SyntheticSpec { n: 72, q: 1, d: 2, ..Default::default() };
+    let ds = generate_supervised(&spec, 61);
+    let x = ds.x.clone().unwrap();
+    let m = 6;
+    let chunk = 16;
+    let cfg = EngineConfig {
+        workers: 3,
+        chunk,
+        backend: BackendKind::RustCpu,
+        artifacts_dir: "artifacts".into(),
+        opt: OptChoice::Lbfgs(Lbfgs { max_iters: 2, ..Default::default() }),
+        pipeline: true,
+        verbose: false,
+        simd: None,
+    };
+    let mk = || SparseGpRegression::problem(&x, &ds.y, m, "test", 61);
+    let x0 = mk().initial_params();
+    let mut rng = Rng64::new(62);
+    let xstar = Mat::from_fn(31, 1, |_, _| rng.normal());
+
+    let (r_ref, m_ref, v_ref) = Engine::new(mk(), cfg.clone())
+        .unwrap()
+        .train_then_predict(&xstar, 4)
+        .unwrap();
+
+    // the front-end run: the same 31 rows as ragged chunks plus an empty
+    // request, then a refit back to the initial parameters and a full
+    // re-predict under the swapped posterior
+    let cuts: [(usize, usize); 4] = [(0, 11), (11, 0), (11, 9), (20, 11)];
+    let fcfg = FrontendConfig {
+        max_batch_rows: 12,
+        max_wait: Duration::from_micros(200),
+        queue_rows: 64,
+        dump_every: None,
+    };
+    let (xs, x0r) = (&xstar, &x0);
+    let (r_srv, (chunks, refitted), report) = Engine::new(mk(), cfg)
+        .unwrap()
+        .train_then_serve(4, fcfg, move |h| {
+            let chunks: Vec<(Mat, Vec<f64>)> = cuts
+                .iter()
+                .map(|&(r0, n)| {
+                    let sub = Mat::from_fn(n, 1, |i, _| xs[(r0 + i, 0)]);
+                    h.predict(sub).unwrap()
+                })
+                .collect();
+            h.refit(x0r).unwrap();
+            let refitted = h.predict(xs.clone()).unwrap();
+            (chunks, refitted)
+        })
+        .unwrap();
+
+    // training is deterministic, so both runs fit the same model and the
+    // pre-refit replies come from the same (captured-stats) posterior
+    assert_eq!(r_ref.f, r_srv.f, "training must be identical across the two runs");
+    for (k, (&(r0, n), (gm, gv))) in cuts.iter().zip(&chunks).enumerate() {
+        assert_eq!(gm.rows(), n, "request {k}: wrong reply height");
+        for i in 0..n {
+            for j in 0..2 {
+                assert_eq!(gm[(i, j)], m_ref[(r0 + i, j)],
+                           "request {k} row {i}: mean differs from train_then_predict");
+            }
+            assert_eq!(gv[i], v_ref[r0 + i],
+                       "request {k} row {i}: var differs from train_then_predict");
+        }
+    }
+
+    // post-refit: bit-identical to the single-node posterior built from
+    // the serial chunked stats at x0 (layout for q=1:
+    // [log σ², log ℓ, log β, Z]), per the slot-wire STATS discipline
+    let kern0 = RbfArd::from_log_hyp(&x0[0..2]);
+    let z0 = Mat::from_vec(m, 1, x0[3..3 + m].to_vec());
+    let w = vec![1.0; x.rows()];
+    let st0 = sgpr_stats_fwd_chunked(&kern0, &x, &w, &ds.y, &z0, chunk);
+    let single0 = Posterior::new(kern0, z0, x0[2].exp(), &st0).unwrap();
+    let want0 = single0.predict(&xstar);
+    assert_reply(&refitted, &want0, "post-refit full predict");
+    assert!(refitted.0.max_abs_diff(&m_ref) > 0.0,
+            "refit to x0 changed nothing — the optimiser never left x0 \
+             and the swap is untested");
+
+    assert_eq!(report.snapshot.requests, 5);
+    assert_eq!(report.snapshot.completed, 5);
+    assert_eq!(report.snapshot.failed, 0);
+    assert_eq!(report.snapshot.rows, 62);
+}

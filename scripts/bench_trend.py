@@ -7,7 +7,9 @@ Schema: a JSON array of records, each
 
 Op names are additionally matched against the known op families below
 (e.g. `stats_pass_w{W}`, `hot_swap`, `free_stats`, `serve_predict_w{W}`,
-`serve_stream_w{W}`, `cycle_eval_{sync|pipelined}_w{W}_v{V}`). An op
+`serve_stream_w{W}`, `cycle_eval_{sync|pipelined}_w{W}_v{V}`,
+`frontend_load_c{C}_{p50|p99|row}`); each family carries its trend
+direction (which way a good PR moves it), echoed in the summary. An op
 outside every family is
 a **warning**, not an error — the gate stays non-blocking for new bench
 keys — unless `--strict-ops` is passed.
@@ -31,33 +33,52 @@ import math
 import re
 import sys
 
-# The bench emitter's op vocabulary, one regex per family. Keep in sync
-# with rust/benches/micro.rs (each `rec.push` site).
+# The bench emitter's op vocabulary: one (regex, trend) pair per family.
+# `trend` is the direction a *good* PR moves the metric — "lower" means a
+# shrinking ns_per_iter is an improvement. It is per-family (not global)
+# so latency-style keys and any future ratio-style keys can disagree;
+# the summary prints it next to each op so a perf diff reads without
+# cross-referencing the emitter. Keep in sync with rust/benches/micro.rs
+# (each `rec.push` site).
 KNOWN_OP_FAMILIES = [
-    r"stats_fwd_(rust_cpu|xla)",
-    r"stats_vjp_(rust_cpu|xla)",
-    r"engine_eval_by_chunk",
-    r"engine_eval_sparse",
-    r"dense_gp_eval",
-    r"matmul_(naive|blocked|t)",
-    r"syrk",
-    r"cycle_eval_(sync|pipelined)_w\d+_v\d+",
-    r"serve_predict_w\d+",
+    (r"stats_fwd_(rust_cpu|xla)", "lower"),
+    (r"stats_vjp_(rust_cpu|xla)", "lower"),
+    (r"engine_eval_by_chunk", "lower"),
+    (r"engine_eval_sparse", "lower"),
+    (r"dense_gp_eval", "lower"),
+    (r"matmul_(naive|blocked|t)", "lower"),
+    (r"syrk", "lower"),
+    (r"cycle_eval_(sync|pipelined)_w\d+_v\d+", "lower"),
+    (r"serve_predict_w\d+", "lower"),
     # streamed serving: same batches through predict_stream (batch k+1
     # issued before batch k's gather) — compare against serve_predict_w{W}
-    r"serve_stream_w\d+",
+    (r"serve_stream_w\d+", "lower"),
     # the stats-only pass (distributed posterior rebuild) per worker
     # count, and the end-to-end refit-and-swap round
-    r"stats_pass_w\d+",
-    r"hot_swap",
+    (r"stats_pass_w\d+", "lower"),
+    (r"hot_swap", "lower"),
     # posterior rebuild from the captured final-eval statistics (zero
     # collective rounds; only the leader's M×M factorisations remain)
-    r"free_stats",
+    (r"free_stats", "lower"),
     # SIMD dispatch tiers: the rewired microkernels at the scalar escape
     # hatch ("off") vs the chunked-scalar / AVX2+FMA tiers
-    r"simd_(matmul|syrk|psi1|psi2)_(off|scalar|native)",
+    (r"simd_(matmul|syrk|psi1|psi2)_(off|scalar|native)", "lower"),
+    # concurrent-client serving front-end: sequential single-row baseline
+    # (ns per request), then per-client-count request-latency quantiles
+    # and inverse throughput (ns per served row) under closed-loop load
+    (r"frontend_seq_1row", "lower"),
+    (r"frontend_load_c\d+_(p50|p99|row)", "lower"),
 ]
-_KNOWN_OPS = re.compile("^(?:" + "|".join(KNOWN_OP_FAMILIES) + ")$")
+_KNOWN_OPS = re.compile(
+    "^(?:" + "|".join(rx for rx, _ in KNOWN_OP_FAMILIES) + ")$")
+
+
+def trend_for(op):
+    """The op's family trend direction, or '?' for unknown families."""
+    for rx, trend in KNOWN_OP_FAMILIES:
+        if re.fullmatch(rx, op):
+            return trend
+    return "?"
 
 
 def validate(path, require, strict_ops=False):
@@ -123,7 +144,8 @@ def validate(path, require, strict_ops=False):
         points = sorted(by_op[op])
         lo, hi = min(ns for _, ns in points), max(ns for _, ns in points)
         sizes = "..".join(str(int(s)) for s in (points[0][0], points[-1][0]))
-        print(f"  {op:<34} sizes {sizes:<14} ns/iter {lo:>14.1f} .. {hi:>14.1f}")
+        print(f"  {op:<34} [{trend_for(op):<5}] sizes {sizes:<14} "
+              f"ns/iter {lo:>14.1f} .. {hi:>14.1f}")
     return 0
 
 
