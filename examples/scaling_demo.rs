@@ -118,7 +118,8 @@ fn main() -> Result<()> {
             let be = backends[0].as_mut();
             if comm.rank() == 0 {
                 let mut dp = DistributedPosterior::leader(core_ref.clone(),
-                                                          rows_per_chunk, &mut comm);
+                                                          rows_per_chunk, &mut comm)
+                    .expect("leader");
                 let mut mean = Mat::zeros(0, 0);
                 let mut var = Vec::new();
                 let mut elapsed = Duration::ZERO;
@@ -128,7 +129,7 @@ fn main() -> Result<()> {
                         .expect("sharded predict");
                     elapsed += t0.elapsed();
                 }
-                dp.finish(&mut comm);
+                dp.finish(&mut comm).expect("finish");
                 Some((mean, var, elapsed.as_secs_f64() / batches as f64))
             } else {
                 worker_serve(&mut comm, be).expect("serve");
@@ -163,7 +164,8 @@ fn main() -> Result<()> {
             let be = backends[0].as_mut();
             if comm.rank() == 0 {
                 let mut dp = DistributedPosterior::leader(core_ref.clone(),
-                                                          rows_per_chunk, &mut comm);
+                                                          rows_per_chunk, &mut comm)
+                    .expect("leader");
                 let mut mean = Mat::zeros(0, 0);
                 let mut var = Vec::new();
                 // warm the partition + scratch, then time both protocols
@@ -178,7 +180,7 @@ fn main() -> Result<()> {
                 let t0 = Instant::now();
                 let outs = dp.predict_stream(&mut comm, be, bs).expect("streamed run");
                 let t_stream = t0.elapsed().as_secs_f64() / bs.len() as f64;
-                dp.finish(&mut comm);
+                dp.finish(&mut comm).expect("finish");
                 Some((outs, t_seq, t_stream, mean, var))
             } else {
                 worker_serve(&mut comm, be).expect("serve");
@@ -224,11 +226,12 @@ fn main() -> Result<()> {
             let be = backends[0].as_mut();
             if comm.rank() == 0 {
                 let mut dp = DistributedPosterior::leader(ca.clone(), rows_per_chunk,
-                                                          &mut comm);
+                                                          &mut comm)
+                    .expect("leader");
                 let before = dp.predict(&mut comm, be, xs).expect("pre-swap batch");
-                dp.rebroadcast(cb.clone(), &mut comm);
+                dp.rebroadcast(cb.clone(), &mut comm).expect("swap");
                 let after = dp.predict(&mut comm, be, xs).expect("post-swap batch");
-                dp.finish(&mut comm);
+                dp.finish(&mut comm).expect("finish");
                 Some((before, after))
             } else {
                 worker_serve(&mut comm, be).expect("serve");
@@ -266,7 +269,8 @@ fn main() -> Result<()> {
         let be = backends[0].as_mut();
         if comm.rank() == 0 {
             let mut dp = DistributedPosterior::leader(core_ref.clone(), fe_rpc,
-                                                      &mut comm);
+                                                      &mut comm)
+                .expect("leader");
             let mut mean = Mat::zeros(0, 0);
             let mut var = Vec::new();
             let row = Mat::from_fn(1, 1, |_, _| xs[(0, 0)]);
@@ -279,7 +283,7 @@ fn main() -> Result<()> {
                     .expect("sequential request");
             }
             let t = t0.elapsed().as_secs_f64() / k_req as f64;
-            dp.finish(&mut comm);
+            dp.finish(&mut comm).expect("finish");
             Some(t)
         } else {
             worker_serve(&mut comm, be).expect("serve");
@@ -302,7 +306,8 @@ fn main() -> Result<()> {
             let be = backends[0].as_mut();
             if comm.rank() == 0 {
                 let mut dp = DistributedPosterior::leader(core_ref.clone(), fe_rpc,
-                                                          &mut comm);
+                                                          &mut comm)
+                    .expect("leader");
                 let fe = ServingFrontend::new(
                     FrontendConfig {
                         max_batch_rows: 32,
@@ -339,7 +344,7 @@ fn main() -> Result<()> {
                     report
                 });
                 let wall = t0.elapsed().as_secs_f64();
-                dp.finish(&mut comm);
+                dp.finish(&mut comm).expect("finish");
                 Some((report, wall))
             } else {
                 worker_serve(&mut comm, be).expect("serve");

@@ -312,7 +312,8 @@ fn main() -> anyhow::Result<()> {
                 let mut backend = RustCpuBackend;
                 if comm.rank() == 0 {
                     let mut dp = DistributedPosterior::leader(core_ref.clone(), 256,
-                                                             &mut comm);
+                                                             &mut comm)
+                        .expect("leader");
                     let mut mean = Mat::zeros(0, 0);
                     let mut var = Vec::new();
                     // warm the partition + scratch, then time steady state
@@ -324,7 +325,7 @@ fn main() -> anyhow::Result<()> {
                                         &mut var).expect("predict");
                     }
                     let per = t0.elapsed().as_secs_f64() / serve_reps as f64;
-                    dp.finish(&mut comm);
+                    dp.finish(&mut comm).expect("finish");
                     per
                 } else {
                     worker_serve(&mut comm, &mut backend).expect("serve");
@@ -351,7 +352,8 @@ fn main() -> anyhow::Result<()> {
                 let mut backend = RustCpuBackend;
                 if comm.rank() == 0 {
                     let mut dp = DistributedPosterior::leader(core_ref.clone(), 256,
-                                                             &mut comm);
+                                                              &mut comm)
+                        .expect("leader");
                     let mut outs: Vec<(Mat, Vec<f64>)> =
                         bs.iter().map(|_| (Mat::zeros(0, 0), Vec::new())).collect();
                     // warm the partition + output buffers, then time the
@@ -362,7 +364,7 @@ fn main() -> anyhow::Result<()> {
                     dp.predict_stream_into(&mut comm, &mut backend, bs, &mut outs)
                         .expect("stream");
                     let per = t0.elapsed().as_secs_f64() / bs.len() as f64;
-                    dp.finish(&mut comm);
+                    dp.finish(&mut comm).expect("finish");
                     per
                 } else {
                     worker_serve(&mut comm, &mut backend).expect("serve");
@@ -553,7 +555,9 @@ fn main() -> anyhow::Result<()> {
         let results = Cluster::run(2, move |mut comm| {
             let mut backend = RustCpuBackend;
             if comm.rank() == 0 {
-                let mut dp = DistributedPosterior::leader(core_ref.clone(), 16, &mut comm);
+                let mut dp = DistributedPosterior::leader(core_ref.clone(), 16,
+                                                          &mut comm)
+                    .expect("leader");
                 let mut mean = Mat::zeros(0, 0);
                 let mut var = Vec::new();
                 let one = |row: usize| {
@@ -567,7 +571,7 @@ fn main() -> anyhow::Result<()> {
                                     &mut var).expect("predict");
                 }
                 let per = t0.elapsed().as_secs_f64() / k_req as f64;
-                dp.finish(&mut comm);
+                dp.finish(&mut comm).expect("finish");
                 per
             } else {
                 worker_serve(&mut comm, &mut backend).expect("serve");
@@ -586,7 +590,8 @@ fn main() -> anyhow::Result<()> {
                 let mut backend = RustCpuBackend;
                 if comm.rank() == 0 {
                     let mut dp = DistributedPosterior::leader(core_ref.clone(), 16,
-                                                              &mut comm);
+                                                              &mut comm)
+                        .expect("leader");
                     let fe = ServingFrontend::new(FrontendConfig {
                         max_batch_rows: 32,
                         max_wait: Duration::from_micros(50),
@@ -626,7 +631,7 @@ fn main() -> anyhow::Result<()> {
                         (report, closer.join().expect("closer thread"))
                     });
                     let wall = t0.elapsed().as_secs_f64();
-                    dp.finish(&mut comm);
+                    dp.finish(&mut comm).expect("finish");
                     lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
                     let p50 = lats[lats.len() / 2];
                     let p99 = lats[(lats.len() * 99 / 100).min(lats.len() - 1)];
@@ -650,6 +655,46 @@ fn main() -> anyhow::Result<()> {
         println!("  c=8 throughput vs sequential: {:.2}x (micro-batching amortises the \
                   per-round leader round-trip)",
                  rows_per_sec_c8 * t_seq);
+    }
+
+    // ---------------------------------------------------------------
+    // 11. transport abstraction overhead: a 2-rank ping-pong round
+    //     trip through `Comm` over `InMemoryTransport` — the dynamic
+    //     dispatch + Result plumbing the Transport trait put on every
+    //     point-to-point hop, tracked so the refactor's cost stays in
+    //     the noise against the protocol's compute rounds.
+    // ---------------------------------------------------------------
+    println!("\n== comm transport overhead: 2-rank ping-pong (send + recv) ==");
+    println!("{:>8} {:>14}", "elems", "µs/round-trip");
+    {
+        use gpparallel::collectives::Cluster;
+
+        let rounds = if fast { 2_000usize } else { 20_000 };
+        for payload in [8usize, 1024] {
+            let results = Cluster::run(2, move |mut comm| {
+                let data = vec![1.0f64; payload];
+                if comm.rank() == 0 {
+                    // warm the channel + parked-queue paths
+                    comm.send(1, 7, &data).expect("send");
+                    std::hint::black_box(comm.recv(1, 7).expect("recv"));
+                    let t0 = Instant::now();
+                    for _ in 0..rounds {
+                        comm.send(1, 7, &data).expect("send");
+                        std::hint::black_box(comm.recv(1, 7).expect("recv"));
+                    }
+                    t0.elapsed().as_secs_f64() / rounds as f64
+                } else {
+                    for _ in 0..rounds + 1 {
+                        let msg = comm.recv(0, 7).expect("recv");
+                        comm.send(0, 7, &msg).expect("send");
+                    }
+                    0.0
+                }
+            });
+            let t_rt = results[0];
+            println!("{:>8} {:>14.3}", payload, t_rt * 1e6);
+            rec.push("comm_transport_overhead", payload, t_rt);
+        }
     }
 
     rec.write("BENCH_micro.json")?;

@@ -1,4 +1,5 @@
-//! Point-to-point and collective operations over in-process channels.
+//! Point-to-point and collective operations over a pluggable
+//! [`Transport`].
 //!
 //! Collectives come in two interchangeable topologies:
 //!
@@ -13,18 +14,18 @@
 //! Both topologies produce the same results (bit-identical for `bcast`,
 //! equal up to floating-point reduction order for `reduce_sum`); the
 //! equivalence is property-tested below for every cluster size 1–9.
+//!
+//! Every operation is fallible: a dead peer (rank panicked, transport
+//! shut down, injected hangup) surfaces as an `Err` instead of a hang
+//! or a panic, so protocol layers tear down cleanly. Transport errors
+//! are *terminal* for a rank — distinct from compute errors, which ride
+//! the fail-flag machinery in lockstep (see `engine::cycle`).
 
-use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::collections::{HashMap, HashSet, VecDeque};
 
-/// A tagged message between ranks.
-struct Message {
-    src: usize,
-    tag: u64,
-    data: Vec<f64>,
-}
+use anyhow::{anyhow, Result};
+
+use super::transport::{Delivery, InMemoryTransport, Transport};
 
 /// Which algorithm the collectives use. Selectable per-`Comm`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -38,17 +39,17 @@ pub enum Topology {
 
 /// Per-rank communicator handle (the MPI_Comm analog).
 pub struct Comm {
-    rank: usize,
-    size: usize,
     topology: Topology,
-    senders: Vec<Sender<Message>>,
-    inbox: Receiver<Message>,
+    transport: Box<dyn Transport>,
     /// Out-of-order messages parked until a matching recv. `VecDeque` so
     /// delivery pops are O(1) (a `Vec::remove(0)` here is O(n) per
     /// message — O(n²) under sustained out-of-order traffic).
     parked: HashMap<(usize, u64), VecDeque<Vec<f64>>>,
-    bytes_sent: Arc<AtomicU64>,
-    messages_sent: Arc<AtomicU64>,
+    /// Peers whose hangup marker we have consumed. Because the wire is
+    /// per-sender FIFO, everything a peer sent before dying was parked
+    /// before its marker — so once a peer is here, a recv on it with no
+    /// parked match can *never* succeed and errors immediately.
+    dead: HashSet<usize>,
 }
 
 const TAG_BCAST: u64 = u64::MAX - 1;
@@ -56,12 +57,18 @@ const TAG_REDUCE: u64 = u64::MAX - 2;
 const TAG_GATHER: u64 = u64::MAX - 3;
 
 impl Comm {
+    /// Wrap a transport (in-memory, fault-injecting, or a future
+    /// socket implementation) with the collective layer.
+    pub fn new(transport: Box<dyn Transport>, topology: Topology) -> Comm {
+        Comm { topology, transport, parked: HashMap::new(), dead: HashSet::new() }
+    }
+
     /// This rank's index in the cluster.
-    pub fn rank(&self) -> usize { self.rank }
+    pub fn rank(&self) -> usize { self.transport.rank() }
     /// Cluster size P.
-    pub fn size(&self) -> usize { self.size }
+    pub fn size(&self) -> usize { self.transport.size() }
     /// Is this rank 0?
-    pub fn is_root(&self) -> bool { self.rank == 0 }
+    pub fn is_root(&self) -> bool { self.rank() == 0 }
 
     /// The collective topology in use.
     pub fn topology(&self) -> Topology { self.topology }
@@ -71,33 +78,54 @@ impl Comm {
     pub fn set_topology(&mut self, t: Topology) { self.topology = t; }
 
     /// Total bytes this *cluster* has shipped (shared counter).
-    pub fn bytes_sent(&self) -> u64 { self.bytes_sent.load(Ordering::Relaxed) }
+    pub fn bytes_sent(&self) -> u64 { self.transport.bytes_sent() }
     /// Total messages this *cluster* has shipped (shared counter).
-    pub fn messages_sent(&self) -> u64 { self.messages_sent.load(Ordering::Relaxed) }
+    pub fn messages_sent(&self) -> u64 { self.transport.messages_sent() }
+    /// Messages *this rank* has sent (its own program-order count; the
+    /// chaos harness keys fault-injection points off this).
+    pub fn local_messages_sent(&self) -> u64 { self.transport.local_sent() }
 
-    /// Send `data` to `dst` with a tag (non-blocking; channels buffer).
-    pub fn send(&self, dst: usize, tag: u64, data: &[f64]) {
-        self.bytes_sent.fetch_add((data.len() * 8) as u64, Ordering::Relaxed);
-        self.messages_sent.fetch_add(1, Ordering::Relaxed);
-        self.senders[dst]
-            .send(Message { src: self.rank, tag, data: data.to_vec() })
-            .expect("peer hung up");
+    /// Send `data` to `dst` with a tag (non-blocking; the transport
+    /// buffers). Errors if the destination is gone.
+    pub fn send(&mut self, dst: usize, tag: u64, data: &[f64]) -> Result<()> {
+        self.transport.send(dst, tag, data)?;
+        Ok(())
     }
 
     /// Blocking receive of the next message from `src` with `tag`
-    /// (out-of-order arrivals are parked, preserving per-(src,tag) order).
-    pub fn recv(&mut self, src: usize, tag: u64) -> Vec<f64> {
+    /// (out-of-order arrivals are parked, preserving per-(src,tag)
+    /// order). Errors if `src` hung up before sending it.
+    pub fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<f64>> {
         if let Some(q) = self.parked.get_mut(&(src, tag)) {
             if let Some(data) = q.pop_front() {
-                return data;
+                return Ok(data);
             }
         }
+        if self.dead.contains(&src) {
+            return Err(anyhow!("rank {src} hung up before sending (tag {tag})"));
+        }
         loop {
-            let msg = self.inbox.recv().expect("cluster torn down mid-recv");
-            if msg.src == src && msg.tag == tag {
-                return msg.data;
+            match self.transport.recv_blocking()? {
+                Delivery::Message { src: s, tag: t, data } => {
+                    if s == src && t == tag {
+                        return Ok(data);
+                    }
+                    self.parked.entry((s, t)).or_default().push_back(data);
+                }
+                Delivery::Hangup(h) => {
+                    self.dead.insert(h);
+                    if h == src {
+                        return Err(anyhow!(
+                            "rank {src} hung up before sending (tag {tag})"
+                        ));
+                    }
+                    // Someone else died; keep waiting for our peer. If
+                    // our peer is (transitively) blocked on the dead
+                    // rank, its own recv errors, it unwinds, and its
+                    // drop delivers the marker that unblocks us —
+                    // hangups cascade, so nobody waits forever.
+                }
             }
-            self.parked.entry((msg.src, msg.tag)).or_default().push_back(msg.data);
         }
     }
 
@@ -109,12 +137,20 @@ impl Comm {
     /// computing its own shard so worker gather payloads that are already
     /// in flight get absorbed while the compute runs, instead of queueing
     /// behind it (the in-process analog of posting MPI receives early).
-    /// Returns the number of messages parked.
+    /// Returns the number of messages parked (hangup markers are latched
+    /// into the dead set, not counted).
     pub fn drain_pending(&mut self) -> usize {
         let mut n = 0;
-        while let Ok(msg) = self.inbox.try_recv() {
-            self.parked.entry((msg.src, msg.tag)).or_default().push_back(msg.data);
-            n += 1;
+        while let Some(d) = self.transport.try_recv() {
+            match d {
+                Delivery::Message { src, tag, data } => {
+                    self.parked.entry((src, tag)).or_default().push_back(data);
+                    n += 1;
+                }
+                Delivery::Hangup(h) => {
+                    self.dead.insert(h);
+                }
+            }
         }
         n
     }
@@ -125,7 +161,7 @@ impl Comm {
 
     /// Broadcast from `root`: returns the root's `data` on every rank.
     /// Dispatches on the communicator's [`Topology`].
-    pub fn bcast(&mut self, root: usize, data: Vec<f64>) -> Vec<f64> {
+    pub fn bcast(&mut self, root: usize, data: Vec<f64>) -> Result<Vec<f64>> {
         match self.topology {
             Topology::Linear => self.bcast_linear(root, data),
             Topology::Tree => self.bcast_tree(root, data),
@@ -133,14 +169,14 @@ impl Comm {
     }
 
     /// Linear broadcast (reference): root sends to each rank in turn.
-    pub fn bcast_linear(&mut self, root: usize, data: Vec<f64>) -> Vec<f64> {
-        if self.rank == root {
-            for dst in 0..self.size {
+    pub fn bcast_linear(&mut self, root: usize, data: Vec<f64>) -> Result<Vec<f64>> {
+        if self.rank() == root {
+            for dst in 0..self.size() {
                 if dst != root {
-                    self.send(dst, TAG_BCAST, &data);
+                    self.send(dst, TAG_BCAST, &data)?;
                 }
             }
-            data
+            Ok(data)
         } else {
             self.recv(root, TAG_BCAST)
         }
@@ -149,9 +185,9 @@ impl Comm {
     /// Binomial-tree broadcast: rank v (relative to the root) receives
     /// from `v − lowest_set_bit(v)` and forwards to `v + 2^k` for every
     /// `2^k` below its lowest set bit — ⌈log₂ P⌉ rounds end to end.
-    pub fn bcast_tree(&mut self, root: usize, data: Vec<f64>) -> Vec<f64> {
-        let size = self.size;
-        let vrank = (self.rank + size - root) % size;
+    pub fn bcast_tree(&mut self, root: usize, data: Vec<f64>) -> Result<Vec<f64>> {
+        let size = self.size();
+        let vrank = (self.rank() + size - root) % size;
         let to_real = |v: usize| (v + root) % size;
 
         // Receive phase (no-op at the root): scan up to the lowest set
@@ -166,7 +202,7 @@ impl Comm {
             loop {
                 if vrank & mask != 0 {
                     let parent = vrank - mask;
-                    break self.recv(to_real(parent), TAG_BCAST);
+                    break self.recv(to_real(parent), TAG_BCAST)?;
                 }
                 mask <<= 1;
             }
@@ -178,11 +214,11 @@ impl Comm {
         while mask > 0 {
             let child = vrank + mask;
             if child < size {
-                self.send(to_real(child), TAG_BCAST, &data);
+                self.send(to_real(child), TAG_BCAST, &data)?;
             }
             mask >>= 1;
         }
-        data
+        Ok(data)
     }
 
     // -----------------------------------------------------------------
@@ -191,22 +227,22 @@ impl Comm {
 
     /// Element-wise sum-reduction to `root`; `Some(total)` on root,
     /// `None` elsewhere. Dispatches on the communicator's [`Topology`].
-    pub fn reduce_sum(&mut self, root: usize, data: &[f64]) -> Option<Vec<f64>> {
+    pub fn reduce_sum(&mut self, root: usize, data: &[f64]) -> Result<Option<Vec<f64>>> {
         let mut buf = data.to_vec();
-        self.reduce_sum_into(root, &mut buf).then_some(buf)
+        Ok(self.reduce_sum_into(root, &mut buf)?.then_some(buf))
     }
 
     /// Buffer-reusing reduction: accumulates **in place** into `data`
     /// (the caller's reusable wire buffer), so per-cycle reductions stop
-    /// allocating a fresh accumulator. Returns `true` on `root`, where
-    /// `data` then holds the cluster-wide total; elsewhere returns
-    /// `false` and `data` is left holding the partial this rank shipped
-    /// up the tree (its own contribution plus any absorbed subtree).
-    /// [`reduce_sum`](Comm::reduce_sum) and the topology-pinned variants
-    /// below all delegate here, so there is exactly one copy of each
-    /// accumulation order and the totals are bit-identical
-    /// (property-tested below).
-    pub fn reduce_sum_into(&mut self, root: usize, data: &mut Vec<f64>) -> bool {
+    /// allocating a fresh accumulator. Returns `Ok(true)` on `root`,
+    /// where `data` then holds the cluster-wide total; elsewhere returns
+    /// `Ok(false)` and `data` is left holding the partial this rank
+    /// shipped up the tree (its own contribution plus any absorbed
+    /// subtree). [`reduce_sum`](Comm::reduce_sum) and the
+    /// topology-pinned variants below all delegate here, so there is
+    /// exactly one copy of each accumulation order and the totals are
+    /// bit-identical (property-tested below).
+    pub fn reduce_sum_into(&mut self, root: usize, data: &mut Vec<f64>) -> Result<bool> {
         match self.topology {
             Topology::Linear => self.reduce_into_linear(root, data),
             Topology::Tree => self.reduce_into_tree(root, data),
@@ -215,61 +251,75 @@ impl Comm {
 
     /// Linear reduction (reference): root receives P−1 partials in rank
     /// order and accumulates sequentially.
-    pub fn reduce_sum_linear(&mut self, root: usize, data: &[f64]) -> Option<Vec<f64>> {
+    pub fn reduce_sum_linear(&mut self, root: usize, data: &[f64]) -> Result<Option<Vec<f64>>> {
         let mut buf = data.to_vec();
-        self.reduce_into_linear(root, &mut buf).then_some(buf)
+        Ok(self.reduce_into_linear(root, &mut buf)?.then_some(buf))
     }
 
     /// Binomial-tree reduction (mirror image of `bcast_tree`): in round
     /// `k`, ranks with bit `2^k` set ship their partial sum to the parent
     /// and drop out; the root absorbs ⌈log₂ P⌉ partials instead of P−1.
-    pub fn reduce_sum_tree(&mut self, root: usize, data: &[f64]) -> Option<Vec<f64>> {
+    pub fn reduce_sum_tree(&mut self, root: usize, data: &[f64]) -> Result<Option<Vec<f64>>> {
         let mut buf = data.to_vec();
-        self.reduce_into_tree(root, &mut buf).then_some(buf)
+        Ok(self.reduce_into_tree(root, &mut buf)?.then_some(buf))
     }
 
-    fn reduce_into_linear(&mut self, root: usize, data: &mut Vec<f64>) -> bool {
-        if self.rank == root {
-            for src in 0..self.size {
+    /// A received reduction partial whose length disagrees with ours is
+    /// a protocol breach (truncated or misrouted wire): error out rather
+    /// than fold garbage or panic mid-collective.
+    fn check_reduce_len(part: &[f64], want: usize, src: usize) -> Result<()> {
+        if part.len() != want {
+            return Err(anyhow!(
+                "reduce length mismatch: rank {src} sent {} elements, expected {want}",
+                part.len()
+            ));
+        }
+        Ok(())
+    }
+
+    fn reduce_into_linear(&mut self, root: usize, data: &mut Vec<f64>) -> Result<bool> {
+        if self.rank() == root {
+            for src in 0..self.size() {
                 if src == root {
                     continue;
                 }
-                let part = self.recv(src, TAG_REDUCE);
-                assert_eq!(part.len(), data.len(), "reduce length mismatch");
+                let part = self.recv(src, TAG_REDUCE)?;
+                Self::check_reduce_len(&part, data.len(), src)?;
                 for (a, b) in data.iter_mut().zip(&part) {
                     *a += b;
                 }
             }
-            true
+            Ok(true)
         } else {
-            self.send(root, TAG_REDUCE, data.as_slice());
-            false
+            self.send(root, TAG_REDUCE, data.as_slice())?;
+            Ok(false)
         }
     }
 
-    fn reduce_into_tree(&mut self, root: usize, data: &mut Vec<f64>) -> bool {
-        let size = self.size;
-        let vrank = (self.rank + size - root) % size;
+    fn reduce_into_tree(&mut self, root: usize, data: &mut Vec<f64>) -> Result<bool> {
+        let size = self.size();
+        let vrank = (self.rank() + size - root) % size;
         let to_real = |v: usize| (v + root) % size;
         let mut mask = 1usize;
         while mask < size {
             if vrank & mask == 0 {
                 let child = vrank + mask;
                 if child < size {
-                    let part = self.recv(to_real(child), TAG_REDUCE);
-                    assert_eq!(part.len(), data.len(), "reduce length mismatch");
+                    let src = to_real(child);
+                    let part = self.recv(src, TAG_REDUCE)?;
+                    Self::check_reduce_len(&part, data.len(), src)?;
                     for (a, b) in data.iter_mut().zip(&part) {
                         *a += b;
                     }
                 }
             } else {
                 let parent = vrank - mask;
-                self.send(to_real(parent), TAG_REDUCE, data.as_slice());
-                return false;
+                self.send(to_real(parent), TAG_REDUCE, data.as_slice())?;
+                return Ok(false);
             }
             mask <<= 1;
         }
-        true
+        Ok(true)
     }
 
     // -----------------------------------------------------------------
@@ -279,8 +329,8 @@ impl Comm {
     /// Reduce-to-root followed by broadcast (the classic two-phase
     /// allreduce; the paper's scheme reduces to one node anyway because
     /// the optimiser is centralised).
-    pub fn allreduce_sum(&mut self, data: &[f64]) -> Vec<f64> {
-        match self.reduce_sum(0, data) {
+    pub fn allreduce_sum(&mut self, data: &[f64]) -> Result<Vec<f64>> {
+        match self.reduce_sum(0, data)? {
             Some(total) => self.bcast(0, total),
             None => self.bcast(0, Vec::new()),
         }
@@ -288,25 +338,26 @@ impl Comm {
 
     /// Gather every rank's vector at `root` (indexed by rank). Payloads
     /// are heterogeneous, so this stays a point-to-point fan-in.
-    pub fn gather(&mut self, root: usize, data: &[f64]) -> Option<Vec<Vec<f64>>> {
-        if self.rank == root {
-            let mut out = vec![Vec::new(); self.size];
+    pub fn gather(&mut self, root: usize, data: &[f64]) -> Result<Option<Vec<Vec<f64>>>> {
+        if self.rank() == root {
+            let mut out = vec![Vec::new(); self.size()];
             out[root] = data.to_vec();
-            for src in 0..self.size {
+            for src in 0..self.size() {
                 if src != root {
-                    out[src] = self.recv(src, TAG_GATHER);
+                    out[src] = self.recv(src, TAG_GATHER)?;
                 }
             }
-            Some(out)
+            Ok(Some(out))
         } else {
-            self.send(root, TAG_GATHER, data);
-            None
+            self.send(root, TAG_GATHER, data)?;
+            Ok(None)
         }
     }
 
     /// Barrier: empty allreduce.
-    pub fn barrier(&mut self) {
-        let _ = self.allreduce_sum(&[]);
+    pub fn barrier(&mut self) -> Result<()> {
+        let _ = self.allreduce_sum(&[])?;
+        Ok(())
     }
 }
 
@@ -332,43 +383,51 @@ impl Cluster {
         T: Send,
         F: Fn(Comm) -> T + Sync,
     {
-        assert!(size >= 1);
-        let bytes = Arc::new(AtomicU64::new(0));
-        let msgs = Arc::new(AtomicU64::new(0));
+        Cluster::try_run_with(size, topology, f)
+            .into_iter()
+            .map(|r| r.expect("rank panicked"))
+            .collect()
+    }
 
-        // Full mesh: one (sender-set, receiver) pair per rank.
-        let mut senders_per_rank: Vec<Sender<Message>> = Vec::with_capacity(size);
-        let mut inboxes: Vec<Option<Receiver<Message>>> = Vec::with_capacity(size);
-        for _ in 0..size {
-            let (tx, rx) = channel();
-            senders_per_rank.push(tx);
-            inboxes.push(Some(rx));
-        }
-
-        let comms: Vec<Comm> = (0..size)
-            .map(|rank| Comm {
-                rank,
-                size,
-                topology,
-                senders: senders_per_rank.clone(),
-                inbox: inboxes[rank].take().unwrap(),
-                parked: HashMap::new(),
-                bytes_sent: bytes.clone(),
-                messages_sent: msgs.clone(),
-            })
+    /// Like [`run_with`](Cluster::run_with), but a panicking rank does
+    /// not abort the launcher: each rank's result comes back as a
+    /// [`std::thread::Result`] (the `Err` holds the panic payload).
+    /// Surviving ranks are *not* hung by the panic — the dying rank's
+    /// transport notifies them on unwind, so their blocking receives
+    /// error out and they run to completion.
+    pub fn try_run_with<T, F>(size: usize, topology: Topology, f: F) -> Vec<std::thread::Result<T>>
+    where
+        T: Send,
+        F: Fn(Comm) -> T + Sync,
+    {
+        let transports = InMemoryTransport::mesh(size)
+            .into_iter()
+            .map(|t| Box::new(t) as Box<dyn Transport>)
             .collect();
-        drop(senders_per_rank);
+        Cluster::try_run_on(transports, topology, &f)
+    }
 
-        let f = &f;
+    /// The fully general launcher: one caller-supplied transport per
+    /// rank (index = rank). This is how the chaos harness slots a
+    /// [`FaultyTransport`](super::transport::FaultyTransport) under a
+    /// single victim rank while the rest of the mesh runs clean.
+    pub fn try_run_on<T>(
+        transports: Vec<Box<dyn Transport>>,
+        topology: Topology,
+        f: &(dyn Fn(Comm) -> T + Sync),
+    ) -> Vec<std::thread::Result<T>>
+    where
+        T: Send,
+    {
+        assert!(!transports.is_empty());
+        let comms: Vec<Comm> =
+            transports.into_iter().map(|t| Comm::new(t, topology)).collect();
         std::thread::scope(|scope| {
             let handles: Vec<_> = comms
                 .into_iter()
                 .map(|comm| scope.spawn(move || f(comm)))
                 .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("rank panicked"))
-                .collect()
+            handles.into_iter().map(|h| h.join()).collect()
         })
     }
 }
@@ -383,7 +442,7 @@ mod tests {
         for size in [1, 2, 3, 5, 8] {
             let results = Cluster::run(size, |mut comm| {
                 let local: Vec<f64> = (0..4).map(|i| (comm.rank() * 10 + i) as f64).collect();
-                comm.allreduce_sum(&local)
+                comm.allreduce_sum(&local).unwrap()
             });
             let expect: Vec<f64> = (0..4)
                 .map(|i| (0..size).map(|r| (r * 10 + i) as f64).sum())
@@ -399,7 +458,7 @@ mod tests {
         for topology in [Topology::Linear, Topology::Tree] {
             let results = Cluster::run_with(4, topology, |mut comm| {
                 let data = if comm.is_root() { vec![3.5, -1.0] } else { vec![] };
-                comm.bcast(0, data)
+                comm.bcast(0, data).unwrap()
             });
             for r in results {
                 assert_eq!(r, vec![3.5, -1.0], "{topology:?}");
@@ -410,7 +469,7 @@ mod tests {
     #[test]
     fn gather_indexes_by_rank() {
         let results = Cluster::run(3, |mut comm| {
-            comm.gather(0, &[comm.rank() as f64 * 2.0])
+            comm.gather(0, &[comm.rank() as f64 * 2.0]).unwrap()
         });
         let at_root = results[0].as_ref().unwrap();
         assert_eq!(at_root.len(), 3);
@@ -425,12 +484,12 @@ mod tests {
         // rank 1 sends tag B then tag A; rank 0 receives A then B.
         let results = Cluster::run(2, |mut comm| {
             if comm.rank() == 1 {
-                comm.send(0, 7, &[7.0]);
-                comm.send(0, 5, &[5.0]);
+                comm.send(0, 7, &[7.0]).unwrap();
+                comm.send(0, 5, &[5.0]).unwrap();
                 vec![]
             } else {
-                let a = comm.recv(1, 5);
-                let b = comm.recv(1, 7);
+                let a = comm.recv(1, 5).unwrap();
+                let b = comm.recv(1, 7).unwrap();
                 vec![a[0], b[0]]
             }
         });
@@ -444,13 +503,13 @@ mod tests {
         let results = Cluster::run(2, |mut comm| {
             if comm.rank() == 1 {
                 for v in [1.0, 2.0, 3.0] {
-                    comm.send(0, 9, &[v]);
+                    comm.send(0, 9, &[v]).unwrap();
                 }
-                comm.send(0, 4, &[0.0]);
+                comm.send(0, 4, &[0.0]).unwrap();
                 vec![]
             } else {
-                let _ = comm.recv(1, 4); // parks all three tag-9 messages
-                (0..3).map(|_| comm.recv(1, 9)[0]).collect()
+                let _ = comm.recv(1, 4).unwrap(); // parks all three tag-9 messages
+                (0..3).map(|_| comm.recv(1, 9).unwrap()[0]).collect()
             }
         });
         assert_eq!(results[0], vec![1.0, 2.0, 3.0]);
@@ -474,19 +533,19 @@ mod tests {
                 assert_eq!(comm.drain_pending(), 0, "nothing else is in flight");
                 assert_eq!(comm.messages_sent(), before, "drain must not send");
                 // parked messages drain through recv in send order
-                let mut got = vec![comm.recv(1, 9)[0], comm.recv(1, 9)[0]];
+                let mut got = vec![comm.recv(1, 9).unwrap()[0], comm.recv(1, 9).unwrap()[0]];
                 // second wave (ack-gated, so it arrives after the drain)
                 // interleaves with the remaining parked message correctly
-                comm.send(1, 8, &[0.0]);
-                got.push(comm.recv(1, 9)[0]);
-                got.push(comm.recv(1, 9)[0]);
+                comm.send(1, 8, &[0.0]).unwrap();
+                got.push(comm.recv(1, 9).unwrap()[0]);
+                got.push(comm.recv(1, 9).unwrap()[0]);
                 got
             } else {
                 for v in [1.0, 2.0, 3.0] {
-                    comm.send(0, 9, &[v]);
+                    comm.send(0, 9, &[v]).unwrap();
                 }
-                let _ = comm.recv(0, 8); // wait until the drain happened
-                comm.send(0, 9, &[4.0]);
+                let _ = comm.recv(0, 8).unwrap(); // wait until the drain happened
+                comm.send(0, 9, &[4.0]).unwrap();
                 vec![]
             }
         });
@@ -497,11 +556,11 @@ mod tests {
     fn byte_counter_counts_payloads() {
         let results = Cluster::run(2, |mut comm| {
             if comm.rank() == 1 {
-                comm.send(0, 1, &[0.0; 100]);
+                comm.send(0, 1, &[0.0; 100]).unwrap();
             } else {
-                let _ = comm.recv(1, 1);
+                let _ = comm.recv(1, 1).unwrap();
             }
-            comm.barrier();
+            comm.barrier().unwrap();
             comm.bytes_sent()
         });
         // 100 f64 payload = 800 bytes, plus barrier traffic (empty).
@@ -524,7 +583,7 @@ mod tests {
                 .collect();
             let ds = &datasets;
             let results = Cluster::run(size, |mut comm| {
-                comm.allreduce_sum(&ds[comm.rank()])
+                comm.allreduce_sum(&ds[comm.rank()]).unwrap()
             });
             for r in results {
                 for (a, b) in r.iter().zip(&expect) {
@@ -552,7 +611,7 @@ mod tests {
                 let ds = &datasets;
                 let run = |topology| {
                     Cluster::run_with(size, topology, move |mut comm| {
-                        comm.reduce_sum(root, &ds[comm.rank()])
+                        comm.reduce_sum(root, &ds[comm.rank()]).unwrap()
                     })
                 };
                 let lin = run(Topology::Linear);
@@ -586,7 +645,7 @@ mod tests {
                 let run = |topology| {
                     Cluster::run_with(size, topology, move |mut comm| {
                         let data = if comm.rank() == root { pl.clone() } else { Vec::new() };
-                        comm.bcast(root, data)
+                        comm.bcast(root, data).unwrap()
                     })
                 };
                 for (a, b) in run(Topology::Linear).iter().zip(&run(Topology::Tree)) {
@@ -604,8 +663,8 @@ mod tests {
         let results = Cluster::run_with(5, Topology::Tree, |mut comm| {
             let mut acc = 0.0;
             for round in 0..4 {
-                let x = comm.bcast(0, vec![round as f64]);
-                let total = comm.allreduce_sum(&[x[0] + comm.rank() as f64]);
+                let x = comm.bcast(0, vec![round as f64]).unwrap();
+                let total = comm.allreduce_sum(&[x[0] + comm.rank() as f64]).unwrap();
                 acc += total[0];
             }
             acc
@@ -634,16 +693,16 @@ mod tests {
                         .collect();
                     let ds = &datasets;
                     let alloc = Cluster::run_with(size, topology, move |mut comm| {
-                        comm.reduce_sum(0, &ds[comm.rank()])
+                        comm.reduce_sum(0, &ds[comm.rank()]).unwrap()
                     });
                     let inplace = Cluster::run_with(size, topology, move |mut comm| {
                         // two rounds through one buffer: reuse must not
                         // leak the previous round's partials
                         let mut buf = ds[comm.rank()].clone();
-                        let first_root = comm.reduce_sum_into(0, &mut buf);
+                        let first_root = comm.reduce_sum_into(0, &mut buf).unwrap();
                         buf.clear();
                         buf.extend_from_slice(&ds[comm.rank()]);
-                        let root = comm.reduce_sum_into(0, &mut buf);
+                        let root = comm.reduce_sum_into(0, &mut buf).unwrap();
                         assert_eq!(first_root, root);
                         root.then_some(buf)
                     });
@@ -669,11 +728,77 @@ mod tests {
                     if comm.rank() % 2 == 0 {
                         std::thread::sleep(std::time::Duration::from_millis(i));
                     }
-                    comm.barrier();
+                    comm.barrier().unwrap();
                 }
                 true
             });
             assert!(results.into_iter().all(|r| r));
+        }
+    }
+
+    /// Regression (dead-peer propagation): a rank that panics mid-run
+    /// must not hang peers blocked in `recv` on it — its transport
+    /// notifies them on unwind and their receives error out.
+    #[test]
+    fn panicked_rank_unblocks_surviving_receivers() {
+        for topology in [Topology::Linear, Topology::Tree] {
+            let results = Cluster::try_run_with(3, topology, |mut comm| {
+                if comm.rank() == 1 {
+                    panic!("injected rank failure");
+                }
+                // Both survivors block on the doomed rank.
+                comm.recv(1, 42)
+            });
+            assert!(results[1].is_err(), "rank 1 must report its panic");
+            for r in [0, 2] {
+                let out = results[r].as_ref().expect("survivor must not panic");
+                assert!(out.is_err(), "rank {r} recv must error, not hang");
+            }
+        }
+    }
+
+    /// Sends to a rank that already exited error instead of panicking,
+    /// and a recv whose peer died before sending errors immediately.
+    #[test]
+    fn dead_peer_send_and_recv_both_error() {
+        let results = Cluster::try_run_with(2, Topology::Tree, |mut comm| {
+            if comm.rank() == 1 {
+                return Ok(());
+            }
+            // Wait until rank 1 is certainly gone (its hangup marker
+            // arrives), then both directions must fail cleanly.
+            let r = comm.recv(1, 5);
+            assert!(r.is_err(), "recv from dead peer must error");
+            let s = comm.send(1, 5, &[1.0]);
+            assert!(s.is_err(), "send to dead peer must error");
+            // And collectives built on them surface the error too.
+            assert!(comm.barrier().is_err());
+            Ok(())
+        });
+        for r in results {
+            let out: anyhow::Result<()> = r.expect("no rank panics");
+            assert!(out.is_ok());
+        }
+    }
+
+    /// A truncated reduction partial is a protocol error, not a panic:
+    /// the root reports it and every rank terminates.
+    #[test]
+    fn short_reduce_partial_errors_at_root() {
+        for topology in [Topology::Linear, Topology::Tree] {
+            let results = Cluster::try_run_with(2, topology, move |mut comm| {
+                if comm.rank() == 1 {
+                    // Claims to reduce 2 elements but ships 1.
+                    comm.send(0, TAG_REDUCE, &[1.0])?;
+                    Ok(false)
+                } else {
+                    let mut buf = vec![1.0, 2.0];
+                    comm.reduce_sum_into(0, &mut buf).map(|_| true)
+                }
+            });
+            let root: &anyhow::Result<bool> = results[0].as_ref().expect("no panic");
+            assert!(root.is_err(), "{topology:?}: root must reject the short partial");
+            assert!(format!("{:#}", root.as_ref().unwrap_err()).contains("length mismatch"));
         }
     }
 }

@@ -3,9 +3,16 @@
 //! The paper distributes datapoints across MPI ranks; this module gives
 //! the coordinator the same collective primitives (`bcast`, `reduce_sum`,
 //! `allreduce_sum`, `gather`, `barrier`) with the same semantics, with the
-//! transport swapped from a network to in-process channels. Per-rank byte
+//! wire swapped from a network to in-process channels. Per-rank byte
 //! counters report exactly the traffic an MPI run would ship, so the
 //! "communication overhead is negligible" claim (paper §4) is measurable.
+//!
+//! The point-to-point layer is pluggable: [`Comm`] runs its collectives
+//! over any [`Transport`] ([`InMemoryTransport`] in production today; a
+//! socket transport is the planned next implementation), and the
+//! [`FaultyTransport`] decorator deterministically injects wire faults
+//! for the chaos harness (`testutil::chaos`). Every operation returns a
+//! `Result`: a dead peer surfaces as an error, never a hang or a panic.
 //!
 //! `bcast`/`reduce_sum` run over a binomial tree by default (O(log P)
 //! critical path); the linear reference algorithms are retained and
@@ -16,11 +23,16 @@
 //! use gpparallel::collectives::Cluster;
 //! let results = Cluster::run(4, |mut comm| {
 //!     let local = vec![comm.rank() as f64];
-//!     comm.allreduce_sum(&local)[0] // == 0+1+2+3 on every rank
+//!     comm.allreduce_sum(&local).unwrap()[0] // == 0+1+2+3 on every rank
 //! });
 //! assert!(results.iter().all(|&r| r == 6.0));
 //! ```
 
 mod comm;
+pub mod transport;
 
 pub use comm::{Cluster, Comm, Topology};
+pub use transport::{
+    Delivery, FaultKind, FaultPlan, FaultyTransport, InMemoryTransport, Transport,
+    TransportError,
+};

@@ -1,0 +1,629 @@
+//! Pluggable point-to-point transport under [`Comm`](super::Comm).
+//!
+//! [`Comm`](super::Comm) owns the collective algorithms (tree/linear
+//! bcast, reduce, gather) and the per-(src, tag) parking logic; the
+//! *wire* underneath — how a tagged payload physically moves from rank
+//! to rank — is abstracted behind the [`Transport`] trait so it can be
+//! swapped without touching any protocol code:
+//!
+//! - [`InMemoryTransport`] — the production substrate today: one mpsc
+//!   channel per rank, full mesh of senders, shared byte/message
+//!   counters. Bit-identical to the pre-trait `Comm` internals.
+//! - [`FaultyTransport`] — a decorator over any transport that
+//!   deterministically injects exactly one seeded fault at a chosen
+//!   send index: payload truncation, NaN/garbage corruption, bounded
+//!   delay (FIFO-preserving), or a dead-peer hangup. The chaos harness
+//!   (`testutil::chaos`) sweeps it across every message of a protocol.
+//!
+//! Dead peers are first-class: a transport that shuts down (explicitly,
+//! on drop, or because its rank panicked and unwound) notifies every
+//! peer with a hangup marker, so a rank blocked in `recv` on a dead
+//! peer gets an error instead of hanging forever. This is the trait
+//! surface a future TCP transport plugs into (ROADMAP: real
+//! multi-process cluster).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::data::rng::Rng64;
+
+/// Reserved tag carrying a dead-peer notification. Never exposed to
+/// protocol code: [`InMemoryTransport::recv_blocking`] translates it
+/// into [`Delivery::Hangup`].
+const TAG_HANGUP: u64 = u64::MAX;
+
+/// How many subsequent sends a [`FaultKind::Delay`] fault may hold a
+/// message back before it is force-flushed (it also flushes before any
+/// later send on the same (dst, tag) stream, before the transport
+/// blocks in a receive, and at shutdown — so delivery is always
+/// bounded and per-(src, tag) FIFO is preserved).
+const DELAY_WINDOW: u32 = 3;
+
+/// Error surfaced by a [`Transport`]: a dead peer or a torn-down
+/// cluster. Implements [`std::error::Error`], so it converts into
+/// `anyhow::Error` via `?`.
+#[derive(Debug, Clone)]
+pub struct TransportError {
+    what: String,
+}
+
+impl TransportError {
+    fn new(what: impl Into<String>) -> Self {
+        TransportError { what: what.into() }
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "transport: {}", self.what)
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// One delivery out of [`Transport::recv_blocking`] / [`Transport::try_recv`].
+pub enum Delivery {
+    /// A payload message from `src` with `tag`.
+    Message {
+        /// Sending rank.
+        src: usize,
+        /// Message tag.
+        tag: u64,
+        /// Payload.
+        data: Vec<f64>,
+    },
+    /// Peer `src`'s transport shut down; no further messages from it
+    /// will ever arrive (its pre-shutdown messages were delivered
+    /// before this marker — per-sender FIFO).
+    Hangup(usize),
+}
+
+/// The point-to-point wire under [`Comm`](super::Comm): tagged sends,
+/// blocking/non-blocking receives, and dead-peer notification.
+///
+/// Implementations must preserve per-sender FIFO order (messages from
+/// one rank arrive in send order, regardless of tag) and must notify
+/// peers on [`shutdown`](Transport::shutdown) so nobody blocks forever
+/// on a dead rank.
+pub trait Transport: Send {
+    /// This rank's index in the cluster.
+    fn rank(&self) -> usize;
+    /// Cluster size P.
+    fn size(&self) -> usize;
+    /// Ship `data` to `dst` under `tag` (non-blocking; buffered).
+    /// Errors if `dst` has already shut down or this transport is
+    /// closed.
+    fn send(&mut self, dst: usize, tag: u64, data: &[f64]) -> Result<(), TransportError>;
+    /// Block until the next delivery (a message from any peer, or a
+    /// hangup marker). Errors only if the cluster is torn down so
+    /// completely that no delivery can ever arrive.
+    fn recv_blocking(&mut self) -> Result<Delivery, TransportError>;
+    /// Non-blocking receive: the next delivery if one is already
+    /// queued, else `None`. Never waits.
+    fn try_recv(&mut self) -> Option<Delivery>;
+    /// Close this transport and notify every peer (idempotent). Called
+    /// automatically on drop.
+    fn shutdown(&mut self);
+    /// Total payload bytes shipped by the whole cluster (shared
+    /// counter; hangup markers are transport control, not payload, and
+    /// are not counted).
+    fn bytes_sent(&self) -> u64;
+    /// Total payload messages shipped by the whole cluster (shared
+    /// counter).
+    fn messages_sent(&self) -> u64;
+    /// Payload messages sent by *this rank* through *this transport*
+    /// (protocol-level count: a delayed message counts when the
+    /// protocol sent it, not when the fault injector released it).
+    fn local_sent(&self) -> u64;
+}
+
+/// A tagged message on the in-memory wire.
+struct Message {
+    src: usize,
+    tag: u64,
+    data: Vec<f64>,
+}
+
+/// The in-process production transport: one mpsc channel per rank, a
+/// full mesh of senders, shared cluster-wide traffic counters.
+pub struct InMemoryTransport {
+    rank: usize,
+    size: usize,
+    senders: Vec<Sender<Message>>,
+    inbox: Receiver<Message>,
+    bytes_sent: Arc<AtomicU64>,
+    messages_sent: Arc<AtomicU64>,
+    local_sent: u64,
+    closed: bool,
+}
+
+impl InMemoryTransport {
+    /// Build a fully-connected mesh of `size` transports (index = rank)
+    /// sharing one pair of traffic counters.
+    pub fn mesh(size: usize) -> Vec<InMemoryTransport> {
+        assert!(size >= 1);
+        let bytes = Arc::new(AtomicU64::new(0));
+        let msgs = Arc::new(AtomicU64::new(0));
+        let mut senders: Vec<Sender<Message>> = Vec::with_capacity(size);
+        let mut inboxes: Vec<Option<Receiver<Message>>> = Vec::with_capacity(size);
+        for _ in 0..size {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            inboxes.push(Some(rx));
+        }
+        (0..size)
+            .map(|rank| InMemoryTransport {
+                rank,
+                size,
+                senders: senders.clone(),
+                inbox: inboxes[rank].take().unwrap(),
+                bytes_sent: bytes.clone(),
+                messages_sent: msgs.clone(),
+                local_sent: 0,
+                closed: false,
+            })
+            .collect()
+    }
+}
+
+impl Transport for InMemoryTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn send(&mut self, dst: usize, tag: u64, data: &[f64]) -> Result<(), TransportError> {
+        if self.closed {
+            return Err(TransportError::new(format!(
+                "rank {} transport is shut down", self.rank
+            )));
+        }
+        self.senders[dst]
+            .send(Message { src: self.rank, tag, data: data.to_vec() })
+            .map_err(|_| {
+                TransportError::new(format!("peer rank {dst} hung up (send failed)"))
+            })?;
+        self.bytes_sent.fetch_add((data.len() * 8) as u64, Ordering::Relaxed);
+        self.messages_sent.fetch_add(1, Ordering::Relaxed);
+        self.local_sent += 1;
+        Ok(())
+    }
+
+    fn recv_blocking(&mut self) -> Result<Delivery, TransportError> {
+        match self.inbox.recv() {
+            Ok(m) if m.tag == TAG_HANGUP => Ok(Delivery::Hangup(m.src)),
+            Ok(m) => Ok(Delivery::Message { src: m.src, tag: m.tag, data: m.data }),
+            // Every peer's sender (and our own self-sender) is gone:
+            // the cluster is fully torn down around us.
+            Err(_) => Err(TransportError::new("cluster torn down mid-recv")),
+        }
+    }
+
+    fn try_recv(&mut self) -> Option<Delivery> {
+        match self.inbox.try_recv() {
+            Ok(m) if m.tag == TAG_HANGUP => Some(Delivery::Hangup(m.src)),
+            Ok(m) => Some(Delivery::Message { src: m.src, tag: m.tag, data: m.data }),
+            Err(_) => None,
+        }
+    }
+
+    fn shutdown(&mut self) {
+        if self.closed {
+            return;
+        }
+        self.closed = true;
+        // Wake every peer that might be (or later block) in a recv on
+        // us. Best-effort: a peer that is itself already gone has
+        // dropped its receiver, and that is fine.
+        for dst in 0..self.size {
+            if dst != self.rank {
+                let _ = self.senders[dst].send(Message {
+                    src: self.rank,
+                    tag: TAG_HANGUP,
+                    data: Vec::new(),
+                });
+            }
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.bytes_sent.load(Ordering::Relaxed)
+    }
+
+    fn messages_sent(&self) -> u64 {
+        self.messages_sent.load(Ordering::Relaxed)
+    }
+
+    fn local_sent(&self) -> u64 {
+        self.local_sent
+    }
+}
+
+impl Drop for InMemoryTransport {
+    // A rank that returns normally *or unwinds from a panic* notifies
+    // its peers either way — this is what keeps a panicking rank from
+    // hanging the survivors' blocking recvs.
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The four deterministic fault kinds [`FaultyTransport`] can inject.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Deliver a strict prefix of the payload (seeded length).
+    Truncate,
+    /// Deliver the right length but seeded garbage values (NaN, ±inf,
+    /// huge magnitudes) in some positions.
+    Corrupt,
+    /// Hold the message back, releasing it after at most
+    /// [`DELAY_WINDOW`] later sends — and always before a later send
+    /// on the same (dst, tag) stream, before blocking in a receive,
+    /// and at shutdown. Reorders across streams, never within one, so
+    /// results must stay bit-identical to the fault-free run.
+    Delay,
+    /// Drop the message and kill the transport: peers get hangup
+    /// markers, every later operation on this rank errors.
+    Hangup,
+}
+
+impl FaultKind {
+    /// All kinds, in sweep order.
+    pub const ALL: [FaultKind; 4] =
+        [FaultKind::Truncate, FaultKind::Corrupt, FaultKind::Delay, FaultKind::Hangup];
+
+    /// Short stable name (used in replay seeds and test labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Truncate => "truncate",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Delay => "delay",
+            FaultKind::Hangup => "hangup",
+        }
+    }
+
+    /// Inverse of [`name`](FaultKind::name).
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        FaultKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// A fully deterministic fault: *the `index`-th send() call made by
+/// `rank`* suffers `kind`, with value-level randomness (truncation
+/// point, garbage values) derived from `seed`. Indexing by the
+/// victim's own program-order send count makes the injection point
+/// independent of thread interleaving, so a plan replays bit-identically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// The rank whose transport misbehaves.
+    pub rank: usize,
+    /// Zero-based index into that rank's sequence of send() calls.
+    pub index: u64,
+    /// What goes wrong.
+    pub kind: FaultKind,
+    /// Seed for the fault's value-level randomness.
+    pub seed: u64,
+}
+
+/// Decorator injecting exactly one [`FaultPlan`] fault into an inner
+/// transport. Wrap the victim rank's transport; all other ranks run
+/// clean.
+pub struct FaultyTransport {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    sent: u64,
+    /// A message held back by a Delay fault: (dst, tag, payload).
+    held: Option<(usize, u64, Vec<f64>)>,
+    hold_left: u32,
+    /// Set once a Hangup fault fires; every later op errors.
+    dropped: bool,
+}
+
+impl FaultyTransport {
+    /// Wrap `inner` with the given plan. `plan.rank` must equal
+    /// `inner.rank()` (the harness wires this up; debug-asserted).
+    pub fn new(inner: Box<dyn Transport>, plan: FaultPlan) -> Self {
+        debug_assert_eq!(plan.rank, inner.rank(), "fault plan targets a different rank");
+        FaultyTransport { inner, plan, sent: 0, held: None, hold_left: 0, dropped: false }
+    }
+
+    /// Release the held Delay message, if any (best-effort: if the
+    /// destination died in the meantime the message is lost, exactly
+    /// like a real wire).
+    fn flush_held(&mut self) {
+        if let Some((dst, tag, data)) = self.held.take() {
+            let _ = self.inner.send(dst, tag, &data);
+        }
+    }
+
+    /// Seeded RNG for this fault's value-level choices.
+    fn fault_rng(&self) -> Rng64 {
+        Rng64::new(
+            self.plan
+                .seed
+                .wrapping_mul(0x9E3779B97f4A7C15)
+                .wrapping_add(self.plan.index)
+                .wrapping_add((self.plan.rank as u64) << 32),
+        )
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn send(&mut self, dst: usize, tag: u64, data: &[f64]) -> Result<(), TransportError> {
+        if self.dropped {
+            return Err(TransportError::new(format!(
+                "rank {} hung up (injected fault)", self.plan.rank
+            )));
+        }
+        let idx = self.sent;
+        self.sent += 1;
+
+        if idx == self.plan.index {
+            match self.plan.kind {
+                FaultKind::Delay => {
+                    self.held = Some((dst, tag, data.to_vec()));
+                    self.hold_left = DELAY_WINDOW;
+                    return Ok(());
+                }
+                FaultKind::Truncate => {
+                    if data.is_empty() {
+                        return self.inner.send(dst, tag, data);
+                    }
+                    let mut rng = self.fault_rng();
+                    let new_len = (rng.next_u64() % data.len() as u64) as usize;
+                    return self.inner.send(dst, tag, &data[..new_len]);
+                }
+                FaultKind::Corrupt => {
+                    let mut rng = self.fault_rng();
+                    const GARBAGE: [f64; 4] = [f64::NAN, f64::INFINITY, -1.0e300, 3.5e9];
+                    let mut bad = data.to_vec();
+                    if bad.is_empty() {
+                        bad.push(f64::NAN);
+                    } else {
+                        // Corrupt ~1/4 of positions, and always at
+                        // least one so the fault is never a no-op.
+                        let force = (rng.next_u64() % bad.len() as u64) as usize;
+                        for (i, v) in bad.iter_mut().enumerate() {
+                            let roll = rng.next_u64();
+                            if i == force || roll % 4 == 0 {
+                                *v = GARBAGE[(roll >> 32) as usize % GARBAGE.len()];
+                            }
+                        }
+                    }
+                    return self.inner.send(dst, tag, &bad);
+                }
+                FaultKind::Hangup => {
+                    self.dropped = true;
+                    self.held = None;
+                    self.inner.shutdown();
+                    return Err(TransportError::new(format!(
+                        "rank {} hung up (injected fault)", self.plan.rank
+                    )));
+                }
+            }
+        }
+
+        // Normal send, but respect a held Delay message: same-stream
+        // sends must flush it first (FIFO), and any send shrinks the
+        // hold window.
+        if let Some((hd, ht, _)) = self.held {
+            if (hd, ht) == (dst, tag) {
+                self.flush_held();
+                return self.inner.send(dst, tag, data);
+            }
+        }
+        let res = self.inner.send(dst, tag, data);
+        if self.held.is_some() {
+            self.hold_left = self.hold_left.saturating_sub(1);
+            if self.hold_left == 0 {
+                self.flush_held();
+            }
+        }
+        res
+    }
+
+    fn recv_blocking(&mut self) -> Result<Delivery, TransportError> {
+        if self.dropped {
+            return Err(TransportError::new(format!(
+                "rank {} hung up (injected fault)", self.plan.rank
+            )));
+        }
+        // Never block while holding a message another rank may be
+        // waiting on — that would manufacture a deadlock the real
+        // protocol doesn't have.
+        self.flush_held();
+        self.inner.recv_blocking()
+    }
+
+    fn try_recv(&mut self) -> Option<Delivery> {
+        if self.dropped {
+            return None;
+        }
+        self.flush_held();
+        self.inner.try_recv()
+    }
+
+    fn shutdown(&mut self) {
+        self.flush_held();
+        self.inner.shutdown();
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.inner.bytes_sent()
+    }
+
+    fn messages_sent(&self) -> u64 {
+        self.inner.messages_sent()
+    }
+
+    fn local_sent(&self) -> u64 {
+        self.sent
+    }
+}
+
+impl Drop for FaultyTransport {
+    fn drop(&mut self) {
+        // Release anything still held before the inner transport's own
+        // drop notifies peers; a held message must never outlive the
+        // wire (bounded delay even when the rank exits immediately).
+        if !self.dropped {
+            self.flush_held();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair() -> (InMemoryTransport, InMemoryTransport) {
+        let mut v = InMemoryTransport::mesh(2).into_iter();
+        (v.next().unwrap(), v.next().unwrap())
+    }
+
+    #[test]
+    fn in_memory_roundtrip_and_counters() {
+        let (mut a, mut b) = pair();
+        a.send(1, 42, &[1.0, 2.0]).unwrap();
+        match b.recv_blocking().unwrap() {
+            Delivery::Message { src, tag, data } => {
+                assert_eq!((src, tag), (0, 42));
+                assert_eq!(data, vec![1.0, 2.0]);
+            }
+            Delivery::Hangup(_) => panic!("unexpected hangup"),
+        }
+        assert_eq!(a.local_sent(), 1);
+        assert_eq!(b.messages_sent(), 1);
+        assert_eq!(b.bytes_sent(), 16);
+    }
+
+    #[test]
+    fn shutdown_delivers_hangup_marker_not_payload() {
+        let (mut a, mut b) = pair();
+        a.send(1, 7, &[9.0]).unwrap();
+        a.shutdown();
+        // FIFO: the payload arrives before the marker.
+        assert!(matches!(b.recv_blocking().unwrap(), Delivery::Message { .. }));
+        match b.recv_blocking().unwrap() {
+            Delivery::Hangup(src) => assert_eq!(src, 0),
+            Delivery::Message { .. } => panic!("marker leaked as payload"),
+        }
+        // Sending on a shut-down transport errors instead of panicking.
+        assert!(a.send(1, 7, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn drop_notifies_peers() {
+        let (a, mut b) = pair();
+        drop(a);
+        assert!(matches!(b.recv_blocking().unwrap(), Delivery::Hangup(0)));
+    }
+
+    #[test]
+    fn send_to_dropped_peer_errors() {
+        let (mut a, b) = pair();
+        drop(b);
+        assert!(a.send(1, 1, &[0.0]).is_err());
+    }
+
+    #[test]
+    fn delay_fault_preserves_per_stream_fifo() {
+        let (a, mut b) = pair();
+        let plan = FaultPlan { rank: 0, index: 0, kind: FaultKind::Delay, seed: 1 };
+        let mut f = FaultyTransport::new(Box::new(a), plan);
+        f.send(1, 5, &[1.0]).unwrap(); // held
+        f.send(1, 9, &[2.0]).unwrap(); // other stream: goes first
+        f.send(1, 5, &[3.0]).unwrap(); // same stream: forces flush of [1.0]
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            if let Delivery::Message { tag, data, .. } = b.recv_blocking().unwrap() {
+                got.push((tag, data[0]));
+            }
+        }
+        assert_eq!(got, vec![(9, 2.0), (5, 1.0), (5, 3.0)]);
+        assert_eq!(f.local_sent(), 3, "protocol-level count, not wire count");
+    }
+
+    #[test]
+    fn delay_fault_flushes_before_blocking_recv() {
+        let (a, mut b) = pair();
+        let plan = FaultPlan { rank: 0, index: 0, kind: FaultKind::Delay, seed: 1 };
+        let mut f = FaultyTransport::new(Box::new(a), plan);
+        f.send(1, 5, &[1.0]).unwrap(); // held
+        // The peer replies only after it sees our message — if recv
+        // didn't flush, this would deadlock.
+        let t = std::thread::spawn(move || {
+            assert!(matches!(b.recv_blocking().unwrap(), Delivery::Message { .. }));
+            b.send(0, 6, &[2.0]).unwrap();
+            b
+        });
+        assert!(matches!(f.recv_blocking().unwrap(), Delivery::Message { .. }));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn truncate_fault_shortens_exactly_one_message() {
+        let (a, mut b) = pair();
+        let plan = FaultPlan { rank: 0, index: 1, kind: FaultKind::Truncate, seed: 3 };
+        let mut f = FaultyTransport::new(Box::new(a), plan);
+        f.send(1, 5, &[1.0; 4]).unwrap();
+        f.send(1, 5, &[2.0; 4]).unwrap(); // victim
+        f.send(1, 5, &[3.0; 4]).unwrap();
+        let lens: Vec<usize> = (0..3)
+            .map(|_| match b.recv_blocking().unwrap() {
+                Delivery::Message { data, .. } => data.len(),
+                Delivery::Hangup(_) => panic!("unexpected hangup"),
+            })
+            .collect();
+        assert_eq!(lens[0], 4);
+        assert!(lens[1] < 4, "victim must be strictly truncated, got {}", lens[1]);
+        assert_eq!(lens[2], 4);
+    }
+
+    #[test]
+    fn corrupt_fault_changes_payload_and_replays_identically() {
+        let run = || {
+            let (a, mut b) = pair();
+            let plan = FaultPlan { rank: 0, index: 0, kind: FaultKind::Corrupt, seed: 7 };
+            let mut f = FaultyTransport::new(Box::new(a), plan);
+            f.send(1, 5, &[1.0; 8]).unwrap();
+            match b.recv_blocking().unwrap() {
+                Delivery::Message { data, .. } => data,
+                Delivery::Hangup(_) => panic!("unexpected hangup"),
+            }
+        };
+        let x = run();
+        let y = run();
+        assert_eq!(x.len(), 8, "corruption keeps the length");
+        assert!(x.iter().zip(&[1.0; 8]).any(|(a, b)| a.to_bits() != b.to_bits()),
+                "at least one element must change");
+        let same = x.iter().zip(&y).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "same plan must corrupt identically");
+    }
+
+    #[test]
+    fn hangup_fault_kills_transport_and_notifies_peer() {
+        let (a, mut b) = pair();
+        let plan = FaultPlan { rank: 0, index: 1, kind: FaultKind::Hangup, seed: 1 };
+        let mut f = FaultyTransport::new(Box::new(a), plan);
+        f.send(1, 5, &[1.0]).unwrap();
+        assert!(f.send(1, 5, &[2.0]).is_err(), "the fault itself errors");
+        assert!(f.send(1, 5, &[3.0]).is_err(), "and stays sticky");
+        assert!(f.recv_blocking().is_err());
+        // Peer sees the real payload, then the hangup.
+        assert!(matches!(b.recv_blocking().unwrap(), Delivery::Message { .. }));
+        assert!(matches!(b.recv_blocking().unwrap(), Delivery::Hangup(0)));
+    }
+}

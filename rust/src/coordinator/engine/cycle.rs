@@ -512,6 +512,12 @@ impl DistributedEvaluator {
         self.comm.messages_sent()
     }
 
+    /// Protocol messages **this rank** has sent so far (the chaos
+    /// harness's fault-index space; see `testutil::chaos`).
+    pub fn local_messages_sent(&self) -> u64 {
+        self.comm.local_messages_sent()
+    }
+
     /// Number of optimisable parameters.
     pub fn n_params(&self) -> usize {
         self.layout.len()
@@ -535,10 +541,11 @@ impl DistributedEvaluator {
     /// first error wins and the leader aborts at the first flagged view
     /// anyway), seal the fail-flagged wire, and run the view's reduction
     /// in place. Returns the cluster-wide fail count on the root; the
-    /// return value is meaningless elsewhere.
+    /// return value is meaningless elsewhere. `Err` means the transport
+    /// itself failed (dead peer) — terminal for this rank.
     fn fwd_reduce_view(&mut self, v: usize, globals: &GlobalParams,
                        scratch: &mut CycleScratch,
-                       err: &mut Option<anyhow::Error>) -> f64 {
+                       err: &mut Option<anyhow::Error>) -> Result<f64> {
         let m = self.layout.m;
         let wire_len = view_stats_wire_len(m, self.ds[v]);
         let t0 = Instant::now();
@@ -565,19 +572,20 @@ impl DistributedEvaluator {
 
         seal_wire(&mut scratch.stats_wire, ok, wire_len);
         let t0 = Instant::now();
-        let _ = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
+        let res = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
         self.timer.add(Phase::Reduce, t0.elapsed());
-        *scratch.stats_wire.last().expect("non-empty reduce")
+        res?;
+        Ok(*scratch.stats_wire.last().expect("non-empty reduce"))
     }
 
     /// Step 6/7a for one view (pipeline mode): compute the view's VJP
     /// (skipped after an earlier failure on this rank), seal and reduce
     /// its fail-flagged grads wire in place. Returns whether this rank's
-    /// vjp ran.
+    /// vjp ran; `Err` is a terminal transport failure.
     #[allow(clippy::too_many_arguments)]
     fn vjp_reduce_view(&mut self, v: usize, globals: &GlobalParams, cts: &StatsCts,
                        scratch: &mut CycleScratch, skip: bool,
-                       err: &mut Option<anyhow::Error>) -> bool {
+                       err: &mut Option<anyhow::Error>) -> Result<bool> {
         let (m, q) = (self.layout.m, self.layout.q);
         let t0 = Instant::now();
         let c0 = self.clock();
@@ -604,15 +612,16 @@ impl DistributedEvaluator {
 
         seal_wire(&mut scratch.grads_wire, ok, m * q + q + 1);
         let t0 = Instant::now();
-        let _ = self.comm.reduce_sum_into(0, &mut scratch.grads_wire);
+        let res = self.comm.reduce_sum_into(0, &mut scratch.grads_wire);
         self.timer.add(Phase::GatherGrads, t0.elapsed());
-        ok
+        res?;
+        Ok(ok)
     }
 
     /// Step 7b: gather the span-local gradients (zeroed first if this
     /// rank's vjp failed, matching the synchronous protocol).
     fn gather_locals(&mut self, scratch: &mut CycleScratch, vjp_ok: bool)
-                     -> Option<Vec<Vec<f64>>> {
+                     -> Result<Option<Vec<Vec<f64>>>> {
         if self.layout.variational {
             if !vjp_ok {
                 for v in scratch.dmu_span.iter_mut() {
@@ -663,9 +672,10 @@ impl DistributedEvaluator {
     /// while preserving the identical chunk-order fold (see ROADMAP).
     ///
     /// Returns the cluster-wide fail count on the root (meaningless
-    /// elsewhere) plus this rank's local error, if any.
+    /// elsewhere) plus this rank's local error, if any; the outer `Err`
+    /// is a terminal transport failure.
     fn stats_round(&mut self, globals: &GlobalParams, scratch: &mut CycleScratch)
-                   -> (f64, Option<anyhow::Error>) {
+                   -> Result<(f64, Option<anyhow::Error>)> {
         let slot = view_stats_wire_len(self.layout.m, self.ds[0]);
         let wire_len = self.num_chunks * slot;
 
@@ -699,9 +709,10 @@ impl DistributedEvaluator {
 
         seal_wire(&mut scratch.stats_wire, err.is_none(), wire_len);
         let t0 = Instant::now();
-        let _ = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
+        let res = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
         self.timer.add(Phase::Reduce, t0.elapsed());
-        (*scratch.stats_wire.last().expect("non-empty reduce"), err)
+        res?;
+        Ok((*scratch.stats_wire.last().expect("non-empty reduce"), err))
     }
 
     /// Leader half of the stats collective, after the verb broadcast:
@@ -712,15 +723,13 @@ impl DistributedEvaluator {
         let gx = x[..self.layout.global_len()].to_vec();
         {
             let comm = &mut self.comm;
-            self.timer.time(Phase::Bcast, || {
-                comm.bcast(0, gx);
-            });
+            self.timer.time(Phase::Bcast, || comm.bcast(0, gx))?;
         }
         let globals = unpack_globals(&self.layout,
                                      &pad_globals(&self.layout,
                                                   &x[..self.layout.global_len()]));
 
-        let (fails, err) = self.stats_round(&globals, scratch);
+        let (fails, err) = self.stats_round(&globals, scratch)?;
         if let Some(e) = err {
             return Err(e);
         }
@@ -758,9 +767,7 @@ impl DistributedEvaluator {
         }
         {
             let comm = &mut self.comm;
-            self.timer.time(Phase::Bcast, || {
-                comm.bcast(0, vec![CMD_STATS]);
-            });
+            self.timer.time(Phase::Bcast, || comm.bcast(0, vec![CMD_STATS]))?;
         }
         let mut scratch = std::mem::take(&mut self.scratch);
         let out = self.stats_collective(x, &mut scratch);
@@ -834,15 +841,15 @@ impl DistributedEvaluator {
         let Some(mut dp) = self.sharded.take() else {
             return Err(anyhow!("no serving session: call begin_serving first"));
         };
-        dp.request_refit(&mut self.comm);
+        if let Err(e) = dp.request_refit(&mut self.comm) {
+            self.sharded = Some(dp);
+            return Err(e);
+        }
         let mut scratch = std::mem::take(&mut self.scratch);
         let stats = self.stats_collective(x, &mut scratch);
         self.scratch = scratch;
         let result = match stats.and_then(|st| self.core_from_stats(x, &st)) {
-            Ok(core) => {
-                dp.rebroadcast(core, &mut self.comm);
-                Ok(())
-            }
+            Ok(core) => dp.rebroadcast(core, &mut self.comm),
             Err(e) => Err(e),
         };
         self.sharded = Some(dp);
@@ -856,9 +863,25 @@ impl DistributedEvaluator {
     /// (the collective stays in lockstep) and returned for the worker's
     /// sticky error.
     fn worker_stats_half(&mut self, scratch: &mut CycleScratch) -> Result<()> {
-        let gx = self.comm.bcast(0, Vec::new());
+        let gx = self.comm.bcast(0, Vec::new())?;
+        if gx.len() != self.layout.global_len() {
+            // A short/garbled parameter wire would slice out of bounds
+            // below. The caller treats this error as sticky and keeps
+            // serving, so the collective must stay in lockstep: ship an
+            // all-zero fail-flagged wire through the reduction (the
+            // leader counts the flag and abandons the swap), then
+            // surface the breach.
+            let slot = view_stats_wire_len(self.layout.m, self.ds[0]);
+            let wire_len = self.num_chunks * slot;
+            scratch.stats_wire.clear();
+            seal_wire(&mut scratch.stats_wire, false, wire_len);
+            self.comm.reduce_sum_into(0, &mut scratch.stats_wire)?;
+            return Err(anyhow!(
+                "global-parameter wire: got {} elements, expected {}",
+                gx.len(), self.layout.global_len()));
+        }
         let globals = unpack_globals(&self.layout, &pad_globals(&self.layout, &gx));
-        let (_, err) = self.stats_round(&globals, scratch);
+        let (_, err) = self.stats_round(&globals, scratch)?;
         match err {
             Some(e) => Err(e),
             None => Ok(()),
@@ -912,7 +935,7 @@ impl DistributedEvaluator {
     /// Steps 1–3 at the leader: command + global-parameter broadcast,
     /// (μ, S) span scatter, and the rank-0 latent refresh. Shared by
     /// both schedules.
-    fn leader_distribute(&mut self, x: &[f64], scratch: &mut CycleScratch) {
+    fn leader_distribute(&mut self, x: &[f64], scratch: &mut CycleScratch) -> Result<()> {
         let layout = &self.layout;
         let q = layout.q;
         let views = layout.views;
@@ -929,9 +952,9 @@ impl DistributedEvaluator {
         let comm = &mut self.comm;
         let spans = &self.spans;
         let (mu_all, s_all) = (&scratch.mu_all, &scratch.s_all);
-        self.timer.time(Phase::Bcast, || {
-            comm.bcast(0, vec![CMD_EVAL]);
-            comm.bcast(0, x[..views * view_len].to_vec());
+        self.timer.time(Phase::Bcast, || -> Result<()> {
+            comm.bcast(0, vec![CMD_EVAL])?;
+            comm.bcast(0, x[..views * view_len].to_vec())?;
             if variational {
                 for (r, span) in spans.iter().enumerate().skip(1) {
                     if let Some(sp) = span {
@@ -940,11 +963,12 @@ impl DistributedEvaluator {
                         let mut msg = Vec::with_capacity(2 * (hi - lo));
                         msg.extend_from_slice(&mu_all[lo..hi]);
                         msg.extend_from_slice(&s_all[lo..hi]);
-                        comm.send(r, TAG_LOCALS, &msg);
+                        comm.send(r, TAG_LOCALS, &msg)?;
                     }
                 }
             }
-        });
+            Ok(())
+        })?;
 
         if variational {
             let sp = self.spans[0].expect("rank0 span");
@@ -952,6 +976,7 @@ impl DistributedEvaluator {
             refresh_latents(&mut scratch.latents, &self.state.view_chunks[0], sp.start,
                             q, &scratch.mu_all[lo..hi], &scratch.s_all[lo..hi]);
         }
+        Ok(())
     }
 
     /// Unpack view v's reduced statistics (sitting at the head of
@@ -984,7 +1009,7 @@ impl DistributedEvaluator {
         let view_len = self.layout.view_len();
         let globals = unpack_globals(&self.layout, x);
 
-        self.leader_distribute(x, scratch);
+        self.leader_distribute(x, scratch)?;
         self.reset_span_grads(scratch);
 
         let mut fwd_err: Option<anyhow::Error> = None;
@@ -993,7 +1018,7 @@ impl DistributedEvaluator {
         let mut grad = vec![0.0; self.layout.len()];
 
         // 4(v=0): first view's forward + reduction
-        let mut fails = self.fwd_reduce_view(0, &globals, scratch, &mut fwd_err);
+        let mut fails = self.fwd_reduce_view(0, &globals, scratch, &mut fwd_err)?;
 
         for v in 0..views {
             // 5: view v's M×M core from the just-reduced statistics
@@ -1009,12 +1034,12 @@ impl DistributedEvaluator {
                     // before they could observe the abort, and truncate
                     // the rest of the cycle on both sides.
                     let comm = &mut self.comm;
-                    self.timer.time(Phase::Bcast, || comm.bcast(0, Vec::new()));
+                    self.timer.time(Phase::Bcast, || comm.bcast(0, Vec::new()))?;
                     if v + 1 < views {
                         let wire_len = view_stats_wire_len(m, self.ds[v + 1]);
                         scratch.stats_wire.clear();
                         seal_wire(&mut scratch.stats_wire, false, wire_len);
-                        let _ = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
+                        self.comm.reduce_sum_into(0, &mut scratch.stats_wire)?;
                     }
                     return Err(e);
                 }
@@ -1028,24 +1053,25 @@ impl DistributedEvaluator {
                 let comm = &mut self.comm;
                 let cts_wire = &mut scratch.cts_wire;
                 let cts = &out.cts;
-                self.timer.time(Phase::Bcast, || {
+                self.timer.time(Phase::Bcast, || -> Result<()> {
                     cts_wire.clear();
                     cts.pack_into(cts_wire);
-                    *cts_wire = comm.bcast(0, std::mem::take(cts_wire));
-                });
+                    *cts_wire = comm.bcast(0, std::mem::take(cts_wire))?;
+                    Ok(())
+                })?;
             }
 
             // 4(v+1): next view's forward + reduction — in flight while
             // this view's vjp runs everywhere.
             fails = if v + 1 < views {
-                self.fwd_reduce_view(v + 1, &globals, scratch, &mut fwd_err)
+                self.fwd_reduce_view(v + 1, &globals, scratch, &mut fwd_err)?
             } else {
                 0.0
             };
 
             // 6/7a: view v's vjp + grads reduction
             let ok = self.vjp_reduce_view(v, &globals, &out.cts, scratch, false,
-                                          &mut vjp_err);
+                                          &mut vjp_err)?;
             let gfails = *scratch.grads_wire.last().expect("non-empty reduce");
             if vjp_err.is_none() && (!ok || gfails > 0.0) {
                 vjp_err = Some(anyhow!("stats_vjp failed on {gfails} rank(s)"));
@@ -1065,13 +1091,15 @@ impl DistributedEvaluator {
             }
         }
 
-        // 7b: gather the span-local gradients
+        // 7b: gather the span-local gradients. A compute-side vjp error
+        // takes precedence over any transport error from the gather.
         let t0 = Instant::now();
         let locals = self.gather_locals(scratch, vjp_err.is_none());
         if let Some(e) = vjp_err {
             self.timer.add(Phase::GatherGrads, t0.elapsed());
             return Err(e);
         }
+        let locals = locals?;
         if variational {
             let locals = locals.expect("root");
             let n = self.layout.n;
@@ -1105,7 +1133,7 @@ impl DistributedEvaluator {
         let view_len = self.layout.view_len();
         let globals = unpack_globals(&self.layout, x);
 
-        self.leader_distribute(x, scratch);
+        self.leader_distribute(x, scratch)?;
 
         // 4: local fwd over all views + one reduction (trailing element
         // counts failed ranks)
@@ -1132,8 +1160,9 @@ impl DistributedEvaluator {
 
         seal_wire(&mut scratch.stats_wire, fwd_err.is_none(), swire_len);
         let t0 = Instant::now();
-        let _ = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
+        let res = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
         self.timer.add(Phase::Reduce, t0.elapsed());
+        res?;
         let fwd_fails = *scratch.stats_wire.last().expect("non-empty reduce");
 
         // 5: the indistributable core
@@ -1179,18 +1208,19 @@ impl DistributedEvaluator {
                 let comm = &mut self.comm;
                 let cts_wire = &mut scratch.cts_wire;
                 let all = &parts.1;
-                self.timer.time(Phase::Bcast, || {
+                self.timer.time(Phase::Bcast, || -> Result<()> {
                     cts_wire.clear();
                     for cts in all {
                         cts.pack_into(cts_wire);
                     }
-                    *cts_wire = comm.bcast(0, std::mem::take(cts_wire));
-                });
+                    *cts_wire = comm.bcast(0, std::mem::take(cts_wire))?;
+                    Ok(())
+                })?;
                 parts
             }
             Err(e) => {
                 let comm = &mut self.comm;
-                self.timer.time(Phase::Bcast, || comm.bcast(0, Vec::new()));
+                self.timer.time(Phase::Bcast, || comm.bcast(0, Vec::new()))?;
                 return Err(e);
             }
         };
@@ -1219,16 +1249,20 @@ impl DistributedEvaluator {
         self.compute += self.clock() - c0;
         self.timer.add(Phase::StatsVjp, t0.elapsed());
 
-        // 7: reduce global partials + gather locals (fail flag again)
+        // 7: reduce global partials + gather locals (fail flag again).
+        // A compute-side vjp error outranks transport errors from the
+        // closing collectives.
         seal_wire(&mut scratch.grads_wire, vjp_err.is_none(), gwire_len);
         let t0 = Instant::now();
-        let _ = self.comm.reduce_sum_into(0, &mut scratch.grads_wire);
+        let gres = self.comm.reduce_sum_into(0, &mut scratch.grads_wire);
         let locals = self.gather_locals(scratch, vjp_err.is_none());
         self.timer.add(Phase::GatherGrads, t0.elapsed());
 
         if let Some(e) = vjp_err {
             return Err(e);
         }
+        gres?;
+        let locals = locals?;
         let vjp_fails = *scratch.grads_wire.last().expect("non-empty reduce");
         if vjp_fails > 0.0 {
             return Err(anyhow!("stats_vjp failed on {vjp_fails} rank(s)"));
@@ -1284,13 +1318,18 @@ impl DistributedEvaluator {
         if self.sharded.is_some() {
             let _ = self.end_serving();
         }
-        self.comm.bcast(0, vec![CMD_STOP]);
-        self.comm
-            .gather(0, &[self.compute])
-            .expect("root")
-            .into_iter()
-            .map(|v| v.first().copied().unwrap_or(0.0))
-            .collect()
+        // Best-effort: a dead worker must not turn shutdown into a
+        // panic; the caller just loses the compute-seconds report.
+        if self.comm.bcast(0, vec![CMD_STOP]).is_err() {
+            return Vec::new();
+        }
+        match self.comm.gather(0, &[self.compute]) {
+            Ok(Some(per_rank)) => per_rank
+                .into_iter()
+                .map(|v| v.first().copied().unwrap_or(0.0))
+                .collect(),
+            _ => Vec::new(),
+        }
     }
 
     // -----------------------------------------------------------------
@@ -1308,9 +1347,9 @@ impl DistributedEvaluator {
         if self.sharded.is_some() {
             return Err(anyhow!("a serving session is already open"));
         }
-        self.comm.bcast(0, vec![CMD_SERVE]);
+        self.comm.bcast(0, vec![CMD_SERVE])?;
         self.sharded = Some(DistributedPosterior::leader(core, rows_per_chunk,
-                                                         &mut self.comm));
+                                                         &mut self.comm)?);
         Ok(())
     }
 
@@ -1365,10 +1404,7 @@ impl DistributedEvaluator {
     pub fn end_serving(&mut self) -> Result<()> {
         match self.sharded.take() {
             None => Err(anyhow!("no serving session is open")),
-            Some(mut dp) => {
-                dp.finish(&mut self.comm);
-                Ok(())
-            }
+            Some(mut dp) => dp.finish(&mut self.comm),
         }
     }
 
@@ -1393,30 +1429,47 @@ impl DistributedEvaluator {
 
     /// Steps 1–3 on a worker: obey the command broadcast, unpack the
     /// globals, receive the (μ, S) span and refresh the latent slices.
-    fn worker_receive(&mut self, scratch: &mut CycleScratch) -> WorkerCmd {
-        let cmd = self.comm.bcast(0, Vec::new());
+    /// A malformed verb or wrong-length payload errors out of the worker
+    /// loop entirely (the dropped transport then hangs up on peers, so
+    /// the cluster cascades to termination instead of deadlocking).
+    fn worker_receive(&mut self, scratch: &mut CycleScratch) -> Result<WorkerCmd> {
+        let cmd = self.comm.bcast(0, Vec::new())?;
         if cmd.is_empty() || cmd[0] == CMD_STOP {
-            return WorkerCmd::Stop;
+            return Ok(WorkerCmd::Stop);
         }
         if cmd[0] == CMD_SERVE {
-            return WorkerCmd::Serve;
+            return Ok(WorkerCmd::Serve);
         }
         if cmd[0] == CMD_STATS {
-            return WorkerCmd::Stats;
+            return Ok(WorkerCmd::Stats);
         }
-        let gx = self.comm.bcast(0, Vec::new());
+        if cmd[0] != CMD_EVAL {
+            return Err(anyhow!("unknown command verb {} on the cluster wire",
+                               cmd[0]));
+        }
+        let gx = self.comm.bcast(0, Vec::new())?;
+        if gx.len() != self.layout.global_len() {
+            return Err(anyhow!(
+                "global-parameter broadcast: got {} elements, expected {}",
+                gx.len(), self.layout.global_len()));
+        }
         let globals = unpack_globals(&self.layout, &pad_globals(&self.layout, &gx));
 
         if self.layout.variational {
             if let Some(sp) = self.state.span {
                 let q = self.layout.q;
-                let msg = self.comm.recv(0, TAG_LOCALS);
+                let msg = self.comm.recv(0, TAG_LOCALS)?;
                 let len = (sp.end - sp.start) * q;
+                if msg.len() != 2 * len {
+                    return Err(anyhow!(
+                        "span scatter for rank {}: got {} elements, expected {}",
+                        self.comm.rank(), msg.len(), 2 * len));
+                }
                 refresh_latents(&mut scratch.latents, &self.state.view_chunks[0],
                                 sp.start, q, &msg[..len], &msg[len..]);
             }
         }
-        WorkerCmd::Eval(globals)
+        Ok(WorkerCmd::Eval(globals))
     }
 
     /// Worker side of a whole serving session (entered on CMD_SERVE,
@@ -1466,12 +1519,13 @@ impl DistributedEvaluator {
     /// the same global collective order, with the next view's forward
     /// shipped before blocking on this view's cotangents.
     fn serve_pipelined(&mut self, scratch: &mut CycleScratch) -> Result<()> {
+        let m = self.layout.m;
         let views = self.layout.views;
         let rank = self.comm.rank();
         let mut sticky_err: Option<anyhow::Error> = None;
 
         loop {
-            let globals = match self.worker_receive(scratch) {
+            let globals = match self.worker_receive(scratch)? {
                 WorkerCmd::Eval(g) => g,
                 WorkerCmd::Serve => {
                     if let Err(e) = self.worker_serve_session(scratch) {
@@ -1504,22 +1558,28 @@ impl DistributedEvaluator {
             let mut vjp_ok = true;
             let mut aborted = false;
 
-            self.fwd_reduce_view(0, &globals, scratch, &mut fwd_err);
+            self.fwd_reduce_view(0, &globals, scratch, &mut fwd_err)?;
 
             for v in 0..views {
                 // ship the next view's forward before blocking on this
                 // view's cotangents — that reduce is what the leader's
                 // core work overlaps with
                 if v + 1 < views {
-                    self.fwd_reduce_view(v + 1, &globals, scratch, &mut fwd_err);
+                    self.fwd_reduce_view(v + 1, &globals, scratch, &mut fwd_err)?;
                 }
 
-                let cwire = self.comm.bcast(0, Vec::new());
+                let cwire = self.comm.bcast(0, Vec::new())?;
                 if cwire.is_empty() {
                     // leader aborted at view v; truncate the cycle the
                     // same way it does (no vjp[v..], no gather)
                     aborted = true;
                     break;
+                }
+                let want = 3 + m * self.ds[v] + m * m;
+                if cwire.len() != want {
+                    return Err(anyhow!(
+                        "cotangent wire for view {v}: got {} elements, \
+                         expected {want}", cwire.len()));
                 }
                 scratch.view_cts[v].unpack_from(&cwire);
 
@@ -1529,7 +1589,7 @@ impl DistributedEvaluator {
                 let cts = std::mem::replace(&mut scratch.view_cts[v],
                                             StatsCts::zeros(0, 0));
                 let ok = self.vjp_reduce_view(v, &globals, &cts, scratch, skip,
-                                              &mut vjp_err);
+                                              &mut vjp_err)?;
                 scratch.view_cts[v] = cts;
                 if !ok {
                     vjp_ok = false;
@@ -1537,7 +1597,7 @@ impl DistributedEvaluator {
             }
 
             if !aborted {
-                let _ = self.gather_locals(scratch, vjp_ok);
+                let _ = self.gather_locals(scratch, vjp_ok)?;
             }
             if sticky_err.is_none() {
                 if let Some(e) = fwd_err {
@@ -1557,7 +1617,7 @@ impl DistributedEvaluator {
         let mut sticky_err: Option<anyhow::Error> = None;
 
         loop {
-            let globals = match self.worker_receive(scratch) {
+            let globals = match self.worker_receive(scratch)? {
                 WorkerCmd::Eval(g) => g,
                 WorkerCmd::Serve => {
                     if let Err(e) = self.worker_serve_session(scratch) {
@@ -1604,7 +1664,7 @@ impl DistributedEvaluator {
             self.compute += self.clock() - c0;
             seal_wire(&mut scratch.stats_wire, fwd_err.is_none(),
                       stats_wire_len(m, &self.ds));
-            let _ = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
+            self.comm.reduce_sum_into(0, &mut scratch.stats_wire)?;
             if let Some(e) = fwd_err.as_ref() {
                 if sticky_err.is_none() {
                     sticky_err = Some(anyhow!("{e:#}"));
@@ -1612,9 +1672,15 @@ impl DistributedEvaluator {
             }
 
             // cts (empty = leader aborted the cycle)
-            let cwire = self.comm.bcast(0, Vec::new());
+            let cwire = self.comm.bcast(0, Vec::new())?;
             if cwire.is_empty() {
                 continue;
+            }
+            let want: usize = self.ds.iter().map(|&d| 3 + m * d + m * m).sum();
+            if cwire.len() != want {
+                return Err(anyhow!(
+                    "cotangent wire: got {} elements, expected {want}",
+                    cwire.len()));
             }
             let mut off = 0;
             for (v, &d) in self.ds.iter().enumerate() {
@@ -1654,8 +1720,8 @@ impl DistributedEvaluator {
                 self.compute += self.clock() - c0;
             }
             seal_wire(&mut scratch.grads_wire, vjp_ok, grads_wire_len(m, q, views));
-            let _ = self.comm.reduce_sum_into(0, &mut scratch.grads_wire);
-            let _ = self.gather_locals(scratch, vjp_ok);
+            self.comm.reduce_sum_into(0, &mut scratch.grads_wire)?;
+            let _ = self.gather_locals(scratch, vjp_ok)?;
         }
     }
 }
@@ -1687,9 +1753,9 @@ impl ServeDriver for EvaluatorServeDriver<'_> {
         dp.prepare_outputs(batch, mean, var)
     }
 
-    fn issue(&mut self, batch: &Mat, stream: bool) {
+    fn issue(&mut self, batch: &Mat, stream: bool) -> Result<()> {
         let (dp, comm, _) = self.dp_and_ctx();
-        dp.issue_batch(comm, batch, stream);
+        dp.issue_batch(comm, batch, stream)
     }
 
     fn complete(&mut self, batch: &Mat, mean: &mut Mat, var: &mut Vec<f64>)
@@ -1702,8 +1768,7 @@ impl ServeDriver for EvaluatorServeDriver<'_> {
         match op {
             ControlOp::Swap(core) => {
                 let (dp, comm, _) = self.dp_and_ctx();
-                dp.rebroadcast(*core, comm);
-                Ok(())
+                dp.rebroadcast(*core, comm)
             }
             // a failed refit is atomic (no swap broadcast): the session
             // keeps serving the old posterior and the error goes back to

@@ -276,8 +276,9 @@ pub(crate) trait ServeDriver {
     fn prepare(&mut self, batch: &Mat, mean: &mut Mat, var: &mut Vec<f64>)
                -> Result<()>;
     /// Issue one non-empty batch (`issue_batch`); `stream` promises the
-    /// next `issue` follows before this batch's `complete`.
-    fn issue(&mut self, batch: &Mat, stream: bool);
+    /// next `issue` follows before this batch's `complete`. An error is
+    /// a dead transport: the batch was never issued.
+    fn issue(&mut self, batch: &Mat, stream: bool) -> Result<()>;
     /// Complete the oldest issued batch (`complete_batch`). An error
     /// fails the batch, not the session.
     fn complete(&mut self, batch: &Mat, mean: &mut Mat, var: &mut Vec<f64>)
@@ -301,8 +302,8 @@ impl ServeDriver for PosteriorDriver<'_> {
         self.dp.prepare_outputs(batch, mean, var)
     }
 
-    fn issue(&mut self, batch: &Mat, stream: bool) {
-        self.dp.issue_batch(self.comm, batch, stream);
+    fn issue(&mut self, batch: &Mat, stream: bool) -> Result<()> {
+        self.dp.issue_batch(self.comm, batch, stream)
     }
 
     fn complete(&mut self, batch: &Mat, mean: &mut Mat, var: &mut Vec<f64>)
@@ -312,10 +313,7 @@ impl ServeDriver for PosteriorDriver<'_> {
 
     fn control(&mut self, op: ControlOp) -> Result<()> {
         match op {
-            ControlOp::Swap(core) => {
-                self.dp.rebroadcast(*core, self.comm);
-                Ok(())
-            }
+            ControlOp::Swap(core) => self.dp.rebroadcast(*core, self.comm),
             ControlOp::Refit(_) => Err(anyhow!(
                 "refit requires a training cluster (standalone front-end)")),
         }
@@ -436,9 +434,26 @@ impl ServingFrontend {
             let k = formed.len();
             for (i, fl) in formed.into_iter().enumerate() {
                 let t0 = Instant::now();
-                drv.issue(&fl.batch, i + 1 < k);
+                let res = drv.issue(&fl.batch, i + 1 < k);
                 timer.add(Phase::SrvClusterRound, t0.elapsed());
-                inflight.push_back(fl);
+                match res {
+                    Ok(()) => inflight.push_back(fl),
+                    Err(e) => {
+                        // a failed issue is a dead transport: the batch
+                        // never went out, so there is no gather to
+                        // collect — fail exactly these requests and keep
+                        // the batcher alive (clients get errors, never
+                        // hangs; the caller decides when to close)
+                        let msg = format!("{e:#}");
+                        let t0 = Instant::now();
+                        for m in fl.members {
+                            sh.metrics.note_finished(false, m.rows.rows(),
+                                                     m.enqueued.elapsed());
+                            let _ = m.tx.send(Err(msg.clone()));
+                        }
+                        timer.add(Phase::SrvFanout, t0.elapsed());
+                    }
+                }
             }
 
             // complete the oldest in-flight batch and fan it back out

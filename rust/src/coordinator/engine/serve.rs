@@ -227,18 +227,19 @@ pub struct DistributedPosterior {
 
 impl DistributedPosterior {
     /// Leader (rank 0): broadcast `core` (and the partition granularity)
-    /// to every rank, opening the serving session.
+    /// to every rank, opening the serving session. `Err` is a terminal
+    /// transport failure (a dead peer).
     pub fn leader(core: PosteriorCore, rows_per_chunk: usize, comm: &mut Comm)
-                  -> DistributedPosterior {
+                  -> Result<DistributedPosterior> {
         assert!(rows_per_chunk > 0, "rows_per_chunk must be positive");
         let mut wire = Vec::with_capacity(
             1 + PosteriorCore::wire_len(core.q(), core.m(), core.d()));
         wire.push(rows_per_chunk as f64);
         core.pack_into(&mut wire);
-        comm.bcast(0, wire);
-        DistributedPosterior { core, rows_per_chunk, parts: Vec::new(), builds: 0,
-                               scratch: ServeScratch::default(), sticky: None,
-                               poisoned: false }
+        comm.bcast(0, wire)?;
+        Ok(DistributedPosterior { core, rows_per_chunk, parts: Vec::new(), builds: 0,
+                                  scratch: ServeScratch::default(), sticky: None,
+                                  poisoned: false })
     }
 
     /// Worker: receive the posterior broadcast that opens the session.
@@ -252,7 +253,7 @@ impl DistributedPosterior {
     /// rows-per-chunk — which the leader cannot produce) is a hard
     /// error, because without it the shard recvs cannot be mirrored.
     pub fn worker(comm: &mut Comm) -> Result<DistributedPosterior> {
-        let wire = comm.bcast(0, Vec::new());
+        let wire = comm.bcast(0, Vec::new())?;
         if wire.is_empty() {
             return Err(anyhow!("empty posterior broadcast"));
         }
@@ -348,7 +349,7 @@ impl DistributedPosterior {
         if xstar.rows() == 0 {
             return Ok(()); // nothing to shard; no collective round needed
         }
-        self.issue_batch(comm, xstar, false);
+        self.issue_batch(comm, xstar, false)?;
         self.complete_batch(comm, backend, xstar, mean_out, var_out)
     }
 
@@ -396,15 +397,17 @@ impl DistributedPosterior {
             return Ok(()); // all batches empty: nothing to shard
         };
         let mut nxt = next_live(cur + 1);
-        self.issue_batch(comm, &batches[cur], nxt.is_some());
+        self.issue_batch(comm, &batches[cur], nxt.is_some())?;
 
         let mut first_err: Option<anyhow::Error> = None;
         loop {
-            // issue batch k+1 before collecting batch k
+            // issue batch k+1 before collecting batch k. An issue error
+            // is a terminal transport failure (dead peer), unlike a
+            // batch's compute error — no point completing the stream.
             let issued = nxt;
             if let Some(n) = issued {
                 nxt = next_live(n + 1);
-                self.issue_batch(comm, &batches[n], nxt.is_some());
+                self.issue_batch(comm, &batches[n], nxt.is_some())?;
             }
             let (mean, var) = &mut outs[cur];
             if let Err(e) = self.complete_batch(comm, backend, &batches[cur], mean, var) {
@@ -456,7 +459,8 @@ impl DistributedPosterior {
     /// `complete_batch`): the flag makes the worker block on the next
     /// sub-command broadcast before computing this batch, so a flag with
     /// no follow-up broadcast deadlocks the cluster.
-    pub(crate) fn issue_batch(&mut self, comm: &mut Comm, xstar: &Mat, stream: bool) {
+    pub(crate) fn issue_batch(&mut self, comm: &mut Comm, xstar: &Mat, stream: bool)
+                              -> Result<()> {
         let nt = xstar.rows();
         let ranks = comm.size();
         self.partition_for(nt, ranks);
@@ -466,7 +470,7 @@ impl DistributedPosterior {
         scratch.cmd.clear();
         scratch.cmd.extend_from_slice(&[SRV_PREDICT, nt as f64,
                                         if stream { 1.0 } else { 0.0 }]);
-        scratch.cmd = comm.bcast(0, std::mem::take(&mut scratch.cmd));
+        scratch.cmd = comm.bcast(0, std::mem::take(&mut scratch.cmd))?;
 
         // ship each worker its contiguous run of rows
         let part = &self.parts[0].2;
@@ -475,9 +479,10 @@ impl DistributedPosterior {
                 scratch.xwire.clear();
                 scratch.xwire.extend_from_slice(
                     &xstar.as_slice()[sp.start * xstar.cols()..sp.end * xstar.cols()]);
-                comm.send(r, TAG_XSTAR, &scratch.xwire);
+                comm.send(r, TAG_XSTAR, &scratch.xwire)?;
             }
         }
+        Ok(())
     }
 
     /// Second half of one batch's leader protocol: compute rank 0's own
@@ -513,7 +518,7 @@ impl DistributedPosterior {
         let scratch = &mut self.scratch;
         scratch.payload.clear();
         scratch.payload.push(if own.is_ok() { 0.0 } else { 1.0 });
-        let gathered = comm.gather(0, &scratch.payload).expect("root");
+        let gathered = comm.gather(0, &scratch.payload)?.expect("root");
         own.map_err(|e| anyhow!("rank 0 prediction failed: {e:#}"))?;
 
         // assemble worker shards into the output rows
@@ -565,7 +570,7 @@ impl DistributedPosterior {
             // previous batch's compute; otherwise read the broadcast
             let cmd = match self.scratch.pending_cmd.take() {
                 Some(c) => c,
-                None => comm.bcast(0, Vec::new()),
+                None => comm.bcast(0, Vec::new())?,
             };
             if cmd.is_empty() || cmd[0] == SRV_DONE {
                 return match self.sticky.take() {
@@ -637,7 +642,7 @@ impl DistributedPosterior {
             let msg = match span {
                 Some(_) => Some(match self.scratch.pending_shard.take() {
                     Some(m) => m,
-                    None => comm.recv(0, TAG_XSTAR),
+                    None => comm.recv(0, TAG_XSTAR)?,
                 }),
                 None => None,
             };
@@ -650,10 +655,10 @@ impl DistributedPosterior {
             // parked: the loop top handles it after this batch, which
             // is broadcast order.
             if stream {
-                let next = comm.bcast(0, Vec::new());
+                let next = comm.bcast(0, Vec::new())?;
                 if let Ok(Some((nt2, _))) = parse_predict(&next) {
                     if self.partition_for(nt2, ranks).worker_span(rank).is_some() {
-                        self.scratch.pending_shard = Some(comm.recv(0, TAG_XSTAR));
+                        self.scratch.pending_shard = Some(comm.recv(0, TAG_XSTAR)?);
                     }
                 }
                 self.scratch.pending_cmd = Some(next);
@@ -707,7 +712,7 @@ impl DistributedPosterior {
                     }
                 }
             }
-            let _ = comm.gather(0, &scratch.payload);
+            let _ = comm.gather(0, &scratch.payload)?;
         }
     }
 
@@ -715,13 +720,14 @@ impl DistributedPosterior {
     /// mid-session; every subsequent batch on every rank is evaluated
     /// against the new posterior. The cached row partition is unaffected
     /// (it depends only on batch size and rank count).
-    pub fn rebroadcast(&mut self, core: PosteriorCore, comm: &mut Comm) {
+    pub fn rebroadcast(&mut self, core: PosteriorCore, comm: &mut Comm) -> Result<()> {
         let mut wire = Vec::with_capacity(
             1 + PosteriorCore::wire_len(core.q(), core.m(), core.d()));
         wire.push(SRV_SWAP);
         core.pack_into(&mut wire);
-        comm.bcast(0, wire);
+        comm.bcast(0, wire)?;
         self.core = core;
+        Ok(())
     }
 
     /// Leader: ask every serving worker to leave the serve loop for one
@@ -730,14 +736,16 @@ impl DistributedPosterior {
     /// then either [`rebroadcast`](DistributedPosterior::rebroadcast)s
     /// the rebuilt core or — if the refit failed — simply resumes
     /// issuing sub-commands against the old posterior.
-    pub fn request_refit(&mut self, comm: &mut Comm) {
-        comm.bcast(0, vec![SRV_REFIT]);
+    pub fn request_refit(&mut self, comm: &mut Comm) -> Result<()> {
+        comm.bcast(0, vec![SRV_REFIT])?;
+        Ok(())
     }
 
     /// Leader: close the session — workers return from
     /// [`serve`](DistributedPosterior::serve).
-    pub fn finish(&mut self, comm: &mut Comm) {
-        comm.bcast(0, vec![SRV_DONE]);
+    pub fn finish(&mut self, comm: &mut Comm) -> Result<()> {
+        comm.bcast(0, vec![SRV_DONE])?;
+        Ok(())
     }
 }
 
@@ -793,7 +801,7 @@ mod tests {
                 let mut backend = RustCpuBackend;
                 if comm.rank() == 0 {
                     let mut dp = DistributedPosterior::leader(core_ref.clone(), 4,
-                                                             &mut comm);
+                                                             &mut comm).unwrap();
                     let mut out = Vec::new();
                     let mut mean = Mat::zeros(0, 0);
                     let mut var = Vec::new();
@@ -802,7 +810,7 @@ mod tests {
                                         &mut var).unwrap();
                         out.push((mean.clone(), var.clone()));
                     }
-                    dp.finish(&mut comm);
+                    dp.finish(&mut comm).unwrap();
                     Some(out)
                 } else {
                     worker_serve(&mut comm, &mut backend).unwrap();
@@ -912,11 +920,12 @@ mod tests {
             let results = Cluster::run(size, move |mut comm| {
                 let mut backend = RustCpuBackend;
                 if comm.rank() == 0 {
-                    let mut dp = DistributedPosterior::leader(ca.clone(), 3, &mut comm);
+                    let mut dp = DistributedPosterior::leader(ca.clone(), 3, &mut comm)
+                        .unwrap();
                     let before = dp.predict(&mut comm, &mut backend, xs).unwrap();
-                    dp.rebroadcast(cb.clone(), &mut comm);
+                    dp.rebroadcast(cb.clone(), &mut comm).unwrap();
                     let after = dp.predict(&mut comm, &mut backend, xs).unwrap();
-                    dp.finish(&mut comm);
+                    dp.finish(&mut comm).unwrap();
                     Some((before, after))
                 } else {
                     worker_serve(&mut comm, &mut backend).unwrap();
@@ -945,12 +954,12 @@ mod tests {
             let mut backend = RustCpuBackend;
             if comm.rank() == 0 {
                 let mut dp = DistributedPosterior::leader(core_ref.clone(), 2,
-                                                          &mut comm);
+                                                          &mut comm).unwrap();
                 // corrupt swap: far too short to be a core wire
-                comm.bcast(0, vec![SRV_SWAP, 1.0, 2.0]);
+                comm.bcast(0, vec![SRV_SWAP, 1.0, 2.0]).unwrap();
                 let err = dp.predict(&mut comm, &mut backend, xs)
                     .expect_err("poisoned worker must fail the batch");
-                dp.finish(&mut comm);
+                dp.finish(&mut comm).unwrap();
                 Some(format!("{err:#}"))
             } else {
                 let err = worker_serve(&mut comm, &mut backend)
@@ -974,12 +983,12 @@ mod tests {
             if comm.rank() == 0 {
                 // corrupt session-open: valid granularity header (4
                 // rows per chunk), junk core payload
-                comm.bcast(0, vec![4.0, 1.0, 2.0]);
+                comm.bcast(0, vec![4.0, 1.0, 2.0]).unwrap();
                 // one 8-row batch: rank 1 owns rows 4..8
-                comm.bcast(0, vec![SRV_PREDICT, 8.0]);
-                comm.send(1, TAG_XSTAR, &[0.0; 8]);
-                let gathered = comm.gather(0, &[0.0]).expect("root");
-                comm.bcast(0, vec![SRV_DONE]);
+                comm.bcast(0, vec![SRV_PREDICT, 8.0]).unwrap();
+                comm.send(1, TAG_XSTAR, &[0.0; 8]).unwrap();
+                let gathered = comm.gather(0, &[0.0]).unwrap().expect("root");
+                comm.bcast(0, vec![SRV_DONE]).unwrap();
                 Some(gathered[1].clone())
             } else {
                 let mut backend = RustCpuBackend;
@@ -1016,12 +1025,12 @@ mod tests {
                 let mut backend = RustCpuBackend;
                 if comm.rank() == 0 {
                     let mut dp = DistributedPosterior::leader(core_ref.clone(), 3,
-                                                              &mut comm);
+                                                              &mut comm).unwrap();
                     let streamed = dp.predict_stream(&mut comm, &mut backend, bs)
                         .unwrap();
                     // the session keeps serving sequentially afterwards
                     let tail = dp.predict(&mut comm, &mut backend, &bs[0]).unwrap();
-                    dp.finish(&mut comm);
+                    dp.finish(&mut comm).unwrap();
                     Some((streamed, tail))
                 } else {
                     worker_serve(&mut comm, &mut backend).unwrap();
@@ -1062,18 +1071,18 @@ mod tests {
             let mut backend = RustCpuBackend;
             if comm.rank() == 0 {
                 let mut dp = DistributedPosterior::leader(core_ref.clone(), 2,
-                                                          &mut comm);
-                comm.bcast(0, vec![7.25, 1.0]);            // unknown verb
-                comm.bcast(0, vec![SRV_PREDICT]);          // short predict wire
-                comm.bcast(0, vec![SRV_PREDICT, f64::NAN, 0.0]); // NaN row count
-                comm.bcast(0, vec![SRV_PREDICT, -4.0, 0.0]);     // negative
-                comm.bcast(0, vec![SRV_PREDICT, 1e300, 0.0]);    // absurd
+                                                          &mut comm).unwrap();
+                comm.bcast(0, vec![7.25, 1.0]).unwrap();   // unknown verb
+                comm.bcast(0, vec![SRV_PREDICT]).unwrap(); // short predict wire
+                comm.bcast(0, vec![SRV_PREDICT, f64::NAN, 0.0]).unwrap(); // NaN rows
+                comm.bcast(0, vec![SRV_PREDICT, -4.0, 0.0]).unwrap();     // negative
+                comm.bcast(0, vec![SRV_PREDICT, 1e300, 0.0]).unwrap();    // absurd
                 // corrupt but integral and allocatable-looking: must be
                 // rejected by the sanity cap, not partitioned (OOM)
-                comm.bcast(0, vec![SRV_PREDICT, 3.0e9, 0.0]);
+                comm.bcast(0, vec![SRV_PREDICT, 3.0e9, 0.0]).unwrap();
                 // lockstep held: a real batch still serves exactly
                 let out = dp.predict(&mut comm, &mut backend, xs).unwrap();
-                dp.finish(&mut comm);
+                dp.finish(&mut comm).unwrap();
                 Some(out)
             } else {
                 let err = worker_serve(&mut comm, &mut backend)
@@ -1107,9 +1116,10 @@ mod tests {
         let results = Cluster::run(2, move |mut comm| {
             let mut backend = RustCpuBackend;
             if comm.rank() == 0 {
-                let mut dp = DistributedPosterior::leader(ca.clone(), 2, &mut comm);
+                let mut dp = DistributedPosterior::leader(ca.clone(), 2, &mut comm)
+                    .unwrap();
                 // corrupt swap wire: rank 1's session is poisoned
-                comm.bcast(0, vec![SRV_SWAP, 1.0, 2.0]);
+                comm.bcast(0, vec![SRV_SWAP, 1.0, 2.0]).unwrap();
                 let err = dp
                     .predict_stream(&mut comm, &mut backend,
                                     &[b0r.clone(), b1r.clone()])
@@ -1117,12 +1127,12 @@ mod tests {
                 assert!(format!("{err:#}").contains("stream batch 0"),
                         "first error must win: {err:#}");
                 // a good swap clears the poison; the stream serves again
-                dp.rebroadcast(cb.clone(), &mut comm);
+                dp.rebroadcast(cb.clone(), &mut comm).unwrap();
                 let outs = dp
                     .predict_stream(&mut comm, &mut backend,
                                     &[b0r.clone(), b1r.clone()])
                     .unwrap();
-                dp.finish(&mut comm);
+                dp.finish(&mut comm).unwrap();
                 Some(outs)
             } else {
                 let err = worker_serve(&mut comm, &mut backend)
@@ -1154,9 +1164,10 @@ mod tests {
         let results = Cluster::run(5, move |mut comm| {
             let mut backend = RustCpuBackend;
             if comm.rank() == 0 {
-                let mut dp = DistributedPosterior::leader(core_ref.clone(), 1, &mut comm);
+                let mut dp = DistributedPosterior::leader(core_ref.clone(), 1, &mut comm)
+                    .unwrap();
                 let out = dp.predict(&mut comm, &mut backend, xs).unwrap();
-                dp.finish(&mut comm);
+                dp.finish(&mut comm).unwrap();
                 Some(out)
             } else {
                 worker_serve(&mut comm, &mut backend).unwrap();

@@ -1,0 +1,421 @@
+//! Deterministic fault-injection chaos harness for the cluster
+//! protocols.
+//!
+//! The four [`Scenario`]s reproduce, end to end, one run of each wire
+//! protocol the engine speaks: a training cycle (`eval`), a STATS-only
+//! round (`stats_pass`), a streamed serving session (`predict_stream`)
+//! and a micro-batching front-end session ([`ServingFrontend`]). Each
+//! scenario is fully self-seeding — the same inputs are rebuilt from
+//! constants on every call — so a run is a pure function of the
+//! injected [`FaultPlan`], and `rust/tests/chaos_test.rs` can sweep the
+//! fault point across **every message index** of every rank and assert:
+//!
+//! 1. the run terminates (watchdog — no deadlock),
+//! 2. no rank panics (panics are caught and counted),
+//! 3. every rank surfaces a sticky error or a clean result,
+//! 4. the outcome is bit-identical when replayed from the same plan,
+//! 5. a [`FaultKind::Delay`]-only plan is bit-identical to the
+//!    fault-free run (reordering inside the transport's FIFO contract
+//!    must be invisible).
+//!
+//! A failing case prints its [`case_id`]; replay it alone with
+//! `GPPAR_CHAOS_SEED=<id> cargo test --test chaos_test` (see
+//! `docs/TESTING.md`).
+
+use std::time::Duration;
+
+use crate::collectives::{Cluster, Comm, FaultKind, FaultPlan, FaultyTransport,
+                         InMemoryTransport, Topology, Transport};
+use crate::config::BackendKind;
+use crate::coordinator::engine::serve::{worker_serve, DistributedPosterior};
+use crate::coordinator::{DistributedEvaluator, EngineConfig, FrontendConfig,
+                         OptChoice, Partition, Problem, RustCpuBackend,
+                         ServingFrontend};
+use crate::data::synthetic::{generate_supervised, SyntheticSpec};
+use crate::kern::RbfArd;
+use crate::linalg::Mat;
+use crate::math::predict::PosteriorCore;
+use crate::math::stats::sgpr_stats_fwd;
+use crate::models::SparseGpRegression;
+use crate::optim::Lbfgs;
+use crate::testutil::prop::Rng64;
+
+/// Cluster size every scenario runs at. Three ranks is the smallest
+/// cluster where the binomial tree differs from a star (the root talks
+/// to two children) while keeping the sweep (every rank × every message
+/// index × every fault kind) affordable.
+pub const CLUSTER: usize = 3;
+
+/// One protocol run to put under fault injection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// One full training cycle: broadcast parameters, forward + VJP
+    /// reductions, objective and gradient back on the leader.
+    TrainCycle,
+    /// One STATS-only round (`stats_pass`): the distributed statistics
+    /// rebuild behind posterior refits.
+    StatsRound,
+    /// One streamed serving session: three ragged batches through
+    /// `predict_stream` (batch k+1 issued before batch k's gather).
+    ServeStream,
+    /// One front-end session: a client thread pushing three requests
+    /// through the micro-batcher over a sharded serving session.
+    Frontend,
+}
+
+impl Scenario {
+    /// Every scenario, in sweep order.
+    pub const ALL: [Scenario; 4] = [Scenario::TrainCycle, Scenario::StatsRound,
+                                    Scenario::ServeStream, Scenario::Frontend];
+
+    /// Stable name used in [`case_id`] strings.
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::TrainCycle => "train_cycle",
+            Scenario::StatsRound => "stats_round",
+            Scenario::ServeStream => "serve_stream",
+            Scenario::Frontend => "frontend",
+        }
+    }
+
+    /// Inverse of [`Scenario::name`].
+    pub fn parse(s: &str) -> Option<Scenario> {
+        Scenario::ALL.into_iter().find(|sc| sc.name() == s)
+    }
+}
+
+/// What one rank produced: how many protocol messages it sent (the
+/// fault-index space for that rank) and either a result digest or the
+/// rendered error it surfaced.
+#[derive(Clone, Debug)]
+pub struct RankOutcome {
+    /// Protocol messages this rank sent (hangup markers excluded);
+    /// zero when the rank errored before its counters were reachable.
+    pub sent: u64,
+    /// Flattened result values on success, the error chain otherwise.
+    pub result: Result<Vec<f64>, String>,
+}
+
+/// The outcome of one whole scenario run across the cluster.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    /// Per-rank outcomes, indexed by rank.
+    pub ranks: Vec<RankOutcome>,
+    /// Ranks whose thread panicked (the sweep asserts this stays 0; a
+    /// panicked rank's outcome is `Err("PANIC: …")`).
+    pub panics: usize,
+}
+
+impl RunOutcome {
+    /// True when every rank finished without error or panic.
+    pub fn all_ok(&self) -> bool {
+        self.panics == 0 && self.ranks.iter().all(|r| r.result.is_ok())
+    }
+}
+
+/// Bitwise outcome equality: per-rank send counts, error strings, and
+/// result digests compared via `f64::to_bits` — corrupt floats (NaN)
+/// can legitimately flow into digests, and NaN != NaN would make every
+/// replay comparison vacuous.
+pub fn outcomes_bitwise_equal(a: &RunOutcome, b: &RunOutcome) -> bool {
+    a.panics == b.panics
+        && a.ranks.len() == b.ranks.len()
+        && a.ranks.iter().zip(&b.ranks).all(|(x, y)| {
+            x.sent == y.sent
+                && match (&x.result, &y.result) {
+                    (Ok(u), Ok(v)) => u.len() == v.len()
+                        && u.iter().zip(v).all(|(p, q)| p.to_bits() == q.to_bits()),
+                    (Err(u), Err(v)) => u == v,
+                    _ => false,
+                }
+        })
+}
+
+/// The replayable identity of one sweep case:
+/// `scenario:rank:index:kind:seed` (the `GPPAR_CHAOS_SEED` wire format).
+pub fn case_id(scenario: Scenario, plan: &FaultPlan) -> String {
+    format!("{}:{}:{}:{}:{}", scenario.name(), plan.rank, plan.index,
+            plan.kind.name(), plan.seed)
+}
+
+/// Inverse of [`case_id`]; `None` on any malformed field.
+pub fn parse_case(s: &str) -> Option<(Scenario, FaultPlan)> {
+    let parts: Vec<&str> = s.split(':').collect();
+    if parts.len() != 5 {
+        return None;
+    }
+    let scenario = Scenario::parse(parts[0])?;
+    let rank = parts[1].parse().ok()?;
+    let index = parts[2].parse().ok()?;
+    let kind = FaultKind::parse(parts[3])?;
+    let seed = parts[4].parse().ok()?;
+    Some((scenario, FaultPlan { rank, index, kind, seed }))
+}
+
+/// Run one scenario on a fresh [`CLUSTER`]-rank in-memory mesh, with
+/// `plan`'s rank (if any) behind a [`FaultyTransport`]. Rank panics are
+/// caught by the scoped cluster runner and folded into the outcome.
+pub fn run_scenario(scenario: Scenario, plan: Option<FaultPlan>) -> RunOutcome {
+    let transports: Vec<Box<dyn Transport>> = InMemoryTransport::mesh(CLUSTER)
+        .into_iter()
+        .enumerate()
+        .map(|(r, t)| match plan {
+            Some(p) if p.rank == r => {
+                Box::new(FaultyTransport::new(Box::new(t), p)) as Box<dyn Transport>
+            }
+            _ => Box::new(t) as Box<dyn Transport>,
+        })
+        .collect();
+    let results = Cluster::try_run_on(transports, Topology::Tree,
+                                      &|comm| drive(scenario, comm));
+    let mut panics = 0;
+    let ranks = results
+        .into_iter()
+        .map(|r| match r {
+            Ok(outcome) => outcome,
+            Err(payload) => {
+                panics += 1;
+                let what = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                RankOutcome { sent: 0, result: Err(format!("PANIC: {what}")) }
+            }
+        })
+        .collect();
+    RunOutcome { ranks, panics }
+}
+
+/// [`run_scenario`] under a deadlock watchdog: the run executes on a
+/// detached thread and must report within `timeout`, else this panics
+/// with the case `label` (the hung threads are leaked — the test is
+/// already failing, and tearing them down cleanly is impossible by
+/// construction).
+pub fn run_scenario_watchdog(scenario: Scenario, plan: Option<FaultPlan>,
+                             timeout: Duration, label: &str) -> RunOutcome {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(run_scenario(scenario, plan));
+    });
+    match rx.recv_timeout(timeout) {
+        Ok(out) => out,
+        Err(_) => panic!(
+            "chaos case {label}: no result within {timeout:?} — deadlock"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// scenario drivers (all inputs rebuilt from constants: a run is a pure
+// function of the fault plan)
+// ---------------------------------------------------------------------
+
+fn chaos_problem() -> Problem {
+    let spec = SyntheticSpec { n: 18, q: 2, d: 2, ..Default::default() };
+    let ds = generate_supervised(&spec, 97);
+    let x = ds.x.clone().expect("supervised dataset has X");
+    SparseGpRegression::problem(&x, &ds.y, 4, "test", 97)
+}
+
+fn chaos_cfg() -> EngineConfig {
+    EngineConfig {
+        workers: CLUSTER,
+        chunk: 4,
+        backend: BackendKind::RustCpu,
+        artifacts_dir: "artifacts".into(),
+        opt: OptChoice::Lbfgs(Lbfgs::default()),
+        pipeline: true,
+        verbose: false,
+        simd: None,
+    }
+}
+
+fn chaos_core() -> PosteriorCore {
+    let (n, m, q, d) = (24usize, 6usize, 2usize, 3usize);
+    let mut rng = Rng64::new(55);
+    let x = Mat::from_fn(n, q, |_, _| rng.normal());
+    let y = Mat::from_fn(n, d, |_, _| rng.normal());
+    let z = Mat::from_fn(m, q, |_, _| rng.normal());
+    let kern = RbfArd::iso(1.2, 1.1, q);
+    let w = vec![1.0; n];
+    let st = sgpr_stats_fwd(&kern, &x, &w, &y, &z);
+    PosteriorCore::new(kern, z, 15.0, &st).expect("chaos posterior core")
+}
+
+fn drive(scenario: Scenario, comm: Comm) -> RankOutcome {
+    match scenario {
+        Scenario::TrainCycle => drive_eval(comm, false),
+        Scenario::StatsRound => drive_eval(comm, true),
+        Scenario::ServeStream => drive_serve(comm),
+        Scenario::Frontend => drive_frontend(comm),
+    }
+}
+
+/// One training cycle (or one STATS round when `stats`): the leader
+/// digests the objective+gradient (or the reduced statistics) and
+/// always attempts the shutdown broadcast, faulted or not, so workers
+/// never deadlock waiting for a command that cannot come.
+fn drive_eval(comm: Comm, stats: bool) -> RankOutcome {
+    let problem = chaos_problem();
+    let cfg = chaos_cfg();
+    let part = Partition::new(problem.n(), cfg.chunk, CLUSTER);
+    let x0 = problem.initial_params();
+    let mut ev = match DistributedEvaluator::new(&problem, &cfg, &part, comm) {
+        Ok(ev) => ev,
+        Err(e) => return RankOutcome { sent: 0, result: Err(format!("{e:#}")) },
+    };
+    let result = if ev.rank() == 0 {
+        let r = if stats {
+            ev.stats_pass(&x0).map(|st| {
+                let mut d = vec![st.psi0, st.tryy, st.kl, st.n_eff];
+                d.extend_from_slice(st.p.as_slice());
+                d.extend_from_slice(st.psi2.as_slice());
+                d
+            })
+        } else {
+            ev.eval(&x0).map(|(f, g)| {
+                let mut d = vec![f];
+                d.extend(g);
+                d
+            })
+        };
+        let _ = ev.finish(); // best-effort close even after an error
+        r.map_err(|e| format!("{e:#}"))
+    } else {
+        ev.serve().map(|()| Vec::new()).map_err(|e| format!("{e:#}"))
+    };
+    RankOutcome { sent: ev.local_messages_sent(), result }
+}
+
+/// One streamed serving session: three ragged batches through
+/// `predict_stream`, digesting every mean and variance. The leader
+/// always attempts `finish`, faulted or not.
+fn drive_serve(mut comm: Comm) -> RankOutcome {
+    let mut backend = RustCpuBackend;
+    if comm.rank() == 0 {
+        let mut rng = Rng64::new(777);
+        let batches: Vec<Mat> = [7usize, 3, 6]
+            .iter()
+            .map(|&nt| Mat::from_fn(nt, 2, |_, _| rng.normal()))
+            .collect();
+        let result = (|| -> Result<Vec<f64>, String> {
+            let mut dp = DistributedPosterior::leader(chaos_core(), 2, &mut comm)
+                .map_err(|e| format!("{e:#}"))?;
+            let stream = dp.predict_stream(&mut comm, &mut backend, &batches);
+            let _ = dp.finish(&mut comm); // release workers on every path
+            let outs = stream.map_err(|e| format!("{e:#}"))?;
+            let mut digest = Vec::new();
+            for (mean, var) in &outs {
+                digest.extend_from_slice(mean.as_slice());
+                digest.extend_from_slice(var);
+            }
+            Ok(digest)
+        })();
+        RankOutcome { sent: comm.local_messages_sent(), result }
+    } else {
+        let result = worker_serve(&mut comm, &mut backend)
+            .map(|()| Vec::new())
+            .map_err(|e| format!("{e:#}"));
+        RankOutcome { sent: comm.local_messages_sent(), result }
+    }
+}
+
+/// One front-end session: a single client thread pushes three requests
+/// through the micro-batcher (sequentially — each blocks on its reply —
+/// so batch composition and the message schedule are deterministic). A
+/// failed request contributes a `-inf` sentinel to the digest in place
+/// of its rows, keeping the digest's shape a pure function of the plan.
+fn drive_frontend(mut comm: Comm) -> RankOutcome {
+    let mut backend = RustCpuBackend;
+    if comm.rank() == 0 {
+        let result = (|| -> Result<Vec<f64>, String> {
+            let mut dp = DistributedPosterior::leader(chaos_core(), 2, &mut comm)
+                .map_err(|e| format!("{e:#}"))?;
+            let fe = ServingFrontend::new(
+                FrontendConfig {
+                    max_batch_rows: 8,
+                    max_wait: Duration::from_micros(50),
+                    queue_rows: 64,
+                    dump_every: None,
+                },
+                2, 3);
+            let h = fe.handle();
+            let digest = std::thread::scope(|s| {
+                let client = s.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut rng = Rng64::new(4242);
+                    for &rows in &[3usize, 2, 4] {
+                        let x = Mat::from_fn(rows, 2, |_, _| rng.normal());
+                        match h.predict(x) {
+                            Ok((mean, var)) => {
+                                out.extend_from_slice(mean.as_slice());
+                                out.extend_from_slice(&var);
+                            }
+                            Err(_) => out.push(f64::NEG_INFINITY),
+                        }
+                    }
+                    h.close();
+                    out
+                });
+                let _report = fe.run(&mut dp, &mut comm, &mut backend);
+                client.join()
+            });
+            let digest = digest.map_err(|_| "frontend client panicked".to_string())?;
+            let _ = dp.finish(&mut comm); // release workers on every path
+            Ok(digest)
+        })();
+        RankOutcome { sent: comm.local_messages_sent(), result }
+    } else {
+        let result = worker_serve(&mut comm, &mut backend)
+            .map(|()| Vec::new())
+            .map_err(|e| format!("{e:#}"));
+        RankOutcome { sent: comm.local_messages_sent(), result }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The fault-free run of every scenario is clean, counts messages on
+    /// every rank, and replays bit-identically (the baseline the sweep
+    /// in `tests/chaos_test.rs` compares against).
+    #[test]
+    fn fault_free_runs_are_clean_and_deterministic() {
+        for scenario in Scenario::ALL {
+            let a = run_scenario(scenario, None);
+            let b = run_scenario(scenario, None);
+            assert!(a.all_ok(), "{}: {:?}", scenario.name(), a);
+            assert!(a.ranks.iter().all(|r| r.sent > 0),
+                    "{}: every rank participates", scenario.name());
+            assert!(outcomes_bitwise_equal(&a, &b),
+                    "{}: fault-free replay diverged", scenario.name());
+        }
+    }
+
+    /// `case_id` round-trips through `parse_case`.
+    #[test]
+    fn case_id_round_trips() {
+        for scenario in Scenario::ALL {
+            for kind in FaultKind::ALL {
+                let plan = FaultPlan { rank: 2, index: 17, kind, seed: 0xC0FFEE };
+                let id = case_id(scenario, &plan);
+                let (s2, p2) = parse_case(&id).expect("parse back");
+                assert_eq!(s2, scenario);
+                assert_eq!(p2.rank, plan.rank);
+                assert_eq!(p2.index, plan.index);
+                assert_eq!(p2.kind, plan.kind);
+                assert_eq!(p2.seed, plan.seed);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_case_rejects_malformed() {
+        for bad in ["", "train_cycle", "train_cycle:0:0:delay",
+                    "nope:0:0:delay:1", "train_cycle:x:0:delay:1",
+                    "train_cycle:0:0:meteor:1", "a:b:c:d:e:f"] {
+            assert!(parse_case(bad).is_none(), "{bad:?} must not parse");
+        }
+    }
+}

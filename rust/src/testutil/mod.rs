@@ -5,6 +5,7 @@
 //! so `prop` provides the subset we need: seeded random case generation
 //! with reproducible failure reporting.
 
+pub mod chaos;
 pub mod fd;
 pub mod prop;
 pub mod ulp;

@@ -1,0 +1,543 @@
+//! Chaos sweep + collective property tests + structured wire fuzzing.
+//!
+//! **Tentpole sweep** (`chaos_sweep_*`): for each protocol scenario in
+//! `testutil::chaos` — one training cycle, one STATS round, one
+//! streamed serve session, one front-end session — count every
+//! rank's protocol messages in a fault-free run, then re-run the whole
+//! scenario once per (rank, message index, fault kind) with a
+//! `FaultyTransport` injecting exactly that fault. Every run must
+//! terminate under a watchdog (no deadlock), panic nowhere, surface a
+//! sticky error or a clean result on every rank, replay bit-identically
+//! from its plan, and — for delay-only faults — be bit-identical to the
+//! fault-free run.
+//!
+//! Replay one failing case alone:
+//! `GPPAR_CHAOS_SEED=<scenario:rank:index:kind:seed> cargo test --test
+//! chaos_test` (the other sweeps become no-ops; see `docs/TESTING.md`).
+//!
+//! **Collectives property tests**: `bcast_tree`/`reduce_sum_tree`
+//! against their linear references for ranks 1–12 — bit-identical
+//! results on exactly-representable data, exact message counts (root
+//! sends ⌈log₂P⌉ in the tree vs P−1 linear, P−1 total everywhere), and
+//! delay-fault immunity at every message index of every rank.
+//!
+//! **Wire fuzzers**: seeded malformed wires over every serve verb and
+//! the top-level command header; the worker must stay parked with a
+//! sticky error (serve verbs, STATS parameter wire) or exit with a
+//! clean error (top-level breaches), and the session must still serve a
+//! real batch bit-identically afterwards.
+
+use std::time::Duration;
+
+use gpparallel::collectives::{Cluster, Comm, FaultKind, FaultPlan, FaultyTransport,
+                              InMemoryTransport, Topology, Transport};
+use gpparallel::config::BackendKind;
+use gpparallel::coordinator::engine::serve::{worker_serve, DistributedPosterior};
+use gpparallel::coordinator::{DistributedEvaluator, EngineConfig, OptChoice,
+                              Partition, Problem, RustCpuBackend};
+use gpparallel::data::synthetic::{generate_supervised, SyntheticSpec};
+use gpparallel::kern::RbfArd;
+use gpparallel::linalg::Mat;
+use gpparallel::math::predict::PosteriorCore;
+use gpparallel::math::stats::sgpr_stats_fwd;
+use gpparallel::models::{Posterior, SparseGpRegression};
+use gpparallel::optim::Lbfgs;
+use gpparallel::testutil::chaos::{case_id, outcomes_bitwise_equal, parse_case,
+                                  run_scenario_watchdog, Scenario, CLUSTER};
+use gpparallel::testutil::prop::Rng64;
+
+/// Generous per-run deadline: a healthy run takes milliseconds, so a
+/// minute only ever fires on a genuine deadlock.
+const TIMEOUT: Duration = Duration::from_secs(60);
+
+// ---------------------------------------------------------------------
+// tentpole: the fault sweep
+// ---------------------------------------------------------------------
+
+/// `GPPAR_CHAOS_SEED=<case id>` pins the whole suite to one case.
+fn replay_override() -> Option<(Scenario, FaultPlan)> {
+    let v = std::env::var("GPPAR_CHAOS_SEED").ok()?;
+    match parse_case(&v) {
+        Some(case) => Some(case),
+        None => panic!(
+            "GPPAR_CHAOS_SEED={v:?} is not a case id \
+             (want scenario:rank:index:kind:seed, e.g. \
+             serve_stream:1:3:truncate:42)"),
+    }
+}
+
+/// Deterministic per-case seed so value-level fault randomness differs
+/// across the sweep but every case is replayable from its id alone.
+fn case_seed(scenario: Scenario, rank: usize, index: u64, kind: FaultKind) -> u64 {
+    let k = FaultKind::ALL.iter().position(|&f| f == kind).unwrap() as u64;
+    let s = Scenario::ALL.iter().position(|&x| x == scenario).unwrap() as u64;
+    (s << 48) ^ ((rank as u64) << 32) ^ (index << 8) ^ k ^ 0xC0A5_1A11
+}
+
+/// One faulted case: run, check invariants against the clean baseline,
+/// replay, check bit-identity.
+fn run_case(scenario: Scenario, plan: FaultPlan,
+            clean: &gpparallel::testutil::chaos::RunOutcome) {
+    let label = case_id(scenario, &plan);
+    let out = run_scenario_watchdog(scenario, Some(plan), TIMEOUT, &label);
+    assert_eq!(out.panics, 0, "panic under {label}: {:?}", out.ranks);
+    if plan.kind == FaultKind::Delay {
+        assert!(outcomes_bitwise_equal(&out, clean),
+                "delay-only fault changed the outcome under {label}\n\
+                 clean: {clean:?}\n  got: {out:?}");
+    }
+    let again = run_scenario_watchdog(scenario, Some(plan), TIMEOUT, &label);
+    assert!(outcomes_bitwise_equal(&out, &again),
+            "replay diverged under {label}\nfirst: {out:?}\nagain: {again:?}");
+}
+
+/// The full sweep for one scenario: every rank × every message index ×
+/// every fault kind.
+fn sweep(scenario: Scenario) {
+    if let Some((pinned, plan)) = replay_override() {
+        if pinned == scenario {
+            let clean = run_scenario_watchdog(
+                scenario, None, TIMEOUT, &format!("{}:fault-free", scenario.name()));
+            assert!(clean.all_ok(), "fault-free {} run failed: {clean:?}",
+                    scenario.name());
+            run_case(scenario, plan, &clean);
+            println!("replayed {} twice, bit-identical", case_id(scenario, &plan));
+        }
+        return;
+    }
+
+    let clean = run_scenario_watchdog(
+        scenario, None, TIMEOUT, &format!("{}:fault-free", scenario.name()));
+    assert_eq!(clean.panics, 0, "{}: fault-free run panicked", scenario.name());
+    assert!(clean.all_ok(), "{}: fault-free run failed: {clean:?}", scenario.name());
+
+    for rank in 0..CLUSTER {
+        let sends = clean.ranks[rank].sent;
+        assert!(sends > 0,
+                "{}: rank {rank} sent no messages — the sweep would be vacuous",
+                scenario.name());
+        for index in 0..sends {
+            for kind in FaultKind::ALL {
+                let seed = case_seed(scenario, rank, index, kind);
+                run_case(scenario, FaultPlan { rank, index, kind, seed }, &clean);
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_sweep_train_cycle() {
+    sweep(Scenario::TrainCycle);
+}
+
+#[test]
+fn chaos_sweep_stats_round() {
+    sweep(Scenario::StatsRound);
+}
+
+#[test]
+fn chaos_sweep_serve_stream() {
+    sweep(Scenario::ServeStream);
+}
+
+#[test]
+fn chaos_sweep_frontend() {
+    sweep(Scenario::Frontend);
+}
+
+// ---------------------------------------------------------------------
+// satellite: tree collectives vs linear references under delay faults
+// ---------------------------------------------------------------------
+
+/// All five collective ops on integer-valued data (addition is exact,
+/// so tree and linear accumulation orders agree bit for bit). Returns
+/// this rank's digest and the cumulative send counter after each op.
+fn collective_digest(mut comm: Comm) -> (Vec<f64>, Vec<u64>) {
+    let rank = comm.rank();
+    let data: Vec<f64> =
+        (0..33).map(|i| (((rank * 31 + i * 7) % 101) as f64) - 50.0).collect();
+    let payload: Vec<f64> = (0..33).map(|i| ((i * 13) % 89) as f64).collect();
+    let mut digest = Vec::new();
+    let mut counts = Vec::new();
+
+    let root_payload = |r: usize| if r == 0 { payload.clone() } else { Vec::new() };
+    let bt = comm.bcast_tree(0, root_payload(rank)).expect("bcast_tree");
+    counts.push(comm.local_messages_sent());
+    let bl = comm.bcast_linear(0, root_payload(rank)).expect("bcast_linear");
+    counts.push(comm.local_messages_sent());
+    assert_eq!(bt, bl, "tree and linear broadcast payloads differ");
+    digest.extend_from_slice(&bt);
+
+    let rt = comm.reduce_sum_tree(0, &data).expect("reduce_sum_tree");
+    counts.push(comm.local_messages_sent());
+    let rl = comm.reduce_sum_linear(0, &data).expect("reduce_sum_linear");
+    counts.push(comm.local_messages_sent());
+    if let (Some(t), Some(l)) = (&rt, &rl) {
+        assert!(t.iter().zip(l).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "tree and linear reductions disagree on exact data");
+        digest.extend_from_slice(t);
+    }
+
+    if let Some(parts) = comm.gather(0, &data).expect("gather") {
+        for part in parts {
+            digest.extend_from_slice(&part);
+        }
+    }
+    counts.push(comm.local_messages_sent());
+    (digest, counts)
+}
+
+fn run_collectives(p: usize, plan: Option<FaultPlan>) -> Vec<(Vec<f64>, Vec<u64>)> {
+    let transports: Vec<Box<dyn Transport>> = InMemoryTransport::mesh(p)
+        .into_iter()
+        .enumerate()
+        .map(|(r, t)| match plan {
+            Some(pl) if pl.rank == r => {
+                Box::new(FaultyTransport::new(Box::new(t), pl)) as Box<dyn Transport>
+            }
+            _ => Box::new(t) as Box<dyn Transport>,
+        })
+        .collect();
+    Cluster::try_run_on(transports, Topology::Tree, &|comm| collective_digest(comm))
+        .into_iter()
+        .enumerate()
+        .map(|(r, res)| match res {
+            Ok(v) => v,
+            Err(_) => panic!("collective rank {r} panicked (P={p}, plan {plan:?})"),
+        })
+        .collect()
+}
+
+fn ceil_log2(p: usize) -> u64 {
+    let mut k = 0u64;
+    let mut m = 1usize;
+    while m < p {
+        m <<= 1;
+        k += 1;
+    }
+    k
+}
+
+/// Collective results and counts must be bitwise equal across two runs.
+fn collectives_bitwise_equal(a: &[(Vec<f64>, Vec<u64>)],
+                             b: &[(Vec<f64>, Vec<u64>)]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|((da, ca), (db, cb))| {
+            ca == cb
+                && da.len() == db.len()
+                && da.iter().zip(db).all(|(x, y)| x.to_bits() == y.to_bits())
+        })
+}
+
+/// Ranks 1–12: tree collectives agree with the linear references bit
+/// for bit, message counts are exact (root ⌈log₂P⌉ vs P−1; every
+/// non-root reduction/gather contribution is a single message; P−1
+/// total for every op), and a delay fault at **any** message index on
+/// **any** rank changes nothing.
+#[test]
+fn collectives_vs_linear_counts_and_delay_immunity() {
+    if replay_override().is_some() {
+        return; // suite pinned to a single tentpole-sweep case
+    }
+    for p in 1..=12usize {
+        let clean = run_collectives(p, None);
+
+        // exact per-op message counts from the cumulative counters
+        let delta = |r: usize, op: usize| {
+            let c = &clean[r].1;
+            if op == 0 { c[0] } else { c[op] - c[op - 1] }
+        };
+        let total = |op: usize| (0..p).map(|r| delta(r, op)).sum::<u64>();
+        assert_eq!(delta(0, 0), ceil_log2(p), "P={p}: tree bcast root sends");
+        assert_eq!(total(0), (p - 1) as u64, "P={p}: tree bcast total");
+        assert_eq!(delta(0, 1), (p - 1) as u64, "P={p}: linear bcast root sends");
+        assert_eq!(total(1), (p - 1) as u64, "P={p}: linear bcast total");
+        for op in [2usize, 3, 4] {
+            assert_eq!(delta(0, op), 0, "P={p}: op {op} root sends nothing");
+            for r in 1..p {
+                assert_eq!(delta(r, op), 1,
+                           "P={p}: op {op} rank {r} sends exactly one message");
+            }
+        }
+
+        // delay sweep: every rank, every message index
+        for rank in 0..p {
+            let sends = *clean[rank].1.last().unwrap();
+            for index in 0..sends {
+                let plan = FaultPlan { rank, index, kind: FaultKind::Delay,
+                                       seed: 0xDE1A_u64 ^ ((p as u64) << 32)
+                                             ^ ((rank as u64) << 16) ^ index };
+                let (tx, rx) = std::sync::mpsc::channel();
+                std::thread::spawn(move || {
+                    let _ = tx.send(run_collectives(p, Some(plan)));
+                });
+                let got = rx.recv_timeout(TIMEOUT).unwrap_or_else(|_| {
+                    panic!("collectives P={p} rank {rank} index {index}: \
+                            deadlock under delay fault")
+                });
+                assert!(collectives_bitwise_equal(&got, &clean),
+                        "P={p} rank {rank} index {index}: delay fault changed \
+                         a collective result\nclean: {clean:?}\n  got: {got:?}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// satellite: structured wire fuzzers
+// ---------------------------------------------------------------------
+
+// The serve sub-command vocabulary (crate-private constants mirrored
+// here; the serve-wire tests in serve_test.rs use the same literals).
+const SRV_PREDICT: f64 = 1.0;
+const SRV_SWAP: f64 = 2.0;
+const SRV_REFIT: f64 = 3.0;
+const TAG_XSTAR: u64 = 300;
+
+// Top-level cluster command verbs (crate-private constants mirrored).
+const CMD_STOP: f64 = 0.0;
+const CMD_EVAL: f64 = 1.0;
+const CMD_SERVE: f64 = 2.0;
+const CMD_STATS: f64 = 3.0;
+
+fn fuzz_core(seed: u64) -> PosteriorCore {
+    let (n, m, q, d) = (20usize, 5usize, 2usize, 2usize);
+    let mut rng = Rng64::new(seed);
+    let x = Mat::from_fn(n, q, |_, _| rng.normal());
+    let y = Mat::from_fn(n, d, |_, _| rng.normal());
+    let z = Mat::from_fn(m, q, |_, _| rng.normal());
+    let kern = RbfArd::iso(1.1, 0.9, q);
+    let w = vec![1.0; n];
+    let st = sgpr_stats_fwd(&kern, &x, &w, &y, &z);
+    PosteriorCore::new(kern, z, 18.0, &st).unwrap()
+}
+
+/// Seeded structured fuzz over every malformed serve-wire class —
+/// unknown verbs, short/garbled SRV_PREDICT headers (NaN, negative,
+/// fractional and absurd row counts, bad stream flags), garbage
+/// SRV_SWAP payloads, and wrong-length shard wires — then a real
+/// hot-swap (`SRV_SWAP` via `rebroadcast`) and a real batch. The worker
+/// must stay parked through all of it, serve the real batch
+/// bit-identically to the single-node posterior, and surface the first
+/// junk wire as its sticky error at close (`SRV_DONE`).
+#[test]
+fn serve_wire_fuzzer_worker_stays_parked_then_serves() {
+    if replay_override().is_some() {
+        return;
+    }
+    let core = fuzz_core(31);
+    let core2 = fuzz_core(32);
+    let results = Cluster::run(2, move |mut comm| {
+        let mut backend = RustCpuBackend;
+        if comm.rank() == 0 {
+            let mut dp =
+                DistributedPosterior::leader(core.clone(), 2, &mut comm).unwrap();
+            let mut rng = Rng64::new(0xF022);
+            for _ in 0..40 {
+                match rng.next_u64() % 6 {
+                    0 => {
+                        // unknown sub-command verb
+                        let v = [9.0, -1.0, 0.5, f64::NAN, 1e18]
+                            [(rng.next_u64() % 5) as usize];
+                        let _ = comm.bcast(0, vec![v]).unwrap();
+                    }
+                    1 => {
+                        // SRV_PREDICT header too short to carry a row count
+                        let _ = comm.bcast(0, vec![SRV_PREDICT]).unwrap();
+                    }
+                    2 => {
+                        // row counts no honest leader produces
+                        let r = [f64::NAN, -3.0, 0.25, 1e17, 0.0]
+                            [(rng.next_u64() % 5) as usize];
+                        let _ = comm.bcast(0, vec![SRV_PREDICT, r]).unwrap();
+                    }
+                    3 => {
+                        // stream flag that is neither 0 nor 1
+                        let _ = comm.bcast(0, vec![SRV_PREDICT, 4.0, 7.5]).unwrap();
+                    }
+                    4 => {
+                        // swap broadcast whose core fails to unpack
+                        let mut w = vec![SRV_SWAP];
+                        for _ in 0..(rng.next_u64() % 7) {
+                            w.push(rng.normal());
+                        }
+                        let _ = comm.bcast(0, w).unwrap();
+                    }
+                    _ => {
+                        // valid header, wrong-length shard: worker must
+                        // fail-flag the gather, never feed the short
+                        // buffer to its shard matrix (4 rows over 2
+                        // ranks: rank 1 owns 2 rows × Q=2 → wants 4)
+                        let _ = comm.bcast(0, vec![SRV_PREDICT, 4.0, 0.0]).unwrap();
+                        comm.send(1, TAG_XSTAR, &[0.5; 3]).unwrap();
+                        let g = comm.gather(0, &[0.0]).unwrap().expect("root");
+                        assert_eq!(g[1], vec![1.0],
+                                   "shard-length breach must come back fail-flagged");
+                    }
+                }
+            }
+            // the session is still live: a real hot-swap clears any
+            // poison, and a real batch serves bit-identically
+            dp.rebroadcast(core2.clone(), &mut comm).unwrap();
+            let x = Mat::from_fn(9, 2, |_, _| rng.normal());
+            let (mean, var) = dp.predict(&mut comm, &mut backend, &x).unwrap();
+            let single = Posterior::from_core(core2.clone());
+            let (em, ev) = single.predict(&x);
+            assert!(mean.max_abs_diff(&em) == 0.0,
+                    "post-fuzz batch mean differs from single-node posterior");
+            assert_eq!(var, ev, "post-fuzz batch variance differs");
+            dp.finish(&mut comm).unwrap();
+            None
+        } else {
+            Some(match worker_serve(&mut comm, &mut backend) {
+                Ok(()) => "unexpected clean exit".to_string(),
+                Err(e) => format!("{e:#}"),
+            })
+        }
+    });
+    let werr = results[1].clone().expect("worker outcome");
+    assert!(werr.contains("rank 1"),
+            "sticky error must name the rank, got {werr:?}");
+}
+
+/// SRV_REFIT against a standalone serving cluster (no training state to
+/// refit with) must surface a clean protocol error on the worker, not a
+/// hang or a panic.
+#[test]
+fn refit_verb_outside_training_cluster_errors_cleanly() {
+    if replay_override().is_some() {
+        return;
+    }
+    let core = fuzz_core(33);
+    let results = Cluster::run(2, move |mut comm| {
+        let mut backend = RustCpuBackend;
+        if comm.rank() == 0 {
+            let mut dp =
+                DistributedPosterior::leader(core.clone(), 2, &mut comm).unwrap();
+            let _ = comm.bcast(0, vec![SRV_REFIT]).unwrap();
+            // the worker has left the session; closing is best-effort
+            let _ = dp.finish(&mut comm);
+            None
+        } else {
+            Some(match worker_serve(&mut comm, &mut backend) {
+                Ok(()) => "unexpected clean exit".to_string(),
+                Err(e) => format!("{e:#}"),
+            })
+        }
+    });
+    let werr = results[1].clone().expect("worker outcome");
+    assert!(werr.contains("refit requested outside a training cluster"),
+            "got {werr:?}");
+}
+
+fn fuzz_problem() -> (Problem, EngineConfig, Partition) {
+    let spec = SyntheticSpec { n: 12, q: 2, d: 2, ..Default::default() };
+    let ds = generate_supervised(&spec, 41);
+    let x = ds.x.clone().unwrap();
+    let problem = SparseGpRegression::problem(&x, &ds.y, 3, "test", 41);
+    let cfg = EngineConfig {
+        workers: 2,
+        chunk: 4,
+        backend: BackendKind::RustCpu,
+        artifacts_dir: "artifacts".into(),
+        opt: OptChoice::Lbfgs(Lbfgs::default()),
+        pipeline: true,
+        verbose: false,
+        simd: None,
+    };
+    let part = Partition::new(problem.n(), cfg.chunk, cfg.workers);
+    (problem, cfg, part)
+}
+
+/// Top-level command-header fuzz: unknown verbs and a wrong-length
+/// CMD_EVAL parameter wire are rank-exiting by design (the worker
+/// cannot resync a desynced top-level stream) — assert the exit is a
+/// clean error, not a panic or a hang.
+#[test]
+fn cluster_command_header_fuzz_errors_cleanly() {
+    if replay_override().is_some() {
+        return;
+    }
+    let bad_runs: Vec<(Vec<Vec<f64>>, &str)> = vec![
+        (vec![vec![9.0]], "unknown command verb"),
+        (vec![vec![f64::NAN]], "unknown command verb"),
+        (vec![vec![-2.0]], "unknown command verb"),
+        (vec![vec![0.5]], "unknown command verb"),
+        // CMD_EVAL then a parameter wire far too short to be the
+        // packed globals (which always hold Z, hyps and noise)
+        (vec![vec![CMD_EVAL], vec![0.0]], "global-parameter broadcast"),
+    ];
+    for (wires, want) in bad_runs {
+        let (problem, cfg, part) = fuzz_problem();
+        let results = Cluster::run(2, move |mut comm| {
+            if comm.rank() == 0 {
+                for w in &wires {
+                    let _ = comm.bcast(0, w.clone()).unwrap();
+                }
+                None
+            } else {
+                let mut ev =
+                    DistributedEvaluator::new(&problem, &cfg, &part, comm).unwrap();
+                Some(match ev.serve() {
+                    Ok(()) => "unexpected clean exit".to_string(),
+                    Err(e) => format!("{e:#}"),
+                })
+            }
+        });
+        let werr = results[1].clone().expect("worker outcome");
+        assert!(werr.contains(want), "want {want:?} in {werr:?}");
+    }
+}
+
+/// STATS-header fuzz: a wrong-length parameter wire inside a STATS
+/// round is **sticky, not rank-exiting** — the worker ships a
+/// fail-flagged all-zero reduction (lockstep preserved), parks back at
+/// the command broadcast, still serves a full sharded session
+/// afterwards (bit-identical to the single-node posterior), and
+/// surfaces the breach at STOP.
+#[test]
+fn stats_header_fuzz_worker_stays_parked_then_serves() {
+    if replay_override().is_some() {
+        return;
+    }
+    let core = fuzz_core(34);
+    let (problem, cfg, part) = fuzz_problem();
+    let results = Cluster::run(2, move |mut comm| {
+        let mut backend = RustCpuBackend;
+        if comm.rank() == 0 {
+            // bad STATS round: header fine, parameter wire too short
+            let _ = comm.bcast(0, vec![CMD_STATS]).unwrap();
+            let _ = comm.bcast(0, vec![0.0; 2]).unwrap();
+            // the worker shipped a fail-flagged all-zero reduction;
+            // consume it (our deliberately wrong-length root buffer
+            // makes the reduce error out, which still drains the wire)
+            let _ = comm.reduce_sum_linear(0, &[0.0]);
+            // lockstep held: a whole serving session still works
+            let _ = comm.bcast(0, vec![CMD_SERVE]).unwrap();
+            let mut dp =
+                DistributedPosterior::leader(core.clone(), 2, &mut comm).unwrap();
+            let mut rng = Rng64::new(77);
+            let x = Mat::from_fn(7, 2, |_, _| rng.normal());
+            let (mean, var) = dp.predict(&mut comm, &mut backend, &x).unwrap();
+            let single = Posterior::from_core(core.clone());
+            let (em, ev) = single.predict(&x);
+            assert!(mean.max_abs_diff(&em) == 0.0, "post-breach serve: mean");
+            assert_eq!(var, ev, "post-breach serve: var");
+            dp.finish(&mut comm).unwrap();
+            // shut the cluster down; the sticky error surfaces now
+            let _ = comm.bcast(0, vec![CMD_STOP]).unwrap();
+            let _ = comm.gather(0, &[0.0]);
+            None
+        } else {
+            let mut ev =
+                DistributedEvaluator::new(&problem, &cfg, &part, comm).unwrap();
+            Some(match ev.serve() {
+                Ok(()) => "unexpected clean exit".to_string(),
+                Err(e) => format!("{e:#}"),
+            })
+        }
+    });
+    let werr = results[1].clone().expect("worker outcome");
+    assert!(werr.contains("global-parameter wire"),
+            "sticky STATS breach must surface at STOP, got {werr:?}");
+}

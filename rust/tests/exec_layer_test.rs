@@ -102,7 +102,7 @@ fn tree_and_linear_collectives_agree_on_engine_payloads() {
         let ds = &data;
         let run = |topology| {
             Cluster::run_with(size, topology, move |mut comm| {
-                comm.reduce_sum(0, &ds[comm.rank()])
+                comm.reduce_sum(0, &ds[comm.rank()]).unwrap()
             })
         };
         let lin = run(Topology::Linear).remove(0).unwrap();

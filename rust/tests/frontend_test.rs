@@ -97,7 +97,7 @@ fn frontend_replies_bit_identical_ranks_1_to_9() {
                 let mut backend = backend_for(kind);
                 if comm.rank() == 0 {
                     let mut dp = DistributedPosterior::leader(core_ref.clone(), 4,
-                                                             &mut comm);
+                                                             &mut comm).unwrap();
                     let fe = ServingFrontend::new(
                         FrontendConfig {
                             max_batch_rows: 6,
@@ -131,7 +131,7 @@ fn frontend_replies_bit_identical_ranks_1_to_9() {
                         let report = fe.run(&mut dp, &mut comm, backend.as_mut());
                         (closer.join().unwrap(), report)
                     });
-                    dp.finish(&mut comm);
+                    dp.finish(&mut comm).unwrap();
                     Some((served, report))
                 } else {
                     worker_serve(&mut comm, backend.as_mut()).unwrap();
@@ -181,7 +181,8 @@ fn frontend_swap_applies_on_batch_boundary() {
     let results = Cluster::run(2, move |mut comm| {
         let mut backend = backend_for(BackendKind::RustCpu);
         if comm.rank() == 0 {
-            let mut dp = DistributedPosterior::leader(ca.clone(), 3, &mut comm);
+            let mut dp =
+                DistributedPosterior::leader(ca.clone(), 3, &mut comm).unwrap();
             let fe = ServingFrontend::new(
                 FrontendConfig {
                     max_batch_rows: 12,
@@ -244,7 +245,7 @@ fn frontend_swap_applies_on_batch_boundary() {
                 fe.run(&mut dp, &mut comm, backend.as_mut());
                 closer.join().unwrap()
             });
-            dp.finish(&mut comm);
+            dp.finish(&mut comm).unwrap();
             Some(served)
         } else {
             worker_serve(&mut comm, backend.as_mut()).unwrap();
@@ -323,7 +324,8 @@ fn poisoned_worker_fails_in_flight_only() {
     let results = Cluster::run(2, move |mut comm| {
         if comm.rank() == 0 {
             let mut backend = RustCpuBackend;
-            let mut dp = DistributedPosterior::leader(core_ref.clone(), 2, &mut comm);
+            let mut dp =
+                DistributedPosterior::leader(core_ref.clone(), 2, &mut comm).unwrap();
             let fe = ServingFrontend::new(
                 FrontendConfig {
                     max_batch_rows: 8,
@@ -357,7 +359,7 @@ fn poisoned_worker_fails_in_flight_only() {
                 let report = fe.run(&mut dp, &mut comm, &mut backend);
                 (drive.join().unwrap(), report)
             });
-            dp.finish(&mut comm);
+            dp.finish(&mut comm).unwrap();
             Some((out, report))
         } else {
             let mut backend = FailingBackend {
@@ -399,7 +401,8 @@ fn frontend_backpressure_bounds_queue() {
     let results = Cluster::run(2, move |mut comm| {
         let mut backend = backend_for(BackendKind::RustCpu);
         if comm.rank() == 0 {
-            let mut dp = DistributedPosterior::leader(core_ref.clone(), 2, &mut comm);
+            let mut dp =
+                DistributedPosterior::leader(core_ref.clone(), 2, &mut comm).unwrap();
             let fe = ServingFrontend::new(
                 FrontendConfig {
                     // size trigger unreachable: only the 100 ms deadline
@@ -438,7 +441,7 @@ fn frontend_backpressure_bounds_queue() {
                 let (ga, gb) = closer.join().unwrap();
                 (ga, gb, report)
             });
-            dp.finish(&mut comm);
+            dp.finish(&mut comm).unwrap();
             Some((got_a, got_b, report))
         } else {
             worker_serve(&mut comm, backend.as_mut()).unwrap();

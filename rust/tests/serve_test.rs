@@ -132,12 +132,12 @@ fn distributed_matches_single_node_ranks_1_to_9() {
                 let mut backend = backend_for(kind);
                 if comm.rank() == 0 {
                     let mut dp = DistributedPosterior::leader(core_ref.clone(), 4,
-                                                             &mut comm);
+                                                             &mut comm).unwrap();
                     let out: Vec<(Mat, Vec<f64>)> = batches_ref
                         .iter()
                         .map(|b| dp.predict(&mut comm, backend.as_mut(), b).unwrap())
                         .collect();
-                    dp.finish(&mut comm);
+                    dp.finish(&mut comm).unwrap();
                     Some(out)
                 } else {
                     worker_serve(&mut comm, backend.as_mut()).unwrap();
@@ -181,12 +181,12 @@ fn leader_overlap_drain_sends_nothing_and_stays_bit_identical() {
             let mut backend = RustCpuBackend;
             let out = if comm.rank() == 0 {
                 let mut dp = DistributedPosterior::leader(core_ref.clone(), rpc,
-                                                          &mut comm);
+                                                          &mut comm).unwrap();
                 let out: Vec<(Mat, Vec<f64>)> = bs
                     .iter()
                     .map(|b| dp.predict(&mut comm, &mut backend, b).unwrap())
                     .collect();
-                dp.finish(&mut comm);
+                dp.finish(&mut comm).unwrap();
                 Some(out)
             } else {
                 worker_serve(&mut comm, &mut backend).unwrap();
@@ -195,7 +195,7 @@ fn leader_overlap_drain_sends_nothing_and_stays_bit_identical() {
             // linear fan-in sync: when the root returns, every rank's
             // prior sends are on the shared counter (a tree barrier
             // leaks in-flight forwards, so the count would be racy)
-            comm.reduce_sum_linear(0, &[]);
+            comm.reduce_sum_linear(0, &[]).unwrap();
             out.map(|o| (o, comm.messages_sent()))
         });
         let (got, messages) = results[0].as_ref().expect("leader output");
@@ -469,13 +469,14 @@ fn malformed_shard_wire_is_a_clean_error() {
     let core_ref = &core;
     let results = Cluster::run(2, move |mut comm| {
         if comm.rank() == 0 {
-            let mut dp = DistributedPosterior::leader(core_ref.clone(), 4, &mut comm);
+            let mut dp =
+                DistributedPosterior::leader(core_ref.clone(), 4, &mut comm).unwrap();
             // announce an 8-row batch: rank 1 owns rows 4..8 and expects
             // 4 rows × Q=2 = 8 wire elements; ship 3 instead
-            comm.bcast(0, vec![1.0, 8.0]);
-            comm.send(1, 300, &[0.5; 3]);
-            let gathered = comm.gather(0, &[0.0]).expect("root");
-            dp.finish(&mut comm);
+            comm.bcast(0, vec![1.0, 8.0]).unwrap();
+            comm.send(1, 300, &[0.5; 3]).unwrap();
+            let gathered = comm.gather(0, &[0.0]).unwrap().expect("root");
+            dp.finish(&mut comm).unwrap();
             Some(gathered[1].clone())
         } else {
             let mut backend = RustCpuBackend;
@@ -543,12 +544,12 @@ fn streamed_serving_matches_sequential_ranks_1_to_9() {
                 let mut backend = backend_for(kind);
                 if comm.rank() == 0 {
                     let mut dp = DistributedPosterior::leader(core_ref.clone(), 4,
-                                                              &mut comm);
+                                                              &mut comm).unwrap();
                     let streamed = dp
                         .predict_stream(&mut comm, backend.as_mut(), bs)
                         .unwrap();
                     let tail = dp.predict(&mut comm, backend.as_mut(), &bs[0]).unwrap();
-                    dp.finish(&mut comm);
+                    dp.finish(&mut comm).unwrap();
                     Some((streamed, tail))
                 } else {
                     worker_serve(&mut comm, backend.as_mut()).unwrap();
@@ -595,20 +596,21 @@ fn mid_stream_hot_swap_applies_from_the_next_batch() {
         if comm.rank() == 0 {
             // session open (granularity 4): rank 1 owns rows 4..8 of an
             // 8-row batch
-            let _dp = DistributedPosterior::leader(ca.clone(), 4, &mut comm);
+            let _dp =
+                DistributedPosterior::leader(ca.clone(), 4, &mut comm).unwrap();
             // batch 0, stream flag set: the next announcement is in flight
-            comm.bcast(0, vec![1.0, 8.0, 1.0]);
-            comm.send(1, 300, &xs.as_slice()[4 * 2..8 * 2]);
+            comm.bcast(0, vec![1.0, 8.0, 1.0]).unwrap();
+            comm.send(1, 300, &xs.as_slice()[4 * 2..8 * 2]).unwrap();
             // the swap lands between the two streamed announcements
             let mut swap = vec![2.0];
             cb.pack_into(&mut swap);
-            comm.bcast(0, swap);
-            let g0 = comm.gather(0, &[0.0]).expect("root")[1].clone();
+            comm.bcast(0, swap).unwrap();
+            let g0 = comm.gather(0, &[0.0]).unwrap().expect("root")[1].clone();
             // batch 1, the stream's tail
-            comm.bcast(0, vec![1.0, 8.0, 0.0]);
-            comm.send(1, 300, &xs.as_slice()[4 * 2..8 * 2]);
-            let g1 = comm.gather(0, &[0.0]).expect("root")[1].clone();
-            comm.bcast(0, vec![0.0]);
+            comm.bcast(0, vec![1.0, 8.0, 0.0]).unwrap();
+            comm.send(1, 300, &xs.as_slice()[4 * 2..8 * 2]).unwrap();
+            let g1 = comm.gather(0, &[0.0]).unwrap().expect("root")[1].clone();
+            comm.bcast(0, vec![0.0]).unwrap();
             Some((g0, g1))
         } else {
             let mut backend = RustCpuBackend;
@@ -644,17 +646,18 @@ fn fail_flagged_batch_inside_a_stream_keeps_lockstep() {
     let (core_ref, xs) = (&core, &xstar);
     let results = Cluster::run(2, move |mut comm| {
         if comm.rank() == 0 {
-            let _dp = DistributedPosterior::leader(core_ref.clone(), 4, &mut comm);
+            let _dp =
+                DistributedPosterior::leader(core_ref.clone(), 4, &mut comm).unwrap();
             // batch 0 (streamed): rank 1 expects 4 rows × Q 2 = 8 wire
             // elements; ship 3 instead
-            comm.bcast(0, vec![1.0, 8.0, 1.0]);
-            comm.send(1, 300, &[0.5; 3]);
+            comm.bcast(0, vec![1.0, 8.0, 1.0]).unwrap();
+            comm.send(1, 300, &[0.5; 3]).unwrap();
             // batch 1 issued before batch 0's gather — true stream order
-            comm.bcast(0, vec![1.0, 8.0, 0.0]);
-            comm.send(1, 300, &xs.as_slice()[4 * 2..8 * 2]);
-            let g0 = comm.gather(0, &[0.0]).expect("root")[1].clone();
-            let g1 = comm.gather(0, &[0.0]).expect("root")[1].clone();
-            comm.bcast(0, vec![0.0]);
+            comm.bcast(0, vec![1.0, 8.0, 0.0]).unwrap();
+            comm.send(1, 300, &xs.as_slice()[4 * 2..8 * 2]).unwrap();
+            let g0 = comm.gather(0, &[0.0]).unwrap().expect("root")[1].clone();
+            let g1 = comm.gather(0, &[0.0]).unwrap().expect("root")[1].clone();
+            comm.bcast(0, vec![0.0]).unwrap();
             Some((g0, g1))
         } else {
             let mut backend = RustCpuBackend;

@@ -68,6 +68,9 @@ KNOWN_OP_FAMILIES = [
     # and inverse throughput (ns per served row) under closed-loop load
     (r"frontend_seq_1row", "lower"),
     (r"frontend_load_c\d+_(p50|p99|row)", "lower"),
+    # point-to-point round trip through Comm over InMemoryTransport —
+    # the dynamic dispatch + Result plumbing of the Transport trait
+    (r"comm_transport_overhead", "lower"),
 ]
 _KNOWN_OPS = re.compile(
     "^(?:" + "|".join(rx for rx, _ in KNOWN_OP_FAMILIES) + ")$")
