@@ -667,6 +667,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n== comm transport overhead: 2-rank ping-pong (send + recv) ==");
     println!("{:>8} {:>14}", "elems", "µs/round-trip");
     {
+        use gpparallel::collectives::protocol::TAG_BENCH_PINGPONG;
         use gpparallel::collectives::Cluster;
 
         let rounds = if fast { 2_000usize } else { 20_000 };
@@ -675,18 +676,18 @@ fn main() -> anyhow::Result<()> {
                 let data = vec![1.0f64; payload];
                 if comm.rank() == 0 {
                     // warm the channel + parked-queue paths
-                    comm.send(1, 7, &data).expect("send");
-                    std::hint::black_box(comm.recv(1, 7).expect("recv"));
+                    comm.send(1, TAG_BENCH_PINGPONG, &data).expect("send");
+                    std::hint::black_box(comm.recv(1, TAG_BENCH_PINGPONG).expect("recv"));
                     let t0 = Instant::now();
                     for _ in 0..rounds {
-                        comm.send(1, 7, &data).expect("send");
-                        std::hint::black_box(comm.recv(1, 7).expect("recv"));
+                        comm.send(1, TAG_BENCH_PINGPONG, &data).expect("send");
+                        std::hint::black_box(comm.recv(1, TAG_BENCH_PINGPONG).expect("recv"));
                     }
                     t0.elapsed().as_secs_f64() / rounds as f64
                 } else {
                     for _ in 0..rounds + 1 {
-                        let msg = comm.recv(0, 7).expect("recv");
-                        comm.send(0, 7, &msg).expect("send");
+                        let msg = comm.recv(0, TAG_BENCH_PINGPONG).expect("recv");
+                        comm.send(0, TAG_BENCH_PINGPONG, &msg).expect("send");
                     }
                     0.0
                 }

@@ -25,6 +25,7 @@ use std::collections::{HashMap, HashSet, VecDeque};
 
 use anyhow::{anyhow, Result};
 
+use super::protocol::{TAG_BCAST, TAG_GATHER, TAG_REDUCE};
 use super::transport::{Delivery, InMemoryTransport, Transport};
 
 /// Which algorithm the collectives use. Selectable per-`Comm`.
@@ -51,10 +52,6 @@ pub struct Comm {
     /// parked match can *never* succeed and errors immediately.
     dead: HashSet<usize>,
 }
-
-const TAG_BCAST: u64 = u64::MAX - 1;
-const TAG_REDUCE: u64 = u64::MAX - 2;
-const TAG_GATHER: u64 = u64::MAX - 3;
 
 impl Comm {
     /// Wrap a transport (in-memory, fault-injecting, or a future
@@ -153,6 +150,29 @@ impl Comm {
             }
         }
         n
+    }
+
+    /// Blocking variant of [`drain_pending`](Comm::drain_pending): park
+    /// the calling thread until at least one delivery arrives, absorb
+    /// it, then drain whatever else is already queued. The wait parks
+    /// on the transport's blocking receive (condvar/futex under the
+    /// hood) — no spin loop, no `yield_now`, no sleep-and-poll. Same
+    /// FIFO-preserving semantics as `drain_pending`; returns the number
+    /// of messages parked by this call (hangup markers latch into the
+    /// dead set and are not counted, so `Ok(0)` is possible). Errors
+    /// only if the transport itself is torn down.
+    pub fn drain_blocking(&mut self) -> Result<usize> {
+        let mut n = 0;
+        match self.transport.recv_blocking()? {
+            Delivery::Message { src, tag, data } => {
+                self.parked.entry((src, tag)).or_default().push_back(data);
+                n += 1;
+            }
+            Delivery::Hangup(h) => {
+                self.dead.insert(h);
+            }
+        }
+        Ok(n + self.drain_pending())
     }
 
     // -----------------------------------------------------------------
@@ -385,6 +405,10 @@ impl Cluster {
     {
         Cluster::try_run_with(size, topology, f)
             .into_iter()
+            // lint: allow(no-unwrap-protocol) — deliberate panic
+            // propagation: `run_with` documents that a panicking rank
+            // aborts the launcher; callers wanting containment use
+            // `try_run_with`.
             .map(|r| r.expect("rank panicked"))
             .collect()
     }
@@ -523,11 +547,12 @@ mod tests {
     fn drain_pending_preserves_recv_order_and_sends_nothing() {
         let results = Cluster::run(2, |mut comm| {
             if comm.rank() == 0 {
-                // first wave: exactly three messages are in flight
+                // first wave: exactly three messages are in flight.
+                // `drain_blocking` parks the thread on the transport
+                // channel until each arrives — no yield_now spin.
                 let mut drained = 0;
                 while drained < 3 {
-                    drained += comm.drain_pending();
-                    std::thread::yield_now();
+                    drained += comm.drain_blocking().unwrap();
                 }
                 let before = comm.messages_sent();
                 assert_eq!(comm.drain_pending(), 0, "nothing else is in flight");
@@ -722,12 +747,23 @@ mod tests {
     #[test]
     fn barrier_synchronises() {
         for topology in [Topology::Linear, Topology::Tree] {
-            // No deadlock across repeated barriers with mixed work.
-            let results = Cluster::run_with(4, topology, |mut comm| {
-                for i in 0..5 {
-                    if comm.rank() % 2 == 0 {
-                        std::thread::sleep(std::time::Duration::from_millis(i));
+            // No deadlock across repeated barriers with mixed skew. The
+            // skew is a Condvar turnstile — each round the ranks reach
+            // the barrier strictly in rank order, parked (not sleeping)
+            // until their turn — so the stagger is deterministic instead
+            // of a wall-clock `sleep` race.
+            let gate = (std::sync::Mutex::new(0usize), std::sync::Condvar::new());
+            let gate = &gate;
+            let results = Cluster::run_with(4, topology, move |mut comm| {
+                for i in 0..5usize {
+                    let (lock, cv) = gate;
+                    let mut turn = lock.lock().unwrap();
+                    while *turn != i * 4 + comm.rank() {
+                        turn = cv.wait(turn).unwrap();
                     }
+                    *turn += 1;
+                    cv.notify_all();
+                    drop(turn);
                     comm.barrier().unwrap();
                 }
                 true

@@ -29,6 +29,7 @@
 //! ```
 
 mod comm;
+pub mod protocol;
 pub mod transport;
 
 pub use comm::{Cluster, Comm, Topology};

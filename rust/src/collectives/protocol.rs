@@ -1,0 +1,175 @@
+//! The wire-protocol registry: every point-to-point tag and broadcast
+//! verb spoken anywhere in the cluster, declared exactly once.
+//!
+//! Why a registry
+//! --------------
+//! The protocols layered on [`Comm`](super::Comm) — the training
+//! cycle's command loop, the STATS round, the streamed serve session —
+//! multiplex one transport by `(src, tag)`. A tag collision between
+//! two protocols silently cross-wires their streams: the receiver
+//! parks a message from the wrong conversation and both sides block or
+//! mis-parse. The failure is a deadlock or a junk matrix, never a type
+//! error, so the defence has to be organisational: **every tag and
+//! verb lives here**, `gpp-lint`'s `wire-registry` rule rejects raw
+//! numeric tags at `send`/`recv` call sites, and the uniqueness test
+//! at the bottom of this module rejects collisions at `cargo test`
+//! time.
+//!
+//! Layout of the space
+//! -------------------
+//! * Protocol tags are small numbers (`100`, `300`, …), grouped by
+//!   subsystem with room between groups.
+//! * Collective-internal tags ([`TAG_BCAST`], [`TAG_REDUCE`],
+//!   [`TAG_GATHER`]) sit at the very top of the `u64` range so user
+//!   protocols can never collide with them by growing upward.
+//! * [`TAG_HANGUP`] is `u64::MAX` — it never crosses the wire as a
+//!   message tag; the transport layer uses it as the sentinel for a
+//!   peer's hangup marker.
+//!
+//! Verbs (`CMD_*`, `SRV_*`) are `f64` because command headers ride the
+//! same `Vec<f64>` wire as payload data; each verb family must be
+//! internally collision-free (also asserted below).
+
+// ---------------------------------------------------------------------
+// Point-to-point tags (u64)
+// ---------------------------------------------------------------------
+
+/// Training cycle: workers upload their per-span local statistics and
+/// gradients to rank 0 under this tag (`gather_locals` / the pipelined
+/// evaluator).
+pub const TAG_LOCALS: u64 = 100;
+
+/// Serve session: rank 0 ships each worker its shard of the query
+/// block `X*` under this tag, one message per worker per batch.
+pub const TAG_XSTAR: u64 = 300;
+
+/// Micro-benchmark ping-pong tag (`benches/micro.rs`). Registered so
+/// even throwaway harness traffic cannot collide with a protocol
+/// stream when benches and protocols share a cluster.
+pub const TAG_BENCH_PINGPONG: u64 = 700;
+
+/// Collective-internal: broadcast hops of the binomial tree.
+pub const TAG_BCAST: u64 = u64::MAX - 1;
+
+/// Collective-internal: reduction partials (tree and linear).
+pub const TAG_REDUCE: u64 = u64::MAX - 2;
+
+/// Collective-internal: gather payloads sent to the root.
+pub const TAG_GATHER: u64 = u64::MAX - 3;
+
+/// Transport-internal sentinel: the tag value reserved for hangup
+/// markers propagated when a peer's transport drops. Never sent as a
+/// message tag by any protocol; reserved here so nothing else can
+/// claim it.
+pub const TAG_HANGUP: u64 = u64::MAX;
+
+// ---------------------------------------------------------------------
+// Training-cycle command verbs (f64, slot 0 of a command broadcast)
+// ---------------------------------------------------------------------
+
+/// Cluster command: tear the worker loop down cleanly.
+pub const CMD_STOP: f64 = 0.0;
+
+/// Cluster command: run one distributed bound + gradient evaluation.
+pub const CMD_EVAL: f64 = 1.0;
+
+/// Cluster command: enter a sharded serving session.
+pub const CMD_SERVE: f64 = 2.0;
+
+/// Cluster command: run one distributed statistics pass.
+pub const CMD_STATS: f64 = 3.0;
+
+// ---------------------------------------------------------------------
+// Serve-session verbs (f64, slot 0 of a serve sub-command broadcast)
+// ---------------------------------------------------------------------
+
+/// Serve sub-command: close the serving session.
+pub const SRV_DONE: f64 = 0.0;
+
+/// Serve sub-command: predict one batch (header carries row count and
+/// stream flag).
+pub const SRV_PREDICT: f64 = 1.0;
+
+/// Serve sub-command: hot-swap the posterior core on every rank.
+pub const SRV_SWAP: f64 = 2.0;
+
+/// Serve sub-command: refit hyperparameters mid-session.
+pub const SRV_REFIT: f64 = 3.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_unique(group: &str, vals: &[(&str, u64)]) {
+        for (i, (na, va)) in vals.iter().enumerate() {
+            for (nb, vb) in &vals[i + 1..] {
+                assert_ne!(va, vb, "{group}: {na} and {nb} collide on {va}");
+            }
+        }
+    }
+
+    #[test]
+    fn tags_are_unique() {
+        assert_unique(
+            "tags",
+            &[
+                ("TAG_LOCALS", TAG_LOCALS),
+                ("TAG_XSTAR", TAG_XSTAR),
+                ("TAG_BENCH_PINGPONG", TAG_BENCH_PINGPONG),
+                ("TAG_BCAST", TAG_BCAST),
+                ("TAG_REDUCE", TAG_REDUCE),
+                ("TAG_GATHER", TAG_GATHER),
+                ("TAG_HANGUP", TAG_HANGUP),
+            ],
+        );
+    }
+
+    #[test]
+    fn protocol_tags_stay_below_the_collective_range() {
+        // User protocols grow upward from small numbers; the
+        // collective/transport sentinels own the top of the range.
+        for t in [TAG_LOCALS, TAG_XSTAR, TAG_BENCH_PINGPONG] {
+            assert!(t < TAG_GATHER, "protocol tag {t} invades the reserved top range");
+        }
+    }
+
+    #[test]
+    fn verb_families_are_unique() {
+        let cmds = [
+            ("CMD_STOP", CMD_STOP),
+            ("CMD_EVAL", CMD_EVAL),
+            ("CMD_SERVE", CMD_SERVE),
+            ("CMD_STATS", CMD_STATS),
+        ];
+        let srvs = [
+            ("SRV_DONE", SRV_DONE),
+            ("SRV_PREDICT", SRV_PREDICT),
+            ("SRV_SWAP", SRV_SWAP),
+            ("SRV_REFIT", SRV_REFIT),
+        ];
+        for fam in [&cmds, &srvs] {
+            for (i, (na, va)) in fam.iter().enumerate() {
+                for (nb, vb) in &fam[i + 1..] {
+                    assert_ne!(
+                        va.to_bits(),
+                        vb.to_bits(),
+                        "{na} and {nb} collide on {va}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn verbs_survive_the_f64_wire_exactly() {
+        // Verbs are compared with == after a broadcast; they must be
+        // exactly representable and round-trip through to_bits.
+        for v in [
+            CMD_STOP, CMD_EVAL, CMD_SERVE, CMD_STATS, SRV_DONE, SRV_PREDICT,
+            SRV_SWAP, SRV_REFIT,
+        ] {
+            assert_eq!(v, v.trunc(), "verb {v} is not an integer-valued f64");
+            assert_eq!(f64::from_bits(v.to_bits()), v);
+        }
+    }
+}

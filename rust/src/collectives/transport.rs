@@ -28,10 +28,12 @@ use std::sync::Arc;
 
 use crate::data::rng::Rng64;
 
-/// Reserved tag carrying a dead-peer notification. Never exposed to
-/// protocol code: [`InMemoryTransport::recv_blocking`] translates it
-/// into [`Delivery::Hangup`].
-const TAG_HANGUP: u64 = u64::MAX;
+// The hangup sentinel lives in the wire-protocol registry
+// (`collectives::protocol`) so its value is uniqueness-checked against
+// every protocol tag. It never reaches protocol code as a tag:
+// [`InMemoryTransport::recv_blocking`] translates it into
+// [`Delivery::Hangup`].
+use super::protocol::TAG_HANGUP;
 
 /// How many subsequent sends a [`FaultKind::Delay`] fault may hold a
 /// message back before it is force-flushed (it also flushes before any
@@ -146,18 +148,20 @@ impl InMemoryTransport {
         let bytes = Arc::new(AtomicU64::new(0));
         let msgs = Arc::new(AtomicU64::new(0));
         let mut senders: Vec<Sender<Message>> = Vec::with_capacity(size);
-        let mut inboxes: Vec<Option<Receiver<Message>>> = Vec::with_capacity(size);
+        let mut inboxes: Vec<Receiver<Message>> = Vec::with_capacity(size);
         for _ in 0..size {
             let (tx, rx) = channel();
             senders.push(tx);
-            inboxes.push(Some(rx));
+            inboxes.push(rx);
         }
-        (0..size)
-            .map(|rank| InMemoryTransport {
+        inboxes
+            .into_iter()
+            .enumerate()
+            .map(|(rank, inbox)| InMemoryTransport {
                 rank,
                 size,
                 senders: senders.clone(),
-                inbox: inboxes[rank].take().unwrap(),
+                inbox,
                 bytes_sent: bytes.clone(),
                 messages_sent: msgs.clone(),
                 local_sent: 0,
@@ -187,8 +191,11 @@ impl Transport for InMemoryTransport {
             .map_err(|_| {
                 TransportError::new(format!("peer rank {dst} hung up (send failed)"))
             })?;
+        // Relaxed: pure statistics counters — monotonic fetch_adds with
+        // no other memory ordered by them; message delivery itself is
+        // ordered by the mpsc channel, not these counts.
         self.bytes_sent.fetch_add((data.len() * 8) as u64, Ordering::Relaxed);
-        self.messages_sent.fetch_add(1, Ordering::Relaxed);
+        self.messages_sent.fetch_add(1, Ordering::Relaxed); // Relaxed: statistics counter (see above)
         self.local_sent += 1;
         Ok(())
     }
@@ -231,11 +238,11 @@ impl Transport for InMemoryTransport {
     }
 
     fn bytes_sent(&self) -> u64 {
-        self.bytes_sent.load(Ordering::Relaxed)
+        self.bytes_sent.load(Ordering::Relaxed) // Relaxed: statistics snapshot, may lag in-flight sends
     }
 
     fn messages_sent(&self) -> u64 {
-        self.messages_sent.load(Ordering::Relaxed)
+        self.messages_sent.load(Ordering::Relaxed) // Relaxed: statistics snapshot, may lag in-flight sends
     }
 
     fn local_sent(&self) -> u64 {

@@ -105,13 +105,10 @@ use std::time::Instant;
 // wire protocol
 // ---------------------------------------------------------------------
 
-const CMD_EVAL: f64 = 1.0;
-const CMD_STOP: f64 = 0.0;
-/// Switch the cluster into a sharded serving session (`engine::serve`).
-const CMD_SERVE: f64 = 2.0;
-/// Run one stats-only collective round (distributed posterior rebuild).
-const CMD_STATS: f64 = 3.0;
-const TAG_LOCALS: u64 = 100;
+// Command verbs and the span-scatter tag live in the cluster-wide
+// registry (`collectives::protocol`), where uniqueness across
+// subsystems is asserted.
+use crate::collectives::protocol::{CMD_EVAL, CMD_SERVE, CMD_STATS, CMD_STOP, TAG_LOCALS};
 
 /// What the leader's command broadcast told a worker to do next.
 enum WorkerCmd {
@@ -149,6 +146,7 @@ fn grads_wire_len(m: usize, q: usize, views: usize) -> usize {
 /// failure the payload is replaced by zeros and flagged `1.0`). Both
 /// sides of the protocol — leader `eval` and worker `serve` — seal
 /// through this one helper so the wire format cannot drift between them.
+// lint: no-alloc
 fn seal_wire(wire: &mut Vec<f64>, ok: bool, len: usize) {
     if ok {
         debug_assert_eq!(wire.len(), len, "wire payload length");
@@ -203,6 +201,7 @@ struct CycleScratch {
 
 /// Refresh the per-chunk (μ, S) slices from the rank's span-local
 /// buffers (`mu_span`/`s_span` are the span's rows × Q, row-major).
+// lint: no-alloc
 fn refresh_latents(latents: &mut [(Mat, Mat)], chunks: &[ChunkData], span_start: usize,
                    q: usize, mu_span: &[f64], s_span: &[f64]) {
     for ((mu, s), chunk) in latents.iter_mut().zip(chunks) {
@@ -377,7 +376,8 @@ impl WorkerState {
         for (task, g) in tasks.iter().zip(&grads) {
             if let Some(span_start) = latent_start {
                 // accumulate local grads (chain dS -> dlogS needs S)
-                let (_, s) = task.latent().expect("variational task has latent");
+                let (_, s) = task.latent()
+                    .ok_or_else(|| anyhow!("variational task without latent"))?;
                 let off = (task.chunk.start - span_start) * self.q;
                 for i in 0..task.chunk.live * self.q {
                     dmu_span[off + i] += g.dmu.as_slice()[i];
@@ -575,7 +575,8 @@ impl DistributedEvaluator {
         let res = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
         self.timer.add(Phase::Reduce, t0.elapsed());
         res?;
-        Ok(*scratch.stats_wire.last().expect("non-empty reduce"))
+        scratch.stats_wire.last().copied()
+            .ok_or_else(|| anyhow!("empty stats reduce wire"))
     }
 
     /// Step 6/7a for one view (pipeline mode): compute the view's VJP
@@ -620,6 +621,7 @@ impl DistributedEvaluator {
 
     /// Step 7b: gather the span-local gradients (zeroed first if this
     /// rank's vjp failed, matching the synchronous protocol).
+    // lint: no-alloc
     fn gather_locals(&mut self, scratch: &mut CycleScratch, vjp_ok: bool)
                      -> Result<Option<Vec<Vec<f64>>>> {
         if self.layout.variational {
@@ -641,6 +643,7 @@ impl DistributedEvaluator {
     }
 
     /// Zero the span-local accumulators for a fresh cycle.
+    // lint: no-alloc
     fn reset_span_grads(&self, scratch: &mut CycleScratch) {
         let span_len = self.state.span.map(|s| s.len()).unwrap_or(0) * self.layout.q;
         scratch.dmu_span.clear();
@@ -712,7 +715,9 @@ impl DistributedEvaluator {
         let res = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
         self.timer.add(Phase::Reduce, t0.elapsed());
         res?;
-        Ok((*scratch.stats_wire.last().expect("non-empty reduce"), err))
+        let fails = scratch.stats_wire.last().copied()
+            .ok_or_else(|| anyhow!("empty stats reduce wire"))?;
+        Ok((fails, err))
     }
 
     /// Leader half of the stats collective, after the verb broadcast:
@@ -971,7 +976,8 @@ impl DistributedEvaluator {
         })?;
 
         if variational {
-            let sp = self.spans[0].expect("rank0 span");
+            let sp = self.spans[0]
+                .ok_or_else(|| anyhow!("variational layout without a rank-0 span"))?;
             let (lo, hi) = (sp.start * q, sp.end * q);
             refresh_latents(&mut scratch.latents, &self.state.view_chunks[0], sp.start,
                             q, &scratch.mu_all[lo..hi], &scratch.s_all[lo..hi]);
@@ -1072,7 +1078,8 @@ impl DistributedEvaluator {
             // 6/7a: view v's vjp + grads reduction
             let ok = self.vjp_reduce_view(v, &globals, &out.cts, scratch, false,
                                           &mut vjp_err)?;
-            let gfails = *scratch.grads_wire.last().expect("non-empty reduce");
+            let gfails = scratch.grads_wire.last().copied()
+                .ok_or_else(|| anyhow!("empty grads reduce wire"))?;
             if vjp_err.is_none() && (!ok || gfails > 0.0) {
                 vjp_err = Some(anyhow!("stats_vjp failed on {gfails} rank(s)"));
             }
@@ -1101,7 +1108,8 @@ impl DistributedEvaluator {
         }
         let locals = locals?;
         if variational {
-            let locals = locals.expect("root");
+            let locals = locals
+                .ok_or_else(|| anyhow!("gather returned no data at the root"))?;
             let n = self.layout.n;
             let base_mu = views * view_len;
             let base_ls = base_mu + n * q;
@@ -1163,7 +1171,8 @@ impl DistributedEvaluator {
         let res = self.comm.reduce_sum_into(0, &mut scratch.stats_wire);
         self.timer.add(Phase::Reduce, t0.elapsed());
         res?;
-        let fwd_fails = *scratch.stats_wire.last().expect("non-empty reduce");
+        let fwd_fails = scratch.stats_wire.last().copied()
+            .ok_or_else(|| anyhow!("empty stats reduce wire"))?;
 
         // 5: the indistributable core
         let t0 = Instant::now();
@@ -1263,7 +1272,8 @@ impl DistributedEvaluator {
         }
         gres?;
         let locals = locals?;
-        let vjp_fails = *scratch.grads_wire.last().expect("non-empty reduce");
+        let vjp_fails = scratch.grads_wire.last().copied()
+            .ok_or_else(|| anyhow!("empty grads reduce wire"))?;
         if vjp_fails > 0.0 {
             return Err(anyhow!("stats_vjp failed on {vjp_fails} rank(s)"));
         }
@@ -1288,7 +1298,8 @@ impl DistributedEvaluator {
             }
         }
         if variational {
-            let locals = locals.expect("root");
+            let locals = locals
+                .ok_or_else(|| anyhow!("gather returned no data at the root"))?;
             let n = self.layout.n;
             let base_mu = views * view_len;
             let base_ls = base_mu + n * q;
@@ -1741,6 +1752,11 @@ impl EvaluatorServeDriver<'_> {
     /// starts; nothing closes it mid-run).
     fn dp_and_ctx(&mut self) -> (&mut DistributedPosterior, &mut Comm, &mut dyn Backend) {
         let ev = &mut *self.ev;
+        // lint: allow(no-unwrap-protocol) — `serve_frontend` checks the
+        // session is open before constructing this driver and nothing
+        // closes it mid-run; the trait methods return only `Result`s
+        // from the serving protocol itself, so a missing session here
+        // is a local logic bug, not a recoverable wire condition.
         (ev.sharded.as_mut().expect("serving session checked open"),
          &mut ev.comm, ev.state.backends[0].as_mut())
     }

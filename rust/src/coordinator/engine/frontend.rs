@@ -70,7 +70,7 @@ use crate::metrics::{Phase, PhaseTimer};
 use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use super::serve::DistributedPosterior;
@@ -155,6 +155,33 @@ struct Shared {
     d_cols: usize,
 }
 
+/// Lock the queue, tolerating poison. A client thread that panics
+/// while holding the lock must not wedge the whole front-end: every
+/// critical section below either finishes its multi-field update
+/// before any fallible call or only reads, so the state a panicking
+/// holder leaves behind is still consistent — recover the guard
+/// instead of cascading the panic into every other client.
+fn lock_queue(m: &Mutex<QueueState>) -> MutexGuard<'_, QueueState> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`] with the same poison tolerance as [`lock_queue`].
+fn wait_queue<'a>(cv: &Condvar, g: MutexGuard<'a, QueueState>) -> MutexGuard<'a, QueueState> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait_timeout`] with the same poison tolerance as
+/// [`lock_queue`] (the timeout flag is unused: callers re-check their
+/// predicate and the deadline on wake).
+fn wait_queue_timeout<'a>(
+    cv: &Condvar,
+    g: MutexGuard<'a, QueueState>,
+    dur: Duration,
+) -> MutexGuard<'a, QueueState> {
+    let (g, _timed_out) = cv.wait_timeout(g, dur).unwrap_or_else(PoisonError::into_inner);
+    g
+}
+
 /// A cloneable client handle onto a [`ServingFrontend`]: enqueue
 /// prediction requests, apply posterior controls, read metrics, close
 /// the front-end. Safe to use from any thread.
@@ -185,14 +212,14 @@ impl FrontendHandle {
         }
         let (tx, rx) = channel();
         {
-            let mut q = sh.q.lock().unwrap();
+            let mut q = lock_queue(&sh.q);
             let mut blocked = false;
             // backpressure: wait while the queue holds rows and this
             // request would push it past capacity (an oversized request
             // is admitted alone, once the queue is empty)
             while !q.closed && q.rows > 0 && q.rows + n > sh.cfg.queue_rows {
                 blocked = true;
-                q = sh.space.wait(q).unwrap();
+                q = wait_queue(&sh.space, q);
             }
             if q.closed {
                 return Err(anyhow!("serving front-end is closed"));
@@ -235,7 +262,7 @@ impl FrontendHandle {
     /// once drained. Idempotent.
     pub fn close(&self) {
         let sh = &*self.sh;
-        let mut q = sh.q.lock().unwrap();
+        let mut q = lock_queue(&sh.q);
         q.closed = true;
         sh.arrived.notify_all();
         sh.space.notify_all();
@@ -251,7 +278,7 @@ impl FrontendHandle {
         let sh = &*self.sh;
         let (done, rx) = channel();
         {
-            let mut q = sh.q.lock().unwrap();
+            let mut q = lock_queue(&sh.q);
             if q.closed {
                 return Err(anyhow!("serving front-end is closed"));
             }
@@ -495,15 +522,15 @@ impl ServingFrontend {
     }
 
     fn control_pending(&self) -> bool {
-        !self.sh.q.lock().unwrap().control.is_empty()
+        !lock_queue(&self.sh.q).control.is_empty()
     }
 
     fn take_controls(&self) -> Vec<ControlMsg> {
-        self.sh.q.lock().unwrap().control.drain(..).collect()
+        lock_queue(&self.sh.q).control.drain(..).collect()
     }
 
     fn closed_and_idle(&self) -> bool {
-        let q = self.sh.q.lock().unwrap();
+        let q = lock_queue(&self.sh.q);
         q.closed && q.reqs.is_empty() && q.control.is_empty()
     }
 
@@ -517,7 +544,7 @@ impl ServingFrontend {
         let mut members: Vec<Request> = Vec::new();
         let rows;
         {
-            let mut q = sh.q.lock().unwrap();
+            let mut q = lock_queue(&sh.q);
             loop {
                 if !q.control.is_empty() {
                     return None; // boundary first: let the caller apply it
@@ -535,8 +562,7 @@ impl ServingFrontend {
                             return None;
                         }
                         let t0 = Instant::now();
-                        let (g, _) = sh.arrived.wait_timeout(q, deadline - now)
-                            .unwrap();
+                        let g = wait_queue_timeout(&sh.arrived, q, deadline - now);
                         timer.add(Phase::SrvEnqueueWait, t0.elapsed());
                         q = g;
                     }
@@ -545,7 +571,7 @@ impl ServingFrontend {
                             return None;
                         }
                         let t0 = Instant::now();
-                        q = sh.arrived.wait(q).unwrap();
+                        q = wait_queue(&sh.arrived, q);
                         timer.add(Phase::SrvEnqueueWait, t0.elapsed());
                     }
                 }
@@ -553,13 +579,14 @@ impl ServingFrontend {
             // take whole requests up to the size cap (the first request
             // is always taken, even when alone it exceeds the cap)
             let mut took = 0usize;
-            while let Some(r) = q.reqs.front() {
+            while let Some(r) = q.reqs.pop_front() {
                 let n = r.rows.rows();
                 if !members.is_empty() && took + n > sh.cfg.max_batch_rows {
+                    q.reqs.push_front(r);
                     break;
                 }
                 took += n;
-                members.push(q.reqs.pop_front().unwrap());
+                members.push(r);
                 if took >= sh.cfg.max_batch_rows {
                     break;
                 }
@@ -626,7 +653,7 @@ impl ServingFrontend {
     /// come.
     fn shutdown_pending(&self) {
         let sh = &*self.sh;
-        let mut q = sh.q.lock().unwrap();
+        let mut q = lock_queue(&sh.q);
         q.closed = true;
         q.rows = 0;
         for r in q.reqs.drain(..) {

@@ -81,31 +81,19 @@
 //!   SPMD world.
 
 use crate::collectives::Comm;
+// The shard tag and the serve sub-command verbs live in the
+// cluster-wide registry (`collectives::protocol`), where uniqueness
+// across subsystems is asserted. A `SRV_PREDICT` wire is
+// `[SRV_PREDICT, nt]` or `[SRV_PREDICT, nt, stream]`, where a `stream`
+// flag of 1.0 announces that the *next* sub-command broadcast (and its
+// shard sends) are already in flight — the worker may prefetch them
+// before computing this batch.
+use crate::collectives::protocol::{SRV_DONE, SRV_PREDICT, SRV_REFIT, SRV_SWAP, TAG_XSTAR};
 use crate::coordinator::backend::Backend;
 use crate::coordinator::partition::Partition;
 use crate::linalg::Mat;
 use crate::math::predict::PosteriorCore;
 use anyhow::{anyhow, Result};
-
-/// Tag for the leader → worker prediction-shard sends (disjoint from the
-/// training cycle's `TAG_LOCALS` and the collective tags).
-const TAG_XSTAR: u64 = 300;
-
-/// Serve-session sub-commands (broadcast at each batch). A `SRV_PREDICT`
-/// wire is `[SRV_PREDICT, nt]` or `[SRV_PREDICT, nt, stream]`, where a
-/// `stream` flag of 1.0 announces that the *next* sub-command broadcast
-/// (and its shard sends) are already in flight — the worker may prefetch
-/// them before computing this batch.
-const SRV_PREDICT: f64 = 1.0;
-const SRV_DONE: f64 = 0.0;
-/// Posterior hot-swap: the rest of the broadcast carries a replacement
-/// [`PosteriorCore`] wire; workers unpack it and keep serving.
-const SRV_SWAP: f64 = 2.0;
-/// Refit request (training clusters only): workers leave the serve loop
-/// for one stats-only collective round, after which the leader either
-/// follows with a [`SRV_SWAP`] broadcast (success) or resumes issuing
-/// sub-commands against the old posterior (failed refit).
-const SRV_REFIT: f64 = 3.0;
 
 /// Sanity cap on a `SRV_PREDICT` row count. The value comes off a
 /// collective wire as f64; a corrupt wire can carry NaN (`as usize`
@@ -459,6 +447,7 @@ impl DistributedPosterior {
     /// `complete_batch`): the flag makes the worker block on the next
     /// sub-command broadcast before computing this batch, so a flag with
     /// no follow-up broadcast deadlocks the cluster.
+    // lint: no-alloc
     pub(crate) fn issue_batch(&mut self, comm: &mut Comm, xstar: &Mat, stream: bool)
                               -> Result<()> {
         let nt = xstar.rows();
@@ -492,6 +481,7 @@ impl DistributedPosterior {
     /// front-end (see [`issue_batch`](DistributedPosterior::issue_batch));
     /// a batch error leaves the session usable, exactly as in
     /// `predict_stream_into`.
+    // lint: no-alloc
     pub(crate) fn complete_batch(&mut self, comm: &mut Comm, backend: &mut dyn Backend,
                                  xstar: &Mat, mean_out: &mut Mat,
                                  var_out: &mut Vec<f64>) -> Result<()> {
@@ -505,7 +495,7 @@ impl DistributedPosterior {
         comm.drain_pending();
         // leader's own shard (rank 0 always owns the first run of rows)
         let sp0 = self.partition_for(nt, ranks).worker_span(0)
-            .expect("rank 0 owns chunks when nt > 0");
+            .ok_or_else(|| anyhow!("rank 0 owns no rows in a {nt}-row batch"))?;
         let rows0 = sp0.len();
         let own = backend.predict_batch(&self.core, xstar, sp0.start, rows0,
                                         &mut mean_out.as_mut_slice()
@@ -518,7 +508,8 @@ impl DistributedPosterior {
         let scratch = &mut self.scratch;
         scratch.payload.clear();
         scratch.payload.push(if own.is_ok() { 0.0 } else { 1.0 });
-        let gathered = comm.gather(0, &scratch.payload)?.expect("root");
+        let gathered = comm.gather(0, &scratch.payload)?
+            .ok_or_else(|| anyhow!("gather returned no data at the root"))?;
         own.map_err(|e| anyhow!("rank 0 prediction failed: {e:#}"))?;
 
         // assemble worker shards into the output rows
@@ -529,7 +520,7 @@ impl DistributedPosterior {
             };
             let rows = sp.len();
             let want = rows * (d + 1) + 1;
-            if piece.len() != want || *piece.last().expect("non-empty payload") != 0.0 {
+            if piece.len() != want || piece.last() != Some(&0.0) {
                 return Err(anyhow!("prediction failed on rank {r}"));
             }
             mean_out.as_mut_slice()[sp.start * d..sp.end * d]
@@ -560,6 +551,7 @@ impl DistributedPosterior {
     /// the worker half of the stats collective and re-enters). Posterior
     /// hot-swaps (`SRV_SWAP` broadcasts) are handled internally: the
     /// replacement core takes effect for every subsequent batch.
+    // lint: no-alloc
     pub fn serve_until(&mut self, comm: &mut Comm, backend: &mut dyn Backend)
                        -> Result<ServeSignal> {
         let rank = comm.rank();
@@ -570,6 +562,7 @@ impl DistributedPosterior {
             // previous batch's compute; otherwise read the broadcast
             let cmd = match self.scratch.pending_cmd.take() {
                 Some(c) => c,
+                // lint: allow(no-alloc-hot-path) — empty receive sentinel
                 None => comm.bcast(0, Vec::new())?,
             };
             if cmd.is_empty() || cmd[0] == SRV_DONE {
@@ -655,6 +648,7 @@ impl DistributedPosterior {
             // parked: the loop top handles it after this batch, which
             // is broadcast order.
             if stream {
+                // lint: allow(no-alloc-hot-path) — empty receive sentinel
                 let next = comm.bcast(0, Vec::new())?;
                 if let Ok(Some((nt2, _))) = parse_predict(&next) {
                     if self.partition_for(nt2, ranks).worker_span(rank).is_some() {
@@ -670,7 +664,8 @@ impl DistributedPosterior {
                 None => scratch.payload.push(0.0), // no rows, success by definition
                 Some(sp) => {
                     let rows = sp.len();
-                    let msg = msg.expect("shard received above");
+                    let msg = msg
+                        .ok_or_else(|| anyhow!("shard missing for an owned span"))?;
                     if self.poisoned {
                         scratch.payload.push(1.0);
                     } else if msg.len() != rows * q {

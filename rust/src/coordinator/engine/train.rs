@@ -215,7 +215,8 @@ impl Engine {
                               -> Result<(TrainResult, Mat, Vec<f64>)> {
         let plan = self.serve_plan(xstar, rows_per_chunk, false, None)?;
         let (result, served) = self.run(RunMode::Optimize, Some(plan))?;
-        let ((mean, var), _) = served.expect("serving was requested");
+        let ((mean, var), _) = served
+            .ok_or_else(|| anyhow!("run returned no serving output"))?;
         Ok((result, mean, var))
     }
 
@@ -231,7 +232,8 @@ impl Engine {
                                      -> Result<(TrainResult, Mat, Vec<f64>)> {
         let plan = self.serve_plan(xstar, rows_per_chunk, false, Some(stream_rows))?;
         let (result, served) = self.run(RunMode::Optimize, Some(plan))?;
-        let ((mean, var), _) = served.expect("serving was requested");
+        let ((mean, var), _) = served
+            .ok_or_else(|| anyhow!("run returned no serving output"))?;
         Ok((result, mean, var))
     }
 
@@ -247,8 +249,11 @@ impl Engine {
                                -> Result<(TrainResult, (Mat, Vec<f64>), (Mat, Vec<f64>))> {
         let plan = self.serve_plan(xstar, rows_per_chunk, true, None)?;
         let (result, served) = self.run(RunMode::Optimize, Some(plan))?;
-        let (before, after) = served.expect("serving was requested");
-        Ok((result, before, after.expect("refit demo was requested")))
+        let (before, after) = served
+            .ok_or_else(|| anyhow!("run returned no serving output"))?;
+        let after = after
+            .ok_or_else(|| anyhow!("run returned no refit-demo output"))?;
+        Ok((result, before, after))
     }
 
     /// Train, then stand up the **concurrent-client serving front-end**
@@ -289,11 +294,13 @@ impl Engine {
                 Err(e) => Err(anyhow!("rank {rank}: {e:#}")),
                 Ok(mut ev) => {
                     if rank == 0 {
+                        // a poisoned slot still holds the closure: the
+                        // take below is the only critical section
                         let drive = drive_slot
                             .lock()
-                            .unwrap()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner)
                             .take()
-                            .expect("rank 0 runs the leader exactly once");
+                            .ok_or_else(|| anyhow!("leader drive closure already taken"))?;
                         self.leader_frontend(&mut ev, rows_per_chunk, &fcfg, drive).map(Some)
                     } else {
                         ev.serve().map(|_| None)
@@ -309,7 +316,7 @@ impl Engine {
         }
         results
             .remove(0)
-            .map(|o| o.expect("leader returns a result"))
+            .and_then(|o| o.ok_or_else(|| anyhow!("leader produced no result")))
     }
 
     /// Validate a serving request against the problem.
@@ -355,7 +362,7 @@ impl Engine {
         }
         results
             .remove(0)
-            .map(|o| o.expect("leader returns a result"))
+            .and_then(|o| o.ok_or_else(|| anyhow!("leader produced no result")))
     }
 
     /// Leader: drives the optimiser; each objective call runs the full
@@ -590,7 +597,8 @@ impl Engine {
         if let Some(e) = serve_err {
             return Err(e);
         }
-        let (out, report) = served.expect("serving ran: no eval or serve error");
+        let (out, report) = served
+            .ok_or_else(|| anyhow!("serving session produced no output"))?;
 
         if self.cfg.verbose {
             eprintln!("[leader] {}", ev.timer().summary());

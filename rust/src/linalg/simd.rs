@@ -98,12 +98,13 @@ static ACTIVE: AtomicU8 = AtomicU8::new(UNINIT);
 /// `GPPAR_SIMD` (`off|scalar|native`; unset or unrecognized → `Native` if
 /// AVX2+FMA are detected, else `Scalar`), then cached.
 pub fn active() -> SimdLevel {
+    // Relaxed: single-cell lazy cache — no other memory is published
+    // through this flag, and a racing first call resolves the same
+    // value, so the store is idempotent.
     match ACTIVE.load(Ordering::Relaxed) {
         UNINIT => {
             let level = resolve(std::env::var("GPPAR_SIMD").ok().as_deref());
-            // A racing first call resolves the same value, so this store
-            // is idempotent.
-            ACTIVE.store(to_u8(level), Ordering::Relaxed);
+            ACTIVE.store(to_u8(level), Ordering::Relaxed); // Relaxed: idempotent cache fill (see above)
             level
         }
         v => from_u8(v),
@@ -115,6 +116,9 @@ pub fn active() -> SimdLevel {
 /// observe the switch at an arbitrary point, which would break any
 /// bit-identity assumption mid-computation.
 pub fn set_active(level: SimdLevel) {
+    // Relaxed: a plain mode flag; the documented contract is that this
+    // runs before compute threads spawn, and thread spawn/join already
+    // provides the necessary ordering.
     ACTIVE.store(to_u8(level), Ordering::Relaxed);
 }
 
@@ -132,12 +136,15 @@ static NATIVE: AtomicU8 = AtomicU8::new(0);
 /// Whether the `Native` tier's AVX2+FMA code paths can run on this CPU
 /// (always `false` off x86_64). Cached after the first query.
 pub fn native_available() -> bool {
+    // Relaxed: single-cell detection cache; cpuid gives every thread
+    // the same answer, so a racing fill stores the same value and no
+    // other memory depends on the flag's ordering.
     match NATIVE.load(Ordering::Relaxed) {
         1 => true,
         2 => false,
         _ => {
             let ok = detect_native();
-            NATIVE.store(if ok { 1 } else { 2 }, Ordering::Relaxed);
+            NATIVE.store(if ok { 1 } else { 2 }, Ordering::Relaxed); // Relaxed: idempotent cache fill (see above)
             ok
         }
     }
@@ -145,6 +152,12 @@ pub fn native_available() -> bool {
 
 #[cfg(target_arch = "x86_64")]
 fn detect_native() -> bool {
+    // Miri interprets MIR and has no cpuid or vector intrinsics: report
+    // the native tier as absent so every dispatch falls back to the
+    // portable chunked-scalar bodies under `cargo miri test`.
+    if cfg!(miri) {
+        return false;
+    }
     is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
 }
 
@@ -384,6 +397,11 @@ mod avx {
 
     /// Horizontal sum in the fixed tree order (lane0+lane2)+(lane1+lane3),
     /// mirrored exactly by the chunked-scalar combine.
+    // SAFETY: `unsafe` solely because of `#[target_feature]` — the body
+    // touches no raw pointers, only register-to-register AVX/SSE2
+    // intrinsics. Callers must ensure AVX2 is available; every caller
+    // in this module carries that same precondition and is gated behind
+    // `native_available()`.
     #[target_feature(enable = "avx2")]
     unsafe fn hsum(v: __m256d) -> f64 {
         let lo = _mm256_castpd256_pd128(v); // [lane0, lane1]
@@ -393,6 +411,12 @@ mod avx {
         _mm_cvtsd_f64(_mm_add_sd(pair, swapped))
     }
 
+    // SAFETY preconditions (caller): AVX2+FMA must be present — every
+    // call site dispatches through `native_available()`. Pointer
+    // validity is internal: `_mm256_loadu_pd(a.as_ptr().add(i))` reads
+    // `[i, i+4)` only while `i + 4 <= n` with `n == a.len() == b.len()`
+    // (asserted in `dot_at`), so every load is in-bounds; `loadu` has
+    // no alignment requirement.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
         let n = a.len();
@@ -412,6 +436,12 @@ mod avx {
         s
     }
 
+    // SAFETY preconditions (caller): AVX2+FMA must be present — every
+    // call site dispatches through `native_available()`. Pointer
+    // validity is internal: loads/stores touch `[i, i+4)` only while
+    // `i + 4 <= n` with `n == y.len() == x.len()` (asserted in
+    // `axpy_at`); the store goes through `y.as_mut_ptr()`, the one
+    // exclusive borrow, and `loadu`/`storeu` are alignment-free.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn axpy(y: &mut [f64], c: f64, x: &[f64]) {
         let n = y.len();
@@ -429,6 +459,11 @@ mod avx {
         }
     }
 
+    // SAFETY preconditions (caller): AVX2+FMA must be present — every
+    // call site dispatches through `native_available()`. Pointer
+    // validity is internal: all three slices are length-checked equal
+    // in `wsq_diff_at` and each unaligned load reads `[i, i+4)` only
+    // while `i + 4 <= n`.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn wsq_diff(w: &[f64], a: &[f64], b: &[f64]) -> f64 {
         let n = w.len();
@@ -450,6 +485,11 @@ mod avx {
         s
     }
 
+    // SAFETY preconditions (caller): AVX2+FMA must be present — every
+    // call site dispatches through `native_available()`. Pointer
+    // validity is internal: all four slices are length-checked equal in
+    // `wsq_mid_diff_at` and each unaligned load reads `[i, i+4)` only
+    // while `i + 4 <= n`.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn wsq_mid_diff(w: &[f64], m: &[f64], a: &[f64], b: &[f64]) -> f64 {
         let n = w.len();

@@ -36,6 +36,9 @@ pub fn thread_cpu_time() -> f64 {
     }
     const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
     let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: plain FFI into libc's clock_gettime with a valid clock id
+    // and a pointer to a live, correctly-laid-out (repr(C)) Timespec on
+    // this stack frame; the call writes only through that pointer.
     let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
     debug_assert_eq!(rc, 0);
     ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9

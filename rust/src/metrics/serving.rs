@@ -44,19 +44,25 @@ impl Default for LatencyHistogram {
     }
 }
 
+// Every atomic in this module uses `Ordering::Relaxed` for the same
+// reason: these are pure statistics. Each cell is an independent
+// monotonic counter (or a last-write-wins gauge); nothing synchronises
+// *through* them, and readers explicitly tolerate a slightly-skewed
+// cross-cell view ("consistent-enough snapshot" in the docs above). The
+// per-site comments below say which flavour each one is.
 impl LatencyHistogram {
     /// Record one latency observation.
     pub fn record(&self, d: Duration) {
         let ns = d.as_nanos().min(u64::MAX as u128) as u64;
         let idx = (63 - ns.max(1).leading_zeros()) as usize;
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed); // relaxed: independent stat counter
+        self.count.fetch_add(1, Ordering::Relaxed); // relaxed: independent stat counter
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed); // relaxed: independent stat counter
     }
 
     /// Observations recorded so far.
     pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
+        self.count.load(Ordering::Relaxed) // relaxed: stat snapshot read
     }
 
     /// Mean latency in nanoseconds (0 when empty).
@@ -65,7 +71,7 @@ impl LatencyHistogram {
         if n == 0 {
             return 0.0;
         }
-        self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+        self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64 // relaxed: stat snapshot read
     }
 
     /// The `q`-quantile latency in nanoseconds (`q` in `[0, 1]`),
@@ -80,7 +86,7 @@ impl LatencyHistogram {
         let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
         let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            let c = b.load(Ordering::Relaxed);
+            let c = b.load(Ordering::Relaxed); // relaxed: stat snapshot read
             if c == 0 {
                 continue;
             }
@@ -144,28 +150,28 @@ impl ServingMetrics {
     /// A request entered the queue; `depth_rows` is the queue depth (in
     /// rows) right after the push.
     pub fn note_enqueued(&self, depth_rows: usize) {
-        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(1, Ordering::Relaxed); // relaxed: independent stat counter
         self.set_queue_depth(depth_rows);
     }
 
     /// A request was answered without touching the queue (the empty
     /// request fast path): counted, no depth update.
     pub fn note_unqueued_request(&self) {
-        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(1, Ordering::Relaxed); // relaxed: independent stat counter
     }
 
     /// An enqueue had to block on backpressure for `waited`.
     pub fn note_blocked(&self, waited: Duration) {
-        self.enqueue_blocked.fetch_add(1, Ordering::Relaxed);
+        self.enqueue_blocked.fetch_add(1, Ordering::Relaxed); // relaxed: independent stat counter
         self.enqueue_blocked_ns
-            .fetch_add(waited.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+            .fetch_add(waited.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed); // relaxed: independent stat counter
     }
 
     /// The batcher closed one micro-batch of `rows` rows; `depth_rows`
     /// is the queue depth right after the batch was taken.
     pub fn note_batch(&self, rows: usize, depth_rows: usize) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batch_rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed); // relaxed: independent stat counter
+        self.batch_rows.fetch_add(rows as u64, Ordering::Relaxed); // relaxed: independent stat counter
         self.set_queue_depth(depth_rows);
     }
 
@@ -173,18 +179,18 @@ impl ServingMetrics {
     /// its row count and `latency` its enqueue-to-complete time.
     pub fn note_finished(&self, ok: bool, rows: usize, latency: Duration) {
         if ok {
-            self.completed.fetch_add(1, Ordering::Relaxed);
-            self.rows_done.fetch_add(rows as u64, Ordering::Relaxed);
+            self.completed.fetch_add(1, Ordering::Relaxed); // relaxed: independent stat counter
+            self.rows_done.fetch_add(rows as u64, Ordering::Relaxed); // relaxed: independent stat counter
         } else {
-            self.failed.fetch_add(1, Ordering::Relaxed);
+            self.failed.fetch_add(1, Ordering::Relaxed); // relaxed: independent stat counter
         }
         self.latency.record(latency);
     }
 
     fn set_queue_depth(&self, depth_rows: usize) {
         let d = depth_rows as u64;
-        self.queue_rows.store(d, Ordering::Relaxed);
-        self.queue_rows_max.fetch_max(d, Ordering::Relaxed);
+        self.queue_rows.store(d, Ordering::Relaxed); // relaxed: last-write-wins gauge
+        self.queue_rows_max.fetch_max(d, Ordering::Relaxed); // relaxed: monotonic high-water mark
     }
 
     /// Point-in-time read with derived rates. `comm` carries the
@@ -193,15 +199,18 @@ impl ServingMetrics {
     /// transport.
     pub fn snapshot(&self, comm: Option<(u64, u64)>) -> ServingSnapshot {
         let elapsed = self.start.elapsed().as_secs_f64().max(1e-9);
-        let batches = self.batches.load(Ordering::Relaxed);
-        let batch_rows = self.batch_rows.load(Ordering::Relaxed);
-        let rows_done = self.rows_done.load(Ordering::Relaxed);
+        // relaxed: all loads below are stat snapshot reads — the
+        // snapshot is documented as consistent-enough, not atomic
+        // across cells.
+        let batches = self.batches.load(Ordering::Relaxed); // relaxed: stat snapshot read
+        let batch_rows = self.batch_rows.load(Ordering::Relaxed); // relaxed: stat snapshot read
+        let rows_done = self.rows_done.load(Ordering::Relaxed); // relaxed: stat snapshot read
         let (comm_bytes, comm_messages) = comm.unwrap_or((0, 0));
         ServingSnapshot {
             elapsed_sec: elapsed,
-            requests: self.requests.load(Ordering::Relaxed),
-            completed: self.completed.load(Ordering::Relaxed),
-            failed: self.failed.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed), // relaxed: stat snapshot read
+            completed: self.completed.load(Ordering::Relaxed), // relaxed: stat snapshot read
+            failed: self.failed.load(Ordering::Relaxed), // relaxed: stat snapshot read
             rows: rows_done,
             rows_per_sec: rows_done as f64 / elapsed,
             batches,
@@ -210,10 +219,10 @@ impl ServingMetrics {
             } else {
                 batch_rows as f64 / (batches * self.max_batch_rows) as f64
             },
-            queue_rows: self.queue_rows.load(Ordering::Relaxed),
-            queue_rows_max: self.queue_rows_max.load(Ordering::Relaxed),
-            enqueue_blocked: self.enqueue_blocked.load(Ordering::Relaxed),
-            enqueue_blocked_sec: self.enqueue_blocked_ns.load(Ordering::Relaxed) as f64
+            queue_rows: self.queue_rows.load(Ordering::Relaxed), // relaxed: stat snapshot read
+            queue_rows_max: self.queue_rows_max.load(Ordering::Relaxed), // relaxed: stat snapshot read
+            enqueue_blocked: self.enqueue_blocked.load(Ordering::Relaxed), // relaxed: stat snapshot read
+            enqueue_blocked_sec: self.enqueue_blocked_ns.load(Ordering::Relaxed) as f64 // relaxed: stat snapshot read
                 * 1e-9,
             latency_mean_us: self.latency.mean_ns() * 1e-3,
             latency_p50_us: self.latency.quantile_ns(0.50) * 1e-3,

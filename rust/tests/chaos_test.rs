@@ -27,6 +27,11 @@
 //! clean error (top-level breaches), and the session must still serve a
 //! real batch bit-identically afterwards.
 
+// The sweep spins up thousands of multi-threaded clusters with
+// wall-clock watchdogs — far past Miri's budget. The transport and
+// collective layers get their Miri coverage from the lib unit tests.
+#![cfg(not(miri))]
+
 use std::time::Duration;
 
 use gpparallel::collectives::{Cluster, Comm, FaultKind, FaultPlan, FaultyTransport,
@@ -287,18 +292,11 @@ fn collectives_vs_linear_counts_and_delay_immunity() {
 // satellite: structured wire fuzzers
 // ---------------------------------------------------------------------
 
-// The serve sub-command vocabulary (crate-private constants mirrored
-// here; the serve-wire tests in serve_test.rs use the same literals).
-const SRV_PREDICT: f64 = 1.0;
-const SRV_SWAP: f64 = 2.0;
-const SRV_REFIT: f64 = 3.0;
-const TAG_XSTAR: u64 = 300;
-
-// Top-level cluster command verbs (crate-private constants mirrored).
-const CMD_STOP: f64 = 0.0;
-const CMD_EVAL: f64 = 1.0;
-const CMD_SERVE: f64 = 2.0;
-const CMD_STATS: f64 = 3.0;
+// The serve sub-command vocabulary and top-level cluster command verbs
+// come from the cluster-wide registry, so a renumbering there cannot
+// silently diverge from what these fuzzers put on the wire.
+use gpparallel::collectives::protocol::{CMD_EVAL, CMD_SERVE, CMD_STATS, CMD_STOP,
+                                        SRV_PREDICT, SRV_REFIT, SRV_SWAP, TAG_XSTAR};
 
 fn fuzz_core(seed: u64) -> PosteriorCore {
     let (n, m, q, d) = (20usize, 5usize, 2usize, 2usize);

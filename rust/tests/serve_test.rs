@@ -30,6 +30,7 @@
 //! 7. streamed and sequential `Engine`-level serving agree bit for bit
 //!    (`train_then_predict_stream` vs `train_then_predict`).
 
+use gpparallel::collectives::protocol::TAG_XSTAR;
 use gpparallel::collectives::Cluster;
 use gpparallel::baselines::DenseGp;
 use gpparallel::config::BackendKind;
@@ -462,7 +463,7 @@ fn hot_swap_matches_fresh_session_at_new_params() {
 /// gather + a clean worker error, not a `Mat::from_vec` panic or a
 /// silently wrong shard. The leader half of the batch protocol is
 /// hand-rolled so a short wire can be injected (sub-command 1.0 =
-/// PREDICT, tag 300 = the X* shard channel).
+/// PREDICT, `TAG_XSTAR` = the X* shard channel).
 #[test]
 fn malformed_shard_wire_is_a_clean_error() {
     let core = toy_core(13, 40, 6, 2, 2);
@@ -474,7 +475,7 @@ fn malformed_shard_wire_is_a_clean_error() {
             // announce an 8-row batch: rank 1 owns rows 4..8 and expects
             // 4 rows × Q=2 = 8 wire elements; ship 3 instead
             comm.bcast(0, vec![1.0, 8.0]).unwrap();
-            comm.send(1, 300, &[0.5; 3]).unwrap();
+            comm.send(1, TAG_XSTAR, &[0.5; 3]).unwrap();
             let gathered = comm.gather(0, &[0.0]).unwrap().expect("root");
             dp.finish(&mut comm).unwrap();
             Some(gathered[1].clone())
@@ -577,7 +578,7 @@ fn streamed_serving_matches_sequential_ranks_1_to_9() {
 /// later one — broadcast order — even though the worker prefetches it
 /// before computing the earlier batch. The leader half is hand-rolled
 /// so the exact interleaving can be pinned (sub-command 1.0 = PREDICT
-/// with trailing stream flag, 2.0 = SWAP, tag 300 = the X* shard
+/// with trailing stream flag, 2.0 = SWAP, `TAG_XSTAR` = the X* shard
 /// channel).
 #[test]
 fn mid_stream_hot_swap_applies_from_the_next_batch() {
@@ -600,7 +601,7 @@ fn mid_stream_hot_swap_applies_from_the_next_batch() {
                 DistributedPosterior::leader(ca.clone(), 4, &mut comm).unwrap();
             // batch 0, stream flag set: the next announcement is in flight
             comm.bcast(0, vec![1.0, 8.0, 1.0]).unwrap();
-            comm.send(1, 300, &xs.as_slice()[4 * 2..8 * 2]).unwrap();
+            comm.send(1, TAG_XSTAR, &xs.as_slice()[4 * 2..8 * 2]).unwrap();
             // the swap lands between the two streamed announcements
             let mut swap = vec![2.0];
             cb.pack_into(&mut swap);
@@ -608,7 +609,7 @@ fn mid_stream_hot_swap_applies_from_the_next_batch() {
             let g0 = comm.gather(0, &[0.0]).unwrap().expect("root")[1].clone();
             // batch 1, the stream's tail
             comm.bcast(0, vec![1.0, 8.0, 0.0]).unwrap();
-            comm.send(1, 300, &xs.as_slice()[4 * 2..8 * 2]).unwrap();
+            comm.send(1, TAG_XSTAR, &xs.as_slice()[4 * 2..8 * 2]).unwrap();
             let g1 = comm.gather(0, &[0.0]).unwrap().expect("root")[1].clone();
             comm.bcast(0, vec![0.0]).unwrap();
             Some((g0, g1))
@@ -651,10 +652,10 @@ fn fail_flagged_batch_inside_a_stream_keeps_lockstep() {
             // batch 0 (streamed): rank 1 expects 4 rows × Q 2 = 8 wire
             // elements; ship 3 instead
             comm.bcast(0, vec![1.0, 8.0, 1.0]).unwrap();
-            comm.send(1, 300, &[0.5; 3]).unwrap();
+            comm.send(1, TAG_XSTAR, &[0.5; 3]).unwrap();
             // batch 1 issued before batch 0's gather — true stream order
             comm.bcast(0, vec![1.0, 8.0, 0.0]).unwrap();
-            comm.send(1, 300, &xs.as_slice()[4 * 2..8 * 2]).unwrap();
+            comm.send(1, TAG_XSTAR, &xs.as_slice()[4 * 2..8 * 2]).unwrap();
             let g0 = comm.gather(0, &[0.0]).unwrap().expect("root")[1].clone();
             let g1 = comm.gather(0, &[0.0]).unwrap().expect("root")[1].clone();
             comm.bcast(0, vec![0.0]).unwrap();

@@ -16,6 +16,13 @@
 //! tests on parallel threads, and these steps mutate the process-global
 //! level. Sequencing inside a single test is the only race-free option.
 
+// Miri cannot execute the AVX2 intrinsics this binary exists to
+// exercise (`detect_native` reports false under Miri, making every
+// assertion here vacuous), and the full train/predict round-trips are
+// far past its budget. The scalar tiers get their Miri coverage from
+// the lib unit tests.
+#![cfg(not(miri))]
+
 use gpparallel::config::BackendKind;
 use gpparallel::coordinator::{Engine, EngineConfig, OptChoice};
 use gpparallel::data::synthetic::{generate, SyntheticSpec};

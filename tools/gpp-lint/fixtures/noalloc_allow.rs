@@ -1,0 +1,10 @@
+// Fixture: one audited allocation inside a marked body, silenced by the
+// escape hatch.
+impl Scratch {
+    // lint: no-alloc
+    fn drain(&mut self, comm: &mut Comm) -> Result<()> {
+        // lint: allow(no-alloc-hot-path) — empty sentinel, never grows.
+        comm.bcast(0, Vec::new())?;
+        Ok(())
+    }
+}

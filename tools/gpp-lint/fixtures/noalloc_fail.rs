@@ -1,0 +1,14 @@
+// Fixture: allocation tokens inside a marked body — two diagnostics.
+// The unmarked function below the body allocates freely.
+impl Scratch {
+    // lint: no-alloc
+    fn seal(&mut self, xs: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        out.extend_from_slice(xs);
+        out.to_vec()
+    }
+
+    fn cold(&self) -> Vec<f64> {
+        vec![0.0; 4]
+    }
+}

@@ -1,0 +1,13 @@
+// Fixture: a marked body that only reuses scratch storage — clean.
+impl Scratch {
+    // lint: no-alloc
+    fn seal(&mut self, xs: &[f64]) {
+        self.wire.clear();
+        self.wire.extend_from_slice(xs);
+        self.wire.resize(xs.len() + 1, 0.0);
+    }
+
+    fn cold(&self) -> Vec<f64> {
+        vec![0.0; 4]
+    }
+}

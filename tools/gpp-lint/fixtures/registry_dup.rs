@@ -1,0 +1,8 @@
+// Fixture: one duplicated tag value and one duplicated verb value
+// within the same prefix group — two diagnostics. SRV_Z reusing 1.0 is
+// fine (different prefix group from CMD_*).
+pub const TAG_A: u64 = 7;
+pub const TAG_B: u64 = 7;
+pub const CMD_X: f64 = 1.0;
+pub const CMD_Y: f64 = 1.0;
+pub const SRV_Z: f64 = 1.0;

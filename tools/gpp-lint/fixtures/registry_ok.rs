@@ -1,0 +1,9 @@
+// Fixture: a miniature protocol registry with unique tag values and
+// verb values unique within each prefix group (CMD_ vs SRV_ ride
+// different wire contexts, so 0.0 may appear once in each).
+pub const TAG_A: u64 = 100;
+pub const TAG_B: u64 = u64::MAX - 1;
+pub const TAG_C: u64 = u64::MAX;
+pub const CMD_STOP: f64 = 0.0;
+pub const CMD_GO: f64 = 1.0;
+pub const SRV_DONE: f64 = 0.0;

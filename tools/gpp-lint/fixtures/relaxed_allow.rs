@@ -1,0 +1,8 @@
+// Fixture: the escape hatch silences the Relaxed rule at one site.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) {
+    // lint: allow(relaxed-ordering-justified) — fixture exercising the
+    // escape hatch.
+    c.fetch_add(1, Ordering::Relaxed);
+}

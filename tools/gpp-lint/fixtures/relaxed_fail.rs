@@ -1,0 +1,6 @@
+// Fixture: a Relaxed atomic with no justification — one diagnostic.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}

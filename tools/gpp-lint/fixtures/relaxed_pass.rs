@@ -1,0 +1,14 @@
+// Fixture: justified Relaxed uses — trailing comment, preceding block,
+// and a `use` import line — all clean.
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::atomic::AtomicU64;
+
+pub fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Relaxed); // Relaxed: statistics counter, no ordering
+}
+
+pub fn read(c: &AtomicU64) -> u64 {
+    // Relaxed: monotone snapshot for reporting; nothing synchronises
+    // with this load.
+    c.load(Relaxed)
+}

@@ -1,0 +1,6 @@
+// Fixture: the escape hatch silences the rule at one audited site.
+pub fn read_first(a: &[f64]) -> f64 {
+    // lint: allow(unsafe-safety) — fixture exercising the escape hatch;
+    // a real site would carry the audit trail here instead.
+    unsafe { *a.get_unchecked(0) }
+}

@@ -1,0 +1,8 @@
+// Fixture: an `unsafe` block with no SAFETY comment — must be flagged.
+pub fn dot_unchecked(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..a.len().min(b.len()) {
+        acc += unsafe { *a.get_unchecked(i) * *b.get_unchecked(i) };
+    }
+    acc
+}

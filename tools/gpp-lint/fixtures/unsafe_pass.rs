@@ -1,0 +1,14 @@
+// Fixture: SAFETY comments in both sanctioned positions — preceding
+// block (attributes skipped) and same-line — must pass.
+
+// SAFETY preconditions (caller): `a` and `b` are the same length and the
+// host supports AVX2 (checked by the dispatcher).
+#[inline]
+pub unsafe fn dot_avx(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        // SAFETY: i < a.len() == b.len() by the loop bound above.
+        acc += unsafe { *a.get_unchecked(i) * *b.get_unchecked(i) };
+    }
+    acc
+}

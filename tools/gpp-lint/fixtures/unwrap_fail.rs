@@ -1,0 +1,9 @@
+// Fixture: unwrap/expect in non-test code — two diagnostics when the
+// file sits in a protocol layer, none elsewhere.
+pub fn tail(wire: &[f64]) -> f64 {
+    *wire.last().unwrap()
+}
+
+pub fn must(map: &std::collections::BTreeMap<u64, f64>, k: u64) -> f64 {
+    *map.get(&k).expect("tag present")
+}

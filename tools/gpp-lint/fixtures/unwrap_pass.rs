@@ -1,0 +1,22 @@
+// Fixture: the sanctioned alternatives — fallible plumbing with
+// `ok_or_else` + `?`, the poison-tolerant lock path, and unwraps inside
+// a `#[cfg(test)]` module — all clean.
+pub fn tail(wire: &[f64]) -> Result<f64> {
+    wire.last().copied().ok_or_else(|| anyhow!("empty reduce wire"))
+}
+
+pub fn take(slot: &std::sync::Mutex<Option<f64>>) -> Result<f64> {
+    slot.lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+        .take()
+        .ok_or_else(|| anyhow!("slot already taken"))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_here() {
+        let v = vec![1.0];
+        assert_eq!(*v.last().unwrap(), 1.0);
+    }
+}

@@ -1,0 +1,7 @@
+// Fixture: the escape hatch silences the raw-tag rule at one site.
+pub fn probe(comm: &mut Comm) -> Result<()> {
+    // lint: allow(wire-registry) — fixture exercising the escape hatch;
+    // a probe tag outside the registered vocabulary, documented here.
+    comm.send(1, 999, &[])?;
+    Ok(())
+}

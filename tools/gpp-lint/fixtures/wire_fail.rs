@@ -1,0 +1,9 @@
+// Fixture: raw numeric tags at send/recv sites and a wire constant
+// declared outside the registry — three diagnostics.
+pub const TAG_ROGUE: u64 = 9; // declared outside collectives::protocol
+
+pub fn ping(comm: &mut Comm) -> Result<()> {
+    comm.send(1, 300, &[1.0])?;
+    let _ = comm.recv(1, 300)?;
+    Ok(())
+}

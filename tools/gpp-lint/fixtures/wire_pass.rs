@@ -1,0 +1,17 @@
+// Fixture: named tags from the registry, a single-argument mpsc send
+// (no wire tag to check, even with a nested comma), and a call spanning
+// lines — all clean.
+use crate::collectives::protocol::TAG_XSTAR;
+
+pub fn ping(comm: &mut Comm) -> Result<()> {
+    comm.send(1, TAG_XSTAR, &[1.0])?;
+    let _ = comm.recv(
+        1,
+        TAG_XSTAR,
+    )?;
+    Ok(())
+}
+
+pub fn forward(tx: &std::sync::mpsc::Sender<(usize, f64)>) {
+    let _ = tx.send(pack(3, 0.5));
+}

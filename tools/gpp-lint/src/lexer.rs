@@ -1,0 +1,310 @@
+//! A lightweight, line-oriented Rust scanner.
+//!
+//! The linter does not need a parser: every rule it enforces is a
+//! *lexical* invariant (a token that must or must not appear, a comment
+//! that must accompany it). What it does need is to never be fooled by
+//! comments and string literals — `"send(1, 42)"` inside a doc string is
+//! not a wire call, and `// unsafe` in prose is not an unsafe block. This
+//! module splits a source file into per-line `{code, comment}` halves
+//! with string/char contents elided from the code half, and tracks
+//! `#[cfg(test)]`-gated regions by brace depth.
+
+/// One physical source line, split into its code and comment halves.
+///
+/// String and char literal *contents* are stripped from `code` (the
+/// delimiting quotes are kept, collapsed to `""`), so substring searches
+/// over `code` cannot match inside a literal. All comment text on the
+/// line — `//`, `///`, `/* .. */`, including the interior lines of a
+/// multi-line block comment — lands in `comment`.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code text with comments removed and literal contents elided.
+    pub code: String,
+    /// Concatenated comment text found on this line.
+    pub comment: String,
+}
+
+/// Scanner state that survives a newline (multi-line constructs).
+#[derive(Clone, Copy)]
+enum State {
+    /// Ordinary code.
+    Normal,
+    /// Inside `//` — terminated by the newline.
+    LineComment,
+    /// Inside `/* .. */`, with nesting depth (Rust block comments nest).
+    Block(usize),
+    /// Inside a `"` string (escapes honoured; may span lines).
+    Str,
+    /// Inside a raw string `r##" .. "##` with the given hash count.
+    RawStr(usize),
+}
+
+/// True if `code` currently ends in an identifier character — used to
+/// tell `r"` / `b"` literal prefixes apart from identifiers that merely
+/// end in `r` or `b` (e.g. `var"` cannot occur, but `ptr` followed by a
+/// separate token can).
+fn prev_is_ident(code: &str) -> bool {
+    code.chars()
+        .next_back()
+        .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// If `chars[i..]` starts a raw-string opener (`r"`, `r#"`, ...; `i`
+/// points at the `r`), return the hash count.
+fn raw_opener(chars: &[char], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (chars.get(j) == Some(&'"')).then_some(hashes)
+}
+
+/// Split `src` into per-line code/comment halves.
+pub fn lex(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut st = State::Normal;
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(st, State::LineComment) {
+                st = State::Normal;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            State::Normal => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    st = State::LineComment;
+                    cur.code.push(' ');
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = State::Block(1);
+                    cur.code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = State::Str;
+                    i += 1;
+                } else if c == 'r' && !prev_is_ident(&cur.code) && raw_opener(&chars, i).is_some() {
+                    let h = raw_opener(&chars, i).unwrap();
+                    cur.code.push('"');
+                    st = State::RawStr(h);
+                    i += 1 + h + 1;
+                } else if c == 'b' && !prev_is_ident(&cur.code) {
+                    // Byte-literal prefixes: b"..", br".." / br#"..", b'x'.
+                    if chars.get(i + 1) == Some(&'"') {
+                        cur.code.push('"');
+                        st = State::Str;
+                        i += 2;
+                    } else if chars.get(i + 1) == Some(&'r') && raw_opener(&chars, i + 1).is_some()
+                    {
+                        let h = raw_opener(&chars, i + 1).unwrap();
+                        cur.code.push('"');
+                        st = State::RawStr(h);
+                        i += 2 + h + 1;
+                    } else if chars.get(i + 1) == Some(&'\'') {
+                        i = skip_char_literal(&chars, i + 1);
+                    } else {
+                        cur.code.push('b');
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Lifetime (`'a`, `'static`) vs char literal (`'x'`,
+                    // `'\n'`): after the quote, an identifier-start char
+                    // NOT followed by a closing quote is a lifetime.
+                    let c1 = chars.get(i + 1).copied();
+                    let c2 = chars.get(i + 2).copied();
+                    let is_lifetime = c1
+                        .is_some_and(|x| x.is_alphabetic() || x == '_')
+                        && c2 != Some('\'');
+                    if is_lifetime {
+                        cur.code.push('\'');
+                        i += 1;
+                    } else {
+                        i = skip_char_literal(&chars, i);
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::Block(d) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = State::Block(d + 1);
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    st = if d == 1 { State::Normal } else { State::Block(d - 1) };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // Keep a trailing line-continuation backslash from
+                    // swallowing the newline (line accounting must hold).
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = State::Normal;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(h) => {
+                if c == '"' && chars[i + 1..].iter().take(h).filter(|&&x| x == '#').count() == h {
+                    cur.code.push('"');
+                    st = State::Normal;
+                    i += 1 + h;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// Skip a char literal starting at the opening `'` at `chars[i]`; returns
+/// the index just past the closing quote. Nothing is emitted to the code
+/// half — no rule inspects char contents.
+fn skip_char_literal(chars: &[char], i: usize) -> usize {
+    if chars.get(i + 1) == Some(&'\\') {
+        // Escaped: '\n', '\'', '\u{1F600}', ... — skip the escape head,
+        // then scan to the closing quote.
+        let mut j = i + 3;
+        while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+            j += 1;
+        }
+        j + 1
+    } else {
+        // Plain 'x' — one payload char (possibly multi-byte) + quote.
+        i + 3
+    }
+}
+
+/// Mark every line that falls inside a `#[cfg(test)]`-gated item body.
+///
+/// The scan arms on the attribute token and claims the region from the
+/// next opening brace to its match (by depth). A `;` while armed — an
+/// out-of-line `#[cfg(test)] mod tests;` — disarms without a region.
+/// Nested `#[cfg(test)]` regions collapse into the enclosing one.
+pub fn test_regions(lines: &[Line]) -> Vec<bool> {
+    const ATTR: &str = "#[cfg(test)]";
+    let mut region = vec![false; lines.len()];
+    let mut depth: i64 = 0;
+    let mut armed = false;
+    let mut open_at: Vec<i64> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let arm_from = line.code.find(ATTR).map(|p| p + ATTR.len());
+        let mut in_region_here = !open_at.is_empty();
+        for (pos, c) in line.code.char_indices() {
+            if arm_from == Some(pos) {
+                armed = true;
+            }
+            match c {
+                '{' => {
+                    if armed {
+                        open_at.push(depth);
+                        armed = false;
+                        in_region_here = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if open_at.last() == Some(&depth) {
+                        open_at.pop();
+                    }
+                }
+                ';' => armed = false,
+                _ => {}
+            }
+        }
+        if arm_from.is_some_and(|p| p >= line.code.len()) {
+            armed = true;
+        }
+        region[idx] = in_region_here || !open_at.is_empty();
+    }
+    region
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_stripped_from_code() {
+        let lines = lex("let x = 1; // unsafe in prose\n/* unsafe */ let y = 2;\n");
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[0].comment.contains("unsafe in prose"));
+        assert!(!lines[1].code.contains("unsafe"));
+        assert!(lines[1].code.contains("let y = 2;"));
+    }
+
+    #[test]
+    fn string_contents_are_elided() {
+        let lines = lex("let s = \".send(1, 42)\";\nlet r = r#\"recv(0, 7)\"#;\n");
+        assert!(!lines[0].code.contains("send"));
+        assert!(!lines[1].code.contains("recv"));
+        assert!(lines[0].code.contains("let s ="));
+    }
+
+    #[test]
+    fn multiline_string_spans_lines() {
+        let lines = lex("let s = \"first\nsecond .unwrap() line\";\nlet t = 3;\n");
+        assert_eq!(lines.len(), 3);
+        assert!(!lines[1].code.contains("unwrap"));
+        assert!(lines[2].code.contains("let t = 3;"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lines = lex("fn f<'a>(x: &'a str) -> &'a str { x }\nlet c = 'x';\nlet q = '\\'';\n");
+        assert!(lines[0].code.contains("fn f<'a>"));
+        // The char literal payloads are gone but the line structure holds.
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].code.contains("let c ="));
+        assert!(lines[2].code.contains("let q ="));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lines = lex("/* outer /* inner */ still comment */ let z = 1;\n");
+        assert!(lines[0].code.contains("let z = 1;"));
+        assert!(!lines[0].code.contains("inner"));
+    }
+
+    #[test]
+    fn test_region_tracking() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let lines = lex(src);
+        let region = test_regions(&lines);
+        assert_eq!(region, vec![false, false, true, true, true, false]);
+    }
+
+    #[test]
+    fn out_of_line_test_mod_disarms() {
+        let src = "#[cfg(test)]\nmod tests;\nfn after() { let x = 1; }\n";
+        let lines = lex(src);
+        let region = test_regions(&lines);
+        assert!(!region[2], "out-of-line mod must not open a region");
+    }
+}

@@ -1,0 +1,130 @@
+//! `gpp-lint` — the repo's invariant linter.
+//!
+//! Walks `rust/src`, `rust/tests` and `rust/benches` and enforces five
+//! lexical invariants over the concurrency and unsafe layers (see
+//! `docs/TESTING.md` for the rule catalog and the escape policy):
+//!
+//! * `unsafe-safety` — every `unsafe` carries a `// SAFETY:` comment.
+//! * `wire-registry` — wire tags/verbs are declared once, in
+//!   `collectives::protocol`, with unique values, and call sites never
+//!   pass raw numeric tags.
+//! * `no-alloc-hot-path` — `// lint: no-alloc` functions stay
+//!   allocation-free.
+//! * `no-unwrap-protocol` — no `.unwrap()`/`.expect(` in `collectives/`
+//!   or `coordinator/engine/` outside tests.
+//! * `relaxed-ordering-justified` — every `Ordering::Relaxed` states why
+//!   relaxed suffices.
+//!
+//! Exit status: 0 clean, 1 diagnostics, 2 usage/IO error. Diagnostics
+//! print as `path:line: [rule] message`.
+//!
+//! Usage: `cargo run -p gpp-lint [-- <repo-root>]`. Without an argument
+//! the root is found by walking up from the current directory to the
+//! first ancestor containing `rust/src`.
+
+mod lexer;
+mod rules;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Directories scanned, relative to the repo root.
+const SCAN_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches"];
+
+/// The one sanctioned home for wire tags and command verbs.
+const REGISTRY: &str = "rust/src/collectives/protocol.rs";
+
+/// Locate the repo root: explicit argument, else the first ancestor of
+/// the current directory containing `rust/src`, else the workspace root
+/// relative to this crate's manifest (covers `cargo run -p gpp-lint`
+/// from anywhere inside the workspace).
+fn find_root() -> Option<PathBuf> {
+    if let Some(arg) = std::env::args_os().nth(1) {
+        return Some(PathBuf::from(arg));
+    }
+    if let Ok(cwd) = std::env::current_dir() {
+        for anc in cwd.ancestors() {
+            if anc.join("rust/src").is_dir() {
+                return Some(anc.to_path_buf());
+            }
+        }
+    }
+    let manifest = std::env::var_os("CARGO_MANIFEST_DIR")?;
+    Path::new(&manifest).join("../..").canonicalize().ok()
+}
+
+/// Collect `.rs` files under `dir`, depth-first in sorted order so the
+/// diagnostic stream is deterministic across filesystems.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let Some(root) = find_root() else {
+        eprintln!("gpp-lint: cannot locate the repo root; pass it as the first argument");
+        return ExitCode::from(2);
+    };
+
+    let reg_src = match std::fs::read_to_string(root.join(REGISTRY)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("gpp-lint: cannot read {REGISTRY}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let (registry, mut diags) = rules::parse_registry(REGISTRY, &reg_src);
+
+    let mut files = Vec::new();
+    for d in SCAN_DIRS {
+        let dir = root.join(d);
+        if !dir.is_dir() {
+            continue;
+        }
+        if let Err(e) = collect_rs(&dir, &mut files) {
+            eprintln!("gpp-lint: cannot walk {d}: {e}");
+            return ExitCode::from(2);
+        }
+    }
+
+    for f in &files {
+        let rel = f
+            .strip_prefix(&root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        match std::fs::read_to_string(f) {
+            Ok(src) => diags.extend(rules::lint_file(&rel, &src)),
+            Err(e) => {
+                eprintln!("gpp-lint: cannot read {rel}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    diags.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    for d in &diags {
+        println!("{}:{}: [{}] {}", d.path, d.line, d.rule, d.message);
+    }
+    if diags.is_empty() {
+        println!(
+            "gpp-lint: {} files clean ({} wire tags, {} verbs registered)",
+            files.len(),
+            registry.tags.len(),
+            registry.verbs.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("gpp-lint: {} diagnostic(s)", diags.len());
+        ExitCode::from(1)
+    }
+}

@@ -1,0 +1,582 @@
+//! The five invariant rules and the wire-tag registry model.
+//!
+//! Every rule is lexical (see [`crate::lexer`]) and every rule has the
+//! same escape hatch: a `// lint: allow(<rule>)` comment on the flagged
+//! line or anywhere in the contiguous comment/attribute block directly
+//! above it. The escape is deliberately noisy in review — the comment
+//! must sit at the use site, next to the justification prose.
+
+use crate::lexer::{lex, test_regions, Line};
+
+/// Rule: every `unsafe` token carries a `SAFETY` comment.
+pub const RULE_UNSAFE: &str = "unsafe-safety";
+/// Rule: wire tags/verbs live in `collectives::protocol`, once, and call
+/// sites never pass raw numeric tags.
+pub const RULE_WIRE: &str = "wire-registry";
+/// Rule: functions annotated `// lint: no-alloc` stay allocation-free.
+pub const RULE_ALLOC: &str = "no-alloc-hot-path";
+/// Rule: no `.unwrap()` / `.expect(` in the protocol layers.
+pub const RULE_UNWRAP: &str = "no-unwrap-protocol";
+/// Rule: every `Ordering::Relaxed` states why relaxed suffices.
+pub const RULE_RELAXED: &str = "relaxed-ordering-justified";
+
+/// One finding, addressed `path:line` (1-based) for editor jumping.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Repo-relative path of the offending file.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule identifier (one of the `RULE_*` constants).
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+/// The parsed wire vocabulary of `collectives::protocol`.
+#[derive(Debug, Default)]
+pub struct Registry {
+    /// `TAG_*` message tags (`u64`).
+    pub tags: Vec<(String, u64)>,
+    /// `CMD_*` / `SRV_*` command verbs (`f64`).
+    pub verbs: Vec<(String, f64)>,
+}
+
+/// Evaluate a `u64` registry initialiser: a decimal literal (with `_`
+/// separators), `u64::MAX`, or `u64::MAX - <k>`.
+fn parse_u64_expr(v: &str) -> Option<u64> {
+    let v = v.trim();
+    if let Some(rest) = v.strip_prefix("u64::MAX") {
+        let rest = rest.trim();
+        if rest.is_empty() {
+            return Some(u64::MAX);
+        }
+        let k: u64 = rest.strip_prefix('-')?.trim().replace('_', "").parse().ok()?;
+        return u64::MAX.checked_sub(k);
+    }
+    v.replace('_', "").parse().ok()
+}
+
+/// Parse the registry file and check its internal invariants: every tag
+/// value unique across all tags, every verb value unique within its
+/// prefix group (`CMD_*` and `SRV_*` ride different wire contexts, so
+/// `CMD_STOP = 0.0` and `SRV_DONE = 0.0` may coexist).
+pub fn parse_registry(path: &str, src: &str) -> (Registry, Vec<Diagnostic>) {
+    let lines = lex(src);
+    let region = test_regions(&lines);
+    let mut reg = Registry::default();
+    let mut tag_lines: Vec<usize> = Vec::new();
+    let mut verb_lines: Vec<usize> = Vec::new();
+    let mut diags = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if region[i] {
+            continue;
+        }
+        let t = line.code.trim();
+        let Some(rest) = t
+            .strip_prefix("pub const ")
+            .or_else(|| t.strip_prefix("const "))
+        else {
+            continue;
+        };
+        let Some((name, tail)) = rest.split_once(':') else {
+            continue;
+        };
+        let Some((ty, val)) = tail.split_once('=') else {
+            continue;
+        };
+        let (name, ty) = (name.trim(), ty.trim());
+        let val = val.trim().trim_end_matches(';').trim();
+        match ty {
+            "u64" => match parse_u64_expr(val) {
+                Some(v) => {
+                    reg.tags.push((name.to_string(), v));
+                    tag_lines.push(i + 1);
+                }
+                None => diags.push(Diagnostic {
+                    path: path.to_string(),
+                    line: i + 1,
+                    rule: RULE_WIRE,
+                    message: format!("cannot evaluate tag initialiser `{val}` for `{name}`"),
+                }),
+            },
+            "f64" => match val.parse::<f64>() {
+                Ok(v) => {
+                    reg.verbs.push((name.to_string(), v));
+                    verb_lines.push(i + 1);
+                }
+                Err(_) => diags.push(Diagnostic {
+                    path: path.to_string(),
+                    line: i + 1,
+                    rule: RULE_WIRE,
+                    message: format!("cannot evaluate verb initialiser `{val}` for `{name}`"),
+                }),
+            },
+            _ => {}
+        }
+    }
+    for (j, (name, v)) in reg.tags.iter().enumerate() {
+        if let Some(k) = reg.tags[..j].iter().position(|(_, w)| w == v) {
+            diags.push(Diagnostic {
+                path: path.to_string(),
+                line: tag_lines[j],
+                rule: RULE_WIRE,
+                message: format!(
+                    "tag `{name}` reuses value {v} already assigned to `{}`",
+                    reg.tags[k].0
+                ),
+            });
+        }
+    }
+    for (j, (name, v)) in reg.verbs.iter().enumerate() {
+        let prefix = |n: &str| n.split('_').next().unwrap_or("").to_string();
+        let pj = prefix(name);
+        if let Some(k) = reg.verbs[..j]
+            .iter()
+            .position(|(n, w)| w.to_bits() == v.to_bits() && prefix(n) == pj)
+        {
+            diags.push(Diagnostic {
+                path: path.to_string(),
+                line: verb_lines[j],
+                rule: RULE_WIRE,
+                message: format!(
+                    "verb `{name}` reuses value {v} already assigned to `{}`",
+                    reg.verbs[k].0
+                ),
+            });
+        }
+    }
+    (reg, diags)
+}
+
+/// True if `code` contains `tok` as a standalone token (not a substring
+/// of a longer identifier).
+fn has_token(code: &str, tok: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(p) = code[start..].find(tok) {
+        let at = start + p;
+        let end = at + tok.len();
+        let ident = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+        let before_ok = at == 0 || !ident(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !ident(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+/// Collect the comment text of the contiguous comment/attribute block
+/// directly above line `i`. Attribute-only lines (`#[...]`) are skipped
+/// without breaking contiguity — a `// SAFETY preconditions` block above
+/// a `#[target_feature(...)]` attribute still governs the `unsafe fn`
+/// below it. A blank line or a code line severs the block.
+fn preceding_block(lines: &[Line], i: usize) -> String {
+    let mut out = String::new();
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        let code = l.code.trim();
+        let is_attr = code.starts_with("#[") || code.starts_with("#![");
+        if code.is_empty() && l.comment.is_empty() {
+            break;
+        }
+        if code.is_empty() || is_attr {
+            out.push_str(&l.comment);
+            out.push('\n');
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// The escape hatch: `lint: allow(<rule>)` on the flagged line or in the
+/// preceding comment/attribute block.
+fn allowed(lines: &[Line], i: usize, rule: &str) -> bool {
+    let esc = format!("lint: allow({rule})");
+    lines[i].comment.contains(&esc) || preceding_block(lines, i).contains(&esc)
+}
+
+/// A justification comment for line `i`: same-line comment or preceding
+/// block containing `needle` (matched case-insensitively when
+/// `ci` is set).
+fn justified(lines: &[Line], i: usize, needle: &str, ci: bool) -> bool {
+    let hit = |text: &str| {
+        if ci {
+            text.to_lowercase().contains(&needle.to_lowercase())
+        } else {
+            text.contains(needle)
+        }
+    };
+    hit(&lines[i].comment) || hit(&preceding_block(lines, i))
+}
+
+/// Split the argument list of a call whose `(` sits at byte `open` in
+/// `s`. Returns the top-level comma-separated arguments, or `None` if
+/// the call never closes (malformed source). Nested `()[]{}` groups are
+/// tracked with one depth counter — string contents were elided by the
+/// lexer, so stray brackets inside literals cannot occur.
+fn call_args(s: &str, open: usize) -> Option<Vec<String>> {
+    let mut depth = 1i64;
+    let mut args = vec![String::new()];
+    for c in s[open + 1..].chars() {
+        match c {
+            '(' | '[' | '{' => {
+                depth += 1;
+                args.last_mut().unwrap().push(c);
+            }
+            ')' | ']' | '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(args);
+                }
+                args.last_mut().unwrap().push(c);
+            }
+            ',' if depth == 1 => args.push(String::new()),
+            _ => args.last_mut().unwrap().push(c),
+        }
+    }
+    None
+}
+
+/// Tokens denied inside a `// lint: no-alloc` function body.
+const ALLOC_TOKENS: &[&str] = &["Vec::new", "vec!", ".to_vec(", ".clone(", "Box::new"];
+
+/// Lint one file. `path` is the repo-relative label — it drives the
+/// scoping decisions (`collectives/` + `coordinator/engine/` for the
+/// unwrap rule, `tests/`/`benches/` vs `src/` for test-region
+/// exemptions, `collectives/protocol.rs` as the one sanctioned home for
+/// wire constants).
+pub fn lint_file(path: &str, src: &str) -> Vec<Diagnostic> {
+    let lines = lex(src);
+    let region = test_regions(&lines);
+    let is_protocol = path.ends_with("collectives/protocol.rs");
+    // In `src/`, unit-test modules may improvise tags and unwrap freely;
+    // integration tests and benches put real traffic on the wire, so the
+    // wire rule holds there even inside `#[cfg(test)]`.
+    let src_unit_tests = !path.contains("tests/") && !path.contains("benches/");
+    let in_protocol_scope =
+        path.contains("collectives/") || path.contains("coordinator/engine/");
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut push = |line: usize, rule: &'static str, message: String| {
+        diags.push(Diagnostic {
+            path: path.to_string(),
+            line: line + 1,
+            rule,
+            message,
+        });
+    };
+
+    for (i, line) in lines.iter().enumerate() {
+        let code = &line.code;
+
+        // --- unsafe-safety: applies everywhere, tests included -------
+        if has_token(code, "unsafe")
+            && !justified(&lines, i, "SAFETY", false)
+            && !allowed(&lines, i, RULE_UNSAFE)
+        {
+            push(
+                i,
+                RULE_UNSAFE,
+                "`unsafe` without a `// SAFETY:` comment stating the upheld invariants".into(),
+            );
+        }
+
+        // --- wire-registry (declarations outside the registry) -------
+        if !is_protocol
+            && !(src_unit_tests && region[i])
+            && ["const TAG_", "const CMD_", "const SRV_"]
+                .iter()
+                .any(|p| code.contains(p))
+            && !allowed(&lines, i, RULE_WIRE)
+        {
+            push(
+                i,
+                RULE_WIRE,
+                "wire tag/verb constant declared outside `collectives::protocol` \
+                 (the registry is the single point of uniqueness)"
+                    .into(),
+            );
+        }
+
+        // --- no-unwrap-protocol --------------------------------------
+        if in_protocol_scope
+            && !region[i]
+            && (code.contains(".unwrap()") || code.contains(".expect("))
+            && !allowed(&lines, i, RULE_UNWRAP)
+        {
+            push(
+                i,
+                RULE_UNWRAP,
+                "`.unwrap()`/`.expect(` in the protocol layers; surface the error \
+                 (`ok_or_else` + `?`) or take the poison-tolerant lock path"
+                    .into(),
+            );
+        }
+
+        // --- relaxed-ordering-justified ------------------------------
+        if !region[i]
+            && has_token(code, "Relaxed")
+            && !code.trim_start().starts_with("use ")
+            && !justified(&lines, i, "relaxed", true)
+            && !allowed(&lines, i, RULE_RELAXED)
+        {
+            push(
+                i,
+                RULE_RELAXED,
+                "`Ordering::Relaxed` without a comment justifying why relaxed \
+                 ordering suffices at this site"
+                    .into(),
+            );
+        }
+    }
+
+    // --- wire-registry (raw numeric tags at send/recv sites) ---------
+    // The call may span lines, so scan the concatenated code halves and
+    // map byte offsets back to lines.
+    let mut joined = String::new();
+    let mut starts = Vec::with_capacity(lines.len());
+    for line in &lines {
+        starts.push(joined.len());
+        joined.push_str(&line.code);
+        joined.push('\n');
+    }
+    let line_of = |pos: usize| starts.partition_point(|&s| s <= pos) - 1;
+    for pat in [".send(", ".recv("] {
+        let mut from = 0;
+        while let Some(p) = joined[from..].find(pat) {
+            let at = from + p;
+            from = at + 1;
+            let i = line_of(at);
+            if is_protocol || (src_unit_tests && region[i]) {
+                continue;
+            }
+            let Some(args) = call_args(&joined, at + pat.len() - 1) else {
+                continue;
+            };
+            // Single-argument sends (mpsc channels) carry no tag; the
+            // wire tag is always the second argument of a transport or
+            // collective send/recv.
+            if args.len() < 2 {
+                continue;
+            }
+            let tag = args[1].trim();
+            if tag.starts_with(|c: char| c.is_ascii_digit()) && !allowed(&lines, i, RULE_WIRE) {
+                push(
+                    i,
+                    RULE_WIRE,
+                    format!(
+                        "raw numeric wire tag `{tag}` at a `{pat}..)` call site; \
+                         use a named constant from `collectives::protocol`"
+                    ),
+                );
+            }
+        }
+    }
+
+    // --- no-alloc-hot-path --------------------------------------------
+    // A `// lint: no-alloc` comment marks the next function; its body
+    // (first `{` after the marker through the matching `}`) must stay
+    // free of allocation tokens.
+    for (m, lm) in lines.iter().enumerate() {
+        if !lm.comment.contains("lint: no-alloc") {
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut end = lines.len() - 1;
+        'body: for (k, lk) in lines.iter().enumerate().skip(m) {
+            for c in lk.code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' if opened => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = k;
+                            break 'body;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        for (k, lk) in lines.iter().enumerate().take(end + 1).skip(m) {
+            for tok in ALLOC_TOKENS {
+                if lk.code.contains(tok) && !allowed(&lines, k, RULE_ALLOC) {
+                    push(
+                        k,
+                        RULE_ALLOC,
+                        format!(
+                            "`{tok}` inside a `// lint: no-alloc` function; reuse a \
+                             scratch buffer or hoist the allocation out of the hot path"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hits(path: &str, src: &str, rule: &str) -> Vec<usize> {
+        lint_file(path, src)
+            .into_iter()
+            .filter(|d| d.rule == rule)
+            .map(|d| d.line)
+            .collect()
+    }
+
+    // --- unsafe-safety ------------------------------------------------
+
+    #[test]
+    fn unsafe_without_safety_is_flagged() {
+        let src = include_str!("../fixtures/unsafe_fail.rs");
+        assert_eq!(hits("rust/src/linalg/fx.rs", src, RULE_UNSAFE).len(), 1);
+    }
+
+    #[test]
+    fn unsafe_with_safety_passes() {
+        let src = include_str!("../fixtures/unsafe_pass.rs");
+        assert!(hits("rust/src/linalg/fx.rs", src, RULE_UNSAFE).is_empty());
+    }
+
+    #[test]
+    fn unsafe_allow_escape_is_honoured() {
+        let src = include_str!("../fixtures/unsafe_allow.rs");
+        assert!(hits("rust/src/linalg/fx.rs", src, RULE_UNSAFE).is_empty());
+    }
+
+    #[test]
+    fn deleting_a_safety_comment_turns_the_file_red() {
+        // The acceptance property stated in the docs: strip the SAFETY
+        // comments from a passing file and the linter must object.
+        let src = include_str!("../fixtures/unsafe_pass.rs");
+        let stripped: String = src
+            .lines()
+            .filter(|l| !l.contains("SAFETY"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        assert!(!hits("rust/src/linalg/fx.rs", &stripped, RULE_UNSAFE).is_empty());
+    }
+
+    // --- wire-registry ------------------------------------------------
+
+    #[test]
+    fn raw_numeric_tags_and_stray_consts_are_flagged() {
+        let src = include_str!("../fixtures/wire_fail.rs");
+        // send + recv with literal tags, plus a stray `const TAG_`.
+        assert_eq!(hits("rust/src/collectives/fx.rs", src, RULE_WIRE).len(), 3);
+    }
+
+    #[test]
+    fn named_tags_and_single_arg_channel_sends_pass() {
+        let src = include_str!("../fixtures/wire_pass.rs");
+        assert!(hits("rust/src/collectives/fx.rs", src, RULE_WIRE).is_empty());
+    }
+
+    #[test]
+    fn wire_allow_escape_is_honoured() {
+        let src = include_str!("../fixtures/wire_allow.rs");
+        assert!(hits("rust/src/collectives/fx.rs", src, RULE_WIRE).is_empty());
+    }
+
+    #[test]
+    fn src_unit_tests_may_use_raw_tags() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t(c: &mut C) { c.send(1, 42, &[]); }\n}\n";
+        assert!(hits("rust/src/collectives/fx.rs", src, RULE_WIRE).is_empty());
+        // ... but integration tests may not.
+        assert_eq!(hits("rust/tests/fx.rs", src, RULE_WIRE).len(), 1);
+    }
+
+    #[test]
+    fn registry_duplicates_are_flagged() {
+        let src = include_str!("../fixtures/registry_dup.rs");
+        let (_, diags) = parse_registry("rust/src/collectives/protocol.rs", src);
+        assert_eq!(diags.len(), 2, "one duplicate tag + one duplicate verb");
+    }
+
+    #[test]
+    fn registry_unique_values_pass() {
+        let src = include_str!("../fixtures/registry_ok.rs");
+        let (reg, diags) = parse_registry("rust/src/collectives/protocol.rs", src);
+        assert!(diags.is_empty());
+        assert_eq!((reg.tags.len(), reg.verbs.len()), (3, 3));
+        assert_eq!(reg.tags[1].1, u64::MAX - 1);
+    }
+
+    // --- no-alloc-hot-path --------------------------------------------
+
+    #[test]
+    fn allocation_in_marked_fn_is_flagged() {
+        let src = include_str!("../fixtures/noalloc_fail.rs");
+        // Vec::new + .to_vec( inside the marked body; the unmarked
+        // function below it allocates freely.
+        assert_eq!(hits("rust/src/coordinator/engine/fx.rs", src, RULE_ALLOC).len(), 2);
+    }
+
+    #[test]
+    fn scratch_reuse_in_marked_fn_passes() {
+        let src = include_str!("../fixtures/noalloc_pass.rs");
+        assert!(hits("rust/src/coordinator/engine/fx.rs", src, RULE_ALLOC).is_empty());
+    }
+
+    #[test]
+    fn noalloc_allow_escape_is_honoured() {
+        let src = include_str!("../fixtures/noalloc_allow.rs");
+        assert!(hits("rust/src/coordinator/engine/fx.rs", src, RULE_ALLOC).is_empty());
+    }
+
+    // --- no-unwrap-protocol -------------------------------------------
+
+    #[test]
+    fn unwrap_in_protocol_layer_is_flagged() {
+        let src = include_str!("../fixtures/unwrap_fail.rs");
+        assert_eq!(hits("rust/src/collectives/fx.rs", src, RULE_UNWRAP).len(), 2);
+        // The same file outside the protocol layers is fine.
+        assert!(hits("rust/src/linalg/fx.rs", src, RULE_UNWRAP).is_empty());
+    }
+
+    #[test]
+    fn fallible_plumbing_and_test_mods_pass() {
+        let src = include_str!("../fixtures/unwrap_pass.rs");
+        assert!(hits("rust/src/coordinator/engine/fx.rs", src, RULE_UNWRAP).is_empty());
+    }
+
+    #[test]
+    fn unwrap_allow_escape_is_honoured() {
+        let src = include_str!("../fixtures/unwrap_allow.rs");
+        assert!(hits("rust/src/collectives/fx.rs", src, RULE_UNWRAP).is_empty());
+    }
+
+    // --- relaxed-ordering-justified -----------------------------------
+
+    #[test]
+    fn unjustified_relaxed_is_flagged() {
+        let src = include_str!("../fixtures/relaxed_fail.rs");
+        assert_eq!(hits("rust/src/metrics/fx.rs", src, RULE_RELAXED).len(), 1);
+    }
+
+    #[test]
+    fn justified_relaxed_and_use_lines_pass() {
+        let src = include_str!("../fixtures/relaxed_pass.rs");
+        assert!(hits("rust/src/metrics/fx.rs", src, RULE_RELAXED).is_empty());
+    }
+
+    #[test]
+    fn relaxed_allow_escape_is_honoured() {
+        let src = include_str!("../fixtures/relaxed_allow.rs");
+        assert!(hits("rust/src/metrics/fx.rs", src, RULE_RELAXED).is_empty());
+    }
+}
