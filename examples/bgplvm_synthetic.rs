@@ -47,7 +47,7 @@ fn main() -> Result<()> {
         simd: None,
     };
     let t0 = std::time::Instant::now();
-    let model = BayesianGplvm::fit(&ds.y, 1, 100, "paper", cfg, seed)?;
+    let model = BayesianGplvm::fit(&ds.y(), 1, 100, "paper", cfg, seed)?;
     let wall = t0.elapsed().as_secs_f64();
     let r = &model.result;
 
@@ -69,7 +69,7 @@ fn main() -> Result<()> {
              r.timing.indistributable_fraction() * 100.0);
     println!("communication        : {} messages, {:.2} MiB",
              r.messages_sent, r.bytes_sent as f64 / (1024.0 * 1024.0));
-    let align = model.latent_alignment(ds.latent_truth.as_ref().unwrap());
+    let align = model.latent_alignment(ds.latent_truth().unwrap());
     println!("latent alignment     : |corr(mu, truth)| = {align:.4}");
     println!("\nloss curve written to results/bgplvm_curve.csv");
 

@@ -23,11 +23,11 @@ fn main() -> Result<()> {
     // 1. data: y = f(x) + ε with f ~ GP(0, RBF), observed inputs
     let spec = SyntheticSpec { n: 1000, q: 1, d: 1, noise: 0.01, ..Default::default() };
     let ds = generate_supervised(&spec, 42);
-    let x = ds.x.clone().unwrap();
+    let x = ds.x().unwrap();
     let n_train = 900;
     let train = ds.take(n_train);
     let x_test = Mat::from_vec(100, 1, x.as_slice()[n_train..].to_vec());
-    let y_test = Mat::from_vec(100, 1, ds.y.as_slice()[n_train..].to_vec());
+    let y_test = Mat::from_vec(100, 1, ds.y().as_slice()[n_train..].to_vec());
 
     // 2. fit: 2 workers, chunked, L-BFGS on the variational bound
     let cfg = EngineConfig {
@@ -40,7 +40,7 @@ fn main() -> Result<()> {
         verbose: false,
         simd: None,
     };
-    let model = SparseGpRegression::fit(&train.x.clone().unwrap(), &train.y, 16,
+    let model = SparseGpRegression::fit(&train.x().unwrap(), &train.y(), 16,
                                         "quickstart", cfg, 42)?;
 
     // 3. report
@@ -54,7 +54,7 @@ fn main() -> Result<()> {
     println!("learned lengthscale: {:.3}   (generator: 1.0)", kern.lengthscales[0]);
     println!("learned noise sd   : {:.4}  (generator: 0.1)",
              (1.0 / r.fitted.betas[0]).sqrt());
-    println!("train RMSE         : {:.4}", model.rmse(&train.x.clone().unwrap(), &train.y));
+    println!("train RMSE         : {:.4}", model.rmse(&train.x().unwrap(), &train.y()));
     println!("test  RMSE         : {:.4}", model.rmse(&x_test, &y_test));
     println!("phase breakdown    : {}", r.timing.summary());
 

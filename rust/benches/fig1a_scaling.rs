@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
             }
             let spec = SyntheticSpec { n, q: 1, d: 3, ..Default::default() };
             let ds = generate(&spec, 0);
-            let problem = BayesianGplvm::problem(&ds.y, 1, 100, "paper", 0);
+            let problem = BayesianGplvm::problem(&ds.y(), 1, 100, "paper", 0);
             let cfg = EngineConfig {
                 workers,
                 chunk,

@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
         for &n in &sizes {
             let spec = SyntheticSpec { n, q: 1, d: 3, ..Default::default() };
             let ds = generate(&spec, 0);
-            let problem = BayesianGplvm::problem(&ds.y, 1, 100, "paper", 0);
+            let problem = BayesianGplvm::problem(&ds.y(), 1, 100, "paper", 0);
             let cfg = EngineConfig {
                 workers: 2,
                 chunk: 1024,

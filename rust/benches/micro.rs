@@ -124,8 +124,9 @@ fn main() -> anyhow::Result<()> {
     println!("\n== chunk-size ablation (rust-cpu, N=4096, 2 workers) ==");
     let spec = SyntheticSpec { n: 4096, q: 1, d: 3, ..Default::default() };
     let ds = generate(&spec, 0);
+    let y_ablate = ds.y();
     for chunk_size in [256usize, 512, 1024, 2048, 4096] {
-        let problem = BayesianGplvm::problem(&ds.y, 1, 100, "paper", 0);
+        let problem = BayesianGplvm::problem(&y_ablate, 1, 100, "paper", 0);
         let cfg = EngineConfig {
             workers: 2,
             chunk: chunk_size,
@@ -150,14 +151,15 @@ fn main() -> anyhow::Result<()> {
     for n in sizes {
         let spec = SyntheticSpec { n, q: 1, d: 1, ..Default::default() };
         let dsn = generate_supervised(&spec, 3);
-        let x = dsn.x.clone().unwrap();
+        let x = dsn.x().unwrap();
+        let yn = dsn.y();
         let kern = RbfArd::iso(1.0, 1.0, 1);
 
         // sparse: one full distributed objective evaluation
         let problem = gpparallel::coordinator::Problem {
             latent: gpparallel::coordinator::LatentSpec::Observed(x.clone()),
             views: vec![gpparallel::coordinator::ViewSpec {
-                y: dsn.y.clone(),
+                y: yn.clone().into(),
                 z0: Mat::from_fn(16, 1, |i, _| -2.0 + 4.0 * i as f64 / 15.0),
                 kern0: kern.clone(),
                 beta0: 10.0,
@@ -178,7 +180,7 @@ fn main() -> anyhow::Result<()> {
         let t_sparse = Engine::new(problem, cfg)?.time_iterations(1)?.sec_per_eval;
 
         // dense: one exact-marginal-likelihood-with-gradients evaluation
-        let t_dense = time_it(1, || DenseGp::lml_and_grads(&kern, 10.0f64.ln(), &x, &dsn.y).unwrap());
+        let t_dense = time_it(1, || DenseGp::lml_and_grads(&kern, 10.0f64.ln(), &x, &yn).unwrap());
         println!("{:>6} {:>14.4} {:>14.4} {:>8.2}", n, t_sparse, t_dense,
                  t_dense / t_sparse);
         rec.push("engine_eval_sparse", n, t_sparse);
@@ -191,12 +193,13 @@ fn main() -> anyhow::Result<()> {
     println!("\n== optimiser ablation (BGP-LVM, N=256, 40-iteration budget) ==");
     let spec = SyntheticSpec { n: 256, q: 2, d: 3, ..Default::default() };
     let ds = generate(&spec, 4);
+    let y_opt = ds.y();
     for (name, opt) in [
         ("L-BFGS", OptChoice::Lbfgs(Lbfgs { max_iters: 40, ..Default::default() })),
         ("SCG", OptChoice::Scg(Scg { max_iters: 40, ..Default::default() })),
         ("Adam", OptChoice::Adam(Adam { lr: 5e-2, max_iters: 40, ..Default::default() })),
     ] {
-        let problem = BayesianGplvm::problem(&ds.y, 2, 16, "test", 4);
+        let problem = BayesianGplvm::problem(&y_opt, 2, 16, "test", 4);
         let cfg = EngineConfig {
             workers: 1,
             chunk: 64,
@@ -251,10 +254,10 @@ fn main() -> anyhow::Result<()> {
         for workers in [1usize, 2, 4] {
             let spec = SyntheticSpec { n: n_cycle, q: 1, d: 3, ..Default::default() };
             let problem = if views == 1 {
-                BayesianGplvm::problem(&generate(&spec, 6).y, 1, 50, "paper", 6)
+                BayesianGplvm::problem(&generate(&spec, 6).y(), 1, 50, "paper", 6)
             } else {
-                let y1 = generate(&spec, 7).y;
-                let y2 = generate(&spec, 8).y;
+                let y1 = generate(&spec, 7).y();
+                let y2 = generate(&spec, 8).y();
                 Mrd::problem(&[y1, y2], 1, 50, &["paper", "paper"], 7)
             };
             let mut times = [0.0f64; 2];
@@ -295,11 +298,11 @@ fn main() -> anyhow::Result<()> {
         let (n_fit, m, q, d) = (2048usize, 100usize, 1usize, 3usize);
         let spec = SyntheticSpec { n: n_fit, q, d, ..Default::default() };
         let dsf = generate_supervised(&spec, 9);
-        let xf = dsf.x.clone().unwrap();
+        let xf = dsf.x().unwrap();
         let zf = Mat::from_fn(m, q, |i, _| -2.0 + 4.0 * i as f64 / (m - 1) as f64);
         let kernf = RbfArd::iso(1.0, 1.0, q);
         let wf = vec![1.0; n_fit];
-        let stf = sgpr_stats_fwd(&kernf, &xf, &wf, &dsf.y, &zf);
+        let stf = sgpr_stats_fwd(&kernf, &xf, &wf, &dsf.y(), &zf);
         let core = PosteriorCore::new(kernf, zf, 50.0, &stf)?;
 
         let nt = if fast { 1024usize } else { 8192 };
@@ -395,8 +398,8 @@ fn main() -> anyhow::Result<()> {
         let chunk = 256usize;
         let spec = SyntheticSpec { n: n_stats, q: 1, d: 2, ..Default::default() };
         let dss = generate_supervised(&spec, 12);
-        let xs = dss.x.clone().unwrap();
-        let problem = SparseGpRegression::problem(&xs, &dss.y, 64, "paper", 12);
+        let xs = dss.x().unwrap();
+        let problem = SparseGpRegression::problem(&xs, &dss.y(), 64, "paper", 12);
         let x0 = problem.initial_params();
         let stats_reps = if fast { 2 } else { 5 };
 
@@ -537,11 +540,11 @@ fn main() -> anyhow::Result<()> {
         let (n_fit, m, q, d) = (1024usize, 64usize, 1usize, 2usize);
         let spec = SyntheticSpec { n: n_fit, q, d, ..Default::default() };
         let dsf = generate_supervised(&spec, 30);
-        let xf = dsf.x.clone().unwrap();
+        let xf = dsf.x().unwrap();
         let zf = Mat::from_fn(m, q, |i, _| -2.0 + 4.0 * i as f64 / (m - 1) as f64);
         let kernf = RbfArd::iso(1.0, 1.0, q);
         let wf = vec![1.0; n_fit];
-        let stf = sgpr_stats_fwd(&kernf, &xf, &wf, &dsf.y, &zf);
+        let stf = sgpr_stats_fwd(&kernf, &xf, &wf, &dsf.y(), &zf);
         let core = PosteriorCore::new(kernf, zf, 50.0, &stf)?;
 
         let k_req = if fast { 64usize } else { 256 };
@@ -696,6 +699,74 @@ fn main() -> anyhow::Result<()> {
             println!("{:>8} {:>14.3}", payload, t_rt * 1e6);
             rec.push("comm_transport_overhead", payload, t_rt);
         }
+    }
+
+    // ---------------------------------------------------------------
+    // 12. out-of-core chunk store: steady-state sequential read
+    //     throughput (resident vs on-disk, same bytes, same grid) and
+    //     the streamed distributed cycle — the O(chunk)-working-set
+    //     evaluation path — at 1 and 4 ranks.
+    // ---------------------------------------------------------------
+    println!("\n== chunk store: chunked reads + streamed SGPR cycle ==");
+    {
+        use gpparallel::data::store::{materialize, ChunkReader as _, ChunkSource,
+                                      FileStore, ResidentStore};
+        use gpparallel::data::synthetic::generate_supervised_to_store;
+        use gpparallel::models::SparseGpRegression;
+        use std::sync::Arc;
+
+        let n_store = if fast { 4096usize } else { 16384 };
+        let chunk_rows = 512usize;
+        let spec = SyntheticSpec { n: n_store, q: 1, d: 3, ..Default::default() };
+        let dir = std::env::temp_dir().join(format!("gpparallel_micro_store_{}",
+                                                    std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        generate_supervised_to_store(&spec, 40, &dir, chunk_rows)?;
+        let file: Arc<dyn ChunkSource> = Arc::new(FileStore::open(&dir)?);
+        let (x_res, y_res) = materialize(file.as_ref())?;
+        let resident: Arc<dyn ChunkSource> =
+            Arc::new(ResidentStore::from_mats(x_res, y_res, chunk_rows)?);
+
+        let read_reps = if fast { 2 } else { 5 };
+        for (name, src) in [("resident", &resident), ("file", &file)] {
+            let man = src.manifest();
+            let chunks = man.num_chunks();
+            let mut reader = src.open_reader()?;
+            let mut xbuf = vec![0.0; chunk_rows * man.q];
+            let mut ybuf = vec![0.0; chunk_rows * man.d];
+            // warm (page cache + reader scratch), then time full passes
+            for k in 0..chunks {
+                reader.read_chunk(k, &mut xbuf, &mut ybuf)?;
+            }
+            let t = time_it(read_reps, || {
+                for k in 0..chunks {
+                    reader.read_chunk(k, &mut xbuf, &mut ybuf).expect("read chunk");
+                }
+                std::hint::black_box(ybuf[0])
+            });
+            println!("  chunked_read_{name:<9}: {:>9.3} ms/pass  ({chunks} chunks of {chunk_rows})",
+                     t * 1e3);
+            rec.push(&format!("chunked_read_{name}"), n_store, t);
+        }
+
+        for workers in [1usize, 4] {
+            let problem = SparseGpRegression::problem_from_store(&file, 64, "paper", 41)?;
+            let cfg = EngineConfig {
+                workers,
+                chunk: chunk_rows,
+                backend: BackendKind::RustCpu,
+                artifacts_dir: "artifacts".into(),
+                opt: OptChoice::Lbfgs(Lbfgs::default()),
+                pipeline: true,
+                verbose: false,
+                simd: None,
+            };
+            let r = Engine::new(problem, cfg)?.time_iterations(1)?;
+            println!("  cycle_eval_chunked_w{workers}: {:>9.4} s/iter  (N={n_store}, streamed from disk)",
+                     r.sec_per_eval);
+            rec.push(&format!("cycle_eval_chunked_w{workers}"), n_store, r.sec_per_eval);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     rec.write("BENCH_micro.json")?;

@@ -105,11 +105,13 @@ const ENGINE_FLAGS: &[&str] = &["verbose", "no-pipeline", "help"];
 /// extras, so a new shared option cannot drift out of some scopes.
 pub fn known_options(cmd: &str) -> Option<Vec<&'static str>> {
     let (base, extra): (&[&str], &[&str]) = match cmd {
-        "train-bgplvm" | "train-sgpr" => (ENGINE_OPTIONS, &["iters"]),
+        "train-bgplvm" => (ENGINE_OPTIONS, &["iters"]),
+        "train-sgpr" => (ENGINE_OPTIONS, &["iters", "data-dir", "data-csv"]),
         "predict" => (ENGINE_OPTIONS,
                       &["iters", "nt", "batch", "clients", "max-batch-rows",
                         "max-wait-us", "serve-requests", "req-rows", "queue-rows"]),
         "time" => (ENGINE_OPTIONS, &["evals"]),
+        "ingest" => (&[], &["csv", "out", "q", "chunk-rows"]),
         "info" => (&[], &["artifacts"]),
         "help" => (&[], &[]),
         _ => return None,
@@ -123,8 +125,10 @@ pub fn known_options(cmd: &str) -> Option<Vec<&'static str>> {
 /// scopes).
 pub fn known_flags(cmd: &str) -> Vec<&'static str> {
     let (base, extra): (&[&str], &[&str]) = match cmd {
-        "train-bgplvm" | "train-sgpr" | "time" => (ENGINE_FLAGS, &[]),
+        "train-bgplvm" | "time" => (ENGINE_FLAGS, &[]),
+        "train-sgpr" => (ENGINE_FLAGS, &["has-header"]),
         "predict" => (ENGINE_FLAGS, &["refit-demo", "stream", "serve"]),
+        "ingest" => (&[], &["center", "has-header", "help"]),
         _ => (&[], &["help"]),
     };
     base.iter().chain(extra).copied().collect()
@@ -185,6 +189,20 @@ mod tests {
         assert!(known_options("train-sgpr").unwrap().contains(&"iters"));
         assert!(!known_options("train-sgpr").unwrap().contains(&"evals"));
 
+        // the chunk-store data paths are sgpr-only (BGP-LVM cannot
+        // stream: its variational latents are O(N/P) by protocol)
+        let s = known_options("train-sgpr").unwrap();
+        assert!(s.contains(&"data-dir") && s.contains(&"data-csv"));
+        let b = known_options("train-bgplvm").unwrap();
+        assert!(!b.contains(&"data-dir") && !b.contains(&"data-csv"));
+
+        // `ingest` is a pure data command: no engine options in scope
+        let ing = known_options("ingest").unwrap();
+        for opt in ["csv", "out", "q", "chunk-rows"] {
+            assert!(ing.contains(&opt), "{opt}");
+        }
+        assert!(!ing.contains(&"workers") && !ing.contains(&"backend"));
+
         // the shared engine base appears in every engine-driving scope
         for cmd in ["train-bgplvm", "train-sgpr", "predict", "time"] {
             assert!(known_options(cmd).unwrap().contains(&"workers"), "{cmd}");
@@ -217,6 +235,13 @@ mod tests {
             assert!(p.contains(&opt), "{opt}");
             assert!(!known_options("time").unwrap().contains(&opt), "{opt}");
         }
+        // `--center` is an ingest-time decision (recorded in the
+        // manifest), not a training flag; `--has-header` rides on both
+        // CSV-reading commands
+        assert!(known_flags("ingest").contains(&"center"));
+        assert!(!known_flags("train-sgpr").contains(&"center"));
+        assert!(known_flags("train-sgpr").contains(&"has-header"));
+        assert!(known_flags("ingest").contains(&"has-header"));
     }
 
     #[test]

@@ -64,6 +64,6 @@ pub mod train;
 
 pub use cycle::DistributedEvaluator;
 pub use frontend::{FrontendConfig, FrontendHandle, ServingFrontend, ServingReport};
-pub use problem::{Fitted, LatentSpec, Problem, ViewSpec};
+pub use problem::{Fitted, LatentSpec, Problem, ViewData, ViewSpec};
 pub use serve::{DistributedPosterior, ServeSignal};
 pub use train::{Engine, EngineConfig, OptChoice, TrainResult};

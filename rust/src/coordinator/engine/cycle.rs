@@ -91,6 +91,7 @@ use crate::config::BackendKind;
 use crate::coordinator::backend::{make_backends, Backend, ChunkData, ChunkTask, FwdCache,
                                   ViewParams};
 use crate::coordinator::partition::{ChunkRange, Partition};
+use crate::data::store::ChunkReader;
 use crate::kern::RbfArd;
 use crate::linalg::Mat;
 use crate::math::bound::bound_and_grads;
@@ -220,8 +221,19 @@ fn refresh_latents(latents: &mut [(Mat, Mat)], chunks: &[ChunkData], span_start:
 /// view per chunk — mask, supervised x and the view's Y tile attached at
 /// build time, so nothing static is copied on the evaluation hot path)
 /// and a backend per view.
+///
+/// Store-backed problems (`LatentSpec::ObservedStore`) run in **streamed
+/// mode** instead: `view_chunks[0]` holds only zero-size skeletons (the
+/// `start`/`live` grid the STATS slot mapping and the chunk-order folds
+/// key off), and the chunk payloads are pulled through `stream` — a
+/// double-buffered pair of padded `ChunkData` slots fed by the store's
+/// [`ChunkReader`] — in windows of two, so the rank's working set is
+/// O(chunk) instead of O(N/P). The per-chunk math and the chunk-order
+/// folds are unchanged, so streamed trajectories are bit-identical to
+/// resident ones.
 struct WorkerState {
-    /// `view_chunks[v][c]` — chunk c's data for view v.
+    /// `view_chunks[v][c]` — chunk c's data for view v (skeletons only
+    /// in streamed mode).
     view_chunks: Vec<Vec<ChunkData>>,
     backends: Vec<Box<dyn Backend>>,
     /// Runtime kept alive for the XLA backends (owns the PJRT client).
@@ -229,6 +241,49 @@ struct WorkerState {
     span: Option<ChunkRange>,
     q: usize,
     variational: bool,
+    /// Streamed mode: the rank's chunk reader + double-buffered slots.
+    stream: Option<ChunkStream>,
+}
+
+/// A rank's streaming window over its store chunks: a reader plus two
+/// reusable padded `ChunkData` slots. Manifest chunk `k` always lands in
+/// slot `k % 2`, so the two chunks of a window (consecutive ids) never
+/// collide.
+struct ChunkStream {
+    reader: Box<dyn ChunkReader>,
+    /// Fixed chunk size C (= the store's `chunk_rows`); maps a chunk's
+    /// `start` back to its manifest id.
+    chunk_rows: usize,
+    slots: [ChunkData; 2],
+}
+
+impl ChunkStream {
+    /// Read the chunk starting at `start` (`live` rows) into its slot:
+    /// payload rows first, then zeroed padding and the {0,1} mask. The
+    /// reader applies centering and verifies the chunk checksum.
+    // lint: no-alloc
+    fn fill(&mut self, start: usize, live: usize) -> Result<()> {
+        let k = start / self.chunk_rows;
+        let slot = &mut self.slots[k % 2];
+        slot.start = start;
+        slot.live = live;
+        let q = slot.x.cols();
+        let d = slot.y.cols();
+        let x = slot.x.as_mut_slice();
+        let y = slot.y.as_mut_slice();
+        self.reader.read_chunk(k, x, y)?;
+        // a short (tail) chunk may reuse a slot a full chunk dirtied
+        x[live * q..].fill(0.0);
+        y[live * d..].fill(0.0);
+        slot.w[..live].fill(1.0);
+        slot.w[live..].fill(0.0);
+        Ok(())
+    }
+
+    /// The slot holding the chunk that starts at `start`.
+    fn slot(&self, start: usize) -> &ChunkData {
+        &self.slots[(start / self.chunk_rows) % 2]
+    }
 }
 
 /// Assemble one view's batch: each resident chunk (borrowed) with its
@@ -257,13 +312,22 @@ impl WorkerState {
         let c = part.chunk;
         let ranges = &part.per_worker[rank];
         let variational = problem.latent.is_variational();
+        let streamed = matches!(problem.latent, LatentSpec::ObservedStore);
 
-        // chunk skeletons (mask + supervised x)
+        // chunk skeletons (mask + supervised x); in streamed mode they
+        // carry only the start/live grid — payloads stay on disk and the
+        // mask lives in the stream slots, so a rank's static state is
+        // O(#chunks), not O(N/P)
         let mut skeletons = Vec::with_capacity(ranges.len());
         for r in ranges {
             let live = r.len();
-            let mut w = vec![0.0; c];
-            w[..live].fill(1.0);
+            let w = if streamed {
+                Vec::new()
+            } else {
+                let mut w = vec![0.0; c];
+                w[..live].fill(1.0);
+                w
+            };
             let x = match &problem.latent {
                 LatentSpec::Observed(x_all) => {
                     let mut x = Mat::zeros(c, q);
@@ -272,27 +336,65 @@ impl WorkerState {
                     }
                     x
                 }
-                LatentSpec::Variational { .. } => Mat::zeros(0, 0),
+                LatentSpec::ObservedStore | LatentSpec::Variational { .. } => {
+                    Mat::zeros(0, 0)
+                }
             };
             skeletons.push(ChunkData { start: r.start, live, y: Mat::zeros(0, 0), x, w });
         }
 
         // per-view resident chunks: skeleton + the view's padded Y tile
+        // (streamed mode keeps the bare skeletons — validation pinned it
+        // to a single store-backed view)
         let mut view_chunks = Vec::with_capacity(problem.views.len());
-        for view in &problem.views {
-            let d = view.y.cols();
-            let mut chunks = Vec::with_capacity(ranges.len());
-            for (r, skel) in ranges.iter().zip(&skeletons) {
-                let mut y = Mat::zeros(c, d);
-                for i in 0..r.len() {
-                    y.row_mut(i).copy_from_slice(view.y.row(r.start + i));
+        if streamed {
+            view_chunks.push(skeletons);
+        } else {
+            for view in &problem.views {
+                let y_all = view.y.resident()
+                    .ok_or_else(|| anyhow!("resident problem with store view"))?;
+                let d = y_all.cols();
+                let mut chunks = Vec::with_capacity(ranges.len());
+                for (r, skel) in ranges.iter().zip(&skeletons) {
+                    let mut y = Mat::zeros(c, d);
+                    for i in 0..r.len() {
+                        y.row_mut(i).copy_from_slice(y_all.row(r.start + i));
+                    }
+                    let mut chunk = skel.clone();
+                    chunk.y = y;
+                    chunks.push(chunk);
                 }
-                let mut chunk = skel.clone();
-                chunk.y = y;
-                chunks.push(chunk);
+                view_chunks.push(chunks);
             }
-            view_chunks.push(chunks);
         }
+
+        // streamed mode: open this rank's reader and preallocate the
+        // double-buffered slots
+        let stream = if streamed {
+            let src = problem.views[0].y.store()
+                .ok_or_else(|| anyhow!("ObservedStore problem without a store"))?;
+            let man = src.manifest();
+            if man.chunk_rows != c {
+                return Err(anyhow!(
+                    "store chunk_rows {} != partition chunk {c}: the store's \
+                     grid must drive the partition (Partition::from_manifest)",
+                    man.chunk_rows));
+            }
+            let mk_slot = || ChunkData {
+                start: 0,
+                live: 0,
+                y: Mat::zeros(c, man.d),
+                x: Mat::zeros(c, man.q),
+                w: vec![0.0; c],
+            };
+            Some(ChunkStream {
+                reader: src.open_reader()?,
+                chunk_rows: c,
+                slots: [mk_slot(), mk_slot()],
+            })
+        } else {
+            None
+        };
 
         // backends, via the kind-keyed factory
         let aot_configs: Vec<String> =
@@ -307,6 +409,7 @@ impl WorkerState {
             span: part.worker_span(rank),
             q,
             variational,
+            stream,
         })
     }
 
@@ -326,10 +429,43 @@ impl WorkerState {
     /// them into the serial chunk-order construction.
     fn fwd_view0_per_chunk(&mut self, gv: &super::problem::GlobalView)
                            -> Result<Vec<Stats>> {
+        if self.stream.is_some() {
+            return self.fwd_view0_per_chunk_streamed(gv);
+        }
         let tasks = view_tasks(&self.view_chunks[0], &[], false);
         let vp = ViewParams { z: &gv.z, log_hyp: &gv.log_hyp };
         let (stats, _caches) = self.backends[0].stats_fwd_batch(&tasks, &vp, false)?;
         Ok(stats)
+    }
+
+    /// Streamed-mode stats-only pass: pull the rank's chunks through the
+    /// double-buffered window and batch each window through the backend.
+    /// Per-chunk stats are independent of batching, so the collected
+    /// chunk-order list is bit-identical to the resident whole-list
+    /// batch.
+    fn fwd_view0_per_chunk_streamed(&mut self, gv: &super::problem::GlobalView)
+                                    -> Result<Vec<Stats>> {
+        let stream = self.stream.as_mut()
+            .ok_or_else(|| anyhow!("streamed call without a stream"))?;
+        let chunks = &self.view_chunks[0];
+        let backend = &mut self.backends[0];
+        let vp = ViewParams { z: &gv.z, log_hyp: &gv.log_hyp };
+        let mut out = Vec::with_capacity(chunks.len());
+        let mut i = 0;
+        while i < chunks.len() {
+            let hi = (i + 2).min(chunks.len());
+            for ch in &chunks[i..hi] {
+                stream.fill(ch.start, ch.live)?;
+            }
+            let tasks: Vec<ChunkTask> = chunks[i..hi]
+                .iter()
+                .map(|ch| ChunkTask { chunk: stream.slot(ch.start), latent: None })
+                .collect();
+            let (stats, _caches) = backend.stats_fwd_batch(&tasks, &vp, false)?;
+            out.extend(stats);
+            i = hi;
+        }
+        Ok(out)
     }
 
     /// One view's local forward pass: per-chunk stats summed over chunks
@@ -340,6 +476,9 @@ impl WorkerState {
     fn fwd_view(&mut self, v: usize, gv: &super::problem::GlobalView,
                 latents: &[(Mat, Mat)], m: usize, d: usize)
                 -> Result<(Stats, Vec<FwdCache>)> {
+        if self.stream.is_some() {
+            return self.fwd_view_streamed(v, gv, m, d);
+        }
         let tasks = view_tasks(&self.view_chunks[v], latents, self.variational);
         let vp = ViewParams { z: &gv.z, log_hyp: &gv.log_hyp };
         // KL is counted exactly once: attached to view 0.
@@ -358,6 +497,42 @@ impl WorkerState {
         Ok((acc, caches))
     }
 
+    /// Streamed-mode forward: windows of two chunks through the stream
+    /// slots, folded first-chunk-as-accumulator in chunk order — the
+    /// same per-chunk math and fold order as the resident whole-list
+    /// batch, hence bit-identical. No caches are retained (they would be
+    /// O(N/P·M)); the VJP recomputes, which the backends' cache contract
+    /// guarantees is bit-identical (`caches.get(i) → None → recompute`).
+    fn fwd_view_streamed(&mut self, v: usize, gv: &super::problem::GlobalView,
+                         m: usize, d: usize) -> Result<(Stats, Vec<FwdCache>)> {
+        let stream = self.stream.as_mut()
+            .ok_or_else(|| anyhow!("streamed call without a stream"))?;
+        let chunks = &self.view_chunks[0];
+        let backend = &mut self.backends[v];
+        let vp = ViewParams { z: &gv.z, log_hyp: &gv.log_hyp };
+        let mut acc: Option<Stats> = None;
+        let mut i = 0;
+        while i < chunks.len() {
+            let hi = (i + 2).min(chunks.len());
+            for ch in &chunks[i..hi] {
+                stream.fill(ch.start, ch.live)?;
+            }
+            let tasks: Vec<ChunkTask> = chunks[i..hi]
+                .iter()
+                .map(|ch| ChunkTask { chunk: stream.slot(ch.start), latent: None })
+                .collect();
+            let (stats, _caches) = backend.stats_fwd_batch(&tasks, &vp, false)?;
+            for st in stats {
+                match &mut acc {
+                    None => acc = Some(st),
+                    Some(a) => a.add_assign(&st),
+                }
+            }
+            i = hi;
+        }
+        Ok((acc.unwrap_or_else(|| Stats::zeros(m, d)), Vec::new()))
+    }
+
     /// One view's local VJP pass, reusing the view's fwd caches.
     /// Accumulates the span-local (dμ, d log S) into the provided
     /// buffers and returns the view's global (dZ, dhyp) partials.
@@ -366,6 +541,9 @@ impl WorkerState {
                 latents: &[(Mat, Mat)], caches: &[FwdCache],
                 dmu_span: &mut [f64], dls_span: &mut [f64], m: usize)
                 -> Result<(Mat, Vec<f64>)> {
+        if self.stream.is_some() {
+            return self.vjp_view_streamed(v, gv, cts, m);
+        }
         let tasks = view_tasks(&self.view_chunks[v], latents, self.variational);
         let vp = ViewParams { z: &gv.z, log_hyp: &gv.log_hyp };
         let grads = self.backends[v].stats_vjp_batch(&tasks, &vp, cts, caches)?;
@@ -388,6 +566,41 @@ impl WorkerState {
             for (a, b) in dhyp.iter_mut().zip(&g.dhyp) {
                 *a += b;
             }
+        }
+        Ok((dz, dhyp))
+    }
+
+    /// Streamed-mode VJP: the same chunk windows as the forward, with
+    /// empty caches (the backends recompute, bit-identically) and the
+    /// (dZ, dhyp) partials accumulated in chunk order — never
+    /// variational, so there are no span-local latent gradients.
+    fn vjp_view_streamed(&mut self, v: usize, gv: &super::problem::GlobalView,
+                         cts: &StatsCts, m: usize) -> Result<(Mat, Vec<f64>)> {
+        let stream = self.stream.as_mut()
+            .ok_or_else(|| anyhow!("streamed call without a stream"))?;
+        let chunks = &self.view_chunks[0];
+        let backend = &mut self.backends[v];
+        let vp = ViewParams { z: &gv.z, log_hyp: &gv.log_hyp };
+        let mut dz = Mat::zeros(m, self.q);
+        let mut dhyp = vec![0.0; self.q + 1];
+        let mut i = 0;
+        while i < chunks.len() {
+            let hi = (i + 2).min(chunks.len());
+            for ch in &chunks[i..hi] {
+                stream.fill(ch.start, ch.live)?;
+            }
+            let tasks: Vec<ChunkTask> = chunks[i..hi]
+                .iter()
+                .map(|ch| ChunkTask { chunk: stream.slot(ch.start), latent: None })
+                .collect();
+            let grads = backend.stats_vjp_batch(&tasks, &vp, cts, &[])?;
+            for g in &grads {
+                dz.axpy(1.0, &g.dz);
+                for (a, b) in dhyp.iter_mut().zip(&g.dhyp) {
+                    *a += b;
+                }
+            }
+            i = hi;
         }
         Ok((dz, dhyp))
     }

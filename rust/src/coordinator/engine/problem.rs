@@ -8,15 +8,89 @@
 //! `ParamLayout` (crate-internal) is the single source of truth for
 //! those offsets; the cycle and the trainer never hand-compute them.
 
+use crate::data::store::ChunkSource;
 use crate::kern::RbfArd;
 use crate::linalg::Mat;
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// A view's observations: either a resident `N × D_v` matrix (the
+/// historical path, still what every variational problem uses) or a
+/// chunk store streamed on demand so a rank's working set stays
+/// O(chunk) instead of O(N/P).
+#[derive(Clone)]
+pub enum ViewData {
+    /// Resident matrix, fully in memory.
+    Resident(Mat),
+    /// Manifest-backed chunk store; payloads are pulled per chunk.
+    Store(Arc<dyn ChunkSource>),
+}
+
+impl std::fmt::Debug for ViewData {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ViewData::Resident(m) => {
+                write!(f, "Resident({}×{})", m.rows(), m.cols())
+            }
+            ViewData::Store(s) => {
+                let m = s.manifest();
+                write!(f, "Store({}×{}, q={}, {} chunks)",
+                       m.n, m.d, m.q, m.num_chunks())
+            }
+        }
+    }
+}
+
+impl From<Mat> for ViewData {
+    fn from(m: Mat) -> Self {
+        ViewData::Resident(m)
+    }
+}
+
+impl ViewData {
+    /// Datapoint count N.
+    pub fn rows(&self) -> usize {
+        match self {
+            ViewData::Resident(m) => m.rows(),
+            ViewData::Store(s) => s.manifest().n,
+        }
+    }
+
+    /// Output dimensionality D_v.
+    pub fn cols(&self) -> usize {
+        match self {
+            ViewData::Resident(m) => m.cols(),
+            ViewData::Store(s) => s.manifest().d,
+        }
+    }
+
+    /// The resident matrix, if this view is resident.
+    pub fn resident(&self) -> Option<&Mat> {
+        match self {
+            ViewData::Resident(m) => Some(m),
+            ViewData::Store(_) => None,
+        }
+    }
+
+    /// The chunk store, if this view is store-backed.
+    pub fn store(&self) -> Option<&Arc<dyn ChunkSource>> {
+        match self {
+            ViewData::Resident(_) => None,
+            ViewData::Store(s) => Some(s),
+        }
+    }
+
+    /// Is this view streamed from a chunk store?
+    pub fn is_store(&self) -> bool {
+        matches!(self, ViewData::Store(_))
+    }
+}
 
 /// One observed view: outputs plus per-view kernel/noise/inducing state.
 #[derive(Clone, Debug)]
 pub struct ViewSpec {
-    /// N × D_v observations.
-    pub y: Mat,
+    /// N × D_v observations (resident or store-backed).
+    pub y: ViewData,
     /// Initial inducing inputs, M × Q.
     pub z0: Mat,
     /// Initial kernel hyperparameters.
@@ -30,8 +104,12 @@ pub struct ViewSpec {
 /// The latent-input specification shared by all views.
 #[derive(Clone, Debug)]
 pub enum LatentSpec {
-    /// Supervised: X observed (N × Q).
+    /// Supervised: X observed (N × Q), resident.
     Observed(Mat),
+    /// Supervised: X observed, riding in view 0's chunk store (its x
+    /// block) — each rank streams its own chunks' inputs together with
+    /// the outputs, so X is never materialized anywhere.
+    ObservedStore,
     /// Unsupervised: variational q(x_n) = N(μ_n, diag S_n).
     Variational { mu0: Mat, s0: Mat },
 }
@@ -77,11 +155,39 @@ impl Problem {
             if view.z0.cols() != self.q || view.kern0.q() != self.q {
                 return Err(anyhow!("view {v}: Q mismatch"));
             }
+            // Store-backed views stream X and Y together per chunk, which
+            // only makes sense when the latents are the store's x block:
+            // variational problems scatter an O(N/P) (μ,S) span by protocol
+            // and so cannot run O(chunk); resident-X + store-Y would split
+            // one logical row across two sources.
+            if view.y.is_store() {
+                if self.views.len() != 1 {
+                    return Err(anyhow!(
+                        "store-backed views support exactly one view (got {})",
+                        self.views.len()));
+                }
+                if !matches!(self.latent, LatentSpec::ObservedStore) {
+                    return Err(anyhow!(
+                        "store-backed view requires LatentSpec::ObservedStore"));
+                }
+            }
         }
         match &self.latent {
             LatentSpec::Observed(x) => {
                 if x.rows() != n || x.cols() != self.q {
                     return Err(anyhow!("X shape mismatch"));
+                }
+            }
+            LatentSpec::ObservedStore => {
+                let man = match self.views[0].y.store() {
+                    Some(s) => s.manifest(),
+                    None => return Err(anyhow!(
+                        "ObservedStore latent requires a store-backed view 0")),
+                };
+                if man.q == 0 || man.q != self.q {
+                    return Err(anyhow!(
+                        "store has q={} x-columns, problem wants q={}",
+                        man.q, self.q));
                 }
             }
             LatentSpec::Variational { mu0, s0 } => {
@@ -104,7 +210,9 @@ pub struct Fitted {
     pub betas: Vec<f64>,
     /// Per-view fitted inducing inputs (M × Q).
     pub zs: Vec<Mat>,
-    /// Posterior means (variational) or the observed X (supervised).
+    /// Posterior means (variational) or the observed X (supervised,
+    /// resident). Empty (0 × 0) for store-backed problems — X stays on
+    /// disk; read it through the store if needed.
     pub mu: Mat,
     /// Posterior variances (variational) — empty for supervised.
     pub s: Mat,
@@ -194,6 +302,7 @@ impl ParamLayout {
             } else {
                 match &problem.latent {
                     LatentSpec::Observed(xobs) => xobs.clone(),
+                    LatentSpec::ObservedStore => Mat::zeros(0, 0),
                     _ => unreachable!(),
                 }
             },
@@ -259,7 +368,7 @@ mod tests {
         Problem {
             latent,
             views: vec![ViewSpec {
-                y,
+                y: y.into(),
                 z0: Mat::from_fn(m, q, |i, j| (i as f64) - (j as f64)),
                 kern0: RbfArd::iso(1.5, 0.7, q),
                 beta0: 4.0,
@@ -308,6 +417,53 @@ mod tests {
             *x = Mat::zeros(2, 2); // wrong N
         }
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validation_gates_store_backed_views() {
+        use crate::data::store::ResidentStore;
+        let n = 6;
+        let x = Mat::from_fn(n, 2, |i, j| (i + j) as f64 * 0.3);
+        let y = Mat::from_fn(n, 2, |i, j| (i * 2 + j) as f64 * 0.1);
+        let store: Arc<dyn ChunkSource> = Arc::new(
+            ResidentStore::from_mats(Some(x), y, 4).unwrap());
+
+        let mut p = toy_problem(false);
+        p.views[0].y = ViewData::Store(Arc::clone(&store));
+        // store-backed view with resident-X latent: rejected
+        assert!(p.validate().is_err());
+        // the matching latent makes it valid
+        p.latent = LatentSpec::ObservedStore;
+        p.validate().unwrap();
+        assert!(!p.latent.is_variational());
+        assert_eq!((p.n(), p.views[0].y.cols()), (n, 2));
+        // variational latents cannot stream (the (μ,S) span scatter is
+        // O(N/P) by protocol)
+        p.latent = LatentSpec::Variational {
+            mu0: Mat::zeros(n, 2),
+            s0: Mat::from_vec(n, 2, vec![0.5; n * 2]),
+        };
+        assert!(p.validate().is_err());
+        // ObservedStore without a store-backed view 0: rejected
+        let mut p = toy_problem(false);
+        p.latent = LatentSpec::ObservedStore;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn store_fitted_leaves_x_on_disk() {
+        use crate::data::store::ResidentStore;
+        let n = 6;
+        let x = Mat::from_fn(n, 2, |i, j| (i + j) as f64 * 0.3);
+        let y = Mat::from_fn(n, 2, |i, j| (i * 2 + j) as f64 * 0.1);
+        let mut p = toy_problem(false);
+        p.views[0].y = ViewData::Store(Arc::new(
+            ResidentStore::from_mats(Some(x), y, 4).unwrap()));
+        p.latent = LatentSpec::ObservedStore;
+        let layout = ParamLayout::new(&p);
+        let v = layout.initial_params(&p);
+        let fitted = layout.unpack_fitted(&p, &v);
+        assert_eq!((fitted.mu.rows(), fitted.s.rows()), (0, 0));
     }
 
     #[test]

@@ -44,6 +44,9 @@ pub struct EngineConfig {
     /// Number of SPMD ranks (rank 0 is the leader and also computes).
     pub workers: usize,
     /// Fixed chunk size C (must equal the AOT config's C for Xla).
+    /// Store-backed problems override this with the store manifest's
+    /// `chunk_rows` in [`Engine::new`] — the on-disk grid drives the
+    /// partition and the streaming windows.
     pub chunk: usize,
     /// Which backend evaluates the per-chunk statistics.
     pub backend: BackendKind,
@@ -177,7 +180,7 @@ impl Engine {
     /// here, before any compute rank spawns, so every rank and backend
     /// runs the same dispatch tier (the serial-vs-distributed
     /// bit-identity guarantees depend on that).
-    pub fn new(problem: Problem, cfg: EngineConfig) -> Result<Engine> {
+    pub fn new(problem: Problem, mut cfg: EngineConfig) -> Result<Engine> {
         if let Some(level) = cfg.simd {
             simd::set_active(level);
         }
@@ -185,7 +188,25 @@ impl Engine {
         if problem.views.iter().any(|v| v.z0.rows() != problem.views[0].z0.rows()) {
             return Err(anyhow!("all views must share M (per-view M is future work)"));
         }
+        if let Some(src) = problem.views[0].y.store() {
+            // the store's chunk grid is the partition grid: adopt its
+            // chunk size so every layer (partition, STATS slot mapping,
+            // streaming windows) agrees with the manifest
+            cfg.chunk = src.manifest().chunk_rows;
+        }
         Ok(Engine { problem, cfg })
+    }
+
+    /// The cluster's data partition: store-backed problems are assigned
+    /// **by manifest chunk id** ([`Partition::from_manifest`], which also
+    /// re-validates the manifest); resident problems by the arithmetic
+    /// grid.
+    fn partition(&self) -> Result<Partition> {
+        match self.problem.views[0].y.store() {
+            Some(src) => Partition::from_manifest(src.manifest(), self.cfg.workers),
+            None => Ok(Partition::new(self.problem.n(), self.cfg.chunk,
+                                      self.cfg.workers)),
+        }
     }
 
     /// Train to convergence (or the iteration budget).
@@ -277,13 +298,18 @@ impl Engine {
     pub fn train_then_serve<T: Send>(&self, rows_per_chunk: usize, fcfg: FrontendConfig,
                                      drive: impl FnOnce(FrontendHandle) -> T + Send)
                                      -> Result<(TrainResult, T, ServingReport)> {
-        if !matches!(self.problem.latent, LatentSpec::Observed(_)) {
-            bail!("train_then_serve needs a supervised problem (observed X)");
+        match self.problem.latent {
+            LatentSpec::Observed(_) => {}
+            LatentSpec::ObservedStore => bail!(
+                "serving store-backed problems is not yet supported \
+                 (train from the store, then build a resident problem to serve)"),
+            LatentSpec::Variational { .. } => bail!(
+                "train_then_serve needs a supervised problem (observed X)"),
         }
         if rows_per_chunk == 0 {
             bail!("rows_per_chunk must be positive");
         }
-        let part = Partition::new(self.problem.n(), self.cfg.chunk, self.cfg.workers);
+        let part = self.partition()?;
 
         // `Cluster::run` wants `Fn`, but `drive` is `FnOnce`; only
         // rank 0 takes it out of the slot, exactly once.
@@ -322,8 +348,13 @@ impl Engine {
     /// Validate a serving request against the problem.
     fn serve_plan<'a>(&self, xstar: &'a Mat, rows_per_chunk: usize, refit_demo: bool,
                       stream_rows: Option<usize>) -> Result<ServePlan<'a>> {
-        if !matches!(self.problem.latent, LatentSpec::Observed(_)) {
-            bail!("train_then_predict needs a supervised problem (observed X)");
+        match self.problem.latent {
+            LatentSpec::Observed(_) => {}
+            LatentSpec::ObservedStore => bail!(
+                "serving store-backed problems is not yet supported \
+                 (train from the store, then build a resident problem to serve)"),
+            LatentSpec::Variational { .. } => bail!(
+                "train_then_predict needs a supervised problem (observed X)"),
         }
         if xstar.cols() != self.problem.q {
             bail!("xstar has Q={}, problem has Q={}", xstar.cols(), self.problem.q);
@@ -339,7 +370,7 @@ impl Engine {
 
     fn run(&self, mode: RunMode, predict: Option<ServePlan>)
            -> Result<(TrainResult, Option<Served>)> {
-        let part = Partition::new(self.problem.n(), self.cfg.chunk, self.cfg.workers);
+        let part = self.partition()?;
 
         let mut results = Cluster::run(self.cfg.workers, |comm| {
             let rank = comm.rank();

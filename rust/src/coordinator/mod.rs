@@ -23,5 +23,6 @@ pub use backend::{make_backends, Backend, ChunkData, ChunkTask, FwdCache,
                   ParallelCpuBackend, RustCpuBackend, ViewParams, XlaBackend};
 pub use engine::{DistributedEvaluator, DistributedPosterior, Engine, EngineConfig, Fitted,
                  FrontendConfig, FrontendHandle, LatentSpec, OptChoice, Problem,
-                 ServeSignal, ServingFrontend, ServingReport, TrainResult, ViewSpec};
+                 ServeSignal, ServingFrontend, ServingReport, TrainResult, ViewData,
+                 ViewSpec};
 pub use partition::{ChunkRange, Partition};

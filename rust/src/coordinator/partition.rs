@@ -4,6 +4,15 @@
 //! chunk size C); the ragged tail is padded and masked with w ∈ {0,1}.
 //! Workers receive *contiguous* runs of chunks so their local parameter
 //! slices (μ, S rows) are contiguous ranges of the global matrices.
+//!
+//! Store-backed problems partition **by manifest chunk id**
+//! ([`Partition::from_manifest`]): the store's chunk grid *is* the
+//! partition grid, the per-chunk summary statistics gate assignment
+//! (a manifest with non-finite stats is rejected before any rank
+//! touches the data), and degenerate zero-row tail chunks are skipped.
+
+use crate::data::store::StoreManifest;
+use anyhow::{bail, Result};
 
 /// A contiguous run of datapoint indices `[start, end)`, `end − start ≤ C`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -37,6 +46,24 @@ pub struct Partition {
     pub per_worker: Vec<Vec<ChunkRange>>,
 }
 
+/// Deal a flat ordered chunk list across `workers` ranks in contiguous,
+/// balanced runs: first (k % workers) ranks get one extra chunk.
+fn deal_contiguous(chunks: &[ChunkRange], workers: usize) -> Vec<Vec<ChunkRange>> {
+    let k = chunks.len();
+    let mut per_worker = vec![Vec::new(); workers];
+    let base = k / workers;
+    let extra = k % workers;
+    let mut idx = 0;
+    for (r, bucket) in per_worker.iter_mut().enumerate() {
+        let take = base + usize::from(r < extra);
+        for _ in 0..take {
+            bucket.push(chunks[idx]);
+            idx += 1;
+        }
+    }
+    per_worker
+}
+
 impl Partition {
     /// Split `n` datapoints into `⌈n/chunk⌉` chunks and deal them out to
     /// `workers` ranks in contiguous, balanced runs.
@@ -46,20 +73,37 @@ impl Partition {
             .step_by(chunk)
             .map(|s| ChunkRange { start: s, end: (s + chunk).min(n) })
             .collect();
-        let k = chunks.len();
-        let mut per_worker = vec![Vec::new(); workers];
-        // balanced contiguous split: first (k % workers) ranks get one extra
-        let base = k / workers;
-        let extra = k % workers;
-        let mut idx = 0;
-        for (r, bucket) in per_worker.iter_mut().enumerate() {
-            let take = base + usize::from(r < extra);
-            for _ in 0..take {
-                bucket.push(chunks[idx]);
-                idx += 1;
-            }
-        }
+        let per_worker = deal_contiguous(&chunks, workers);
         Partition { n, chunk, per_worker }
+    }
+
+    /// Partition a chunk store **by manifest chunk id**: chunk `k` of the
+    /// store becomes chunk `k` of the partition, so a rank's assignment
+    /// doubles as the exact list of store chunks it will stream. The
+    /// manifest is re-validated first (offset grid, summary-stat sanity,
+    /// Σ rows == n), so a corrupt or degenerate store is rejected here —
+    /// before any rank opens the data file. Zero-row chunks cannot occur
+    /// in a valid manifest (validation requires every chunk non-empty),
+    /// so each assigned range is live by construction.
+    ///
+    /// For a well-formed store this is equivalent to
+    /// `Partition::new(man.n, man.chunk_rows, workers)` — the store's
+    /// full-chunk grid discipline makes chunk id ↔ row range pure
+    /// arithmetic — which keeps the STATS-round slot mapping
+    /// (`slot = start / chunk`) valid for streamed problems.
+    pub fn from_manifest(man: &StoreManifest, workers: usize) -> Result<Partition> {
+        if workers == 0 {
+            bail!("partition: need at least one worker");
+        }
+        man.validate()?;
+        let mut chunks = Vec::with_capacity(man.num_chunks());
+        let mut start = 0usize;
+        for meta in &man.chunks {
+            chunks.push(ChunkRange { start, end: start + meta.rows });
+            start += meta.rows;
+        }
+        let per_worker = deal_contiguous(&chunks, workers);
+        Ok(Partition { n: man.n, chunk: man.chunk_rows, per_worker })
     }
 
     /// The contiguous datapoint range owned by rank r (for local-parameter
@@ -149,5 +193,43 @@ mod tests {
         assert_eq!(p.num_chunks(), 1);
         assert!(p.worker_span(0).is_some());
         assert!(p.worker_span(3).is_none());
+    }
+
+    #[test]
+    fn prop_manifest_partition_matches_arithmetic_partition() {
+        use crate::data::store::{ChunkSource, ResidentStore};
+        use crate::linalg::Mat;
+        // For a well-formed store, from_manifest ≡ Partition::new over the
+        // same (n, chunk_rows, workers) — same grid, same dealing.
+        Prop::new("partition_manifest").cases(30).run(|rng| {
+            let n = 1 + (rng.next_u64() % 200) as usize;
+            let chunk = 1 + (rng.next_u64() % 32) as usize;
+            let workers = 1 + (rng.next_u64() % 9) as usize;
+            let y = Mat::from_fn(n, 2, |i, j| (i * 2 + j) as f64);
+            let store = ResidentStore::from_mats(None, y, chunk).unwrap();
+            let a = Partition::from_manifest(store.manifest(), workers).unwrap();
+            let b = Partition::new(n, chunk, workers);
+            assert_eq!((a.n, a.chunk), (b.n, b.chunk));
+            assert_eq!(a.per_worker, b.per_worker, "n={n} chunk={chunk} w={workers}");
+        });
+    }
+
+    #[test]
+    fn manifest_partition_rejects_corruption() {
+        use crate::data::store::{ChunkSource, ResidentStore};
+        use crate::linalg::Mat;
+        let y = Mat::from_fn(20, 1, |i, _| i as f64);
+        let store = ResidentStore::from_mats(None, y, 8).unwrap();
+        assert!(Partition::from_manifest(store.manifest(), 0).is_err());
+
+        // NaN summary stats must be caught before assignment.
+        let mut bad = store.manifest().clone();
+        bad.chunks[1].y_cols[0].mean = f64::NAN;
+        assert!(Partition::from_manifest(&bad, 2).is_err());
+
+        // A row count that breaks Σ rows == n likewise.
+        let mut bad = store.manifest().clone();
+        bad.chunks[2].rows = 1;
+        assert!(Partition::from_manifest(&bad, 2).is_err());
     }
 }

@@ -1,9 +1,12 @@
 //! Tiny CSV reader/writer for matrices (dataset import/export and the
-//! bench harness's result files). No quoting/escaping — numeric data only.
+//! bench harness's result files), plus the streaming CSV → chunk-store
+//! ingester behind `gpparallel ingest`. No quoting/escaping — numeric
+//! data only.
 
+use crate::data::store::{StoreManifest, StoreWriter};
 use crate::linalg::Mat;
 use anyhow::{bail, Context, Result};
-use std::io::Write;
+use std::io::{BufRead, Write};
 use std::path::Path;
 
 /// Write a matrix as CSV with an optional header row.
@@ -57,6 +60,68 @@ pub fn read_matrix(path: &Path, skip_header: bool) -> Result<Mat> {
     Ok(Mat::from_vec(data.len() / cols, cols, data))
 }
 
+/// Stream a CSV into an on-disk chunk store in O(chunk) memory: the
+/// first `q` columns become the x block, the remaining `d = cols − q`
+/// columns the y block. Tokens are parsed exactly like
+/// [`read_matrix`], so training from the store is bit-identical to
+/// training from the resident CSV path. With `center` set, the
+/// manifest records the column means of Y and readers subtract them
+/// per chunk.
+pub fn ingest_csv(csv: &Path, q: usize, out: &Path, chunk_rows: usize,
+                  center: bool, skip_header: bool) -> Result<StoreManifest> {
+    let f = std::fs::File::open(csv)
+        .with_context(|| format!("read {}", csv.display()))?;
+    let mut writer: Option<StoreWriter> = None;
+    let mut cols = 0usize;
+    let mut xbuf: Vec<f64> = Vec::new();
+    let mut ybuf: Vec<f64> = Vec::new();
+    let mut row: Vec<f64> = Vec::new();
+    for (lineno, line) in std::io::BufReader::new(f).lines().enumerate() {
+        let line = line.with_context(|| format!("read {}", csv.display()))?;
+        if lineno == 0 && skip_header {
+            continue;
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        row.clear();
+        for tok in line.split(',') {
+            row.push(tok.trim().parse::<f64>().with_context(
+                || format!("line {}: bad number {tok:?}", lineno + 1))?);
+        }
+        let w = match writer.as_mut() {
+            Some(w) => w,
+            None => {
+                cols = row.len();
+                if cols <= q {
+                    bail!("{}: {cols} columns, need more than q={q}",
+                          csv.display());
+                }
+                writer = Some(StoreWriter::create(out, q, cols - q, chunk_rows)?);
+                xbuf.reserve(chunk_rows * q);
+                ybuf.reserve(chunk_rows * (cols - q));
+                writer.as_mut().expect("just set")
+            }
+        };
+        if row.len() != cols {
+            bail!("ragged CSV {} at line {}", csv.display(), lineno + 1);
+        }
+        xbuf.extend_from_slice(&row[..q]);
+        ybuf.extend_from_slice(&row[q..]);
+        if ybuf.len() == chunk_rows * (cols - q) {
+            w.push_chunk(&xbuf, &ybuf)?;
+            xbuf.clear();
+            ybuf.clear();
+        }
+    }
+    let mut w = writer.ok_or_else(|| anyhow::anyhow!("empty CSV {}", csv.display()))?;
+    if !ybuf.is_empty() {
+        w.push_chunk(&xbuf, &ybuf)?;
+    }
+    w.finish(center)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,5 +144,30 @@ mod tests {
         let p = dir.join("bad.csv");
         std::fs::write(&p, "1,2\n3\n").unwrap();
         assert!(read_matrix(&p, false).is_err());
+        assert!(ingest_csv(&p, 1, &dir.join("store"), 4, false, false).is_err());
+    }
+
+    #[test]
+    fn ingest_matches_resident_read() {
+        use crate::data::store::{materialize, FileStore};
+        let dir = std::env::temp_dir().join(format!(
+            "gpparallel_csv_ingest_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = Mat::from_fn(11, 3, |i, j| ((i * 3 + j) as f64).cos() * 7.5);
+        let p = dir.join("m.csv");
+        write_matrix(&p, &m, None).unwrap();
+        let man = ingest_csv(&p, 1, &dir.join("store"), 4, false, false).unwrap();
+        assert_eq!((man.n, man.q, man.d), (11, 1, 2));
+        let fs = FileStore::open(&dir.join("store")).unwrap();
+        let (x, y) = materialize(&fs).unwrap();
+        // bit-identical split of the resident parse
+        let resident = read_matrix(&p, false).unwrap();
+        let x = x.unwrap();
+        for i in 0..11 {
+            assert!(x[(i, 0)] == resident[(i, 0)]);
+            assert!(y[(i, 0)] == resident[(i, 1)] && y[(i, 1)] == resident[(i, 2)]);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

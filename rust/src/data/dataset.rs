@@ -1,75 +1,149 @@
-//! In-memory dataset: `N × D` outputs (plus optional `N × Q` inputs for
-//! supervised models), row-major like everything else in the crate.
+//! A dataset is a **view over a chunk store** — `N × D` outputs (plus
+//! optional `N × Q` inputs for supervised models) behind the
+//! [`ChunkSource`] trait, resident or on disk. Consumers that want the
+//! historical resident matrices materialize them through [`Dataset::y`]
+//! / [`Dataset::x`]; streaming consumers go straight to the source.
 
+use crate::data::store::{
+    materialize, stream_y_mean, CenteredSource, ChunkSource, FileStore,
+    ResidentStore, StoreManifest, TakeSource, DEFAULT_CHUNK_ROWS,
+};
 use crate::linalg::Mat;
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
 
-/// A dataset. For supervised (SGPR) problems `x` is `Some`; for
-/// unsupervised (BGP-LVM / MRD) problems only `y` is observed.
-#[derive(Clone, Debug)]
+/// A dataset: a chunk-store view plus optional synthetic ground truth.
+/// For supervised (SGPR) problems the store carries an x block
+/// (`q() > 0`); for unsupervised (BGP-LVM / MRD) problems only Y is
+/// observed.
+#[derive(Clone)]
 pub struct Dataset {
-    /// Observed inputs, `N × Q` (supervised only).
-    pub x: Option<Mat>,
-    /// Observed outputs, `N × D`.
-    pub y: Mat,
-    /// Ground-truth latents, if the data is synthetic (for evaluation
-    /// only — never visible to inference).
-    pub latent_truth: Option<Mat>,
+    source: Arc<dyn ChunkSource>,
+    latent_truth: Option<Mat>,
+}
+
+impl std::fmt::Debug for Dataset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let m = self.manifest();
+        f.debug_struct("Dataset")
+            .field("n", &m.n)
+            .field("d", &m.d)
+            .field("q", &m.q)
+            .field("chunks", &m.num_chunks())
+            .field("latent_truth", &self.latent_truth.is_some())
+            .finish()
+    }
 }
 
 impl Dataset {
-    /// Outputs only (BGP-LVM / MRD input).
+    /// Outputs only (BGP-LVM / MRD input), wrapped in a resident store.
     pub fn unsupervised(y: Mat) -> Self {
-        Dataset { x: None, y, latent_truth: None }
+        let store = ResidentStore::from_mats(None, y, DEFAULT_CHUNK_ROWS)
+            .expect("resident dataset");
+        Dataset { source: Arc::new(store), latent_truth: None }
     }
 
-    /// Inputs + outputs (SGPR input).
+    /// Inputs + outputs (SGPR input), wrapped in a resident store.
     pub fn supervised(x: Mat, y: Mat) -> Self {
         assert_eq!(x.rows(), y.rows(), "X and Y row count mismatch");
-        Dataset { x: Some(x), y, latent_truth: None }
+        let store = ResidentStore::from_mats(Some(x), y, DEFAULT_CHUNK_ROWS)
+            .expect("resident dataset");
+        Dataset { source: Arc::new(store), latent_truth: None }
+    }
+
+    /// View over an existing chunk source (resident or on-disk).
+    pub fn from_store(source: Arc<dyn ChunkSource>) -> Self {
+        Dataset { source, latent_truth: None }
+    }
+
+    /// Open an on-disk store directory (`manifest.json` + `chunks.bin`).
+    pub fn open(dir: &Path) -> Result<Dataset> {
+        Ok(Dataset::from_store(Arc::new(FileStore::open(dir)?)))
+    }
+
+    /// Attach synthetic ground-truth latents (evaluation only — never
+    /// visible to inference).
+    pub fn with_latent_truth(mut self, truth: Mat) -> Self {
+        assert_eq!(truth.rows(), self.n(), "latent truth row count mismatch");
+        self.latent_truth = Some(truth);
+        self
+    }
+
+    /// The backing chunk source (streaming consumers start here).
+    pub fn source(&self) -> &Arc<dyn ChunkSource> {
+        &self.source
+    }
+
+    /// The store manifest (shape, chunk grid, per-chunk stats).
+    pub fn manifest(&self) -> &StoreManifest {
+        self.source.manifest()
     }
 
     /// Datapoint count N.
-    pub fn n(&self) -> usize { self.y.rows() }
+    pub fn n(&self) -> usize {
+        self.manifest().n
+    }
+
     /// Output dimensionality D.
-    pub fn d(&self) -> usize { self.y.cols() }
+    pub fn d(&self) -> usize {
+        self.manifest().d
+    }
 
-    /// Column means of Y.
+    /// Latent-input dimensionality Q (0 = unsupervised).
+    pub fn q(&self) -> usize {
+        self.manifest().q
+    }
+
+    /// Ground-truth latents, if the data is synthetic.
+    pub fn latent_truth(&self) -> Option<&Mat> {
+        self.latent_truth.as_ref()
+    }
+
+    /// Materialize the outputs as a resident `N × D` matrix (reads the
+    /// whole store through a chunk reader).
+    pub fn y(&self) -> Mat {
+        let (_, y) = materialize(self.source.as_ref()).expect("read dataset");
+        y
+    }
+
+    /// Materialize the inputs as a resident `N × Q` matrix (supervised
+    /// stores only).
+    pub fn x(&self) -> Option<Mat> {
+        if self.q() == 0 {
+            return None;
+        }
+        let (x, _) = materialize(self.source.as_ref()).expect("read dataset");
+        x
+    }
+
+    /// Column means of Y (one streaming pass, O(chunk) memory —
+    /// bit-identical to the historical resident loop).
     pub fn y_mean(&self) -> Vec<f64> {
-        let (n, d) = (self.n(), self.d());
-        let mut m = vec![0.0; d];
-        for i in 0..n {
-            for j in 0..d {
-                m[j] += self.y[(i, j)];
-            }
-        }
-        for v in &mut m { *v /= n as f64; }
-        m
+        stream_y_mean(self.source.as_ref()).expect("read dataset")
     }
 
-    /// Return a copy with Y centred (zero column means) — the usual
+    /// A centered **view** (zero column means) — the usual
     /// preprocessing before GP-LVM fitting; the means are returned so
-    /// predictions can be un-centred.
+    /// predictions can be un-centred. Centering is a manifest-level
+    /// transform applied per chunk on read, not a copy.
     pub fn centered(&self) -> (Dataset, Vec<f64>) {
-        let m = self.y_mean();
-        let mut y = self.y.clone();
-        for i in 0..y.rows() {
-            for j in 0..y.cols() {
-                y[(i, j)] -= m[j];
-            }
-        }
-        (Dataset { x: self.x.clone(), y, latent_truth: self.latent_truth.clone() }, m)
+        let (cs, mean) = CenteredSource::new(Arc::clone(&self.source))
+            .expect("read dataset");
+        (Dataset { source: Arc::new(cs), latent_truth: self.latent_truth.clone() },
+         mean)
     }
 
-    /// First `k` rows as a new dataset (for building size sweeps out of
-    /// one master dataset, exactly like the paper's 1k..64k slices).
+    /// First `k` rows as a chunk-range **view** (for building size
+    /// sweeps out of one master dataset, exactly like the paper's
+    /// 1k..64k slices) — O(chunk) work, no row copies.
     pub fn take(&self, k: usize) -> Dataset {
-        assert!(k <= self.n());
+        let t = TakeSource::new(Arc::clone(&self.source), k).expect("take view");
         let slice = |m: &Mat| {
             Mat::from_vec(k, m.cols(), m.as_slice()[..k * m.cols()].to_vec())
         };
         Dataset {
-            x: self.x.as_ref().map(&slice),
-            y: slice(&self.y),
+            source: Arc::new(t),
             latent_truth: self.latent_truth.as_ref().map(&slice),
         }
     }
@@ -84,8 +158,9 @@ mod tests {
         let y = Mat::from_fn(10, 3, |i, j| (i * 3 + j) as f64);
         let ds = Dataset::unsupervised(y);
         let (c, means) = ds.centered();
+        let cy = c.y();
         for j in 0..3 {
-            let col_mean: f64 = (0..10).map(|i| c.y[(i, j)]).sum::<f64>() / 10.0;
+            let col_mean: f64 = (0..10).map(|i| cy[(i, j)]).sum::<f64>() / 10.0;
             assert!(col_mean.abs() < 1e-12);
             assert!(means[j] > 0.0);
         }
@@ -97,12 +172,22 @@ mod tests {
         let ds = Dataset::unsupervised(y.clone());
         let t = ds.take(4);
         assert_eq!(t.n(), 4);
-        assert_eq!(t.y[(3, 1)], y[(3, 1)]);
+        assert_eq!(t.y()[(3, 1)], y[(3, 1)]);
     }
 
     #[test]
     #[should_panic]
     fn supervised_mismatch_panics() {
         let _ = Dataset::supervised(Mat::zeros(3, 1), Mat::zeros(4, 1));
+    }
+
+    #[test]
+    fn supervised_roundtrips_through_the_store() {
+        let x = Mat::from_fn(9, 2, |i, j| (i + j) as f64 * 0.5);
+        let y = Mat::from_fn(9, 1, |i, _| i as f64 - 4.0);
+        let ds = Dataset::supervised(x.clone(), y.clone());
+        assert_eq!((ds.n(), ds.d(), ds.q()), (9, 1, 2));
+        assert!(ds.x().unwrap().max_abs_diff(&x) == 0.0);
+        assert!(ds.y().max_abs_diff(&y) == 0.0);
     }
 }

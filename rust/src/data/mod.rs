@@ -1,10 +1,14 @@
-//! Data substrate: deterministic RNG, dataset container, the paper's
-//! synthetic GP-sampled dataset, and CSV import/export.
+//! Data substrate: deterministic RNG, the chunk-store data layer,
+//! dataset views over it, the paper's synthetic GP-sampled dataset,
+//! and CSV import/export (including the streaming `ingest` path).
 
 pub mod csv;
 pub mod dataset;
 pub mod rng;
+pub mod store;
 pub mod synthetic;
 
 pub use dataset::Dataset;
 pub use rng::Rng64;
+pub use store::{ChunkReader, ChunkScratch, ChunkSource, FileStore, ResidentStore,
+                StoreManifest, StoreWriter};

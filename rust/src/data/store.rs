@@ -1,0 +1,1097 @@
+//! Out-of-core chunked dataset layer: a dataset is a sequence of
+//! fixed-size row chunks in one binary file, described by a JSON
+//! manifest — not a resident matrix.
+//!
+//! ## On-disk format (`gpp-chunks-v1`)
+//!
+//! A store directory holds two files:
+//!
+//! - `chunks.bin` — an 8-byte magic (`GPCHNK1\0`) followed by the chunk
+//!   payloads back to back. Chunk k's payload is `rows_k · q` latent
+//!   inputs then `rows_k · d` outputs, row-major f64 little-endian
+//!   (`q = 0` for unsupervised data — no x block).
+//! - `manifest.json` — the shape (`n`, `d`, `q`, `chunk_rows`), the
+//!   column means of Y, a `center` flag, and one record per chunk: row
+//!   count, byte offset into `chunks.bin`, an FNV-1a 64 checksum of the
+//!   payload bytes (hex string), and per-column summary statistics
+//!   (mean/min/max) for the x and y blocks.
+//!
+//! Every chunk except the last holds exactly `chunk_rows` rows, so
+//! chunk ids map to row ranges arithmetically — the same grid
+//! [`Partition`](crate::coordinator::Partition) deals to ranks.
+//!
+//! ## Sources and views
+//!
+//! Two implementations sit behind the [`ChunkSource`] trait:
+//!
+//! - [`ResidentStore`] — resident `Mat`s presented through the chunk
+//!   interface (the test substrate; bit-identical to the historical
+//!   in-memory data model).
+//! - [`FileStore`] — sequential whole-payload reads into a reusable
+//!   buffer, checksum-verified per chunk; the steady-state read path is
+//!   allocation-free (`// lint: no-alloc`).
+//!
+//! Transforms are **views**, not copies: [`CenteredSource`] subtracts
+//! the manifest's `y_mean` per chunk on read, and [`TakeSource`]
+//! exposes a row prefix as a chunk-range view (one O(chunk) read to
+//! restate the boundary chunk's statistics). View manifests inherit
+//! the inner checksums as provenance metadata; bytes are verified by
+//! the layer that owns them ([`FileStore`] / [`ResidentStore`]).
+
+use crate::config::Json;
+use crate::linalg::Mat;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Read as _, Seek as _, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Manifest `format` field of the current chunk-store layout.
+pub const STORE_FORMAT: &str = "gpp-chunks-v1";
+
+/// Magic prefix of `chunks.bin`.
+pub const DATA_MAGIC: [u8; 8] = *b"GPCHNK1\0";
+
+/// Default rows per chunk for stores built from resident matrices.
+pub const DEFAULT_CHUNK_ROWS: usize = 1024;
+
+const MANIFEST_FILE: &str = "manifest.json";
+const DATA_FILE: &str = "chunks.bin";
+
+// ---------------------------------------------------------------------
+// manifest
+// ---------------------------------------------------------------------
+
+/// Per-column summary statistics of one block of one chunk.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ColStats {
+    /// Column mean over the chunk's rows.
+    pub mean: f64,
+    /// Column minimum.
+    pub min: f64,
+    /// Column maximum.
+    pub max: f64,
+}
+
+/// One chunk's manifest record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkMeta {
+    /// Rows in this chunk (`chunk_rows` for all but the last).
+    pub rows: usize,
+    /// Byte offset of the payload in the data file.
+    pub offset: u64,
+    /// FNV-1a 64 checksum of the payload bytes.
+    pub checksum: u64,
+    /// Per-column stats of the x block (`q` entries).
+    pub x_cols: Vec<ColStats>,
+    /// Per-column stats of the y block (`d` entries).
+    pub y_cols: Vec<ColStats>,
+}
+
+/// The JSON manifest describing a chunk store.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoreManifest {
+    /// Total datapoint count N.
+    pub n: usize,
+    /// Output dimensionality D.
+    pub d: usize,
+    /// Latent-input dimensionality Q (0 = unsupervised, no x block).
+    pub q: usize,
+    /// Rows per full chunk.
+    pub chunk_rows: usize,
+    /// Apply `y_mean` on read (centering as a manifest-level transform).
+    pub center: bool,
+    /// Column means of Y over the whole store (the centering
+    /// subtractor when `center` is set; informational otherwise).
+    pub y_mean: Vec<f64>,
+    /// Data file name within the store directory.
+    pub data_file: String,
+    /// Per-chunk records, in row order.
+    pub chunks: Vec<ChunkMeta>,
+}
+
+impl StoreManifest {
+    /// Chunk count.
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Payload byte length of chunk `k`.
+    pub fn payload_len(&self, k: usize) -> usize {
+        self.chunks[k].rows * (self.q + self.d) * 8
+    }
+
+    /// Global row index where chunk `k` starts.
+    pub fn chunk_start(&self, k: usize) -> usize {
+        self.chunks[..k].iter().map(|c| c.rows).sum()
+    }
+
+    /// Structural validation: shape consistency, exactly-sequential
+    /// non-overlapping offsets, full-chunk discipline (every chunk but
+    /// the last holds `chunk_rows` rows), and finite summary statistics
+    /// with `min <= max`. Checksums are verified at read time, not here.
+    pub fn validate(&self) -> Result<()> {
+        if self.n == 0 || self.d == 0 || self.chunk_rows == 0 {
+            bail!("manifest: n, d and chunk_rows must all be positive \
+                   (n={}, d={}, chunk_rows={})", self.n, self.d, self.chunk_rows);
+        }
+        if self.y_mean.len() != self.d {
+            bail!("manifest: y_mean has {} entries, expected d={}",
+                  self.y_mean.len(), self.d);
+        }
+        if self.y_mean.iter().any(|v| !v.is_finite()) {
+            bail!("manifest: non-finite y_mean");
+        }
+        if self.chunks.is_empty() {
+            bail!("manifest: no chunks");
+        }
+        let mut total = 0usize;
+        let mut expect_offset = DATA_MAGIC.len() as u64;
+        for (k, c) in self.chunks.iter().enumerate() {
+            if c.rows > self.chunk_rows {
+                bail!("chunk {k}: {} rows exceeds chunk_rows={}", c.rows,
+                      self.chunk_rows);
+            }
+            if c.rows < self.chunk_rows && k + 1 != self.chunks.len() {
+                bail!("chunk {k}: partial chunk ({} rows) before the last", c.rows);
+            }
+            if c.offset != expect_offset {
+                bail!("chunk {k}: offset {} overlaps or leaves a gap \
+                       (expected {expect_offset})", c.offset);
+            }
+            expect_offset += self.payload_len(k) as u64;
+            if c.x_cols.len() != self.q || c.y_cols.len() != self.d {
+                bail!("chunk {k}: stats arity mismatch ({} x cols, {} y cols; \
+                       expected q={}, d={})",
+                      c.x_cols.len(), c.y_cols.len(), self.q, self.d);
+            }
+            for s in c.x_cols.iter().chain(&c.y_cols) {
+                if !(s.mean.is_finite() && s.min.is_finite() && s.max.is_finite()) {
+                    bail!("chunk {k}: non-finite summary statistics");
+                }
+                if s.min > s.max {
+                    bail!("chunk {k}: min > max in summary statistics");
+                }
+            }
+            total += c.rows;
+        }
+        if total != self.n {
+            bail!("manifest: chunk rows sum to {total}, expected n={}", self.n);
+        }
+        Ok(())
+    }
+
+    /// Serialise to the manifest JSON document.
+    pub fn to_json(&self) -> Json {
+        let col = |s: &ColStats| {
+            let mut m = BTreeMap::new();
+            m.insert("mean".to_string(), Json::Num(s.mean));
+            m.insert("min".to_string(), Json::Num(s.min));
+            m.insert("max".to_string(), Json::Num(s.max));
+            Json::Obj(m)
+        };
+        let chunks = self.chunks.iter().map(|c| {
+            let mut m = BTreeMap::new();
+            m.insert("rows".to_string(), Json::Num(c.rows as f64));
+            m.insert("offset".to_string(), Json::Num(c.offset as f64));
+            // u64 does not survive the f64 number type; hex string instead
+            m.insert("checksum".to_string(), Json::Str(format!("{:016x}", c.checksum)));
+            m.insert("x_cols".to_string(), Json::Arr(c.x_cols.iter().map(col).collect()));
+            m.insert("y_cols".to_string(), Json::Arr(c.y_cols.iter().map(col).collect()));
+            Json::Obj(m)
+        }).collect();
+        let mut m = BTreeMap::new();
+        m.insert("format".to_string(), Json::Str(STORE_FORMAT.to_string()));
+        m.insert("n".to_string(), Json::Num(self.n as f64));
+        m.insert("d".to_string(), Json::Num(self.d as f64));
+        m.insert("q".to_string(), Json::Num(self.q as f64));
+        m.insert("chunk_rows".to_string(), Json::Num(self.chunk_rows as f64));
+        m.insert("center".to_string(), Json::Bool(self.center));
+        m.insert("y_mean".to_string(),
+                 Json::Arr(self.y_mean.iter().map(|&v| Json::Num(v)).collect()));
+        m.insert("data_file".to_string(), Json::Str(self.data_file.clone()));
+        m.insert("chunks".to_string(), Json::Arr(chunks));
+        Json::Obj(m)
+    }
+
+    /// Parse and validate a manifest JSON document.
+    pub fn from_json(j: &Json) -> Result<StoreManifest> {
+        if j.get("format").and_then(Json::as_str) != Some(STORE_FORMAT) {
+            bail!("manifest format must be {STORE_FORMAT:?} (got {:?})",
+                  j.get("format").and_then(Json::as_str));
+        }
+        let field = |k: &str| j.get(k).and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest: missing or non-integer {k:?}"));
+        let num = |v: &Json, what: &str| v.as_f64()
+            .ok_or_else(|| anyhow!("manifest: non-numeric {what}"));
+        let col = |v: &Json, what: &str| -> Result<ColStats> {
+            Ok(ColStats {
+                mean: num(v.get("mean").unwrap_or(&Json::Null), what)?,
+                min: num(v.get("min").unwrap_or(&Json::Null), what)?,
+                max: num(v.get("max").unwrap_or(&Json::Null), what)?,
+            })
+        };
+        let mut chunks = Vec::new();
+        for (k, c) in j.get("chunks").and_then(Json::as_arr).unwrap_or(&[]).iter()
+                       .enumerate() {
+            let rows = c.get("rows").and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("chunk {k}: missing rows"))?;
+            let offset = c.get("offset").and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("chunk {k}: missing offset"))? as u64;
+            let sum = c.get("checksum").and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("chunk {k}: missing checksum"))?;
+            let checksum = u64::from_str_radix(sum, 16)
+                .with_context(|| format!("chunk {k}: malformed checksum {sum:?}"))?;
+            let stats = |key: &str| -> Result<Vec<ColStats>> {
+                c.get(key).and_then(Json::as_arr).unwrap_or(&[]).iter()
+                    .map(|v| col(v, key)).collect()
+            };
+            chunks.push(ChunkMeta {
+                rows, offset, checksum,
+                x_cols: stats("x_cols")?,
+                y_cols: stats("y_cols")?,
+            });
+        }
+        let y_mean = j.get("y_mean").and_then(Json::as_arr).unwrap_or(&[]).iter()
+            .map(|v| num(v, "y_mean"))
+            .collect::<Result<Vec<f64>>>()?;
+        let man = StoreManifest {
+            n: field("n")?,
+            d: field("d")?,
+            q: field("q")?,
+            chunk_rows: field("chunk_rows")?,
+            center: j.get("center") == Some(&Json::Bool(true)),
+            y_mean,
+            data_file: j.get("data_file").and_then(Json::as_str)
+                .unwrap_or(DATA_FILE).to_string(),
+            chunks,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+}
+
+// ---------------------------------------------------------------------
+// the source/reader traits
+// ---------------------------------------------------------------------
+
+/// A chunked dataset: a manifest plus the ability to open readers.
+/// Implementations are shared across ranks behind an `Arc`, so the
+/// trait is `Send + Sync`; per-rank mutable read state lives in the
+/// [`ChunkReader`] each rank opens for itself.
+pub trait ChunkSource: Send + Sync {
+    /// The store's manifest.
+    fn manifest(&self) -> &StoreManifest;
+
+    /// Open an independent reader (own file handle / scratch buffer).
+    fn open_reader(&self) -> Result<Box<dyn ChunkReader>>;
+}
+
+/// A stateful reader over one [`ChunkSource`]. `read_chunk` fills the
+/// caller's buffers with chunk `k`'s decoded (and, if the manifest says
+/// `center`, centered) payload: the first `rows·q` elements of `x_out`
+/// and the first `rows·d` elements of `y_out`, row-major.
+pub trait ChunkReader: Send {
+    /// Read chunk `k`. `x_out` / `y_out` must hold at least `rows·q` /
+    /// `rows·d` elements; anything past that prefix is left untouched.
+    fn read_chunk(&mut self, k: usize, x_out: &mut [f64], y_out: &mut [f64])
+                  -> Result<()>;
+}
+
+fn check_out_lens(man: &StoreManifest, k: usize, x_len: usize, y_len: usize)
+                  -> Result<usize> {
+    let meta = man.chunks.get(k)
+        .ok_or_else(|| anyhow!("chunk {k} out of range ({} chunks)",
+                               man.chunks.len()))?;
+    if x_len < meta.rows * man.q || y_len < meta.rows * man.d {
+        bail!("chunk {k}: output buffers too small ({x_len}/{y_len} for \
+               {} rows x q={} d={})", meta.rows, man.q, man.d);
+    }
+    Ok(meta.rows)
+}
+
+// ---------------------------------------------------------------------
+// checksum + payload codec
+// ---------------------------------------------------------------------
+
+/// FNV-1a 64 over a byte slice (the per-chunk payload checksum).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn read_f64_le(b: &[u8]) -> f64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(b);
+    f64::from_le_bytes(a)
+}
+
+fn encode_payload(enc: &mut Vec<u8>, x: &[f64], y: &[f64]) {
+    enc.clear();
+    enc.reserve(8 * (x.len() + y.len()));
+    for v in x.iter().chain(y) {
+        enc.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn col_stats(data: &[f64], rows: usize, cols: usize) -> Vec<ColStats> {
+    let mut out = vec![ColStats { mean: 0.0, min: f64::INFINITY,
+                                  max: f64::NEG_INFINITY }; cols];
+    for r in 0..rows {
+        for (j, s) in out.iter_mut().enumerate() {
+            let v = data[r * cols + j];
+            s.mean += v;
+            s.min = s.min.min(v);
+            s.max = s.max.max(v);
+        }
+    }
+    for s in &mut out {
+        s.mean /= rows as f64;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// manifest builder (shared by StoreWriter and ResidentStore)
+// ---------------------------------------------------------------------
+
+struct ManifestBuilder {
+    q: usize,
+    d: usize,
+    chunk_rows: usize,
+    n: usize,
+    offset: u64,
+    chunks: Vec<ChunkMeta>,
+    /// Per-column running sums of Y, accumulated in row order across
+    /// chunks — bit-identical to the resident column-mean loop (each
+    /// accumulator sees the same operands in the same order).
+    y_sum: Vec<f64>,
+}
+
+impl ManifestBuilder {
+    fn new(q: usize, d: usize, chunk_rows: usize) -> ManifestBuilder {
+        ManifestBuilder {
+            q, d, chunk_rows,
+            n: 0,
+            offset: DATA_MAGIC.len() as u64,
+            chunks: Vec::new(),
+            y_sum: vec![0.0; d],
+        }
+    }
+
+    fn add_chunk(&mut self, x: &[f64], y: &[f64], payload: &[u8]) -> Result<()> {
+        let rows = y.len() / self.d;
+        if rows == 0 || rows > self.chunk_rows {
+            bail!("chunk of {rows} rows (need 1..={})", self.chunk_rows);
+        }
+        if y.len() != rows * self.d || x.len() != rows * self.q {
+            bail!("chunk payload shape mismatch");
+        }
+        if let Some(last) = self.chunks.last() {
+            if last.rows != self.chunk_rows {
+                bail!("only the last chunk may be partial");
+            }
+        }
+        for r in 0..rows {
+            for (j, s) in self.y_sum.iter_mut().enumerate() {
+                *s += y[r * self.d + j];
+            }
+        }
+        self.chunks.push(ChunkMeta {
+            rows,
+            offset: self.offset,
+            checksum: fnv1a(payload),
+            x_cols: col_stats(x, rows, self.q),
+            y_cols: col_stats(y, rows, self.d),
+        });
+        self.offset += payload.len() as u64;
+        self.n += rows;
+        Ok(())
+    }
+
+    fn finish(self, center: bool) -> Result<StoreManifest> {
+        if self.n == 0 {
+            bail!("empty store: push at least one chunk");
+        }
+        let n = self.n as f64;
+        let man = StoreManifest {
+            n: self.n,
+            d: self.d,
+            q: self.q,
+            chunk_rows: self.chunk_rows,
+            center,
+            y_mean: self.y_sum.iter().map(|s| s / n).collect(),
+            data_file: DATA_FILE.to_string(),
+            chunks: self.chunks,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+}
+
+// ---------------------------------------------------------------------
+// StoreWriter: build a store on disk chunk by chunk
+// ---------------------------------------------------------------------
+
+/// Incremental writer of an on-disk chunk store: push chunks in row
+/// order (O(chunk) memory), then `finish` writes the manifest. Rejects
+/// non-finite values — a store is validated data by construction.
+pub struct StoreWriter {
+    dir: PathBuf,
+    file: BufWriter<File>,
+    builder: ManifestBuilder,
+    enc: Vec<u8>,
+}
+
+impl StoreWriter {
+    /// Create `<dir>/chunks.bin` (and the directory) and write the magic.
+    pub fn create(dir: &Path, q: usize, d: usize, chunk_rows: usize)
+                  -> Result<StoreWriter> {
+        if d == 0 || chunk_rows == 0 {
+            bail!("store needs d >= 1 and chunk_rows >= 1");
+        }
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create store dir {}", dir.display()))?;
+        let path = dir.join(DATA_FILE);
+        let mut file = BufWriter::new(File::create(&path)
+            .with_context(|| format!("create {}", path.display()))?);
+        file.write_all(&DATA_MAGIC)?;
+        Ok(StoreWriter {
+            dir: dir.to_path_buf(),
+            file,
+            builder: ManifestBuilder::new(q, d, chunk_rows),
+            enc: Vec::new(),
+        })
+    }
+
+    /// Append one chunk (`rows` inferred from `y.len() / d`; all chunks
+    /// but the final one must hold exactly `chunk_rows` rows).
+    pub fn push_chunk(&mut self, x: &[f64], y: &[f64]) -> Result<()> {
+        if x.iter().chain(y).any(|v| !v.is_finite()) {
+            bail!("non-finite value in chunk {} — refusing to write",
+                  self.builder.chunks.len());
+        }
+        encode_payload(&mut self.enc, x, y);
+        self.builder.add_chunk(x, y, &self.enc)?;
+        self.file.write_all(&self.enc)?;
+        Ok(())
+    }
+
+    /// Rows written so far.
+    pub fn rows_written(&self) -> usize {
+        self.builder.n
+    }
+
+    /// Flush the data file and write `manifest.json`. With `center`
+    /// set, readers will subtract the manifest's `y_mean` per chunk —
+    /// centering as metadata, no second pass over the data.
+    pub fn finish(mut self, center: bool) -> Result<StoreManifest> {
+        self.file.flush()?;
+        let man = self.builder.finish(center)?;
+        let path = self.dir.join(MANIFEST_FILE);
+        std::fs::write(&path, man.to_json().to_string_pretty())
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(man)
+    }
+}
+
+// ---------------------------------------------------------------------
+// FileStore
+// ---------------------------------------------------------------------
+
+/// An on-disk chunk store opened for reading. Opening validates the
+/// manifest structurally and checks the data file's magic and exact
+/// size; per-chunk checksums are verified as chunks are read.
+pub struct FileStore {
+    manifest: Arc<StoreManifest>,
+    data_path: PathBuf,
+}
+
+impl FileStore {
+    /// Open `<dir>/manifest.json` + data file, rejecting malformed or
+    /// inconsistent stores.
+    pub fn open(dir: &Path) -> Result<FileStore> {
+        let mpath = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("read {}", mpath.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parse {}", mpath.display()))?;
+        let manifest = StoreManifest::from_json(&j)
+            .with_context(|| format!("validate {}", mpath.display()))?;
+        let data_path = dir.join(&manifest.data_file);
+        let mut f = File::open(&data_path)
+            .with_context(|| format!("open {}", data_path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic).context("read data-file magic")?;
+        if magic != DATA_MAGIC {
+            bail!("{}: bad magic (not a {STORE_FORMAT} data file)",
+                  data_path.display());
+        }
+        let want = DATA_MAGIC.len() as u64
+            + (0..manifest.num_chunks()).map(|k| manifest.payload_len(k) as u64)
+                                        .sum::<u64>();
+        let got = f.metadata()?.len();
+        if got != want {
+            bail!("{}: {got} bytes on disk, manifest describes {want}",
+                  data_path.display());
+        }
+        Ok(FileStore { manifest: Arc::new(manifest), data_path })
+    }
+}
+
+impl ChunkSource for FileStore {
+    fn manifest(&self) -> &StoreManifest {
+        &self.manifest
+    }
+
+    fn open_reader(&self) -> Result<Box<dyn ChunkReader>> {
+        let file = File::open(&self.data_path)
+            .with_context(|| format!("open {}", self.data_path.display()))?;
+        let cap = self.manifest.chunk_rows * (self.manifest.q + self.manifest.d) * 8;
+        Ok(Box::new(FileStoreReader {
+            manifest: Arc::clone(&self.manifest),
+            file,
+            pos: 0,
+            buf: Vec::with_capacity(cap),
+        }))
+    }
+}
+
+/// Reader over a [`FileStore`]: one file handle plus one reusable byte
+/// buffer sized for a full chunk — sequential reads never reallocate.
+struct FileStoreReader {
+    manifest: Arc<StoreManifest>,
+    file: File,
+    /// Current file position (skip the seek when reads are sequential).
+    pos: u64,
+    buf: Vec<u8>,
+}
+
+impl ChunkReader for FileStoreReader {
+    // The steady-state read path: the byte buffer is preallocated at
+    // open for a full chunk, so `resize` never reallocates here.
+    // lint: no-alloc
+    fn read_chunk(&mut self, k: usize, x_out: &mut [f64], y_out: &mut [f64])
+                  -> Result<()> {
+        let man = &self.manifest;
+        let rows = check_out_lens(man, k, x_out.len(), y_out.len())?;
+        let meta = &man.chunks[k];
+        let want = man.payload_len(k);
+        if self.pos != meta.offset {
+            self.file.seek(SeekFrom::Start(meta.offset))?;
+        }
+        self.buf.resize(want, 0);
+        self.file.read_exact(&mut self.buf)
+            .with_context(|| format!("read chunk {k} payload"))?;
+        self.pos = meta.offset + want as u64;
+        let sum = fnv1a(&self.buf);
+        if sum != meta.checksum {
+            bail!("chunk {k}: checksum mismatch (stored {:016x}, read {sum:016x})",
+                  meta.checksum);
+        }
+        let (xb, yb) = self.buf.split_at(rows * man.q * 8);
+        for (dst, src) in x_out[..rows * man.q].iter_mut().zip(xb.chunks_exact(8)) {
+            *dst = read_f64_le(src);
+        }
+        for (dst, src) in y_out[..rows * man.d].iter_mut().zip(yb.chunks_exact(8)) {
+            *dst = read_f64_le(src);
+        }
+        if man.center {
+            for r in 0..rows {
+                for (j, m) in man.y_mean.iter().enumerate() {
+                    y_out[r * man.d + j] -= m;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// ResidentStore
+// ---------------------------------------------------------------------
+
+/// Resident matrices presented through the chunk interface — the test
+/// substrate, bit-identical to the historical in-memory data model
+/// (reads are row-range copies out of the backing `Mat`s).
+pub struct ResidentStore {
+    manifest: Arc<StoreManifest>,
+    x: Arc<Mat>,
+    y: Arc<Mat>,
+}
+
+impl ResidentStore {
+    /// Wrap resident matrices (x may be `None` for unsupervised data)
+    /// on the `chunk_rows` grid, computing the manifest (stats,
+    /// checksums, y means) in one pass.
+    pub fn from_mats(x: Option<Mat>, y: Mat, chunk_rows: usize)
+                     -> Result<ResidentStore> {
+        let (n, d) = (y.rows(), y.cols());
+        let q = x.as_ref().map(|m| m.cols()).unwrap_or(0);
+        if let Some(xm) = &x {
+            if xm.rows() != n {
+                bail!("X has {} rows, Y has {n}", xm.rows());
+            }
+        }
+        if n == 0 {
+            bail!("empty dataset");
+        }
+        let mut b = ManifestBuilder::new(q, d, chunk_rows);
+        let mut enc = Vec::new();
+        let empty = Mat::zeros(0, 0);
+        let xm = x.as_ref().unwrap_or(&empty);
+        for start in (0..n).step_by(chunk_rows) {
+            let rows = chunk_rows.min(n - start);
+            let xs = &xm.as_slice()[start * q..(start + rows) * q];
+            let ys = &y.as_slice()[start * d..(start + rows) * d];
+            encode_payload(&mut enc, xs, ys);
+            b.add_chunk(xs, ys, &enc)?;
+        }
+        Ok(ResidentStore {
+            manifest: Arc::new(b.finish(false)?),
+            x: Arc::new(x.unwrap_or(empty)),
+            y: Arc::new(y),
+        })
+    }
+}
+
+impl ChunkSource for ResidentStore {
+    fn manifest(&self) -> &StoreManifest {
+        &self.manifest
+    }
+
+    fn open_reader(&self) -> Result<Box<dyn ChunkReader>> {
+        Ok(Box::new(ResidentReader {
+            manifest: Arc::clone(&self.manifest),
+            x: Arc::clone(&self.x),
+            y: Arc::clone(&self.y),
+        }))
+    }
+}
+
+struct ResidentReader {
+    manifest: Arc<StoreManifest>,
+    x: Arc<Mat>,
+    y: Arc<Mat>,
+}
+
+impl ChunkReader for ResidentReader {
+    // lint: no-alloc
+    fn read_chunk(&mut self, k: usize, x_out: &mut [f64], y_out: &mut [f64])
+                  -> Result<()> {
+        let man = &self.manifest;
+        let rows = check_out_lens(man, k, x_out.len(), y_out.len())?;
+        // every chunk but the last is full, so the grid is arithmetic
+        let start = k * man.chunk_rows;
+        if man.q > 0 {
+            x_out[..rows * man.q].copy_from_slice(
+                &self.x.as_slice()[start * man.q..(start + rows) * man.q]);
+        }
+        y_out[..rows * man.d].copy_from_slice(
+            &self.y.as_slice()[start * man.d..(start + rows) * man.d]);
+        if man.center {
+            for r in 0..rows {
+                for (j, m) in man.y_mean.iter().enumerate() {
+                    y_out[r * man.d + j] -= m;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// view sources: centering and row-prefix takes without copies
+// ---------------------------------------------------------------------
+
+/// A centered view over another source: the manifest records the inner
+/// data's column means and sets `center`; readers subtract them per
+/// chunk on read. O(1) memory — centering is metadata, not a copy.
+pub struct CenteredSource {
+    inner: Arc<dyn ChunkSource>,
+    manifest: Arc<StoreManifest>,
+}
+
+impl CenteredSource {
+    /// Wrap `inner`, computing its column means with one streaming pass
+    /// (row-order accumulation — bit-identical to the resident loop).
+    /// Returns the view and the means it will subtract.
+    pub fn new(inner: Arc<dyn ChunkSource>) -> Result<(CenteredSource, Vec<f64>)> {
+        let mean = stream_y_mean(inner.as_ref())?;
+        let mut man = inner.manifest().clone();
+        for c in &mut man.chunks {
+            for (j, s) in c.y_cols.iter_mut().enumerate() {
+                s.mean -= mean[j];
+                s.min -= mean[j];
+                s.max -= mean[j];
+            }
+        }
+        man.center = true;
+        man.y_mean = mean.clone();
+        Ok((CenteredSource { inner, manifest: Arc::new(man) }, mean))
+    }
+}
+
+impl ChunkSource for CenteredSource {
+    fn manifest(&self) -> &StoreManifest {
+        &self.manifest
+    }
+
+    fn open_reader(&self) -> Result<Box<dyn ChunkReader>> {
+        Ok(Box::new(CenteredReader {
+            inner: self.inner.open_reader()?,
+            manifest: Arc::clone(&self.manifest),
+        }))
+    }
+}
+
+struct CenteredReader {
+    inner: Box<dyn ChunkReader>,
+    manifest: Arc<StoreManifest>,
+}
+
+impl ChunkReader for CenteredReader {
+    // lint: no-alloc
+    fn read_chunk(&mut self, k: usize, x_out: &mut [f64], y_out: &mut [f64])
+                  -> Result<()> {
+        self.inner.read_chunk(k, x_out, y_out)?;
+        let man = &self.manifest;
+        let rows = man.chunks[k].rows;
+        for r in 0..rows {
+            for (j, m) in man.y_mean.iter().enumerate() {
+                y_out[r * man.d + j] -= m;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A row-prefix view over another source (the paper's 1k..64k size
+/// sweeps out of one master dataset): whole chunks pass through, the
+/// boundary chunk is exposed truncated. Construction does one O(chunk)
+/// read to restate the boundary chunk's statistics and checksum in
+/// terms of the logical (truncated) payload.
+pub struct TakeSource {
+    inner: Arc<dyn ChunkSource>,
+    manifest: Arc<StoreManifest>,
+    /// Rows the boundary chunk holds in the *inner* store.
+    boundary_full_rows: usize,
+}
+
+impl TakeSource {
+    /// View of the first `k` rows (`1 <= k <= n`).
+    pub fn new(inner: Arc<dyn ChunkSource>, k: usize) -> Result<TakeSource> {
+        let im = inner.manifest();
+        if k == 0 || k > im.n {
+            bail!("take({k}) out of range for n={}", im.n);
+        }
+        let mut man = im.clone();
+        man.n = k;
+        man.chunks.clear();
+        let mut start = 0usize;
+        let mut boundary_full_rows = 0;
+        for c in &im.chunks {
+            if start >= k {
+                break;
+            }
+            let mut meta = c.clone();
+            if start + c.rows > k {
+                meta.rows = k - start;
+                boundary_full_rows = c.rows;
+            }
+            start += c.rows;
+            man.chunks.push(meta);
+        }
+        if boundary_full_rows > 0 {
+            // restate the boundary chunk's stats/checksum for the
+            // truncated logical payload (one O(chunk) read)
+            let b = man.chunks.len() - 1;
+            let rows = man.chunks[b].rows;
+            let mut x = vec![0.0; boundary_full_rows * im.q];
+            let mut y = vec![0.0; boundary_full_rows * im.d];
+            inner.open_reader()?.read_chunk(b, &mut x, &mut y)?;
+            x.truncate(rows * im.q);
+            y.truncate(rows * im.d);
+            let mut enc = Vec::new();
+            encode_payload(&mut enc, &x, &y);
+            let meta = &mut man.chunks[b];
+            meta.checksum = fnv1a(&enc);
+            meta.x_cols = col_stats(&x, rows, im.q);
+            meta.y_cols = col_stats(&y, rows, im.d);
+        }
+        Ok(TakeSource { inner, manifest: Arc::new(man), boundary_full_rows })
+    }
+}
+
+impl ChunkSource for TakeSource {
+    fn manifest(&self) -> &StoreManifest {
+        &self.manifest
+    }
+
+    fn open_reader(&self) -> Result<Box<dyn ChunkReader>> {
+        let man = &self.manifest;
+        let (xcap, ycap) = if self.boundary_full_rows > 0 {
+            (self.boundary_full_rows * man.q, self.boundary_full_rows * man.d)
+        } else {
+            (0, 0)
+        };
+        Ok(Box::new(TakeReader {
+            inner: self.inner.open_reader()?,
+            manifest: Arc::clone(man),
+            xbuf: vec![0.0; xcap],
+            ybuf: vec![0.0; ycap],
+        }))
+    }
+}
+
+struct TakeReader {
+    inner: Box<dyn ChunkReader>,
+    manifest: Arc<StoreManifest>,
+    /// Full-size staging for the truncated boundary chunk (preallocated
+    /// at open; empty when the take lands on a chunk boundary).
+    xbuf: Vec<f64>,
+    ybuf: Vec<f64>,
+}
+
+impl ChunkReader for TakeReader {
+    // lint: no-alloc
+    fn read_chunk(&mut self, k: usize, x_out: &mut [f64], y_out: &mut [f64])
+                  -> Result<()> {
+        let man = &self.manifest;
+        let rows = check_out_lens(man, k, x_out.len(), y_out.len())?;
+        // `ybuf` is non-empty exactly when the view truncates its last
+        // chunk (d >= 1 always; q may be 0, so xbuf is no sentinel)
+        if k + 1 == man.chunks.len() && !self.ybuf.is_empty() {
+            // boundary chunk: stage the inner (longer) payload, expose
+            // the prefix
+            self.inner.read_chunk(k, &mut self.xbuf, &mut self.ybuf)?;
+            x_out[..rows * man.q].copy_from_slice(&self.xbuf[..rows * man.q]);
+            y_out[..rows * man.d].copy_from_slice(&self.ybuf[..rows * man.d]);
+        } else {
+            self.inner.read_chunk(k, x_out, y_out)?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// ChunkScratch + streaming helpers
+// ---------------------------------------------------------------------
+
+/// One decoded chunk in a [`ChunkScratch`] slot.
+pub struct ChunkBuf {
+    /// Manifest chunk id.
+    pub chunk: usize,
+    /// Global row index of the first row.
+    pub start: usize,
+    /// Rows held.
+    pub rows: usize,
+    /// Decoded x block (`rows · q`).
+    pub x: Vec<f64>,
+    /// Decoded y block (`rows · d`).
+    pub y: Vec<f64>,
+}
+
+/// A reusable double-buffered decode scratch: chunk `k` lands in slot
+/// `k % 2`, so a consumer can hold a window of two chunks live while
+/// streaming a store in O(chunk) memory. Buffers are preallocated for
+/// a full chunk at construction; `fill` never allocates.
+pub struct ChunkScratch {
+    slots: [ChunkBuf; 2],
+}
+
+impl ChunkScratch {
+    /// Scratch sized for `man`'s chunk grid.
+    pub fn new(man: &StoreManifest) -> ChunkScratch {
+        let buf = || ChunkBuf {
+            chunk: usize::MAX,
+            start: 0,
+            rows: 0,
+            x: Vec::with_capacity(man.chunk_rows * man.q),
+            y: Vec::with_capacity(man.chunk_rows * man.d),
+        };
+        ChunkScratch { slots: [buf(), buf()] }
+    }
+
+    /// Read chunk `k` into slot `k % 2` and return it.
+    // lint: no-alloc
+    pub fn fill(&mut self, reader: &mut dyn ChunkReader,
+                man: &StoreManifest, k: usize) -> Result<&ChunkBuf> {
+        let rows = man.chunks.get(k)
+            .ok_or_else(|| anyhow!("chunk {k} out of range"))?.rows;
+        let slot = &mut self.slots[k % 2];
+        slot.x.resize(rows * man.q, 0.0);
+        slot.y.resize(rows * man.d, 0.0);
+        reader.read_chunk(k, &mut slot.x, &mut slot.y)?;
+        slot.chunk = k;
+        slot.start = k * man.chunk_rows;
+        slot.rows = rows;
+        Ok(&self.slots[k % 2])
+    }
+
+    /// Both slots (slot 0, slot 1) — for consumers holding a two-chunk
+    /// window live at once.
+    pub fn slots(&self) -> (&ChunkBuf, &ChunkBuf) {
+        (&self.slots[0], &self.slots[1])
+    }
+}
+
+/// Column means of Y computed with one streaming pass in row order —
+/// bit-identical to the historical resident loop (each per-column
+/// accumulator sees the same operands in the same order).
+pub fn stream_y_mean(src: &dyn ChunkSource) -> Result<Vec<f64>> {
+    let man = src.manifest();
+    let mut reader = src.open_reader()?;
+    let mut scratch = ChunkScratch::new(man);
+    let mut sum = vec![0.0; man.d];
+    for k in 0..man.num_chunks() {
+        let buf = scratch.fill(reader.as_mut(), man, k)?;
+        for r in 0..buf.rows {
+            for (j, s) in sum.iter_mut().enumerate() {
+                *s += buf.y[r * man.d + j];
+            }
+        }
+    }
+    for s in &mut sum {
+        *s /= man.n as f64;
+    }
+    Ok(sum)
+}
+
+/// Materialize a source into resident matrices (`x` is `None` for
+/// unsupervised stores) — the compatibility bridge for consumers that
+/// still want the whole dataset in RAM.
+pub fn materialize(src: &dyn ChunkSource) -> Result<(Option<Mat>, Mat)> {
+    let man = src.manifest();
+    let mut reader = src.open_reader()?;
+    let mut x = Mat::zeros(man.n, man.q);
+    let mut y = Mat::zeros(man.n, man.d);
+    for k in 0..man.num_chunks() {
+        let rows = man.chunks[k].rows;
+        let start = k * man.chunk_rows;
+        let xs = &mut x.as_mut_slice()[start * man.q..(start + rows) * man.q];
+        let ys = &mut y.as_mut_slice()[start * man.d..(start + rows) * man.d];
+        reader.read_chunk(k, xs, ys)?;
+    }
+    Ok((if man.q > 0 { Some(x) } else { None }, y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("gpp_store_unit_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn demo_mats(n: usize, q: usize, d: usize) -> (Mat, Mat) {
+        (Mat::from_fn(n, q, |i, j| (i * q + j) as f64 * 0.25 - 3.0),
+         Mat::from_fn(n, d, |i, j| ((i * d + j) as f64).sin()))
+    }
+
+    #[test]
+    fn fnv1a_is_stable() {
+        // pinned so manifests stay comparable across builds
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn resident_roundtrip_is_bit_identical() {
+        let (x, y) = demo_mats(37, 2, 3);
+        let store = ResidentStore::from_mats(Some(x.clone()), y.clone(), 16).unwrap();
+        assert_eq!(store.manifest().num_chunks(), 3);
+        let (rx, ry) = materialize(&store).unwrap();
+        assert!(rx.unwrap().max_abs_diff(&x) == 0.0);
+        assert!(ry.max_abs_diff(&y) == 0.0);
+    }
+
+    #[test]
+    fn file_roundtrip_is_bit_identical() {
+        let dir = tmp_dir("roundtrip");
+        let (x, y) = demo_mats(37, 2, 3);
+        let mut w = StoreWriter::create(&dir, 2, 3, 16).unwrap();
+        for start in (0..37).step_by(16) {
+            let rows = 16.min(37 - start);
+            w.push_chunk(&x.as_slice()[start * 2..(start + rows) * 2],
+                         &y.as_slice()[start * 3..(start + rows) * 3]).unwrap();
+        }
+        let man = w.finish(false).unwrap();
+        let fs = FileStore::open(&dir).unwrap();
+        assert_eq!(fs.manifest(), &man);
+        let (rx, ry) = materialize(&fs).unwrap();
+        assert!(rx.unwrap().max_abs_diff(&x) == 0.0);
+        assert!(ry.max_abs_diff(&y) == 0.0);
+        // manifest agrees bit-for-bit with the resident substrate
+        let rs = ResidentStore::from_mats(Some(x), y, 16).unwrap();
+        assert_eq!(rs.manifest(), &man);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn centered_view_matches_resident_centering() {
+        let (_, y) = demo_mats(29, 0, 4);
+        let src: Arc<dyn ChunkSource> =
+            Arc::new(ResidentStore::from_mats(None, y.clone(), 8).unwrap());
+        let (cs, mean) = CenteredSource::new(Arc::clone(&src)).unwrap();
+        // resident reference: subtract column means computed row-order
+        let mut want = y.clone();
+        for i in 0..want.rows() {
+            for j in 0..want.cols() {
+                want[(i, j)] -= mean[j];
+            }
+        }
+        let (_, got) = materialize(&cs).unwrap();
+        assert!(got.max_abs_diff(&want) == 0.0);
+    }
+
+    #[test]
+    fn take_view_is_a_row_prefix() {
+        let (x, y) = demo_mats(37, 2, 3);
+        let src: Arc<dyn ChunkSource> =
+            Arc::new(ResidentStore::from_mats(Some(x.clone()), y.clone(), 16).unwrap());
+        for k in [1, 15, 16, 17, 36, 37] {
+            let t = TakeSource::new(Arc::clone(&src), k).unwrap();
+            t.manifest().validate().unwrap();
+            assert_eq!(t.manifest().n, k);
+            let (tx, ty) = materialize(&t).unwrap();
+            assert_eq!(ty.rows(), k);
+            assert!(tx.unwrap().as_slice() == &x.as_slice()[..k * 2]);
+            assert!(ty.as_slice() == &y.as_slice()[..k * 3]);
+        }
+        assert!(TakeSource::new(Arc::clone(&src), 0).is_err());
+        assert!(TakeSource::new(src, 38).is_err());
+    }
+
+    #[test]
+    fn manifest_json_roundtrips() {
+        let (x, y) = demo_mats(37, 2, 3);
+        let man = ResidentStore::from_mats(Some(x), y, 16).unwrap()
+            .manifest().clone();
+        let j = man.to_json().to_string_pretty();
+        let back = StoreManifest::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(man, back);
+    }
+
+    #[test]
+    fn writer_rejects_bad_chunks() {
+        let dir = tmp_dir("badpush");
+        let mut w = StoreWriter::create(&dir, 1, 2, 4).unwrap();
+        // non-finite data
+        assert!(w.push_chunk(&[0.0], &[1.0, f64::NAN]).is_err());
+        // shape mismatch
+        assert!(w.push_chunk(&[0.0, 1.0], &[1.0, 2.0]).is_err());
+        // partial chunk, then another push
+        w.push_chunk(&[0.0, 1.0], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert!(w.push_chunk(&[0.0], &[1.0, 2.0]).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -11,7 +11,10 @@
 
 use crate::data::dataset::Dataset;
 use crate::data::rng::Rng64;
+use crate::data::store::{StoreManifest, StoreWriter};
 use crate::linalg::{Chol, Mat};
+use anyhow::Result;
+use std::path::Path;
 
 /// Parameters for the synthetic GP dataset.
 #[derive(Clone, Debug)]
@@ -124,18 +127,79 @@ pub fn generate(spec: &SyntheticSpec, seed: u64) -> Dataset {
     };
     let noise_sd = spec.noise.sqrt();
     let y = Mat::from_fn(spec.n, spec.d, |i, j| f[(i, j)] + noise_sd * rng.normal());
-    Dataset { x: None, y, latent_truth: Some(x) }
+    Dataset::unsupervised(y).with_latent_truth(x)
 }
 
 /// A supervised variant: observe the inputs too (for SGPR examples and
 /// hyperparameter-recovery tests).
 pub fn generate_supervised(spec: &SyntheticSpec, seed: u64) -> Dataset {
     let ds = generate(spec, seed);
-    Dataset {
-        x: ds.latent_truth.clone(),
-        y: ds.y,
-        latent_truth: ds.latent_truth,
+    let x = ds.latent_truth().expect("synthetic truth").clone();
+    Dataset::supervised(x.clone(), ds.y()).with_latent_truth(x)
+}
+
+/// Generate a supervised synthetic dataset **straight to an on-disk
+/// chunk store** in O(chunk) memory: the RFF features are drawn up
+/// front (O(D·F·Q)), then each chunk's latents, GP values and noise
+/// are sampled and flushed before the next chunk is touched. This is
+/// how the N=10⁶ scaling stores are built — no point along the way
+/// holds the dataset resident.
+///
+/// Deterministic in `seed` via split RNG streams (features / latents /
+/// noise); by construction **not** bit-equal to the resident
+/// [`generate_supervised`] path, which interleaves its draws globally.
+pub fn generate_supervised_to_store(spec: &SyntheticSpec, seed: u64, dir: &Path,
+                                    chunk_rows: usize) -> Result<StoreManifest> {
+    let mut root = Rng64::new(seed);
+    let mut feat_rng = root.split(1);
+    let mut lat_rng = root.split(2);
+    let mut noise_rng = root.split(3);
+    let (q, d, fc) = (spec.q, spec.d, spec.rff_features);
+
+    // per-output-dim RFF features, same law as `gp_sample_rff`
+    struct Feats {
+        omega: Vec<f64>,
+        bias: Vec<f64>,
+        gamma: Vec<f64>,
     }
+    let feats: Vec<Feats> = (0..d)
+        .map(|_| Feats {
+            omega: (0..fc * q).map(|_| feat_rng.normal() / spec.lengthscale).collect(),
+            bias: (0..fc)
+                .map(|_| feat_rng.uniform_range(0.0, 2.0 * std::f64::consts::PI))
+                .collect(),
+            gamma: feat_rng.normal_vec(fc),
+        })
+        .collect();
+    let scale = (2.0 * spec.variance / fc as f64).sqrt();
+    let noise_sd = spec.noise.sqrt();
+
+    let mut w = StoreWriter::create(dir, q, d, chunk_rows)?;
+    let mut x = vec![0.0; chunk_rows * q];
+    let mut y = vec![0.0; chunk_rows * d];
+    for start in (0..spec.n).step_by(chunk_rows) {
+        let rows = chunk_rows.min(spec.n - start);
+        for v in x[..rows * q].iter_mut() {
+            *v = lat_rng.uniform_range(-2.0, 2.0);
+        }
+        for r in 0..rows {
+            let xr = &x[r * q..(r + 1) * q];
+            for (j, ft) in feats.iter().enumerate() {
+                let mut acc = 0.0;
+                for f in 0..fc {
+                    let mut dot = ft.bias[f];
+                    let wv = &ft.omega[f * q..(f + 1) * q];
+                    for qq in 0..q {
+                        dot += wv[qq] * xr[qq];
+                    }
+                    acc += dot.cos() * ft.gamma[f];
+                }
+                y[r * d + j] = scale * acc + noise_sd * noise_rng.normal();
+            }
+        }
+        w.push_chunk(&x[..rows * q], &y[..rows * d])?;
+    }
+    w.finish(false)
 }
 
 #[cfg(test)]
@@ -150,10 +214,10 @@ mod tests {
         let b = generate(&spec, 9);
         assert_eq!(a.n(), 64);
         assert_eq!(a.d(), 3);
-        assert_eq!(a.latent_truth.as_ref().unwrap().cols(), 1);
-        assert!(a.y.max_abs_diff(&b.y) == 0.0, "same seed, same data");
+        assert_eq!(a.latent_truth().unwrap().cols(), 1);
+        assert!(a.y().max_abs_diff(&b.y()) == 0.0, "same seed, same data");
         let c = generate(&spec, 10);
-        assert!(a.y.max_abs_diff(&c.y) > 1e-3, "different seed, different data");
+        assert!(a.y().max_abs_diff(&c.y()) > 1e-3, "different seed, different data");
     }
 
     #[test]
@@ -192,7 +256,23 @@ mod tests {
     fn supervised_exposes_inputs() {
         let spec = SyntheticSpec { n: 32, ..Default::default() };
         let ds = generate_supervised(&spec, 3);
-        assert!(ds.x.is_some());
-        assert_eq!(ds.x.as_ref().unwrap().rows(), 32);
+        assert!(ds.x().is_some());
+        assert_eq!(ds.x().unwrap().rows(), 32);
+    }
+
+    #[test]
+    fn store_generator_is_deterministic_and_chunk_sized() {
+        let dir = std::env::temp_dir().join(format!(
+            "gpp_synth_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = SyntheticSpec { n: 50, rff_features: 32, ..Default::default() };
+        let man = generate_supervised_to_store(&spec, 5, &dir.join("a"), 16).unwrap();
+        assert_eq!((man.n, man.q, man.d, man.num_chunks()), (50, 1, 3, 4));
+        let _ = generate_supervised_to_store(&spec, 5, &dir.join("b"), 16).unwrap();
+        let a = Dataset::open(&dir.join("a")).unwrap();
+        let b = Dataset::open(&dir.join("b")).unwrap();
+        assert!(a.y().max_abs_diff(&b.y()) == 0.0, "same seed, same store");
+        assert!(a.x().unwrap().max_abs_diff(&b.x().unwrap()) == 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -2,7 +2,11 @@
 //!
 //! Subcommands:
 //!   train-bgplvm   fit a Bayesian GP-LVM to the paper's synthetic data
-//!   train-sgpr     fit sparse GP regression to synthetic data
+//!   train-sgpr     fit sparse GP regression to synthetic data, a CSV
+//!                  (`--data-csv`), or an on-disk chunk store
+//!                  (`--data-dir`, streamed in O(chunk) memory per rank)
+//!   ingest         stream a CSV into an on-disk chunk store
+//!                  (`manifest.json` + `chunks.bin`)
 //!   predict        fit sparse GP regression, then serve a held-out test
 //!                  batch through the sharded posterior (prediction rows
 //!                  partitioned across the same ranks that trained)
@@ -12,6 +16,8 @@
 //!
 //! Examples:
 //!   gpparallel train-bgplvm --n 2000 --workers 4 --backend xla --iters 100
+//!   gpparallel ingest --csv data.csv --q 1 --out store/ --chunk-rows 1024
+//!   gpparallel train-sgpr --data-dir store/ --m 32 --workers 4
 //!   gpparallel predict --n 2000 --nt 1000 --workers 4 --backend parallel --batch 256
 //!   gpparallel predict --n 2000 --workers 4 --serve --clients 8 --max-batch-rows 64
 //!   gpparallel time --n 8000 --workers 8 --backend cpu --evals 5
@@ -20,7 +26,10 @@ use anyhow::{bail, Result};
 use gpparallel::cli::{known_flags, known_options, Args};
 use gpparallel::config::BackendKind;
 use gpparallel::coordinator::{Engine, EngineConfig, FrontendConfig, OptChoice};
+use gpparallel::data::csv::{ingest_csv, read_matrix};
+use gpparallel::data::store::DEFAULT_CHUNK_ROWS;
 use gpparallel::data::synthetic::{generate, generate_supervised, SyntheticSpec};
+use gpparallel::data::Dataset;
 use gpparallel::linalg::{mean, Mat, SimdLevel};
 use gpparallel::models::{BayesianGplvm, SparseGpRegression};
 use gpparallel::optim::Lbfgs;
@@ -60,7 +69,7 @@ fn engine_config(a: &Args) -> Result<(EngineConfig, String)> {
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(argv, &["verbose", "help", "no-pipeline", "refit-demo",
-                                   "stream", "serve"])?;
+                                   "stream", "serve", "center", "has-header"])?;
 
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     // per-subcommand argument validation: an option or flag that only
@@ -87,32 +96,88 @@ fn main() -> Result<()> {
             let ds = generate(&spec, seed);
             eprintln!("dataset: N={} D={} Q={}  backend={} workers={}",
                       spec.n, spec.d, spec.q, cfg.backend.name(), cfg.workers);
-            let model = BayesianGplvm::fit(&ds.y, spec.q, m, &aot, cfg, seed)?;
+            let model = BayesianGplvm::fit(&ds.y(), spec.q, m, &aot, cfg, seed)?;
             let r = &model.result;
             println!("bound: {:.4}  iters: {} evals: {}  sec/eval: {:.4}",
                      r.f, r.iterations, r.evaluations, r.sec_per_eval);
             println!("timing: {}", r.timing.summary());
-            if let Some(truth) = &ds.latent_truth {
+            if let Some(truth) = ds.latent_truth() {
                 println!("latent alignment |corr|: {:.4}", model.latent_alignment(truth));
             }
         }
         "train-sgpr" => {
-            let spec = SyntheticSpec {
-                n: args.get_parse("n", 1000usize)?,
-                q: args.get_parse("q", 1usize)?,
-                d: args.get_parse("d", 1usize)?,
-                ..Default::default()
-            };
             let seed = args.get_parse("seed", 0u64)?;
             let m = args.get_parse("m", 16usize)?;
             let (cfg, aot) = engine_config(&args)?;
-            let ds = generate_supervised(&spec, seed);
-            let x = ds.x.clone().unwrap();
-            let model = SparseGpRegression::fit(&x, &ds.y, m, &aot, cfg, seed)?;
-            let r = &model.result;
-            println!("bound: {:.4}  iters: {}  train-RMSE: {:.4}",
-                     r.f, r.iterations, model.rmse(&x, &ds.y));
-            println!("timing: {}", r.timing.summary());
+            if args.get("data-dir").is_some() && args.get("data-csv").is_some() {
+                bail!("--data-dir and --data-csv are mutually exclusive");
+            }
+            if let Some(dir) = args.get("data-dir") {
+                // out-of-core path: the store's chunk grid drives the
+                // partition and each rank streams its chunks in
+                // O(chunk) memory — bit-identical to the resident path
+                let ds = Dataset::open(&PathBuf::from(dir))?;
+                let man = ds.manifest();
+                eprintln!("store: N={} D={} Q={} chunk_rows={} chunks={}  \
+                           backend={} workers={}",
+                          man.n, man.d, man.q, man.chunk_rows, man.num_chunks(),
+                          cfg.backend.name(), cfg.workers);
+                let problem = SparseGpRegression::problem_from_store(
+                    ds.source(), m, &aot, seed)?;
+                let engine = Engine::new(problem, cfg)?;
+                let r = engine.train()?;
+                println!("bound: {:.4}  iters: {}", r.f, r.iterations);
+                println!("final bound: {:.17e}", r.f);
+                println!("timing: {}", r.timing.summary());
+            } else if let Some(csvp) = args.get("data-csv") {
+                // resident CSV path: same column convention as `ingest`
+                // (first q columns x, the rest y), same token parser —
+                // the printed full-precision bound must match the
+                // `--data-dir` path bit for bit (CI pins this)
+                let q = args.get_parse("q", 1usize)?;
+                let mat = read_matrix(&PathBuf::from(csvp), args.flag("has-header"))?;
+                if mat.cols() <= q {
+                    bail!("{csvp}: {} columns, need more than q={q}", mat.cols());
+                }
+                let n = mat.rows();
+                let x = Mat::from_fn(n, q, |i, j| mat[(i, j)]);
+                let y = Mat::from_fn(n, mat.cols() - q, |i, j| mat[(i, q + j)]);
+                let problem = SparseGpRegression::problem(&x, &y, m, &aot, seed);
+                let engine = Engine::new(problem, cfg)?;
+                let r = engine.train()?;
+                println!("bound: {:.4}  iters: {}", r.f, r.iterations);
+                println!("final bound: {:.17e}", r.f);
+                println!("timing: {}", r.timing.summary());
+            } else {
+                let spec = SyntheticSpec {
+                    n: args.get_parse("n", 1000usize)?,
+                    q: args.get_parse("q", 1usize)?,
+                    d: args.get_parse("d", 1usize)?,
+                    ..Default::default()
+                };
+                let ds = generate_supervised(&spec, seed);
+                let x = ds.x().unwrap();
+                let model = SparseGpRegression::fit(&x, &ds.y(), m, &aot, cfg, seed)?;
+                let r = &model.result;
+                println!("bound: {:.4}  iters: {}  train-RMSE: {:.4}",
+                         r.f, r.iterations, model.rmse(&x, &ds.y()));
+                println!("final bound: {:.17e}", r.f);
+                println!("timing: {}", r.timing.summary());
+            }
+        }
+        "ingest" => {
+            let csv = PathBuf::from(args.require("csv")?);
+            let out = PathBuf::from(args.require("out")?);
+            let q = args.get_parse("q", 0usize)?;
+            let chunk_rows = args.get_parse("chunk-rows", DEFAULT_CHUNK_ROWS)?;
+            if chunk_rows == 0 {
+                bail!("--chunk-rows must be positive");
+            }
+            let man = ingest_csv(&csv, q, &out, chunk_rows,
+                                 args.flag("center"), args.flag("has-header"))?;
+            println!("ingested {} rows into {}: q={} d={} chunk_rows={} chunks={}",
+                     man.n, out.display(), man.q, man.d, man.chunk_rows,
+                     man.num_chunks());
         }
         "predict" => {
             let spec = SyntheticSpec {
@@ -128,15 +193,15 @@ fn main() -> Result<()> {
             let (cfg, aot) = engine_config(&args)?;
 
             let ds = generate_supervised(&spec, seed);
-            let x = ds.x.clone().unwrap();
+            let x = ds.x().unwrap();
             // held-out batch from the same generator, different seed
             let test_spec = SyntheticSpec { n: nt, ..spec.clone() };
             let test = generate_supervised(&test_spec, seed.wrapping_add(1));
-            let xstar = test.x.clone().unwrap();
+            let xstar = test.x().unwrap();
 
             eprintln!("dataset: N={} Nt={nt} Q={} D={}  backend={} workers={} batch={batch}",
                       spec.n, spec.q, spec.d, cfg.backend.name(), cfg.workers);
-            let problem = SparseGpRegression::problem(&x, &ds.y, m, &aot, seed);
+            let problem = SparseGpRegression::problem(&x, &ds.y(), m, &aot, seed);
             let engine = Engine::new(problem, cfg)?;
 
             if args.flag("serve") {
@@ -237,14 +302,15 @@ fn main() -> Result<()> {
                 engine.train_then_predict(&xstar, batch)?
             };
 
+            let ystar = test.y();
             let mut se = 0.0;
             for i in 0..nt {
-                for j in 0..test.y.cols() {
-                    let e = pred_mean[(i, j)] - test.y[(i, j)];
+                for j in 0..ystar.cols() {
+                    let e = pred_mean[(i, j)] - ystar[(i, j)];
                     se += e * e;
                 }
             }
-            let rmse = (se / (nt * test.y.cols()) as f64).sqrt();
+            let rmse = (se / (nt * ystar.cols()) as f64).sqrt();
             println!("bound: {:.4}  iters: {}  evals: {}", r.f, r.iterations, r.evaluations);
             println!("served {nt} rows across {} rank(s): test-RMSE {:.4}  mean var {:.4}",
                      engine.cfg.workers, rmse, mean(&pred_var));
@@ -262,7 +328,7 @@ fn main() -> Result<()> {
             let evals = args.get_parse("evals", 5usize)?;
             let (cfg, aot) = engine_config(&args)?;
             let ds = generate(&spec, seed);
-            let problem = BayesianGplvm::problem(&ds.y, spec.q, m, &aot, seed);
+            let problem = BayesianGplvm::problem(&ds.y(), spec.q, m, &aot, seed);
             let engine = Engine::new(problem, cfg)?;
             let r = engine.time_iterations(evals)?;
             println!("N={} workers={} backend={}  sec/iter={:.4}  indist={:.2}%  bytes={}",
@@ -283,10 +349,14 @@ fn main() -> Result<()> {
             }
         }
         _ => {
-            println!("usage: gpparallel <train-bgplvm|train-sgpr|predict|time|info> [options]");
+            println!("usage: gpparallel <train-bgplvm|train-sgpr|ingest|predict|time|info> [options]");
             println!("options: --n --q --d --m --workers --chunk --backend cpu|parallel[:N]|xla");
             println!("         --iters --evals --seed --artifacts --aot-config --verbose");
             println!("         --simd off|scalar|native|auto (f64 microkernel dispatch tier)");
+            println!("         --data-dir <store> | --data-csv <file> (train-sgpr: train from an");
+            println!("           on-disk chunk store / a CSV; csv splits at --q columns)");
+            println!("         ingest: --csv <file> --out <dir> [--q N] [--chunk-rows N]");
+            println!("           [--center] [--has-header] (CSV -> chunk store, O(chunk) memory)");
             println!("         --nt --batch (predict: test rows, serving batch granularity)");
             println!("         --refit-demo (predict: hot-swap the posterior mid-session)");
             println!("         --stream (predict: pipeline --batch-row serving batches)");

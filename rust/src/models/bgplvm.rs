@@ -51,7 +51,7 @@ impl BayesianGplvm {
         Problem {
             latent: LatentSpec::Variational { mu0, s0 },
             views: vec![ViewSpec {
-                y: y.clone(),
+                y: y.clone().into(),
                 z0,
                 kern0: RbfArd::iso(y_var, 1.0, q),
                 beta0: 1.0 / (0.01 * y_var),

@@ -66,7 +66,7 @@ impl Mrd {
                 }
                 y_var = (y_var / y.cols() as f64).max(1e-6);
                 ViewSpec {
-                    y: y.clone(),
+                    y: y.clone().into(),
                     z0,
                     kern0: RbfArd::iso(y_var, 1.0, q),
                     beta0: 1.0 / (0.01 * y_var),

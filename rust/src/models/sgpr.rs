@@ -1,13 +1,16 @@
 //! Sparse GP regression (Titsias 2009) on the distributed engine —
 //! the supervised member of the model family.
 
-use crate::coordinator::{Engine, EngineConfig, LatentSpec, Problem, TrainResult, ViewSpec};
+use crate::coordinator::{Engine, EngineConfig, LatentSpec, Problem, TrainResult, ViewData,
+                         ViewSpec};
 use crate::data::rng::Rng64;
+use crate::data::store::ChunkSource;
 use crate::kern::RbfArd;
 use crate::linalg::Mat;
 use crate::math::stats::sgpr_stats_fwd;
 use crate::models::predict::Posterior;
-use anyhow::Result;
+use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// A fitted sparse-GP regressor.
 pub struct SparseGpRegression {
@@ -46,7 +49,7 @@ impl SparseGpRegression {
         Problem {
             latent: LatentSpec::Observed(x.clone()),
             views: vec![ViewSpec {
-                y: y.clone(),
+                y: y.clone().into(),
                 z0,
                 kern0,
                 beta0,
@@ -54,6 +57,90 @@ impl SparseGpRegression {
             }],
             q,
         }
+    }
+
+    /// The same Problem built **from a chunk store** without ever
+    /// materializing X or Y: the y-variance initialisation streams the
+    /// store twice with per-column row-order accumulators (the exact
+    /// operand order of the resident loops in
+    /// [`SparseGpRegression::problem`]), the RNG consumption is
+    /// identical, and the inducing rows are gathered with one chunk read
+    /// per distinct chunk — so for a store holding the same (x, y) the
+    /// returned problem is **bit-identical** in every initial parameter,
+    /// and training it streams each rank's chunks in O(chunk) memory.
+    pub fn problem_from_store(source: &Arc<dyn ChunkSource>, m: usize, aot_config: &str,
+                              seed: u64) -> Result<Problem> {
+        let man = source.manifest();
+        let (n, q, d, c) = (man.n, man.q, man.d, man.chunk_rows);
+        let num_chunks = man.num_chunks();
+        if q == 0 {
+            bail!("store has no x block (q = 0): SGPR needs observed inputs");
+        }
+        if m > n {
+            bail!("need M <= N (M = {m}, N = {n})");
+        }
+        let mut rng = Rng64::new(seed);
+        let mut reader = source.open_reader()?;
+        let mut xbuf = vec![0.0; c * q];
+        let mut ybuf = vec![0.0; c * d];
+
+        // y variance: mean pass then squared-deviation pass, per-column
+        // accumulators fed in row order — bit-identical to the resident
+        // column loops
+        let mut sums = vec![0.0; d];
+        for k in 0..num_chunks {
+            reader.read_chunk(k, &mut xbuf, &mut ybuf)?;
+            for i in 0..man.chunks[k].rows {
+                for (j, s) in sums.iter_mut().enumerate() {
+                    *s += ybuf[i * d + j];
+                }
+            }
+        }
+        let means: Vec<f64> = sums.iter().map(|s| s / n as f64).collect();
+        let mut sq = vec![0.0; d];
+        for k in 0..num_chunks {
+            reader.read_chunk(k, &mut xbuf, &mut ybuf)?;
+            for i in 0..man.chunks[k].rows {
+                for (j, s) in sq.iter_mut().enumerate() {
+                    *s += (ybuf[i * d + j] - means[j]).powi(2);
+                }
+            }
+        }
+        let mut y_var = 0.0;
+        for s in &sq {
+            y_var += s / n as f64;
+        }
+        y_var = (y_var / d as f64).max(1e-6);
+
+        // random inducing subset — same RNG op sequence as `problem`
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let mut z0 = Mat::zeros(m, q);
+        let mut want: Vec<(usize, usize)> =
+            idx[..m].iter().enumerate().map(|(i, &r)| (r, i)).collect();
+        want.sort_unstable();
+        let mut loaded = usize::MAX;
+        for (r, i) in want {
+            let k = r / c;
+            if k != loaded {
+                reader.read_chunk(k, &mut xbuf, &mut ybuf)?;
+                loaded = k;
+            }
+            let off = (r - k * c) * q;
+            z0.row_mut(i).copy_from_slice(&xbuf[off..off + q]);
+        }
+
+        Ok(Problem {
+            latent: LatentSpec::ObservedStore,
+            views: vec![ViewSpec {
+                y: ViewData::Store(Arc::clone(source)),
+                z0,
+                kern0: RbfArd::iso(y_var, 1.0, q),
+                beta0: 1.0 / (0.01 * y_var),
+                aot_config: aot_config.to_string(),
+            }],
+            q,
+        })
     }
 
     /// Fit to `(x, y)` with `m` inducing points (see
@@ -103,5 +190,29 @@ impl SparseGpRegression {
             }
         }
         (acc / (ystar.rows() * ystar.cols()) as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::store::ResidentStore;
+    use crate::data::Rng64;
+
+    #[test]
+    fn store_problem_matches_resident_problem_bit_for_bit() {
+        let (n, q, d, m) = (37, 2, 3, 9);
+        let mut rng = Rng64::new(21);
+        let x = Mat::from_fn(n, q, |_, _| rng.normal());
+        let y = Mat::from_fn(n, d, |_, _| rng.normal() * 3.0 + 1.5);
+        let a = SparseGpRegression::problem(&x, &y, m, "test", 7);
+        let store: Arc<dyn ChunkSource> = Arc::new(
+            ResidentStore::from_mats(Some(x), y, 8).unwrap());
+        let b = SparseGpRegression::problem_from_store(&store, m, "test", 7).unwrap();
+        assert!(a.views[0].z0.max_abs_diff(&b.views[0].z0) == 0.0, "z0");
+        assert!(a.views[0].beta0 == b.views[0].beta0, "beta0");
+        assert!(a.views[0].kern0.variance == b.views[0].kern0.variance, "kern0");
+        assert!(matches!(b.latent, LatentSpec::ObservedStore));
+        b.initial_params(); // layout must accept the store problem
     }
 }

@@ -213,8 +213,8 @@ pub fn run_scenario_watchdog(scenario: Scenario, plan: Option<FaultPlan>,
 fn chaos_problem() -> Problem {
     let spec = SyntheticSpec { n: 18, q: 2, d: 2, ..Default::default() };
     let ds = generate_supervised(&spec, 97);
-    let x = ds.x.clone().expect("supervised dataset has X");
-    SparseGpRegression::problem(&x, &ds.y, 4, "test", 97)
+    let x = ds.x().expect("supervised dataset has X");
+    SparseGpRegression::problem(&x, &ds.y(), 4, "test", 97)
 }
 
 fn chaos_cfg() -> EngineConfig {

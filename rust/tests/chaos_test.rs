@@ -431,8 +431,8 @@ fn refit_verb_outside_training_cluster_errors_cleanly() {
 fn fuzz_problem() -> (Problem, EngineConfig, Partition) {
     let spec = SyntheticSpec { n: 12, q: 2, d: 2, ..Default::default() };
     let ds = generate_supervised(&spec, 41);
-    let x = ds.x.clone().unwrap();
-    let problem = SparseGpRegression::problem(&x, &ds.y, 3, "test", 41);
+    let x = ds.x().unwrap();
+    let problem = SparseGpRegression::problem(&x, &ds.y(), 3, "test", 41);
     let cfg = EngineConfig {
         workers: 2,
         chunk: 4,

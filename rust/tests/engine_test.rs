@@ -41,7 +41,7 @@ fn cfg(workers: usize, chunk: usize, backend: BackendKind, iters: usize) -> Engi
 fn small_problem(n: usize, seed: u64) -> Problem {
     let spec = SyntheticSpec { n, q: 2, d: 3, ..Default::default() };
     let ds = generate(&spec, seed);
-    BayesianGplvm::problem(&ds.y, 2, 16, "test", seed)
+    BayesianGplvm::problem(&ds.y(), 2, 16, "test", seed)
 }
 
 /// The objective must be bit-identical (up to reduction order) across
@@ -92,7 +92,7 @@ fn distributed_gradient_matches_finite_difference() {
     let base = Problem {
         latent: LatentSpec::Variational { mu0: mu0.clone(), s0: s0.clone() },
         views: vec![ViewSpec {
-            y: y.clone(),
+            y: y.clone().into(),
             z0: z0.clone(),
             kern0: RbfArd::iso(1.1, 0.9, 1),
             beta0: 2.0,
@@ -182,10 +182,10 @@ fn xla_and_rust_training_match() {
 fn sgpr_fits_and_predicts() {
     let spec = SyntheticSpec { n: 300, q: 1, d: 1, noise: 0.01, ..Default::default() };
     let ds = generate_supervised(&spec, 16);
-    let x = ds.x.clone().unwrap();
-    let model = SparseGpRegression::fit(&x, &ds.y, 16, "quickstart",
+    let x = ds.x().unwrap();
+    let model = SparseGpRegression::fit(&x, &ds.y(), 16, "quickstart",
                                         cfg(2, 64, BackendKind::RustCpu, 60), 16).unwrap();
-    let rmse = model.rmse(&x, &ds.y);
+    let rmse = model.rmse(&x, &ds.y());
     // var(y) ~ 1; the fit must beat the mean predictor by a wide margin
     assert!(rmse < 0.3, "train RMSE {rmse}");
     // noise recovery within an order of magnitude
@@ -199,9 +199,9 @@ fn bgplvm_recovers_1d_latent() {
     let ds = generate(&spec, 17);
     // Q=2 model on truly-1D data (the test config is Q=2): alignment of
     // the best dimension with the truth should still be high.
-    let model = BayesianGplvm::fit(&ds.y, 2, 16, "test",
+    let model = BayesianGplvm::fit(&ds.y(), 2, 16, "test",
                                    cfg(2, 64, BackendKind::RustCpu, 120), 17).unwrap();
-    let align = model.latent_alignment(ds.latent_truth.as_ref().unwrap());
+    let align = model.latent_alignment(ds.latent_truth().unwrap());
     assert!(align > 0.8, "latent alignment {align}");
 }
 

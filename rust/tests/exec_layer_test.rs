@@ -72,7 +72,7 @@ fn parallel_cpu_engine_bit_identical_to_rust_cpu() {
 fn parallel_cpu_training_trajectory_matches() {
     let spec = SyntheticSpec { n: 120, q: 2, d: 3, ..Default::default() };
     let ds = generate(&spec, 22);
-    let problem = BayesianGplvm::problem(&ds.y, 2, 10, "test", 22);
+    let problem = BayesianGplvm::problem(&ds.y(), 2, 10, "test", 22);
 
     let serial = Engine::new(problem.clone(), cfg(2, 32, BackendKind::RustCpu, 8))
         .unwrap().train().unwrap();
@@ -120,7 +120,7 @@ fn tree_and_linear_collectives_agree_on_engine_payloads() {
 fn parallel_backend_worker_count_invariance() {
     let spec = SyntheticSpec { n: 150, q: 2, d: 3, ..Default::default() };
     let ds = generate(&spec, 23);
-    let problem = BayesianGplvm::problem(&ds.y, 2, 16, "test", 23);
+    let problem = BayesianGplvm::problem(&ds.y(), 2, 16, "test", 23);
     let mut bounds = Vec::new();
     for workers in [1, 2, 4] {
         let r = Engine::new(problem.clone(),
@@ -152,7 +152,7 @@ fn leader_core_failure_aborts_cleanly() {
     let problem = Problem {
         latent: LatentSpec::Variational { mu0, s0 },
         views: vec![ViewSpec {
-            y,
+            y: y.into(),
             z0,
             kern0: RbfArd::iso(1.0, 1e-300, 1),
             beta0: 1e300,

@@ -474,7 +474,7 @@ fn frontend_backpressure_bounds_queue() {
 fn train_then_serve_matches_train_then_predict() {
     let spec = SyntheticSpec { n: 72, q: 1, d: 2, ..Default::default() };
     let ds = generate_supervised(&spec, 61);
-    let x = ds.x.clone().unwrap();
+    let x = ds.x().unwrap();
     let m = 6;
     let chunk = 16;
     let cfg = EngineConfig {
@@ -487,7 +487,7 @@ fn train_then_serve_matches_train_then_predict() {
         verbose: false,
         simd: None,
     };
-    let mk = || SparseGpRegression::problem(&x, &ds.y, m, "test", 61);
+    let mk = || SparseGpRegression::problem(&x, &ds.y(), m, "test", 61);
     let x0 = mk().initial_params();
     let mut rng = Rng64::new(62);
     let xstar = Mat::from_fn(31, 1, |_, _| rng.normal());
@@ -545,7 +545,7 @@ fn train_then_serve_matches_train_then_predict() {
     let kern0 = RbfArd::from_log_hyp(&x0[0..2]);
     let z0 = Mat::from_vec(m, 1, x0[3..3 + m].to_vec());
     let w = vec![1.0; x.rows()];
-    let st0 = sgpr_stats_fwd_chunked(&kern0, &x, &w, &ds.y, &z0, chunk);
+    let st0 = sgpr_stats_fwd_chunked(&kern0, &x, &w, &ds.y(), &z0, chunk);
     let single0 = Posterior::new(kern0, z0, x0[2].exp(), &st0).unwrap();
     let want0 = single0.predict(&xstar);
     assert_reply(&refitted, &want0, "post-refit full predict");

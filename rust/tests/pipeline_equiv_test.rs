@@ -63,9 +63,9 @@ fn supervised_problem(n: usize, seed: u64) -> Problem {
     let spec = SyntheticSpec { n, q: 1, d: 2, ..Default::default() };
     let ds = generate_supervised(&spec, seed);
     Problem {
-        latent: LatentSpec::Observed(ds.x.clone().unwrap()),
+        latent: LatentSpec::Observed(ds.x().unwrap()),
         views: vec![ViewSpec {
-            y: ds.y.clone(),
+            y: ds.y().into(),
             z0: Mat::from_fn(8, 1, |i, _| -2.0 + 0.5 * i as f64),
             kern0: RbfArd::iso(1.0, 1.0, 1),
             beta0: 10.0,
@@ -170,7 +170,7 @@ fn per_view_abort_surfaces_err_without_desync() {
     let mu0 = Mat::from_fn(n, 1, |_, _| rng.normal());
     let s0 = Mat::from_vec(n, 1, vec![0.5; n]);
     let mk_healthy = |y: Mat| ViewSpec {
-        y,
+        y: y.into(),
         z0: Mat::from_fn(4, 1, |i, _| i as f64 - 1.5),
         kern0: RbfArd::iso(1.0, 1.0, 1),
         beta0: 2.0,
@@ -180,7 +180,7 @@ fn per_view_abort_surfaces_err_without_desync() {
     // view 1's statistics go non-finite and its Cholesky fails at the
     // leader, while views 0 and 2 stay healthy.
     let poisoned = ViewSpec {
-        y: y1,
+        y: y1.into(),
         z0: Mat::from_vec(4, 1, vec![f64::MAX / 1e3; 4]),
         kern0: RbfArd::iso(1.0, 1e-300, 1),
         beta0: 1e300,

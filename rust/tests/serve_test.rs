@@ -238,7 +238,7 @@ fn leader_overlap_drain_sends_nothing_and_stays_bit_identical() {
 fn train_then_predict_matches_single_node_posterior() {
     let spec = SyntheticSpec { n: 96, q: 1, d: 2, ..Default::default() };
     let ds = generate_supervised(&spec, 5);
-    let x = ds.x.clone().unwrap();
+    let x = ds.x().unwrap();
     let mut rng = Rng64::new(6);
     let xstar = Mat::from_fn(29, 1, |_, _| rng.normal());
     let w = vec![1.0; x.rows()];
@@ -254,7 +254,7 @@ fn train_then_predict_matches_single_node_posterior() {
             verbose: false,
             simd: None,
         };
-        let problem = SparseGpRegression::problem(&x, &ds.y, 8, "test", 5);
+        let problem = SparseGpRegression::problem(&x, &ds.y(), 8, "test", 5);
         let engine = Engine::new(problem, cfg).unwrap();
 
         let (result, mean, var) = engine.train_then_predict(&xstar, 8).unwrap();
@@ -265,7 +265,7 @@ fn train_then_predict_matches_single_node_posterior() {
         // rebuild the posterior single-node from the same fitted
         // parameters and the chunk-ordered statistics discipline
         let fitted = &result.fitted;
-        let st = sgpr_stats_fwd_chunked(&fitted.kerns[0], &x, &w, &ds.y,
+        let st = sgpr_stats_fwd_chunked(&fitted.kerns[0], &x, &w, &ds.y(),
                                         &fitted.zs[0], 16);
         let single = Posterior::new(fitted.kerns[0].clone(), fitted.zs[0].clone(),
                                     fitted.betas[0], &st).unwrap();
@@ -285,7 +285,7 @@ fn train_then_predict_matches_single_node_posterior() {
 
         // and the chunked construction matches the old monolithic one to
         // rounding error (sanity that the discipline change is benign)
-        let st_full = sgpr_stats_fwd(&fitted.kerns[0], &x, &w, &ds.y, &fitted.zs[0]);
+        let st_full = sgpr_stats_fwd(&fitted.kerns[0], &x, &w, &ds.y(), &fitted.zs[0]);
         assert!(st.p.max_abs_diff(&st_full.p) < 1e-10);
         assert!(st.psi2.max_abs_diff(&st_full.psi2) < 1e-10);
     }
@@ -343,16 +343,16 @@ fn assert_stats_identical(got: &Stats, want: &Stats, ctx: &str) {
 fn stats_pass_parity_ranks_1_to_9() {
     let spec = SyntheticSpec { n: 77, q: 2, d: 3, ..Default::default() };
     let ds = generate_supervised(&spec, 11);
-    let x = ds.x.clone().unwrap();
+    let x = ds.x().unwrap();
     let chunk = 8;
-    let problem = SparseGpRegression::problem(&x, &ds.y, 6, "test", 11);
+    let problem = SparseGpRegression::problem(&x, &ds.y(), 6, "test", 11);
     let x0 = problem.initial_params();
 
     // the serial reference, through the same log-hyp round-trip the
     // broadcast parameters take
     let kern = RbfArd::from_log_hyp(&problem.views[0].kern0.to_log_hyp());
     let w = vec![1.0; x.rows()];
-    let want = sgpr_stats_fwd_chunked(&kern, &x, &w, &ds.y, &problem.views[0].z0, chunk);
+    let want = sgpr_stats_fwd_chunked(&kern, &x, &w, &ds.y(), &problem.views[0].z0, chunk);
 
     for kind in [BackendKind::RustCpu, BackendKind::ParallelCpu { threads: 3 }] {
         for size in 1..=9usize {
@@ -364,12 +364,12 @@ fn stats_pass_parity_ranks_1_to_9() {
     // more ranks than chunks: N=20, C=8 → 3 chunks over 7 ranks
     let spec = SyntheticSpec { n: 20, q: 2, d: 3, ..Default::default() };
     let ds = generate_supervised(&spec, 12);
-    let x = ds.x.clone().unwrap();
-    let problem = SparseGpRegression::problem(&x, &ds.y, 5, "test", 12);
+    let x = ds.x().unwrap();
+    let problem = SparseGpRegression::problem(&x, &ds.y(), 5, "test", 12);
     let x0 = problem.initial_params();
     let kern = RbfArd::from_log_hyp(&problem.views[0].kern0.to_log_hyp());
     let w = vec![1.0; x.rows()];
-    let want = sgpr_stats_fwd_chunked(&kern, &x, &w, &ds.y, &problem.views[0].z0, chunk);
+    let want = sgpr_stats_fwd_chunked(&kern, &x, &w, &ds.y(), &problem.views[0].z0, chunk);
     let got = run_stats_pass(&problem, &x0, chunk, 7, BackendKind::RustCpu);
     assert_stats_identical(&got, &want, "chunkless ranks");
 }
@@ -384,10 +384,10 @@ fn stats_pass_parity_ranks_1_to_9() {
 fn hot_swap_matches_fresh_session_at_new_params() {
     let spec = SyntheticSpec { n: 61, q: 1, d: 2, ..Default::default() };
     let ds = generate_supervised(&spec, 17);
-    let x = ds.x.clone().unwrap();
+    let x = ds.x().unwrap();
     let chunk = 8;
     let m = 7;
-    let problem = SparseGpRegression::problem(&x, &ds.y, m, "test", 17);
+    let problem = SparseGpRegression::problem(&x, &ds.y(), m, "test", 17);
     let xa = problem.initial_params();
     // layout (q=1): [log σ², log ℓ, log β, Z (m)] — perturb all four kinds
     let mut xb = xa.clone();
@@ -403,7 +403,7 @@ fn hot_swap_matches_fresh_session_at_new_params() {
     let kern_b = RbfArd::from_log_hyp(&xb[0..2]);
     let z_b = Mat::from_vec(m, 1, xb[3..3 + m].to_vec());
     let w = vec![1.0; x.rows()];
-    let st_b = sgpr_stats_fwd_chunked(&kern_b, &x, &w, &ds.y, &z_b, chunk);
+    let st_b = sgpr_stats_fwd_chunked(&kern_b, &x, &w, &ds.y(), &z_b, chunk);
     let single_b = Posterior::new(kern_b, z_b, xb[2].exp(), &st_b).unwrap();
     let (em, ev) = single_b.predict(&xstar);
 
@@ -501,7 +501,7 @@ fn stats_pass_refuses_variational_problems() {
     use gpparallel::models::BayesianGplvm;
     let spec = SyntheticSpec { n: 24, q: 1, d: 2, ..Default::default() };
     let ds = gpparallel::data::synthetic::generate(&spec, 3);
-    let problem = BayesianGplvm::problem(&ds.y, 1, 6, "test", 3);
+    let problem = BayesianGplvm::problem(&ds.y(), 1, 6, "test", 3);
     let x0 = problem.initial_params();
     let part = Partition::new(problem.n(), 8, 2);
     let cfg = eval_cfg(2, 8, BackendKind::RustCpu);
@@ -690,9 +690,9 @@ fn fail_flagged_batch_inside_a_stream_keeps_lockstep() {
 fn final_eval_capture_makes_the_stats_round_free() {
     let spec = SyntheticSpec { n: 40, q: 1, d: 2, ..Default::default() };
     let ds = generate_supervised(&spec, 31);
-    let x = ds.x.clone().unwrap();
+    let x = ds.x().unwrap();
     let chunk = 8;
-    let problem = SparseGpRegression::problem(&x, &ds.y, 5, "test", 31);
+    let problem = SparseGpRegression::problem(&x, &ds.y(), 5, "test", 31);
     let x0 = problem.initial_params();
     let mut x1 = x0.clone();
     x1[0] += 0.25; // log σ² of view 0
@@ -702,10 +702,10 @@ fn final_eval_capture_makes_the_stats_round_free() {
     let w = vec![1.0; x.rows()];
     let z0 = problem.views[0].z0.clone();
     let kern0 = RbfArd::from_log_hyp(&x0[0..2]);
-    let st0 = sgpr_stats_fwd_chunked(&kern0, &x, &w, &ds.y, &z0, chunk);
+    let st0 = sgpr_stats_fwd_chunked(&kern0, &x, &w, &ds.y(), &z0, chunk);
     let single0 = Posterior::new(kern0, z0.clone(), x0[2].exp(), &st0).unwrap();
     let kern1 = RbfArd::from_log_hyp(&x1[0..2]);
-    let st1 = sgpr_stats_fwd_chunked(&kern1, &x, &w, &ds.y, &z0, chunk);
+    let st1 = sgpr_stats_fwd_chunked(&kern1, &x, &w, &ds.y(), &z0, chunk);
     let single1 = Posterior::new(kern1, z0.clone(), x1[2].exp(), &st1).unwrap();
 
     let mut rng = Rng64::new(33);
@@ -771,7 +771,7 @@ fn final_eval_capture_makes_the_stats_round_free() {
 fn train_then_predict_skips_the_stats_round_when_capture_hits() {
     let spec = SyntheticSpec { n: 84, q: 1, d: 2, ..Default::default() };
     let ds = generate_supervised(&spec, 41);
-    let x = ds.x.clone().unwrap();
+    let x = ds.x().unwrap();
     let workers = 3usize;
     let cfg = EngineConfig {
         workers,
@@ -783,7 +783,7 @@ fn train_then_predict_skips_the_stats_round_when_capture_hits() {
         verbose: false,
         simd: None,
     };
-    let mk = || SparseGpRegression::problem(&x, &ds.y, 6, "test", 41);
+    let mk = || SparseGpRegression::problem(&x, &ds.y(), 6, "test", 41);
     let train_only = Engine::new(mk(), cfg.clone()).unwrap().train().unwrap();
 
     let mut rng = Rng64::new(42);
@@ -819,7 +819,7 @@ fn train_then_predict_skips_the_stats_round_when_capture_hits() {
 fn train_then_predict_stream_matches_sequential_serving() {
     let spec = SyntheticSpec { n: 72, q: 1, d: 2, ..Default::default() };
     let ds = generate_supervised(&spec, 51);
-    let x = ds.x.clone().unwrap();
+    let x = ds.x().unwrap();
     let cfg = EngineConfig {
         workers: 3,
         chunk: 16,
@@ -830,7 +830,7 @@ fn train_then_predict_stream_matches_sequential_serving() {
         verbose: false,
         simd: None,
     };
-    let mk = || SparseGpRegression::problem(&x, &ds.y, 6, "test", 51);
+    let mk = || SparseGpRegression::problem(&x, &ds.y(), 6, "test", 51);
     let mut rng = Rng64::new(52);
     let xstar = Mat::from_fn(31, 1, |_, _| rng.normal());
 
@@ -857,7 +857,7 @@ fn train_then_predict_rejects_unsupervised_problems() {
     use gpparallel::models::BayesianGplvm;
     let spec = SyntheticSpec { n: 32, q: 1, d: 2, ..Default::default() };
     let ds = gpparallel::data::synthetic::generate(&spec, 2);
-    let problem = BayesianGplvm::problem(&ds.y, 1, 8, "test", 2);
+    let problem = BayesianGplvm::problem(&ds.y(), 1, 8, "test", 2);
     let cfg = EngineConfig {
         workers: 2,
         chunk: 16,

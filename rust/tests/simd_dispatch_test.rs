@@ -124,7 +124,7 @@ fn global_dispatch_env_set_active_and_engine_config() {
             verbose: false,
             simd: Some(level),
         };
-        let problem = BayesianGplvm::problem(&ds.y, 1, 8, "test", 3);
+        let problem = BayesianGplvm::problem(&ds.y(), 1, 8, "test", 3);
         let _engine = Engine::new(problem, cfg).expect("engine construction");
         assert_eq!(simd::active(), level,
                    "Engine::new must apply cfg.simd process-wide");

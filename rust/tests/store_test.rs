@@ -1,0 +1,225 @@
+//! Chunk-store integrity and equivalence tests: the manifest round-trips
+//! bit-identically through its JSON document, structurally corrupt
+//! manifests are rejected up front, payload corruption is caught by the
+//! per-chunk checksums (chaos-fuzzer style single-bit flips), and a
+//! `FileStore` drives the engine to the exact trajectory a
+//! `ResidentStore` over the same bytes produces — for every cluster size
+//! 1–9 and both CPU backends.
+
+use gpparallel::config::{BackendKind, Json};
+use gpparallel::coordinator::{Engine, EngineConfig, OptChoice};
+use gpparallel::data::store::{materialize, ChunkReader, ChunkSource, FileStore,
+                              ResidentStore, StoreManifest};
+use gpparallel::data::synthetic::{generate_supervised_to_store, SyntheticSpec};
+use gpparallel::models::SparseGpRegression;
+use gpparallel::optim::Lbfgs;
+use gpparallel::testutil::prop::Rng64;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn cfg(workers: usize, chunk: usize, backend: BackendKind, iters: usize) -> EngineConfig {
+    EngineConfig {
+        workers,
+        chunk,
+        backend,
+        artifacts_dir: "artifacts".into(),
+        opt: OptChoice::Lbfgs(Lbfgs { max_iters: iters, ..Default::default() }),
+        pipeline: true,
+        verbose: false,
+        simd: None,
+    }
+}
+
+/// Fresh per-test store directory under the system temp dir.
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("gpparallel_store_test_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn small_store(name: &str, n: usize, chunk_rows: usize, seed: u64)
+               -> (PathBuf, StoreManifest) {
+    let dir = tmp(name);
+    let spec = SyntheticSpec { n, q: 1, d: 2, ..Default::default() };
+    let man = generate_supervised_to_store(&spec, seed, &dir, chunk_rows).unwrap();
+    (dir, man)
+}
+
+/// The manifest must survive JSON serialisation bit for bit — through
+/// the in-memory document, through the rendered text, and through the
+/// copy `FileStore::open` reads back off disk.
+#[test]
+fn manifest_roundtrip_is_bit_identical() {
+    let (dir, man) = small_store("roundtrip", 53, 8, 5);
+
+    let back = StoreManifest::from_json(&man.to_json()).unwrap();
+    assert_eq!(man, back, "in-memory JSON round-trip changed the manifest");
+
+    let text = man.to_json().to_string_pretty();
+    let back = StoreManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(man, back, "rendered-text round-trip changed the manifest");
+
+    let fs = FileStore::open(&dir).unwrap();
+    assert_eq!(*fs.manifest(), man, "on-disk manifest differs from the writer's");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Every class of structural corruption must be rejected by
+/// `StoreManifest::validate` (and hence by `from_json`, which calls it):
+/// wrong n/d, partial chunks in the middle, overlapping or gapped
+/// offsets, stats-arity mismatches, NaN statistics, min > max.
+#[test]
+fn corrupt_manifests_are_rejected() {
+    let (dir, man) = small_store("corrupt_manifest", 40, 8, 6);
+    assert!(man.validate().is_ok());
+
+    let cases: Vec<(&str, fn(&mut StoreManifest))> = vec![
+        ("n off by one", |m| m.n += 1),
+        ("d zero", |m| m.d = 0),
+        ("chunk_rows zero", |m| m.chunk_rows = 0),
+        ("partial chunk before the last", |m| m.chunks[0].rows -= 1),
+        ("offset gap", |m| m.chunks[1].offset += 8),
+        ("offset overlap", |m| m.chunks[1].offset -= 8),
+        ("y_mean arity", |m| m.y_mean.push(0.0)),
+        ("non-finite y_mean", |m| m.y_mean[0] = f64::INFINITY),
+        ("NaN summary statistics", |m| m.chunks[0].y_cols[0].mean = f64::NAN),
+        ("min > max", |m| {
+            m.chunks[0].y_cols[0].min = 1.0;
+            m.chunks[0].y_cols[0].max = -1.0;
+        }),
+        ("stats arity", |m| m.chunks[0].x_cols.clear()),
+        ("no chunks", |m| m.chunks.clear()),
+    ];
+    for (label, mutate) in cases {
+        let mut bad = man.clone();
+        mutate(&mut bad);
+        assert!(bad.validate().is_err(), "{label}: validate accepted corruption");
+        assert!(StoreManifest::from_json(&bad.to_json()).is_err(),
+                "{label}: from_json accepted corruption");
+    }
+
+    // malformed checksum hex in the rendered document
+    let text = man.to_json().to_string_pretty();
+    let needle = format!("\"{:016x}\"", man.chunks[0].checksum);
+    let bad_text = text.replacen(&needle, "\"zz-not-a-checksum\"", 1);
+    assert_ne!(bad_text, text, "checksum needle not found in manifest text");
+    assert!(StoreManifest::from_json(&Json::parse(&bad_text).unwrap()).is_err(),
+            "malformed checksum hex accepted");
+
+    // a manifest that *lies* about a checksum passes structural
+    // validation but the payload fails verification at read time
+    let mut lied = man.clone();
+    lied.chunks[0].checksum ^= 1;
+    let mpath = dir.join("manifest.json");
+    std::fs::write(&mpath, lied.to_json().to_string_pretty()).unwrap();
+    let fs = FileStore::open(&dir).unwrap();
+    let mut x = vec![0.0; man.chunk_rows * man.q];
+    let mut y = vec![0.0; man.chunk_rows * man.d];
+    let mut reader = fs.open_reader().unwrap();
+    assert!(reader.read_chunk(0, &mut x, &mut y).is_err(),
+            "payload passed a lying checksum");
+
+    // garbage manifest text: open must fail outright
+    std::fs::write(&mpath, "not json").unwrap();
+    assert!(FileStore::open(&dir).is_err(), "garbage manifest opened");
+    std::fs::write(&mpath, man.to_json().to_string_pretty()).unwrap();
+
+    // truncated data file: the exact-size check rejects it
+    let dpath = dir.join(&man.data_file);
+    let data = std::fs::read(&dpath).unwrap();
+    std::fs::write(&dpath, &data[..data.len() - 1]).unwrap();
+    assert!(FileStore::open(&dir).is_err(), "truncated data file opened");
+
+    // clobbered magic
+    let mut bad_magic = data.clone();
+    bad_magic[0] ^= 0xFF;
+    std::fs::write(&dpath, &bad_magic).unwrap();
+    assert!(FileStore::open(&dir).is_err(), "bad magic opened");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Chaos fuzzer over the data file: flip one random bit anywhere and the
+/// store must refuse to serve the bytes — either `open` fails (magic /
+/// size) or some chunk fails its FNV-1a checksum on read. FNV-1a's
+/// per-byte step is a bijection of the running state, so any single-bit
+/// payload flip is guaranteed to change the chunk's checksum.
+#[test]
+fn corrupt_payload_bits_are_detected() {
+    let (dir, man) = small_store("bitflip", 53, 8, 7);
+    let dpath = dir.join(&man.data_file);
+    let clean = std::fs::read(&dpath).unwrap();
+
+    let mut x = vec![0.0; man.chunk_rows * man.q];
+    let mut y = vec![0.0; man.chunk_rows * man.d];
+    let mut rng = Rng64::new(0xC0FFEE);
+    for trial in 0..24 {
+        let mut bytes = clean.clone();
+        let pos = (rng.next_u64() as usize) % bytes.len();
+        let bit = 1u8 << (rng.next_u64() % 8);
+        bytes[pos] ^= bit;
+        std::fs::write(&dpath, &bytes).unwrap();
+        let detected = match FileStore::open(&dir) {
+            Err(_) => true, // hit the magic
+            Ok(fs) => {
+                let mut reader = fs.open_reader().unwrap();
+                (0..man.num_chunks())
+                    .any(|k| reader.read_chunk(k, &mut x, &mut y).is_err())
+            }
+        };
+        assert!(detected,
+                "trial {trial}: bit {bit:#04x} at byte {pos} went undetected");
+    }
+
+    // the intact store still reads clean end to end
+    std::fs::write(&dpath, &clean).unwrap();
+    let fs = FileStore::open(&dir).unwrap();
+    let mut reader = fs.open_reader().unwrap();
+    for k in 0..man.num_chunks() {
+        reader.read_chunk(k, &mut x, &mut y).unwrap();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The load-bearing equivalence: an SGPR problem built from a
+/// `FileStore` must train to the bit-exact trajectory of one built from
+/// a `ResidentStore` wrapping the same bytes — across cluster sizes 1–9
+/// (N=96 at chunk 16 leaves tail ranks with zero chunks) and both CPU
+/// backends. The manifests themselves must agree bit for bit too: same
+/// grid, same stats, same checksums.
+#[test]
+fn file_store_matches_resident_store_bit_for_bit() {
+    let (dir, man) = small_store("equiv", 96, 16, 9);
+    let file: Arc<dyn ChunkSource> = Arc::new(FileStore::open(&dir).unwrap());
+    let (x, y) = materialize(file.as_ref()).unwrap();
+    let resident: Arc<dyn ChunkSource> =
+        Arc::new(ResidentStore::from_mats(x, y, man.chunk_rows).unwrap());
+    assert_eq!(file.manifest(), resident.manifest(),
+               "recomputed resident manifest differs from the on-disk one");
+
+    let p_file = SparseGpRegression::problem_from_store(&file, 8, "test", 9).unwrap();
+    let p_res = SparseGpRegression::problem_from_store(&resident, 8, "test", 9).unwrap();
+
+    for workers in 1..=9usize {
+        for backend in [BackendKind::RustCpu, BackendKind::ParallelCpu { threads: 2 }] {
+            let rf = Engine::new(p_file.clone(), cfg(workers, 16, backend, 3))
+                .unwrap().train().unwrap();
+            let rr = Engine::new(p_res.clone(), cfg(workers, 16, backend, 3))
+                .unwrap().train().unwrap();
+            assert_eq!(rf.f, rr.f,
+                       "bounds differ (workers={workers}, backend={backend:?})");
+            assert_eq!(rf.trace, rr.trace,
+                       "trajectories differ (workers={workers}, backend={backend:?})");
+            assert_eq!(rf.fitted.betas, rr.fitted.betas,
+                       "betas differ (workers={workers}, backend={backend:?})");
+            for (a, b) in rf.fitted.zs.iter().zip(&rr.fitted.zs) {
+                assert_eq!(a.as_slice(), b.as_slice(),
+                           "inducing inputs differ (workers={workers}, \
+                            backend={backend:?})");
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -71,6 +71,12 @@ KNOWN_OP_FAMILIES = [
     # point-to-point round trip through Comm over InMemoryTransport —
     # the dynamic dispatch + Result plumbing of the Transport trait
     (r"comm_transport_overhead", "lower"),
+    # out-of-core chunk store: one full sequential read pass over the
+    # store (same bytes, same grid — the file row is the disk cost) and
+    # the streamed SGPR evaluation cycle at W ranks, each rank holding
+    # only its double-buffered O(chunk) window
+    (r"chunked_read_(resident|file)", "lower"),
+    (r"cycle_eval_chunked_w\d+", "lower"),
 ]
 _KNOWN_OPS = re.compile(
     "^(?:" + "|".join(rx for rx, _ in KNOWN_OP_FAMILIES) + ")$")

@@ -1,0 +1,23 @@
+// Fixture: the chunk-store steady-state read path regresses to a
+// per-read allocation — one diagnostic. Models `FileStoreReader::
+// read_chunk`, whose byte buffer must be preallocated at open so
+// sequential chunk reads never touch the allocator.
+impl FileStoreReader {
+    // The steady-state read path: the byte buffer is preallocated at
+    // open for a full chunk, so `resize` never reallocates here.
+    // lint: no-alloc
+    fn read_chunk(&mut self, k: usize, x_out: &mut [f64], y_out: &mut [f64]) -> Result<()> {
+        let want = self.manifest.payload_len(k);
+        let mut buf = Vec::new(); // the regression: fresh buffer per read
+        buf.resize(want, 0);
+        self.file.read_exact(&mut buf)?;
+        decode_payload(&buf, x_out, y_out);
+        Ok(())
+    }
+
+    fn open_scratch(&self) -> Vec<u8> {
+        // cold path: allocating at open time is exactly what the marker
+        // pushes the hot path towards, so this stays legal
+        Vec::with_capacity(self.manifest.chunk_rows * 8)
+    }
+}

@@ -533,6 +533,17 @@ mod tests {
     }
 
     #[test]
+    fn chunk_read_path_allocation_turns_the_tree_red() {
+        // Pins the chunk-store contract: a `Vec::new` creeping into the
+        // marked `read_chunk` body is a diagnostic, while the cold
+        // open-time allocation below the body stays legal.
+        let src = include_str!("../fixtures/noalloc_chunkread_fail.rs");
+        let lines = hits("rust/src/data/store.rs", src, RULE_ALLOC);
+        assert_eq!(lines.len(), 1, "exactly the hot-path Vec::new");
+        assert!(src.lines().nth(lines[0] - 1).unwrap().contains("Vec::new"));
+    }
+
+    #[test]
     fn noalloc_allow_escape_is_honoured() {
         let src = include_str!("../fixtures/noalloc_allow.rs");
         assert!(hits("rust/src/coordinator/engine/fx.rs", src, RULE_ALLOC).is_empty());
